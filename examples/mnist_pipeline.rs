@@ -1,0 +1,48 @@
+//! Digit-clustering scenario (the paper's §VII.B workload): compare all
+//! five algorithms at one compression factor on the digit corpus and
+//! print a Fig. 7/8/9-style comparison row, including 1-pass center
+//! quality — the property that separates sparsified K-means from the
+//! feature-based baselines.
+//!
+//! Run: `cargo run --release --example mnist_pipeline [n] [gamma]`
+
+use pds::data::{digits, DigitConfig};
+use pds::experiments::common::{center_rmse, run_algo, Algo};
+use pds::kmeans::KmeansOpts;
+
+fn main() -> pds::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(6000);
+    let gamma: f64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(0.05);
+    println!("digit pipeline: n={n} gamma={gamma} (classes 0/3/9-like, p=784)");
+
+    let d = digits(n, DigitConfig::default());
+    let opts = KmeansOpts { n_init: 5, max_iters: 100, tol_frac: 0.0, seed: 0 };
+
+    println!(
+        "\n{:<26} {:>9} {:>9} {:>12} {:>7}",
+        "algorithm", "accuracy", "time (s)", "center RMSE", "passes"
+    );
+    for (algo, passes) in [
+        (Algo::Sparsified, 1),
+        (Algo::SparsifiedNoPrecond, 1),
+        (Algo::SparsifiedTwoPass, 2),
+        (Algo::FeatureExtraction, 1),
+        (Algo::FeatureSelection, 3),
+    ] {
+        let run = run_algo(algo, &d, 3, gamma, opts, 7)?;
+        println!(
+            "{:<26} {:>9.4} {:>9.2} {:>12.4} {:>7}",
+            algo.name(),
+            run.accuracy,
+            run.seconds,
+            center_rmse(&run.result.centers, &d.centers),
+            passes
+        );
+    }
+    println!(
+        "\nexpected shape (paper Figs 7-9): sparsified ≥ feature extraction ≫ \
+         no-precond; only sparsified has good 1-pass centers"
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Out-of-core scenario (the paper's §VII.C, Table IV): the dataset lives
+//! on disk in the PDS1 chunk store; the coordinator streams it through
+//! the bounded-queue pipeline so peak memory is O(compressed size +
+//! one chunk), never O(raw data).
+//!
+//! Run: `cargo run --release --example out_of_core [n]`
+
+use std::time::Instant;
+
+use pds::coordinator::{run_sparsified_kmeans_stream, StoreSource, StreamConfig};
+use pds::data::{ChunkStore, ChunkStoreReader, DigitConfig, DigitStream, DIGIT_P};
+use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::metrics::clustering_accuracy;
+use pds::sampling::SparsifyConfig;
+use pds::transform::TransformKind;
+
+fn main() -> pds::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let gamma = 0.05;
+    let chunk_cols = 8192;
+    let path = std::env::temp_dir().join(format!("pds_ooc_example_{}", std::process::id()));
+
+    // stage the dataset on disk (f32, chunked)
+    let stream = DigitStream::new(DigitConfig { seed: 3, ..Default::default() });
+    let t0 = Instant::now();
+    {
+        let mut store = ChunkStore::create(&path, DIGIT_P, chunk_cols)?;
+        let mut start = 0usize;
+        while start < n {
+            let cols = (n - start).min(chunk_cols);
+            store.append(&stream.chunk(start, cols))?;
+            start += cols;
+        }
+        store.finish()?;
+    }
+    let disk_mb = (n * DIGIT_P * 4) as f64 / (1024.0 * 1024.0);
+    println!(
+        "staged {n} samples ({disk_mb:.0} MB f32) at {} in {:.1}s",
+        path.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    let raw_mb = (n * DIGIT_P * 8) as f64 / (1024.0 * 1024.0);
+    let compressed_mb = {
+        let m = (gamma * 1024.0f64).round(); // padded p = 1024
+        (n as f64 * m * 12.0) / (1024.0 * 1024.0) // 8B value + 4B index
+    };
+    println!(
+        "raw in-RAM size would be {raw_mb:.0} MB; compressed working set is {compressed_mb:.0} MB \
+         (gamma={gamma})"
+    );
+
+    // stream → compress → cluster, one pass over disk
+    let mut src = StoreSource::new(ChunkStoreReader::open(&path)?);
+    let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 9 };
+    let t0 = Instant::now();
+    let (model, report) = run_sparsified_kmeans_stream(
+        &mut src,
+        scfg,
+        3,
+        KmeansOpts { n_init: 3, ..Default::default() },
+        &NativeAssigner,
+        StreamConfig { workers: 1, queue_depth: 4, chunk_cols },
+        true,
+    )?;
+    let total = t0.elapsed().as_secs_f64();
+    std::fs::remove_file(&path).ok();
+
+    let labels = stream.labels(0, n);
+    let acc = clustering_accuracy(&model.result.assign, &labels, 3);
+    println!(
+        "\none-pass sparsified K-means: accuracy {acc:.4}, {} iterations, {total:.1}s total",
+        model.result.iterations
+    );
+    println!(
+        "  disk load {:.1}s | compress {:.1}s | kmeans {:.1}s | passes {}",
+        report.timer.get("load"),
+        report.timer.get("compress"),
+        report.timer.get("kmeans"),
+        report.passes
+    );
+    println!("out_of_core OK");
+    Ok(())
+}

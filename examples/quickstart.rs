@@ -1,0 +1,56 @@
+//! Quickstart: compress a synthetic dataset once, then run *both*
+//! downstream consumers (streaming PCA and sparsified K-means) from the
+//! same compressed stream — the paper's core "one pass, many analyses"
+//! workflow.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use pds::coordinator::{run_pca_stream, run_sparsified_kmeans_stream, MatSource, StreamConfig};
+use pds::data::gaussian_blobs;
+use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::metrics::clustering_accuracy;
+use pds::pca::recovered_components;
+use pds::rng::Pcg64;
+use pds::sampling::SparsifyConfig;
+use pds::transform::TransformKind;
+
+fn main() -> pds::Result<()> {
+    let (p, n, k) = (512usize, 20_000usize, 5usize);
+    let gamma = 0.05;
+    println!("quickstart: p={p} n={n} K={k} gamma={gamma} (keep {:.0}% of entries)", gamma * 100.0);
+
+    let mut rng = Pcg64::seed(7);
+    let d = gaussian_blobs(p, n, k, 0.05, &mut rng);
+    let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 42 };
+
+    // --- sparsified K-means (Algorithm 1): one pass, native engine ---
+    let mut src = MatSource::new(&d.data, 2048);
+    let (model, report) = run_sparsified_kmeans_stream(
+        &mut src,
+        scfg,
+        k,
+        KmeansOpts { n_init: 5, ..Default::default() },
+        &NativeAssigner,
+        StreamConfig::default(),
+        true,
+    )?;
+    let acc = clustering_accuracy(&model.result.assign, &d.labels, k);
+    println!(
+        "\nsparsified K-means: accuracy {acc:.4}, {} iterations, passes {}",
+        model.result.iterations, report.passes
+    );
+    for (name, secs) in report.timer.phases() {
+        println!("  {name:<10} {secs:.3} s");
+    }
+
+    // --- streaming PCA from the same compression scheme ---
+    let mut src = MatSource::new(&d.data, 2048);
+    let (pca, report) = run_pca_stream(&mut src, scfg, k, StreamConfig::default())?;
+    println!("\nstreaming PCA: top-{k} eigenvalues {:?}", pca.pca.eigenvalues);
+    // the blob centers span a k-dim subspace; check the PCs capture it
+    let rec = recovered_components(&pca.pca.components, &d.centers, 0.5);
+    println!("PCs aligned with cluster-center subspace: {rec}/{k} (loose .5 threshold)");
+    println!("passes over raw data: {}", report.passes);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+"""AOT lowering: jax graphs -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` /
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The HLO text parser on the Rust side
+re-assigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are written to ``artifacts/{graph}_{tag}.hlo.txt`` plus a TSV
+manifest (``artifacts/manifest.tsv``) the Rust runtime indexes:
+
+    graph<TAB>p<TAB>b<TAB>k<TAB>relative_path
+
+Run as ``python -m compile.aot [--out-dir ../artifacts]`` from python/,
+or via ``make artifacts`` at the repo root (a no-op when inputs are older
+than the manifest).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape variants compiled by default. One per experiment family:
+#   p=512,  B=256, K=5  — synthetic blob experiments (Figs 1..6), FWHT
+#   p=784,  B=256, K=3  — digit dimension with the DCT preconditioner
+#   p=1024, B=256, K=3  — digit pipeline as actually run by the Rust
+#                         coordinator (784 zero-padded to 1024, FWHT)
+DEFAULT_CONFIGS = (
+    model.ShapeConfig(p=512, b=256, k=5),
+    model.ShapeConfig(p=784, b=256, k=3),
+    model.ShapeConfig(p=1024, b=256, k=3),
+)
+
+GRAPH_NAMES = tuple(model.GRAPHS)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text, with return_tuple=True so
+    every graph output (even single ones) round-trips as a tuple."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(cfg: model.ShapeConfig, name: str) -> str:
+    fn = model.GRAPHS[name](cfg)
+    lowered = jax.jit(fn).lower(*model.example_args(cfg, name))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, configs=DEFAULT_CONFIGS, graphs=GRAPH_NAMES, verbose=True) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for cfg in configs:
+        for name in graphs:
+            fname = f"{name}_{cfg.tag()}.hlo.txt"
+            text = lower_one(cfg, name)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            rows.append((name, cfg.p, cfg.b, cfg.k, fname))
+            if verbose:
+                print(f"  lowered {name:22s} {cfg.tag():16s} -> {fname} ({len(text)} chars)")
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# graph\tp\tb\tk\tfile\n")
+        for r in rows:
+            f.write("\t".join(str(x) for x in r) + "\n")
+    if verbose:
+        print(f"wrote {manifest} ({len(rows)} artifacts)")
+    return manifest
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    build(os.path.abspath(args.out_dir), verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Pallas kernel: blocked fast Walsh-Hadamard transform (the ROS ``H``).
+
+The paper's preconditioner (Section III, Eq. 1) applies ``y = H D x`` per
+column in O(p log p). On TPU the natural expression is a butterfly network
+executed entirely in VMEM: one grid step owns a ``(p, BLOCK_B)`` tile of
+the chunk (all of ``p`` must be resident — p*BLOCK_B*4 bytes, well under
+the ~16 MiB VMEM budget for p <= 4096, BLOCK_B <= 512) and runs the
+``log2(p)`` add/sub stages with reshape-strided operands, which lower to
+cheap in-register shuffles rather than HBM traffic. The HBM <-> VMEM
+schedule over column-blocks is expressed by the BlockSpec grid, replacing
+the paper's "embarrassingly parallel across columns" CPU loop.
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Columns per grid step. 128 keeps the lane dimension MXU/VPU aligned.
+DEFAULT_BLOCK_B = 128
+
+
+def _fwht_stages(x: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized in-VMEM butterfly over axis 0 (length must be a power
+    of two). Static python loop: shapes are compile-time constants, so the
+    trace unrolls into log2(p) fused add/sub stages."""
+    p = x.shape[0]
+    h = 1
+    while h < p:
+        x = x.reshape(p // (2 * h), 2, h, -1)
+        a = x[:, 0]
+        b = x[:, 1]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(p, -1)
+        h *= 2
+    return x
+
+
+def _fwht_kernel(x_ref, o_ref, *, p: int):
+    cols = x_ref[...]
+    o_ref[...] = (_fwht_stages(cols) / jnp.sqrt(p).astype(cols.dtype)).reshape(cols.shape)
+
+
+def fwht(x: jnp.ndarray, *, block_b: int = DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """Normalized Walsh-Hadamard transform of the columns of ``x`` (p, B).
+
+    Matches ``ref.fwht_ref`` (Sylvester ordering); involutive and
+    orthonormal. ``p`` must be a power of two; ``B`` must be divisible by
+    the column block (callers pad chunks, the coordinator always sends
+    fixed-shape chunks).
+    """
+    p, b = x.shape
+    if p & (p - 1) != 0:
+        raise ValueError(f"fwht: p={p} must be a power of 2")
+    block_b = min(block_b, b)
+    if b % block_b != 0:
+        raise ValueError(f"fwht: B={b} not divisible by block_b={block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, p=p),
+        out_shape=jax.ShapeDtypeStruct((p, b), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((p, block_b), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((p, block_b), lambda j: (0, j)),
+        interpret=True,
+    )(x)
+
+
+def precondition(x: jnp.ndarray, signs: jnp.ndarray, *, block_b: int = DEFAULT_BLOCK_B) -> jnp.ndarray:
+    """Full ROS map ``y = H D x`` with ``H`` the Hadamard transform.
+
+    The sign flip is fused into the same pallas grid pass (one HBM read).
+    """
+    p, b = x.shape
+    if p & (p - 1) != 0:
+        raise ValueError(f"precondition: p={p} must be a power of 2")
+    block_b = min(block_b, b)
+    if b % block_b != 0:
+        raise ValueError(f"precondition: B={b} not divisible by block_b={block_b}")
+
+    def kernel(x_ref, s_ref, o_ref):
+        cols = x_ref[...] * s_ref[...].reshape(p, 1).astype(x_ref.dtype)
+        o_ref[...] = (_fwht_stages(cols) / jnp.sqrt(p).astype(cols.dtype)).reshape(cols.shape)
+
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((p, b), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, block_b), lambda j: (0, j)),
+            pl.BlockSpec((p,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p, block_b), lambda j: (0, j)),
+        interpret=True,
+    )(x, signs)

@@ -1,0 +1,112 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Everything in this file is deliberately naive and allocation-heavy: the
+references exist only as the correctness ground truth that the Pallas
+kernels (and, transitively, the AOT-compiled HLO the Rust coordinator
+executes) are pinned against in pytest.
+
+Shapes follow the paper's convention: data matrices are ``(p, B)`` with
+samples as *columns* (``B`` = chunk/batch size), centers are ``(p, K)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def hadamard_matrix(p: int) -> np.ndarray:
+    """Orthonormal Sylvester-ordered Hadamard matrix, ``p`` a power of two.
+
+    ``H @ H.T = I`` (entries are ``±1/sqrt(p)``). This is the ``H`` of the
+    paper's ROS preconditioner (Section III, Eq. 1) with eta = 1.
+    """
+    if p <= 0 or (p & (p - 1)) != 0:
+        raise ValueError(f"hadamard_matrix: p={p} is not a positive power of 2")
+    h = np.array([[1.0]])
+    while h.shape[0] < p:
+        h = np.block([[h, h], [h, -h]])
+    return (h / np.sqrt(p)).astype(np.float64)
+
+
+def dct_matrix(p: int) -> np.ndarray:
+    """Orthonormal DCT-II matrix (any ``p``), the paper's alternative ``H``
+    (eta = 1/2 in Theorem 1). Row ``j``, col ``k``:
+    ``c_j * cos(pi*(2k+1)*j / (2p))`` with ``c_0 = sqrt(1/p)``,
+    ``c_j = sqrt(2/p)`` otherwise.
+    """
+    j = np.arange(p)[:, None].astype(np.float64)
+    k = np.arange(p)[None, :].astype(np.float64)
+    mat = np.cos(np.pi * (2.0 * k + 1.0) * j / (2.0 * p))
+    mat *= np.sqrt(2.0 / p)
+    mat[0, :] *= np.sqrt(0.5)
+    return mat
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Normalized Walsh-Hadamard transform of the columns of ``x`` (p, B)
+    via an explicit matrix multiply. Involutive: ``fwht_ref(fwht_ref(x)) == x``.
+    """
+    p = x.shape[0]
+    h = jnp.asarray(hadamard_matrix(p), dtype=x.dtype)
+    return h @ x
+
+
+def precondition_ref(x: jnp.ndarray, signs: jnp.ndarray, transform: str = "fwht") -> jnp.ndarray:
+    """ROS preconditioner ``y = H D x`` (Eq. 1). ``signs`` is the diagonal of
+    ``D`` (entries ±1), ``transform`` selects ``H``.
+    """
+    xd = x * signs[:, None].astype(x.dtype)
+    if transform == "fwht":
+        return fwht_ref(xd)
+    if transform == "dct":
+        p = x.shape[0]
+        return jnp.asarray(dct_matrix(p), dtype=x.dtype) @ xd
+    raise ValueError(f"unknown transform {transform!r}")
+
+
+def masked_distance_ref(w: jnp.ndarray, mask: jnp.ndarray, mu: jnp.ndarray) -> jnp.ndarray:
+    """Sparsified K-means assignment distances (Eq. 36).
+
+    ``D[b, k] = sum_j mask[j, b] * (w[j, b] - mu[j, k])**2``
+
+    ``w`` (p, B) holds the kept entries of each preconditioned sample (zero
+    where not sampled), ``mask`` (p, B) is the 0/1 sampling indicator
+    (``R_i R_i^T`` as a column), ``mu`` (p, K) holds candidate centers in the
+    preconditioned domain. Output (B, K).
+    """
+    diff = w[:, :, None] - mu[:, None, :]          # (p, B, K)
+    return jnp.sum(mask[:, :, None] * diff * diff, axis=0)
+
+
+def center_update_ref(w: jnp.ndarray, mask: jnp.ndarray, onehot: jnp.ndarray):
+    """Masked per-entry center accumulation (Eq. 39) for one chunk.
+
+    ``sums[j, k]   = sum_b w[j, b]    * onehot[b, k]``
+    ``counts[j, k] = sum_b mask[j, b] * onehot[b, k]``
+
+    Dividing ``sums`` by ``counts`` (where positive) over all chunks gives
+    the entry-wise sample-mean center update of Algorithm 1 line 8.
+    """
+    sums = w @ onehot
+    counts = mask @ onehot
+    return sums, counts
+
+
+def cov_update_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """Chunk Gram accumulation for the covariance estimator (Eq. 19):
+    ``sum_i w_i w_i^T`` = ``W @ W.T`` (p, p). The p/m rescale and the
+    diagonal unbiasing (Eq. 21) are applied by the Rust accumulator.
+    """
+    return w @ w.T
+
+
+def kmeans_step_ref(w: jnp.ndarray, mask: jnp.ndarray, mu: jnp.ndarray):
+    """Fused assignment + accumulation for one chunk: returns
+    ``(assign (B,) int32, sums (p, K), counts (p, K))``.
+    """
+    d = masked_distance_ref(w, mask, mu)
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    onehot = jnp.eye(mu.shape[1], dtype=w.dtype)[assign].reshape(w.shape[1], mu.shape[1])
+    sums, counts = center_update_ref(w, mask, onehot)
+    return assign, sums, counts

@@ -1,0 +1,159 @@
+"""L2: the jax compute graphs of the sparsified-data pipeline.
+
+One function per pipeline *step*; each is lowered once by ``aot.py`` to
+HLO text and executed from the Rust coordinator via PJRT. All shapes are
+static (fixed at lowering time from a ``ShapeConfig``), samples are
+columns, dtype is f32.
+
+Graphs
+------
+``precondition``   y = H D x          (Eq. 1; Pallas FWHT when p is 2^k,
+                                       orthonormal DCT-II matmul otherwise)
+``assign``         masked distances   (Eq. 36; Pallas masked_distance)
+``center_update``  masked sums/counts (Eq. 39)
+``cov_update``     chunk Gram W W^T   (Eq. 19 accumulation term)
+``kmeans_step``    fused assign + accumulate (ablation: one round trip
+                                       instead of two per chunk)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import fwht as fwht_kernel
+from .kernels import masked_distance as md_kernel
+from .kernels.ref import dct_matrix
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """Static shape signature of one compiled pipeline variant."""
+
+    p: int  # ambient dimension
+    b: int  # chunk size (columns per executable call)
+    k: int  # number of clusters (ignored by precondition/cov graphs)
+
+    @property
+    def pow2(self) -> bool:
+        return self.p & (self.p - 1) == 0
+
+    def tag(self) -> str:
+        return f"p{self.p}_b{self.b}_k{self.k}"
+
+
+def _block_b(cfg: ShapeConfig) -> int:
+    return min(fwht_kernel.DEFAULT_BLOCK_B, cfg.b)
+
+
+def precondition(cfg: ShapeConfig):
+    """(x (p,B), signs (p,)) -> y = HDx (p,B)."""
+    if cfg.pow2:
+
+        def fn(x, signs):
+            return (fwht_kernel.precondition(x, signs, block_b=_block_b(cfg)),)
+
+    else:
+        # Non-power-of-two p (e.g. MNIST's 784): orthonormal DCT-II as a
+        # constant-matrix contraction. O(p^2) per column instead of
+        # O(p log p) — acceptable at p<=1024 and still one fused matmul on
+        # the MXU; the pow2-padded FWHT variant is the fast path.
+        h = jnp.asarray(dct_matrix(cfg.p), dtype=jnp.float32)
+
+        def fn(x, signs):
+            return (h @ (x * signs[:, None].astype(x.dtype)),)
+
+    return fn
+
+
+def precondition_adjoint(cfg: ShapeConfig):
+    """(y (p,B), signs (p,)) -> x = (HD)^T y, the exact inverse of
+    ``precondition`` (HD is orthonormal). Used to unmix centers (Eq. 32)."""
+    if cfg.pow2:
+
+        def fn(y, signs):
+            return (fwht_kernel.fwht(y, block_b=_block_b(cfg)) * signs[:, None].astype(y.dtype),)
+
+    else:
+        ht = jnp.asarray(dct_matrix(cfg.p).T, dtype=jnp.float32)
+
+        def fn(y, signs):
+            return ((ht @ y) * signs[:, None].astype(y.dtype),)
+
+    return fn
+
+
+def assign(cfg: ShapeConfig):
+    """(w (p,B), mask (p,B), mu (p,K)) -> (distances (B,K), assign (B,) i32)."""
+
+    def fn(w, mask, mu):
+        d = md_kernel.masked_distance(w, mask, mu, block_b=_block_b(cfg))
+        return d, jnp.argmin(d, axis=1).astype(jnp.int32)
+
+    return fn
+
+
+def center_update(cfg: ShapeConfig):
+    """(w (p,B), mask (p,B), onehot (B,K)) -> (sums (p,K), counts (p,K))."""
+
+    def fn(w, mask, onehot):
+        return w @ onehot, mask @ onehot
+
+    return fn
+
+
+def cov_update(cfg: ShapeConfig):
+    """(w (p,B)) -> (W W^T (p,p),). Streaming Gram accumulation for Eq. 19."""
+
+    def fn(w):
+        return (jax.lax.dot_general(w, w, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32),)
+
+    return fn
+
+
+def kmeans_step(cfg: ShapeConfig):
+    """Fused chunk step: (w, mask, mu) -> (assign (B,) i32, sums, counts).
+
+    One executable launch per chunk per Lloyd iteration instead of two;
+    benchmarked against the split pipeline in `ablation_engine`.
+    """
+
+    def fn(w, mask, mu):
+        d = md_kernel.masked_distance(w, mask, mu, block_b=_block_b(cfg))
+        a = jnp.argmin(d, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(a, cfg.k, dtype=w.dtype)
+        return a, w @ onehot, mask @ onehot
+
+    return fn
+
+
+def example_args(cfg: ShapeConfig, name: str):
+    """ShapeDtypeStructs used to lower each graph."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    p, b, k = cfg.p, cfg.b, cfg.k
+    if name in ("precondition", "precondition_adjoint"):
+        return (s((p, b), f32), s((p,), f32))
+    if name == "assign":
+        return (s((p, b), f32), s((p, b), f32), s((p, k), f32))
+    if name == "center_update":
+        return (s((p, b), f32), s((p, b), f32), s((b, k), f32))
+    if name == "cov_update":
+        return (s((p, b), f32),)
+    if name == "kmeans_step":
+        return (s((p, b), f32), s((p, b), f32), s((p, k), f32))
+    raise KeyError(name)
+
+
+GRAPHS = {
+    "precondition": precondition,
+    "precondition_adjoint": precondition_adjoint,
+    "assign": assign,
+    "center_update": center_update,
+    "cov_update": cov_update,
+    "kmeans_step": kmeans_step,
+}

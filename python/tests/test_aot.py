@@ -1,0 +1,71 @@
+"""AOT path: HLO text emission + manifest format (the Rust runtime's
+contract). Uses a tiny shape config to keep lowering fast."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+TINY = (model.ShapeConfig(p=32, b=8, k=2),)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, configs=TINY, verbose=False)
+    return out, manifest
+
+
+def test_manifest_lists_all_graphs(built):
+    out, manifest = built
+    lines = [l for l in open(manifest) if not l.startswith("#")]
+    assert len(lines) == len(model.GRAPHS)
+    names = set()
+    for line in lines:
+        name, p, b, k, fname = line.rstrip("\n").split("\t")
+        assert (int(p), int(b), int(k)) == (32, 8, 2)
+        assert os.path.exists(os.path.join(out, fname))
+        names.add(name)
+    assert names == set(model.GRAPHS)
+
+
+def test_artifacts_are_hlo_text_not_proto(built):
+    out, manifest = built
+    for line in open(manifest):
+        if line.startswith("#"):
+            continue
+        fname = line.rstrip("\n").split("\t")[-1]
+        text = open(os.path.join(out, fname)).read()
+        # HLO text contract: parseable header, tuple-rooted entry computation
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # no serialized-proto leakage
+        assert "\x00" not in text
+
+
+def test_root_is_tuple(built):
+    """return_tuple=True is load-bearing: the Rust side unconditionally
+    unpacks a tuple literal."""
+    out, manifest = built
+    for line in open(manifest):
+        if line.startswith("#"):
+            continue
+        fname = line.rstrip("\n").split("\t")[-1]
+        text = open(os.path.join(out, fname)).read()
+        entry = text[text.index("ENTRY"):]
+        root = [l for l in entry.splitlines() if "ROOT" in l][0]
+        assert "tuple(" in root or "tuple<" in root or ") tuple" in root, root
+
+
+def test_shapes_in_hlo(built):
+    out, manifest = built
+    for line in open(manifest):
+        if line.startswith("#") :
+            continue
+        name, p, b, k, fname = line.rstrip("\n").split("\t")
+        text = open(os.path.join(out, fname)).read()
+        if name in ("precondition", "precondition_adjoint", "cov_update"):
+            assert f"f32[{p},{b}]" in text
+        if name in ("assign", "kmeans_step"):
+            assert f"f32[{p},{k}]" in text

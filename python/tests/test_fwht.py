@@ -1,0 +1,127 @@
+"""Pallas FWHT kernel vs pure-jnp oracle: hypothesis sweep over shapes,
+plus algebraic invariants (involution, orthonormality, linearity)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fwht, ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=shape) * scale).astype(dtype)
+
+
+@settings(**SETTINGS)
+@given(
+    logp=st.integers(min_value=1, max_value=9),
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fwht_matches_ref(logp, b, seed):
+    p = 1 << logp
+    x = rand((p, b), seed)
+    got = np.asarray(fwht.fwht(jnp.asarray(x), block_b=b))
+    want = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    logp=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fwht_involutive(logp, seed):
+    p = 1 << logp
+    x = rand((p, 4), seed)
+    twice = np.asarray(fwht.fwht(fwht.fwht(jnp.asarray(x), block_b=4), block_b=4))
+    np.testing.assert_allclose(twice, x, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    logp=st.integers(min_value=2, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fwht_preserves_column_norms(logp, seed):
+    p = 1 << logp
+    x = rand((p, 8), seed, scale=3.0)
+    y = np.asarray(fwht.fwht(jnp.asarray(x), block_b=8))
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=0), np.linalg.norm(x, axis=0), rtol=1e-4
+    )
+
+
+def test_fwht_linearity():
+    p, b = 128, 8
+    x, y = rand((p, b), 0), rand((p, b), 1)
+    fx = np.asarray(fwht.fwht(jnp.asarray(x), block_b=b))
+    fy = np.asarray(fwht.fwht(jnp.asarray(y), block_b=b))
+    fxy = np.asarray(fwht.fwht(jnp.asarray(2.0 * x - 3.0 * y), block_b=b))
+    np.testing.assert_allclose(fxy, 2.0 * fx - 3.0 * fy, rtol=1e-4, atol=1e-5)
+
+
+def test_fwht_block_grid_equivalence():
+    """Result must not depend on the BlockSpec column tiling."""
+    p, b = 256, 64
+    x = jnp.asarray(rand((p, b), 7))
+    full = np.asarray(fwht.fwht(x, block_b=64))
+    for block in (8, 16, 32):
+        np.testing.assert_allclose(
+            np.asarray(fwht.fwht(x, block_b=block)), full, rtol=1e-5, atol=1e-6
+        )
+
+
+@settings(**SETTINGS)
+@given(
+    logp=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_precondition_matches_ref(logp, seed):
+    p = 1 << logp
+    x = rand((p, 4), seed)
+    rng = np.random.default_rng(seed + 1)
+    signs = np.where(rng.random(p) < 0.5, -1.0, 1.0).astype(np.float32)
+    got = np.asarray(fwht.precondition(jnp.asarray(x), jnp.asarray(signs), block_b=4))
+    want = np.asarray(ref.precondition_ref(jnp.asarray(x), jnp.asarray(signs)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_precondition_is_orthonormal_map():
+    """(HD)^T (HD) = I: preconditioning then adjoint recovers the input."""
+    p, b = 128, 8
+    x = rand((p, b), 3)
+    signs = np.where(np.random.default_rng(4).random(p) < 0.5, -1.0, 1.0).astype(np.float32)
+    y = fwht.precondition(jnp.asarray(x), jnp.asarray(signs), block_b=b)
+    back = np.asarray(fwht.fwht(y, block_b=b)) * signs[:, None]
+    np.testing.assert_allclose(back, x, rtol=1e-4, atol=1e-5)
+
+
+def test_fwht_smooths_spike():
+    """Theorem 1's point: a 1-sparse (incoherent-worst-case) column becomes
+    flat with |entries| exactly 1/sqrt(p)."""
+    p = 256
+    x = np.zeros((p, 1), dtype=np.float32)
+    x[17, 0] = 1.0
+    signs = np.ones(p, dtype=np.float32)
+    y = np.asarray(fwht.precondition(jnp.asarray(x), jnp.asarray(signs), block_b=1))
+    np.testing.assert_allclose(np.abs(y), 1.0 / np.sqrt(p), rtol=1e-5)
+
+
+def test_fwht_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        fwht.fwht(jnp.zeros((100, 4), jnp.float32))
+
+
+def test_fwht_rejects_bad_block():
+    with pytest.raises(ValueError):
+        fwht.fwht(jnp.zeros((64, 6), jnp.float32), block_b=4)
+
+
+def test_dct_matrix_orthonormal():
+    for p in (3, 16, 100, 784):
+        c = ref.dct_matrix(p)
+        np.testing.assert_allclose(c @ c.T, np.eye(p), atol=1e-10)

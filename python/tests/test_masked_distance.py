@@ -1,0 +1,107 @@
+"""Pallas masked-distance kernel vs oracle + brute-force numpy."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_distance as md
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+def make_case(p, b, k, m, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=(p, b)).astype(np.float32)
+    mask = np.zeros((p, b), dtype=np.float32)
+    for col in range(b):
+        keep = rng.choice(p, size=m, replace=False)
+        mask[keep, col] = 1.0
+    w = y * mask
+    mu = rng.normal(size=(p, k)).astype(np.float32)
+    return w, mask, mu
+
+
+def brute(w, mask, mu):
+    p, b = w.shape
+    k = mu.shape[1]
+    out = np.zeros((b, k), dtype=np.float64)
+    for i in range(b):
+        for j in range(k):
+            d = w[:, i] - mu[:, j]
+            out[i, j] = float(np.sum(mask[:, i] * d * d))
+    return out.astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([8, 32, 100, 128]),
+    b=st.sampled_from([1, 4, 8]),
+    k=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    frac=st.sampled_from([0.1, 0.3, 0.9]),
+)
+def test_matches_brute_force(p, b, k, seed, frac):
+    m = max(1, int(frac * p))
+    w, mask, mu = make_case(p, b, k, m, seed)
+    got = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=b))
+    np.testing.assert_allclose(got, brute(w, mask, mu), rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.sampled_from([16, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_ref(p, seed):
+    w, mask, mu = make_case(p, 8, 4, max(1, p // 4), seed)
+    got = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=8))
+    want = np.asarray(ref.masked_distance_ref(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_full_mask_equals_euclidean():
+    """mask = all-ones reduces Eq. 36 to plain squared distances (the
+    R_i = I_p case called out under Eq. 35)."""
+    p, b, k = 64, 8, 3
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(p, b)).astype(np.float32)
+    mask = np.ones((p, b), dtype=np.float32)
+    mu = rng.normal(size=(p, k)).astype(np.float32)
+    got = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=b))
+    want = ((w[:, :, None] - mu[:, None, :]) ** 2).sum(axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_mask_scores_center_energy_zero():
+    """A sample with an empty mask is distance-0 to every center: the
+    objective Eq. 34 carries no information for unseen coordinates."""
+    p, b, k = 32, 4, 3
+    w = np.zeros((p, b), dtype=np.float32)
+    mask = np.zeros((p, b), dtype=np.float32)
+    mu = np.random.default_rng(1).normal(size=(p, k)).astype(np.float32)
+    got = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=b))
+    np.testing.assert_allclose(got, np.zeros((b, k), np.float32), atol=1e-6)
+
+
+def test_distances_nonnegative():
+    w, mask, mu = make_case(128, 16, 5, 32, 99)
+    got = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=16))
+    assert (got >= -1e-4).all()
+
+
+def test_block_grid_equivalence():
+    w, mask, mu = make_case(128, 64, 4, 40, 5)
+    full = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=64))
+    for block in (8, 16, 32):
+        got = np.asarray(md.masked_distance(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu), block_b=block))
+        np.testing.assert_allclose(got, full, rtol=1e-5, atol=1e-5)
+
+
+def test_shape_validation():
+    w = jnp.zeros((16, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        md.masked_distance(w, jnp.zeros((16, 5), jnp.float32), jnp.zeros((16, 2), jnp.float32))
+    with pytest.raises(ValueError):
+        md.masked_distance(w, jnp.zeros((16, 4), jnp.float32), jnp.zeros((8, 2), jnp.float32))

@@ -1,0 +1,124 @@
+"""L2 graph semantics: each model graph vs its oracle and the statistical
+identities the Rust estimators rely on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=10)
+
+
+def sample_chunk(cfg, seed, m=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(cfg.p, cfg.b)).astype(np.float32)
+    m = m or max(2, cfg.p // 4)
+    mask = np.zeros((cfg.p, cfg.b), dtype=np.float32)
+    for col in range(cfg.b):
+        mask[rng.choice(cfg.p, size=m, replace=False), col] = 1.0
+    return x, mask
+
+
+CFG_POW2 = model.ShapeConfig(p=64, b=16, k=3)
+CFG_DCT = model.ShapeConfig(p=28, b=16, k=3)  # non-pow2 -> DCT path
+
+
+def test_precondition_pow2_matches_ref():
+    x, _ = sample_chunk(CFG_POW2, 0)
+    signs = np.where(np.random.default_rng(1).random(CFG_POW2.p) < 0.5, -1, 1).astype(np.float32)
+    (y,) = model.precondition(CFG_POW2)(jnp.asarray(x), jnp.asarray(signs))
+    want = ref.precondition_ref(jnp.asarray(x), jnp.asarray(signs), "fwht")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_precondition_dct_matches_ref():
+    x, _ = sample_chunk(CFG_DCT, 0)
+    signs = np.where(np.random.default_rng(1).random(CFG_DCT.p) < 0.5, -1, 1).astype(np.float32)
+    (y,) = model.precondition(CFG_DCT)(jnp.asarray(x), jnp.asarray(signs))
+    want = ref.precondition_ref(jnp.asarray(x), jnp.asarray(signs), "dct")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_adjoint_inverts_precondition_both_paths(seed):
+    for cfg in (CFG_POW2, CFG_DCT):
+        x, _ = sample_chunk(cfg, seed)
+        signs = np.where(np.random.default_rng(seed + 1).random(cfg.p) < 0.5, -1, 1).astype(np.float32)
+        (y,) = model.precondition(cfg)(jnp.asarray(x), jnp.asarray(signs))
+        (back,) = model.precondition_adjoint(cfg)(y, jnp.asarray(signs))
+        np.testing.assert_allclose(np.asarray(back), x, rtol=1e-3, atol=1e-4)
+
+
+def test_assign_matches_ref():
+    x, mask = sample_chunk(CFG_POW2, 2)
+    w = x * mask
+    mu = np.random.default_rng(3).normal(size=(CFG_POW2.p, CFG_POW2.k)).astype(np.float32)
+    d, a = model.assign(CFG_POW2)(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu))
+    dref = ref.masked_distance_ref(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dref), rtol=1e-3, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(a), np.argmin(np.asarray(dref), axis=1))
+
+
+def test_center_update_matches_ref():
+    x, mask = sample_chunk(CFG_POW2, 4)
+    w = x * mask
+    rng = np.random.default_rng(5)
+    assign = rng.integers(0, CFG_POW2.k, size=CFG_POW2.b)
+    onehot = np.eye(CFG_POW2.k, dtype=np.float32)[assign]
+    s, c = model.center_update(CFG_POW2)(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(onehot))
+    sr, cr = ref.center_update_ref(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(onehot))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), rtol=1e-4, atol=1e-5)
+    # counts never exceed per-entry mask totals and are integers
+    assert np.all(np.asarray(c) >= 0)
+    np.testing.assert_allclose(np.asarray(c).sum(axis=1), mask.sum(axis=1), rtol=1e-5)
+
+
+def test_cov_update_is_gram():
+    x, mask = sample_chunk(CFG_POW2, 6)
+    w = x * mask
+    (g,) = model.cov_update(CFG_POW2)(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(g), w @ w.T, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g).T, atol=1e-5)
+
+
+def test_kmeans_step_consistent_with_split_graphs():
+    x, mask = sample_chunk(CFG_POW2, 7)
+    w = x * mask
+    mu = np.random.default_rng(8).normal(size=(CFG_POW2.p, CFG_POW2.k)).astype(np.float32)
+    a, s, c = model.kmeans_step(CFG_POW2)(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu))
+    d, a2 = model.assign(CFG_POW2)(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(mu))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+    onehot = np.eye(CFG_POW2.k, dtype=np.float32)[np.asarray(a)]
+    s2, c2 = model.center_update(CFG_POW2)(jnp.asarray(w), jnp.asarray(mask), jnp.asarray(onehot))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c2), rtol=1e-4, atol=1e-5)
+
+
+def test_unbiased_mean_identity():
+    """E[R R^T] = (m/p) I  (Theorem B4): empirical check through the masked
+    chunk representation — the rescaled masked mean converges to the mean."""
+    p, b, m = 32, 4096, 8
+    cfg = model.ShapeConfig(p=p, b=b, k=2)
+    rng = np.random.default_rng(11)
+    xbar = rng.normal(size=(p, 1)).astype(np.float32)
+    x = np.repeat(xbar, b, axis=1)
+    mask = np.zeros((p, b), dtype=np.float32)
+    for col in range(b):
+        mask[rng.choice(p, size=m, replace=False), col] = 1.0
+    w = x * mask
+    est = (p / m) * w.mean(axis=1)
+    err = np.abs(est - xbar[:, 0]).max()
+    assert err < 0.5, err  # O(1/sqrt(b)) concentration
+
+
+def test_graph_registry_and_example_args():
+    for name in model.GRAPHS:
+        args = model.example_args(CFG_POW2, name)
+        fn = model.GRAPHS[name](CFG_POW2)
+        out = jax.eval_shape(fn, *args)
+        assert isinstance(out, tuple) and len(out) >= 1

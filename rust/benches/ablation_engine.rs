@@ -1,0 +1,35 @@
+//! Ablation bench: native Rust assigner vs the PJRT/XLA AOT `assign`
+//! artifact (the Pallas masked-distance kernel) on identical chunks.
+//! Skips the XLA arm when artifacts are absent.
+use pds::data::gaussian_blobs;
+use pds::kmeans::{NativeAssigner, SparseAssigner};
+use pds::rng::Pcg64;
+use pds::runtime::{artifact_dir, XlaEngine};
+use pds::sampling::{Sparsifier, SparsifyConfig};
+use pds::transform::TransformKind;
+
+fn main() {
+    pds::bench::section("Ablation: assignment engine (native vs xla/pallas)");
+    let (p, n, k) = (512usize, 2048usize, 5usize);
+    let mut rng = Pcg64::seed(1);
+    let d = gaussian_blobs(p, n, k, 0.1, &mut rng);
+    for gamma in [0.02f64, 0.05, 0.2] {
+        let cfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 2 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+        let centers = sp.precondition_dense(&d.centers);
+        pds::bench::bench(&format!("assign/native gamma={gamma} (p=512,n=2048,K=5)"), 1, 10, || {
+            NativeAssigner.assign(&chunk, &centers).unwrap().1
+        });
+        if artifact_dir().join("manifest.tsv").exists() {
+            let engine = XlaEngine::new(None).unwrap();
+            // warm compile outside the timing
+            let _ = engine.assign(&chunk, &centers).unwrap();
+            pds::bench::bench(&format!("assign/xla    gamma={gamma} (p=512,n=2048,K=5)"), 1, 10, || {
+                engine.assign(&chunk, &centers).unwrap().1
+            });
+        } else {
+            println!("(artifacts missing; xla arm skipped)");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 10 (big-data accuracy, streaming digits).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 10: streaming big-data accuracy vs gamma");
+    let args = Args::parse(&["--n".into(), "20000".into(), "--trials".into(), "1".into(),
+                             "--gammas".into(), "0.01,0.05".into()]).unwrap();
+    pds::experiments::fig10_table3::run_fig10(&args).unwrap();
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 1 (explained variance vs gamma) at bench scale
+//! and time one full sparsify->covariance->PCA arm.
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 1: explained variance (precond+sparsify vs column sampling)");
+    let args = Args::parse(&["--runs".into(), "5".into()]).unwrap();
+    pds::experiments::fig1::run(&args).unwrap();
+    // hot arm timing
+    use pds::{data::multivariate_t, estimators::CovarianceEstimator, rng::Pcg64,
+              sampling::{Sparsifier, SparsifyConfig}, transform::TransformKind, pca::Pca};
+    let mut rng = Pcg64::seed(1);
+    let d = multivariate_t(512, 1024, 1.0, &mut rng);
+    let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 2 };
+    let sp = Sparsifier::new(512, cfg).unwrap();
+    pds::bench::bench("fig1/sparsify+cov+pca (p=512,n=1024,g=0.2)", 1, 5, || {
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        Pca::from_covariance(&est.estimate(), 10, 3).eigenvalues[0]
+    });
+}

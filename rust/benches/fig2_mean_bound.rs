@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 2 (mean estimator vs Thm 4 bound) and time the
+//! streaming mean accumulation.
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 2: mean estimator error vs Theorem 4 bound");
+    let args = Args::parse(&["--runs".into(), "30".into()]).unwrap();
+    pds::experiments::fig2::run(&args).unwrap();
+    use pds::{estimators::SparseMeanEstimator, linalg::Mat, rng::Pcg64,
+              sampling::{Sparsifier, SparsifyConfig}, transform::TransformKind};
+    let mut rng = Pcg64::seed(1);
+    let x = Mat::from_fn(128, 20_000, |_, _| rng.normal());
+    let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 2 };
+    let sp = Sparsifier::new(128, cfg).unwrap();
+    let chunk = sp.compress_chunk(&x, 0).unwrap();
+    pds::bench::bench("fig2/mean accumulate (p=128,n=20k,m=38)", 1, 10, || {
+        let mut est = SparseMeanEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        est.estimate()[0]
+    });
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 3 (covariance error vs n and gamma) and time
+//! the m^2-scatter covariance accumulation hot path.
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 3: covariance estimator error vs Theorem 6 bound");
+    let args = Args::parse(&["--runs".into(), "3".into(), "--p".into(), "128".into()]).unwrap();
+    pds::experiments::fig3::run(&args).unwrap();
+    use pds::{data::spiked, estimators::CovarianceEstimator, rng::Pcg64,
+              sampling::{Sparsifier, SparsifyConfig}, transform::TransformKind};
+    let mut rng = Pcg64::seed(1);
+    let d = spiked(256, 2560, &[10.0, 8.0, 6.0, 4.0, 2.0], false, &mut rng);
+    let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 2 };
+    let sp = Sparsifier::new(256, cfg).unwrap();
+    let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+    pds::bench::bench("fig3/cov accumulate (p=256,n=2560,m=77)", 1, 5, || {
+        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        est.n()
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 4 (preconditioning ablation) and time the ROS.
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 4: preconditioning effect on covariance error");
+    let args = Args::parse(&["--runs".into(), "3".into()]).unwrap();
+    pds::experiments::fig4_table1::run_fig4(&args).unwrap();
+    use pds::{linalg::Mat, rng::Pcg64, sampling::{Sparsifier, SparsifyConfig},
+              transform::TransformKind};
+    let mut rng = Pcg64::seed(1);
+    let x = Mat::from_fn(512, 1024, |_, _| rng.normal());
+    for kind in [TransformKind::Hadamard, TransformKind::Dct] {
+        let cfg = SparsifyConfig { gamma: 0.2, transform: kind, seed: 2 };
+        let sp = Sparsifier::new(512, cfg).unwrap();
+        pds::bench::bench(&format!("fig4/ROS {kind:?} (p=512,n=1024)"), 1, 5, || {
+            sp.precondition_dense(&x).get(0, 0)
+        });
+    }
+}

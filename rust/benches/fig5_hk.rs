@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 5 (H_k concentration) and time mask sampling.
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 5: ||H_k - I|| vs Theorem 7 bound");
+    let args = Args::parse(&["--runs".into(), "100".into()]).unwrap();
+    pds::experiments::fig5::run(&args).unwrap();
+    use pds::{rng::Pcg64, sampling::sample_indices};
+    let mut rng = Pcg64::seed(1);
+    let (p, m) = (1024usize, 51usize);
+    let mut idx = vec![0u32; m];
+    let mut perm = vec![0u32; p];
+    pds::bench::bench("fig5/sample m-of-p masks x1000 (p=1024,m=51)", 2, 10, || {
+        for _ in 0..1000 {
+            sample_indices(&mut rng, p, &mut idx, &mut perm);
+        }
+        idx[0]
+    });
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Fig. 6 (standard vs sparsified K-means speedup).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 6: standard vs sparsified K-means");
+    let args = Args::parse(&["--n".into(), "10000".into()]).unwrap();
+    pds::experiments::fig6::run(&args).unwrap();
+}

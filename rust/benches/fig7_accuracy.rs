@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 7 (accuracy vs gamma on digits, 5 algorithms).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 7: digit clustering accuracy vs gamma");
+    let args = Args::parse(&["--n".into(), "2000".into(), "--trials".into(), "2".into(),
+                             "--gammas".into(), "0.02,0.05,0.1".into()]).unwrap();
+    pds::experiments::fig7_8::run_fig7(&args).unwrap();
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig. 8 (time vs gamma on digits).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Fig 8: digit clustering time vs gamma");
+    let args = Args::parse(&["--n".into(), "2000".into(), "--trials".into(), "2".into(),
+                             "--gammas".into(), "0.02,0.05,0.1".into()]).unwrap();
+    pds::experiments::fig7_8::run_fig8(&args).unwrap();
+}

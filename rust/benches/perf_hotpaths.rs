@@ -1,0 +1,52 @@
+//! Perf-pass harness: the three L3 hot paths measured in isolation, with
+//! arithmetic-intensity context so the §Perf roofline discussion in
+//! EXPERIMENTS.md is reproducible.
+use pds::data::{digits, DigitConfig};
+use pds::kmeans::{kmeans_pp_dense, NativeAssigner, SparseAssigner};
+use pds::estimators::CovarianceEstimator;
+use pds::linalg::Mat;
+use pds::rng::Pcg64;
+use pds::sampling::{Sparsifier, SparsifyConfig};
+use pds::transform::fwht_inplace;
+use pds::transform::TransformKind;
+
+fn main() {
+    pds::bench::section("perf: L3 hot paths");
+    // 1) FWHT throughput (the compress hot loop)
+    for p in [512usize, 1024, 4096] {
+        let mut rng = Pcg64::seed(1);
+        let mut cols: Vec<Vec<f64>> = (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+        let r = pds::bench::bench(&format!("fwht p={p} x64cols"), 2, 20, || {
+            for c in cols.iter_mut() { fwht_inplace(c); }
+            cols[0][0]
+        });
+        let bytes = (64 * p * 8) as f64;
+        let flops = (64 * p * (p as f64).log2() as usize) as f64;
+        println!("   -> {:.2} GB/s streamed, {:.2} GFLOP/s", bytes * 2.0 / r.median_s / 1e9, flops / r.median_s / 1e9);
+    }
+    // 2) masked assignment (the kmeans hot loop)
+    let d = digits(20_000, DigitConfig::default());
+    let cfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 2 };
+    let sp = Sparsifier::new(784, cfg).unwrap();
+    let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+    let mut rng = Pcg64::seed(3);
+    let centers = sp.precondition_dense(&kmeans_pp_dense(&d.data, 3, &mut rng));
+    let r = pds::bench::bench("assign native (n=20k,m=51,K=3)", 2, 20, || {
+        NativeAssigner.assign(&chunk, &centers).unwrap().1
+    });
+    let gathers = (20_000 * 51 * 3) as f64;
+    println!("   -> {:.1} M masked-gathers/s", gathers / r.median_s / 1e6);
+    // 3) covariance scatter accumulation
+    let mut rng = Pcg64::seed(5);
+    let x = Mat::from_fn(256, 2560, |_, _| rng.normal());
+    let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 7 };
+    let sp = Sparsifier::new(256, cfg).unwrap();
+    let chunk = sp.compress_chunk(&x, 0).unwrap();
+    let r = pds::bench::bench("cov accumulate (p=256,n=2560,m=77)", 1, 10, || {
+        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        est.n()
+    });
+    let scatters = (2560.0) * (77.0 * 77.0);
+    println!("   -> {:.1} M scatter-madds/s", scatters / r.median_s / 1e6);
+}

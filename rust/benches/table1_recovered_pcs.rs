@@ -1,0 +1,7 @@
+//! Bench: regenerate Table I (recovered PCs with/without preconditioning).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Table I: recovered principal components");
+    let args = Args::parse(&["--runs".into(), "3".into()]).unwrap();
+    pds::experiments::fig4_table1::run_table1(&args).unwrap();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Table III (timing breakdown at gamma=0.05).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Table III: timing breakdown, streaming digits");
+    let args = Args::parse(&["--n".into(), "20000".into()]).unwrap();
+    pds::experiments::fig10_table3::run_table3(&args).unwrap();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Table IV (out-of-core run with disk accounting).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Table IV: out-of-core streaming run");
+    let args = Args::parse(&["--n".into(), "30000".into()]).unwrap();
+    pds::experiments::table4::run(&args).unwrap();
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Table V (per-iteration assignment/update speedup).
+use pds::cli::Args;
+fn main() {
+    pds::bench::section("Table V: per-iteration speedup");
+    let args = Args::parse(&["--n".into(), "30000".into()]).unwrap();
+    pds::experiments::table5::run(&args).unwrap();
+}

@@ -1,0 +1,149 @@
+//! Feature extraction (Boutsidis et al. [36]): `Z = Ω X` with a single
+//! `m×p` random sign matrix; K-means runs in `R^m`.
+//!
+//! Center lifting uses `Ω⁺ = Ωᵀ(ΩΩᵀ)⁻¹` — the paper's §VII.B analysis
+//! shows this estimator is *inconsistent* (`Ω⁺Ω ≠ I` has rank m < p), the
+//! property our Fig. 9 experiment quantifies; a second pass over the
+//! original data (like Algorithm 2) is required for usable centers.
+
+use crate::error::Result;
+use crate::kmeans::{kmeans_dense, KmeansOpts, KmeansResult};
+use crate::linalg::{cholesky, cholesky_solve, Mat};
+use crate::rng::Pcg64;
+
+/// The single random sign projection shared by all samples.
+pub struct FeatureExtraction {
+    /// m×p sign matrix scaled by 1/√m.
+    omega: Mat,
+}
+
+impl FeatureExtraction {
+    pub fn new(p: usize, m: usize, rng: &mut Pcg64) -> Self {
+        let scale = 1.0 / (m as f64).sqrt();
+        let omega =
+            Mat::from_fn(m, p, |_, _| if rng.next_f64() < 0.5 { scale } else { -scale });
+        FeatureExtraction { omega }
+    }
+
+    pub fn m(&self) -> usize {
+        self.omega.rows()
+    }
+
+    /// Compress: `Z = Ω X` (m×n).
+    pub fn compress(&self, x: &Mat) -> Mat {
+        self.omega.matmul(x)
+    }
+
+    /// K-means in the compressed domain; centers lifted with `Ω⁺`
+    /// (1-pass — the inconsistent estimate).
+    pub fn fit(&self, x: &Mat, k: usize, opts: KmeansOpts) -> Result<KmeansResult> {
+        let z = self.compress(x);
+        let res = kmeans_dense(&z, k, opts);
+        let centers = self.lift_centers(&res.centers)?;
+        Ok(KmeansResult { centers, ..res })
+    }
+
+    /// `Ω⁺ c = Ωᵀ (Ω Ωᵀ)⁻¹ c` per center column.
+    pub fn lift_centers(&self, centers_z: &Mat) -> Result<Mat> {
+        let m = self.omega.rows();
+        let p = self.omega.cols();
+        assert_eq!(centers_z.rows(), m);
+        let gram = self.omega.matmul(&self.omega.transpose()); // m×m
+        let l = cholesky(&gram)?;
+        let mut out = Mat::zeros(p, centers_z.cols());
+        for c in 0..centers_z.cols() {
+            let y = cholesky_solve(&l, centers_z.col(c));
+            let lifted = self.omega.matvec_transa(&y);
+            out.col_mut(c).copy_from_slice(&lifted);
+        }
+        Ok(out)
+    }
+
+    /// 2-pass variant: after compressed-domain clustering, recompute
+    /// centers as original-domain class means (extra pass).
+    pub fn fit_two_pass(&self, x: &Mat, k: usize, opts: KmeansOpts) -> Result<KmeansResult> {
+        let mut res = self.fit(x, k, opts)?;
+        let p = x.rows();
+        let mut sums = Mat::zeros(p, k);
+        let mut counts = vec![0usize; k];
+        for (j, &c) in res.assign.iter().enumerate() {
+            counts[c as usize] += 1;
+            let col = x.col(j);
+            let s = sums.col_mut(c as usize);
+            for i in 0..p {
+                s[i] += col[i];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                let (s, dst) = (sums.col(c), res.centers.col_mut(c));
+                for i in 0..p {
+                    dst[i] = s[i] * inv;
+                }
+            }
+        }
+        Ok(res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::metrics::clustering_accuracy;
+
+    #[test]
+    fn clusters_well_in_compressed_domain() {
+        let mut rng = Pcg64::seed(7);
+        let d = gaussian_blobs(64, 500, 3, 0.05, &mut rng);
+        let fe = FeatureExtraction::new(64, 16, &mut rng);
+        let res = fe.fit(&d.data, 3, KmeansOpts { n_init: 3, ..Default::default() }).unwrap();
+        let acc = clustering_accuracy(&res.assign, &d.labels, 3);
+        assert!(acc > 0.95, "accuracy {acc}");
+        assert_eq!(res.centers.rows(), 64);
+    }
+
+    #[test]
+    fn lifted_centers_are_biased_two_pass_fixes() {
+        // §VII.B: Ω⁺Ω-shrunk centers are worse than two-pass class means
+        let mut rng = Pcg64::seed(9);
+        let d = gaussian_blobs(64, 2000, 3, 0.05, &mut rng);
+        let fe = FeatureExtraction::new(64, 10, &mut rng);
+        let opts = KmeansOpts { n_init: 3, ..Default::default() };
+        let one = fe.fit(&d.data, 3, opts).unwrap();
+        let two = fe.fit_two_pass(&d.data, 3, opts).unwrap();
+        let err = |res: &KmeansResult| -> f64 {
+            let mut total = 0.0;
+            for c in 0..3 {
+                let mut best = f64::INFINITY;
+                for t in 0..3 {
+                    let dd: f64 = res
+                        .centers
+                        .col(c)
+                        .iter()
+                        .zip(d.centers.col(t))
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    best = best.min(dd);
+                }
+                total += best.sqrt();
+            }
+            total
+        };
+        assert!(
+            err(&two) < 0.5 * err(&one),
+            "two-pass centers should be much better: {} vs {}",
+            err(&two),
+            err(&one)
+        );
+    }
+
+    #[test]
+    fn compress_shape() {
+        let mut rng = Pcg64::seed(1);
+        let fe = FeatureExtraction::new(20, 5, &mut rng);
+        let z = fe.compress(&Mat::zeros(20, 7));
+        assert_eq!((z.rows(), z.cols()), (5, 7));
+    }
+}

@@ -1,0 +1,131 @@
+//! Feature selection (Boutsidis et al. [36]): sample `m` *rows* of `X`
+//! with probabilities from approximate-SVD leverage scores, rescale, and
+//! run K-means on the reduced m×n data.
+//!
+//! Pass accounting (paper Table II): one pass for the approximate SVD,
+//! one to compute the sampling distribution + sample, one for clustering
+//! features, and one more to obtain original-domain centers — this is the
+//! most pass-hungry baseline, included to reproduce Figs. 7–9.
+
+use crate::error::Result;
+use crate::kmeans::{kmeans_dense, KmeansOpts, KmeansResult};
+use crate::linalg::{leverage_scores, randomized_svd, Mat};
+use crate::rng::{weighted_index, Pcg64};
+
+/// Leverage-score row sampler + compressed-domain K-means.
+pub struct FeatureSelection {
+    /// Selected row indices (with replacement, as in [36]).
+    rows: Vec<usize>,
+    /// Per-selected-row rescale `1/sqrt(m·ℓ_j)`.
+    scales: Vec<f64>,
+}
+
+impl FeatureSelection {
+    /// Build the sampler from the data itself (approximate SVD with
+    /// `rank = k` components).
+    pub fn new(x: &Mat, m: usize, k: usize, rng: &mut Pcg64) -> Self {
+        let svd = randomized_svd(x, k, 8, 2, rng.next_u64());
+        let scores = leverage_scores(&svd.u, k);
+        let mut rows = Vec::with_capacity(m);
+        let mut scales = Vec::with_capacity(m);
+        for _ in 0..m {
+            let j = weighted_index(&scores, rng);
+            rows.push(j);
+            scales.push(1.0 / (m as f64 * scores[j].max(1e-300)).sqrt());
+        }
+        FeatureSelection { rows, scales }
+    }
+
+    pub fn m(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Reduce: pick + rescale the sampled rows (m×n).
+    pub fn compress(&self, x: &Mat) -> Mat {
+        let mut z = Mat::zeros(self.rows.len(), x.cols());
+        for j in 0..x.cols() {
+            let src = x.col(j);
+            let dst = z.col_mut(j);
+            for (t, (&r, &s)) in self.rows.iter().zip(&self.scales).enumerate() {
+                dst[t] = src[r] * s;
+            }
+        }
+        z
+    }
+
+    /// K-means on the reduced rows; centers recovered with the extra
+    /// original-domain pass (there is no meaningful 1-pass center here:
+    /// the reduced coordinates are a rescaled row subset).
+    pub fn fit(&self, x: &Mat, k: usize, opts: KmeansOpts) -> Result<KmeansResult> {
+        let z = self.compress(x);
+        let res = kmeans_dense(&z, k, opts);
+        // original-domain centers from assignments (extra pass)
+        let p = x.rows();
+        let mut sums = Mat::zeros(p, k);
+        let mut counts = vec![0usize; k];
+        for (j, &c) in res.assign.iter().enumerate() {
+            counts[c as usize] += 1;
+            let col = x.col(j);
+            let s = sums.col_mut(c as usize);
+            for i in 0..p {
+                s[i] += col[i];
+            }
+        }
+        let mut centers = Mat::zeros(p, k);
+        for c in 0..k {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                let (s, dst) = (sums.col(c), centers.col_mut(c));
+                for i in 0..p {
+                    dst[i] = s[i] * inv;
+                }
+            }
+        }
+        Ok(KmeansResult { centers, ..res })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::metrics::clustering_accuracy;
+
+    #[test]
+    fn selects_informative_rows() {
+        // data with energy concentrated in rows 0..8: leverage sampling
+        // must prefer those rows
+        let mut rng = Pcg64::seed(3);
+        let mut d = gaussian_blobs(32, 300, 3, 0.05, &mut rng);
+        // zero out rows 8.. so information lives in the first 8 rows
+        for j in 0..300 {
+            let col = d.data.col_mut(j);
+            for i in 8..32 {
+                col[i] *= 0.001;
+            }
+        }
+        let fs = FeatureSelection::new(&d.data, 10, 3, &mut rng);
+        let informative = fs.rows.iter().filter(|&&r| r < 8).count();
+        assert!(informative >= 8, "only {informative}/10 informative rows selected");
+    }
+
+    #[test]
+    fn clusters_reasonably() {
+        let mut rng = Pcg64::seed(5);
+        let d = gaussian_blobs(64, 400, 3, 0.05, &mut rng);
+        let fs = FeatureSelection::new(&d.data, 20, 3, &mut rng);
+        let res = fs.fit(&d.data, 3, KmeansOpts { n_init: 3, ..Default::default() }).unwrap();
+        let acc = clustering_accuracy(&res.assign, &d.labels, 3);
+        assert!(acc > 0.9, "accuracy {acc}");
+        assert_eq!(res.centers.rows(), 64);
+    }
+
+    #[test]
+    fn compress_shape_and_scaling() {
+        let mut rng = Pcg64::seed(7);
+        let x = Mat::from_fn(10, 5, |i, j| (i + j) as f64);
+        let fs = FeatureSelection::new(&x, 4, 2, &mut rng);
+        let z = fs.compress(&x);
+        assert_eq!((z.rows(), z.cols()), (4, 5));
+    }
+}

@@ -1,0 +1,62 @@
+//! The comparison algorithms from the paper's evaluation:
+//!
+//! * [`FeatureExtraction`] — Boutsidis et al. [36]: compress with a single
+//!   random sign matrix `Ω ∈ R^{m×p}`, K-means in `R^m`, centers lifted
+//!   with `Ω⁺` (the provably *inconsistent* 1-pass center estimate the
+//!   paper contrasts against in §VII.B).
+//! * [`FeatureSelection`] — [36]: leverage-score row sampling from an
+//!   approximate SVD (≥3 passes over the data).
+//! * [`uniform_column_sampling`] — keep whole columns (Fig. 1 comparison).
+
+mod feature_extraction;
+mod feature_selection;
+
+pub use feature_extraction::FeatureExtraction;
+pub use feature_selection::FeatureSelection;
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Uniformly sample `c` columns (without replacement) of `x` — the
+/// one-pass column-sampling scheme of Fig. 1. Returns the kept columns.
+pub fn uniform_column_sampling(x: &Mat, c: usize, rng: &mut Pcg64) -> Mat {
+    let n = x.cols();
+    let c = c.min(n);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // partial Fisher–Yates
+    for i in 0..c {
+        let j = i + rng.next_range((n - i) as u32) as usize;
+        idx.swap(i, j);
+    }
+    let mut out = Mat::zeros(x.rows(), c);
+    for (t, &j) in idx[..c].iter().enumerate() {
+        out.col_mut(t).copy_from_slice(x.col(j as usize));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_sampling_keeps_real_columns() {
+        let mut rng = Pcg64::seed(1);
+        let x = Mat::from_fn(4, 20, |i, j| (i * 100 + j) as f64);
+        let s = uniform_column_sampling(&x, 5, &mut rng);
+        assert_eq!(s.cols(), 5);
+        for t in 0..5 {
+            let found = (0..20).any(|j| {
+                (0..4).all(|i| s.get(i, t) == x.get(i, j))
+            });
+            assert!(found, "sampled column {t} not found in source");
+        }
+    }
+
+    #[test]
+    fn column_sampling_caps_at_n() {
+        let mut rng = Pcg64::seed(2);
+        let x = Mat::zeros(3, 4);
+        assert_eq!(uniform_column_sampling(&x, 10, &mut rng).cols(), 4);
+    }
+}

@@ -1,0 +1,96 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by every target in `rust/benches/`: warmup + timed iterations,
+//! reporting median and MAD. Keep output grep-friendly: one line per
+//! benchmark, `bench <name> ... median <t> mad <t>`.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters {:>3}  median {:>12}  mad {:>10}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            fmt_time(self.min_s),
+        )
+    }
+}
+
+/// Human time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs and `iters` measured runs;
+/// prints and returns the result. A `black_box`-style sink is the
+/// caller's responsibility (return a value from `f` and accumulate it).
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        median_s: median,
+        mad_s: devs[devs.len() / 2],
+        min_s: times[0],
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Print a section header so bench output reads like the paper's tables.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.median_s >= 0.0 && r.min_s <= r.median_s);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `pds <command> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Positional arguments after the command name.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments (not including argv[0]/command).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // value if next token exists and is not itself an option
+                if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), raw[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{name}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list_f64(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| Error::Invalid(format!("--{name}: bad float {s:?}")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mix() {
+        let a = Args::parse(&strv(&["fig1", "--runs", "100", "--full", "--gamma", "0.1,0.2"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.get("runs"), Some("100"));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_list_f64("gamma", &[]).unwrap(), vec![0.1, 0.2]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(&strv(&["--n", "50"])).unwrap();
+        assert_eq!(a.get_parse("n", 7usize).unwrap(), 50);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::parse(&strv(&["--n", "xyz"])).unwrap();
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn negative_number_is_value_not_flag() {
+        let a = Args::parse(&strv(&["--shift", "-2"])).unwrap();
+        assert_eq!(a.get("shift"), Some("-2"));
+    }
+}

@@ -1,0 +1,254 @@
+//! High-level drivers: end-to-end runs combining the compress pipeline
+//! with the estimators / K-means, with pass accounting and the timing
+//! breakdowns of Tables III–V.
+
+use crate::error::Result;
+use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
+use crate::kmeans::{
+    assign_dense, KmeansOpts, KmeansResult, SparseAssigner, SparsifiedKmeans, SparsifiedModel,
+};
+use crate::linalg::Mat;
+use crate::metrics::Timer;
+use crate::pca::Pca;
+use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sparse::SparseChunk;
+
+use super::{compress_stream, ChunkSource, StreamConfig};
+
+/// Accounting for one driver run — the raw material of Tables III/IV.
+#[derive(Debug)]
+pub struct PipelineReport {
+    /// Phase timings: `load`, `compress`, `kmeans` / `eig`, `pass2`.
+    pub timer: Timer,
+    /// Samples processed.
+    pub n: usize,
+    /// Passes over the raw data.
+    pub passes: usize,
+    /// Lloyd iterations (K-means drivers).
+    pub iterations: usize,
+    /// Assignment engine used.
+    pub engine: &'static str,
+}
+
+/// One-pass sparsified K-means over a stream (Algorithm 1 at scale):
+/// compress with backpressure (the compressed data — `γ·p·n` values — is
+/// what's held in memory, never the raw stream), then iterate.
+pub fn run_sparsified_kmeans_stream(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    stream: StreamConfig,
+    precondition: bool,
+) -> Result<(SparsifiedModel, PipelineReport)> {
+    let sp = Sparsifier::new(source.p(), scfg)?;
+    let mut timer = Timer::new();
+    let mut chunks: Vec<SparseChunk> = Vec::new();
+    let mut collect = |c: SparseChunk| -> Result<()> {
+        chunks.push(c);
+        Ok(())
+    };
+    let n = compress_stream(source, &sp, stream, precondition, &mut collect, &mut timer)?;
+    chunks.sort_by_key(|c| c.start_col());
+    let sk = SparsifiedKmeans::new(scfg, k, opts);
+    let model = timer.time("kmeans", || sk.fit_chunks(&sp, &chunks, assigner))?;
+    let iterations = model.result.iterations;
+    Ok((
+        model,
+        PipelineReport { timer, n, passes: 1, iterations, engine: assigner.name() },
+    ))
+}
+
+/// Two-pass sparsified K-means over a stream (Algorithm 2 at scale): run
+/// the one-pass algorithm, then revisit the raw stream once to (a)
+/// recompute centers as exact class means and (b) reassign against the
+/// pass-1 center estimates in the original domain.
+pub fn run_two_pass_stream(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    stream: StreamConfig,
+) -> Result<(KmeansResult, PipelineReport)> {
+    let (model, mut report) = run_sparsified_kmeans_stream(
+        source, scfg, k, opts, assigner, stream, true,
+    )?;
+    let result = two_pass_refine_stream(source, &model, k, &mut report)?;
+    Ok((result, report))
+}
+
+/// The second pass of Algorithm 2, applied to an existing pass-1 model:
+/// revisit the raw stream once to recompute exact class means and to
+/// reassign against the pass-1 centers in the original domain.
+pub fn two_pass_refine_stream(
+    source: &mut dyn ChunkSource,
+    model: &SparsifiedModel,
+    k: usize,
+    report: &mut PipelineReport,
+) -> Result<KmeansResult> {
+    let one = &model.result;
+    let p = source.p();
+    source.reset()?;
+    let t0 = std::time::Instant::now();
+    let mut sums = Mat::zeros(p, k);
+    let mut counts = vec![0usize; k];
+    let mut assign = vec![0u32; one.assign.len()];
+    let mut objective = 0.0;
+    while let Some(chunk) = source.next_chunk()? {
+        // (a) exact class means under the pass-1 assignment
+        for j in 0..chunk.data.cols() {
+            let c = one.assign[chunk.start_col + j] as usize;
+            counts[c] += 1;
+            let col = chunk.data.col(j);
+            let s = sums.col_mut(c);
+            for i in 0..p {
+                s[i] += col[i];
+            }
+        }
+        // (b) reassignment against pass-1 centers, original domain
+        let (a, obj) = assign_dense(&chunk.data, &one.centers);
+        objective += obj;
+        assign[chunk.start_col..chunk.start_col + a.len()].copy_from_slice(&a);
+    }
+    let mut centers = one.centers.clone();
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f64;
+            for v in centers.col_mut(c).iter_mut() {
+                *v *= 0.0;
+            }
+            let (s, dst) = (sums.col(c), centers.col_mut(c));
+            for i in 0..p {
+                dst[i] = s[i] * inv;
+            }
+        }
+    }
+    report.timer.add("pass2", t0.elapsed().as_secs_f64());
+    report.passes += 1;
+    Ok(KmeansResult {
+        centers,
+        assign,
+        objective,
+        iterations: one.iterations,
+        converged: one.converged,
+    })
+}
+
+/// PCA outputs from one streaming pass.
+pub struct PcaReport {
+    /// Unbiased sample-mean estimate (Thm 4), original-domain.
+    pub mean: Vec<f64>,
+    /// Unbiased covariance estimate `Ĉ_n` (Thm 6) in the *preconditioned*
+    /// domain (PC directions are unmixed below).
+    pub covariance: Mat,
+    /// Top-k principal components, unmixed to the original domain.
+    pub pca: Pca,
+}
+
+/// One-pass streaming PCA: accumulate the Thm 4/6 estimators chunk by
+/// chunk, eigendecompose, and unmix the components (PCs of `HDX` map to
+/// PCs of `X` through `(HD)ᵀ`).
+pub fn run_pca_stream(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    topk: usize,
+    stream: StreamConfig,
+) -> Result<(PcaReport, PipelineReport)> {
+    let sp = Sparsifier::new(source.p(), scfg)?;
+    let mut timer = Timer::new();
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m());
+    let mut fold = |c: SparseChunk| -> Result<()> {
+        mean_est.accumulate(&c);
+        cov_est.accumulate(&c);
+        Ok(())
+    };
+    let n = compress_stream(source, &sp, stream, true, &mut fold, &mut timer)?;
+    let covariance = cov_est.estimate();
+    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, scfg.seed));
+    // unmix components and mean to the original domain
+    let components = sp.unmix(&pca_pre.components);
+    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
+    let mean = sp.unmix(&mean_pre).col(0).to_vec();
+    let report = PipelineReport { timer, n, passes: 1, iterations: 0, engine: "native" };
+    Ok((
+        PcaReport {
+            mean,
+            covariance,
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        },
+        report,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MatSource;
+    use crate::data::gaussian_blobs;
+    use crate::kmeans::NativeAssigner;
+    use crate::metrics::clustering_accuracy;
+    use crate::pca::recovered_components;
+    use crate::rng::Pcg64;
+    use crate::transform::TransformKind;
+
+    #[test]
+    fn one_pass_stream_matches_fit_dense() {
+        let mut rng = Pcg64::seed(1);
+        let d = gaussian_blobs(32, 300, 3, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 4 };
+        let opts = KmeansOpts { n_init: 2, ..Default::default() };
+
+        let mut src = MatSource::new(&d.data, 64);
+        let (model, report) = run_sparsified_kmeans_stream(
+            &mut src,
+            scfg,
+            3,
+            opts,
+            &NativeAssigner,
+            StreamConfig { workers: 2, ..Default::default() },
+            true,
+        )
+        .unwrap();
+        assert_eq!(report.n, 300);
+        assert_eq!(report.passes, 1);
+
+        let sk = SparsifiedKmeans::new(scfg, 3, opts);
+        let direct = sk.fit_dense(&d.data).unwrap();
+        assert_eq!(model.result.assign, direct.assign);
+        assert!(model.result.centers.sub(&direct.centers).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_pass_improves_or_matches() {
+        let mut rng = Pcg64::seed(3);
+        let d = gaussian_blobs(64, 800, 3, 0.3, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.1, transform: TransformKind::Hadamard, seed: 7 };
+        let opts = KmeansOpts { n_init: 4, ..Default::default() };
+        let mut src = MatSource::new(&d.data, 128);
+        let (two, report) =
+            run_two_pass_stream(&mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default())
+                .unwrap();
+        assert_eq!(report.passes, 2);
+        assert!(report.timer.get("pass2") > 0.0);
+        let acc2 = clustering_accuracy(&two.assign, &d.labels, 3);
+        assert!(acc2 > 0.9, "two-pass accuracy {acc2}");
+        // centers are exact class means of pass-1 assignment: finite & sane
+        assert!(two.centers.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn streaming_pca_recovers_spiked_components() {
+        let mut rng = Pcg64::seed(5);
+        let d = crate::data::spiked(64, 6000, &[8.0, 5.0, 3.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 2 };
+        let mut src = MatSource::new(&d.data, 512);
+        let (pca_report, report) =
+            run_pca_stream(&mut src, scfg, 3, StreamConfig::default()).unwrap();
+        assert_eq!(report.n, 6000);
+        let rec = recovered_components(&pca_report.pca.components, &d.centers, 0.9);
+        assert!(rec >= 2, "recovered {rec}/3 spiked PCs");
+    }
+}

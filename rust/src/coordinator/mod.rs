@@ -1,0 +1,219 @@
+//! L3 streaming coordinator.
+//!
+//! Owns the pipeline topology: a reader pulls dense chunks from a
+//! [`ChunkSource`] (in-memory matrix, on-disk store, or generator),
+//! bounded channels provide backpressure, a pool of sparsifier workers
+//! runs the fused precondition+sample operator, and an accumulator folds
+//! the resulting [`SparseChunk`]s into a consumer (estimators, a
+//! collector for K-means, …).
+//!
+//! Design note: the spec'd stack calls for tokio, which is unavailable in
+//! this offline build; `std::sync::mpsc::sync_channel` + scoped threads
+//! provide the same bounded-queue backpressure semantics for this
+//! CPU-bound pipeline (DESIGN.md §2).
+
+mod driver;
+mod pipeline;
+
+pub use driver::{
+    run_pca_stream, run_sparsified_kmeans_stream, run_two_pass_stream, two_pass_refine_stream,
+    PcaReport, PipelineReport,
+};
+pub use pipeline::{compress_stream, SparseConsumer};
+
+use crate::data::ChunkStoreReader;
+use crate::error::Result;
+use crate::linalg::Mat;
+
+/// A dense chunk in flight: columns `[start_col, start_col + data.cols())`
+/// of the logical stream.
+pub struct DenseChunk {
+    pub data: Mat,
+    pub start_col: usize,
+}
+
+/// Abstract chunked data source. Multi-pass algorithms call
+/// [`reset`](ChunkSource::reset) between passes; one-pass algorithms
+/// never do — the pass discipline of paper Table II is enforced by the
+/// drivers and measured in `PipelineReport::passes`.
+pub trait ChunkSource: Send {
+    /// Ambient dimension p.
+    fn p(&self) -> usize;
+    /// Total samples if known.
+    fn n_hint(&self) -> Option<usize>;
+    /// Pull the next chunk; `None` ends the pass.
+    fn next_chunk(&mut self) -> Result<Option<DenseChunk>>;
+    /// Restart for another pass.
+    fn reset(&mut self) -> Result<()>;
+}
+
+/// Streaming configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Sparsifier worker threads.
+    pub workers: usize,
+    /// Bounded-queue depth (chunks) between stages — the backpressure knob.
+    pub queue_depth: usize,
+    /// Columns per chunk when slicing in-memory matrices.
+    pub chunk_cols: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { workers: 1, queue_depth: 4, chunk_cols: 256 }
+    }
+}
+
+/// In-memory matrix source (slices a `Mat` into chunks).
+pub struct MatSource<'a> {
+    mat: &'a Mat,
+    chunk_cols: usize,
+    cursor: usize,
+}
+
+impl<'a> MatSource<'a> {
+    pub fn new(mat: &'a Mat, chunk_cols: usize) -> Self {
+        MatSource { mat, chunk_cols: chunk_cols.max(1), cursor: 0 }
+    }
+}
+
+impl<'a> ChunkSource for MatSource<'a> {
+    fn p(&self) -> usize {
+        self.mat.rows()
+    }
+
+    fn n_hint(&self) -> Option<usize> {
+        Some(self.mat.cols())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<DenseChunk>> {
+        if self.cursor >= self.mat.cols() {
+            return Ok(None);
+        }
+        let end = (self.cursor + self.chunk_cols).min(self.mat.cols());
+        let chunk = DenseChunk { data: self.mat.col_range(self.cursor, end), start_col: self.cursor };
+        self.cursor = end;
+        Ok(Some(chunk))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.cursor = 0;
+        Ok(())
+    }
+}
+
+/// Out-of-core source reading a [`ChunkStoreReader`] (Table IV workload).
+pub struct StoreSource {
+    reader: ChunkStoreReader,
+}
+
+impl StoreSource {
+    pub fn new(reader: ChunkStoreReader) -> Self {
+        StoreSource { reader }
+    }
+}
+
+impl ChunkSource for StoreSource {
+    fn p(&self) -> usize {
+        self.reader.p()
+    }
+
+    fn n_hint(&self) -> Option<usize> {
+        Some(self.reader.n())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<DenseChunk>> {
+        Ok(self.reader.next_chunk()?.map(|(data, start_col)| DenseChunk { data, start_col }))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.reader.rewind()
+    }
+}
+
+/// Generator source: streams synthetic chunks without materializing the
+/// dataset (used to exercise true streaming at n beyond RAM).
+pub struct GeneratorSource<F: FnMut(usize, usize) -> Mat + Send> {
+    p: usize,
+    n: usize,
+    chunk_cols: usize,
+    cursor: usize,
+    /// `gen(start_col, cols) -> p×cols chunk`; must be deterministic in
+    /// `start_col` so reset() replays identically.
+    gen: F,
+}
+
+impl<F: FnMut(usize, usize) -> Mat + Send> GeneratorSource<F> {
+    pub fn new(p: usize, n: usize, chunk_cols: usize, gen: F) -> Self {
+        GeneratorSource { p, n, chunk_cols: chunk_cols.max(1), cursor: 0, gen }
+    }
+}
+
+impl<F: FnMut(usize, usize) -> Mat + Send> ChunkSource for GeneratorSource<F> {
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn n_hint(&self) -> Option<usize> {
+        Some(self.n)
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<DenseChunk>> {
+        if self.cursor >= self.n {
+            return Ok(None);
+        }
+        let cols = (self.n - self.cursor).min(self.chunk_cols);
+        let data = (self.gen)(self.cursor, cols);
+        debug_assert_eq!(data.rows(), self.p);
+        let chunk = DenseChunk { data, start_col: self.cursor };
+        self.cursor += cols;
+        Ok(Some(chunk))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.cursor = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn mat_source_covers_everything_in_order() {
+        let mut rng = Pcg64::seed(1);
+        let x = Mat::from_fn(4, 10, |_, _| rng.normal());
+        let mut src = MatSource::new(&x, 3);
+        let mut seen = 0;
+        let mut starts = Vec::new();
+        while let Some(c) = src.next_chunk().unwrap() {
+            starts.push(c.start_col);
+            seen += c.data.cols();
+        }
+        assert_eq!(seen, 10);
+        assert_eq!(starts, vec![0, 3, 6, 9]);
+        // second pass after reset
+        src.reset().unwrap();
+        assert_eq!(src.next_chunk().unwrap().unwrap().start_col, 0);
+    }
+
+    #[test]
+    fn generator_source_is_replayable() {
+        let mut src = GeneratorSource::new(2, 5, 2, |start, cols| {
+            Mat::from_fn(2, cols, |i, j| (start + j) as f64 * 10.0 + i as f64)
+        });
+        let mut pass1 = Vec::new();
+        while let Some(c) = src.next_chunk().unwrap() {
+            pass1.extend_from_slice(c.data.as_slice());
+        }
+        src.reset().unwrap();
+        let mut pass2 = Vec::new();
+        while let Some(c) = src.next_chunk().unwrap() {
+            pass2.extend_from_slice(c.data.as_slice());
+        }
+        assert_eq!(pass1, pass2);
+        assert_eq!(pass1.len(), 10);
+    }
+}

@@ -1,0 +1,207 @@
+//! Synthetic workload generators matching each of the paper's experiments,
+//! plus the out-of-core chunk store used for the big-data tests.
+//!
+//! MNIST substitution (see DESIGN.md §2): the digit experiments use
+//! [`digits`], a deterministic generator of 28×28 stroke-structured
+//! classes with per-sample deformations — same `p = 784`, same
+//! three-class setup, same heavy spatial correlation structure that makes
+//! preconditioning matter.
+
+mod digits;
+mod store;
+
+pub use digits::{digits, DigitConfig, DigitStream, DIGIT_P};
+pub use store::{ChunkStore, ChunkStoreReader};
+
+use crate::linalg::{cholesky, orthonormalize, Mat};
+use crate::rng::Pcg64;
+
+/// A labeled synthetic dataset.
+pub struct Dataset {
+    /// p×n data, samples as columns.
+    pub data: Mat,
+    /// Ground-truth labels (empty when not applicable).
+    pub labels: Vec<u32>,
+    /// Ground-truth cluster centers / principal components when defined.
+    pub centers: Mat,
+}
+
+/// Isotropic Gaussian blobs around `k` random centers (Fig. 6 workload).
+/// Centers are drawn uniformly in `[-1,1]^p` scaled by `1/sqrt(p)`·4 so
+/// clusters are well separated relative to `noise`.
+pub fn gaussian_blobs(p: usize, n: usize, k: usize, noise: f64, rng: &mut Pcg64) -> Dataset {
+    let centers = Mat::from_fn(p, k, |_, _| (2.0 * rng.next_f64() - 1.0) * 4.0 / (p as f64).sqrt());
+    let mut data = Mat::zeros(p, n);
+    let mut labels = Vec::with_capacity(n);
+    for j in 0..n {
+        let c = rng.next_range(k as u32);
+        labels.push(c);
+        let center = centers.col(c as usize);
+        let col = data.col_mut(j);
+        for i in 0..p {
+            col[i] = center[i] + noise * rng.normal();
+        }
+    }
+    Dataset { data, labels, centers }
+}
+
+/// Fig. 2 workload: `x_i = x̄ + ε_i`, `ε_i ~ N(0, I_p)`, fixed Gaussian `x̄`.
+pub fn mean_plus_noise(p: usize, n: usize, rng: &mut Pcg64) -> Dataset {
+    let xbar: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let mut data = Mat::zeros(p, n);
+    for j in 0..n {
+        let col = data.col_mut(j);
+        for i in 0..p {
+            col[i] = xbar[i] + rng.normal();
+        }
+    }
+    let centers = Mat::from_vec(p, 1, xbar).unwrap();
+    Dataset { data, labels: Vec::new(), centers }
+}
+
+/// Figs. 3/4 + Table I workload: the spiked model
+/// `x_i = Σ_j κ_ij λ_j u_j` with iid `κ ~ N(0,1)`.
+/// `canonical_pcs` picks the `u_j` as canonical basis vectors (the Fig. 4 /
+/// Table I adversarial case); otherwise a random orthonormal basis.
+pub fn spiked(
+    p: usize,
+    n: usize,
+    lambdas: &[f64],
+    canonical_pcs: bool,
+    rng: &mut Pcg64,
+) -> Dataset {
+    let k = lambdas.len();
+    let u = if canonical_pcs {
+        // k distinct canonical basis vectors, chosen at random
+        let mut idx: Vec<u32> = (0..p as u32).collect();
+        rng.shuffle(&mut idx);
+        let mut u = Mat::zeros(p, k);
+        for (t, &i) in idx[..k].iter().enumerate() {
+            u.set(i as usize, t, 1.0);
+        }
+        u
+    } else {
+        orthonormalize(&Mat::from_fn(p, k, |_, _| rng.normal()))
+    };
+    let mut data = Mat::zeros(p, n);
+    for j in 0..n {
+        let col = data.col_mut(j);
+        for t in 0..k {
+            let kap = rng.normal() * lambdas[t];
+            let ucol = u.col(t);
+            for i in 0..p {
+                col[i] += kap * ucol[i];
+            }
+        }
+    }
+    Dataset { data, labels: Vec::new(), centers: u }
+}
+
+/// Fig. 1 workload: multivariate t with `df` degrees of freedom and
+/// Toeplitz covariance `C_ij = 2·0.5^{|i−j|}`:
+/// `x = L z / sqrt(χ²_df / df)` with `C = L Lᵀ`.
+pub fn multivariate_t(p: usize, n: usize, df: f64, rng: &mut Pcg64) -> Dataset {
+    let mut c = Mat::zeros(p, p);
+    for i in 0..p {
+        for j in 0..p {
+            c.set(i, j, 2.0 * 0.5f64.powi((i as i32 - j as i32).abs()));
+        }
+    }
+    let l = cholesky(&c).expect("Toeplitz covariance is SPD");
+    let mut data = Mat::zeros(p, n);
+    let mut z = vec![0.0; p];
+    for jcol in 0..n {
+        rng.fill_normal(&mut z);
+        let denom = (rng.chi2(df) / df).sqrt().max(1e-12);
+        let col = data.col_mut(jcol);
+        // col = L z / denom  (L lower-triangular)
+        for i in 0..p {
+            let mut s = 0.0;
+            for kk in 0..=i {
+                s += l.get(i, kk) * z[kk];
+            }
+            col[i] = s / denom;
+        }
+    }
+    Dataset { data, labels: Vec::new(), centers: Mat::zeros(p, 0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_labels_consistent() {
+        let mut rng = Pcg64::seed(1);
+        let d = gaussian_blobs(16, 200, 4, 0.01, &mut rng);
+        assert_eq!(d.labels.len(), 200);
+        // each sample is closest to its own center
+        for j in 0..200 {
+            let truth = d.labels[j] as usize;
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..4 {
+                let dist: f64 = d
+                    .data
+                    .col(j)
+                    .iter()
+                    .zip(d.centers.col(c))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            assert_eq!(best.1, truth, "sample {j}");
+        }
+    }
+
+    #[test]
+    fn spiked_canonical_basis() {
+        let mut rng = Pcg64::seed(3);
+        let d = spiked(32, 100, &[3.0, 2.0], true, &mut rng);
+        // centers are canonical basis vectors
+        for t in 0..2 {
+            let col = d.centers.col(t);
+            assert_eq!(col.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(col.iter().filter(|&&v| v != 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn spiked_lies_in_span() {
+        let mut rng = Pcg64::seed(5);
+        let d = spiked(24, 50, &[2.0, 1.0, 0.5], false, &mut rng);
+        // every sample is in the span of centers: residual after projection ~ 0
+        for j in 0..50 {
+            let x = d.data.col(j);
+            let mut residual: Vec<f64> = x.to_vec();
+            for t in 0..3 {
+                let u = d.centers.col(t);
+                let dot: f64 = u.iter().zip(x).map(|(a, b)| a * b).sum();
+                for i in 0..24 {
+                    residual[i] -= dot * u[i];
+                }
+            }
+            let r: f64 = residual.iter().map(|v| v * v).sum();
+            assert!(r < 1e-16, "residual {r}");
+        }
+    }
+
+    #[test]
+    fn mvt_heavy_tail_and_covariance_shape() {
+        let mut rng = Pcg64::seed(7);
+        let d = multivariate_t(8, 5000, 1.0, &mut rng);
+        let maxabs = d.data.max_abs();
+        assert!(maxabs > 50.0, "df=1 should produce extreme outliers, max={maxabs}");
+    }
+
+    #[test]
+    fn mean_plus_noise_centers() {
+        let mut rng = Pcg64::seed(9);
+        let d = mean_plus_noise(8, 20_000, &mut rng);
+        let mean = d.data.col_mean();
+        for i in 0..8 {
+            assert!((mean[i] - d.centers.get(i, 0)).abs() < 0.05);
+        }
+    }
+}

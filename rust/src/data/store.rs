@@ -1,0 +1,213 @@
+//! Out-of-core chunk store: the on-disk format for the big-data tests
+//! (Table IV). Data is written once as fixed-size f32 column chunks and
+//! streamed back chunk-by-chunk so the full matrix never resides in RAM —
+//! the same batched-load discipline as the paper's 58×1GB MNIST store.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  "PDS1"          4 bytes
+//! p      u32             ambient dimension
+//! n      u64             total samples
+//! chunk  u32             columns per chunk (last chunk may be short)
+//! data   f32 × p × n     column-major, chunk after chunk
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+const MAGIC: &[u8; 4] = b"PDS1";
+const HEADER_LEN: u64 = 4 + 4 + 8 + 4;
+
+/// Writer: create a store and append column chunks.
+pub struct ChunkStore {
+    file: BufWriter<File>,
+    p: usize,
+    n: u64,
+    chunk_cols: usize,
+}
+
+impl ChunkStore {
+    /// Create (truncate) a store at `path`.
+    pub fn create(path: &Path, p: usize, chunk_cols: usize) -> Result<Self> {
+        let mut file = BufWriter::new(File::create(path)?);
+        file.write_all(MAGIC)?;
+        file.write_all(&(p as u32).to_le_bytes())?;
+        file.write_all(&0u64.to_le_bytes())?; // n, patched in finish()
+        file.write_all(&(chunk_cols as u32).to_le_bytes())?;
+        Ok(ChunkStore { file, p, n: 0, chunk_cols })
+    }
+
+    /// Append a dense chunk (must have ≤ `chunk_cols` columns; only the
+    /// final chunk may be short).
+    pub fn append(&mut self, x: &Mat) -> Result<()> {
+        if x.rows() != self.p {
+            return Err(Error::Shape(format!("append: rows {} != p {}", x.rows(), self.p)));
+        }
+        if x.cols() > self.chunk_cols {
+            return Err(Error::Shape(format!(
+                "append: {} cols exceeds chunk size {}",
+                x.cols(),
+                self.chunk_cols
+            )));
+        }
+        let mut buf = Vec::with_capacity(x.rows() * x.cols() * 4);
+        for &v in x.as_slice() {
+            buf.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        self.file.write_all(&buf)?;
+        self.n += x.cols() as u64;
+        Ok(())
+    }
+
+    /// Flush and patch the sample count into the header.
+    pub fn finish(mut self) -> Result<()> {
+        self.file.flush()?;
+        let mut f = self.file.into_inner().map_err(|e| Error::Io(e.into_error()))?;
+        f.seek(SeekFrom::Start(8))?;
+        f.write_all(&self.n.to_le_bytes())?;
+        f.sync_all()?;
+        Ok(())
+    }
+}
+
+/// Reader: stream chunks back.
+pub struct ChunkStoreReader {
+    file: BufReader<File>,
+    p: usize,
+    n: u64,
+    chunk_cols: usize,
+    cursor: u64, // columns consumed
+}
+
+impl ChunkStoreReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut file = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 4];
+        file.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Invalid(format!("{}: not a PDS1 store", path.display())));
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        file.read_exact(&mut b4)?;
+        let p = u32::from_le_bytes(b4) as usize;
+        file.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8);
+        file.read_exact(&mut b4)?;
+        let chunk_cols = u32::from_le_bytes(b4) as usize;
+        Ok(ChunkStoreReader { file, p, n, chunk_cols, cursor: 0 })
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn n(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn chunk_cols(&self) -> usize {
+        self.chunk_cols
+    }
+
+    /// Number of chunks in the store.
+    pub fn num_chunks(&self) -> usize {
+        ((self.n as usize) + self.chunk_cols - 1) / self.chunk_cols.max(1)
+    }
+
+    /// Read the next chunk; `None` at end of stream. Returns the chunk and
+    /// the global index of its first column.
+    pub fn next_chunk(&mut self) -> Result<Option<(Mat, usize)>> {
+        if self.cursor >= self.n {
+            return Ok(None);
+        }
+        let cols = (self.n - self.cursor).min(self.chunk_cols as u64) as usize;
+        let mut raw = vec![0u8; self.p * cols * 4];
+        self.file.read_exact(&mut raw)?;
+        let mut data = Vec::with_capacity(self.p * cols);
+        for q in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes([q[0], q[1], q[2], q[3]]) as f64);
+        }
+        let start = self.cursor as usize;
+        self.cursor += cols as u64;
+        Ok(Some((Mat::from_vec(self.p, cols, data)?, start)))
+    }
+
+    /// Restart from the first chunk (a new "pass" over the data).
+    pub fn rewind(&mut self) -> Result<()> {
+        self.file.seek(SeekFrom::Start(HEADER_LEN))?;
+        self.cursor = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("pds_store_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let path = tmpfile("roundtrip");
+        let mut rng = Pcg64::seed(1);
+        let x = Mat::from_fn(6, 25, |_, _| rng.normal());
+        {
+            let mut store = ChunkStore::create(&path, 6, 10).unwrap();
+            store.append(&x.col_range(0, 10)).unwrap();
+            store.append(&x.col_range(10, 20)).unwrap();
+            store.append(&x.col_range(20, 25)).unwrap();
+            store.finish().unwrap();
+        }
+        let mut reader = ChunkStoreReader::open(&path).unwrap();
+        assert_eq!(reader.p(), 6);
+        assert_eq!(reader.n(), 25);
+        assert_eq!(reader.num_chunks(), 3);
+        let mut got_cols = 0usize;
+        let mut starts = Vec::new();
+        while let Some((chunk, start)) = reader.next_chunk().unwrap() {
+            starts.push(start);
+            for j in 0..chunk.cols() {
+                for i in 0..6 {
+                    let want = x.get(i, start + j);
+                    assert!((chunk.get(i, j) - want).abs() < 1e-6, "f32 roundtrip");
+                }
+            }
+            got_cols += chunk.cols();
+        }
+        assert_eq!(got_cols, 25);
+        assert_eq!(starts, vec![0, 10, 20]);
+        // second pass after rewind
+        reader.rewind().unwrap();
+        let (first, s0) = reader.next_chunk().unwrap().unwrap();
+        assert_eq!(s0, 0);
+        assert_eq!(first.cols(), 10);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic");
+        std::fs::write(&path, b"NOPE====").unwrap();
+        assert!(ChunkStoreReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_shape_append() {
+        let path = tmpfile("badshape");
+        let mut store = ChunkStore::create(&path, 4, 8).unwrap();
+        assert!(store.append(&Mat::zeros(5, 2)).is_err());
+        assert!(store.append(&Mat::zeros(4, 9)).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

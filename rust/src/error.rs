@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the pds library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape / dimension mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid configuration or argument value.
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+
+    /// A required AOT artifact is missing from the manifest.
+    #[error("missing artifact: graph={graph} p={p} b={b} k={k} (run `make artifacts`)")]
+    MissingArtifact { graph: String, p: usize, b: usize, k: usize },
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Numerical failure (non-convergence, singularity, NaN).
+    #[error("numerical: {0}")]
+    Numerical(String),
+
+    /// I/O (out-of-core store, manifest).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand for building a shape error.
+pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error::Shape(msg.into()))
+}
+
+/// Shorthand for building an invalid-argument error.
+pub fn invalid<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error::Invalid(msg.into()))
+}

@@ -1,0 +1,186 @@
+//! Shared concentration-bound machinery: Bernstein inversion, the τ and ρ
+//! quantities, Corollary 5's sample-size law, and a streaming accumulator
+//! for the data-dependent norms the bounds consume.
+
+use crate::linalg::Mat;
+
+/// `τ(m, p) = max(p/m − 1, 1)` — Eq. (9).
+pub fn tau(m: usize, p: usize) -> f64 {
+    (p as f64 / m as f64 - 1.0).max(1.0)
+}
+
+/// Invert a (matrix) Bernstein tail `δ = prefactor · exp(−t²/2 / (σ² + L t / 3))`
+/// for `t` at a given failure probability: with `lf = ln(prefactor/δ)`,
+/// `t = L·lf/3 + sqrt((L·lf/3)² + 2 σ² lf)`.
+pub fn bernstein_invert(sigma2: f64, l: f64, prefactor: f64, delta: f64) -> f64 {
+    assert!(delta > 0.0 && prefactor > 0.0);
+    let lf = (prefactor / delta).ln().max(0.0);
+    let a = l * lf / 3.0;
+    a + (a * a + 2.0 * sigma2 * lf).sqrt()
+}
+
+/// Corollary 3 / Section V: the norm-reduction factor ρ after
+/// preconditioning — `ρ = (m/p)(2/η) log(2np/α)` (valid w.p. ≥ 1−α),
+/// clipped at the trivial ρ = 1.
+pub fn rho_preconditioned(m: usize, p: usize, n: usize, eta: f64, alpha: f64) -> f64 {
+    let rho = (m as f64 / p as f64) * (2.0 / eta) * (2.0 * (n * p) as f64 / alpha).ln();
+    rho.min(1.0)
+}
+
+/// Corollary 5, Eq. (18): the smallest `m` guaranteeing ℓ∞ mean error ≤ t
+/// with failure probability δ₁ ≤ 1e−3 for preconditioned data.
+/// Returns the (real-valued) lower bound; callers take `ceil` and clamp ≥ 2.
+pub fn corollary5_min_m(p: usize, n: usize, t: f64, eta: f64) -> f64 {
+    let pf = p as f64;
+    let nf = n as f64;
+    (1.0 / nf)
+        * (4.0 / eta)
+        * (200.0 * nf * pf).ln()
+        * (2000.0 * pf).ln()
+        * (t.powi(-2) + pf.sqrt() / (3.0 * t))
+}
+
+/// Streaming accumulator for the data-dependent norms in Theorems 4/6:
+/// `‖X‖max`, `‖X‖max-col`, `‖X‖max-row`, `‖X‖F²`, and the max row sum of
+/// 4th powers (Eq. 26's last term). Feed dense chunks as they stream by.
+#[derive(Clone, Debug)]
+pub struct DataStats {
+    p: usize,
+    n: usize,
+    max_abs: f64,
+    max_col_norm2: f64,
+    row_norm2: Vec<f64>,
+    row_pow4: Vec<f64>,
+    frob2: f64,
+}
+
+impl DataStats {
+    pub fn new(p: usize) -> Self {
+        DataStats {
+            p,
+            n: 0,
+            max_abs: 0.0,
+            max_col_norm2: 0.0,
+            row_norm2: vec![0.0; p],
+            row_pow4: vec![0.0; p],
+            frob2: 0.0,
+        }
+    }
+
+    /// Accumulate one dense chunk (columns are samples).
+    pub fn accumulate(&mut self, x: &Mat) {
+        assert_eq!(x.rows(), self.p);
+        for j in 0..x.cols() {
+            let col = x.col(j);
+            let mut cn = 0.0;
+            for (i, &v) in col.iter().enumerate() {
+                let a = v.abs();
+                if a > self.max_abs {
+                    self.max_abs = a;
+                }
+                let v2 = v * v;
+                cn += v2;
+                self.row_norm2[i] += v2;
+                self.row_pow4[i] += v2 * v2;
+            }
+            if cn > self.max_col_norm2 {
+                self.max_col_norm2 = cn;
+            }
+            self.frob2 += cn;
+        }
+        self.n += x.cols();
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// `‖X‖max` — max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.max_abs
+    }
+
+    /// `‖X‖max-col` — max column l2 norm.
+    pub fn max_col_norm(&self) -> f64 {
+        self.max_col_norm2.sqrt()
+    }
+
+    /// `‖X‖max-row` — max row l2 norm.
+    pub fn max_row_norm(&self) -> f64 {
+        self.row_norm2.iter().fold(0.0f64, |m, &v| m.max(v)).sqrt()
+    }
+
+    /// `‖X‖F²`.
+    pub fn frob2(&self) -> f64 {
+        self.frob2
+    }
+
+    /// `max_j Σ_i X_{j,i}⁴` (Eq. 26 last term).
+    pub fn max_row_pow4(&self) -> f64 {
+        self.row_pow4.iter().fold(0.0f64, |m, &v| m.max(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn tau_regimes() {
+        assert_eq!(tau(10, 100), 9.0); // m/p <= 0.5 -> p/m - 1
+        assert_eq!(tau(60, 100), 1.0); // m/p > 0.5 -> 1
+        assert_eq!(tau(50, 100), 1.0); // exactly 0.5 -> p/m-1 = 1
+    }
+
+    #[test]
+    fn bernstein_invert_roundtrip() {
+        // forward tail at the returned t should equal delta
+        let (sigma2, l, pref, delta) = (0.3, 0.05, 200.0, 1e-3);
+        let t = bernstein_invert(sigma2, l, pref, delta);
+        let back = pref * (-(t * t) / 2.0 / (sigma2 + l * t / 3.0)).exp();
+        assert!((back - delta).abs() / delta < 1e-9, "back={back}");
+    }
+
+    #[test]
+    fn corollary5_values_from_paper() {
+        // Paper: p=512, eta=1, t=0.01 -> 137.2, 15.1, 1.6 for n=1e5,1e6,1e7.
+        let cases = [(1e5, 137.2), (1e6, 15.1), (1e7, 1.6)];
+        for (n, want) in cases {
+            let got = corollary5_min_m(512, n as usize, 0.01, 1.0);
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "n={n}: got {got:.3} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn rho_clipped_at_one() {
+        assert_eq!(rho_preconditioned(100, 100, 10, 1.0, 0.01), 1.0);
+        let rho = rho_preconditioned(10, 1000, 1000, 1.0, 0.01);
+        assert!(rho < 1.0 && rho > 0.0);
+    }
+
+    #[test]
+    fn data_stats_match_mat_norms() {
+        let mut rng = Pcg64::seed(3);
+        let x = Mat::from_fn(20, 50, |_, _| rng.normal());
+        let mut st = DataStats::new(20);
+        // stream in two chunks
+        st.accumulate(&x.col_range(0, 30));
+        st.accumulate(&x.col_range(30, 50));
+        assert_eq!(st.n(), 50);
+        assert!((st.max_abs() - x.max_abs()).abs() < 1e-12);
+        assert!((st.max_col_norm() - x.max_col_norm()).abs() < 1e-12);
+        assert!((st.max_row_norm() - x.max_row_norm()).abs() < 1e-12);
+        assert!((st.frob2() - x.frob_norm().powi(2)).abs() < 1e-9);
+        // max row 4th moment vs direct
+        let mut want = 0.0f64;
+        for i in 0..20 {
+            let s: f64 = (0..50).map(|j| x.get(i, j).powi(4)).sum();
+            want = want.max(s);
+        }
+        assert!((st.max_row_pow4() - want).abs() < 1e-9);
+    }
+}

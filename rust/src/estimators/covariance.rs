@@ -1,0 +1,289 @@
+//! Theorem 6: the unbiased covariance estimator from sparsified data.
+//!
+//! Streaming accumulation of `Σ R_i R_iᵀ x_i x_iᵀ R_i R_iᵀ` (each term is
+//! an m×m outer-product scatter), the Eq. (21) diagonal unbiasing, and the
+//! Eq. (24)–(26) spectral-norm concentration bound.
+
+use crate::estimators::bounds::bernstein_invert;
+use crate::linalg::Mat;
+use crate::sparse::SparseChunk;
+
+/// Streaming unbiased covariance estimator (Theorem 6).
+#[derive(Clone, Debug)]
+pub struct CovarianceEstimator {
+    p: usize,
+    m: usize,
+    /// Accumulated `Σ w_i w_iᵀ` (dense p×p; the estimator is *for* the
+    /// unstructured-covariance regime, so dense accumulation is inherent).
+    acc: Mat,
+    n: usize,
+}
+
+impl CovarianceEstimator {
+    pub fn new(p: usize, m: usize) -> Self {
+        assert!(m >= 2, "covariance estimator needs m >= 2 (Eq. 19 rescale)");
+        CovarianceEstimator { p, m, acc: Mat::zeros(p, p), n: 0 }
+    }
+
+    /// Fold one sparsified chunk: scatter each column's m×m outer product.
+    ///
+    /// Perf: only the lower triangle is accumulated (column indices are
+    /// sorted, so `b >= a` ⇒ `j_b >= j_a`) and mirrored at estimate time —
+    /// half the scatter traffic of the naive m² loop (§Perf log).
+    pub fn accumulate(&mut self, chunk: &SparseChunk) {
+        assert_eq!(chunk.p(), self.p);
+        assert_eq!(chunk.m(), self.m);
+        for i in 0..chunk.n() {
+            let idx = chunk.col_indices(i);
+            let val = chunk.col_values(i);
+            for (a, &ja) in idx.iter().enumerate() {
+                let va = val[a];
+                if va == 0.0 {
+                    continue;
+                }
+                // sorted indices: writes walk down column `ja` contiguously
+                for (b, &jb) in idx.iter().enumerate().skip(a) {
+                    self.acc.add_at(jb as usize, ja as usize, val[b] * va);
+                }
+            }
+        }
+        self.n += chunk.n();
+    }
+
+    /// Materialize the symmetric accumulator (mirror lower → upper).
+    fn acc_full(&self) -> Mat {
+        let mut full = self.acc.clone();
+        for j in 0..self.p {
+            for i in (j + 1)..self.p {
+                let v = full.get(i, j);
+                full.set(j, i, v);
+            }
+        }
+        full
+    }
+
+    /// Accumulate a precomputed chunk Gram `W Wᵀ` (from the AOT
+    /// `cov_update` executable) for `n_cols` samples. Only the lower
+    /// triangle is folded (the internal accumulator is triangular).
+    pub fn accumulate_gram(&mut self, gram: &Mat, n_cols: usize) {
+        assert_eq!(gram.rows(), self.p);
+        assert_eq!(gram.cols(), self.p);
+        for j in 0..self.p {
+            for i in j..self.p {
+                self.acc.add_at(i, j, gram.get(i, j));
+            }
+        }
+        self.n += n_cols;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The biased rescaled estimator `Ĉ_emp` (Eq. 19).
+    pub fn estimate_biased(&self) -> Mat {
+        assert!(self.n > 0);
+        let (p, m) = (self.p as f64, self.m as f64);
+        let scale = p * (p - 1.0) / (m * (m - 1.0)) / self.n as f64;
+        self.acc_full().scaled(scale)
+    }
+
+    /// The unbiased estimator `Ĉ_n` (Eq. 21):
+    /// `Ĉ_n = Ĉ_emp − (p−m)/(p−1) · diag(Ĉ_emp)`.
+    pub fn estimate(&self) -> Mat {
+        let (p, m) = (self.p as f64, self.m as f64);
+        let mut c = self.estimate_biased();
+        let shrink = (p - m) / (p - 1.0);
+        for i in 0..self.p {
+            let d = c.get(i, i);
+            c.set(i, i, d - shrink * d);
+        }
+        c
+    }
+
+    /// Merge a partner accumulator (distributed reduction).
+    pub fn merge(&mut self, other: &CovarianceEstimator) {
+        assert_eq!(self.p, other.p);
+        assert_eq!(self.m, other.m);
+        self.acc.axpy(1.0, &other.acc);
+        self.n += other.n;
+    }
+}
+
+/// Inputs to the Theorem 6 bound (Eqs. 24–26). All norms refer to the
+/// (preconditioned) matrix actually sampled.
+#[derive(Clone, Copy, Debug)]
+pub struct CovBoundInputs {
+    pub p: usize,
+    pub m: usize,
+    pub n: usize,
+    /// ρ: `max_i ‖w_i‖²/‖x_i‖²` bound (1 always valid; with ROS use
+    /// [`rho_preconditioned`](super::rho_preconditioned)).
+    pub rho: f64,
+    /// `‖X‖max-col²`.
+    pub max_col_norm2: f64,
+    /// `‖X‖max²`.
+    pub max_abs2: f64,
+    /// `‖X‖F²`.
+    pub frob2: f64,
+    /// `‖C_emp‖₂`.
+    pub cov_norm: f64,
+    /// `‖diag(C_emp)‖₂`.
+    pub cov_diag_norm: f64,
+    /// `max_j Σ_i X_{j,i}⁴`.
+    pub max_row_pow4: f64,
+}
+
+impl CovBoundInputs {
+    /// The uniform summand bound `L` — Eq. (25).
+    pub fn l(&self) -> f64 {
+        let (p, m, n) = (self.p as f64, self.m as f64, self.n as f64);
+        (1.0 / n)
+            * ((p * (p - 1.0) / (m * (m - 1.0)) * self.rho + 1.0) * self.max_col_norm2
+                + p * (p - m) / (m * (m - 1.0)) * self.max_abs2)
+    }
+
+    /// The variance bound `σ²` — Eq. (26).
+    pub fn sigma2(&self) -> f64 {
+        let (p, m, n) = (self.p as f64, self.m as f64, self.n as f64);
+        let t1 = (p * (p - 1.0) / (m * (m - 1.0)) * self.rho - 1.0)
+            * self.max_col_norm2
+            * self.cov_norm;
+        let t2 = p * (p - 1.0) * (p - m) / (m * (m - 1.0).powi(2))
+            * self.rho
+            * self.max_col_norm2
+            * self.cov_diag_norm;
+        let t3 = 2.0 * p * (p - 1.0) * (p - m) / (m * (m - 1.0).powi(2))
+            * self.max_abs2
+            * (self.frob2 / n);
+        let t4 = p * (p - m).powi(2) / (m * (m - 1.0).powi(2)) * (self.max_row_pow4 / n);
+        (t1 + t2 + t3 + t4) / n
+    }
+
+    /// Spectral-norm error bound `t` at failure probability δ₂ — Eq. (24).
+    pub fn t_for_delta(&self, delta2: f64) -> f64 {
+        bernstein_invert(self.sigma2(), self.l(), self.p as f64, delta2)
+    }
+
+    /// Failure probability δ₂ at error level `t`.
+    pub fn delta_for_t(&self, t: f64) -> f64 {
+        self.p as f64 * (-(t * t) / 2.0 / (self.sigma2() + self.l() * t / 3.0)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::spectral_norm_sym;
+    use crate::rng::Pcg64;
+    use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::transform::TransformKind;
+
+    fn spiked_data(p: usize, n: usize, seed: u64) -> Mat {
+        // x_i = sum_j kappa_ij * lambda_j * u_j, k=3
+        let mut rng = Pcg64::seed(seed);
+        let g = Mat::from_fn(p, 3, |_, _| rng.normal());
+        let u = crate::linalg::orthonormalize(&g);
+        let lambda = [3.0, 2.0, 1.0];
+        let mut x = Mat::zeros(p, n);
+        for j in 0..n {
+            let kap: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            for i in 0..p {
+                let mut s = 0.0;
+                for t in 0..3 {
+                    s += kap[t] * lambda[t] * u.get(i, t);
+                }
+                x.set(i, j, s);
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn unbiased_diagonal_correction() {
+        // With heavy averaging, Ĉ_n ≈ C_emp including the diagonal —
+        // verifying the Eq. 21 unbiasing empirically.
+        let (p, n) = (16usize, 60_000usize);
+        let x = spiked_data(p, n, 3);
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 7 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let y = sp.precondition_dense(&x);
+        let cemp = y.syrk().scaled(1.0 / n as f64);
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        let chat = est.estimate();
+        let err = spectral_norm_sym(&chat.sub(&cemp), 1e-9, 2000);
+        let scale = spectral_norm_sym(&cemp, 1e-9, 2000);
+        assert!(err / scale < 0.15, "relative err {}", err / scale);
+        // biased estimator must differ on the diagonal by the known factor
+        let biased = est.estimate_biased();
+        let d_biased: f64 = biased.diagonal().iter().sum();
+        let d_unbiased: f64 = chat.diagonal().iter().sum();
+        assert!(d_biased > d_unbiased, "bias correction must shrink diagonal");
+    }
+
+    #[test]
+    fn merge_and_gram_paths_agree() {
+        let (p, n) = (12usize, 64usize);
+        let x = spiked_data(p, n, 5);
+        let cfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 9 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+
+        let mut scatter = CovarianceEstimator::new(sp.p(), sp.m());
+        scatter.accumulate(&chunk);
+
+        let w = chunk.to_dense();
+        let mut gram = CovarianceEstimator::new(sp.p(), sp.m());
+        gram.accumulate_gram(&w.syrk(), n);
+
+        let d = scatter.estimate().sub(&gram.estimate());
+        assert!(d.max_abs() < 1e-9, "scatter vs gram {}", d.max_abs());
+
+        // split + merge == whole
+        let mut a = CovarianceEstimator::new(sp.p(), sp.m());
+        let mut b = CovarianceEstimator::new(sp.p(), sp.m());
+        a.accumulate(&sp.compress_chunk(&x.col_range(0, 40), 0).unwrap());
+        b.accumulate(&sp.compress_chunk(&x.col_range(40, 64), 40).unwrap());
+        a.merge(&b);
+        let d2 = a.estimate().sub(&scatter.estimate());
+        assert!(d2.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn bound_roundtrip_and_dominance() {
+        let (p, n) = (32usize, 4_000usize);
+        let x = spiked_data(p, n, 11);
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 1 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let y = sp.precondition_dense(&x);
+        let cemp = y.syrk().scaled(1.0 / n as f64);
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        let err = spectral_norm_sym(&est.estimate().sub(&cemp), 1e-9, 2000);
+
+        let mut stats = crate::estimators::DataStats::new(sp.p());
+        stats.accumulate(&y);
+        let inputs = CovBoundInputs {
+            p: sp.p(),
+            m: sp.m(),
+            n,
+            rho: crate::estimators::rho_preconditioned(sp.m(), sp.p(), n, 1.0, 0.01),
+            max_col_norm2: stats.max_col_norm().powi(2),
+            max_abs2: stats.max_abs().powi(2),
+            frob2: stats.frob2(),
+            cov_norm: spectral_norm_sym(&cemp, 1e-9, 2000),
+            cov_diag_norm: cemp.diagonal().iter().fold(0.0f64, |a, &b| a.max(b.abs())),
+            max_row_pow4: stats.max_row_pow4(),
+        };
+        let t = inputs.t_for_delta(0.01);
+        assert!(err <= t, "bound must dominate: err {err} t {t}");
+        // tightness within the paper's "order of magnitude"
+        assert!(t < 100.0 * err, "bound wildly loose: err {err} t {t}");
+        // tail inversion roundtrip
+        let back = inputs.delta_for_t(t);
+        assert!((back - 0.01).abs() / 0.01 < 1e-6);
+    }
+}

@@ -1,0 +1,159 @@
+//! Theorem 7: conditioning of the sparsified center-update system.
+//!
+//! `H_k = (p/m)(1/n_k) Σ_{i∈I_k} R_i R_iᵀ` is diagonal; its `j`-th entry
+//! counts how often coordinate `j` was sampled within cluster `k`, scaled
+//! by `p/(m·n_k)`. Theorem 7 bounds `‖H_k − I‖₂` — i.e. how close the
+//! entry-wise averaging of Eq. (39) is to a plain average.
+
+use crate::estimators::bounds::bernstein_invert;
+use crate::sparse::SparseChunk;
+
+/// Streaming accumulator for the per-coordinate sampling counts of one
+/// cluster (or of the whole stream).
+#[derive(Clone, Debug)]
+pub struct HkAccumulator {
+    p: usize,
+    m: usize,
+    counts: Vec<u64>,
+    n: usize,
+}
+
+impl HkAccumulator {
+    pub fn new(p: usize, m: usize) -> Self {
+        HkAccumulator { p, m, counts: vec![0; p], n: 0 }
+    }
+
+    /// Count every column of a chunk.
+    pub fn accumulate(&mut self, chunk: &SparseChunk) {
+        assert_eq!(chunk.p(), self.p);
+        for i in 0..chunk.n() {
+            for &j in chunk.col_indices(i) {
+                self.counts[j as usize] += 1;
+            }
+        }
+        self.n += chunk.n();
+    }
+
+    /// Count a subset of columns (the members of one cluster).
+    pub fn accumulate_subset(&mut self, chunk: &SparseChunk, members: &[usize]) {
+        assert_eq!(chunk.p(), self.p);
+        for &i in members {
+            for &j in chunk.col_indices(i) {
+                self.counts[j as usize] += 1;
+            }
+        }
+        self.n += members.len();
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Diagonal of `H_k` (Eq. 41).
+    pub fn hk_diagonal(&self) -> Vec<f64> {
+        assert!(self.n > 0);
+        let scale = self.p as f64 / (self.m as f64 * self.n as f64);
+        self.counts.iter().map(|&c| c as f64 * scale).collect()
+    }
+
+    /// `‖H_k − I‖₂` — exact for a diagonal matrix: `max_j |H_jj − 1|`.
+    pub fn deviation_norm(&self) -> f64 {
+        self.hk_diagonal().iter().map(|d| (d - 1.0).abs()).fold(0.0, f64::max)
+    }
+
+    /// Coordinates never sampled (Eq. 39's `n_k^{(j)} = 0` degenerate set).
+    pub fn unseen_coordinates(&self) -> usize {
+        self.counts.iter().filter(|&&c| c == 0).count()
+    }
+
+    /// Theorem 7 bound: `t` such that `‖H_k − I‖₂ ≤ t` w.p. ≥ 1 − δ₃,
+    /// given `n_k` member samples (Eq. 43).
+    pub fn t_for_delta(p: usize, m: usize, n_k: usize, delta3: f64) -> f64 {
+        let r = p as f64 / m as f64;
+        let nk = n_k as f64;
+        let sigma2 = (r - 1.0) / nk;
+        let l = (r + 1.0) / nk;
+        bernstein_invert(sigma2, l, p as f64, delta3)
+    }
+
+    /// Failure probability δ₃ at deviation `t` (Eq. 43, forward direction).
+    pub fn delta_for_t(p: usize, m: usize, n_k: usize, t: f64) -> f64 {
+        let r = p as f64 / m as f64;
+        let nk = n_k as f64;
+        p as f64 * (-(nk * t * t) / 2.0 / ((r - 1.0) + (r + 1.0) * t / 3.0)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::transform::TransformKind;
+
+    fn chunk(p: usize, gamma: f64, n: usize, seed: u64) -> (Sparsifier, SparseChunk) {
+        let cfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(seed ^ 0xAB);
+        let x = Mat::from_fn(p, n, |_, _| rng.normal());
+        let c = sp.compress_chunk(&x, 0).unwrap();
+        (sp, c)
+    }
+
+    #[test]
+    fn hk_converges_to_identity() {
+        let (sp, c) = chunk(64, 0.25, 20_000, 3);
+        let mut acc = HkAccumulator::new(sp.p(), sp.m());
+        acc.accumulate(&c);
+        assert!(acc.deviation_norm() < 0.1, "dev {}", acc.deviation_norm());
+        assert_eq!(acc.unseen_coordinates(), 0);
+    }
+
+    #[test]
+    fn hk_mean_is_one() {
+        // Σ_j counts_j = m·n exactly, so the average diagonal is exactly 1.
+        let (sp, c) = chunk(32, 0.3, 500, 5);
+        let mut acc = HkAccumulator::new(sp.p(), sp.m());
+        acc.accumulate(&c);
+        let d = acc.hk_diagonal();
+        let mean: f64 = d.iter().sum::<f64>() / d.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem7_bound_dominates_empirical() {
+        let p = 64;
+        let gamma = 0.3;
+        let n = 2_000;
+        let mut worst = 0.0f64;
+        for seed in 0..25 {
+            let (sp, c) = chunk(p, gamma, n, 100 + seed);
+            let mut acc = HkAccumulator::new(sp.p(), sp.m());
+            acc.accumulate(&c);
+            worst = worst.max(acc.deviation_norm());
+        }
+        let m = (gamma * p as f64).round() as usize;
+        let t = HkAccumulator::t_for_delta(p, m, n, 1e-3);
+        assert!(worst <= t, "worst {worst} bound {t}");
+        assert!(t < 10.0 * worst, "bound loose: {t} vs {worst}");
+    }
+
+    #[test]
+    fn subset_accumulation() {
+        let (sp, c) = chunk(16, 0.5, 100, 9);
+        let mut all = HkAccumulator::new(sp.p(), sp.m());
+        all.accumulate(&c);
+        let mut sub = HkAccumulator::new(sp.p(), sp.m());
+        sub.accumulate_subset(&c, &(0..100).collect::<Vec<_>>());
+        assert_eq!(all.hk_diagonal(), sub.hk_diagonal());
+        assert_eq!(all.n(), sub.n());
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let t = HkAccumulator::t_for_delta(100, 30, 5000, 1e-3);
+        let back = HkAccumulator::delta_for_t(100, 30, 5000, t);
+        assert!((back - 1e-3).abs() / 1e-3 < 1e-6);
+    }
+}

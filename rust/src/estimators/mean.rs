@@ -1,0 +1,208 @@
+//! Theorem 4: the unbiased sample-mean estimator from sparsified data.
+//!
+//! `x̂̄_n = (p/m) (1/n) Σ R_i R_iᵀ x_i` — streaming accumulation over
+//! [`SparseChunk`]s, plus the paper's explicit ℓ∞ error bound (Eq. 16).
+
+use crate::estimators::bounds::{bernstein_invert, tau};
+use crate::sparse::SparseChunk;
+
+/// Streaming unbiased mean estimator (Theorem 4, Eq. 8).
+#[derive(Clone, Debug)]
+pub struct SparseMeanEstimator {
+    p: usize,
+    m: usize,
+    sum: Vec<f64>,
+    n: usize,
+}
+
+impl SparseMeanEstimator {
+    pub fn new(p: usize, m: usize) -> Self {
+        SparseMeanEstimator { p, m, sum: vec![0.0; p], n: 0 }
+    }
+
+    /// Fold one sparsified chunk into the running sums.
+    pub fn accumulate(&mut self, chunk: &SparseChunk) {
+        assert_eq!(chunk.p(), self.p, "chunk p mismatch");
+        assert_eq!(chunk.m(), self.m, "chunk m mismatch");
+        for i in 0..chunk.n() {
+            for (idx, val) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
+                self.sum[*idx as usize] += *val;
+            }
+        }
+        self.n += chunk.n();
+    }
+
+    /// Samples seen so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The estimate `x̂̄_n` (Eq. 8). Panics if no samples were accumulated.
+    pub fn estimate(&self) -> Vec<f64> {
+        assert!(self.n > 0, "no samples accumulated");
+        let scale = (self.p as f64 / self.m as f64) / self.n as f64;
+        self.sum.iter().map(|s| s * scale).collect()
+    }
+
+    /// Merge a partner accumulator (distributed / multi-worker reduction).
+    pub fn merge(&mut self, other: &SparseMeanEstimator) {
+        assert_eq!(self.p, other.p);
+        assert_eq!(self.m, other.m);
+        for (a, b) in self.sum.iter_mut().zip(&other.sum) {
+            *a += b;
+        }
+        self.n += other.n;
+    }
+}
+
+/// Data-dependent inputs to the Theorem 4 bound. Obtain from
+/// [`DataStats`](super::DataStats) over the *preconditioned* data, or from
+/// matrix norms directly in small experiments.
+#[derive(Clone, Copy, Debug)]
+pub struct MeanBoundInputs {
+    /// `‖X‖max` of the (preconditioned) data actually sampled.
+    pub max_abs: f64,
+    /// `‖X‖max-row` of the same matrix.
+    pub max_row_norm: f64,
+    /// Number of samples n.
+    pub n: usize,
+    /// Ambient dimension p.
+    pub p: usize,
+    /// Kept entries per sample m.
+    pub m: usize,
+}
+
+impl MeanBoundInputs {
+    /// The ℓ∞ error bound `t` at failure probability `δ₁` — Eq. (16).
+    pub fn t_for_delta(&self, delta1: f64) -> f64 {
+        let nf = self.n as f64;
+        // Bernstein with sigma² = (p/m − 1)·‖X‖max-row²/n², L = τ·‖X‖max/n,
+        // prefactor 2p (union bound over p coordinates).
+        let sigma2 =
+            (self.p as f64 / self.m as f64 - 1.0) * self.max_row_norm.powi(2) / (nf * nf);
+        let l = tau(self.m, self.p) * self.max_abs / nf;
+        bernstein_invert(sigma2, l, 2.0 * self.p as f64, delta1)
+    }
+
+    /// Failure probability δ₁ at error level `t` — Eq. (10).
+    pub fn delta_for_t(&self, t: f64) -> f64 {
+        let nf = self.n as f64;
+        let denom = (self.p as f64 / self.m as f64 - 1.0) * self.max_row_norm.powi(2) / nf
+            + tau(self.m, self.p) * self.max_abs * t / 3.0;
+        (2.0 * self.p as f64) * (-(nf * t * t) / 2.0 / denom).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::transform::TransformKind;
+
+    fn linf(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn unbiased_without_preconditioning() {
+        // Accumulate masked raw data; estimator must converge to the true
+        // sample mean (no ROS involved — pure Thm 4 setting).
+        let (p, n, m) = (32usize, 20_000usize, 8usize);
+        let mut rng = Pcg64::seed(5);
+        let xbar: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let x = Mat::from_fn(p, n, |i, _| xbar[i] + 0.5 * rng.normal());
+        let cfg = SparsifyConfig { gamma: m as f64 / p as f64, transform: TransformKind::Hadamard, seed: 77 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let chunk = sp.compress_chunk_no_precondition(&x, 0).unwrap();
+        let mut est = SparseMeanEstimator::new(p, m);
+        est.accumulate(&chunk);
+        let got = est.estimate();
+        let truth = x.col_mean();
+        assert!(linf(&got, &truth) < 0.15, "err {}", linf(&got, &truth));
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let (p, m) = (16usize, 4usize);
+        let mut rng = Pcg64::seed(9);
+        let x = Mat::from_fn(p, 40, |_, _| rng.normal());
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 3 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let whole = sp.compress_chunk(&x, 0).unwrap();
+        let mut single = SparseMeanEstimator::new(p, m);
+        single.accumulate(&whole);
+
+        let mut a = SparseMeanEstimator::new(p, m);
+        let mut b = SparseMeanEstimator::new(p, m);
+        a.accumulate(&sp.compress_chunk(&x.col_range(0, 25), 0).unwrap());
+        b.accumulate(&sp.compress_chunk(&x.col_range(25, 40), 25).unwrap());
+        a.merge(&b);
+        assert!(linf(&a.estimate(), &single.estimate()) < 1e-12);
+    }
+
+    #[test]
+    fn error_shrinks_with_n() {
+        let p = 64;
+        let mut rng = Pcg64::seed(11);
+        let xbar: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 1 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut errs = Vec::new();
+        for &n in &[500usize, 5_000, 50_000] {
+            let x = Mat::from_fn(p, n, |i, _| xbar[i] + rng.normal());
+            let y = sp.precondition_dense(&x);
+            let chunk = sp.compress_chunk(&x, 0).unwrap();
+            let mut est = SparseMeanEstimator::new(sp.p(), sp.m());
+            est.accumulate(&chunk);
+            errs.push(linf(&est.estimate(), &y.col_mean()));
+        }
+        assert!(errs[2] < errs[0], "errors must decrease: {errs:?}");
+    }
+
+    #[test]
+    fn bound_formula_matches_tail_inversion() {
+        let b = MeanBoundInputs { max_abs: 0.3, max_row_norm: 4.0, n: 1000, p: 100, m: 30 };
+        let t = b.t_for_delta(1e-3);
+        let back = b.delta_for_t(t);
+        assert!((back - 1e-3).abs() / 1e-3 < 1e-6, "δ roundtrip: {back}");
+    }
+
+    #[test]
+    fn bound_dominates_empirical_error() {
+        // Thm 4 at δ₁=0.001 must dominate the max error over many runs.
+        let (p, n) = (64usize, 2000usize);
+        let mut rng = Pcg64::seed(13);
+        let xbar: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let x = Mat::from_fn(p, n, |i, _| xbar[i] + rng.normal());
+        let mut worst = 0.0f64;
+        let mut inputs = None;
+        for run in 0..30 {
+            let cfg = SparsifyConfig {
+                gamma: 0.3,
+                transform: TransformKind::Hadamard,
+                seed: 1000 + run,
+            };
+            let sp = Sparsifier::new(p, cfg).unwrap();
+            let y = sp.precondition_dense(&x);
+            let chunk = sp.compress_chunk(&x, 0).unwrap();
+            let mut est = SparseMeanEstimator::new(sp.p(), sp.m());
+            est.accumulate(&chunk);
+            worst = worst.max(linf(&est.estimate(), &y.col_mean()));
+            if inputs.is_none() {
+                inputs = Some(MeanBoundInputs {
+                    max_abs: y.max_abs(),
+                    max_row_norm: y.max_row_norm(),
+                    n,
+                    p,
+                    m: sp.m(),
+                });
+            }
+        }
+        let t = inputs.unwrap().t_for_delta(1e-3);
+        assert!(worst <= t, "empirical max {worst} exceeded bound {t}");
+        // ...and the bound should be within an order of magnitude (tightness)
+        assert!(t < 20.0 * worst, "bound too loose: {t} vs {worst}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Unbiased estimators recovered from the sparsified stream, with the
+//! paper's finite-sample concentration bounds.
+//!
+//! * [`SparseMeanEstimator`] — Theorem 4 (ℓ∞/ℓ2 error, failure prob. Eq. 10,
+//!   explicit bound Eq. 16, Corollary 5 sample-size law).
+//! * [`CovarianceEstimator`] — Theorem 6 (Eqs. 19–26: unbiasing, L, σ²,
+//!   spectral-norm bound).
+//! * [`HkAccumulator`] — Theorem 7 (conditioning of the center-update
+//!   system `H_k μ' = m_k`).
+//! * [`bounds`] — shared Bernstein machinery + data-dependent norms.
+
+mod bounds;
+mod covariance;
+mod hk;
+mod mean;
+
+pub use bounds::{
+    bernstein_invert, corollary5_min_m, rho_preconditioned, tau, DataStats,
+};
+pub use covariance::{CovBoundInputs, CovarianceEstimator};
+pub use hk::HkAccumulator;
+pub use mean::{MeanBoundInputs, SparseMeanEstimator};

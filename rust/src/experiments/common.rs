@@ -1,0 +1,177 @@
+//! Shared experiment plumbing: table printing, center-error metrics, and
+//! the digit-workload runners used by Figs. 7–10 / Tables III–V.
+
+use std::time::Instant;
+
+use crate::baselines::{FeatureExtraction, FeatureSelection};
+use crate::cli::Args;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::kmeans::{two_pass_refine, KmeansOpts, KmeansResult, SparsifiedKmeans};
+use crate::linalg::Mat;
+use crate::metrics::clustering_accuracy;
+use crate::rng::Pcg64;
+use crate::sampling::SparsifyConfig;
+use crate::transform::TransformKind;
+
+/// Print a header row followed by aligned columns.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n--- {title} ---");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Format `mean ± std`.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.4} ± {std:.4}")
+}
+
+/// Sum over estimated centers of the distance to the best-matching true
+/// center (greedy one-to-one), normalized by `sqrt(p)` — the Fig. 9
+/// center-quality metric.
+pub fn center_rmse(est: &Mat, truth: &Mat) -> f64 {
+    let k = est.cols();
+    let p = est.rows() as f64;
+    let mut used = vec![false; truth.cols()];
+    let mut total = 0.0;
+    for c in 0..k {
+        let mut best = (f64::INFINITY, 0usize);
+        for t in 0..truth.cols() {
+            if used[t] {
+                continue;
+            }
+            let d: f64 = est
+                .col(c)
+                .iter()
+                .zip(truth.col(t))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if d < best.0 {
+                best = (d, t);
+            }
+        }
+        used[best.1] = true;
+        total += (best.0 / p).sqrt();
+    }
+    total / k as f64
+}
+
+/// Which clustering algorithm a digit-workload run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    Sparsified,
+    SparsifiedNoPrecond,
+    SparsifiedTwoPass,
+    FeatureExtraction,
+    FeatureSelection,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Sparsified => "sparsified",
+            Algo::SparsifiedNoPrecond => "sparsified (no precond)",
+            Algo::SparsifiedTwoPass => "sparsified (2-pass)",
+            Algo::FeatureExtraction => "feature extraction",
+            Algo::FeatureSelection => "feature selection",
+        }
+    }
+
+    pub const ALL: [Algo; 5] = [
+        Algo::Sparsified,
+        Algo::SparsifiedNoPrecond,
+        Algo::SparsifiedTwoPass,
+        Algo::FeatureExtraction,
+        Algo::FeatureSelection,
+    ];
+}
+
+/// One digit-workload measurement.
+pub struct AlgoRun {
+    pub accuracy: f64,
+    pub seconds: f64,
+    pub result: KmeansResult,
+}
+
+/// Run one algorithm at compression factor `gamma` on an in-memory
+/// labeled dataset. `m` for the feature baselines is `round(γ·p)` so
+/// every method keeps the same per-sample budget.
+pub fn run_algo(
+    algo: Algo,
+    d: &Dataset,
+    k: usize,
+    gamma: f64,
+    opts: KmeansOpts,
+    seed: u64,
+) -> Result<AlgoRun> {
+    let p = d.data.rows();
+    let t0 = Instant::now();
+    let result = match algo {
+        Algo::Sparsified | Algo::SparsifiedNoPrecond | Algo::SparsifiedTwoPass => {
+            let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
+            if algo == Algo::SparsifiedNoPrecond {
+                // No preconditioning: sample raw coordinates. Use the DCT
+                // config so p is not padded (the transform is never
+                // applied on this path) — sampling stays over the true p
+                // coordinates, as in the paper's ablation.
+                let scfg_np = SparsifyConfig { transform: TransformKind::Dct, ..scfg };
+                let sp = crate::sampling::Sparsifier::new(p, scfg_np)?;
+                let chunk = sp.compress_chunk_no_precondition(&d.data, 0)?;
+                let sk = SparsifiedKmeans::new(scfg_np, k, opts);
+                let model =
+                    sk.fit_chunks_raw(&sp, &[chunk], &crate::kmeans::NativeAssigner, false)?;
+                model.result
+            } else {
+                let sk = SparsifiedKmeans::new(scfg, k, opts);
+                let one = sk.fit_dense(&d.data)?;
+                if algo == Algo::SparsifiedTwoPass {
+                    two_pass_refine(&d.data, &one)
+                } else {
+                    one
+                }
+            }
+        }
+        Algo::FeatureExtraction => {
+            let m = ((gamma * p as f64).round() as usize).clamp(2, p);
+            let mut rng = Pcg64::seed(seed);
+            let fe = FeatureExtraction::new(p, m, &mut rng);
+            fe.fit(&d.data, k, opts)?
+        }
+        Algo::FeatureSelection => {
+            let m = ((gamma * p as f64).round() as usize).clamp(2, p);
+            let mut rng = Pcg64::seed(seed);
+            let fs = FeatureSelection::new(&d.data, m, k, &mut rng);
+            fs.fit(&d.data, k, opts)?
+        }
+    };
+    let seconds = t0.elapsed().as_secs_f64();
+    let accuracy = clustering_accuracy(&result.assign, &d.labels, k);
+    Ok(AlgoRun { accuracy, seconds, result })
+}
+
+/// Standard scaled-vs-full sizing helper.
+pub fn scaled(args: &Args, small: usize, full: usize) -> usize {
+    if args.flag("full") {
+        full
+    } else {
+        small
+    }
+}

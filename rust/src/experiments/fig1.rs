@@ -1,0 +1,81 @@
+//! Fig. 1 — accuracy of estimated PCs via one-pass methods: uniform
+//! column sampling vs precondition+sparsify, on heavy-tailed data.
+//!
+//! Paper setup: p=512, n=1024, multivariate t (df=1) with Toeplitz
+//! covariance `C_ij = 2·0.5^|i−j|`, k=10 PCs, 1000 runs per γ. The
+//! headline is not the means (comparable) but the *standard deviations*:
+//! column sampling is catastrophically variable, sparsification is not.
+
+use crate::baselines::uniform_column_sampling;
+use crate::cli::Args;
+use crate::data::multivariate_t;
+use crate::error::Result;
+use crate::estimators::CovarianceEstimator;
+use crate::experiments::common::{pm, print_table, scaled};
+use crate::linalg::{sym_eig_topk, Mat};
+use crate::metrics::mean_std;
+use crate::pca::{explained_variance, Pca};
+use crate::rng::Pcg64;
+use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::transform::TransformKind;
+
+pub fn run(args: &Args) -> Result<()> {
+    let p: usize = args.get_parse("p", 512)?;
+    let n: usize = args.get_parse("n", 1024)?;
+    let k: usize = args.get_parse("k", 10)?;
+    let runs = scaled(args, args.get_parse("runs", 10)?, 1000);
+    let gammas = args.get_list_f64("gammas", &[0.1, 0.2, 0.3, 0.4, 0.5])?;
+    println!("Fig 1: p={p} n={n} k={k} runs={runs} (multivariate t, df=1)");
+
+    let mut rows = Vec::new();
+    for &gamma in &gammas {
+        let mut ev_sparse = Vec::new();
+        let mut ev_cols = Vec::new();
+        for run in 0..runs {
+            let mut rng = Pcg64::seed_stream(777, run as u64);
+            let d = multivariate_t(p, n, 1.0, &mut rng);
+            // reference covariance of the raw data (the metric's C)
+            let c_full = d.data.syrk().scaled(1.0 / n as f64);
+
+            // arm 1: precondition+sparsify -> covariance estimator -> PCs,
+            // unmixed back to the original domain
+            let scfg =
+                SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 1000 + run as u64 };
+            let sp = Sparsifier::new(p, scfg)?;
+            let chunk = sp.compress_chunk(&d.data, 0)?;
+            let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+            est.accumulate(&chunk);
+            let pca = Pca::from_covariance(&est.estimate(), k, run as u64);
+            let components = sp.unmix(&pca.components);
+            ev_sparse.push(explained_variance(&components, &c_full));
+
+            // arm 2: uniform column sampling with matched storage:
+            // sparse keeps m·n values; 2γ·n columns keep the same count
+            // when n = 2p (paper's setup).
+            let cols = ((2.0 * gamma * n as f64).round() as usize).clamp(k + 1, n);
+            let sub = uniform_column_sampling(&d.data, cols, &mut rng);
+            let c_sub = sub.syrk().scaled(1.0 / cols as f64);
+            let (_, u_sub) = sym_eig_topk(&c_sub, k, 30, run as u64);
+            let u_sub = Mat::from_vec(p, k, u_sub.as_slice().to_vec())?;
+            ev_cols.push(explained_variance(&u_sub, &c_full));
+        }
+        let (ms, ss) = mean_std(&ev_sparse);
+        let (mc, sc) = mean_std(&ev_cols);
+        rows.push(vec![
+            format!("{gamma:.2}"),
+            pm(ms, ss),
+            pm(mc, sc),
+            format!("{:.1}x", sc / ss.max(1e-12)),
+        ]);
+    }
+    print_table(
+        "Fig 1: explained variance (mean ± std over runs)",
+        &["gamma", "precond+sparsify", "column sampling", "std ratio"],
+        &rows,
+    );
+    println!(
+        "paper shape: comparable means, column-sampling std O(10x) larger \
+         (0.20-0.31 vs <0.04 at gamma=0.1-0.3)"
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! The experiment harness: one module per table/figure of the paper's
+//! evaluation, each regenerating the corresponding rows/series.
+//!
+//! Every experiment accepts `--runs`, `--full` (paper-scale sizes; the
+//! defaults are scaled for a single-core CI box and preserve the paper's
+//! qualitative shape), and experiment-specific knobs. Invoke via
+//! `pds xp <id>` or the matching `cargo bench` target.
+
+pub mod common;
+pub mod fig1;
+pub mod fig10_table3;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4_table1;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7_8;
+pub mod fig9;
+pub mod table2;
+pub mod table4;
+pub mod table5;
+
+use crate::cli::Args;
+use crate::error::{invalid, Result};
+
+/// All experiment ids with one-line descriptions.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig1", "explained variance: precond+sparsify vs uniform column sampling (mv-t data)"),
+    ("fig2", "sample-mean estimator error vs n + Theorem 4 bound"),
+    ("fig3", "covariance estimator error vs n and vs gamma + Theorem 6 bound"),
+    ("fig4", "preconditioning effect on covariance error vs gamma"),
+    ("table1", "recovered principal components with/without preconditioning"),
+    ("fig5", "||H_k - I||_2 vs n + Theorem 7 bound"),
+    ("fig6", "standard vs sparsified K-means speedup on synthetic blobs"),
+    ("fig7", "clustering accuracy vs gamma, 5 algorithms, digit data"),
+    ("fig8", "clustering time vs gamma, digit data"),
+    ("fig9", "one-pass center estimate quality (RMSE) per algorithm"),
+    ("fig10", "big-data accuracy vs gamma (streaming digits)"),
+    ("table2", "passes over the data per algorithm (analytic)"),
+    ("table3", "timing breakdown at gamma=0.05 (streaming digits)"),
+    ("table4", "out-of-core run: accuracy + timing incl. disk loads"),
+    ("table5", "per-iteration assignment/update speedup, full vs sparsified"),
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(args),
+        "fig2" => fig2::run(args),
+        "fig3" => fig3::run(args),
+        "fig4" => fig4_table1::run_fig4(args),
+        "table1" => fig4_table1::run_table1(args),
+        "fig5" => fig5::run(args),
+        "fig6" => fig6::run(args),
+        "fig7" => fig7_8::run_fig7(args),
+        "fig8" => fig7_8::run_fig8(args),
+        "fig9" => fig9::run(args),
+        "fig10" => fig10_table3::run_fig10(args),
+        "table2" => table2::run(args),
+        "table3" => fig10_table3::run_table3(args),
+        "table4" => table4::run(args),
+        "table5" => table5::run(args),
+        "all" => {
+            for (id, _) in EXPERIMENTS {
+                println!("\n##### pds xp {id} #####");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => invalid(format!("unknown experiment {other:?}; see `pds xp list`")),
+    }
+}

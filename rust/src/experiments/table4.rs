@@ -1,0 +1,96 @@
+//! Table IV — the out-of-core run: data lives on disk in the PDS1 chunk
+//! store (paper: 4.9 GB, n = 9.6M, 58 chunks), is loaded chunk-by-chunk,
+//! compressed, and clustered; disk-load time is reported separately.
+//!
+//! Scaled default n = 10⁵ (~300 MB f32 on disk); `--full` uses n = 9.6M
+//! if the filesystem has room. γ ∈ {0.01, 0.05} as in the paper.
+
+use std::time::Instant;
+
+use crate::cli::Args;
+use crate::coordinator::{
+    run_sparsified_kmeans_stream, run_two_pass_stream, StoreSource, StreamConfig,
+};
+use crate::data::{ChunkStore, ChunkStoreReader, DigitConfig, DigitStream, DIGIT_P};
+use crate::error::Result;
+use crate::experiments::common::{print_table, scaled};
+use crate::kmeans::{KmeansOpts, NativeAssigner};
+use crate::metrics::clustering_accuracy;
+use crate::sampling::SparsifyConfig;
+use crate::transform::TransformKind;
+
+const K: usize = 3;
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = scaled(args, args.get_parse("n", 100_000)?, 9_631_605);
+    let chunk_cols = args.get_parse("chunk-cols", 16_384)?;
+    let n_init = scaled(args, 3, 10);
+    let gammas = args.get_list_f64("gammas", &[0.01, 0.05])?;
+    let path = std::env::temp_dir().join(format!("pds_table4_{}", std::process::id()));
+    let opts = KmeansOpts { n_init, max_iters: 100, tol_frac: 0.0, seed: 0 };
+
+    // write the store once (this is the dataset "download", not timed as
+    // part of the algorithms)
+    println!(
+        "Table IV: writing {} samples (p={DIGIT_P}) to {} ({} MB f32)...",
+        n,
+        path.display(),
+        n * DIGIT_P * 4 / (1024 * 1024)
+    );
+    let stream = DigitStream::new(DigitConfig { seed: 44, ..Default::default() });
+    {
+        let mut store = ChunkStore::create(&path, DIGIT_P, chunk_cols)?;
+        let mut start = 0usize;
+        while start < n {
+            let cols = (n - start).min(chunk_cols);
+            store.append(&stream.chunk(start, cols))?;
+            start += cols;
+        }
+        store.finish()?;
+    }
+    let labels = stream.labels(0, n);
+
+    let mut rows = Vec::new();
+    for &gamma in &gammas {
+        let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 7 };
+        let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols };
+        for two_pass in [false, true] {
+            let mut src = StoreSource::new(ChunkStoreReader::open(&path)?);
+            let t0 = Instant::now();
+            let (assign, report) = if two_pass {
+                let (res, rep) =
+                    run_two_pass_stream(&mut src, scfg, K, opts, &NativeAssigner, stream_cfg)?;
+                (res.assign, rep)
+            } else {
+                let (model, rep) = run_sparsified_kmeans_stream(
+                    &mut src, scfg, K, opts, &NativeAssigner, stream_cfg, true,
+                )?;
+                (model.result.assign, rep)
+            };
+            let total = t0.elapsed().as_secs_f64();
+            let acc = clustering_accuracy(&assign, &labels, K);
+            rows.push(vec![
+                format!("{gamma:.2}"),
+                if two_pass { "Sparsified K-means, 2 pass" } else { "Sparsified K-means" }
+                    .to_string(),
+                format!("{acc:.4}"),
+                format!("{}", report.iterations),
+                format!("{total:.1}"),
+                format!("{:.1}", report.timer.get("compress")),
+                format!("{:.1}", report.timer.get("load") + report.timer.get("pass2")),
+                format!("{}", report.passes),
+            ]);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+    print_table(
+        "Table IV: out-of-core runs",
+        &["gamma", "algorithm", "accuracy", "iters", "total s", "compress s", "disk s", "passes"],
+        &rows,
+    );
+    println!(
+        "paper shape: disk load significant but not dominant; 1-pass preferred when \
+         loads are expensive; 2-pass accuracy ~0.93 already at gamma=0.01"
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Standard (dense) Lloyd K-means — the paper's uncompressed baseline.
+//!
+//! The assignment step uses the expansion
+//! `‖x − μ‖² = ‖x‖² − 2 xᵀμ + ‖μ‖²`; the cross term is a blocked
+//! matrix product so the inner loop is a gemm, the same optimization the
+//! paper's "optimized variant of Matlab's kmeans" applies.
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+use super::{plusplus::kmeans_pp_dense, KmeansOpts, KmeansResult};
+
+/// Assign every column of `x` to the nearest center; returns assignments
+/// and the summed min squared distance (the Eq. 28 objective).
+pub fn assign_dense(x: &Mat, centers: &Mat) -> (Vec<u32>, f64) {
+    let n = x.cols();
+    let k = centers.cols();
+    // center norms
+    let cnorm: Vec<f64> = (0..k)
+        .map(|c| centers.col(c).iter().map(|v| v * v).sum())
+        .collect();
+    let cross = x.matmul_transa(centers); // n×k : xᵀμ
+    let mut assign = vec![0u32; n];
+    let mut obj = 0.0;
+    for j in 0..n {
+        let xn: f64 = x.col(j).iter().map(|v| v * v).sum();
+        let mut best = f64::INFINITY;
+        let mut arg = 0u32;
+        for c in 0..k {
+            let d = xn - 2.0 * cross.get(j, c) + cnorm[c];
+            if d < best {
+                best = d;
+                arg = c as u32;
+            }
+        }
+        assign[j] = arg;
+        obj += best.max(0.0);
+    }
+    (assign, obj)
+}
+
+/// One Lloyd iteration: assignment + center update. Empty clusters keep
+/// their previous center. Returns (assignments, objective, changed count).
+pub fn lloyd_once_dense(
+    x: &Mat,
+    centers: &mut Mat,
+    prev_assign: Option<&[u32]>,
+) -> (Vec<u32>, f64, usize) {
+    let (assign, obj) = assign_dense(x, centers);
+    let changed = match prev_assign {
+        Some(prev) => assign.iter().zip(prev).filter(|(a, b)| a != b).count(),
+        None => assign.len(),
+    };
+    let p = x.rows();
+    let k = centers.cols();
+    let mut sums = Mat::zeros(p, k);
+    let mut counts = vec![0usize; k];
+    for (j, &c) in assign.iter().enumerate() {
+        counts[c as usize] += 1;
+        let col = x.col(j);
+        let s = sums.col_mut(c as usize);
+        for i in 0..p {
+            s[i] += col[i];
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f64;
+            let (s, dst) = (sums.col(c), centers.col_mut(c));
+            for i in 0..p {
+                dst[i] = s[i] * inv;
+            }
+        }
+    }
+    (assign, obj, changed)
+}
+
+/// Full dense K-means with k-means++ restarts.
+pub fn kmeans_dense(x: &Mat, k: usize, opts: KmeansOpts) -> KmeansResult {
+    let n = x.cols();
+    let mut best: Option<KmeansResult> = None;
+    for start in 0..opts.n_init.max(1) {
+        let mut rng = Pcg64::seed_stream(opts.seed, start as u64);
+        let mut centers = kmeans_pp_dense(x, k, &mut rng);
+        let mut assign: Vec<u32> = Vec::new();
+        let mut obj = f64::INFINITY;
+        let mut iterations = 0;
+        let mut converged = false;
+        for it in 0..opts.max_iters {
+            let prev = if assign.is_empty() { None } else { Some(assign.as_slice()) };
+            let (a, o, changed) = lloyd_once_dense(x, &mut centers, prev);
+            assign = a;
+            obj = o;
+            iterations = it + 1;
+            if (changed as f64) <= opts.tol_frac * n as f64 {
+                converged = true;
+                break;
+            }
+        }
+        let candidate = KmeansResult { centers, assign, objective: obj, iterations, converged };
+        if best.as_ref().map_or(true, |b| candidate.objective < b.objective) {
+            best = Some(candidate);
+        }
+    }
+    best.expect("n_init >= 1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn assign_matches_bruteforce() {
+        let mut rng = Pcg64::seed(1);
+        let x = Mat::from_fn(5, 30, |_, _| rng.normal());
+        let centers = Mat::from_fn(5, 4, |_, _| rng.normal());
+        let (assign, obj) = assign_dense(&x, &centers);
+        let mut want_obj = 0.0;
+        for j in 0..30 {
+            let mut best = (f64::INFINITY, 0u32);
+            for c in 0..4 {
+                let d: f64 = x
+                    .col(j)
+                    .iter()
+                    .zip(centers.col(c))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c as u32);
+                }
+            }
+            assert_eq!(assign[j], best.1, "col {j}");
+            want_obj += best.0;
+        }
+        assert!((obj - want_obj).abs() < 1e-8);
+    }
+
+    #[test]
+    fn lloyd_monotonically_decreases_objective() {
+        let mut rng = Pcg64::seed(3);
+        let d = gaussian_blobs(6, 200, 3, 0.4, &mut rng);
+        let mut centers = kmeans_pp_dense(&d.data, 3, &mut rng);
+        let mut last = f64::INFINITY;
+        let mut assign: Vec<u32> = Vec::new();
+        for _ in 0..10 {
+            let prev = if assign.is_empty() { None } else { Some(assign.as_slice()) };
+            let (a, obj, _) = lloyd_once_dense(&d.data, &mut centers, prev);
+            assign = a;
+            assert!(obj <= last + 1e-9, "objective increased: {obj} > {last}");
+            last = obj;
+        }
+    }
+
+    #[test]
+    fn empty_cluster_keeps_center() {
+        // two far blobs, three centers: one center will starve but must
+        // remain finite
+        let mut rng = Pcg64::seed(5);
+        let d = gaussian_blobs(4, 60, 2, 0.01, &mut rng);
+        let res = kmeans_dense(&d.data, 3, KmeansOpts { n_init: 2, ..Default::default() });
+        assert!(res.centers.as_slice().iter().all(|v| v.is_finite()));
+    }
+}

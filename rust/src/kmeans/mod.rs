@@ -1,0 +1,81 @@
+//! K-means: the standard dense algorithm, k-means++ seeding, and the
+//! paper's **sparsified K-means** (Algorithm 1) with its two-pass
+//! refinement (Algorithm 2).
+
+mod dense;
+mod plusplus;
+mod sparsified;
+mod twopass;
+
+pub use dense::{assign_dense, kmeans_dense, lloyd_once_dense};
+pub use plusplus::{kmeans_pp_dense, kmeans_pp_sparse};
+pub use sparsified::{
+    accumulate_center_update, solve_centers, NativeAssigner, SparseAssigner, SparsifiedKmeans,
+    SparsifiedModel,
+};
+pub use twopass::two_pass_refine;
+
+use crate::linalg::Mat;
+
+/// Options shared by every K-means variant.
+#[derive(Clone, Copy, Debug)]
+pub struct KmeansOpts {
+    /// Maximum Lloyd iterations per start.
+    pub max_iters: usize,
+    /// Convergence: stop when fewer than `tol_frac·n` assignments change.
+    pub tol_frac: f64,
+    /// Number of k-means++ restarts; the best objective wins (the paper
+    /// uses 20 for small tests, 10 for big-data).
+    pub n_init: usize,
+    /// Seed for seeding + restarts.
+    pub seed: u64,
+}
+
+impl Default for KmeansOpts {
+    fn default() -> Self {
+        KmeansOpts { max_iters: 100, tol_frac: 0.0, n_init: 1, seed: 0 }
+    }
+}
+
+/// Output of any K-means variant.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    /// Cluster centers in the **original** data domain (p_orig × K).
+    pub centers: Mat,
+    /// Per-sample cluster ids.
+    pub assign: Vec<u32>,
+    /// Final objective value (sum of squared distances in the domain the
+    /// algorithm optimizes — Eq. 28 for dense, Eq. 34 for sparsified).
+    pub objective: f64,
+    /// Lloyd iterations used (best restart).
+    pub iterations: usize,
+    /// Whether the best restart converged before `max_iters`.
+    pub converged: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::metrics::clustering_accuracy;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn dense_kmeans_recovers_blobs() {
+        let mut rng = Pcg64::seed(2);
+        let d = gaussian_blobs(16, 400, 3, 0.05, &mut rng);
+        let res = kmeans_dense(&d.data, 3, KmeansOpts { n_init: 4, ..Default::default() });
+        let acc = clustering_accuracy(&res.assign, &d.labels, 3);
+        assert!(acc > 0.98, "accuracy {acc}");
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn objective_never_increases_across_restarts() {
+        let mut rng = Pcg64::seed(4);
+        let d = gaussian_blobs(8, 150, 4, 0.3, &mut rng);
+        let one = kmeans_dense(&d.data, 4, KmeansOpts { n_init: 1, ..Default::default() });
+        let many = kmeans_dense(&d.data, 4, KmeansOpts { n_init: 6, ..Default::default() });
+        assert!(many.objective <= one.objective + 1e-9);
+    }
+}

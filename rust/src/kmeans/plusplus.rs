@@ -1,0 +1,199 @@
+//! k-means++ seeding (Arthur & Vassilvitskii [45]) for dense matrices and
+//! for sparsified chunks. The sparse variant runs D²-weighting directly on
+//! the masked representation — exactly what Algorithm 1 line 5 does: the
+//! seeding, like every other step, never touches the original data.
+
+use crate::linalg::Mat;
+use crate::rng::{weighted_index, Pcg64};
+use crate::sparse::SparseChunk;
+
+/// k-means++ on a dense matrix: returns p×k centers (copies of columns).
+pub fn kmeans_pp_dense(x: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
+    let n = x.cols();
+    let p = x.rows();
+    assert!(n >= 1 && k >= 1);
+    let mut centers = Mat::zeros(p, k);
+    let first = rng.next_range(n as u32) as usize;
+    centers.col_mut(0).copy_from_slice(x.col(first));
+    let mut d2 = vec![0.0f64; n];
+    for j in 0..n {
+        d2[j] = dist2(x.col(j), centers.col(0));
+    }
+    for c in 1..k {
+        let pick = weighted_index(&d2, rng);
+        centers.col_mut(c).copy_from_slice(x.col(pick));
+        if c + 1 < k {
+            for j in 0..n {
+                let d = dist2(x.col(j), centers.col(c));
+                if d < d2[j] {
+                    d2[j] = d;
+                }
+            }
+        }
+    }
+    centers
+}
+
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Masked distance of a sparse column to a dense center (Eq. 36 for one
+/// pair): `Σ_{j∈mask} (w_j − μ_j)²`. Two independent accumulators hide
+/// the gather latency of `center[j]` (§Perf log).
+#[inline]
+pub(crate) fn masked_dist2(idx: &[u32], vals: &[f64], center: &[f64]) -> f64 {
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let pairs = idx.len() / 2;
+    for t in 0..pairs {
+        let j0 = idx[2 * t] as usize;
+        let j1 = idx[2 * t + 1] as usize;
+        let d0 = vals[2 * t] - center[j0];
+        let d1 = vals[2 * t + 1] - center[j1];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+    }
+    if idx.len() % 2 == 1 {
+        let last = idx.len() - 1;
+        let d = vals[last] - center[idx[last] as usize];
+        s0 += d * d;
+    }
+    s0 + s1
+}
+
+/// k-means++ on sparsified chunks: D²-weighted seeding with masked
+/// distances, candidate centers are densified sparse columns *as-is*
+/// (no `p/m` rescale). Rescaling the seeds plants large spikes at the
+/// seed's kept coordinates; any sample whose mask covers a spike then
+/// avoids that cluster forever, so the spike is never averaged away — a
+/// self-reinforcing degenerate fixed point of the masked Lloyd update.
+/// Unscaled seeds stay within the data's magnitude range and are washed
+/// out after one update, matching the paper's "run k-means++ on the
+/// sparse matrix" (Algorithm 1 line 5).
+pub fn kmeans_pp_sparse(chunks: &[SparseChunk], k: usize, rng: &mut Pcg64) -> Mat {
+    assert!(!chunks.is_empty());
+    let p = chunks[0].p();
+    let n: usize = chunks.iter().map(|c| c.n()).sum();
+    assert!(n >= 1 && k >= 1);
+    let col_of = |global: usize| -> (&SparseChunk, usize) {
+        let mut g = global;
+        for ch in chunks {
+            if g < ch.n() {
+                return (ch, g);
+            }
+            g -= ch.n();
+        }
+        unreachable!()
+    };
+    let densify = |global: usize, out: &mut [f64]| {
+        out.fill(0.0);
+        let (ch, i) = col_of(global);
+        for (&j, &v) in ch.col_indices(i).iter().zip(ch.col_values(i)) {
+            out[j as usize] = v;
+        }
+    };
+    let mut centers = Mat::zeros(p, k);
+    let first = rng.next_range(n as u32) as usize;
+    densify(first, centers.col_mut(0));
+    let mut d2 = vec![0.0f64; n];
+    let mut g = 0usize;
+    for ch in chunks {
+        for i in 0..ch.n() {
+            d2[g] = masked_dist2(ch.col_indices(i), ch.col_values(i), centers.col(0));
+            g += 1;
+        }
+    }
+    for c in 1..k {
+        let pick = weighted_index(&d2, rng);
+        densify(pick, centers.col_mut(c));
+        if c + 1 < k {
+            let mut g = 0usize;
+            for ch in chunks {
+                for i in 0..ch.n() {
+                    let d = masked_dist2(ch.col_indices(i), ch.col_values(i), centers.col(c));
+                    if d < d2[g] {
+                        d2[g] = d;
+                    }
+                    g += 1;
+                }
+            }
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::transform::TransformKind;
+
+    #[test]
+    fn dense_seeds_are_data_columns() {
+        let mut rng = Pcg64::seed(1);
+        let d = gaussian_blobs(8, 100, 3, 0.1, &mut rng);
+        let centers = kmeans_pp_dense(&d.data, 3, &mut rng);
+        for c in 0..3 {
+            let found = (0..100).any(|j| dist2(centers.col(c), d.data.col(j)) < 1e-20);
+            assert!(found, "center {c} is not a data column");
+        }
+    }
+
+    #[test]
+    fn dense_seeds_spread_across_clusters() {
+        let mut rng = Pcg64::seed(7);
+        let d = gaussian_blobs(8, 300, 3, 0.02, &mut rng);
+        // count how often all 3 seeds land in distinct true clusters
+        let mut hits = 0;
+        for s in 0..20u64 {
+            let mut r = Pcg64::seed(s);
+            let centers = kmeans_pp_dense(&d.data, 3, &mut r);
+            let mut seen = [false; 3];
+            for c in 0..3 {
+                // nearest true center
+                let mut best = (f64::INFINITY, 0usize);
+                for t in 0..3 {
+                    let dd = dist2(centers.col(c), d.centers.col(t));
+                    if dd < best.0 {
+                        best = (dd, t);
+                    }
+                }
+                seen[best.1] = true;
+            }
+            if seen.iter().all(|&s| s) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 16, "++ seeding should usually hit all clusters: {hits}/20");
+    }
+
+    #[test]
+    fn sparse_seeding_shapes_and_rescale() {
+        let mut rng = Pcg64::seed(3);
+        let d = gaussian_blobs(32, 200, 4, 0.1, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 5 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let c0 = sp.compress_chunk(&d.data.col_range(0, 120), 0).unwrap();
+        let c1 = sp.compress_chunk(&d.data.col_range(120, 200), 120).unwrap();
+        let centers = kmeans_pp_sparse(&[c0.clone(), c1], 4, &mut rng);
+        assert_eq!(centers.rows(), 32);
+        assert_eq!(centers.cols(), 4);
+        // each center has at most m nonzeros and unscaled data values
+        let m = sp.m();
+        for c in 0..4 {
+            let nnz = centers.col(c).iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz <= m, "nnz {nnz} > m {m}");
+        }
+    }
+
+    #[test]
+    fn masked_dist_ignores_unsampled_coords() {
+        let idx = [1u32, 3];
+        let vals = [2.0, -1.0];
+        let center = [100.0, 2.0, 100.0, -1.0, 100.0];
+        assert_eq!(masked_dist2(&idx, &vals, &center), 0.0);
+    }
+}

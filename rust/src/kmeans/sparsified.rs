@@ -1,0 +1,314 @@
+//! Sparsified K-means — paper Algorithm 1.
+//!
+//! Operates entirely on [`SparseChunk`]s (preconditioned + sampled data):
+//! k-means++ seeding on the sparse matrix, masked-distance assignments
+//! (Eq. 36), entry-wise masked center averaging (Eq. 39), and a final
+//! unmix `μ = (HD)ᵀ μ'` (Eq. 32). One pass over the data produces both
+//! assignments *and* original-domain centers — the paper's headline
+//! property.
+
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sparse::SparseChunk;
+
+use super::plusplus::{kmeans_pp_sparse, masked_dist2};
+use super::{KmeansOpts, KmeansResult};
+
+/// Strategy for the per-chunk assignment step — the pipeline hot spot.
+/// Implemented natively ([`sparsified`](self)) and by the PJRT runtime
+/// (`runtime::XlaEngine`) executing the AOT Pallas `assign` graph.
+pub trait SparseAssigner {
+    /// Assign each column of `chunk` to its nearest center (centers live
+    /// in the preconditioned domain, `p × K`). Returns per-column cluster
+    /// ids and the summed min masked distance (the Eq. 34 objective).
+    fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)>;
+
+    /// Human-readable engine name (for experiment tables).
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Pure-Rust masked-distance assigner. Uses the same algebraic expansion
+/// as the Pallas kernel — `‖w‖² − 2⟨w,μ⟩ + Σ_mask μ²` — but traverses the
+/// m kept indices per sample instead of masking dense panels (optimal on
+/// CPU where gathers are cheap and FLOPs are not).
+pub struct NativeAssigner;
+
+impl SparseAssigner for NativeAssigner {
+    fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
+        // Perf note (§Perf log): a K-simultaneous accumulator over a
+        // transposed center panel was tried and measured 2x SLOWER than
+        // this center-major form — the single-accumulator inner loop
+        // vectorizes, the K-wide one does not. Keep center-major.
+        let k = centers.cols();
+        let mut assign = vec![0u32; chunk.n()];
+        let mut obj = 0.0;
+        for i in 0..chunk.n() {
+            let idx = chunk.col_indices(i);
+            let vals = chunk.col_values(i);
+            let mut best = f64::INFINITY;
+            let mut arg = 0u32;
+            for c in 0..k {
+                let d = masked_dist2(idx, vals, centers.col(c));
+                if d < best {
+                    best = d;
+                    arg = c as u32;
+                }
+            }
+            assign[i] = arg;
+            obj += best;
+        }
+        Ok((assign, obj))
+    }
+}
+
+/// Accumulate one chunk's contribution to the masked center update
+/// (Eq. 39): `sums[j,k] += w_ij`, `counts[j,k] += 1` over kept entries of
+/// samples assigned to `k`.
+pub fn accumulate_center_update(
+    chunk: &SparseChunk,
+    assign: &[u32],
+    sums: &mut Mat,
+    counts: &mut Mat,
+) {
+    debug_assert_eq!(assign.len(), chunk.n());
+    for i in 0..chunk.n() {
+        let c = assign[i] as usize;
+        let scol = sums.col_mut(c);
+        for (&j, &v) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
+            scol[j as usize] += v;
+        }
+        let ccol = counts.col_mut(c);
+        for &j in chunk.col_indices(i) {
+            ccol[j as usize] += 1.0;
+        }
+    }
+}
+
+/// Solve the diagonal system of Eq. (39)/(40): `μ'_jk = sums/counts` where
+/// observed; coordinates never sampled within a cluster keep `prev`'s
+/// entry (the paper removes them from the system — equivalent to not
+/// moving that coordinate).
+pub fn solve_centers(sums: &Mat, counts: &Mat, prev: &Mat) -> Mat {
+    let (p, k) = (sums.rows(), sums.cols());
+    let mut out = Mat::zeros(p, k);
+    for c in 0..k {
+        let (s, cnt, pv, dst) = (sums.col(c), counts.col(c), prev.col(c), out.col_mut(c));
+        for j in 0..p {
+            dst[j] = if cnt[j] > 0.0 { s[j] / cnt[j] } else { pv[j] };
+        }
+    }
+    out
+}
+
+/// The fitted sparsified model: result plus the preconditioned-domain
+/// centers (useful for resuming / streaming assignment of new data).
+pub struct SparsifiedModel {
+    pub result: KmeansResult,
+    /// Centers in the preconditioned (padded) domain, p_work × K.
+    pub centers_precond: Mat,
+}
+
+/// Sparsified K-means (Algorithm 1).
+pub struct SparsifiedKmeans {
+    pub sparsify: SparsifyConfig,
+    pub k: usize,
+    pub opts: KmeansOpts,
+}
+
+impl SparsifiedKmeans {
+    pub fn new(sparsify: SparsifyConfig, k: usize, opts: KmeansOpts) -> Self {
+        SparsifiedKmeans { sparsify, k, opts }
+    }
+
+    /// Convenience: compress a dense matrix (single chunk) and fit.
+    pub fn fit_dense(&self, x: &Mat) -> Result<KmeansResult> {
+        let sp = Sparsifier::new(x.rows(), self.sparsify)?;
+        let chunk = sp.compress_chunk(x, 0)?;
+        Ok(self.fit_chunks(&sp, &[chunk], &NativeAssigner)?.result)
+    }
+
+    /// Fit on already-compressed chunks (the streaming path). `chunks`
+    /// must be ordered by `start_col` and contiguous.
+    pub fn fit_chunks(
+        &self,
+        sp: &Sparsifier,
+        chunks: &[SparseChunk],
+        assigner: &dyn SparseAssigner,
+    ) -> Result<SparsifiedModel> {
+        self.fit_chunks_raw(sp, chunks, assigner, true)
+    }
+
+    /// As [`fit_chunks`](Self::fit_chunks) but with explicit control over
+    /// the final center unmixing: pass `unmix = false` when the chunks
+    /// were produced *without* preconditioning
+    /// ([`Sparsifier::compress_chunk_no_precondition`]) — centers are then
+    /// plain masked means and only padding is dropped.
+    pub fn fit_chunks_raw(
+        &self,
+        sp: &Sparsifier,
+        chunks: &[SparseChunk],
+        assigner: &dyn SparseAssigner,
+        unmix: bool,
+    ) -> Result<SparsifiedModel> {
+        assert!(!chunks.is_empty(), "fit_chunks: no data");
+        let p = sp.p();
+        let n: usize = chunks.iter().map(|c| c.n()).sum();
+        let mut best: Option<SparsifiedModel> = None;
+        for start in 0..self.opts.n_init.max(1) {
+            let mut rng = Pcg64::seed_stream(self.opts.seed, 0xC0DE ^ start as u64);
+            let mut centers = kmeans_pp_sparse(chunks, self.k, &mut rng);
+            let mut assign = vec![0u32; n];
+            let mut have_assign = false;
+            let mut obj = f64::INFINITY;
+            let mut iterations = 0;
+            let mut converged = false;
+            for it in 0..self.opts.max_iters {
+                // Step 1 (Eq. 36): assignments
+                let mut changed = 0usize;
+                let mut new_obj = 0.0;
+                let mut sums = Mat::zeros(p, self.k);
+                let mut counts = Mat::zeros(p, self.k);
+                let mut off = 0usize;
+                for chunk in chunks {
+                    let (a, o) = assigner.assign(chunk, &centers)?;
+                    new_obj += o;
+                    for (i, &c) in a.iter().enumerate() {
+                        if !have_assign || assign[off + i] != c {
+                            changed += 1;
+                        }
+                        assign[off + i] = c;
+                    }
+                    // Step 2 (Eq. 39): accumulate masked sums/counts
+                    accumulate_center_update(chunk, &a, &mut sums, &mut counts);
+                    off += chunk.n();
+                }
+                have_assign = true;
+                obj = new_obj;
+                centers = solve_centers(&sums, &counts, &centers);
+                iterations = it + 1;
+                if (changed as f64) <= self.opts.tol_frac * n as f64 {
+                    converged = true;
+                    break;
+                }
+            }
+            // Eq. 32: unmix to the original domain (or just drop padding
+            // for the no-preconditioning ablation)
+            let centers_orig =
+                if unmix { sp.unmix(&centers) } else { sp.truncate(&centers) };
+            let candidate = SparsifiedModel {
+                result: KmeansResult {
+                    centers: centers_orig,
+                    assign: assign.clone(),
+                    objective: obj,
+                    iterations,
+                    converged,
+                },
+                centers_precond: centers,
+            };
+            if best.as_ref().map_or(true, |b| candidate.result.objective < b.result.objective) {
+                best = Some(candidate);
+            }
+        }
+        Ok(best.expect("n_init >= 1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::metrics::clustering_accuracy;
+    use crate::transform::TransformKind;
+
+    fn fit(gamma: f64, seed: u64, n: usize) -> (KmeansResult, Vec<u32>) {
+        let mut rng = Pcg64::seed(seed);
+        let d = gaussian_blobs(64, n, 3, 0.05, &mut rng);
+        let cfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
+        let sk = SparsifiedKmeans::new(cfg, 3, KmeansOpts { n_init: 8, ..Default::default() });
+        (sk.fit_dense(&d.data).unwrap(), d.labels)
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs_at_low_gamma() {
+        let (res, labels) = fit(0.15, 11, 600);
+        let acc = clustering_accuracy(&res.assign, &labels, 3);
+        assert!(acc > 0.9, "accuracy {acc}");
+        assert_eq!(res.centers.rows(), 64);
+    }
+
+    #[test]
+    fn centers_close_to_true_means_one_pass() {
+        // the consistency property (Thm 8 / §VII.B): 1-pass centers land
+        // near the true cluster means in the ORIGINAL domain
+        let mut rng = Pcg64::seed(21);
+        let d = gaussian_blobs(64, 3000, 3, 0.05, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 4 };
+        let sk = SparsifiedKmeans::new(cfg, 3, KmeansOpts { n_init: 3, ..Default::default() });
+        let res = sk.fit_dense(&d.data).unwrap();
+        // match each estimated center to nearest true center
+        let mut worst = 0.0f64;
+        for c in 0..3 {
+            let mut best = f64::INFINITY;
+            for t in 0..3 {
+                let dd: f64 = res
+                    .centers
+                    .col(c)
+                    .iter()
+                    .zip(d.centers.col(t))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                best = best.min(dd.sqrt());
+            }
+            worst = worst.max(best);
+        }
+        let scale = d.centers.max_col_norm();
+        assert!(worst / scale < 0.2, "center error {worst} vs scale {scale}");
+    }
+
+    #[test]
+    fn chunked_equals_monolithic() {
+        let mut rng = Pcg64::seed(31);
+        let d = gaussian_blobs(32, 400, 3, 0.1, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 6 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let opts = KmeansOpts { n_init: 2, ..Default::default() };
+        let sk = SparsifiedKmeans::new(cfg, 3, opts);
+
+        let whole = sp.compress_chunk(&d.data, 0).unwrap();
+        let mono = sk.fit_chunks(&sp, &[whole], &NativeAssigner).unwrap();
+
+        let c0 = sp.compress_chunk(&d.data.col_range(0, 150), 0).unwrap();
+        let c1 = sp.compress_chunk(&d.data.col_range(150, 400), 150).unwrap();
+        let split = sk.fit_chunks(&sp, &[c0, c1], &NativeAssigner).unwrap();
+
+        assert_eq!(mono.result.assign, split.result.assign);
+        assert!((mono.result.objective - split.result.objective).abs() < 1e-9);
+        assert!(
+            mono.result.centers.sub(&split.result.centers).max_abs() < 1e-9,
+            "centers differ"
+        );
+    }
+
+    #[test]
+    fn solve_centers_keeps_prev_on_unseen() {
+        let sums = Mat::from_vec(2, 1, vec![4.0, 0.0]).unwrap();
+        let counts = Mat::from_vec(2, 1, vec![2.0, 0.0]).unwrap();
+        let prev = Mat::from_vec(2, 1, vec![9.0, 7.5]).unwrap();
+        let out = solve_centers(&sums, &counts, &prev);
+        assert_eq!(out.get(0, 0), 2.0);
+        assert_eq!(out.get(1, 0), 7.5);
+    }
+
+    #[test]
+    fn higher_gamma_does_not_hurt_much() {
+        let (lo, labels_lo) = fit(0.05, 51, 900);
+        let (hi, labels_hi) = fit(0.5, 51, 900);
+        let acc_lo = clustering_accuracy(&lo.assign, &labels_lo, 3);
+        let acc_hi = clustering_accuracy(&hi.assign, &labels_hi, 3);
+        assert!(acc_hi >= acc_lo - 0.05, "γ=0.5 acc {acc_hi} vs γ=0.05 acc {acc_lo}");
+    }
+}

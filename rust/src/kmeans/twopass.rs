@@ -1,0 +1,100 @@
+//! Two-pass sparsified K-means — paper Algorithm 2.
+//!
+//! Pass 1 is Algorithm 1 (assignments + centers from the sparse stream).
+//! Pass 2 revisits the *original* data once: centers are re-computed as
+//! exact class means of assigned samples, and samples are re-assigned to
+//! the pass-1 center estimates in the original domain. The same
+//! extra-pass applies to the feature-extraction/selection baselines
+//! (whose 1-pass centers live in a compressed domain and are unusable).
+
+use crate::linalg::Mat;
+
+use super::dense::assign_dense;
+use super::KmeansResult;
+
+/// Algorithm 2 lines 3–10 given in-memory original data.
+/// `one_pass` is the Algorithm 1 output (original-domain centers).
+pub fn two_pass_refine(x: &Mat, one_pass: &KmeansResult) -> KmeansResult {
+    let k = one_pass.centers.cols();
+    let p = x.rows();
+    let n = x.cols();
+    assert_eq!(one_pass.assign.len(), n);
+    // centers: exact means of pass-1 assignment groups, in original domain
+    let mut sums = Mat::zeros(p, k);
+    let mut counts = vec![0usize; k];
+    for (j, &c) in one_pass.assign.iter().enumerate() {
+        counts[c as usize] += 1;
+        let col = x.col(j);
+        let s = sums.col_mut(c as usize);
+        for i in 0..p {
+            s[i] += col[i];
+        }
+    }
+    let mut centers = one_pass.centers.clone();
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f64;
+            let (s, dst) = (sums.col(c), centers.col_mut(c));
+            for i in 0..p {
+                dst[i] = s[i] * inv;
+            }
+        }
+    }
+    // assignments: nearest pass-1 center estimate in the original domain
+    let (assign, objective) = assign_dense(x, &one_pass.centers);
+    KmeansResult {
+        centers,
+        assign,
+        objective,
+        iterations: one_pass.iterations,
+        converged: one_pass.converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::kmeans::{KmeansOpts, SparsifiedKmeans};
+    use crate::metrics::clustering_accuracy;
+    use crate::rng::Pcg64;
+    use crate::sampling::SparsifyConfig;
+    use crate::transform::TransformKind;
+
+    #[test]
+    fn two_pass_at_least_as_accurate() {
+        let mut rng = Pcg64::seed(8);
+        let d = gaussian_blobs(64, 1200, 3, 0.25, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.12, transform: TransformKind::Hadamard, seed: 2 };
+        let sk = SparsifiedKmeans::new(cfg, 3, KmeansOpts { n_init: 6, ..Default::default() });
+        let one = sk.fit_dense(&d.data).unwrap();
+        let two = two_pass_refine(&d.data, &one);
+        let a1 = clustering_accuracy(&one.assign, &d.labels, 3);
+        let a2 = clustering_accuracy(&two.assign, &d.labels, 3);
+        assert!(a2 >= a1 - 0.02, "two-pass {a2} vs one-pass {a1}");
+        assert_eq!(two.centers.rows(), 64);
+    }
+
+    #[test]
+    fn two_pass_centers_are_exact_class_means() {
+        let mut rng = Pcg64::seed(10);
+        let d = gaussian_blobs(16, 200, 2, 0.1, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 3 };
+        let sk = SparsifiedKmeans::new(cfg, 2, KmeansOpts::default());
+        let one = sk.fit_dense(&d.data).unwrap();
+        let two = two_pass_refine(&d.data, &one);
+        // recompute means directly from pass-1 assignment
+        for c in 0..2 {
+            let members: Vec<usize> =
+                (0..200).filter(|&j| one.assign[j] == c as u32).collect();
+            if members.is_empty() {
+                continue;
+            }
+            for i in 0..16 {
+                let want: f64 =
+                    members.iter().map(|&j| d.data.get(i, j)).sum::<f64>() / members.len() as f64;
+                assert!((two.centers.get(i, c) - want).abs() < 1e-12);
+            }
+        }
+    }
+}

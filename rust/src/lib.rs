@@ -1,0 +1,71 @@
+//! # pds — Preconditioned Data Sparsification for Big Data
+//!
+//! A streaming data-sparsification pipeline reproducing Pourkamali-Anaraki &
+//! Becker, *"Preconditioned Data Sparsification for Big Data with
+//! Applications to PCA and K-means"* (IEEE TIT 2017).
+//!
+//! The compression scheme is two steps fused into a single pass over the
+//! data (samples are columns of `X ∈ R^{p×n}`):
+//!
+//! 1. **Precondition** each sample with a randomized orthonormal system
+//!    (ROS): `y_i = H D x_i` where `H` is a Hadamard/DCT transform and `D`
+//!    a random ±1 diagonal (paper Eq. 1). This smooths large entries so
+//!    uniform sampling becomes near-optimal (Theorem 1 / Corollary 2).
+//! 2. **Sparsify**: keep exactly `m` of `p` entries of each `y_i`
+//!    uniformly at random without replacement (an independent sampling
+//!    matrix `R_i` per sample — the property that makes one-pass center
+//!    and covariance estimation *consistent*).
+//!
+//! Downstream consumers implemented here, matching the paper's evaluation:
+//!
+//! * [`estimators`] — unbiased sample-mean (Thm 4) and covariance (Thm 6)
+//!   estimators with their concentration bounds, plus the `H_k`
+//!   conditioning result (Thm 7).
+//! * [`pca`] — principal components / explained variance from the
+//!   estimated covariance.
+//! * [`kmeans`] — standard K-means, k-means++ seeding, and **sparsified
+//!   K-means** (Algorithm 1) with its two-pass refinement (Algorithm 2).
+//! * [`baselines`] — feature extraction / feature selection
+//!   (Boutsidis et al.) and uniform column sampling, for the paper's
+//!   comparisons.
+//! * [`coordinator`] — the L3 streaming orchestrator: chunked (optionally
+//!   out-of-core) ingestion, sparsifier worker pool with bounded-channel
+//!   backpressure, estimator accumulators and K-means drivers.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas graphs
+//!   (`artifacts/*.hlo.txt` built by `make artifacts`); the
+//!   [`runtime::NativeEngine`] implements the same chunk ops in pure Rust
+//!   and is the default engine.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod estimators;
+pub mod experiments;
+pub mod kmeans;
+pub mod linalg;
+pub mod metrics;
+pub mod pca;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod sparse;
+pub mod testing;
+pub mod transform;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports of the types most programs touch.
+pub mod prelude {
+    pub use crate::coordinator::{ChunkSource, DenseChunk, StreamConfig};
+    pub use crate::error::{Error, Result};
+    pub use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
+    pub use crate::kmeans::{KmeansOpts, KmeansResult, SparsifiedKmeans};
+    pub use crate::linalg::Mat;
+    pub use crate::rng::Pcg64;
+    pub use crate::sampling::{Sparsifier, SparsifyConfig};
+    pub use crate::sparse::SparseChunk;
+    pub use crate::transform::{Ros, TransformKind};
+}

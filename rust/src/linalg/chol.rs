@@ -1,0 +1,94 @@
+//! Cholesky factorization and SPD solves (used for the Toeplitz covariance
+//! of the Fig. 1 multivariate-t generator and the `Ω⁺` lift of the
+//! feature-extraction baseline).
+
+use super::Mat;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ` (A symmetric
+/// positive-definite).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    if n != a.cols() {
+        return Err(Error::Shape("cholesky: square input required".into()));
+    }
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut d = a.get(j, j);
+        for k in 0..j {
+            let v = l.get(j, k);
+            d -= v * v;
+        }
+        if d <= 0.0 {
+            return Err(Error::Numerical(format!("cholesky: not SPD at pivot {j} (d={d})")));
+        }
+        let dj = d.sqrt();
+        l.set(j, j, dj);
+        for i in (j + 1)..n {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            l.set(i, j, s / dj);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A x = b` for SPD `A` given its Cholesky factor `L`.
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            let lik = l.get(i, k);
+            y[i] -= lik * y[k];
+        }
+        y[i] /= l.get(i, i);
+    }
+    // backward: Lᵀ x = y
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            let lki = l.get(k, i);
+            y[i] -= lki * y[k];
+        }
+        y[i] /= l.get(i, i);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn factor_and_solve() {
+        let mut rng = Pcg64::seed(31);
+        let b = Mat::from_fn(6, 6, |_, _| rng.normal());
+        let a = b.syrk().scaled(1.0).clone();
+        let mut a = a;
+        for i in 0..6 {
+            a.add_at(i, i, 6.0); // well-conditioned SPD
+        }
+        let l = cholesky(&a).unwrap();
+        // L Lᵀ = A
+        let llt = l.matmul(&l.transpose());
+        assert!((llt.sub(&a)).max_abs() < 1e-10);
+        let rhs: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let x = cholesky_solve(&l, &rhs);
+        let ax = a.matvec(&x);
+        for (got, want) in ax.iter().zip(&rhs) {
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(cholesky(&a).is_err());
+    }
+}

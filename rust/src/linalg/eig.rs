@@ -1,0 +1,133 @@
+//! Symmetric eigensolvers: cyclic Jacobi for small dense matrices, power
+//! iteration for spectral norms of (possibly indefinite) symmetric error
+//! matrices, and randomized subspace iteration for the top-k spectrum of
+//! large PSD covariance estimates.
+
+use super::{orthonormalize, Mat};
+use crate::rng::Pcg64;
+
+/// Full eigendecomposition of a symmetric matrix by cyclic Jacobi.
+/// Returns `(eigenvalues desc, eigenvectors as columns)`. Intended for
+/// small matrices (k×k projections, k ≲ 64); O(n³) per sweep.
+pub fn jacobi_eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "jacobi_eigh: square input required");
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|&(l, _)| l).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (newk, &(_, oldk)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vecs.set(i, newk, v.get(i, oldk));
+        }
+    }
+    (vals, vecs)
+}
+
+/// Spectral norm (largest |eigenvalue|) of a symmetric matrix via power
+/// iteration. Used for the error norms `‖Ĉ_n − C_emp‖₂` of Theorems 6/7 —
+/// the matrices are symmetric but indefinite, and power iteration on `A`
+/// converges to the dominant |λ| directly.
+pub fn spectral_norm_sym(a: &Mat, tol: f64, max_iter: usize) -> f64 {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    if n == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::seed(0x51EC ^ n as u64);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut lam_prev = 0.0f64;
+    for _ in 0..max_iter {
+        let mut w = a.matvec(&v);
+        let nrm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        for x in &mut w {
+            *x /= nrm;
+        }
+        // Rayleigh quotient
+        let av = a.matvec(&w);
+        let lam: f64 = w.iter().zip(&av).map(|(a, b)| a * b).sum();
+        v = w;
+        if (lam.abs() - lam_prev.abs()).abs() <= tol * lam.abs().max(1e-30) {
+            return lam.abs();
+        }
+        lam_prev = lam;
+    }
+    lam_prev.abs()
+}
+
+/// Top-k eigenpairs of a symmetric PSD matrix via randomized subspace
+/// iteration (Halko et al.): `Q ← orth(A Q)` repeated, then a k×k Jacobi
+/// solve of `Qᵀ A Q`. Returns `(values desc, vectors p×k)`.
+pub fn sym_eig_topk(a: &Mat, k: usize, iters: usize, seed: u64) -> (Vec<f64>, Mat) {
+    let p = a.rows();
+    assert_eq!(p, a.cols());
+    let k = k.min(p);
+    let over = (k + 4).min(p); // small oversampling
+    let mut rng = Pcg64::seed(seed);
+    let g = Mat::from_fn(p, over, |_, _| rng.normal());
+    let mut q = orthonormalize(&a.matmul(&g));
+    for _ in 0..iters {
+        q = orthonormalize(&a.matmul(&q));
+    }
+    let small = q.matmul_transa(&a.matmul(&q)); // over×over symmetric
+    let (vals, vecs) = jacobi_eigh(&small);
+    let full = q.matmul(&vecs); // p×over
+    let mut out = Mat::zeros(p, k);
+    for j in 0..k {
+        for i in 0..p {
+            out.set(i, j, full.get(i, j));
+        }
+    }
+    (vals[..k].to_vec(), out)
+}

@@ -1,0 +1,383 @@
+//! Column-major dense `f64` matrix.
+
+use crate::error::{shape_err, Result};
+
+/// Column-major dense matrix. Column `j` is the contiguous slice
+/// `data[j*rows .. (j+1)*rows]` — samples-as-columns is the layout of every
+/// pipeline stage, so per-sample operations are contiguous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// Build from a generator `f(row, col)`. Evaluated column-major, so a
+    /// stateful closure (e.g. an RNG) fills columns contiguously.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return shape_err(format!("from_vec: {} != {rows}x{cols}", data.len()));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] += v;
+    }
+
+    /// Contiguous column slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable contiguous column slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// The full column-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy columns `[start, end)` into a new matrix.
+    pub fn col_range(&self, start: usize, end: usize) -> Mat {
+        assert!(start <= end && end <= self.cols);
+        Mat {
+            rows: self.rows,
+            cols: end - start,
+            data: self.data[start * self.rows..end * self.rows].to_vec(),
+        }
+    }
+
+    /// Transpose (materialized).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            let c = self.col(j);
+            for i in 0..self.rows {
+                t.data[i * self.cols + j] = c[i];
+            }
+        }
+        t
+    }
+
+    /// `C = self * b` — axpy-ordered (j,k) loop: both `self`'s and `C`'s
+    /// columns stream contiguously.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul inner dims");
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for j in 0..b.cols {
+            let bcol = b.col(j);
+            let ccol = &mut c.data[j * self.rows..(j + 1) * self.rows];
+            for (k, &bkj) in bcol.iter().enumerate() {
+                if bkj == 0.0 {
+                    continue;
+                }
+                let acol = &self.data[k * self.rows..(k + 1) * self.rows];
+                for i in 0..self.rows {
+                    ccol[i] += acol[i] * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// `C = self^T * b` — dot-product formulation over contiguous columns.
+    pub fn matmul_transa(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "matmul_transa inner dims");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        for j in 0..b.cols {
+            let bcol = b.col(j);
+            for i in 0..self.cols {
+                let acol = self.col(i);
+                let mut s = 0.0;
+                for k in 0..self.rows {
+                    s += acol[k] * bcol[k];
+                }
+                c.data[j * self.cols + i] = s;
+            }
+        }
+        c
+    }
+
+    /// Gram matrix `self * self^T` (p×p), exploiting symmetry.
+    pub fn syrk(&self) -> Mat {
+        let p = self.rows;
+        let mut g = Mat::zeros(p, p);
+        for jcol in 0..self.cols {
+            let c = self.col(jcol);
+            for j in 0..p {
+                let cj = c[j];
+                if cj == 0.0 {
+                    continue;
+                }
+                let gcol = &mut g.data[j * p..(j + 1) * p];
+                for i in j..p {
+                    gcol[i] += c[i] * cj;
+                }
+            }
+        }
+        // mirror lower triangle into upper
+        for j in 0..p {
+            for i in (j + 1)..p {
+                let v = g.data[j * p + i];
+                g.data[i * p + j] = v;
+            }
+        }
+        g
+    }
+
+    /// Matrix–vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for (k, &xk) in x.iter().enumerate() {
+            if xk == 0.0 {
+                continue;
+            }
+            let col = self.col(k);
+            for i in 0..self.rows {
+                y[i] += col[i] * xk;
+            }
+        }
+        y
+    }
+
+    /// `self^T * x`.
+    pub fn matvec_transa(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        (0..self.cols)
+            .map(|j| self.col(j).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Returns `alpha * self`.
+    pub fn scaled(&self, alpha: f64) -> Mat {
+        let mut m = self.clone();
+        for v in &mut m.data {
+            *v *= alpha;
+        }
+        m
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Zero out all off-diagonal entries (the paper's `diag(·)` operator).
+    pub fn diag_part(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut d = Mat::zeros(self.rows, self.rows);
+        for i in 0..self.rows {
+            d.set(i, i, self.get(i, i));
+        }
+        d
+    }
+
+    /// The diagonal as a vector.
+    pub fn diagonal(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// `‖X‖_max`: maximum absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    /// `‖X‖_max-col = ‖X‖_{1→2}`: maximum column l2 norm.
+    pub fn max_col_norm(&self) -> f64 {
+        (0..self.cols)
+            .map(|j| self.col(j).iter().map(|v| v * v).sum::<f64>().sqrt())
+            .fold(0.0f64, f64::max)
+    }
+
+    /// `‖X‖_max-row = ‖X‖_{2→∞}`: maximum row l2 norm.
+    pub fn max_row_norm(&self) -> f64 {
+        let mut acc = vec![0.0f64; self.rows];
+        for j in 0..self.cols {
+            let c = self.col(j);
+            for i in 0..self.rows {
+                acc[i] += c[i] * c[i];
+            }
+        }
+        acc.iter().fold(0.0f64, |m, &v| m.max(v)).sqrt()
+    }
+
+    /// Column means: `x̄ = (1/n) Σ x_i`.
+    pub fn col_mean(&self) -> Vec<f64> {
+        let mut mean = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let c = self.col(j);
+            for i in 0..self.rows {
+                mean[i] += c[i];
+            }
+        }
+        let inv = 1.0 / self.cols as f64;
+        for v in &mut mean {
+            *v *= inv;
+        }
+        mean
+    }
+
+    /// Normalize every column to unit l2 norm (zero columns left as-is).
+    pub fn normalize_columns(&mut self) {
+        for j in 0..self.cols {
+            let c = self.col_mut(j);
+            let nrm = c.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if nrm > 0.0 {
+                for v in c.iter_mut() {
+                    *v /= nrm;
+                }
+            }
+        }
+    }
+
+    /// Convert to an `f32` column-major buffer (runtime interop).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Build from an `f32` column-major buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        if data.len() != rows * cols {
+            return shape_err(format!("from_f32: {} != {rows}x{cols}", data.len()));
+        }
+        Ok(Mat { rows, cols, data: data.iter().map(|&v| v as f64).collect() })
+    }
+}
+
+/// Euclidean distance squared between two equal-length slices.
+#[inline]
+#[allow(dead_code)]
+pub(crate) fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_major_layout() {
+        let m = Mat::from_fn(2, 3, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.as_slice(), &[0.0, 10.0, 1.0, 11.0, 2.0, 12.0]);
+        assert_eq!(m.col(1), &[1.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(4, 6, |i, j| (i * 7 + j * 3) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn diag_part_and_sub() {
+        let m = Mat::from_fn(3, 3, |i, j| (i + j) as f64 + 1.0);
+        let d = m.diag_part();
+        assert_eq!(d.get(1, 1), 3.0);
+        assert_eq!(d.get(0, 1), 0.0);
+        let z = m.sub(&m);
+        assert_eq!(z.frob_norm(), 0.0);
+    }
+
+    #[test]
+    fn col_mean_and_normalize() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 0.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.col_mean(), vec![2.0, 2.0]);
+        m.normalize_columns();
+        assert!((m.col(1).iter().map(|v| v * v).sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Mat::from_vec(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Mat::from_fn(3, 2, |i, j| i as f64 - j as f64 * 0.5);
+        let back = Mat::from_f32(3, 2, &m.to_f32()).unwrap();
+        assert!((back.sub(&m)).max_abs() < 1e-6);
+    }
+}

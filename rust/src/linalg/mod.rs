@@ -1,0 +1,200 @@
+//! Dense linear algebra substrate (no external BLAS in this offline build).
+//!
+//! [`Mat`] is a column-major `f64` matrix — samples are columns throughout
+//! the crate, matching the paper's `X ∈ R^{p×n}` convention. The hot
+//! kernels (`matmul`, `syrk`) use an axpy-ordered loop that streams
+//! contiguous columns; QR / symmetric-eig / randomized-SVD live in
+//! submodules.
+
+mod chol;
+mod eig;
+mod mat;
+mod qr;
+mod svd;
+
+pub use chol::{cholesky, cholesky_solve};
+pub use eig::{jacobi_eigh, spectral_norm_sym, sym_eig_topk};
+pub use mat::Mat;
+pub use qr::{orthonormalize, qr_thin};
+pub use svd::{leverage_scores, randomized_svd, Svd};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_against_naive() {
+        let a = randmat(7, 5, 1);
+        let b = randmat(5, 9, 2);
+        let c = a.matmul(&b);
+        for i in 0..7 {
+            for j in 0..9 {
+                let mut s = 0.0;
+                for k in 0..5 {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                assert!((c.get(i, j) - s).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transa_against_naive() {
+        let a = randmat(6, 4, 3);
+        let b = randmat(6, 3, 4);
+        let c = a.matmul_transa(&b); // A^T B: (4,3)
+        for i in 0..4 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..6 {
+                    s += a.get(k, i) * b.get(k, j);
+                }
+                assert!((c.get(i, j) - s).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_matches_matmul() {
+        let a = randmat(8, 5, 5);
+        let g = a.syrk(); // A A^T
+        let g2 = a.matmul(&a.transpose());
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((g.get(i, j) - g2.get(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let mut m = Mat::zeros(3, 2);
+        m.set(0, 0, 3.0);
+        m.set(1, 1, -4.0);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(m.max_abs(), 4.0);
+        assert!((m.max_col_norm() - 4.0).abs() < 1e-12);
+        assert!((m.max_row_norm() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qr_orthonormal_and_reconstructs() {
+        let a = randmat(10, 4, 7);
+        let (q, r) = qr_thin(&a);
+        let qtq = q.matmul_transa(&q);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq.get(i, j) - want).abs() < 1e-10, "Q^T Q not I");
+            }
+        }
+        let qr = q.matmul(&r);
+        for i in 0..10 {
+            for j in 0..4 {
+                assert!((qr.get(i, j) - a.get(i, j)).abs() < 1e-10, "QR != A");
+            }
+        }
+        // R upper-triangular
+        for i in 1..4 {
+            for j in 0..i {
+                assert!(r.get(i, j).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_recovers_known_spectrum() {
+        // A = Q diag(5,2,1) Q^T for a random orthonormal Q
+        let q0 = orthonormalize(&randmat(3, 3, 11));
+        let lam = [5.0, 2.0, 1.0];
+        let mut a = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += q0.get(i, k) * lam[k] * q0.get(j, k);
+                }
+                a.set(i, j, s);
+            }
+        }
+        let (vals, vecs) = jacobi_eigh(&a);
+        assert!((vals[0] - 5.0).abs() < 1e-9);
+        assert!((vals[1] - 2.0).abs() < 1e-9);
+        assert!((vals[2] - 1.0).abs() < 1e-9);
+        // eigenvectors satisfy A v = lambda v
+        for k in 0..3 {
+            for i in 0..3 {
+                let mut av = 0.0;
+                for j in 0..3 {
+                    av += a.get(i, j) * vecs.get(j, k);
+                }
+                assert!((av - vals[k] * vecs.get(i, k)).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_norm_sym_matches_jacobi() {
+        let b = randmat(20, 20, 13);
+        // symmetrize
+        let mut a = Mat::zeros(20, 20);
+        for i in 0..20 {
+            for j in 0..20 {
+                a.set(i, j, 0.5 * (b.get(i, j) + b.get(j, i)));
+            }
+        }
+        let (vals, _) = jacobi_eigh(&a);
+        let want = vals.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        let got = spectral_norm_sym(&a, 1e-10, 5000);
+        assert!((got - want).abs() / want < 1e-6, "got {got} want {want}");
+    }
+
+    #[test]
+    fn topk_eig_matches_jacobi_on_psd() {
+        let x = randmat(30, 50, 17);
+        let c = x.syrk().scaled(1.0 / 50.0);
+        let (vals_full, vecs_full) = jacobi_eigh(&c);
+        let (vals, vecs) = sym_eig_topk(&c, 5, 60, 31);
+        for k in 0..5 {
+            assert!(
+                (vals[k] - vals_full[k]).abs() / vals_full[k].max(1e-12) < 1e-6,
+                "eigenvalue {k}: {} vs {}",
+                vals[k],
+                vals_full[k]
+            );
+            // eigenvector up to sign
+            let dot: f64 = (0..30).map(|i| vecs.get(i, k) * vecs_full.get(i, k)).sum();
+            assert!(dot.abs() > 1.0 - 1e-6, "eigvec {k} dot {dot}");
+        }
+    }
+
+    #[test]
+    fn randomized_svd_rank_revealing() {
+        // rank-3 matrix + tiny noise
+        let u = orthonormalize(&randmat(40, 3, 19));
+        let v = orthonormalize(&randmat(25, 3, 23));
+        let mut a = Mat::zeros(40, 25);
+        let s = [9.0, 4.0, 2.0];
+        for i in 0..40 {
+            for j in 0..25 {
+                let mut val = 0.0;
+                for k in 0..3 {
+                    val += u.get(i, k) * s[k] * v.get(j, k);
+                }
+                a.set(i, j, val);
+            }
+        }
+        let svd = randomized_svd(&a, 3, 8, 2, 29);
+        for k in 0..3 {
+            assert!((svd.singular_values[k] - s[k]).abs() < 1e-6, "{:?}", svd.singular_values);
+            let dot: f64 = (0..40).map(|i| svd.u.get(i, k) * u.get(i, k)).sum();
+            assert!(dot.abs() > 1.0 - 1e-8);
+        }
+    }
+}

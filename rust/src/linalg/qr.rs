@@ -1,0 +1,78 @@
+//! Thin Householder QR and orthonormalization (the building block of the
+//! randomized SVD and subspace iteration).
+
+use super::Mat;
+
+/// Thin QR of `a` (rows ≥ cols): returns `(Q, R)` with `Q` rows×cols
+/// orthonormal and `R` cols×cols upper-triangular, `a = Q R`.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "qr_thin requires rows >= cols");
+    // Householder working copy
+    let mut h = a.clone();
+    // store the n reflectors (v, beta)
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    let mut betas = Vec::with_capacity(n);
+    for k in 0..n {
+        // build reflector from h[k.., k]
+        let col = h.col(k);
+        let x = &col[k..];
+        let alpha = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut v = x.to_vec();
+        if alpha == 0.0 {
+            vs.push(v);
+            betas.push(0.0);
+            continue;
+        }
+        let sign = if v[0] >= 0.0 { 1.0 } else { -1.0 };
+        v[0] += sign * alpha;
+        let vnorm2: f64 = v.iter().map(|t| t * t).sum();
+        let beta = if vnorm2 > 0.0 { 2.0 / vnorm2 } else { 0.0 };
+        // apply reflector to remaining columns of h
+        for j in k..n {
+            let cj = h.col_mut(j);
+            let dot: f64 = v.iter().zip(&cj[k..]).map(|(a, b)| a * b).sum();
+            let s = beta * dot;
+            for (vi, c) in v.iter().zip(cj[k..].iter_mut()) {
+                *c -= s * vi;
+            }
+        }
+        vs.push(v);
+        betas.push(beta);
+    }
+    // R = upper triangle of h
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        for i in 0..=j {
+            r.set(i, j, h.get(i, j));
+        }
+    }
+    // Q = (I - b1 v1 v1^T) ... (I - bn vn vn^T) * [I; 0] — apply reflectors
+    // in reverse to the thin identity.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let beta = betas[k];
+        if beta == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let cj = q.col_mut(j);
+            let dot: f64 = v.iter().zip(&cj[k..]).map(|(a, b)| a * b).sum();
+            let s = beta * dot;
+            for (vi, c) in v.iter().zip(cj[k..].iter_mut()) {
+                *c -= s * vi;
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormal basis for the column space of `a` (just the Q factor).
+pub fn orthonormalize(a: &Mat) -> Mat {
+    qr_thin(a).0
+}

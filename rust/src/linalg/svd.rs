@@ -1,0 +1,101 @@
+//! Randomized SVD (Halko–Martinsson–Tropp), the approximate-SVD substrate
+//! the paper's *feature selection* baseline [36] needs for leverage scores.
+
+use super::{jacobi_eigh, orthonormalize, Mat};
+use crate::rng::Pcg64;
+
+/// Truncated singular value decomposition `A ≈ U diag(s) Vᵀ`.
+pub struct Svd {
+    /// Left singular vectors, rows(A) × k.
+    pub u: Mat,
+    /// Singular values, descending.
+    pub singular_values: Vec<f64>,
+    /// Right singular vectors, cols(A) × k.
+    pub v: Mat,
+}
+
+/// Randomized truncated SVD with `oversample` extra probe directions and
+/// `power_iters` rounds of subspace iteration (2 is plenty for the
+/// leverage-score use case; raise for slowly decaying spectra).
+pub fn randomized_svd(a: &Mat, k: usize, oversample: usize, power_iters: usize, seed: u64) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    let l = (k + oversample).min(m).min(n);
+    let mut rng = Pcg64::seed(seed);
+    let g = Mat::from_fn(n, l, |_, _| rng.normal());
+    let mut q = orthonormalize(&a.matmul(&g)); // m×l
+    let at = a.transpose();
+    for _ in 0..power_iters {
+        q = orthonormalize(&at.matmul(&q)); // n×l
+        q = orthonormalize(&a.matmul(&q)); // m×l
+    }
+    // B = Qᵀ A  (l×n); eig of B Bᵀ (l×l) gives singular pairs
+    let b = q.matmul_transa(a); // Qᵀ A: (l×n)
+    let bbt = b.matmul(&b.transpose()); // l×l
+    let (vals, vecs) = jacobi_eigh(&bbt);
+    let k = k.min(l);
+    let mut s = Vec::with_capacity(k);
+    let mut u = Mat::zeros(m, k);
+    let mut v = Mat::zeros(n, k);
+    let qu = q.matmul(&vecs); // m×l, left singular vectors of A
+    for j in 0..k {
+        let sigma = vals[j].max(0.0).sqrt();
+        s.push(sigma);
+        for i in 0..m {
+            u.set(i, j, qu.get(i, j));
+        }
+        if sigma > 1e-300 {
+            // v_j = Aᵀ u_j / sigma
+            let uj: Vec<f64> = (0..m).map(|i| qu.get(i, j)).collect();
+            let vj = a.matvec_transa(&uj);
+            for i in 0..n {
+                v.set(i, j, vj[i] / sigma);
+            }
+        }
+    }
+    Svd { u, singular_values: s, v }
+}
+
+/// Row leverage scores from the top-k left singular vectors:
+/// `ℓ_j = (1/k) Σ_t U[j,t]²` (sums to 1). The feature-selection baseline
+/// samples rows of `X` with these probabilities.
+pub fn leverage_scores(u: &Mat, k: usize) -> Vec<f64> {
+    let k = k.min(u.cols());
+    let mut scores = vec![0.0; u.rows()];
+    for t in 0..k {
+        for j in 0..u.rows() {
+            let v = u.get(j, t);
+            scores[j] += v * v;
+        }
+    }
+    let inv = 1.0 / k as f64;
+    for s in &mut scores {
+        *s *= inv;
+    }
+    scores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leverage_scores_sum_to_one() {
+        let mut rng = Pcg64::seed(1);
+        let a = Mat::from_fn(20, 30, |_, _| rng.normal());
+        let svd = randomized_svd(&a, 5, 5, 2, 3);
+        let s = leverage_scores(&svd.u, 5);
+        let total: f64 = s.iter().sum();
+        assert!((total - 1.0).abs() < 1e-8, "sum={total}");
+        assert!(s.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn singular_values_descending() {
+        let mut rng = Pcg64::seed(5);
+        let a = Mat::from_fn(15, 12, |_, _| rng.normal());
+        let svd = randomized_svd(&a, 6, 4, 2, 7);
+        for w in svd.singular_values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+}

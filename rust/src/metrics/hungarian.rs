@@ -1,0 +1,182 @@
+//! Hungarian (Kuhn–Munkres) assignment and label-permutation clustering
+//! accuracy — the paper's accuracy metric (correct assignments after the
+//! best cluster↔class matching, normalized by n).
+
+/// Maximum-weight perfect matching on a square `n×n` benefit matrix
+/// (row-major `benefit[i][j]`), returned as `perm[row] = col`.
+/// O(n³) potentials implementation of the Hungarian algorithm.
+pub fn hungarian_max(benefit: &[Vec<f64>]) -> Vec<usize> {
+    let n = benefit.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Convert to min-cost with a large offset.
+    let maxval = benefit
+        .iter()
+        .flat_map(|r| r.iter())
+        .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    let cost = |i: usize, j: usize| maxval - benefit[i][j];
+
+    // Standard O(n³) Hungarian with potentials (1-indexed internals).
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0; n + 1];
+    let mut v = vec![0.0; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[col] = row matched to col (1-indexed)
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost(i0 - 1, j - 1) - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut perm = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            perm[p[j] - 1] = j - 1;
+        }
+    }
+    perm
+}
+
+/// Clustering accuracy: fraction of samples whose predicted cluster maps
+/// to their true label under the best cluster↔label matching.
+/// `k` must upper-bound both label alphabets.
+pub fn clustering_accuracy(pred: &[u32], truth: &[u32], k: usize) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 1.0;
+    }
+    let mut confusion = vec![vec![0.0f64; k]; k];
+    for (&a, &b) in pred.iter().zip(truth) {
+        confusion[a as usize][b as usize] += 1.0;
+    }
+    let perm = hungarian_max(&confusion);
+    let correct: f64 = (0..k).map(|c| confusion[c][perm[c]]).sum();
+    correct / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::forall;
+
+    #[test]
+    fn identity_matching() {
+        let benefit = vec![
+            vec![10.0, 1.0, 1.0],
+            vec![1.0, 10.0, 1.0],
+            vec![1.0, 1.0, 10.0],
+        ];
+        assert_eq!(hungarian_max(&benefit), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn crossed_matching() {
+        let benefit = vec![vec![1.0, 9.0], vec![9.0, 1.0]];
+        assert_eq!(hungarian_max(&benefit), vec![1, 0]);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        forall("hungarian_vs_brute", 40, |g| {
+            let n = g.int(1, 5) as usize;
+            let benefit: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..n).map(|_| g.float(0.0, 10.0)).collect()).collect();
+            let perm = hungarian_max(&benefit);
+            let got: f64 = (0..n).map(|i| benefit[i][perm[i]]).sum();
+            // brute force over all permutations
+            let mut idx: Vec<usize> = (0..n).collect();
+            let mut best = f64::NEG_INFINITY;
+            permute(&mut idx, 0, &mut |p| {
+                let s: f64 = (0..n).map(|i| benefit[i][p[i]]).sum();
+                if s > best {
+                    best = s;
+                }
+            });
+            assert!((got - best).abs() < 1e-9, "got {got} best {best}");
+        });
+    }
+
+    fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == v.len() {
+            f(v);
+            return;
+        }
+        for i in k..v.len() {
+            v.swap(k, i);
+            permute(v, k + 1, f);
+            v.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn accuracy_perfect_after_relabel() {
+        let pred = [1u32, 1, 0, 0, 2, 2];
+        let truth = [0u32, 0, 1, 1, 2, 2];
+        assert!((clustering_accuracy(&pred, &truth, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_partial() {
+        let pred = [0u32, 0, 0, 1];
+        let truth = [0u32, 0, 1, 1];
+        assert!((clustering_accuracy(&pred, &truth, 2) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_is_permutation_invariant() {
+        forall("acc_perm_invariant", 20, |g| {
+            let n = 50;
+            let k = 4usize;
+            let truth: Vec<u32> = (0..n).map(|_| g.int(0, k as i64 - 1) as u32).collect();
+            let pred: Vec<u32> = truth
+                .iter()
+                .map(|&t| if g.bool(0.8) { t } else { g.int(0, k as i64 - 1) as u32 })
+                .collect();
+            let base = clustering_accuracy(&pred, &truth, k);
+            // relabel clusters by a fixed permutation
+            let relabeled: Vec<u32> = pred.iter().map(|&c| (c + 1) % k as u32).collect();
+            let after = clustering_accuracy(&relabeled, &truth, k);
+            assert!((base - after).abs() < 1e-12);
+        });
+    }
+}

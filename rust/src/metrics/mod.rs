@@ -1,0 +1,9 @@
+//! Evaluation metrics and measurement utilities.
+
+mod hungarian;
+mod stats;
+mod timer;
+
+pub use hungarian::{clustering_accuracy, hungarian_max};
+pub use stats::{mean_std, median, Summary};
+pub use timer::Timer;

@@ -1,0 +1,92 @@
+//! Wall-clock timing with named phases — backs the paper's timing
+//! breakdowns (Tables III/IV/V: total / sample / precondition / load).
+
+use std::time::Instant;
+
+/// Accumulating phase timer.
+#[derive(Debug, Default)]
+pub struct Timer {
+    phases: Vec<(String, f64)>,
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer::default()
+    }
+
+    /// Time a closure and accumulate under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Add `secs` to phase `name` (creating it if new).
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.phases.push((name.to_string(), secs));
+        }
+    }
+
+    /// Seconds accumulated under `name` (0 if absent).
+    pub fn get(&self, name: &str) -> f64 {
+        self.phases.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, s)| s).sum()
+    }
+
+    /// `(name, seconds)` pairs in insertion order.
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    /// Merge another timer's phases into this one.
+    pub fn merge(&mut self, other: &Timer) {
+        for (n, s) in &other.phases {
+            self.add(n, *s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_by_name() {
+        let mut t = Timer::new();
+        t.add("a", 1.0);
+        t.add("b", 2.0);
+        t.add("a", 0.5);
+        assert_eq!(t.get("a"), 1.5);
+        assert_eq!(t.get("b"), 2.0);
+        assert_eq!(t.get("missing"), 0.0);
+        assert!((t.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = Timer::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= 0.0);
+    }
+
+    #[test]
+    fn merge() {
+        let mut a = Timer::new();
+        a.add("x", 1.0);
+        let mut b = Timer::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! PCA from the (estimated) covariance matrix, plus the paper's two PC
+//! quality metrics: explained variance (Fig. 1) and recovered-PC count
+//! (Table I, inner product ≥ 0.95).
+
+use crate::linalg::{sym_eig_topk, Mat};
+
+/// Principal components extracted from a symmetric covariance estimate.
+pub struct Pca {
+    /// Components as columns (p×k), unit-norm.
+    pub components: Mat,
+    /// Corresponding eigenvalues, descending.
+    pub eigenvalues: Vec<f64>,
+}
+
+impl Pca {
+    /// Top-`k` eigenpairs of a symmetric (estimated) covariance matrix via
+    /// randomized subspace iteration.
+    pub fn from_covariance(c: &Mat, k: usize, seed: u64) -> Pca {
+        let (vals, vecs) = sym_eig_topk(c, k, 30, seed);
+        Pca { components: vecs, eigenvalues: vals }
+    }
+
+    /// Explained-variance fraction `tr(Ûᵀ C Û) / tr(C)` for this basis
+    /// against a reference covariance (Fig. 1's metric; `C = X Xᵀ` up to a
+    /// scale that cancels).
+    pub fn explained_variance(&self, c_ref: &Mat) -> f64 {
+        explained_variance(&self.components, c_ref)
+    }
+}
+
+/// `tr(Ûᵀ C Û) / tr(C)` for any orthonormal basis `u` (p×k).
+pub fn explained_variance(u: &Mat, c: &Mat) -> f64 {
+    let p = c.rows();
+    assert_eq!(u.rows(), p);
+    let cu = c.matmul(u);
+    let mut num = 0.0;
+    for j in 0..u.cols() {
+        let ucol = u.col(j);
+        let ccol = cu.col(j);
+        num += ucol.iter().zip(ccol).map(|(a, b)| a * b).sum::<f64>();
+    }
+    let tr: f64 = c.diagonal().iter().sum();
+    if tr == 0.0 {
+        0.0
+    } else {
+        num / tr
+    }
+}
+
+/// Table I metric: number of estimated PCs whose best |inner product| with
+/// the matching true PC exceeds `threshold` (0.95 in the paper). Greedy
+/// one-to-one matching on |⟨û_i, u_j⟩|.
+pub fn recovered_components(u_est: &Mat, u_true: &Mat, threshold: f64) -> usize {
+    let ke = u_est.cols();
+    let kt = u_true.cols();
+    // |inner product| matrix
+    let mut scores: Vec<(f64, usize, usize)> = Vec::with_capacity(ke * kt);
+    for i in 0..ke {
+        for j in 0..kt {
+            let dot: f64 = u_est.col(i).iter().zip(u_true.col(j)).map(|(a, b)| a * b).sum();
+            scores.push((dot.abs(), i, j));
+        }
+    }
+    scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut used_e = vec![false; ke];
+    let mut used_t = vec![false; kt];
+    let mut count = 0;
+    for (s, i, j) in scores {
+        if s < threshold {
+            break;
+        }
+        if !used_e[i] && !used_t[j] {
+            used_e[i] = true;
+            used_t[j] = true;
+            count += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormalize;
+    use crate::rng::Pcg64;
+
+    fn spiked_cov(p: usize, lambdas: &[f64], seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seed(seed);
+        let u = orthonormalize(&Mat::from_fn(p, lambdas.len(), |_, _| rng.normal()));
+        let mut c = Mat::zeros(p, p);
+        for (t, &l) in lambdas.iter().enumerate() {
+            for i in 0..p {
+                for j in 0..p {
+                    c.add_at(i, j, l * u.get(i, t) * u.get(j, t));
+                }
+            }
+        }
+        // small isotropic floor so the matrix is PD
+        for i in 0..p {
+            c.add_at(i, i, 0.01);
+        }
+        (c, u)
+    }
+
+    #[test]
+    fn recovers_spiked_components() {
+        let (c, u_true) = spiked_cov(40, &[10.0, 6.0, 3.0], 1);
+        let pca = Pca::from_covariance(&c, 3, 7);
+        assert_eq!(recovered_components(&pca.components, &u_true, 0.95), 3);
+        assert!(pca.eigenvalues[0] > pca.eigenvalues[1]);
+    }
+
+    #[test]
+    fn explained_variance_bounds() {
+        let (c, u_true) = spiked_cov(30, &[5.0, 2.0], 3);
+        let ev = explained_variance(&u_true, &c);
+        assert!(ev > 0.9 && ev <= 1.0 + 1e-12, "ev={ev}");
+        // a random basis explains less than the true one
+        let mut rng = Pcg64::seed(9);
+        let rand_u = orthonormalize(&Mat::from_fn(30, 2, |_, _| rng.normal()));
+        assert!(explained_variance(&rand_u, &c) < ev);
+    }
+
+    #[test]
+    fn recovered_count_zero_for_random_basis() {
+        let (_, u_true) = spiked_cov(50, &[1.0, 1.0, 1.0], 5);
+        let mut rng = Pcg64::seed(11);
+        let u_est = orthonormalize(&Mat::from_fn(50, 3, |_, _| rng.normal()));
+        assert_eq!(recovered_components(&u_est, &u_true, 0.95), 0);
+    }
+
+    #[test]
+    fn recovered_matching_is_one_to_one() {
+        // duplicate estimate columns may not double-count one true PC
+        let (_, u_true) = spiked_cov(20, &[1.0], 13);
+        let mut dup = Mat::zeros(20, 2);
+        for i in 0..20 {
+            dup.set(i, 0, u_true.get(i, 0));
+            dup.set(i, 1, u_true.get(i, 0));
+        }
+        assert_eq!(recovered_components(&dup, &u_true, 0.95), 1);
+    }
+}

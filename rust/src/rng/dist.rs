@@ -1,0 +1,156 @@
+//! Distributions layered on [`Pcg64`]: normal (polar Box–Muller with a
+//! cached spare), gamma (Marsaglia–Tsang), chi-square, Student-t — the
+//! generators the paper's synthetic experiments need (Gaussian noise,
+//! spiked-covariance coefficients, multivariate-t with 1 dof for Fig. 1).
+
+use super::Pcg64;
+
+impl Pcg64 {
+    /// Standard normal via polar Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Gamma(shape `a` > 0, scale 1) via Marsaglia–Tsang (with the
+    /// `a < 1` boost `Gamma(a) = Gamma(a+1) * U^{1/a}`).
+    pub fn gamma(&mut self, a: f64) -> f64 {
+        assert!(a > 0.0, "gamma shape must be positive");
+        if a < 1.0 {
+            let g = self.gamma(a + 1.0);
+            let u = self.next_f64().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / a);
+        }
+        let d = a - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Chi-square with `k` degrees of freedom (k may be fractional).
+    pub fn chi2(&mut self, k: f64) -> f64 {
+        2.0 * self.gamma(0.5 * k)
+    }
+
+    /// Student-t with `df` degrees of freedom. `df = 1` is Cauchy — the
+    /// heavy-tailed regime of the paper's Fig. 1 experiment.
+    pub fn student_t(&mut self, df: f64) -> f64 {
+        self.normal() / (self.chi2(df) / df).sqrt()
+    }
+
+    /// Fill `out` with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+}
+
+/// A vector of iid Rademacher signs (`±1.0`), the diagonal of the ROS `D`.
+pub fn signs(p: usize, rng: &mut Pcg64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(p);
+    let mut bits = 0u64;
+    for i in 0..p {
+        if i % 64 == 0 {
+            bits = rng.next_u64();
+        }
+        out.push(if bits & 1 == 1 { 1.0 } else { -1.0 });
+        bits >>= 1;
+    }
+    out
+}
+
+/// Sample a categorical index from (unnormalized, nonnegative) weights.
+/// Used by k-means++ (D² weighting) and leverage-score row sampling.
+pub fn weighted_index(weights: &[f64], rng: &mut Pcg64) -> usize {
+    let total: f64 = weights.iter().sum();
+    debug_assert!(total.is_finite());
+    if total <= 0.0 {
+        // degenerate (all-zero weights): fall back to uniform
+        return rng.next_range(weights.len() as u32) as usize;
+    }
+    let mut u = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn student_t1_is_heavy_tailed() {
+        let mut r = Pcg64::seed(101);
+        let n = 20_000;
+        let big = (0..n).filter(|_| r.student_t(1.0).abs() > 20.0).count() as f64 / n as f64;
+        // P(|Cauchy| > 20) = 2/pi * atan(1/20) ≈ 0.0318
+        assert!((big - 0.0318).abs() < 0.01, "tail mass {big}");
+    }
+
+    #[test]
+    fn gamma_mean_variance() {
+        let mut r = Pcg64::seed(103);
+        let a = 3.7;
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gamma(a)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - a).abs() < 0.08, "mean {mean}");
+        assert!((var - a).abs() < 0.25, "var {var}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Pcg64::seed(105);
+        let a = 0.4;
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.gamma(a)).sum::<f64>() / n as f64;
+        assert!((mean - a).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut r = Pcg64::seed(107);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[weighted_index(&w, &mut r)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn weighted_index_all_zero_falls_back_uniform() {
+        let mut r = Pcg64::seed(109);
+        let w = [0.0, 0.0, 0.0, 0.0];
+        for _ in 0..100 {
+            assert!(weighted_index(&w, &mut r) < 4);
+        }
+    }
+}

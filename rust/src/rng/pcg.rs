@@ -1,0 +1,99 @@
+//! PCG-XSH-RR 64/32 with a 64-bit output wrapper and SplitMix64 seeding.
+//!
+//! Small, fast, statistically solid for simulation workloads, and — unlike
+//! `rand` — available in this offline build. Stream selection (the PCG
+//! increment) backs [`Pcg64::fork`] for per-column derived generators.
+
+/// SplitMix64: used to expand user seeds into full generator state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Permuted congruential generator (PCG-XSH-RR 64/32).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Root seed, retained so [`fork`](Self::fork) derives child streams
+    /// from the *original* entropy rather than the current position.
+    root: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream 0).
+    pub fn seed(seed: u64) -> Self {
+        Self::seed_stream(seed, 0)
+    }
+
+    /// Create a generator from a seed and stream id. Distinct streams from
+    /// the same seed are statistically independent.
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = seed ^ 0x5851_F42D_4C95_7F2D ^ stream.wrapping_mul(0xA24B_AED4_963E_E407);
+        let init_state = splitmix64(&mut sm);
+        let init_inc = splitmix64(&mut sm) | 1; // must be odd
+        let mut g = Pcg64 { state: 0, inc: init_inc, root: seed };
+        g.state = init_state.wrapping_add(g.inc);
+        let _ = g.next_u32();
+        g
+    }
+
+    /// Derive an independent child stream, keyed on the *root* seed and the
+    /// given index — independent of how much this generator has been used.
+    pub fn fork(&self, index: u64) -> Self {
+        Self::seed_stream(self.root, index.wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's rejection method).
+    #[inline]
+    pub fn next_range(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let lo = m as u32;
+            if lo >= bound {
+                return (m >> 32) as u32;
+            }
+            // threshold = (2^32 - bound) mod bound = -bound mod bound
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.next_range(i as u32 + 1) as usize;
+            v.swap(i, j);
+        }
+    }
+}

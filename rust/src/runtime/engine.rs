@@ -1,0 +1,252 @@
+//! Chunk-op engines: the PJRT-backed [`XlaEngine`] and the pure-Rust
+//! [`NativeEngine`], both implementing [`SparseAssigner`] so the
+//! coordinator can swap them freely.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::kmeans::{NativeAssigner, SparseAssigner};
+use crate::linalg::Mat;
+use crate::runtime::manifest::Manifest;
+use crate::sparse::SparseChunk;
+
+/// Engine selector used by drivers/experiments.
+pub enum Engine {
+    Native(NativeEngine),
+    Xla(XlaEngine),
+}
+
+impl Engine {
+    pub fn assigner(&self) -> &dyn SparseAssigner {
+        match self {
+            Engine::Native(e) => e,
+            Engine::Xla(e) => e,
+        }
+    }
+}
+
+/// Pure-Rust chunk ops (the default production path on CPU).
+pub struct NativeEngine;
+
+impl SparseAssigner for NativeEngine {
+    fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
+        NativeAssigner.assign(chunk, centers)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Transpose a column-major `rows×cols` f32 buffer into row-major.
+fn colmajor_to_rowmajor(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for j in 0..cols {
+        for i in 0..rows {
+            out[i * cols + j] = src[j * rows + i];
+        }
+    }
+    out
+}
+
+/// PJRT-backed engine executing the AOT artifacts.
+///
+/// Executables are compiled lazily on first use and cached per
+/// `(graph, p, b, k)`. Not `Sync`: the coordinator runs assignment on the
+/// driver thread (workers only sparsify), so single-threaded access is
+/// the intended discipline.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaEngine {
+    /// Connect the CPU PJRT client and load the manifest from `dir`
+    /// (defaults to [`super::artifact_dir`]).
+    pub fn new(dir: Option<std::path::PathBuf>) -> Result<Self> {
+        let dir = dir.unwrap_or_else(super::artifact_dir);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaEngine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for a graph signature.
+    fn executable(&self, graph: &str, p: usize, b: usize, k: usize) -> Result<()> {
+        let key = (graph.to_string(), p, b, k);
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let entry = self.manifest.find(graph, p, b, k)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    fn run(
+        &self,
+        graph: &str,
+        p: usize,
+        b: usize,
+        k: usize,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executable(graph, p, b, k)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&(graph.to_string(), p, b, k)).expect("just inserted");
+        let result = exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Literal from a row-major f32 matrix buffer.
+    fn mat_literal(row_major: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(row_major).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// The batch size `b` of the artifact serving dimension `p` / arity
+    /// `k` for `graph`.
+    fn batch_for(&self, graph: &str, p: usize, k: usize) -> Result<usize> {
+        self.manifest
+            .entries()
+            .iter()
+            .find(|e| {
+                e.graph == graph
+                    && e.p == p
+                    && (matches!(graph, "precondition" | "precondition_adjoint" | "cov_update")
+                        || e.k == k)
+            })
+            .map(|e| e.b)
+            .ok_or_else(|| Error::MissingArtifact { graph: graph.into(), p, b: 0, k })
+    }
+
+    /// Execute the `assign` graph over one sub-batch (exactly `b` columns,
+    /// padded by the caller). Inputs are row-major (p, b)/(p, k).
+    fn assign_batch(
+        &self,
+        w_rm: &[f32],
+        mask_rm: &[f32],
+        mu_rm: &[f32],
+        p: usize,
+        b: usize,
+        k: usize,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let args = [
+            Self::mat_literal(w_rm, p, b)?,
+            Self::mat_literal(mask_rm, p, b)?,
+            Self::mat_literal(mu_rm, p, k)?,
+        ];
+        let out = self.run("assign", p, b, k, &args)?;
+        if out.len() != 2 {
+            return Err(Error::Xla(format!("assign: expected 2 outputs, got {}", out.len())));
+        }
+        let dist: Vec<f32> = out[0].to_vec()?;
+        let assign: Vec<i32> = out[1].to_vec()?;
+        Ok((dist, assign))
+    }
+
+    /// Execute the `precondition` graph on a dense f32 column-major chunk
+    /// (must have exactly the artifact batch width); returns y col-major.
+    pub fn precondition_chunk(&self, x_cm: &[f32], signs: &[f32], p: usize) -> Result<Vec<f32>> {
+        let b = self.batch_for("precondition", p, 0)?;
+        if x_cm.len() != p * b {
+            return Err(Error::Shape(format!(
+                "precondition_chunk: got {} values, artifact batch is {p}x{b}",
+                x_cm.len()
+            )));
+        }
+        let x_rm = colmajor_to_rowmajor(x_cm, p, b);
+        let args = [Self::mat_literal(&x_rm, p, b)?, xla::Literal::vec1(signs)];
+        let out = self.run("precondition", p, b, 0, &args)?;
+        let y_rm: Vec<f32> = out[0].to_vec()?;
+        Ok(colmajor_to_rowmajor(&y_rm, b, p)) // transpose back
+    }
+
+    /// Execute the `cov_update` graph: returns the chunk Gram `W Wᵀ`
+    /// (p×p, col-major == row-major by symmetry).
+    pub fn cov_chunk(&self, w_cm: &[f32], p: usize) -> Result<Vec<f32>> {
+        let b = self.batch_for("cov_update", p, 0)?;
+        if w_cm.len() != p * b {
+            return Err(Error::Shape(format!(
+                "cov_chunk: got {} values, artifact batch is {p}x{b}",
+                w_cm.len()
+            )));
+        }
+        let w_rm = colmajor_to_rowmajor(w_cm, p, b);
+        let out = self.run("cov_update", p, b, 0, &[Self::mat_literal(&w_rm, p, b)?])?;
+        Ok(out[0].to_vec()?)
+    }
+}
+
+impl SparseAssigner for XlaEngine {
+    /// Assignment via the AOT Pallas `assign` graph. The chunk is densified
+    /// to (w, mask) panels, processed in artifact-width sub-batches with
+    /// zero padding (zero-mask columns are distance-0 everywhere and their
+    /// outputs are discarded).
+    fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
+        let p = chunk.p();
+        let k = centers.cols();
+        let b = self.batch_for("assign", p, k)?;
+        let (w_cm, mask_cm) = chunk.to_dense_f32_masked();
+        // centers to row-major f32
+        let mut mu_rm = vec![0.0f32; p * k];
+        for c in 0..k {
+            for i in 0..p {
+                mu_rm[i * k + c] = centers.get(i, c) as f32;
+            }
+        }
+        let n = chunk.n();
+        let mut assign = Vec::with_capacity(n);
+        let mut obj = 0.0f64;
+        let mut w_batch = vec![0.0f32; p * b];
+        let mut mask_batch = vec![0.0f32; p * b];
+        let mut start = 0usize;
+        while start < n {
+            let cols = (n - start).min(b);
+            w_batch.fill(0.0);
+            mask_batch.fill(0.0);
+            // copy col-major then transpose in one go
+            for j in 0..cols {
+                let src = (start + j) * p;
+                for i in 0..p {
+                    w_batch[i * b + j] = w_cm[src + i];
+                    mask_batch[i * b + j] = mask_cm[src + i];
+                }
+            }
+            let (dist, a) = self.assign_batch(&w_batch, &mask_batch, &mu_rm, p, b, k)?;
+            for j in 0..cols {
+                let c = a[j];
+                assign.push(c as u32);
+                obj += dist[j * k + c as usize] as f64;
+            }
+            start += cols;
+        }
+        Ok((assign, obj))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let cm: Vec<f32> = (0..12).map(|v| v as f32).collect(); // 3x4 col-major
+        let rm = colmajor_to_rowmajor(&cm, 3, 4);
+        assert_eq!(rm[0 * 4 + 1], cm[1 * 3 + 0]); // (0,1)
+        let back = colmajor_to_rowmajor(&rm, 4, 3); // treat rm as col-major 4x3
+        assert_eq!(back, cm);
+    }
+}

@@ -1,0 +1,122 @@
+//! Artifact manifest: the TSV contract written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One compiled-graph artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub graph: String,
+    pub p: usize,
+    pub b: usize,
+    pub k: usize,
+    /// Path to the `.hlo.txt`, resolved against the manifest directory.
+    pub path: PathBuf,
+}
+
+/// Parsed `manifest.tsv`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Invalid(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(Error::Invalid(format!(
+                    "manifest line {}: expected 5 tab-separated fields, got {}",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let parse = |s: &str, what: &str| -> Result<usize> {
+                s.parse()
+                    .map_err(|_| Error::Invalid(format!("manifest line {}: bad {what} {s:?}", lineno + 1)))
+            };
+            entries.push(ManifestEntry {
+                graph: cols[0].to_string(),
+                p: parse(cols[1], "p")?,
+                b: parse(cols[2], "b")?,
+                k: parse(cols[3], "k")?,
+                path: dir.join(cols[4]),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// Find the artifact for `graph` at exact shape (p, b, k). The k field
+    /// is ignored for graphs that don't depend on it (precondition, cov).
+    pub fn find(&self, graph: &str, p: usize, b: usize, k: usize) -> Result<&ManifestEntry> {
+        let k_free = matches!(graph, "precondition" | "precondition_adjoint" | "cov_update");
+        self.entries
+            .iter()
+            .find(|e| e.graph == graph && e.p == p && e.b == b && (k_free || e.k == k))
+            .ok_or_else(|| Error::MissingArtifact { graph: graph.to_string(), p, b, k })
+    }
+
+    /// All distinct (p, b, k) signatures present.
+    pub fn signatures(&self) -> Vec<(usize, usize, usize)> {
+        let mut sigs: Vec<(usize, usize, usize)> =
+            self.entries.iter().map(|e| (e.p, e.b, e.k)).collect();
+        sigs.sort_unstable();
+        sigs.dedup();
+        sigs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# graph\tp\tb\tk\tfile\n\
+        precondition\t512\t256\t5\tprecondition_p512_b256_k5.hlo.txt\n\
+        assign\t512\t256\t5\tassign_p512_b256_k5.hlo.txt\n";
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.find("assign", 512, 256, 5).unwrap();
+        assert!(e.path.ends_with("assign_p512_b256_k5.hlo.txt"));
+        assert!(m.find("assign", 512, 256, 7).is_err());
+        // k-free lookup for precondition
+        assert!(m.find("precondition", 512, 256, 99).is_ok());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("too\tfew\tfields\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("g\tx\t1\t2\tf\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn signatures_dedup() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.signatures(), vec![(512, 256, 5)]);
+    }
+}

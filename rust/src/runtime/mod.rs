@@ -1,0 +1,34 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas graphs.
+//!
+//! `make artifacts` lowers the L2 graphs (`python/compile/model.py`,
+//! calling the L1 Pallas kernels) to HLO **text** plus a TSV manifest.
+//! [`XlaEngine`] loads those artifacts through the `xla` crate
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`), caching one compiled executable per (graph, p, b, k)
+//! signature. Python never runs at execution time.
+//!
+//! [`NativeEngine`] implements the identical chunk ops in pure Rust; the
+//! two are cross-checked in `rust/tests/xla_parity.rs` and raced in the
+//! `ablation_engine` bench.
+
+mod engine;
+mod manifest;
+
+pub use engine::{Engine, NativeEngine, XlaEngine};
+pub use manifest::{Manifest, ManifestEntry};
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$PDS_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, else relative to the crate root.
+pub fn artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("PDS_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACT_DIR);
+    if cwd.join("manifest.tsv").exists() {
+        return cwd;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT_DIR)
+}

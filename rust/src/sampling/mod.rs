@@ -1,0 +1,354 @@
+//! The paper's compression operator: ROS preconditioning + uniform m-of-p
+//! element sampling, fused into a single pass over each chunk.
+//!
+//! Every sample gets an *independent* sampling matrix `R_i` (m distinct
+//! canonical basis vectors, uniform without replacement). Per-column RNG
+//! streams are forked from `(seed, global column index)`, so the output
+//! is invariant to chunk boundaries and worker scheduling — the
+//! coordinator's reproducibility guarantee.
+
+use crate::error::{invalid, Result};
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::sparse::SparseChunk;
+use crate::transform::{is_pow2, Ros, TransformKind};
+
+/// Configuration of the sparsification front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct SparsifyConfig {
+    /// Compression factor γ = m/p (0 < γ ≤ 1). `m = max(2, round(γ·p))`.
+    pub gamma: f64,
+    /// Which orthonormal transform `H` to use.
+    pub transform: TransformKind,
+    /// Root seed for the sign diagonal and all sampling masks.
+    pub seed: u64,
+}
+
+impl Default for SparsifyConfig {
+    fn default() -> Self {
+        SparsifyConfig { gamma: 0.1, transform: TransformKind::Hadamard, seed: 0 }
+    }
+}
+
+/// Draw `m` distinct indices from `{0..p}` uniformly without replacement
+/// (partial Fisher–Yates over a caller-provided permutation scratch of
+/// length `p`), writing them sorted into `out`.
+pub fn sample_indices(rng: &mut Pcg64, p: usize, out: &mut [u32], perm: &mut [u32]) {
+    let m = out.len();
+    debug_assert!(m <= p && perm.len() == p);
+    // reset scratch
+    for (i, v) in perm.iter_mut().enumerate() {
+        *v = i as u32;
+    }
+    for i in 0..m {
+        let j = i + rng.next_range((p - i) as u32) as usize;
+        perm.swap(i, j);
+    }
+    out.copy_from_slice(&perm[..m]);
+    out.sort_unstable();
+}
+
+/// The fused precondition+sample operator.
+///
+/// If the configured transform is Hadamard and `p` is not a power of two,
+/// the operator transparently zero-pads to the next power of two
+/// (`p_work`), preconditions and samples in the padded space, and reports
+/// `p()` = `p_work`. Zero-padding composes with an orthonormal map, so all
+/// estimator guarantees hold in the padded space; the adjoint un-pads.
+pub struct Sparsifier {
+    ros: Ros,
+    /// Original ambient dimension (before any padding).
+    p_orig: usize,
+    /// Working dimension (= p_orig, or next pow2 when padded).
+    p_work: usize,
+    m: usize,
+    seed: u64,
+}
+
+impl Sparsifier {
+    pub fn new(p: usize, cfg: SparsifyConfig) -> Result<Self> {
+        if !(cfg.gamma > 0.0 && cfg.gamma <= 1.0) {
+            return invalid(format!("gamma must be in (0,1], got {}", cfg.gamma));
+        }
+        let p_work = match cfg.transform {
+            TransformKind::Hadamard if !is_pow2(p) => p.next_power_of_two(),
+            _ => p,
+        };
+        let m = ((cfg.gamma * p_work as f64).round() as usize).clamp(2, p_work);
+        let mut rng = Pcg64::seed(cfg.seed);
+        let ros = Ros::new(p_work, cfg.transform, &mut rng)?;
+        Ok(Sparsifier { ros, p_orig: p, p_work, m, seed: cfg.seed })
+    }
+
+    /// Working (possibly padded) dimension — the `p` of downstream chunks.
+    pub fn p(&self) -> usize {
+        self.p_work
+    }
+
+    /// Original data dimension.
+    pub fn p_orig(&self) -> usize {
+        self.p_orig
+    }
+
+    /// Kept entries per sample.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Effective compression factor m / p_work.
+    pub fn gamma(&self) -> f64 {
+        self.m as f64 / self.p_work as f64
+    }
+
+    pub fn ros(&self) -> &Ros {
+        &self.ros
+    }
+
+    /// Compress a dense chunk (`p_orig × n`, samples as columns) whose
+    /// first column has global index `start_col`. One pass: precondition
+    /// each column, sample its mask, store kept values.
+    pub fn compress_chunk(&self, x: &Mat, start_col: usize) -> Result<SparseChunk> {
+        if x.rows() != self.p_orig {
+            return invalid(format!("chunk rows {} != p {}", x.rows(), self.p_orig));
+        }
+        let n = x.cols();
+        let mut out = SparseChunk::with_capacity(self.p_work, self.m, n, start_col);
+        let mut buf = vec![0.0f64; self.p_work];
+        let mut scratch = vec![0.0f64; self.p_work];
+        let mut perm = vec![0u32; self.p_work];
+        let mask_root = Pcg64::seed(self.seed ^ 0x9E37_79B9_7F4A_7C15);
+        for i in 0..n {
+            // pad + precondition
+            buf[..self.p_orig].copy_from_slice(x.col(i));
+            buf[self.p_orig..].fill(0.0);
+            self.ros.apply_col(&mut buf, &mut scratch);
+            // per-sample mask from a fork keyed on the global column index
+            let mut crng = mask_root.fork((start_col + i) as u64);
+            let (idx, vals) = out.col_mut(i);
+            sample_indices(&mut crng, self.p_work, idx, &mut perm);
+            for (v, &j) in vals.iter_mut().zip(idx.iter()) {
+                *v = buf[j as usize];
+            }
+        }
+        Ok(out)
+    }
+
+    /// Sparsify *without* preconditioning (the paper's "no precondition"
+    /// ablation arm — Figs 7/10, Table I/III). Masks are drawn from the
+    /// same streams as [`compress_chunk`](Self::compress_chunk).
+    pub fn compress_chunk_no_precondition(&self, x: &Mat, start_col: usize) -> Result<SparseChunk> {
+        if x.rows() != self.p_orig {
+            return invalid(format!("chunk rows {} != p {}", x.rows(), self.p_orig));
+        }
+        let n = x.cols();
+        let mut out = SparseChunk::with_capacity(self.p_work, self.m, n, start_col);
+        let mut perm = vec![0u32; self.p_work];
+        let mask_root = Pcg64::seed(self.seed ^ 0x9E37_79B9_7F4A_7C15);
+        for i in 0..n {
+            let col = x.col(i);
+            let mut crng = mask_root.fork((start_col + i) as u64);
+            let (idx, vals) = out.col_mut(i);
+            sample_indices(&mut crng, self.p_work, idx, &mut perm);
+            for (v, &j) in vals.iter_mut().zip(idx.iter()) {
+                *v = if (j as usize) < self.p_orig { col[j as usize] } else { 0.0 };
+            }
+        }
+        Ok(out)
+    }
+
+    /// Un-mix a matrix of centers/estimates from the preconditioned domain
+    /// back to the original coordinates (paper Eq. 32), dropping padding.
+    pub fn unmix(&self, mu_precond: &Mat) -> Mat {
+        assert_eq!(mu_precond.rows(), self.p_work);
+        let mut y = mu_precond.clone();
+        self.ros.adjoint_inplace(&mut y);
+        if self.p_work == self.p_orig {
+            y
+        } else {
+            let mut out = Mat::zeros(self.p_orig, y.cols());
+            for j in 0..y.cols() {
+                out.col_mut(j).copy_from_slice(&y.col(j)[..self.p_orig]);
+            }
+            out
+        }
+    }
+
+    /// Drop padding rows only (no adjoint transform) — the center
+    /// recovery for the *no-preconditioning* ablation arm.
+    pub fn truncate(&self, mat: &Mat) -> Mat {
+        assert_eq!(mat.rows(), self.p_work);
+        if self.p_work == self.p_orig {
+            return mat.clone();
+        }
+        let mut out = Mat::zeros(self.p_orig, mat.cols());
+        for j in 0..mat.cols() {
+            out.col_mut(j).copy_from_slice(&mat.col(j)[..self.p_orig]);
+        }
+        out
+    }
+
+    /// Precondition a dense chunk (pad + HD), without sampling — used by
+    /// oracle computations in tests/experiments.
+    pub fn precondition_dense(&self, x: &Mat) -> Mat {
+        assert_eq!(x.rows(), self.p_orig);
+        let mut out = Mat::zeros(self.p_work, x.cols());
+        let mut scratch = vec![0.0; self.p_work];
+        for j in 0..x.cols() {
+            out.col_mut(j)[..self.p_orig].copy_from_slice(x.col(j));
+            self.ros.apply_col(out.col_mut(j), &mut scratch);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::forall;
+
+    #[test]
+    fn sample_indices_properties() {
+        forall("sample_indices", 50, |g| {
+            let p = g.int(2, 200) as usize;
+            let m = g.int(1, p as i64) as usize;
+            let mut rng = Pcg64::seed(g.int(0, 1 << 40) as u64);
+            let mut out = vec![0u32; m];
+            let mut perm = vec![0u32; p];
+            sample_indices(&mut rng, p, &mut out, &mut perm);
+            for w in out.windows(2) {
+                assert!(w[0] < w[1], "sorted+distinct violated: {out:?}");
+            }
+            assert!(*out.last().unwrap() < p as u32);
+        });
+    }
+
+    #[test]
+    fn sample_indices_uniform_marginals() {
+        // Lemma B5: P[keep coordinate j] = m/p for every j.
+        let (p, m, trials) = (32usize, 8usize, 40_000usize);
+        let mut rng = Pcg64::seed(42);
+        let mut counts = vec![0usize; p];
+        let mut out = vec![0u32; m];
+        let mut perm = vec![0u32; p];
+        for _ in 0..trials {
+            sample_indices(&mut rng, p, &mut out, &mut perm);
+            for &j in &out {
+                counts[j as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * m as f64 / p as f64;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect).abs() < 5.0 * (expect * (1.0 - m as f64 / p as f64)).sqrt(),
+                "count {c} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn compress_chunk_keeps_preconditioned_values() {
+        let p = 64;
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 5 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(9);
+        let x = Mat::from_fn(p, 10, |_, _| rng.normal());
+        let y = sp.precondition_dense(&x);
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+        chunk.validate().unwrap();
+        assert_eq!(chunk.m(), 16);
+        for i in 0..10 {
+            for (idx, val) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
+                assert!((val - y.get(*idx as usize, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_do_not_change_output() {
+        let p = 32;
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 11 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(13);
+        let x = Mat::from_fn(p, 20, |_, _| rng.normal());
+        let whole = sp.compress_chunk(&x, 0).unwrap();
+        let first = sp.compress_chunk(&x.col_range(0, 12), 0).unwrap();
+        let second = sp.compress_chunk(&x.col_range(12, 20), 12).unwrap();
+        for i in 0..12 {
+            assert_eq!(whole.col_indices(i), first.col_indices(i));
+            assert_eq!(whole.col_values(i), first.col_values(i));
+        }
+        for i in 0..8 {
+            assert_eq!(whole.col_indices(12 + i), second.col_indices(i));
+            assert_eq!(whole.col_values(12 + i), second.col_values(i));
+        }
+    }
+
+    #[test]
+    fn padding_for_non_pow2_hadamard() {
+        let p = 100;
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 1 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        assert_eq!(sp.p(), 128);
+        assert_eq!(sp.p_orig(), 100);
+        assert_eq!(sp.m(), 32);
+        let mut rng = Pcg64::seed(2);
+        let x = Mat::from_fn(p, 4, |_, _| rng.normal());
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+        assert_eq!(chunk.p(), 128);
+        // unmix of a preconditioned dense chunk recovers the original
+        let y = sp.precondition_dense(&x);
+        let back = sp.unmix(&y);
+        assert!((back.sub(&x)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_precondition_keeps_raw_values() {
+        let p = 16;
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(4);
+        let x = Mat::from_fn(p, 6, |_, _| rng.normal());
+        let chunk = sp.compress_chunk_no_precondition(&x, 0).unwrap();
+        for i in 0..6 {
+            for (idx, val) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
+                assert_eq!(*val, x.get(*idx as usize, i));
+            }
+        }
+    }
+
+    #[test]
+    fn masks_match_between_precond_and_not() {
+        // Both arms of the ablation must see identical masks so the
+        // comparison isolates the preconditioner.
+        let p = 32;
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 21 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(22);
+        let x = Mat::from_fn(p, 5, |_, _| rng.normal());
+        let a = sp.compress_chunk(&x, 0).unwrap();
+        let b = sp.compress_chunk_no_precondition(&x, 0).unwrap();
+        for i in 0..5 {
+            assert_eq!(a.col_indices(i), b.col_indices(i));
+        }
+    }
+
+    #[test]
+    fn corollary3_norm_reduction() {
+        // With preconditioning, ||w||² ≲ (m/p)(2/η)log(2np/α)||x||² whp.
+        let p = 256;
+        let n = 50;
+        let cfg = SparsifyConfig { gamma: 0.1, transform: TransformKind::Hadamard, seed: 7 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(8);
+        // adversarial: spiky data
+        let x = Mat::from_fn(p, n, |i, j| if i == j % p { 1.0 } else { 0.0 });
+        let _ = rng.next_u64();
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+        let alpha: f64 = 0.01;
+        let bound = sp.gamma() * 2.0 * (2.0 * (n * p) as f64 / alpha).ln();
+        for i in 0..n {
+            let ratio = chunk.col_norm2(i); // ||x_i||² = 1
+            assert!(ratio <= bound, "col {i}: ratio {ratio} > bound {bound}");
+        }
+    }
+}

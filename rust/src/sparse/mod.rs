@@ -1,0 +1,228 @@
+//! Fixed-stride sparse chunk storage.
+//!
+//! The paper's sparsifier keeps *exactly* `m` of `p` entries per sample,
+//! so the natural storage is not general CSC but a fixed-stride layout:
+//! column `i` owns `indices[i*m .. (i+1)*m]` / `values[i*m .. (i+1)*m]`.
+//! This gives branch-free iteration, trivially computable offsets, and
+//! `8·m·n + 4·m·n` bytes — the compression ratio the paper reports.
+
+use crate::error::{shape_err, Result};
+use crate::linalg::Mat;
+
+/// A sparsified chunk of `n` samples in dimension `p`, exactly `m` kept
+/// entries per sample. Indices within each column are stored sorted.
+#[derive(Clone, Debug)]
+pub struct SparseChunk {
+    p: usize,
+    m: usize,
+    n: usize,
+    /// Column `i`'s kept coordinates: `indices[i*m..(i+1)*m]`, sorted.
+    indices: Vec<u32>,
+    /// Matching kept values (preconditioned-domain).
+    values: Vec<f64>,
+    /// Global index of the first sample in this chunk (streaming offset).
+    start_col: usize,
+}
+
+impl SparseChunk {
+    /// Allocate an empty chunk (filled via [`col_mut`](Self::col_mut)).
+    pub fn with_capacity(p: usize, m: usize, n: usize, start_col: usize) -> Self {
+        SparseChunk {
+            p,
+            m,
+            n,
+            indices: vec![0; m * n],
+            values: vec![0.0; m * n],
+            start_col,
+        }
+    }
+
+    /// Construct from raw fixed-stride buffers.
+    pub fn from_raw(
+        p: usize,
+        m: usize,
+        n: usize,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        start_col: usize,
+    ) -> Result<Self> {
+        if indices.len() != m * n || values.len() != m * n {
+            return shape_err(format!(
+                "SparseChunk::from_raw: buffers {}/{} != m*n={}",
+                indices.len(),
+                values.len(),
+                m * n
+            ));
+        }
+        Ok(SparseChunk { p, m, n, indices, values, start_col })
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Kept entries per sample.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Samples in this chunk.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Global column offset of this chunk in the stream.
+    #[inline]
+    pub fn start_col(&self) -> usize {
+        self.start_col
+    }
+
+    /// Compression factor γ = m/p.
+    pub fn gamma(&self) -> f64 {
+        self.m as f64 / self.p as f64
+    }
+
+    #[inline]
+    pub fn col_indices(&self, i: usize) -> &[u32] {
+        &self.indices[i * self.m..(i + 1) * self.m]
+    }
+
+    #[inline]
+    pub fn col_values(&self, i: usize) -> &[f64] {
+        &self.values[i * self.m..(i + 1) * self.m]
+    }
+
+    /// Mutable access to one column's (indices, values).
+    pub fn col_mut(&mut self, i: usize) -> (&mut [u32], &mut [f64]) {
+        (
+            &mut self.indices[i * self.m..(i + 1) * self.m],
+            &mut self.values[i * self.m..(i + 1) * self.m],
+        )
+    }
+
+    /// Heap bytes held by this chunk.
+    pub fn memory_bytes(&self) -> usize {
+        self.indices.len() * 4 + self.values.len() * 8
+    }
+
+    /// Densify into a `p×n` matrix (zeros at unsampled coordinates):
+    /// the `w_i = R_i R_iᵀ y_i` representation.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.p, self.n);
+        for i in 0..self.n {
+            let col = out.col_mut(i);
+            for (idx, val) in self.col_indices(i).iter().zip(self.col_values(i)) {
+                col[*idx as usize] = *val;
+            }
+        }
+        out
+    }
+
+    /// Densify values + 0/1 mask as f32 column-major buffers — the exact
+    /// operand layout of the AOT `assign`/`kmeans_step` executables.
+    pub fn to_dense_f32_masked(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut w = vec![0.0f32; self.p * self.n];
+        let mut mask = vec![0.0f32; self.p * self.n];
+        for i in 0..self.n {
+            let base = i * self.p;
+            for (idx, val) in self.col_indices(i).iter().zip(self.col_values(i)) {
+                w[base + *idx as usize] = *val as f32;
+                mask[base + *idx as usize] = 1.0;
+            }
+        }
+        (w, mask)
+    }
+
+    /// Squared l2 norm of column `i`.
+    pub fn col_norm2(&self, i: usize) -> f64 {
+        self.col_values(i).iter().map(|v| v * v).sum()
+    }
+
+    /// Structural invariants (used by property tests and debug assertions):
+    /// sorted, distinct, in-range indices in every column.
+    pub fn validate(&self) -> Result<()> {
+        for i in 0..self.n {
+            let idx = self.col_indices(i);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return shape_err(format!("col {i}: indices not strictly sorted"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.p {
+                    return shape_err(format!("col {i}: index {last} >= p={}", self.p));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_chunk() -> SparseChunk {
+        // p=5, m=2, n=3
+        SparseChunk::from_raw(
+            5,
+            2,
+            3,
+            vec![0, 3, 1, 4, 2, 3],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            7,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn accessors() {
+        let c = sample_chunk();
+        assert_eq!(c.p(), 5);
+        assert_eq!(c.m(), 2);
+        assert_eq!(c.n(), 3);
+        assert_eq!(c.start_col(), 7);
+        assert_eq!(c.col_indices(1), &[1, 4]);
+        assert_eq!(c.col_values(2), &[5.0, 6.0]);
+        assert!((c.gamma() - 0.4).abs() < 1e-15);
+        assert_eq!(c.memory_bytes(), 6 * 4 + 6 * 8);
+    }
+
+    #[test]
+    fn densify() {
+        let c = sample_chunk();
+        let d = c.to_dense();
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(3, 0), 2.0);
+        assert_eq!(d.get(1, 0), 0.0);
+        assert_eq!(d.get(4, 1), 4.0);
+        let (w, mask) = c.to_dense_f32_masked();
+        assert_eq!(w[0], 1.0);
+        assert_eq!(mask[0], 1.0);
+        assert_eq!(mask[1], 0.0);
+        assert_eq!(w.len(), 15);
+    }
+
+    #[test]
+    fn col_norms() {
+        let c = sample_chunk();
+        assert!((c.col_norm2(0) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn validate_catches_bad_indices() {
+        let bad = SparseChunk::from_raw(5, 2, 1, vec![3, 3], vec![0.0, 0.0], 0).unwrap();
+        assert!(bad.validate().is_err());
+        let oob = SparseChunk::from_raw(5, 2, 1, vec![3, 9], vec![0.0, 0.0], 0).unwrap();
+        assert!(oob.validate().is_err());
+        assert!(sample_chunk().validate().is_ok());
+    }
+
+    #[test]
+    fn from_raw_shape_check() {
+        assert!(SparseChunk::from_raw(5, 2, 3, vec![0; 5], vec![0.0; 6], 0).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! In-tree property-testing mini-harness (proptest is unavailable in this
+//! offline build). `prop::forall` runs a closure over `n` generated cases
+//! from a seeded [`prop::Gen`]; on panic it reports the case number and
+//! seed so the failure replays deterministically.
+
+pub mod prop;

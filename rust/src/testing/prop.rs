@@ -1,0 +1,94 @@
+//! `forall`-style randomized property tests with deterministic replay.
+
+use crate::rng::Pcg64;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+    /// Case index (0-based) — stable identifier for replaying a failure.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Integer uniform in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.rng.next_u64() % span) as i64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Standard normal draw.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Bernoulli(prob).
+    pub fn bool(&mut self, prob: f64) -> bool {
+        self.rng.next_f64() < prob
+    }
+
+    /// A fresh RNG derived from this case (for code that needs its own).
+    pub fn rng(&mut self) -> Pcg64 {
+        Pcg64::seed(self.rng.next_u64())
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[(self.rng.next_u64() % items.len() as u64) as usize]
+    }
+}
+
+/// Seed for the whole property-test run; override with `PDS_PROP_SEED` to
+/// replay a failing run.
+fn root_seed() -> u64 {
+    std::env::var("PDS_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xDEFA_17)
+}
+
+/// Run `body` over `cases` generated inputs. Panics propagate with a
+/// header identifying the property, case index and root seed.
+pub fn forall(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
+    let root = root_seed();
+    for case in 0..cases {
+        let rng = Pcg64::seed_stream(root, case as u64 ^ 0xF0F0);
+        let mut g = Gen { rng, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(err) = result {
+            eprintln!(
+                "property `{name}` failed at case {case}/{cases} (PDS_PROP_SEED={root}): rerun \
+                 with that env var to replay"
+            );
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_bounds() {
+        forall("gen_bounds", 100, |g| {
+            let v = g.int(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let f = g.float(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall("det_a", 5, |g| first.push(g.int(0, 1000)));
+        let mut second = Vec::new();
+        forall("det_b", 5, |g| second.push(g.int(0, 1000)));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,123 @@
+//! Orthonormal DCT-II (the paper's alternative `H`, η = 1/2).
+//!
+//! Reference implementation via a precomputed p×p matrix: exact for any
+//! `p`, O(p²) per column. The streaming hot path prefers the O(p log p)
+//! Hadamard transform (zero-padding `p` up to the next power of two when
+//! necessary — see `sampling::SparsifyConfig::pad_to_pow2`); the DCT path
+//! exists for parity with the paper's MNIST setup and for the η-ablation,
+//! mirroring the paper's own remark (§VII.C) that its Matlab DCT was the
+//! slow component.
+
+/// Precomputed orthonormal DCT-II plan for dimension `p`.
+pub struct DctPlan {
+    p: usize,
+    /// Column-major p×p orthonormal DCT matrix `C`.
+    mat: Vec<f64>,
+}
+
+impl DctPlan {
+    pub fn new(p: usize) -> Self {
+        assert!(p > 0);
+        let mut mat = vec![0.0; p * p];
+        let norm0 = (1.0 / p as f64).sqrt();
+        let norm = (2.0 / p as f64).sqrt();
+        for k in 0..p {
+            // column k of C (input index k)
+            for j in 0..p {
+                let c = if j == 0 { norm0 } else { norm };
+                mat[k * p + j] =
+                    c * (std::f64::consts::PI * (2.0 * k as f64 + 1.0) * j as f64 / (2.0 * p as f64)).cos();
+            }
+        }
+        DctPlan { p, mat }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// `y = C x`, written back into `x` (`scratch` must have length `p`).
+    pub fn forward(&self, x: &mut [f64], scratch: &mut [f64]) {
+        let p = self.p;
+        debug_assert_eq!(x.len(), p);
+        debug_assert_eq!(scratch.len(), p);
+        scratch.fill(0.0);
+        for (k, &xk) in x.iter().enumerate() {
+            if xk == 0.0 {
+                continue;
+            }
+            let col = &self.mat[k * p..(k + 1) * p];
+            for j in 0..p {
+                scratch[j] += col[j] * xk;
+            }
+        }
+        x.copy_from_slice(scratch);
+    }
+
+    /// `x = Cᵀ y` (exact inverse of [`forward`](Self::forward)), in place.
+    pub fn inverse(&self, y: &mut [f64], scratch: &mut [f64]) {
+        let p = self.p;
+        debug_assert_eq!(y.len(), p);
+        for k in 0..p {
+            let col = &self.mat[k * p..(k + 1) * p];
+            let mut s = 0.0;
+            for j in 0..p {
+                s += col[j] * y[j];
+            }
+            scratch[k] = s;
+        }
+        y.copy_from_slice(scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn orthonormal_any_p() {
+        for p in [3usize, 8, 17, 100] {
+            let plan = DctPlan::new(p);
+            // C Cᵀ = I  (check a few random columns of the product)
+            for i in 0..p {
+                for j in 0..p {
+                    let mut s = 0.0;
+                    for k in 0..p {
+                        s += plan.mat[i * p + k] * plan.mat[j * p + k];
+                    }
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((s - want).abs() < 1e-10, "p={p} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let p = 97;
+        let plan = DctPlan::new(p);
+        let mut rng = Pcg64::seed(4);
+        let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let mut y = x.clone();
+        let mut scratch = vec![0.0; p];
+        plan.forward(&mut y, &mut scratch);
+        plan.inverse(&mut y, &mut scratch);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn constant_maps_to_first_coefficient() {
+        let p = 64;
+        let plan = DctPlan::new(p);
+        let mut x = vec![1.0; p];
+        let mut scratch = vec![0.0; p];
+        plan.forward(&mut x, &mut scratch);
+        assert!((x[0] - (p as f64).sqrt()).abs() < 1e-10);
+        for v in &x[1..] {
+            assert!(v.abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! In-place fast Walsh–Hadamard transform, normalized (orthonormal), in
+//! Sylvester ordering — bit-for-bit the same transform as the Pallas
+//! kernel `python/compile/kernels/fwht.py` and the `ref.fwht_ref` oracle.
+
+/// `true` iff `n` is a positive power of two.
+#[inline]
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && n & (n - 1) == 0
+}
+
+/// Normalized in-place FWHT over `x` (length must be a power of two).
+/// Involutive: applying twice restores the input. O(p log p).
+///
+/// Perf (§Perf log): the first two stages (h=1, h=2) are fused into one
+/// pass over radix-4 blocks (halves the memory sweeps of the small-stride
+/// stages), and the `1/sqrt(p)` normalization is folded into the final
+/// stage instead of a separate pass.
+pub fn fwht_inplace(x: &mut [f64]) {
+    let p = x.len();
+    debug_assert!(is_pow2(p), "fwht requires power-of-two length");
+    let scale = 1.0 / (p as f64).sqrt();
+    if p == 1 {
+        x[0] *= scale;
+        return;
+    }
+    if p == 2 {
+        let (a, b) = (x[0], x[1]);
+        x[0] = (a + b) * scale;
+        x[1] = (a - b) * scale;
+        return;
+    }
+    // fused radix-4 first pass (stages h=1 and h=2)
+    let mut i = 0;
+    while i < p {
+        let (a, b, c, d) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
+        let (ab, amb) = (a + b, a - b);
+        let (cd, cmd) = (c + d, c - d);
+        x[i] = ab + cd;
+        x[i + 1] = amb + cmd;
+        x[i + 2] = ab - cd;
+        x[i + 3] = amb - cmd;
+        i += 4;
+    }
+    // remaining stages; fold the normalization into the last one
+    let mut h = 4;
+    while h < p {
+        let step = 2 * h;
+        let last = step == p;
+        let s = if last { scale } else { 1.0 };
+        let mut base = 0;
+        while base < p {
+            for i in base..base + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = (a + b) * s;
+                x[i + h] = (a - b) * s;
+            }
+            base += step;
+        }
+        h = step;
+    }
+    if h == 4 && p == 4 {
+        // p == 4: radix-4 pass was the whole transform; normalize now
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Explicit orthonormal Hadamard matrix (test oracle).
+    fn hadamard(p: usize) -> Vec<Vec<f64>> {
+        let mut h = vec![vec![1.0]];
+        while h.len() < p {
+            let n = h.len();
+            let mut next = vec![vec![0.0; 2 * n]; 2 * n];
+            for i in 0..n {
+                for j in 0..n {
+                    next[i][j] = h[i][j];
+                    next[i][j + n] = h[i][j];
+                    next[i + n][j] = h[i][j];
+                    next[i + n][j + n] = -h[i][j];
+                }
+            }
+            h = next;
+        }
+        let s = 1.0 / (p as f64).sqrt();
+        for row in &mut h {
+            for v in row {
+                *v *= s;
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn matches_explicit_matrix() {
+        for p in [2usize, 4, 8, 32, 128] {
+            let mut rng = Pcg64::seed(p as u64);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let h = hadamard(p);
+            let want: Vec<f64> =
+                (0..p).map(|i| (0..p).map(|j| h[i][j] * x[j]).sum()).collect();
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-10, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn involutive() {
+        let mut rng = Pcg64::seed(2);
+        let x: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
+        let mut y = x.clone();
+        fwht_inplace(&mut y);
+        fwht_inplace(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Pcg64::seed(3);
+        let x: Vec<f64> = (0..1024).map(|_| rng.normal()).collect();
+        let n0: f64 = x.iter().map(|v| v * v).sum();
+        let mut y = x;
+        fwht_inplace(&mut y);
+        let n1: f64 = y.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-8 * n0);
+    }
+
+    #[test]
+    fn trivial_length_one() {
+        let mut x = [3.5];
+        fwht_inplace(&mut x);
+        assert_eq!(x[0], 3.5);
+    }
+}

@@ -1,0 +1,220 @@
+//! The randomized orthonormal system (ROS) preconditioner — paper Eq. (1):
+//! `y = H D x` with `H` a fast orthonormal transform (Hadamard or DCT-II)
+//! and `D` a random ±1 diagonal.
+//!
+//! This is the L3-native implementation used on the streaming hot path;
+//! the identical computation is also AOT-compiled from the Pallas FWHT
+//! kernel (`python/compile/kernels/fwht.py`) and the two are
+//! cross-checked in `rust/tests/xla_parity.rs`.
+
+mod dct;
+mod fwht;
+
+pub use dct::DctPlan;
+pub use fwht::{fwht_inplace, is_pow2};
+
+use crate::error::{invalid, Result};
+use crate::linalg::Mat;
+use crate::rng::{signs, Pcg64};
+
+/// Which orthonormal `H` the ROS uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransformKind {
+    /// Walsh–Hadamard (requires `p` a power of two); `η = 1` in Thm 1.
+    Hadamard,
+    /// Orthonormal DCT-II (any `p`); `η = 1/2` in Thm 1.
+    Dct,
+}
+
+impl TransformKind {
+    /// The sub-Gaussian constant `η` of Theorem 1 for this transform.
+    pub fn eta(self) -> f64 {
+        match self {
+            TransformKind::Hadamard => 1.0,
+            TransformKind::Dct => 0.5,
+        }
+    }
+}
+
+/// A sampled ROS instance: the `D` diagonal (±1 signs) plus the `H` plan.
+///
+/// `HD` is orthonormal, so [`Ros::adjoint_inplace`] is an exact inverse of
+/// [`Ros::apply_inplace`]; center estimates computed in the preconditioned
+/// domain are unmixed with the adjoint (paper Eq. 32).
+pub struct Ros {
+    kind: TransformKind,
+    signs: Vec<f64>,
+    dct: Option<DctPlan>,
+    p: usize,
+}
+
+impl Ros {
+    /// Sample a ROS for dimension `p`. The sign diagonal is drawn from
+    /// `rng`; Hadamard requires `p` to be a power of two.
+    pub fn new(p: usize, kind: TransformKind, rng: &mut Pcg64) -> Result<Self> {
+        if p == 0 {
+            return invalid("Ros: p must be positive");
+        }
+        if kind == TransformKind::Hadamard && !is_pow2(p) {
+            return invalid(format!("Ros: Hadamard needs power-of-two p, got {p}"));
+        }
+        let dct = match kind {
+            TransformKind::Dct => Some(DctPlan::new(p)),
+            TransformKind::Hadamard => None,
+        };
+        Ok(Ros { kind, signs: signs(p, rng), dct, p })
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn kind(&self) -> TransformKind {
+        self.kind
+    }
+
+    /// The ±1 diagonal of `D`.
+    pub fn signs(&self) -> &[f64] {
+        &self.signs
+    }
+
+    /// `x ← H D x` for one column (scratch required by the DCT path; pass
+    /// a reusable buffer of length `p`).
+    pub fn apply_col(&self, x: &mut [f64], scratch: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.p);
+        for (v, s) in x.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        match self.kind {
+            TransformKind::Hadamard => fwht_inplace(x),
+            TransformKind::Dct => self.dct.as_ref().unwrap().forward(x, scratch),
+        }
+    }
+
+    /// `y ← (HD)ᵀ y = D Hᵀ y` for one column (exact inverse of
+    /// [`apply_col`](Self::apply_col)).
+    pub fn adjoint_col(&self, y: &mut [f64], scratch: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.p);
+        match self.kind {
+            TransformKind::Hadamard => fwht_inplace(y), // H is symmetric & involutive
+            TransformKind::Dct => self.dct.as_ref().unwrap().inverse(y, scratch),
+        }
+        for (v, s) in y.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+    }
+
+    /// Apply in place to every column of a matrix.
+    pub fn apply_inplace(&self, x: &mut Mat) {
+        assert_eq!(x.rows(), self.p);
+        let mut scratch = vec![0.0; self.p];
+        for j in 0..x.cols() {
+            self.apply_col(x.col_mut(j), &mut scratch);
+        }
+    }
+
+    /// Apply the adjoint in place to every column of a matrix.
+    pub fn adjoint_inplace(&self, y: &mut Mat) {
+        assert_eq!(y.rows(), self.p);
+        let mut scratch = vec![0.0; self.p];
+        for j in 0..y.cols() {
+            self.adjoint_col(y.col_mut(j), &mut scratch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::forall;
+
+    #[test]
+    fn hadamard_roundtrip() {
+        forall("ros_hadamard_roundtrip", 20, |g| {
+            let p = 1usize << g.int(1, 9);
+            let mut rng = Pcg64::seed(g.int(0, 1 << 30) as u64);
+            let ros = Ros::new(p, TransformKind::Hadamard, &mut rng).unwrap();
+            let mut x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let orig = x.clone();
+            let mut scratch = vec![0.0; p];
+            ros.apply_col(&mut x, &mut scratch);
+            ros.adjoint_col(&mut x, &mut scratch);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-9, "roundtrip failed");
+            }
+        });
+    }
+
+    #[test]
+    fn dct_roundtrip_arbitrary_p() {
+        forall("ros_dct_roundtrip", 20, |g| {
+            let p = g.int(2, 300) as usize;
+            let mut rng = Pcg64::seed(g.int(0, 1 << 30) as u64);
+            let ros = Ros::new(p, TransformKind::Dct, &mut rng).unwrap();
+            let mut x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let orig = x.clone();
+            let mut scratch = vec![0.0; p];
+            ros.apply_col(&mut x, &mut scratch);
+            ros.adjoint_col(&mut x, &mut scratch);
+            for (a, b) in x.iter().zip(&orig) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn preserves_column_norms() {
+        let mut rng = Pcg64::seed(9);
+        for kind in [TransformKind::Hadamard, TransformKind::Dct] {
+            let p = 128;
+            let ros = Ros::new(p, kind, &mut rng).unwrap();
+            let mut x = Mat::from_fn(p, 5, |_, _| rng.normal());
+            let before: Vec<f64> =
+                (0..5).map(|j| x.col(j).iter().map(|v| v * v).sum::<f64>()).collect();
+            ros.apply_inplace(&mut x);
+            for j in 0..5 {
+                let after: f64 = x.col(j).iter().map(|v| v * v).sum();
+                assert!((after - before[j]).abs() < 1e-8 * before[j].max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn smooths_spike_to_uniform_magnitude() {
+        // Theorem 1: a canonical basis vector maps to entries of magnitude
+        // exactly 1/sqrt(p) under Hadamard.
+        let p = 256;
+        let mut rng = Pcg64::seed(3);
+        let ros = Ros::new(p, TransformKind::Hadamard, &mut rng).unwrap();
+        let mut x = vec![0.0; p];
+        x[37] = 1.0;
+        let mut scratch = vec![0.0; p];
+        ros.apply_col(&mut x, &mut scratch);
+        for v in &x {
+            assert!((v.abs() - 1.0 / (p as f64).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hadamard_rejects_non_pow2() {
+        let mut rng = Pcg64::seed(1);
+        assert!(Ros::new(100, TransformKind::Hadamard, &mut rng).is_err());
+        assert!(Ros::new(100, TransformKind::Dct, &mut rng).is_ok());
+    }
+
+    #[test]
+    fn max_entry_bound_corollary2() {
+        // Corollary 2: for normalized columns, ||Y||_max is unlikely to
+        // exceed sqrt(2/eta * log(2np/alpha) / p). Check at alpha=0.01.
+        let (p, n) = (256, 64);
+        let mut rng = Pcg64::seed(77);
+        let ros = Ros::new(p, TransformKind::Hadamard, &mut rng).unwrap();
+        let mut x = Mat::from_fn(p, n, |_, _| rng.normal());
+        x.normalize_columns();
+        ros.apply_inplace(&mut x);
+        let alpha = 0.01f64;
+        let bound =
+            ((2.0 / 1.0) * (2.0 * (n * p) as f64 / alpha).ln()).sqrt() / (p as f64).sqrt();
+        assert!(x.max_abs() <= bound, "max {} bound {}", x.max_abs(), bound);
+    }
+}

@@ -1,0 +1,160 @@
+//! Cross-module integration: streaming pipeline ↔ estimators ↔ K-means ↔
+//! out-of-core store, plus end-to-end statistical sanity (no artifacts
+//! required — pure native engine).
+
+use pds::coordinator::{
+    run_pca_stream, run_sparsified_kmeans_stream, run_two_pass_stream, ChunkSource, MatSource,
+    StoreSource, StreamConfig,
+};
+use pds::data::{digits, ChunkStore, ChunkStoreReader, DigitConfig, DigitStream};
+use pds::estimators::{HkAccumulator, SparseMeanEstimator};
+use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::metrics::clustering_accuracy;
+use pds::rng::Pcg64;
+use pds::sampling::{Sparsifier, SparsifyConfig};
+use pds::testing::prop::forall;
+use pds::transform::TransformKind;
+
+#[test]
+fn digits_cluster_via_streaming_pipeline() {
+    let d = digits(2000, DigitConfig { seed: 3, ..Default::default() });
+    let scfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 9 };
+    let mut src = MatSource::new(&d.data, 256);
+    let (model, report) = run_sparsified_kmeans_stream(
+        &mut src,
+        scfg,
+        3,
+        KmeansOpts { n_init: 8, ..Default::default() },
+        &NativeAssigner,
+        StreamConfig { workers: 2, ..Default::default() },
+        true,
+    )
+    .unwrap();
+    let acc = clustering_accuracy(&model.result.assign, &d.labels, 3);
+    assert!(acc > 0.85, "digit accuracy at gamma=0.05: {acc}");
+    assert_eq!(report.n, 2000);
+    // centers live in the original 784-dim space (padding dropped)
+    assert_eq!(model.result.centers.rows(), 784);
+}
+
+#[test]
+fn out_of_core_roundtrip_matches_in_memory() {
+    let d = digits(400, DigitConfig { seed: 5, ..Default::default() });
+    let path = std::env::temp_dir().join(format!("pds_it_store_{}", std::process::id()));
+    {
+        let mut store = ChunkStore::create(&path, 784, 128).unwrap();
+        let mut start = 0;
+        while start < 400 {
+            let end = (start + 128).min(400);
+            store.append(&d.data.col_range(start, end)).unwrap();
+            start = end;
+        }
+        store.finish().unwrap();
+    }
+    let scfg = SparsifyConfig { gamma: 0.08, transform: TransformKind::Hadamard, seed: 11 };
+    let opts = KmeansOpts { n_init: 3, ..Default::default() };
+
+    let mut mem_src = MatSource::new(&d.data, 128);
+    let (mem, _) = run_sparsified_kmeans_stream(
+        &mut mem_src, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
+    )
+    .unwrap();
+
+    // f32 storage introduces tiny value differences; the *structure* of
+    // the clustering must survive the disk roundtrip.
+    let mut disk_src = StoreSource::new(ChunkStoreReader::open(&path).unwrap());
+    let (disk, report) = run_sparsified_kmeans_stream(
+        &mut disk_src, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
+    )
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(report.n, 400);
+    let agree = mem
+        .result
+        .assign
+        .iter()
+        .zip(&disk.result.assign)
+        .filter(|(a, b)| a == b)
+        .count();
+    let frac = agree as f64 / 400.0;
+    // identical up to label permutation; compare via accuracy metric
+    let cross = clustering_accuracy(&mem.result.assign, &disk.result.assign, 3);
+    assert!(cross > 0.99, "disk vs memory clustering agreement {cross} (raw {frac})");
+}
+
+#[test]
+fn two_pass_stream_beats_one_pass_on_noisy_digits() {
+    let d = digits(1200, DigitConfig { seed: 7, noise: 0.25, ..Default::default() });
+    let scfg = SparsifyConfig { gamma: 0.02, transform: TransformKind::Hadamard, seed: 13 };
+    let opts = KmeansOpts { n_init: 3, ..Default::default() };
+    let mut src = MatSource::new(&d.data, 256);
+    let (one, _) = run_sparsified_kmeans_stream(
+        &mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
+    )
+    .unwrap();
+    src.reset().unwrap();
+    let (two, report) =
+        run_two_pass_stream(&mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default())
+            .unwrap();
+    assert_eq!(report.passes, 2);
+    let a1 = clustering_accuracy(&one.result.assign, &d.labels, 3);
+    let a2 = clustering_accuracy(&two.assign, &d.labels, 3);
+    assert!(a2 >= a1 - 0.01, "two-pass {a2} vs one-pass {a1}");
+}
+
+#[test]
+fn streaming_pca_mean_matches_direct_estimator() {
+    let mut rng = Pcg64::seed(17);
+    let d = pds::data::spiked(64, 3000, &[6.0, 3.0], false, &mut rng);
+    let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 19 };
+    let mut src = MatSource::new(&d.data, 500);
+    let (pca_report, report) = run_pca_stream(&mut src, scfg, 2, StreamConfig::default()).unwrap();
+    assert_eq!(report.n, 3000);
+    // direct (single-chunk) estimator must agree exactly: same masks
+    let sp = Sparsifier::new(64, scfg).unwrap();
+    let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+    let mut mean = SparseMeanEstimator::new(sp.p(), sp.m());
+    mean.accumulate(&chunk);
+    let direct_pre = pds::linalg::Mat::from_vec(sp.p(), 1, mean.estimate()).unwrap();
+    let direct = sp.unmix(&direct_pre);
+    for i in 0..64 {
+        assert!((pca_report.mean[i] - direct.get(i, 0)).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn digit_stream_is_order_independent() {
+    forall("digit_stream_order", 10, |g| {
+        let seed = g.int(0, 1000) as u64;
+        let stream = DigitStream::new(DigitConfig { seed, ..Default::default() });
+        let idx = g.int(0, 5000) as usize;
+        let a = stream.chunk(idx, 3);
+        let b = stream.chunk(idx + 1, 1); // overlapping later read
+        // column idx+1 must be identical whichever chunk produced it
+        for i in 0..784 {
+            assert_eq!(a.get(i, 1), b.get(i, 0));
+        }
+    });
+}
+
+#[test]
+fn hk_accumulator_over_stream_matches_theorem7_shape() {
+    let mut rng = Pcg64::seed(23);
+    let x = pds::linalg::Mat::from_fn(128, 4000, |_, _| rng.normal());
+    let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 29 };
+    let sp = Sparsifier::new(128, scfg).unwrap();
+    let mut acc = HkAccumulator::new(sp.p(), sp.m());
+    let mut src = MatSource::new(&x, 512);
+    let mut timer = pds::metrics::Timer::new();
+    let mut fold = |c: pds::sparse::SparseChunk| -> pds::Result<()> {
+        acc.accumulate(&c);
+        Ok(())
+    };
+    pds::coordinator::compress_stream(
+        &mut src, &sp, StreamConfig::default(), true, &mut fold, &mut timer,
+    )
+    .unwrap();
+    let dev = acc.deviation_norm();
+    let bound = HkAccumulator::t_for_delta(sp.p(), sp.m(), 4000, 1e-3);
+    assert!(dev <= bound, "H_k deviation {dev} exceeded Thm 7 bound {bound}");
+}
