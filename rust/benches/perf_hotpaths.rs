@@ -1,52 +1,171 @@
-//! Perf-pass harness: the three L3 hot paths measured in isolation, with
-//! arithmetic-intensity context so the §Perf roofline discussion in
-//! EXPERIMENTS.md is reproducible.
+//! Perf-pass harness: the L3 hot paths measured in isolation, with
+//! arithmetic-intensity context so the §Perf log in `rust/EXPERIMENTS.md`
+//! is reproducible.
+//!
+//! Measures (1) the blocked FWHT, (2) mask sampling (O(p)-reset reference
+//! vs the O(m) `IndexSampler`), (3) masked assignment and (4) the
+//! covariance scatter — the latter two at 1/2/4 workers to show thread
+//! scaling. Results are also emitted as `BENCH_hotpaths.json` at the
+//! repository root (schema documented in EXPERIMENTS.md).
+
+use std::io::Write as _;
+
+use pds::bench::BenchResult;
 use pds::data::{digits, DigitConfig};
-use pds::kmeans::{kmeans_pp_dense, NativeAssigner, SparseAssigner};
 use pds::estimators::CovarianceEstimator;
+use pds::kmeans::{kmeans_pp_dense, NativeAssigner, SparseAssigner};
 use pds::linalg::Mat;
 use pds::rng::Pcg64;
-use pds::sampling::{Sparsifier, SparsifyConfig};
+use pds::sampling::{sample_indices, IndexSampler, Sparsifier, SparsifyConfig};
 use pds::transform::fwht_inplace;
 use pds::transform::TransformKind;
 
+/// One emitted benchmark row: the raw timing plus one derived
+/// throughput metric.
+struct Entry {
+    result: BenchResult,
+    metric: &'static str,
+    value: f64,
+}
+
 fn main() {
+    let mut entries: Vec<Entry> = Vec::new();
+
     pds::bench::section("perf: L3 hot paths");
-    // 1) FWHT throughput (the compress hot loop)
-    for p in [512usize, 1024, 4096] {
+    // 1) FWHT throughput (the compress hot loop); 16384 is the
+    //    firmly-out-of-L1 size the blocked schedule targets
+    for p in [512usize, 1024, 4096, 16384] {
         let mut rng = Pcg64::seed(1);
-        let mut cols: Vec<Vec<f64>> = (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+        let mut cols: Vec<Vec<f64>> =
+            (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
         let r = pds::bench::bench(&format!("fwht p={p} x64cols"), 2, 20, || {
-            for c in cols.iter_mut() { fwht_inplace(c); }
+            for c in cols.iter_mut() {
+                fwht_inplace(c);
+            }
             cols[0][0]
         });
         let bytes = (64 * p * 8) as f64;
-        let flops = (64 * p * (p as f64).log2() as usize) as f64;
-        println!("   -> {:.2} GB/s streamed, {:.2} GFLOP/s", bytes * 2.0 / r.median_s / 1e9, flops / r.median_s / 1e9);
+        let flops = (64 * p) as f64 * (p as f64).log2();
+        let gbs = bytes * 2.0 / r.median_s / 1e9;
+        println!("   -> {:.2} GB/s streamed, {:.2} GFLOP/s", gbs, flops / r.median_s / 1e9);
+        entries.push(Entry { result: r, metric: "GB/s", value: gbs });
     }
-    // 2) masked assignment (the kmeans hot loop)
+
+    // 2) mask sampling: O(p)-reset reference vs the O(m) IndexSampler at
+    //    the gamma=0.05, p=4096 point where the reset dominates
+    {
+        let (p, m) = (4096usize, 205usize);
+        let mut out = vec![0u32; m];
+        let mut perm = vec![0u32; p];
+        let mut rng = Pcg64::seed(11);
+        let r = pds::bench::bench("mask sample reference (p=4096,m=205) x1k", 2, 20, || {
+            for _ in 0..1000 {
+                sample_indices(&mut rng, p, &mut out, &mut perm);
+            }
+            out[0]
+        });
+        let masks = 1000.0 / r.median_s / 1e6;
+        println!("   -> {masks:.2} M masks/s (O(p) reset)");
+        entries.push(Entry { result: r, metric: "M masks/s", value: masks });
+
+        let mut sampler = IndexSampler::new(p);
+        let mut rng = Pcg64::seed(11);
+        let r = pds::bench::bench("mask sample O(m) sampler (p=4096,m=205) x1k", 2, 20, || {
+            for _ in 0..1000 {
+                sampler.sample(&mut rng, &mut out);
+            }
+            out[0]
+        });
+        let masks = 1000.0 / r.median_s / 1e6;
+        println!("   -> {masks:.2} M masks/s (O(m) epoch overlay)");
+        entries.push(Entry { result: r, metric: "M masks/s", value: masks });
+    }
+
+    // 3) masked assignment (the kmeans hot loop), thread scaling
     let d = digits(20_000, DigitConfig::default());
     let cfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 2 };
     let sp = Sparsifier::new(784, cfg).unwrap();
     let chunk = sp.compress_chunk(&d.data, 0).unwrap();
     let mut rng = Pcg64::seed(3);
     let centers = sp.precondition_dense(&kmeans_pp_dense(&d.data, 3, &mut rng));
-    let r = pds::bench::bench("assign native (n=20k,m=51,K=3)", 2, 20, || {
-        NativeAssigner.assign(&chunk, &centers).unwrap().1
-    });
-    let gathers = (20_000 * 51 * 3) as f64;
-    println!("   -> {:.1} M masked-gathers/s", gathers / r.median_s / 1e6);
-    // 3) covariance scatter accumulation
+    let gathers = (20_000 * chunk.m() * 3) as f64;
+    for workers in [1usize, 2, 4] {
+        let mut ids = vec![0u32; chunk.n()];
+        let mut dist = vec![0.0f64; chunk.n()];
+        let r = pds::bench::bench(
+            &format!("assign native (n=20k,m={},K=3) w={workers}", chunk.m()),
+            2,
+            20,
+            || {
+                NativeAssigner
+                    .assign_into(&chunk, &centers, workers, &mut ids, &mut dist)
+                    .unwrap();
+                dist.iter().sum::<f64>()
+            },
+        );
+        let rate = gathers / r.median_s / 1e6;
+        println!("   -> {rate:.1} M masked-gathers/s");
+        entries.push(Entry { result: r, metric: "M masked-gathers/s", value: rate });
+    }
+
+    // 4) covariance scatter accumulation, thread scaling
     let mut rng = Pcg64::seed(5);
     let x = Mat::from_fn(256, 2560, |_, _| rng.normal());
     let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 7 };
     let sp = Sparsifier::new(256, cfg).unwrap();
     let chunk = sp.compress_chunk(&x, 0).unwrap();
-    let r = pds::bench::bench("cov accumulate (p=256,n=2560,m=77)", 1, 10, || {
-        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
-        est.accumulate(&chunk);
-        est.n()
-    });
-    let scatters = (2560.0) * (77.0 * 77.0);
-    println!("   -> {:.1} M scatter-madds/s", scatters / r.median_s / 1e6);
+    let m = sp.m();
+    let scatters = 2560.0 * (m * m) as f64 / 2.0; // lower triangle only
+    for workers in [1usize, 2, 4] {
+        let r = pds::bench::bench(
+            &format!("cov accumulate (p=256,n=2560,m={m}) w={workers}"),
+            1,
+            10,
+            || {
+                let mut est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(workers);
+                est.accumulate(&chunk);
+                est.n()
+            },
+        );
+        let rate = scatters / r.median_s / 1e6;
+        println!("   -> {rate:.1} M scatter-madds/s");
+        entries.push(Entry { result: r, metric: "M scatter-madds/s", value: rate });
+    }
+
+    if let Err(e) = write_json(&entries) {
+        eprintln!("warning: could not write BENCH_hotpaths.json: {e}");
+    }
+}
+
+/// Emit the machine-readable perf log at the repository root (one dir
+/// above the crate).
+fn write_json(entries: &[Entry]) -> std::io::Result<()> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_hotpaths.json");
+    let mut body = String::new();
+    body.push_str("{\n  \"bench\": \"perf_hotpaths\",\n");
+    body.push_str("  \"source\": \"cargo bench --bench perf_hotpaths\",\n");
+    body.push_str("  \"results\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_s\": {:e}, \"mad_s\": {:e}, \
+             \"min_s\": {:e}, \"metric\": \"{}\", \"value\": {:.3}}}{}\n",
+            e.result.name,
+            e.result.iters,
+            e.result.median_s,
+            e.result.mad_s,
+            e.result.min_s,
+            e.metric,
+            e.value,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(body.as_bytes())?;
+    println!("\nwrote {}", path.display());
+    Ok(())
 }

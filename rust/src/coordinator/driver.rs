@@ -30,6 +30,39 @@ pub struct PipelineReport {
     pub engine: &'static str,
 }
 
+/// Target column count when coalescing stream chunks for a fit.
+const FIT_COALESCE_COLS: usize = 8192;
+
+/// Merge sorted, contiguous stream chunks into pieces of at least
+/// `target_cols` columns (the tail piece may be smaller).
+fn coalesce_chunks(chunks: Vec<SparseChunk>, target_cols: usize) -> Result<Vec<SparseChunk>> {
+    let mut out = Vec::new();
+    let mut group: Vec<SparseChunk> = Vec::new();
+    let mut group_cols = 0usize;
+    for c in chunks {
+        group_cols += c.n();
+        group.push(c);
+        if group_cols >= target_cols {
+            out.push(merge_group(&mut group)?);
+            group_cols = 0;
+        }
+    }
+    if !group.is_empty() {
+        out.push(merge_group(&mut group)?);
+    }
+    Ok(out)
+}
+
+fn merge_group(group: &mut Vec<SparseChunk>) -> Result<SparseChunk> {
+    let merged = if group.len() == 1 {
+        group.pop().expect("non-empty group")
+    } else {
+        SparseChunk::concat(group)?
+    };
+    group.clear();
+    Ok(merged)
+}
+
 /// One-pass sparsified K-means over a stream (Algorithm 1 at scale):
 /// compress with backpressure (the compressed data — `γ·p·n` values — is
 /// what's held in memory, never the raw stream), then iterate.
@@ -51,7 +84,15 @@ pub fn run_sparsified_kmeans_stream(
     };
     let n = compress_stream(source, &sp, stream, precondition, &mut collect, &mut timer)?;
     chunks.sort_by_key(|c| c.start_col());
-    let sk = SparsifiedKmeans::new(scfg, k, opts);
+    // coalesce the (often chunk_cols-sized) stream pieces so the parallel
+    // assigner fans out over large column ranges instead of paying a
+    // fork/join per tiny chunk; bitwise identical — the fit depends only
+    // on the global column order
+    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
+    // reuse the compress pool width for the fit: assignment and center
+    // accumulation are bitwise worker-count-invariant, so this only
+    // changes speed
+    let sk = SparsifiedKmeans::new(scfg, k, opts).with_workers(stream.workers);
     let model = timer.time("kmeans", || sk.fit_chunks(&sp, &chunks, assigner))?;
     let iterations = model.result.iterations;
     Ok((
@@ -159,7 +200,9 @@ pub fn run_pca_stream(
     let sp = Sparsifier::new(source.p(), scfg)?;
     let mut timer = Timer::new();
     let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
-    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m());
+    // the covariance scatter is the PCA hot path; give it the same pool
+    // width as the compress stage (bitwise invariant to the worker count)
+    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(stream.workers);
     let mut fold = |c: SparseChunk| -> Result<()> {
         mean_est.accumulate(&c);
         cov_est.accumulate(&c);

@@ -1,33 +1,62 @@
 //! Crate-wide error type.
+//!
+//! Hand-implemented `Display`/`Error` (the `thiserror` derive is
+//! unavailable in this offline build); message formats are part of the
+//! public contract and must not change.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the pds library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape / dimension mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid configuration or argument value.
-    #[error("invalid argument: {0}")]
     Invalid(String),
 
     /// A required AOT artifact is missing from the manifest.
-    #[error("missing artifact: graph={graph} p={p} b={b} k={k} (run `make artifacts`)")]
     MissingArtifact { graph: String, p: usize, b: usize, k: usize },
 
     /// PJRT / XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Numerical failure (non-convergence, singularity, NaN).
-    #[error("numerical: {0}")]
     Numerical(String),
 
     /// I/O (out-of-core store, manifest).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Invalid(msg) => write!(f, "invalid argument: {msg}"),
+            Error::MissingArtifact { graph, p, b, k } => write!(
+                f,
+                "missing artifact: graph={graph} p={p} b={b} k={k} (run `make artifacts`)"
+            ),
+            Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
+            Error::Numerical(msg) => write!(f, "numerical: {msg}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -46,4 +75,32 @@ pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
 /// Shorthand for building an invalid-argument error.
 pub fn invalid<T>(msg: impl Into<String>) -> Result<T> {
     Err(Error::Invalid(msg.into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        assert_eq!(Error::Shape("a".into()).to_string(), "shape mismatch: a");
+        assert_eq!(Error::Invalid("b".into()).to_string(), "invalid argument: b");
+        assert_eq!(Error::Xla("c".into()).to_string(), "xla runtime: c");
+        assert_eq!(Error::Numerical("d".into()).to_string(), "numerical: d");
+        let ma = Error::MissingArtifact { graph: "assign".into(), p: 1, b: 2, k: 3 };
+        assert_eq!(
+            ma.to_string(),
+            "missing artifact: graph=assign p=1 b=2 k=3 (run `make artifacts`)"
+        );
+        let io = Error::from(std::io::Error::new(std::io::ErrorKind::Other, "nope"));
+        assert!(io.to_string().starts_with("io: "));
+    }
+
+    #[test]
+    fn io_source_is_preserved() {
+        use std::error::Error as _;
+        let e = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.source().is_some());
+        assert!(Error::Shape("x".into()).source().is_none());
+    }
 }

@@ -6,6 +6,7 @@
 
 use crate::estimators::bounds::bernstein_invert;
 use crate::linalg::Mat;
+use crate::parallel;
 use crate::sparse::SparseChunk;
 
 /// Streaming unbiased covariance estimator (Theorem 6).
@@ -17,37 +18,114 @@ pub struct CovarianceEstimator {
     /// unstructured-covariance regime, so dense accumulation is inherent).
     acc: Mat,
     n: usize,
+    /// Fork/join width for [`accumulate`](Self::accumulate). `1` runs the
+    /// serial scatter; any value yields a bitwise-identical accumulator
+    /// (workers own disjoint column ranges of `acc` and visit samples in
+    /// the serial order).
+    workers: usize,
+    /// Cached weighted column split for the parallel scatter — depends
+    /// only on `p` and `workers`, so it is computed once per
+    /// [`set_workers`](Self::set_workers) instead of per chunk.
+    ranges_cache: Option<Vec<std::ops::Range<usize>>>,
 }
 
 impl CovarianceEstimator {
     pub fn new(p: usize, m: usize) -> Self {
         assert!(m >= 2, "covariance estimator needs m >= 2 (Eq. 19 rescale)");
-        CovarianceEstimator { p, m, acc: Mat::zeros(p, p), n: 0 }
+        CovarianceEstimator { p, m, acc: Mat::zeros(p, p), n: 0, workers: 1, ranges_cache: None }
+    }
+
+    /// Builder-style worker-count override for the scatter accumulation.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.set_workers(workers);
+        self
+    }
+
+    /// Set the fork/join width used by subsequent
+    /// [`accumulate`](Self::accumulate) calls.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+        self.ranges_cache = None;
     }
 
     /// Fold one sparsified chunk: scatter each column's m×m outer product.
     ///
     /// Perf: only the lower triangle is accumulated (column indices are
     /// sorted, so `b >= a` ⇒ `j_b >= j_a`) and mirrored at estimate time —
-    /// half the scatter traffic of the naive m² loop (§Perf log).
+    /// half the scatter traffic of the naive m² loop (§Perf log). With
+    /// `workers > 1` the scatter is partitioned over *output* columns
+    /// (weighted by the triangle height `p − j` so the load balances);
+    /// each cell still receives its contributions in sample order, so the
+    /// accumulator is bitwise independent of the worker count.
     pub fn accumulate(&mut self, chunk: &SparseChunk) {
         assert_eq!(chunk.p(), self.p);
         assert_eq!(chunk.m(), self.m);
-        for i in 0..chunk.n() {
-            let idx = chunk.col_indices(i);
-            let val = chunk.col_values(i);
-            for (a, &ja) in idx.iter().enumerate() {
-                let va = val[a];
-                if va == 0.0 {
-                    continue;
-                }
-                // sorted indices: writes walk down column `ja` contiguously
-                for (b, &jb) in idx.iter().enumerate().skip(a) {
-                    self.acc.add_at(jb as usize, ja as usize, val[b] * va);
+        if self.workers > 1 {
+            self.accumulate_scatter_par(chunk);
+        } else {
+            for i in 0..chunk.n() {
+                let idx = chunk.col_indices(i);
+                let val = chunk.col_values(i);
+                for (a, &ja) in idx.iter().enumerate() {
+                    let va = val[a];
+                    if va == 0.0 {
+                        continue;
+                    }
+                    // sorted indices: writes walk down column `ja`
+                    // contiguously
+                    for (b, &jb) in idx.iter().enumerate().skip(a) {
+                        self.acc.add_at(jb as usize, ja as usize, val[b] * va);
+                    }
                 }
             }
         }
         self.n += chunk.n();
+    }
+
+    /// Column-partitioned parallel scatter: worker `t` owns columns
+    /// `ranges[t]` of `acc` (a contiguous panel of the column-major
+    /// buffer) and, per sample, binary-searches the sorted index list for
+    /// the positions that scatter into its panel.
+    fn accumulate_scatter_par(&mut self, chunk: &SparseChunk) {
+        let p = self.p;
+        if self.ranges_cache.is_none() {
+            // lower-triangle column j receives p − j output rows; balance
+            // on that weight instead of column count
+            self.ranges_cache = Some(parallel::split_ranges_by_weight(
+                p,
+                self.workers,
+                |j| (p - j) as f64,
+            ));
+        }
+        let ranges = self.ranges_cache.clone().expect("just populated");
+        let panels = parallel::split_col_panels(self.acc.as_mut_slice(), p, &ranges);
+        let jobs: Vec<_> = ranges.into_iter().zip(panels).collect();
+        crossbeam_utils::thread::scope(|scope| {
+            for (r, panel) in jobs {
+                scope.spawn(move |_| {
+                    let (lo, hi) = (r.start as u32, r.end as u32);
+                    for i in 0..chunk.n() {
+                        let idx = chunk.col_indices(i);
+                        let val = chunk.col_values(i);
+                        let a_lo = idx.partition_point(|&j| j < lo);
+                        let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
+                        for a in a_lo..a_hi {
+                            let ja = idx[a] as usize;
+                            let va = val[a];
+                            if va == 0.0 {
+                                continue;
+                            }
+                            let col =
+                                &mut panel[(ja - r.start) * p..(ja - r.start + 1) * p];
+                            for (b, &jb) in idx.iter().enumerate().skip(a) {
+                                col[jb as usize] += val[b] * va;
+                            }
+                        }
+                    }
+                });
+            }
+        })
+        .expect("covariance scatter scope panicked");
     }
 
     /// Materialize the symmetric accumulator (mirror lower → upper).
@@ -249,6 +327,35 @@ mod tests {
         a.merge(&b);
         let d2 = a.estimate().sub(&scatter.estimate());
         assert!(d2.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn workers_do_not_change_the_accumulator() {
+        // column-partitioned scatter: every worker count must reproduce
+        // the serial accumulator bit for bit, including across several
+        // accumulate() calls into the same estimator
+        let (p, n) = (48usize, 200usize);
+        let x = spiked_data(p, n, 21);
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 13 };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let c0 = sp.compress_chunk(&x.col_range(0, 90), 0).unwrap();
+        let c1 = sp.compress_chunk(&x.col_range(90, 200), 90).unwrap();
+
+        let mut serial = CovarianceEstimator::new(sp.p(), sp.m());
+        serial.accumulate(&c0);
+        serial.accumulate(&c1);
+        let e_serial = serial.estimate();
+
+        for w in [2usize, 4, 7] {
+            let mut par = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(w);
+            par.accumulate(&c0);
+            par.accumulate(&c1);
+            assert_eq!(par.n(), serial.n());
+            let e_par = par.estimate();
+            for (a, b) in e_serial.as_slice().iter().zip(e_par.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={w}");
+            }
+        }
     }
 
     #[test]

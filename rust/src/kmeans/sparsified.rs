@@ -6,9 +6,21 @@
 //! unmix `μ = (HD)ᵀ μ'` (Eq. 32). One pass over the data produces both
 //! assignments *and* original-domain centers — the paper's headline
 //! property.
+//!
+//! Both hot steps fan out over [`crate::parallel`] scoped threads when
+//! `workers > 1`: assignment partitions the *samples* (embarrassingly
+//! parallel; per-sample distances are recorded and reduced in sample
+//! order), the center update partitions the *coordinates* (each worker
+//! owns a row range of `sums`/`counts`, so every cell is accumulated by
+//! exactly one worker in global sample order). Results are therefore
+//! bitwise identical for every worker count, including `workers = 1` —
+//! which runs the original serial loops inline.
+
+use std::ops::Range;
 
 use crate::error::Result;
 use crate::linalg::Mat;
+use crate::parallel;
 use crate::rng::Pcg64;
 use crate::sampling::{Sparsifier, SparsifyConfig};
 use crate::sparse::SparseChunk;
@@ -25,9 +37,65 @@ pub trait SparseAssigner {
     /// ids and the summed min masked distance (the Eq. 34 objective).
     fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)>;
 
+    /// Assign each column of `chunk`, writing cluster ids into `out` and
+    /// each column's min masked distance into `dist` (both of length
+    /// `chunk.n()`). `workers` is a parallelism hint an implementation
+    /// may ignore. The default forwards to [`assign`](Self::assign) and
+    /// recomputes the per-column distances serially.
+    fn assign_into(
+        &self,
+        chunk: &SparseChunk,
+        centers: &Mat,
+        workers: usize,
+        out: &mut [u32],
+        dist: &mut [f64],
+    ) -> Result<()> {
+        let _ = workers;
+        let (ids, _obj) = self.assign(chunk, centers)?;
+        debug_assert_eq!(ids.len(), chunk.n());
+        for i in 0..chunk.n() {
+            out[i] = ids[i];
+            dist[i] = masked_dist2(
+                chunk.col_indices(i),
+                chunk.col_values(i),
+                centers.col(ids[i] as usize),
+            );
+        }
+        Ok(())
+    }
+
     /// Human-readable engine name (for experiment tables).
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+/// Minimum columns per worker before the parallel assigner fans out.
+const MIN_ASSIGN_COLS_PER_WORKER: usize = 1024;
+
+/// Assignment kernel over one contiguous column range.
+fn assign_range(
+    chunk: &SparseChunk,
+    centers: &Mat,
+    r: Range<usize>,
+    out: &mut [u32],
+    dist: &mut [f64],
+) {
+    let k = centers.cols();
+    for (local, i) in r.enumerate() {
+        let idx = chunk.col_indices(i);
+        let vals = chunk.col_values(i);
+        let mut best = f64::INFINITY;
+        let mut arg = 0u32;
+        for c in 0..k {
+            let d = masked_dist2(idx, vals, centers.col(c));
+            if d < best {
+                best = d;
+                arg = c as u32;
+            }
+        }
+        out[local] = arg;
+        dist[local] = best;
     }
 }
 
@@ -43,31 +111,70 @@ impl SparseAssigner for NativeAssigner {
         // transposed center panel was tried and measured 2x SLOWER than
         // this center-major form — the single-accumulator inner loop
         // vectorizes, the K-wide one does not. Keep center-major.
-        let k = centers.cols();
-        let mut assign = vec![0u32; chunk.n()];
-        let mut obj = 0.0;
-        for i in 0..chunk.n() {
-            let idx = chunk.col_indices(i);
-            let vals = chunk.col_values(i);
-            let mut best = f64::INFINITY;
-            let mut arg = 0u32;
-            for c in 0..k {
-                let d = masked_dist2(idx, vals, centers.col(c));
-                if d < best {
-                    best = d;
-                    arg = c as u32;
-                }
-            }
-            assign[i] = arg;
-            obj += best;
-        }
+        let n = chunk.n();
+        let mut assign = vec![0u32; n];
+        let mut dist = vec![0.0f64; n];
+        assign_range(chunk, centers, 0..n, &mut assign, &mut dist);
+        let obj = dist.iter().sum();
         Ok((assign, obj))
+    }
+
+    /// Sample-partitioned parallel assignment: each worker owns a
+    /// contiguous column range and its matching output slices, so every
+    /// per-sample result is computed exactly once by the same kernel as
+    /// the serial path — bitwise identical for every worker count.
+    fn assign_into(
+        &self,
+        chunk: &SparseChunk,
+        centers: &Mat,
+        workers: usize,
+        out: &mut [u32],
+        dist: &mut [f64],
+    ) -> Result<()> {
+        let n = chunk.n();
+        debug_assert_eq!(out.len(), n);
+        debug_assert_eq!(dist.len(), n);
+        // below ~1k columns per worker the scoped-thread spawn overhead
+        // beats the gather work — fall back to fewer (or zero) forks;
+        // the result is bitwise identical either way
+        let eff_workers = workers.min(n / MIN_ASSIGN_COLS_PER_WORKER).max(1);
+        let ranges = parallel::split_ranges(n, eff_workers);
+        if ranges.len() <= 1 {
+            assign_range(chunk, centers, 0..n, out, dist);
+            return Ok(());
+        }
+        // carve the output buffers into per-range slices
+        let mut jobs: Vec<(Range<usize>, &mut [u32], &mut [f64])> =
+            Vec::with_capacity(ranges.len());
+        let (mut rest_out, mut rest_dist) = (out, dist);
+        for r in ranges {
+            let len = r.len();
+            let (o, ro) = std::mem::take(&mut rest_out).split_at_mut(len);
+            let (d, rd) = std::mem::take(&mut rest_dist).split_at_mut(len);
+            rest_out = ro;
+            rest_dist = rd;
+            jobs.push((r, o, d));
+        }
+        crossbeam_utils::thread::scope(|scope| {
+            let mut iter = jobs.into_iter();
+            let first = iter.next().expect("len > 1");
+            let handles: Vec<_> = iter
+                .map(|(r, o, d)| scope.spawn(move |_| assign_range(chunk, centers, r, o, d)))
+                .collect();
+            let (r, o, d) = first;
+            assign_range(chunk, centers, r, o, d);
+            for h in handles {
+                h.join().expect("assign worker panicked");
+            }
+        })
+        .expect("assign scope panicked");
+        Ok(())
     }
 }
 
 /// Accumulate one chunk's contribution to the masked center update
 /// (Eq. 39): `sums[j,k] += w_ij`, `counts[j,k] += 1` over kept entries of
-/// samples assigned to `k`.
+/// samples assigned to `k` — one fused pass over each column's indices.
 pub fn accumulate_center_update(
     chunk: &SparseChunk,
     assign: &[u32],
@@ -78,12 +185,69 @@ pub fn accumulate_center_update(
     for i in 0..chunk.n() {
         let c = assign[i] as usize;
         let scol = sums.col_mut(c);
+        let ccol = counts.col_mut(c);
         for (&j, &v) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
             scol[j as usize] += v;
-        }
-        let ccol = counts.col_mut(c);
-        for &j in chunk.col_indices(i) {
             ccol[j as usize] += 1.0;
+        }
+    }
+}
+
+/// Whole-pass center update over `chunks` (global chunk-ordered `assign`),
+/// fanned out over disjoint coordinate ranges. `sums`/`counts` must be
+/// zeroed on entry. Each worker owns rows `[lo, hi)` of both matrices and
+/// walks all samples in global order, locating its slice of each sorted
+/// index column by binary search — so every cell receives its
+/// contributions in exactly the serial order regardless of `workers`,
+/// making the result bitwise worker-count-invariant.
+fn accumulate_center_update_rows(
+    chunks: &[SparseChunk],
+    assign: &[u32],
+    sums: &mut Mat,
+    counts: &mut Mat,
+    workers: usize,
+) {
+    let p = sums.rows();
+    let k = sums.cols();
+    let ranges = parallel::split_ranges(p, workers);
+    if ranges.len() <= 1 {
+        let mut off = 0usize;
+        for chunk in chunks {
+            accumulate_center_update(chunk, &assign[off..off + chunk.n()], sums, counts);
+            off += chunk.n();
+        }
+        return;
+    }
+    let partials = parallel::run_ranges(ranges, |r| {
+        let rows = r.len();
+        let (lo, hi) = (r.start as u32, r.end as u32);
+        let mut s = vec![0.0f64; rows * k];
+        let mut cnt = vec![0.0f64; rows * k];
+        let mut off = 0usize;
+        for chunk in chunks {
+            for i in 0..chunk.n() {
+                let c = assign[off + i] as usize;
+                let idx = chunk.col_indices(i);
+                let vals = chunk.col_values(i);
+                let a_lo = idx.partition_point(|&j| j < lo);
+                let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
+                let scol = &mut s[c * rows..(c + 1) * rows];
+                let ccol = &mut cnt[c * rows..(c + 1) * rows];
+                for a in a_lo..a_hi {
+                    let j = (idx[a] - lo) as usize;
+                    scol[j] += vals[a];
+                    ccol[j] += 1.0;
+                }
+            }
+            off += chunk.n();
+        }
+        (r, s, cnt)
+    });
+    for (r, s, cnt) in partials {
+        let rows = r.len();
+        for c in 0..k {
+            sums.col_mut(c)[r.start..r.end].copy_from_slice(&s[c * rows..(c + 1) * rows]);
+            counts.col_mut(c)[r.start..r.end].copy_from_slice(&cnt[c * rows..(c + 1) * rows]);
         }
     }
 }
@@ -117,11 +281,21 @@ pub struct SparsifiedKmeans {
     pub sparsify: SparsifyConfig,
     pub k: usize,
     pub opts: KmeansOpts,
+    /// Fork/join width for assignment + center accumulation. `1` (the
+    /// default) runs the serial loops inline; any value yields bitwise
+    /// identical fits (see module docs).
+    pub workers: usize,
 }
 
 impl SparsifiedKmeans {
     pub fn new(sparsify: SparsifyConfig, k: usize, opts: KmeansOpts) -> Self {
-        SparsifiedKmeans { sparsify, k, opts }
+        SparsifiedKmeans { sparsify, k, opts, workers: 1 }
+    }
+
+    /// Builder-style worker-count override.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
     }
 
     /// Convenience: compress a dense matrix (single chunk) and fit.
@@ -162,32 +336,46 @@ impl SparsifiedKmeans {
             let mut rng = Pcg64::seed_stream(self.opts.seed, 0xC0DE ^ start as u64);
             let mut centers = kmeans_pp_sparse(chunks, self.k, &mut rng);
             let mut assign = vec![0u32; n];
+            let mut next = vec![0u32; n];
+            let mut dist = vec![0.0f64; n];
             let mut have_assign = false;
             let mut obj = f64::INFINITY;
             let mut iterations = 0;
             let mut converged = false;
             for it in 0..self.opts.max_iters {
-                // Step 1 (Eq. 36): assignments
-                let mut changed = 0usize;
-                let mut new_obj = 0.0;
-                let mut sums = Mat::zeros(p, self.k);
-                let mut counts = Mat::zeros(p, self.k);
+                // Step 1 (Eq. 36): assignments + per-sample distances
                 let mut off = 0usize;
                 for chunk in chunks {
-                    let (a, o) = assigner.assign(chunk, &centers)?;
-                    new_obj += o;
-                    for (i, &c) in a.iter().enumerate() {
-                        if !have_assign || assign[off + i] != c {
-                            changed += 1;
-                        }
-                        assign[off + i] = c;
-                    }
-                    // Step 2 (Eq. 39): accumulate masked sums/counts
-                    accumulate_center_update(chunk, &a, &mut sums, &mut counts);
-                    off += chunk.n();
+                    let cn = chunk.n();
+                    assigner.assign_into(
+                        chunk,
+                        &centers,
+                        self.workers,
+                        &mut next[off..off + cn],
+                        &mut dist[off..off + cn],
+                    )?;
+                    off += cn;
                 }
+                let changed = if have_assign {
+                    assign.iter().zip(&next).filter(|(a, b)| a != b).count()
+                } else {
+                    n
+                };
+                std::mem::swap(&mut assign, &mut next);
                 have_assign = true;
-                obj = new_obj;
+                // the objective is reduced in sample order, so it does
+                // not depend on chunking or worker count
+                obj = dist.iter().sum();
+                // Step 2 (Eq. 39): masked sums/counts, then center solve
+                let mut sums = Mat::zeros(p, self.k);
+                let mut counts = Mat::zeros(p, self.k);
+                accumulate_center_update_rows(
+                    chunks,
+                    &assign,
+                    &mut sums,
+                    &mut counts,
+                    self.workers,
+                );
                 centers = solve_centers(&sums, &counts, &centers);
                 iterations = it + 1;
                 if (changed as f64) <= self.opts.tol_frac * n as f64 {
@@ -291,6 +479,117 @@ mod tests {
             mono.result.centers.sub(&split.result.centers).max_abs() < 1e-9,
             "centers differ"
         );
+    }
+
+    #[test]
+    fn workers_do_not_change_the_fit() {
+        // the whole point of the output-partitioned parallel layer:
+        // workers ∈ {1, 2, 4} must produce identical assignments and
+        // bitwise-identical centers/objective
+        let mut rng = Pcg64::seed(91);
+        // 2500 samples: past MIN_ASSIGN_COLS_PER_WORKER so the assigner
+        // genuinely fans out
+        let d = gaussian_blobs(64, 2500, 3, 0.1, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 17 };
+        let sp = Sparsifier::new(64, cfg).unwrap();
+        let c0 = sp.compress_chunk(&d.data.col_range(0, 1100), 0).unwrap();
+        let c1 = sp.compress_chunk(&d.data.col_range(1100, 2500), 1100).unwrap();
+        let chunks = [c0, c1];
+        let opts = KmeansOpts { n_init: 2, ..Default::default() };
+        let base = SparsifiedKmeans::new(cfg, 3, opts)
+            .fit_chunks(&sp, &chunks, &NativeAssigner)
+            .unwrap();
+        assert_eq!(base.result.assign.len(), 2500);
+        for w in [2usize, 4] {
+            let par = SparsifiedKmeans::new(cfg, 3, opts)
+                .with_workers(w)
+                .fit_chunks(&sp, &chunks, &NativeAssigner)
+                .unwrap();
+            assert_eq!(base.result.assign, par.result.assign, "workers={w}");
+            assert_eq!(
+                base.result.objective.to_bits(),
+                par.result.objective.to_bits(),
+                "workers={w}"
+            );
+            assert_eq!(base.result.iterations, par.result.iterations);
+            for (a, b) in base
+                .centers_precond
+                .as_slice()
+                .iter()
+                .zip(par.centers_precond.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "precond centers, workers={w}");
+            }
+            for (a, b) in
+                base.result.centers.as_slice().iter().zip(par.result.centers.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "unmixed centers, workers={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_center_accumulation_matches_serial() {
+        // accumulate_center_update_rows at workers > 1 against the fused
+        // serial kernel, directly
+        let mut rng = Pcg64::seed(47);
+        let d = gaussian_blobs(96, 300, 4, 0.2, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.15, transform: TransformKind::Hadamard, seed: 5 };
+        let sp = Sparsifier::new(96, cfg).unwrap();
+        let c0 = sp.compress_chunk(&d.data.col_range(0, 130), 0).unwrap();
+        let c1 = sp.compress_chunk(&d.data.col_range(130, 300), 130).unwrap();
+        let chunks = [c0, c1];
+        let assign: Vec<u32> = (0..300).map(|i| (i % 4) as u32).collect();
+        let p = sp.p();
+        let mut s_ser = Mat::zeros(p, 4);
+        let mut c_ser = Mat::zeros(p, 4);
+        accumulate_center_update(&chunks[0], &assign[..130], &mut s_ser, &mut c_ser);
+        accumulate_center_update(&chunks[1], &assign[130..], &mut s_ser, &mut c_ser);
+        for w in [2usize, 3, 8] {
+            let mut s_par = Mat::zeros(p, 4);
+            let mut c_par = Mat::zeros(p, 4);
+            accumulate_center_update_rows(&chunks, &assign, &mut s_par, &mut c_par, w);
+            for (a, b) in s_ser.as_slice().iter().zip(s_par.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sums, workers={w}");
+            }
+            for (a, b) in c_ser.as_slice().iter().zip(c_par.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "counts, workers={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn assign_into_default_and_parallel_agree() {
+        // 4400 samples: enough for a real 4-way fan-out past the
+        // MIN_ASSIGN_COLS_PER_WORKER gate
+        let n = 4400usize;
+        let mut rng = Pcg64::seed(53);
+        let d = gaussian_blobs(32, n, 3, 0.2, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 9 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+        let mut rng2 = Pcg64::seed(54);
+        let centers = sp.precondition_dense(&kmeans_pp_sparse_seed(&chunk, 3, &mut rng2));
+        let (ids_ref, obj_ref) = NativeAssigner.assign(&chunk, &centers).unwrap();
+        for w in [1usize, 4] {
+            let mut ids = vec![0u32; n];
+            let mut dist = vec![0.0f64; n];
+            NativeAssigner.assign_into(&chunk, &centers, w, &mut ids, &mut dist).unwrap();
+            assert_eq!(ids, ids_ref, "workers={w}");
+            let obj: f64 = dist.iter().sum();
+            assert_eq!(obj.to_bits(), obj_ref.to_bits(), "workers={w}");
+        }
+    }
+
+    /// Dense seed helper for the assigner test (original-domain columns).
+    fn kmeans_pp_sparse_seed(chunk: &SparseChunk, k: usize, rng: &mut Pcg64) -> Mat {
+        let dense = chunk.to_dense();
+        let mut centers = Mat::zeros(dense.rows(), k);
+        for c in 0..k {
+            let pick = rng.next_range(dense.cols() as u32) as usize;
+            centers.col_mut(c).copy_from_slice(dense.col(pick));
+        }
+        centers
     }
 
     #[test]

@@ -31,6 +31,11 @@
 //! * [`coordinator`] — the L3 streaming orchestrator: chunked (optionally
 //!   out-of-core) ingestion, sparsifier worker pool with bounded-channel
 //!   backpressure, estimator accumulators and K-means drivers.
+//! * [`parallel`] — the fork/join execution layer under the hot paths:
+//!   scoped threads over contiguous index ranges with deterministic
+//!   in-order merge (K-means assignment/center accumulation and the
+//!   covariance scatter partition their *output* space, so results are
+//!   bitwise independent of the worker count).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas graphs
 //!   (`artifacts/*.hlo.txt` built by `make artifacts`); the
 //!   [`runtime::NativeEngine`] implements the same chunk ops in pure Rust
@@ -47,6 +52,7 @@ pub mod experiments;
 pub mod kmeans;
 pub mod linalg;
 pub mod metrics;
+pub mod parallel;
 pub mod pca;
 pub mod rng;
 pub mod runtime;

@@ -66,8 +66,8 @@ fn usage() {
          \n\
          usage:\n\
          \x20 pds xp <id|all|list> [--runs N] [--full] [--gammas a,b,c] ...\n\
-         \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G] [--engine native|xla]\n\
-         \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G]\n\
+         \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G] [--workers W] [--engine native|xla]\n\
+         \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G] [--workers W]\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
     );
@@ -148,7 +148,8 @@ fn cmd_pca(args: &Args) -> Result<()> {
     let d = pds::data::spiked(p, n, &[10.0, 8.0, 6.0, 4.0, 2.0], false, &mut rng);
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
     let mut src = MatSource::new(&d.data, 2048);
-    let (pca_report, report) = run_pca_stream(&mut src, scfg, topk, StreamConfig::default())?;
+    let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
+    let (pca_report, report) = run_pca_stream(&mut src, scfg, topk, stream)?;
     println!("streaming PCA: n={} gamma={gamma} passes={}", report.n, report.passes);
     println!("top-{topk} eigenvalues: {:?}", pca_report.pca.eigenvalues);
     let rec = pds::pca::recovered_components(&pca_report.pca.components, &d.centers, 0.95);

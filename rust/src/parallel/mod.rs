@@ -1,0 +1,255 @@
+//! Repo-wide fork/join execution layer for the L3 hot paths.
+//!
+//! The pattern everywhere is the same: split an index space `0..n` into
+//! contiguous ranges, run one worker per range on a scoped thread (the
+//! same `crossbeam_utils::thread::scope` discipline as
+//! `coordinator::pipeline`), and merge the per-range partials **in range
+//! order** on the calling thread. Contiguous ranges + ordered merge is
+//! what makes every consumer of this module bitwise deterministic: a
+//! result never depends on thread scheduling, only on the (fixed) range
+//! boundaries — and consumers that partition the *output* space (row or
+//! column ranges of an accumulator) are bitwise independent of the worker
+//! count too, because each output cell is touched by exactly one worker
+//! in the same element order as the serial loop.
+//!
+//! `workers <= 1` (or a single range) never spawns a thread: the work
+//! runs inline on the caller, so the serial path stays byte-identical to
+//! the pre-parallel code.
+
+use std::ops::Range;
+
+/// Split `0..n` into at most `workers` contiguous, non-empty, near-equal
+/// ranges covering `0..n` in order. Fewer ranges are returned when
+/// `n < workers`; `n == 0` yields no ranges.
+pub fn split_ranges(n: usize, workers: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = workers.max(1).min(n);
+    let base = n / w;
+    let rem = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0usize;
+    for t in 0..w {
+        let len = base + usize::from(t < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split `0..n` into at most `workers` contiguous ranges of near-equal
+/// *weight*, for index spaces with skewed per-index cost (e.g. the
+/// lower-triangle covariance scatter, where column `j` owns `p - j`
+/// output rows). Every range is non-empty and the union covers `0..n`.
+pub fn split_ranges_by_weight(
+    n: usize,
+    workers: usize,
+    weight: impl Fn(usize) -> f64,
+) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = workers.max(1).min(n);
+    if w == 1 {
+        return vec![0..n];
+    }
+    let total: f64 = (0..n).map(&weight).sum();
+    if !(total > 0.0) {
+        return split_ranges(n, workers);
+    }
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0usize;
+    let mut cum = 0.0;
+    for j in 0..n {
+        cum += weight(j);
+        let ranges_left_after_this = w - out.len() - 1;
+        let cut = total * (out.len() + 1) as f64 / w as f64;
+        if out.len() + 1 < w && cum >= cut && (n - (j + 1)) >= ranges_left_after_this {
+            out.push(start..j + 1);
+            start = j + 1;
+        }
+    }
+    out.push(start..n);
+    out
+}
+
+/// Run `work` over each range on scoped threads (first range inline on
+/// the caller), returning the per-range results **in range order** — the
+/// deterministic-merge contract. A single range runs entirely inline.
+pub fn run_ranges<T, F>(ranges: Vec<Range<usize>>, work: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(work).collect();
+    }
+    let work = &work;
+    crossbeam_utils::thread::scope(|scope| {
+        let (first, rest) = ranges.split_first().expect("len > 1");
+        let handles: Vec<_> = rest
+            .iter()
+            .map(|r| {
+                let r = r.clone();
+                scope.spawn(move |_| work(r))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(ranges.len());
+        out.push(work(first.clone()));
+        for h in handles {
+            out.push(h.join().expect("parallel worker panicked"));
+        }
+        out
+    })
+    .expect("parallel scope panicked")
+}
+
+/// Convenience: equal split of `0..n` over `workers`, then [`run_ranges`].
+pub fn map_ranges<T, F>(n: usize, workers: usize, work: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    run_ranges(split_ranges(n, workers), work)
+}
+
+/// Split a column-major `rows × cols` buffer into disjoint mutable column
+/// panels, one per range. `ranges` must be contiguous, in order, and
+/// cover `0..cols` (exactly what [`split_ranges`] /
+/// [`split_ranges_by_weight`] produce) — each panel `t` is the contiguous
+/// slice holding columns `ranges[t]`.
+pub fn split_col_panels<'a>(
+    data: &'a mut [f64],
+    rows: usize,
+    ranges: &[Range<usize>],
+) -> Vec<&'a mut [f64]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    let mut rest = data;
+    let mut consumed = 0usize;
+    for r in ranges {
+        debug_assert_eq!(r.start * rows, consumed, "ranges must be contiguous from 0");
+        let take = (r.end - r.start) * rows;
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        out.push(head);
+        rest = tail;
+        consumed += take;
+    }
+    debug_assert!(rest.is_empty(), "ranges must cover all columns");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_in_order_and_balances() {
+        for (n, w) in [(10, 3), (3, 10), (1, 1), (7, 7), (1000, 4)] {
+            let r = split_ranges(n, w);
+            assert!(r.len() <= w && r.len() <= n);
+            assert_eq!(r.first().unwrap().start, 0);
+            assert_eq!(r.last().unwrap().end, n);
+            for pair in r.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start);
+            }
+            let (min, max) = r
+                .iter()
+                .map(|x| x.len())
+                .fold((usize::MAX, 0), |(a, b), l| (a.min(l), b.max(l)));
+            assert!(max - min <= 1, "unbalanced: {r:?}");
+        }
+        assert!(split_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn weighted_split_equalizes_triangular_load() {
+        let n = 256;
+        let weight = |j: usize| (n - j) as f64;
+        let r = split_ranges_by_weight(n, 4, weight);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.first().unwrap().start, 0);
+        assert_eq!(r.last().unwrap().end, n);
+        let loads: Vec<f64> =
+            r.iter().map(|rr| rr.clone().map(weight).sum::<f64>()).collect();
+        let total: f64 = loads.iter().sum();
+        for l in &loads {
+            assert!(
+                (l - total / 4.0).abs() < total * 0.1,
+                "imbalanced weighted split: {loads:?}"
+            );
+        }
+        // equal-width split would put ~44% of the triangle in range 0
+        assert!(r[0].len() < n / 3, "first range should be narrow: {r:?}");
+    }
+
+    #[test]
+    fn map_ranges_is_ordered_and_complete() {
+        for workers in [1usize, 2, 3, 8] {
+            let parts = map_ranges(100, workers, |r| r.clone());
+            let flat: Vec<usize> = parts.into_iter().flatten().collect();
+            assert_eq!(flat, (0..100).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn map_ranges_sums_match_serial() {
+        let data: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let serial: f64 = data.iter().sum();
+        for workers in [1usize, 2, 4] {
+            let partials = map_ranges(data.len(), workers, |r| data[r].iter().sum::<f64>());
+            let merged: f64 = partials.iter().sum();
+            assert!((merged - serial).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn col_panels_are_disjoint_views() {
+        let rows = 3;
+        let mut data = vec![0.0f64; rows * 8];
+        let ranges = split_ranges(8, 3);
+        let panels = split_col_panels(&mut data, rows, &ranges);
+        assert_eq!(panels.len(), 3);
+        let total: usize = panels.iter().map(|p| p.len()).sum();
+        assert_eq!(total, rows * 8);
+        for (t, p) in panels.into_iter().enumerate() {
+            for v in p.iter_mut() {
+                *v = t as f64;
+            }
+        }
+        // column j belongs to the range containing j
+        for (t, r) in ranges.iter().enumerate() {
+            for j in r.clone() {
+                for i in 0..rows {
+                    assert_eq!(data[j * rows + i], t as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_writes_land_in_own_panel() {
+        let rows = 4;
+        let cols = 64;
+        let mut data = vec![0.0f64; rows * cols];
+        let ranges = split_ranges(cols, 4);
+        let panels = split_col_panels(&mut data, rows, &ranges);
+        let jobs: Vec<_> = ranges.iter().cloned().zip(panels).collect();
+        crossbeam_utils::thread::scope(|scope| {
+            for (r, panel) in jobs {
+                scope.spawn(move |_| {
+                    for (local, j) in r.enumerate() {
+                        for i in 0..rows {
+                            panel[local * rows + i] = (j * rows + i) as f64;
+                        }
+                    }
+                });
+            }
+        })
+        .unwrap();
+        for (pos, v) in data.iter().enumerate() {
+            assert_eq!(*v, pos as f64);
+        }
+    }
+}

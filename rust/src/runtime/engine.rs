@@ -34,6 +34,17 @@ impl SparseAssigner for NativeEngine {
         NativeAssigner.assign(chunk, centers)
     }
 
+    fn assign_into(
+        &self,
+        chunk: &SparseChunk,
+        centers: &Mat,
+        workers: usize,
+        out: &mut [u32],
+        dist: &mut [f64],
+    ) -> Result<()> {
+        NativeAssigner.assign_into(chunk, centers, workers, out, dist)
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -186,12 +197,20 @@ impl XlaEngine {
     }
 }
 
-impl SparseAssigner for XlaEngine {
-    /// Assignment via the AOT Pallas `assign` graph. The chunk is densified
-    /// to (w, mask) panels, processed in artifact-width sub-batches with
-    /// zero padding (zero-mask columns are distance-0 everywhere and their
-    /// outputs are discarded).
-    fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
+impl XlaEngine {
+    /// Shared body of [`SparseAssigner::assign`] /
+    /// [`SparseAssigner::assign_into`]: the chunk is densified to
+    /// (w, mask) panels, processed in artifact-width sub-batches with
+    /// zero padding (zero-mask columns are distance-0 everywhere and
+    /// their outputs are discarded). Ids land in `out`, per-sample best
+    /// distances in `dist_out`.
+    fn assign_impl(
+        &self,
+        chunk: &SparseChunk,
+        centers: &Mat,
+        out: &mut [u32],
+        dist_out: &mut [f64],
+    ) -> Result<()> {
         let p = chunk.p();
         let k = centers.cols();
         let b = self.batch_for("assign", p, k)?;
@@ -204,8 +223,8 @@ impl SparseAssigner for XlaEngine {
             }
         }
         let n = chunk.n();
-        let mut assign = Vec::with_capacity(n);
-        let mut obj = 0.0f64;
+        debug_assert_eq!(out.len(), n);
+        debug_assert_eq!(dist_out.len(), n);
         let mut w_batch = vec![0.0f32; p * b];
         let mut mask_batch = vec![0.0f32; p * b];
         let mut start = 0usize;
@@ -224,12 +243,36 @@ impl SparseAssigner for XlaEngine {
             let (dist, a) = self.assign_batch(&w_batch, &mask_batch, &mu_rm, p, b, k)?;
             for j in 0..cols {
                 let c = a[j];
-                assign.push(c as u32);
-                obj += dist[j * k + c as usize] as f64;
+                out[start + j] = c as u32;
+                dist_out[start + j] = dist[j * k + c as usize] as f64;
             }
             start += cols;
         }
-        Ok((assign, obj))
+        Ok(())
+    }
+}
+
+impl SparseAssigner for XlaEngine {
+    /// Assignment via the AOT Pallas `assign` graph.
+    fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
+        let mut out = vec![0u32; chunk.n()];
+        let mut dist = vec![0.0f64; chunk.n()];
+        self.assign_impl(chunk, centers, &mut out, &mut dist)?;
+        let obj = dist.iter().sum();
+        Ok((out, obj))
+    }
+
+    /// The PJRT executable is already data-parallel internally; the
+    /// `workers` hint is ignored.
+    fn assign_into(
+        &self,
+        chunk: &SparseChunk,
+        centers: &Mat,
+        _workers: usize,
+        out: &mut [u32],
+        dist: &mut [f64],
+    ) -> Result<()> {
+        self.assign_impl(chunk, centers, out, dist)
     }
 
     fn name(&self) -> &'static str {

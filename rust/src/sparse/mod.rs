@@ -108,6 +108,45 @@ impl SparseChunk {
         self.indices.len() * 4 + self.values.len() * 8
     }
 
+    /// Concatenate stream-contiguous chunks (same `p`/`m`, each chunk
+    /// starting where the previous one ends) into one chunk. The fixed
+    /// stride makes this a pair of buffer copies. Used by the drivers to
+    /// coalesce small streaming chunks before a fit, so the parallel
+    /// assignment fans out over usefully large column ranges instead of
+    /// paying a fork/join per tiny chunk.
+    pub fn concat(chunks: &[SparseChunk]) -> Result<SparseChunk> {
+        let first = match chunks.first() {
+            Some(c) => c,
+            None => return shape_err("SparseChunk::concat: no chunks"),
+        };
+        let (p, m, start_col) = (first.p, first.m, first.start_col);
+        let mut expected = start_col;
+        let mut n = 0usize;
+        for c in chunks {
+            if c.p != p || c.m != m {
+                return shape_err(format!(
+                    "SparseChunk::concat: mixed shapes ({}x{} vs {p}x{m})",
+                    c.p, c.m
+                ));
+            }
+            if c.start_col != expected {
+                return shape_err(format!(
+                    "SparseChunk::concat: chunk at {} not contiguous (expected {expected})",
+                    c.start_col
+                ));
+            }
+            expected += c.n;
+            n += c.n;
+        }
+        let mut indices = Vec::with_capacity(m * n);
+        let mut values = Vec::with_capacity(m * n);
+        for c in chunks {
+            indices.extend_from_slice(&c.indices);
+            values.extend_from_slice(&c.values);
+        }
+        Ok(SparseChunk { p, m, n, indices, values, start_col })
+    }
+
     /// Densify into a `p×n` matrix (zeros at unsampled coordinates):
     /// the `w_i = R_i R_iᵀ y_i` representation.
     pub fn to_dense(&self) -> Mat {
@@ -224,5 +263,26 @@ mod tests {
     #[test]
     fn from_raw_shape_check() {
         assert!(SparseChunk::from_raw(5, 2, 3, vec![0; 5], vec![0.0; 6], 0).is_err());
+    }
+
+    #[test]
+    fn concat_joins_contiguous_chunks() {
+        let a = SparseChunk::from_raw(5, 2, 2, vec![0, 3, 1, 4], vec![1.0, 2.0, 3.0, 4.0], 7)
+            .unwrap();
+        let b = SparseChunk::from_raw(5, 2, 1, vec![2, 3], vec![5.0, 6.0], 9).unwrap();
+        let joined = SparseChunk::concat(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(joined.n(), 3);
+        assert_eq!(joined.start_col(), 7);
+        assert_eq!(joined.col_indices(0), a.col_indices(0));
+        assert_eq!(joined.col_values(1), a.col_values(1));
+        assert_eq!(joined.col_indices(2), b.col_indices(0));
+        assert_eq!(joined.col_values(2), b.col_values(0));
+        joined.validate().unwrap();
+        // gaps and shape mismatches are rejected
+        let gap = SparseChunk::from_raw(5, 2, 1, vec![0, 1], vec![0.0, 0.0], 11).unwrap();
+        assert!(SparseChunk::concat(&[a.clone(), gap]).is_err());
+        let other_m = SparseChunk::from_raw(5, 3, 1, vec![0, 1, 2], vec![0.0; 3], 9).unwrap();
+        assert!(SparseChunk::concat(&[a, other_m]).is_err());
+        assert!(SparseChunk::concat(&[]).is_err());
     }
 }

@@ -1,6 +1,19 @@
 //! In-place fast Walsh–Hadamard transform, normalized (orthonormal), in
 //! Sylvester ordering — bit-for-bit the same transform as the Pallas
 //! kernel `python/compile/kernels/fwht.py` and the `ref.fwht_ref` oracle.
+//!
+//! Perf (§Perf log in `rust/EXPERIMENTS.md`): the transform is
+//! cache-blocked. The textbook strided loop sweeps the full vector once
+//! per stage (`log2 p` sweeps), which is memory-bound once `p` doubles
+//! out of L1 (`p ≥ 4096` at 8 bytes/entry). Here all stages with stride
+//! `< FWHT_BLOCK` run to completion inside one L1-resident block before
+//! the next block is touched, and the remaining cross-block stages are
+//! fused in pairs (radix-4), so a size-`p` transform makes
+//! `1 + ⌈log2(p/FWHT_BLOCK)/2⌉` passes over memory instead of `log2 p`.
+//! Every butterfly keeps the operand order and rounding of the textbook
+//! stage loop, so the output is **bitwise identical** to it (asserted in
+//! `bitwise_matches_textbook_reference`) — blocking only reorders
+//! butterflies that touch disjoint data.
 
 /// `true` iff `n` is a positive power of two.
 #[inline]
@@ -8,30 +21,18 @@ pub fn is_pow2(n: usize) -> bool {
     n > 0 && n & (n - 1) == 0
 }
 
-/// Normalized in-place FWHT over `x` (length must be a power of two).
-/// Involutive: applying twice restores the input. O(p log p).
-///
-/// Perf (§Perf log): the first two stages (h=1, h=2) are fused into one
-/// pass over radix-4 blocks (halves the memory sweeps of the small-stride
-/// stages), and the `1/sqrt(p)` normalization is folded into the final
-/// stage instead of a separate pass.
-pub fn fwht_inplace(x: &mut [f64]) {
-    let p = x.len();
-    debug_assert!(is_pow2(p), "fwht requires power-of-two length");
-    let scale = 1.0 / (p as f64).sqrt();
-    if p == 1 {
-        x[0] *= scale;
-        return;
-    }
-    if p == 2 {
-        let (a, b) = (x[0], x[1]);
-        x[0] = (a + b) * scale;
-        x[1] = (a - b) * scale;
-        return;
-    }
-    // fused radix-4 first pass (stages h=1 and h=2)
+/// Intra-block transform size: 1024 f64 = 8 KB, half a typical 32 KB L1d,
+/// leaving room for the outer loop's other streams.
+const FWHT_BLOCK: usize = 1024;
+
+/// Fused radix-4 first pass: stages h=1 and h=2 in one sweep over
+/// 4-aligned quads (`x.len() % 4 == 0`). Bitwise identical to running the
+/// two radix-2 stages back to back.
+#[inline]
+fn radix4_first_pass(x: &mut [f64]) {
+    debug_assert_eq!(x.len() % 4, 0);
     let mut i = 0;
-    while i < p {
+    while i < x.len() {
         let (a, b, c, d) = (x[i], x[i + 1], x[i + 2], x[i + 3]);
         let (ab, amb) = (a + b, a - b);
         let (cd, cmd) = (c + d, c - d);
@@ -41,29 +42,109 @@ pub fn fwht_inplace(x: &mut [f64]) {
         x[i + 3] = amb - cmd;
         i += 4;
     }
-    // remaining stages; fold the normalization into the last one
-    let mut h = 4;
-    while h < p {
-        let step = 2 * h;
-        let last = step == p;
-        let s = if last { scale } else { 1.0 };
-        let mut base = 0;
-        while base < p {
-            for i in base..base + h {
-                let a = x[i];
-                let b = x[i + h];
-                x[i] = (a + b) * s;
-                x[i + h] = (a - b) * s;
-            }
-            base += step;
+}
+
+/// One radix-2 stage at stride `h`, outputs scaled by `s`.
+#[inline]
+fn stage_radix2(x: &mut [f64], h: usize, s: f64) {
+    let step = 2 * h;
+    let mut base = 0;
+    while base < x.len() {
+        for i in base..base + h {
+            let a = x[i];
+            let b = x[i + h];
+            x[i] = (a + b) * s;
+            x[i + h] = (a - b) * s;
         }
-        h = step;
+        base += step;
     }
-    if h == 4 && p == 4 {
-        // p == 4: radix-4 pass was the whole transform; normalize now
-        for v in x.iter_mut() {
-            *v *= scale;
+}
+
+/// Two fused radix-2 stages (strides `h` and `2h`) in one sweep, outputs
+/// of the second stage scaled by `s`. The intermediate sums/differences
+/// are formed exactly as the two separate stages would form them, so the
+/// fusion is bitwise identical — it just halves the memory traffic.
+#[inline]
+fn stage_radix4(x: &mut [f64], h: usize, s: f64) {
+    let step = 4 * h;
+    let mut base = 0;
+    while base < x.len() {
+        for i in base..base + h {
+            let (x0, x1) = (x[i], x[i + h]);
+            let (x2, x3) = (x[i + 2 * h], x[i + 3 * h]);
+            // stage h
+            let (a, b) = (x0 + x1, x0 - x1);
+            let (c, d) = (x2 + x3, x2 - x3);
+            // stage 2h
+            x[i] = (a + c) * s;
+            x[i + h] = (b + d) * s;
+            x[i + 2 * h] = (a - c) * s;
+            x[i + 3 * h] = (b - d) * s;
         }
+        base += step;
+    }
+}
+
+/// Run stages `from_h, 2·from_h, …, len/2` over all of `x`, pair-fused,
+/// folding `scale` into the final stage. Requires `from_h < x.len()`,
+/// both powers of two.
+fn fwht_stages(x: &mut [f64], from_h: usize, scale: f64) {
+    let p = x.len();
+    debug_assert!(from_h < p);
+    let mut h = from_h;
+    // stages are executed in ascending stride order; with an odd count,
+    // peel the first as radix-2 so the rest pair up
+    let stages = (p / h).trailing_zeros();
+    if stages % 2 == 1 {
+        stage_radix2(x, h, if 2 * h == p { scale } else { 1.0 });
+        h *= 2;
+    }
+    while h < p {
+        debug_assert!(4 * h <= p);
+        stage_radix4(x, h, if 4 * h == p { scale } else { 1.0 });
+        h *= 4;
+    }
+}
+
+/// Normalized in-place FWHT over `x` (length must be a power of two).
+/// Involutive: applying twice restores the input. O(p log p), with the
+/// cache-blocked schedule described in the module docs for large `p`.
+pub fn fwht_inplace(x: &mut [f64]) {
+    let p = x.len();
+    debug_assert!(is_pow2(p), "fwht requires power-of-two length");
+    let scale = 1.0 / (p as f64).sqrt();
+    match p {
+        1 => {
+            x[0] *= scale;
+            return;
+        }
+        2 => {
+            let (a, b) = (x[0], x[1]);
+            x[0] = (a + b) * scale;
+            x[1] = (a - b) * scale;
+            return;
+        }
+        4 => {
+            radix4_first_pass(x);
+            for v in x.iter_mut() {
+                *v *= scale;
+            }
+            return;
+        }
+        _ => {}
+    }
+    if p <= FWHT_BLOCK {
+        radix4_first_pass(x);
+        fwht_stages(x, 4, scale);
+    } else {
+        // stages with stride < FWHT_BLOCK stay inside one L1-resident
+        // block; finish them block by block before any cross-block stage
+        for blk in x.chunks_exact_mut(FWHT_BLOCK) {
+            radix4_first_pass(blk);
+            fwht_stages(blk, 4, 1.0);
+        }
+        // remaining cross-block stages (stride >= FWHT_BLOCK)
+        fwht_stages(x, FWHT_BLOCK, scale);
     }
 }
 
@@ -71,6 +152,31 @@ pub fn fwht_inplace(x: &mut [f64]) {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+
+    /// The pre-blocking textbook implementation: one radix-2 sweep per
+    /// stage, then a normalize pass. The blocked transform must match it
+    /// bit for bit.
+    fn fwht_textbook(x: &mut [f64]) {
+        let p = x.len();
+        let mut h = 1;
+        while h < p {
+            let mut base = 0;
+            while base < p {
+                for i in base..base + h {
+                    let a = x[i];
+                    let b = x[i + h];
+                    x[i] = a + b;
+                    x[i + h] = a - b;
+                }
+                base += 2 * h;
+            }
+            h *= 2;
+        }
+        let s = 1.0 / (p as f64).sqrt();
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
 
     /// Explicit orthonormal Hadamard matrix (test oracle).
     fn hadamard(p: usize) -> Vec<Vec<f64>> {
@@ -97,6 +203,17 @@ mod tests {
         h
     }
 
+    /// Entry (i, j) of the unnormalized Sylvester Hadamard matrix:
+    /// `(-1)^popcount(i & j)` — the explicit-matrix oracle at sizes where
+    /// materializing `hadamard(p)` is too large.
+    fn hadamard_sign(i: usize, j: usize) -> f64 {
+        if (i & j).count_ones() % 2 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
     #[test]
     fn matches_explicit_matrix() {
         for p in [2usize, 4, 8, 32, 128] {
@@ -114,14 +231,64 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_explicit_matrix_large() {
+        // the blocked schedule only engages for p > FWHT_BLOCK; pin it
+        // against the explicit Sylvester matrix at p = 2^10 (every row)
+        // and p = 2^14 (a stratified row subset — the full 2^14 × 2^14
+        // matrix would be 2 GiB).
+        for (p, rows_checked) in [(1usize << 10, 1usize << 10), (1 << 14, 128)] {
+            let mut rng = Pcg64::seed(p as u64 ^ 0xB10C);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            let scale = 1.0 / (p as f64).sqrt();
+            let stride = p / rows_checked;
+            for r in 0..rows_checked {
+                let i = r * stride + (r % stride.max(1));
+                let want: f64 =
+                    (0..p).map(|j| hadamard_sign(i, j) * x[j]).sum::<f64>() * scale;
+                assert!(
+                    (got[i] - want).abs() < 1e-8,
+                    "p={p} row {i}: got {} want {want}",
+                    got[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_matches_textbook_reference() {
+        // blocking and stage fusion only reorder butterflies on disjoint
+        // data — outputs must be identical to the last bit, both below
+        // and above FWHT_BLOCK
+        for p in [8usize, 16, 64, 256, 512, 1024, 2048, 4096, 1 << 14] {
+            let mut rng = Pcg64::seed(p as u64 ^ 0xFACE);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let mut blocked = x.clone();
+            fwht_inplace(&mut blocked);
+            let mut textbook = x;
+            fwht_textbook(&mut textbook);
+            for (i, (a, b)) in blocked.iter().zip(&textbook).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "p={p} index {i}: blocked {a:e} != textbook {b:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn involutive() {
-        let mut rng = Pcg64::seed(2);
-        let x: Vec<f64> = (0..512).map(|_| rng.normal()).collect();
-        let mut y = x.clone();
-        fwht_inplace(&mut y);
-        fwht_inplace(&mut y);
-        for (a, b) in x.iter().zip(&y) {
-            assert!((a - b).abs() < 1e-10);
+        for p in [512usize, 4096] {
+            let mut rng = Pcg64::seed(2);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let mut y = x.clone();
+            fwht_inplace(&mut y);
+            fwht_inplace(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-10);
+            }
         }
     }
 

@@ -1,0 +1,98 @@
+//! Offline stand-in for the `crossbeam-utils` crate.
+//!
+//! This container builds with no network access, so the real
+//! `crossbeam-utils` cannot be fetched from crates.io. The workspace only
+//! uses `crossbeam_utils::thread::scope`, which since Rust 1.63 is
+//! expressible directly over [`std::thread::scope`]; this crate provides
+//! that one API with crossbeam's error-reporting convention (a panicking
+//! child thread surfaces as an `Err` from `scope` instead of a panic on
+//! the caller's thread).
+//!
+//! Deliberate divergence from the real crate: the closure passed to
+//! [`thread::Scope::spawn`] receives a `&()` placeholder instead of a
+//! nested `&Scope` (no spawning from inside a spawned thread). Every call
+//! site in this repository ignores the argument (`|_| ...`), and keeping
+//! the placeholder avoids exposing std's second scope lifetime through
+//! the shim.
+
+pub mod thread {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    /// Fork/join scope handed to the `scope` closure. Wraps
+    /// [`std::thread::Scope`].
+    pub struct Scope<'scope, 'env: 'scope> {
+        inner: &'scope std::thread::Scope<'scope, 'env>,
+    }
+
+    /// Join handle for a thread spawned in a [`Scope`].
+    pub struct ScopedJoinHandle<'scope, T> {
+        inner: std::thread::ScopedJoinHandle<'scope, T>,
+    }
+
+    impl<'scope, T> ScopedJoinHandle<'scope, T> {
+        /// Wait for the thread to finish; `Err` carries its panic payload.
+        pub fn join(self) -> std::thread::Result<T> {
+            self.inner.join()
+        }
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        /// Spawn a scoped thread. The closure's `&()` argument stands in
+        /// for crossbeam's nested `&Scope` (see crate docs).
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce(&()) -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            ScopedJoinHandle { inner: self.inner.spawn(move || f(&())) }
+        }
+    }
+
+    /// Create a fork/join scope; all spawned threads are joined before
+    /// this returns. A panic in an unjoined child (or in the closure
+    /// itself) is captured and returned as `Err`.
+    pub fn scope<'env, F, R>(f: F) -> std::thread::Result<R>
+    where
+        F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> R,
+    {
+        catch_unwind(AssertUnwindSafe(|| {
+            std::thread::scope(|s| f(&Scope { inner: s }))
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::thread;
+
+    #[test]
+    fn scope_joins_and_returns() {
+        let data = vec![1u64, 2, 3, 4];
+        let total = thread::scope(|s| {
+            let (a, b) = data.split_at(2);
+            let ha = s.spawn(|_| a.iter().sum::<u64>());
+            let hb = s.spawn(|_| b.iter().sum::<u64>());
+            ha.join().unwrap() + hb.join().unwrap()
+        })
+        .unwrap();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn child_panic_is_err_not_abort() {
+        let r = thread::scope(|s| {
+            let h = s.spawn(|_| -> u32 { panic!("boom") });
+            h.join().is_err()
+        });
+        // the panic was already consumed via join(); scope itself is Ok
+        assert_eq!(r.unwrap(), true);
+    }
+
+    #[test]
+    fn unjoined_child_panic_surfaces_as_scope_err() {
+        let r: std::thread::Result<()> = thread::scope(|s| {
+            s.spawn(|_| panic!("unjoined"));
+        });
+        assert!(r.is_err());
+    }
+}

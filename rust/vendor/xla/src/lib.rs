@@ -1,0 +1,155 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links libpjrt and cannot be fetched or built in this
+//! offline container. This stub keeps the exact API surface that
+//! `pds::runtime::XlaEngine` compiles against, but every entry point that
+//! would touch the PJRT runtime returns [`Error`]; `PjRtClient::cpu()`
+//! fails first, so the engine reports itself unavailable at construction
+//! and the pure-Rust `NativeEngine` remains the execution path.
+//! Restoring real PJRT execution is a matter of swapping this path
+//! dependency back to the upstream crate — no `pds` source changes.
+
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`'s role (stringly, `Display`-able).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime unavailable: this build uses the offline `xla` stub \
+         (vendor/xla); use the native engine instead"
+            .to_string(),
+    ))
+}
+
+/// Element types extractable from a [`Literal`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Host-side tensor value.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data_f32: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data_f32: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count != self.data_f32.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data_f32.len()
+            )));
+        }
+        Ok(Literal { data_f32: self.data_f32.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract the buffer as a flat vector. Stub literals only ever hold
+    /// host-constructed f32 inputs, never device outputs, so this is
+    /// unreachable in practice and reports unavailability.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from a real file).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-side buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle. `cpu()` always fails in the stub, which is the
+/// single gate that keeps the rest of this API unreachable at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(msg.contains("stub"), "{msg}");
+    }
+
+    #[test]
+    fn literal_roundtrip_shapes() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert!(l.reshape(&[4, 4]).is_err());
+    }
+}
