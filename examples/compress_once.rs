@@ -1,0 +1,109 @@
+//! Compress once, analyze many: the persistent sparse store workflow.
+//!
+//! The expensive part of the paper's pipeline — one pass over the raw
+//! data through the ROS + sampling operator — is paid exactly once here
+//! and its output is persisted as a sharded sparse store
+//! (`docs/FORMAT.md`). Every later analysis (K-means, PCA, re-runs with
+//! different k, ...) streams the compressed shards from disk and never
+//! touches the raw data again: zero raw passes, and results bit-identical
+//! to the in-memory streaming pipeline.
+//!
+//! Run: `cargo run --release --example compress_once [n]`
+
+use std::time::Instant;
+
+use pds::coordinator::{
+    run_compress_to_store, run_pca_from_store, run_sparsified_kmeans_from_store,
+    run_sparsified_kmeans_stream, MatSource, StreamConfig,
+};
+use pds::data::gaussian_blobs;
+use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::metrics::clustering_accuracy;
+use pds::rng::Pcg64;
+use pds::sampling::SparsifyConfig;
+use pds::store::SparseStoreReader;
+use pds::transform::TransformKind;
+
+fn main() -> pds::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let (p, k, gamma) = (256usize, 4usize, 0.1);
+    let dir = std::env::temp_dir().join(format!("pds_compress_once_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut rng = Pcg64::seed(12);
+    let d = gaussian_blobs(p, n, k, 0.08, &mut rng);
+    let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 5 };
+    let stream = StreamConfig { workers: 2, queue_depth: 4, chunk_cols: 2048 };
+
+    // ---- compress ONCE: one pass over the raw data ---------------------
+    let t0 = Instant::now();
+    let mut src = MatSource::new(&d.data, 2048);
+    let (manifest, creport) =
+        run_compress_to_store(&mut src, scfg, &dir, 4096, stream, true)?;
+    println!(
+        "compressed {} samples into {} shards in {:.2}s ({:.1} MB sparse vs {:.1} MB dense, \
+         {} raw pass)",
+        manifest.n,
+        manifest.shards.len(),
+        t0.elapsed().as_secs_f64(),
+        manifest.payload_bytes() as f64 / (1024.0 * 1024.0),
+        (n * p * 8) as f64 / (1024.0 * 1024.0),
+        creport.passes
+    );
+
+    // ---- analyze MANY: every fit below reads only the store ------------
+    let opts = KmeansOpts { n_init: 3, ..Default::default() };
+    let mut store = SparseStoreReader::open(&dir)?;
+    let t1 = Instant::now();
+    let (model, kreport) =
+        run_sparsified_kmeans_from_store(&mut store, k, opts, &NativeAssigner, 2)?;
+    let acc = clustering_accuracy(&model.result.assign, &d.labels, k);
+    println!(
+        "K-means from store:  accuracy {acc:.4}, {} iterations, {:.2}s, raw passes: {}",
+        model.result.iterations,
+        t1.elapsed().as_secs_f64(),
+        kreport.passes
+    );
+
+    store.rewind();
+    let t2 = Instant::now();
+    let (pca, preport) = run_pca_from_store(&mut store, 5, 2)?;
+    println!(
+        "PCA from store:      top eigenvalue {:.3}, {:.2}s, raw passes: {}",
+        pca.pca.eigenvalues[0],
+        t2.elapsed().as_secs_f64(),
+        preport.passes
+    );
+
+    // ---- the store fit is bit-identical to the streaming pipeline ------
+    let mut src2 = MatSource::new(&d.data, 2048);
+    let (direct, _) = run_sparsified_kmeans_stream(
+        &mut src2,
+        scfg,
+        k,
+        opts,
+        &NativeAssigner,
+        stream,
+        true,
+    )?;
+    assert_eq!(model.result.assign, direct.result.assign, "assignments diverged");
+    assert_eq!(
+        model.result.objective.to_bits(),
+        direct.result.objective.to_bits(),
+        "objective diverged"
+    );
+    for (a, b) in model
+        .result
+        .centers
+        .as_slice()
+        .iter()
+        .zip(direct.result.centers.as_slice())
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "centers diverged");
+    }
+    println!("store fit is bit-identical to the streaming fit ✓");
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("compress_once OK");
+    Ok(())
+}

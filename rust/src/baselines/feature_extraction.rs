@@ -18,6 +18,7 @@ pub struct FeatureExtraction {
 }
 
 impl FeatureExtraction {
+    /// Draw the `m×p` sign projection.
     pub fn new(p: usize, m: usize, rng: &mut Pcg64) -> Self {
         let scale = 1.0 / (m as f64).sqrt();
         let omega =
@@ -25,6 +26,7 @@ impl FeatureExtraction {
         FeatureExtraction { omega }
     }
 
+    /// Compressed dimension.
     pub fn m(&self) -> usize {
         self.omega.rows()
     }

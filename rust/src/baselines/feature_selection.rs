@@ -36,6 +36,7 @@ impl FeatureSelection {
         FeatureSelection { rows, scales }
     }
 
+    /// Number of sampled rows.
     pub fn m(&self) -> usize {
         self.rows.len()
     }

@@ -9,14 +9,20 @@ use std::time::Instant;
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// Median absolute deviation of the timings.
     pub mad_s: f64,
+    /// Fastest iteration.
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// One grep-friendly report line.
     pub fn report(&self) -> String {
         format!(
             "bench {:<44} iters {:>3}  median {:>12}  mad {:>10}  min {:>12}",

@@ -41,10 +41,12 @@ impl Args {
         Ok(out)
     }
 
+    /// Was bare `--name` passed?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--name value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }

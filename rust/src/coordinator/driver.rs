@@ -1,8 +1,22 @@
 //! High-level drivers: end-to-end runs combining the compress pipeline
 //! with the estimators / K-means, with pass accounting and the timing
 //! breakdowns of Tables III–V.
+//!
+//! Two families:
+//!
+//! * **Streaming** (`run_*_stream`) — compress the raw stream and fit in
+//!   one go; the compressed data is transient.
+//! * **Store-backed** — [`run_compress_to_store`] pays the compression
+//!   pass once and persists the sparse form; [`run_pca_from_store`] /
+//!   [`run_sparsified_kmeans_from_store`] then fit from disk with **zero
+//!   raw-data passes** (`PipelineReport::passes` = 0) and are bit-exact
+//!   matches of the streaming path on the same data.
 
-use crate::error::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{invalid, Result};
 use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
 use crate::kmeans::{
     assign_dense, KmeansOpts, KmeansResult, SparseAssigner, SparsifiedKmeans, SparsifiedModel,
@@ -12,8 +26,9 @@ use crate::metrics::Timer;
 use crate::pca::Pca;
 use crate::sampling::{Sparsifier, SparsifyConfig};
 use crate::sparse::SparseChunk;
+use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
 
-use super::{compress_stream, ChunkSource, StreamConfig};
+use super::{compress_stream, ChunkSource, SparseChunkSource, StreamConfig};
 
 /// Accounting for one driver run — the raw material of Tables III/IV.
 #[derive(Debug)]
@@ -203,12 +218,33 @@ pub fn run_pca_stream(
     // the covariance scatter is the PCA hot path; give it the same pool
     // width as the compress stage (bitwise invariant to the worker count)
     let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(stream.workers);
+    // Racing workers deliver chunks out of stream order; f64 accumulation
+    // is order-sensitive, so reorder through a pending map (bounded by
+    // the pipeline's in-flight cap) and fold in global column order —
+    // this is what makes the estimates bitwise invariant to the worker
+    // count, the same discipline as the store writer.
+    let mut pending: BTreeMap<usize, SparseChunk> = BTreeMap::new();
+    let mut next_col = 0usize;
     let mut fold = |c: SparseChunk| -> Result<()> {
-        mean_est.accumulate(&c);
-        cov_est.accumulate(&c);
+        pending.insert(c.start_col(), c);
+        loop {
+            let first = match pending.keys().next() {
+                Some(&k) if k == next_col => k,
+                _ => break,
+            };
+            let chunk = pending.remove(&first).expect("key just observed");
+            next_col += chunk.n();
+            mean_est.accumulate(&chunk);
+            cov_est.accumulate(&chunk);
+        }
         Ok(())
     };
     let n = compress_stream(source, &sp, stream, true, &mut fold, &mut timer)?;
+    if !pending.is_empty() || next_col != n {
+        return invalid(format!(
+            "pca stream: non-contiguous chunk stream (folded {next_col} of {n} columns)"
+        ));
+    }
     let covariance = cov_est.estimate();
     let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, scfg.seed));
     // unmix components and mean to the original domain
@@ -224,6 +260,181 @@ pub fn run_pca_stream(
         },
         report,
     ))
+}
+
+/// Compress a raw stream **once** into an on-disk sparse store at `dir`
+/// (the "compress once" half of compress-once/analyze-many). The store's
+/// bytes depend only on the global column order, so they are identical
+/// for every `stream.workers` setting. Counts as one pass over the raw
+/// data.
+pub fn run_compress_to_store(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    dir: &Path,
+    shard_cols: usize,
+    stream: StreamConfig,
+    precondition: bool,
+) -> Result<(StoreManifest, PipelineReport)> {
+    let sp = Sparsifier::new(source.p(), scfg)?;
+    let mut timer = Timer::new();
+    let mut writer = SparseStoreWriter::create(dir, &sp, scfg, precondition, shard_cols)?;
+    let mut sink = |c: SparseChunk| writer.append(c);
+    let n = compress_stream(source, &sp, stream, precondition, &mut sink, &mut timer)?;
+    let manifest = timer.time("store", || writer.finish())?;
+    Ok((
+        manifest,
+        PipelineReport { timer, n, passes: 1, iterations: 0, engine: "native" },
+    ))
+}
+
+/// Drain a sparse source into memory, order and coalesce the chunks for
+/// an efficient fit. Returns the chunks plus the total sample count.
+fn collect_sparse(
+    source: &mut dyn SparseChunkSource,
+    timer: &mut Timer,
+) -> Result<(Vec<SparseChunk>, usize)> {
+    let t0 = Instant::now();
+    let mut chunks = Vec::new();
+    while let Some(c) = source.next_chunk()? {
+        chunks.push(c);
+    }
+    timer.add("load", t0.elapsed().as_secs_f64());
+    let n = chunks.iter().map(|c| c.n()).sum();
+    chunks.sort_by_key(|c| c.start_col());
+    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
+    Ok((chunks, n))
+}
+
+/// Sparsified K-means (Algorithm 1) over already-compressed chunks — the
+/// "analyze" half of compress-once/analyze-many. `sp` must be the
+/// sparsifier the chunks were produced with (for center unmixing); pass
+/// `unmix = false` when they skipped preconditioning. Zero passes over
+/// the raw data; bit-identical to
+/// [`run_sparsified_kmeans_stream`] on the same stream because every fit
+/// step depends only on the global column order, not chunk boundaries.
+///
+/// Memory note: Lloyd iterations revisit every sample, so this driver
+/// materializes the whole compressed source (~`12·m·n` bytes — the
+/// paper's working-set model) regardless of any reader memory budget;
+/// budgets bound chunk granularity, not the fit's working set.
+pub fn run_sparsified_kmeans_sparse(
+    source: &mut dyn SparseChunkSource,
+    sp: &Sparsifier,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    workers: usize,
+    unmix: bool,
+) -> Result<(SparsifiedModel, PipelineReport)> {
+    if source.p() != sp.p() || source.m() != sp.m() {
+        return invalid(format!(
+            "sparse fit: source is p={} m={}, sparsifier is p={} m={}",
+            source.p(),
+            source.m(),
+            sp.p(),
+            sp.m()
+        ));
+    }
+    let mut timer = Timer::new();
+    let (chunks, n) = collect_sparse(source, &mut timer)?;
+    if n == 0 {
+        return invalid("sparse fit: source is empty");
+    }
+    let scfg = SparsifyConfig { gamma: sp.gamma(), transform: sp.ros().kind(), seed: sp.seed() };
+    let sk = SparsifiedKmeans::new(scfg, k, opts).with_workers(workers.max(1));
+    let model =
+        timer.time("kmeans", || sk.fit_chunks_raw(sp, &chunks, assigner, unmix))?;
+    let iterations = model.result.iterations;
+    Ok((
+        model,
+        PipelineReport { timer, n, passes: 0, iterations, engine: assigner.name() },
+    ))
+}
+
+/// Sparsified K-means straight from a persistent store: rebuilds the
+/// sparsifier from the manifest and fits without touching the raw data.
+pub fn run_sparsified_kmeans_from_store(
+    store: &mut SparseStoreReader,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    workers: usize,
+) -> Result<(SparsifiedModel, PipelineReport)> {
+    let sp = store.sparsifier()?;
+    let unmix = store.manifest().preconditioned;
+    run_sparsified_kmeans_sparse(store, &sp, k, opts, assigner, workers, unmix)
+}
+
+/// One-pass PCA over already-compressed chunks: fold the Thm 4/6
+/// estimators in global column order, eigendecompose, unmix. Zero passes
+/// over the raw data. `preconditioned = false` (ablation stores) skips
+/// the adjoint and only drops padding.
+pub fn run_pca_sparse(
+    source: &mut dyn SparseChunkSource,
+    sp: &Sparsifier,
+    topk: usize,
+    workers: usize,
+    preconditioned: bool,
+) -> Result<(PcaReport, PipelineReport)> {
+    if source.p() != sp.p() || source.m() != sp.m() {
+        return invalid(format!(
+            "sparse pca: source is p={} m={}, sparsifier is p={} m={}",
+            source.p(),
+            source.m(),
+            sp.p(),
+            sp.m()
+        ));
+    }
+    let mut timer = Timer::new();
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(workers.max(1));
+    let mut n = 0usize;
+    loop {
+        let t0 = Instant::now();
+        let next = source.next_chunk()?;
+        timer.add("load", t0.elapsed().as_secs_f64());
+        let Some(chunk) = next else { break };
+        n += chunk.n();
+        let t1 = Instant::now();
+        mean_est.accumulate(&chunk);
+        cov_est.accumulate(&chunk);
+        timer.add("accumulate", t1.elapsed().as_secs_f64());
+    }
+    if n == 0 {
+        return invalid("sparse pca: source is empty");
+    }
+    let covariance = cov_est.estimate();
+    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, sp.seed()));
+    let (components, mean) = if preconditioned {
+        let components = sp.unmix(&pca_pre.components);
+        let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
+        (components, sp.unmix(&mean_pre).col(0).to_vec())
+    } else {
+        let components = sp.truncate(&pca_pre.components);
+        let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
+        (components, sp.truncate(&mean_pre).col(0).to_vec())
+    };
+    let report = PipelineReport { timer, n, passes: 0, iterations: 0, engine: "native" };
+    Ok((
+        PcaReport {
+            mean,
+            covariance,
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        },
+        report,
+    ))
+}
+
+/// Streaming PCA straight from a persistent store (manifest-driven
+/// sparsifier reconstruction; zero raw-data passes).
+pub fn run_pca_from_store(
+    store: &mut SparseStoreReader,
+    topk: usize,
+    workers: usize,
+) -> Result<(PcaReport, PipelineReport)> {
+    let sp = store.sparsifier()?;
+    let preconditioned = store.manifest().preconditioned;
+    run_pca_sparse(store, &sp, topk, workers, preconditioned)
 }
 
 #[cfg(test)]
@@ -293,5 +504,166 @@ mod tests {
         assert_eq!(report.n, 6000);
         let rec = recovered_components(&pca_report.pca.components, &d.centers, 0.9);
         assert!(rec >= 2, "recovered {rec}/3 spiked PCs");
+    }
+
+    #[test]
+    fn streaming_pca_is_bitwise_worker_invariant() {
+        // the fold reorders out-of-order worker output before
+        // accumulating, so every worker count produces identical bits
+        let mut rng = Pcg64::seed(41);
+        let d = crate::data::spiked(32, 700, &[5.0, 2.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 6 };
+        let mut base_src = MatSource::new(&d.data, 64);
+        let base_stream = StreamConfig { workers: 1, chunk_cols: 64, ..Default::default() };
+        let (base, _) = run_pca_stream(&mut base_src, scfg, 2, base_stream).unwrap();
+        for workers in [2usize, 4] {
+            let mut src = MatSource::new(&d.data, 64);
+            let stream = StreamConfig { workers, chunk_cols: 64, ..Default::default() };
+            let (par, _) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
+            for (a, b) in par.covariance.as_slice().iter().zip(base.covariance.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "covariance, workers={workers}");
+            }
+            for (a, b) in par.mean.iter().zip(&base.mean) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mean, workers={workers}");
+            }
+        }
+    }
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("pds_driver_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn kmeans_from_store_is_bit_identical_to_streaming() {
+        let mut rng = Pcg64::seed(17);
+        let d = gaussian_blobs(32, 400, 3, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 5 };
+        let opts = KmeansOpts { n_init: 2, ..Default::default() };
+        let stream = StreamConfig { workers: 2, chunk_cols: 64, ..Default::default() };
+
+        // reference: the in-memory streaming path
+        let mut src = MatSource::new(&d.data, 64);
+        let (direct, dreport) = run_sparsified_kmeans_stream(
+            &mut src,
+            scfg,
+            3,
+            opts,
+            &crate::kmeans::NativeAssigner,
+            stream,
+            true,
+        )
+        .unwrap();
+        assert_eq!(dreport.passes, 1);
+
+        // compress once to a store (different shard size than chunk size,
+        // on purpose), then fit from it
+        let dir = tmpdir("kmeans_roundtrip");
+        let mut src2 = MatSource::new(&d.data, 64);
+        let (manifest, creport) =
+            run_compress_to_store(&mut src2, scfg, &dir, 50, stream, true).unwrap();
+        assert_eq!(manifest.n, 400);
+        assert_eq!(creport.passes, 1);
+        let mut store = crate::store::SparseStoreReader::open(&dir).unwrap();
+        for workers in [1usize, 2] {
+            store.rewind();
+            let (from_store, sreport) = run_sparsified_kmeans_from_store(
+                &mut store,
+                3,
+                opts,
+                &crate::kmeans::NativeAssigner,
+                workers,
+            )
+            .unwrap();
+            assert_eq!(sreport.passes, 0, "fit from store reads no raw data");
+            assert_eq!(from_store.result.assign, direct.result.assign, "workers={workers}");
+            assert_eq!(
+                from_store.result.objective.to_bits(),
+                direct.result.objective.to_bits()
+            );
+            for (a, b) in from_store
+                .result
+                .centers
+                .as_slice()
+                .iter()
+                .zip(direct.result.centers.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "centers, workers={workers}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pca_from_store_is_bit_identical_to_streaming() {
+        let mut rng = Pcg64::seed(23);
+        let d = crate::data::spiked(32, 900, &[6.0, 3.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 11 };
+        // workers = 2: the streaming fold reorders racing chunks, so the
+        // accumulation order is the global column order either way
+        let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
+
+        let mut src = MatSource::new(&d.data, 128);
+        let (direct, _) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
+
+        let dir = tmpdir("pca_roundtrip");
+        let mut src2 = MatSource::new(&d.data, 128);
+        run_compress_to_store(&mut src2, scfg, &dir, 77, stream, true).unwrap();
+        let mut store = crate::store::SparseStoreReader::open(&dir).unwrap();
+        let (from_store, report) = run_pca_from_store(&mut store, 2, 1).unwrap();
+        assert_eq!(report.passes, 0);
+        assert_eq!(report.n, 900);
+        for (a, b) in from_store
+            .covariance
+            .as_slice()
+            .iter()
+            .zip(direct.covariance.as_slice())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "covariance");
+        }
+        for (a, b) in from_store.mean.iter().zip(&direct.mean) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mean");
+        }
+        for (a, b) in from_store
+            .pca
+            .components
+            .as_slice()
+            .iter()
+            .zip(direct.pca.components.as_slice())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "components");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn one_store_serves_many_analyses() {
+        // the whole point: one compression pass, multiple consumers
+        let mut rng = Pcg64::seed(31);
+        let d = gaussian_blobs(16, 300, 2, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
+        let dir = tmpdir("many_analyses");
+        let mut src = MatSource::new(&d.data, 100);
+        run_compress_to_store(&mut src, scfg, &dir, 64, StreamConfig::default(), true).unwrap();
+
+        let mut store = crate::store::SparseStoreReader::open(&dir).unwrap();
+        let opts = KmeansOpts { n_init: 2, ..Default::default() };
+        let (model, _) = run_sparsified_kmeans_from_store(
+            &mut store,
+            2,
+            opts,
+            &crate::kmeans::NativeAssigner,
+            1,
+        )
+        .unwrap();
+        assert_eq!(model.result.assign.len(), 300);
+
+        store.rewind();
+        let (pca, _) = run_pca_from_store(&mut store, 2, 1).unwrap();
+        assert_eq!(pca.mean.len(), 16);
+        assert_eq!(pca.pca.components.cols(), 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -21,6 +21,7 @@ use super::{ChunkSource, DenseChunk, StreamConfig};
 /// Sink for compressed chunks. Chunks may arrive out of stream order when
 /// `workers > 1`; order-sensitive consumers sort on `start_col`.
 pub trait SparseConsumer {
+    /// Accept one compressed chunk.
     fn consume(&mut self, chunk: SparseChunk) -> Result<()>;
 }
 

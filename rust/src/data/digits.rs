@@ -28,6 +28,7 @@ pub struct DigitConfig {
     pub max_shift: i32,
     /// Pixel noise std.
     pub noise: f64,
+    /// Root seed for templates and per-sample deformations.
     pub seed: u64,
 }
 
@@ -131,6 +132,7 @@ pub struct DigitStream {
 }
 
 impl DigitStream {
+    /// Build the class templates and the replayable sample stream.
     pub fn new(cfg: DigitConfig) -> Self {
         let mut rng = Pcg64::seed(cfg.seed);
         let templates = (0..cfg.classes).map(|c| template(c, &mut rng)).collect();

@@ -84,6 +84,7 @@ pub struct ChunkStoreReader {
 }
 
 impl ChunkStoreReader {
+    /// Open an existing store and parse its header.
     pub fn open(path: &Path) -> Result<Self> {
         let mut file = BufReader::new(File::open(path)?);
         let mut magic = [0u8; 4];
@@ -102,14 +103,17 @@ impl ChunkStoreReader {
         Ok(ChunkStoreReader { file, p, n, chunk_cols, cursor: 0 })
     }
 
+    /// Ambient dimension.
     pub fn p(&self) -> usize {
         self.p
     }
 
+    /// Total samples in the store.
     pub fn n(&self) -> usize {
         self.n as usize
     }
 
+    /// Columns per chunk (the last chunk may be short).
     pub fn chunk_cols(&self) -> usize {
         self.chunk_cols
     }

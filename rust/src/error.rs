@@ -24,6 +24,10 @@ pub enum Error {
     /// Numerical failure (non-convergence, singularity, NaN).
     Numerical(String),
 
+    /// On-disk data failed validation: bad magic, checksum mismatch,
+    /// truncated shard, or a manifest inconsistent with its shards.
+    Corrupt(String),
+
     /// I/O (out-of-core store, manifest).
     Io(std::io::Error),
 }
@@ -39,6 +43,7 @@ impl fmt::Display for Error {
             ),
             Error::Xla(msg) => write!(f, "xla runtime: {msg}"),
             Error::Numerical(msg) => write!(f, "numerical: {msg}"),
+            Error::Corrupt(msg) => write!(f, "corrupt store: {msg}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }
@@ -65,6 +70,7 @@ impl From<xla::Error> for Error {
     }
 }
 
+/// Crate-wide result alias over [`Error`].
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Shorthand for building a shape error.
@@ -77,6 +83,11 @@ pub fn invalid<T>(msg: impl Into<String>) -> Result<T> {
     Err(Error::Invalid(msg.into()))
 }
 
+/// Shorthand for building a corrupt-store error.
+pub fn corrupt<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error::Corrupt(msg.into()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +98,7 @@ mod tests {
         assert_eq!(Error::Invalid("b".into()).to_string(), "invalid argument: b");
         assert_eq!(Error::Xla("c".into()).to_string(), "xla runtime: c");
         assert_eq!(Error::Numerical("d".into()).to_string(), "numerical: d");
+        assert_eq!(Error::Corrupt("e".into()).to_string(), "corrupt store: e");
         let ma = Error::MissingArtifact { graph: "assign".into(), p: 1, b: 2, k: 3 };
         assert_eq!(
             ma.to_string(),

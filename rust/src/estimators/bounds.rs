@@ -55,6 +55,7 @@ pub struct DataStats {
 }
 
 impl DataStats {
+    /// Fresh accumulator for dimension `p`.
     pub fn new(p: usize) -> Self {
         DataStats {
             p,
@@ -91,6 +92,7 @@ impl DataStats {
         self.n += x.cols();
     }
 
+    /// Samples seen so far.
     pub fn n(&self) -> usize {
         self.n
     }

@@ -30,6 +30,7 @@ pub struct CovarianceEstimator {
 }
 
 impl CovarianceEstimator {
+    /// Fresh estimator for chunks of shape `(p, m)`.
     pub fn new(p: usize, m: usize) -> Self {
         assert!(m >= 2, "covariance estimator needs m >= 2 (Eq. 19 rescale)");
         CovarianceEstimator { p, m, acc: Mat::zeros(p, p), n: 0, workers: 1, ranges_cache: None }
@@ -154,6 +155,7 @@ impl CovarianceEstimator {
         self.n += n_cols;
     }
 
+    /// Samples seen so far.
     pub fn n(&self) -> usize {
         self.n
     }
@@ -192,8 +194,11 @@ impl CovarianceEstimator {
 /// (preconditioned) matrix actually sampled.
 #[derive(Clone, Copy, Debug)]
 pub struct CovBoundInputs {
+    /// Ambient dimension.
     pub p: usize,
+    /// Kept entries per sample.
     pub m: usize,
+    /// Sample count.
     pub n: usize,
     /// ρ: `max_i ‖w_i‖²/‖x_i‖²` bound (1 always valid; with ROS use
     /// [`rho_preconditioned`](super::rho_preconditioned)).

@@ -19,6 +19,7 @@ pub struct HkAccumulator {
 }
 
 impl HkAccumulator {
+    /// Fresh accumulator for chunks of shape `(p, m)`.
     pub fn new(p: usize, m: usize) -> Self {
         HkAccumulator { p, m, counts: vec![0; p], n: 0 }
     }
@@ -45,6 +46,7 @@ impl HkAccumulator {
         self.n += members.len();
     }
 
+    /// Samples counted so far.
     pub fn n(&self) -> usize {
         self.n
     }

@@ -16,6 +16,7 @@ pub struct SparseMeanEstimator {
 }
 
 impl SparseMeanEstimator {
+    /// Fresh estimator for chunks of shape `(p, m)`.
     pub fn new(p: usize, m: usize) -> Self {
         SparseMeanEstimator { p, m, sum: vec![0.0; p], n: 0 }
     }

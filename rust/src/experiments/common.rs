@@ -77,14 +77,20 @@ pub fn center_rmse(est: &Mat, truth: &Mat) -> f64 {
 /// Which clustering algorithm a digit-workload run uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Algo {
+    /// Sparsified K-means, Algorithm 1 (ROS + uniform element sampling).
     Sparsified,
+    /// Ablation arm: element sampling without the ROS preconditioner.
     SparsifiedNoPrecond,
+    /// Algorithm 2: Algorithm 1 plus one refinement pass over raw data.
     SparsifiedTwoPass,
+    /// Boutsidis et al. random-projection feature extraction baseline.
     FeatureExtraction,
+    /// Boutsidis et al. leverage-score feature selection baseline.
     FeatureSelection,
 }
 
 impl Algo {
+    /// Human-readable name used in experiment tables.
     pub fn name(self) -> &'static str {
         match self {
             Algo::Sparsified => "sparsified",
@@ -95,6 +101,7 @@ impl Algo {
         }
     }
 
+    /// Every algorithm, in the paper's table order.
     pub const ALL: [Algo; 5] = [
         Algo::Sparsified,
         Algo::SparsifiedNoPrecond,
@@ -106,8 +113,11 @@ impl Algo {
 
 /// One digit-workload measurement.
 pub struct AlgoRun {
+    /// Clustering accuracy against ground-truth labels.
     pub accuracy: f64,
+    /// Wall-clock seconds for the whole run.
     pub seconds: f64,
+    /// The fitted clustering.
     pub result: KmeansResult,
 }
 

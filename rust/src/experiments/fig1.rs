@@ -19,6 +19,7 @@ use crate::rng::Pcg64;
 use crate::sampling::{Sparsifier, SparsifyConfig};
 use crate::transform::TransformKind;
 
+/// Run this experiment (`pds xp fig1`).
 pub fn run(args: &Args) -> Result<()> {
     let p: usize = args.get_parse("p", 512)?;
     let n: usize = args.get_parse("n", 1024)?;

@@ -111,6 +111,7 @@ fn run_fe(n: usize, gamma: f64, opts: KmeansOpts, seed: u64) -> Result<BigRun> {
     })
 }
 
+/// Run the Fig. 10 experiment (`pds xp fig10`).
 pub fn run_fig10(args: &Args) -> Result<()> {
     let n = scaled(args, args.get_parse("n", 50_000)?, 600_000);
     let trials = scaled(args, args.get_parse("trials", 2)?, 10);
@@ -155,6 +156,7 @@ pub fn run_fig10(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the Table III experiment (`pds xp table3`).
 pub fn run_table3(args: &Args) -> Result<()> {
     let n = scaled(args, args.get_parse("n", 50_000)?, 600_000);
     let gamma: f64 = args.get_parse("gamma", 0.05)?;

@@ -13,6 +13,7 @@ use crate::rng::Pcg64;
 use crate::sampling::{Sparsifier, SparsifyConfig};
 use crate::transform::TransformKind;
 
+/// Run this experiment (`pds xp fig2`).
 pub fn run(args: &Args) -> Result<()> {
     let p: usize = args.get_parse("p", 100)?;
     let gamma: f64 = args.get_parse("gamma", 0.3)?;

@@ -60,6 +60,7 @@ fn summarize(obs: &[Obs]) -> (f64, f64, f64) {
     (mean, max, bound)
 }
 
+/// Run this experiment (`pds xp fig3`).
 pub fn run(args: &Args) -> Result<()> {
     let p: usize = scaled(args, args.get_parse("p", 256)?, 1000);
     let runs = scaled(args, args.get_parse("runs", 10)?, 100);

@@ -119,6 +119,7 @@ fn kind_of(args: &Args) -> TransformKind {
     }
 }
 
+/// Run the Fig. 4 experiment (`pds xp fig4`).
 pub fn run_fig4(args: &Args) -> Result<()> {
     let p: usize = args.get_parse("p", 512)?;
     let n: usize = args.get_parse("n", 1024)?;
@@ -149,6 +150,7 @@ pub fn run_fig4(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the Table I experiment (`pds xp table1`).
 pub fn run_table1(args: &Args) -> Result<()> {
     let p: usize = args.get_parse("p", 512)?;
     let n: usize = args.get_parse("n", 1024)?;

@@ -10,6 +10,7 @@ use crate::metrics::mean_std;
 use crate::rng::Pcg64;
 use crate::sampling::sample_indices;
 
+/// Run this experiment (`pds xp fig5`).
 pub fn run(args: &Args) -> Result<()> {
     let p: usize = args.get_parse("p", 100)?;
     let gamma: f64 = args.get_parse("gamma", 0.3)?;

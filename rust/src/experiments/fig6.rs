@@ -17,6 +17,7 @@ use crate::rng::Pcg64;
 use crate::sampling::SparsifyConfig;
 use crate::transform::TransformKind;
 
+/// Run this experiment (`pds xp fig6`).
 pub fn run(args: &Args) -> Result<()> {
     let p: usize = args.get_parse("p", 512)?;
     let n = scaled(args, args.get_parse("n", 20_000)?, 100_000);

@@ -66,6 +66,7 @@ fn run_grid(args: &Args) -> Result<Grid> {
     Ok(Grid { gammas, acc, time, full_acc, full_time })
 }
 
+/// Run the Fig. 7 experiment (`pds xp fig7`).
 pub fn run_fig7(args: &Args) -> Result<()> {
     let g = run_grid(args)?;
     let mut rows = Vec::new();
@@ -89,6 +90,7 @@ pub fn run_fig7(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the Fig. 8 experiment (`pds xp fig8`).
 pub fn run_fig8(args: &Args) -> Result<()> {
     let g = run_grid(args)?;
     let mut rows = Vec::new();

@@ -13,6 +13,7 @@ use crate::error::Result;
 use crate::experiments::common::{center_rmse, print_table, run_algo, scaled, Algo};
 use crate::kmeans::KmeansOpts;
 
+/// Run this experiment (`pds xp fig9`).
 pub fn run(args: &Args) -> Result<()> {
     let n = scaled(args, args.get_parse("n", 4000)?, 21_002);
     let gamma: f64 = args.get_parse("gamma", 0.03)?;

@@ -5,6 +5,7 @@ use crate::cli::Args;
 use crate::error::Result;
 use crate::experiments::common::print_table;
 
+/// Run this experiment (`pds xp table2`).
 pub fn run(_args: &Args) -> Result<()> {
     print_table(
         "Table II: low-pass algorithms for K-means clustering",

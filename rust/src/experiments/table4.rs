@@ -1,6 +1,13 @@
-//! Table IV — the out-of-core run: data lives on disk in the PDS1 chunk
-//! store (paper: 4.9 GB, n = 9.6M, 58 chunks), is loaded chunk-by-chunk,
-//! compressed, and clustered; disk-load time is reported separately.
+//! Table IV — the out-of-core run: raw data lives on disk in the PDS1
+//! dense chunk store (paper: 4.9 GB, n = 9.6M, 58 chunks), is compressed
+//! **once** into the sharded sparse store (`docs/FORMAT.md`), and every
+//! clustering run then streams the compressed shards — the
+//! compress-once/analyze-many workflow the paper's §VII.C argues for.
+//! Disk-load and compress time are reported separately from the fits.
+//!
+//! Per γ: one compression pass over the raw store, then the 1-pass and
+//! 2-pass K-means arms both fit from the same sparse store (the 2-pass
+//! arm adds its one refinement pass over the raw data, Algorithm 2).
 //!
 //! Scaled default n = 10⁵ (~300 MB f32 on disk); `--full` uses n = 9.6M
 //! if the filesystem has room. γ ∈ {0.01, 0.05} as in the paper.
@@ -9,7 +16,8 @@ use std::time::Instant;
 
 use crate::cli::Args;
 use crate::coordinator::{
-    run_sparsified_kmeans_stream, run_two_pass_stream, StoreSource, StreamConfig,
+    run_compress_to_store, run_sparsified_kmeans_from_store, two_pass_refine_stream,
+    StoreSource, StreamConfig,
 };
 use crate::data::{ChunkStore, ChunkStoreReader, DigitConfig, DigitStream, DIGIT_P};
 use crate::error::Result;
@@ -17,29 +25,31 @@ use crate::experiments::common::{print_table, scaled};
 use crate::kmeans::{KmeansOpts, NativeAssigner};
 use crate::metrics::clustering_accuracy;
 use crate::sampling::SparsifyConfig;
+use crate::store::SparseStoreReader;
 use crate::transform::TransformKind;
 
 const K: usize = 3;
 
+/// Run the Table IV experiment (`pds xp table4`).
 pub fn run(args: &Args) -> Result<()> {
     let n = scaled(args, args.get_parse("n", 100_000)?, 9_631_605);
     let chunk_cols = args.get_parse("chunk-cols", 16_384)?;
     let n_init = scaled(args, 3, 10);
     let gammas = args.get_list_f64("gammas", &[0.01, 0.05])?;
-    let path = std::env::temp_dir().join(format!("pds_table4_{}", std::process::id()));
+    let raw_path = std::env::temp_dir().join(format!("pds_table4_{}", std::process::id()));
     let opts = KmeansOpts { n_init, max_iters: 100, tol_frac: 0.0, seed: 0 };
 
-    // write the store once (this is the dataset "download", not timed as
-    // part of the algorithms)
+    // stage the raw dataset once (this is the dataset "download", not
+    // timed as part of the algorithms)
     println!(
         "Table IV: writing {} samples (p={DIGIT_P}) to {} ({} MB f32)...",
         n,
-        path.display(),
+        raw_path.display(),
         n * DIGIT_P * 4 / (1024 * 1024)
     );
     let stream = DigitStream::new(DigitConfig { seed: 44, ..Default::default() });
     {
-        let mut store = ChunkStore::create(&path, DIGIT_P, chunk_cols)?;
+        let mut store = ChunkStore::create(&raw_path, DIGIT_P, chunk_cols)?;
         let mut start = 0usize;
         while start < n {
             let cols = (n - start).min(chunk_cols);
@@ -51,46 +61,87 @@ pub fn run(args: &Args) -> Result<()> {
     let labels = stream.labels(0, n);
 
     let mut rows = Vec::new();
-    for &gamma in &gammas {
+    for (gi, &gamma) in gammas.iter().enumerate() {
         let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 7 };
         let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols };
+
+        // compress ONCE per gamma: raw store -> sparse store (1 raw pass)
+        let sparse_dir = std::env::temp_dir()
+            .join(format!("pds_table4_sparse_{}_{gi}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&sparse_dir);
+        let mut raw = StoreSource::new(ChunkStoreReader::open(&raw_path)?);
+        let t0 = Instant::now();
+        let (manifest, creport) = run_compress_to_store(
+            &mut raw,
+            scfg,
+            &sparse_dir,
+            chunk_cols,
+            stream_cfg,
+            true,
+        )?;
+        let compress_total = t0.elapsed().as_secs_f64();
+        let sparse_mb = manifest.payload_bytes() as f64 / (1024.0 * 1024.0);
+
         for two_pass in [false, true] {
-            let mut src = StoreSource::new(ChunkStoreReader::open(&path)?);
-            let t0 = Instant::now();
-            let (assign, report) = if two_pass {
-                let (res, rep) =
-                    run_two_pass_stream(&mut src, scfg, K, opts, &NativeAssigner, stream_cfg)?;
-                (res.assign, rep)
+            // every fit consumes the SAME sparse store — no re-compression
+            let mut store = SparseStoreReader::open(&sparse_dir)?;
+            let t1 = Instant::now();
+            let (model, mut freport) = run_sparsified_kmeans_from_store(
+                &mut store,
+                K,
+                opts,
+                &NativeAssigner,
+                1,
+            )?;
+            let assign = if two_pass {
+                let mut raw2 = StoreSource::new(ChunkStoreReader::open(&raw_path)?);
+                two_pass_refine_stream(&mut raw2, &model, K, &mut freport)?.assign
             } else {
-                let (model, rep) = run_sparsified_kmeans_stream(
-                    &mut src, scfg, K, opts, &NativeAssigner, stream_cfg, true,
-                )?;
-                (model.result.assign, rep)
+                model.result.assign.clone()
             };
-            let total = t0.elapsed().as_secs_f64();
+            let fit_total = t1.elapsed().as_secs_f64();
             let acc = clustering_accuracy(&assign, &labels, K);
             rows.push(vec![
                 format!("{gamma:.2}"),
                 if two_pass { "Sparsified K-means, 2 pass" } else { "Sparsified K-means" }
                     .to_string(),
                 format!("{acc:.4}"),
-                format!("{}", report.iterations),
-                format!("{total:.1}"),
-                format!("{:.1}", report.timer.get("compress")),
-                format!("{:.1}", report.timer.get("load") + report.timer.get("pass2")),
-                format!("{}", report.passes),
+                format!("{}", freport.iterations),
+                format!("{:.1}", compress_total + fit_total),
+                format!("{:.1}", creport.timer.get("compress")),
+                format!(
+                    "{:.1}",
+                    creport.timer.get("load")
+                        + freport.timer.get("load")
+                        + freport.timer.get("pass2")
+                ),
+                format!("{sparse_mb:.0}"),
+                // raw passes: 1 compress (+1 refinement for Algorithm 2)
+                format!("{}", creport.passes + freport.passes),
             ]);
         }
+        std::fs::remove_dir_all(&sparse_dir).ok();
     }
-    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&raw_path).ok();
     print_table(
-        "Table IV: out-of-core runs",
-        &["gamma", "algorithm", "accuracy", "iters", "total s", "compress s", "disk s", "passes"],
+        "Table IV: out-of-core runs (compress once, fit from the sparse store)",
+        &[
+            "gamma",
+            "algorithm",
+            "accuracy",
+            "iters",
+            "total s",
+            "compress s",
+            "disk s",
+            "store MB",
+            "raw passes",
+        ],
         &rows,
     );
     println!(
         "paper shape: disk load significant but not dominant; 1-pass preferred when \
-         loads are expensive; 2-pass accuracy ~0.93 already at gamma=0.01"
+         loads are expensive; 2-pass accuracy ~0.93 already at gamma=0.01. Both arms \
+         reuse one compressed store per gamma — the compression pass is paid once."
     );
     Ok(())
 }

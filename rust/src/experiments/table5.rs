@@ -22,6 +22,7 @@ use crate::transform::TransformKind;
 
 const K: usize = 3;
 
+/// Run this experiment (`pds xp table5`).
 pub fn run(args: &Args) -> Result<()> {
     let n = scaled(args, args.get_parse("n", 50_000)?, 600_000);
     let gamma: f64 = args.get_parse("gamma", 0.05)?;

@@ -271,6 +271,7 @@ pub fn solve_centers(sums: &Mat, counts: &Mat, prev: &Mat) -> Mat {
 /// The fitted sparsified model: result plus the preconditioned-domain
 /// centers (useful for resuming / streaming assignment of new data).
 pub struct SparsifiedModel {
+    /// The fitted clustering (centers in the original domain).
     pub result: KmeansResult,
     /// Centers in the preconditioned (padded) domain, p_work × K.
     pub centers_precond: Mat,
@@ -278,8 +279,11 @@ pub struct SparsifiedModel {
 
 /// Sparsified K-means (Algorithm 1).
 pub struct SparsifiedKmeans {
+    /// Compression configuration (used by [`fit_dense`](Self::fit_dense)).
     pub sparsify: SparsifyConfig,
+    /// Number of clusters.
     pub k: usize,
+    /// Lloyd / restart options.
     pub opts: KmeansOpts,
     /// Fork/join width for assignment + center accumulation. `1` (the
     /// default) runs the serial loops inline; any value yields bitwise
@@ -288,6 +292,8 @@ pub struct SparsifiedKmeans {
 }
 
 impl SparsifiedKmeans {
+    /// Build an Algorithm 1 runner (single-threaded; see
+    /// [`with_workers`](Self::with_workers)).
     pub fn new(sparsify: SparsifyConfig, k: usize, opts: KmeansOpts) -> Self {
         SparsifiedKmeans { sparsify, k, opts, workers: 1 }
     }

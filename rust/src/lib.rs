@@ -40,6 +40,13 @@
 //!   (`artifacts/*.hlo.txt` built by `make artifacts`); the
 //!   [`runtime::NativeEngine`] implements the same chunk ops in pure Rust
 //!   and is the default engine.
+//! * [`store`] — the persistent sharded store for sparsified data:
+//!   compress once with [`coordinator::run_compress_to_store`], then fit
+//!   PCA / K-means any number of times from disk without touching the raw
+//!   stream again (`rust/ARCHITECTURE.md` maps the full pipeline,
+//!   `docs/FORMAT.md` specifies the bytes).
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod bench;
@@ -58,6 +65,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampling;
 pub mod sparse;
+pub mod store;
 pub mod testing;
 pub mod transform;
 
@@ -65,7 +73,9 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports of the types most programs touch.
 pub mod prelude {
-    pub use crate::coordinator::{ChunkSource, DenseChunk, StreamConfig};
+    pub use crate::coordinator::{
+        ChunkSource, DenseChunk, SparseChunkSource, StreamConfig,
+    };
     pub use crate::error::{Error, Result};
     pub use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
     pub use crate::kmeans::{KmeansOpts, KmeansResult, SparsifiedKmeans};
@@ -73,5 +83,6 @@ pub mod prelude {
     pub use crate::rng::Pcg64;
     pub use crate::sampling::{Sparsifier, SparsifyConfig};
     pub use crate::sparse::SparseChunk;
+    pub use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
     pub use crate::transform::{Ros, TransformKind};
 }

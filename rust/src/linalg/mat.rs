@@ -47,28 +47,33 @@ impl Mat {
         Ok(Mat { rows, cols, data })
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Entry `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.rows + i]
     }
 
+    /// Overwrite entry `(i, j)`.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.rows + i] = v;
     }
 
+    /// Add `v` to entry `(i, j)`.
     #[inline]
     pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
@@ -93,6 +98,7 @@ impl Mat {
         &self.data
     }
 
+    /// Mutable full column-major buffer.
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data

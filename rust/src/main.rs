@@ -4,21 +4,29 @@
 //! pds xp <id|all|list> [--runs N] [--full] [...]   regenerate a paper table/figure
 //! pds kmeans [--n N] [--p P] [--k K] [--gamma G]   sparsified K-means demo run
 //! pds pca    [--n N] [--p P] [--topk K] [--gamma G] streaming PCA demo run
+//! pds compress --store DIR [--n N] [--gamma G]     compress a stream into a sparse store
+//! pds fit --store DIR [--task kmeans|pca]          fit from a sparse store (no raw pass)
+//! pds store-info --store DIR                       print a store's manifest
 //! pds artifacts-check                              verify AOT artifacts + PJRT
 //! pds info                                         build/config summary
 //! ```
 
+use std::path::Path;
 use std::process::ExitCode;
 
 use pds::cli::Args;
-use pds::coordinator::{run_pca_stream, run_sparsified_kmeans_stream, MatSource, StreamConfig};
+use pds::coordinator::{
+    run_compress_to_store, run_pca_from_store, run_pca_stream,
+    run_sparsified_kmeans_from_store, run_sparsified_kmeans_stream, MatSource, StreamConfig,
+};
 use pds::data::{gaussian_blobs, DigitConfig};
-use pds::error::Result;
+use pds::error::{Error, Result};
 use pds::kmeans::{KmeansOpts, NativeAssigner};
 use pds::metrics::clustering_accuracy;
 use pds::rng::Pcg64;
 use pds::runtime::{artifact_dir, XlaEngine};
 use pds::sampling::SparsifyConfig;
+use pds::store::SparseStoreReader;
 use pds::transform::TransformKind;
 
 fn main() -> ExitCode {
@@ -39,6 +47,9 @@ fn main() -> ExitCode {
         "xp" => cmd_xp(&args),
         "kmeans" => cmd_kmeans(&args),
         "pca" => cmd_pca(&args),
+        "compress" => cmd_compress(&args),
+        "fit" => cmd_fit(&args),
+        "store-info" => cmd_store_info(&args),
         "artifacts-check" => cmd_artifacts_check(),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -68,6 +79,11 @@ fn usage() {
          \x20 pds xp <id|all|list> [--runs N] [--full] [--gammas a,b,c] ...\n\
          \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G] [--workers W] [--engine native|xla]\n\
          \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G] [--workers W]\n\
+         \x20 pds compress --store DIR [--data blobs|digits] [--n N] [--p P] [--gamma G]\n\
+         \x20\x20\x20\x20 [--seed S] [--workers W] [--shard-cols C] [--no-precondition]\n\
+         \x20 pds fit --store DIR [--task kmeans|pca] [--k K] [--topk K] [--workers W]\n\
+         \x20\x20\x20\x20 [--budget-mb MB]\n\
+         \x20 pds store-info --store DIR\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
     );
@@ -156,6 +172,163 @@ fn cmd_pca(args: &Args) -> Result<()> {
     println!("recovered {rec}/{} true spiked components (threshold .95)", d.centers.cols());
     for (name, secs) in report.timer.phases() {
         println!("  {name:<10} {secs:.3} s");
+    }
+    Ok(())
+}
+
+/// The `--store DIR` option, required by the store commands.
+fn store_arg<'a>(args: &'a Args) -> Result<&'a str> {
+    args.get("store")
+        .ok_or_else(|| Error::Invalid("--store DIR is required".into()))
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let store_dir = store_arg(args)?;
+    let data_kind = args.get("data").unwrap_or("blobs");
+    let gamma: f64 = args.get_parse("gamma", 0.05)?;
+    let seed: u64 = args.get_parse("seed", 0)?;
+    let k: usize = args.get_parse("k", 5)?;
+    let data = match data_kind {
+        "digits" => {
+            let n: usize = args.get_parse("n", 5000)?;
+            pds::data::digits(n, DigitConfig { seed, ..Default::default() }).data
+        }
+        _ => {
+            let n: usize = args.get_parse("n", 20_000)?;
+            let p: usize = args.get_parse("p", 512)?;
+            let mut rng = Pcg64::seed(seed);
+            gaussian_blobs(p, n, k, 0.05, &mut rng).data
+        }
+    };
+    let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
+    let precondition = !args.flag("no-precondition");
+    let mut src = MatSource::new(&data, args.get_parse("chunk", 2048)?);
+    let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
+    let shard_cols: usize = args.get_parse("shard-cols", 8192)?;
+    let (manifest, report) = run_compress_to_store(
+        &mut src,
+        scfg,
+        Path::new(store_dir),
+        shard_cols,
+        stream,
+        precondition,
+    )?;
+    println!(
+        "compressed {} samples (p={} -> m={} per sample, gamma={:.4}) into {}",
+        manifest.n,
+        manifest.p,
+        manifest.m,
+        manifest.m as f64 / manifest.p as f64,
+        store_dir
+    );
+    println!(
+        "  {} shards, {:.1} MB sparse payload ({:.1}% of dense f64), passes over raw data: {}",
+        manifest.shards.len(),
+        manifest.payload_bytes() as f64 / (1024.0 * 1024.0),
+        100.0 * manifest.payload_bytes() as f64
+            / (manifest.n as f64 * manifest.p_orig as f64 * 8.0),
+        report.passes
+    );
+    for (name, secs) in report.timer.phases() {
+        println!("  {name:<10} {secs:.3} s");
+    }
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let store_dir = store_arg(args)?;
+    let task = args.get("task").unwrap_or("kmeans");
+    let workers: usize = args.get_parse("workers", 1)?;
+    let budget_mb: usize = args.get_parse("budget-mb", 0)?;
+    let mut reader = SparseStoreReader::open(Path::new(store_dir))?;
+    if budget_mb > 0 {
+        if task == "kmeans" {
+            // K-means iterates over all compressed data, so the fit holds
+            // the whole sparse store (~12·m·n bytes) in RAM; the budget
+            // only bounds chunk granularity for streaming consumers.
+            eprintln!(
+                "note: --budget-mb caps streaming chunk sizes (pca); the kmeans fit still \
+                 holds the full compressed store in memory"
+            );
+        }
+        reader = reader.with_memory_budget(budget_mb * 1024 * 1024);
+    }
+    let m = reader.manifest();
+    println!(
+        "store {}: n={} p={} m={} preconditioned={} ({} shards)",
+        store_dir,
+        m.n,
+        m.p,
+        m.m,
+        m.preconditioned,
+        m.shards.len()
+    );
+    match task {
+        "pca" => {
+            let topk: usize = args.get_parse("topk", 5)?;
+            let (pca_report, report) = run_pca_from_store(&mut reader, topk, workers)?;
+            println!(
+                "PCA from store: n={} passes over raw data={}",
+                report.n, report.passes
+            );
+            println!("top-{topk} eigenvalues: {:?}", pca_report.pca.eigenvalues);
+            for (name, secs) in report.timer.phases() {
+                println!("  {name:<10} {secs:.3} s");
+            }
+        }
+        "kmeans" => {
+            let k: usize = args.get_parse("k", 5)?;
+            let opts = KmeansOpts {
+                n_init: args.get_parse("starts", 5)?,
+                max_iters: args.get_parse("max-iters", 100)?,
+                tol_frac: 0.0,
+                seed: args.get_parse("seed", 0)?,
+            };
+            let (model, report) =
+                run_sparsified_kmeans_from_store(&mut reader, k, opts, &NativeAssigner, workers)?;
+            println!(
+                "sparsified K-means from store: n={} iterations={} converged={} passes over \
+                 raw data={}",
+                report.n, model.result.iterations, model.result.converged, report.passes
+            );
+            println!("objective = {:.4}", model.result.objective);
+            for (name, secs) in report.timer.phases() {
+                println!("  {name:<10} {secs:.3} s");
+            }
+        }
+        other => return Err(Error::Invalid(format!("--task {other:?} (want kmeans|pca)"))),
+    }
+    Ok(())
+}
+
+fn cmd_store_info(args: &Args) -> Result<()> {
+    let store_dir = store_arg(args)?;
+    let reader = SparseStoreReader::open(Path::new(store_dir))?;
+    let m = reader.manifest();
+    println!("sparse store {store_dir} (manifest v{})", m.version);
+    println!("  samples n       = {}", m.n);
+    println!("  dimension p     = {} (original {})", m.p, m.p_orig);
+    println!("  kept per sample = {} (gamma {:.4})", m.m, m.m as f64 / m.p as f64);
+    println!("  transform       = {}, seed {}", m.transform.name(), m.seed);
+    println!("  preconditioned  = {}", m.preconditioned);
+    println!(
+        "  shards          = {} x {} cols, {:.1} MB payload",
+        m.shards.len(),
+        m.shard_cols,
+        m.payload_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    for s in m.shards.iter().take(4) {
+        println!(
+            "    shard {:>3}: cols [{}, {}) crc32 {:08x} {}",
+            s.index,
+            s.start_col,
+            s.start_col + s.n_cols,
+            s.crc32,
+            s.file
+        );
+    }
+    if m.shards.len() > 4 {
+        println!("    ... {} more", m.shards.len() - 4);
     }
     Ok(())
 }

@@ -29,14 +29,20 @@ pub fn median(xs: &[f64]) -> f64 {
 /// Five-number-ish summary for experiment rows.
 #[derive(Clone, Copy, Debug)]
 pub struct Summary {
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n−1 denominator).
     pub std: f64,
+    /// Smallest value.
     pub min: f64,
+    /// Largest value.
     pub max: f64,
+    /// Median value.
     pub median: f64,
 }
 
 impl Summary {
+    /// Summarize a sample.
     pub fn of(xs: &[f64]) -> Summary {
         let (mean, std) = mean_std(xs);
         Summary {

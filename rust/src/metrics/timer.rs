@@ -10,6 +10,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Empty timer.
     pub fn new() -> Self {
         Timer::default()
     }

@@ -50,6 +50,7 @@ impl Pcg64 {
         Self::seed_stream(self.root, index.wrapping_add(1))
     }
 
+    /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -59,6 +60,7 @@ impl Pcg64 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two 32-bit outputs).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

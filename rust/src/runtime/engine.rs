@@ -13,11 +13,14 @@ use crate::sparse::SparseChunk;
 
 /// Engine selector used by drivers/experiments.
 pub enum Engine {
+    /// Pure-Rust chunk ops (default).
     Native(NativeEngine),
+    /// PJRT-backed AOT executables.
     Xla(XlaEngine),
 }
 
 impl Engine {
+    /// The assignment strategy this engine provides.
     pub fn assigner(&self) -> &dyn SparseAssigner {
         match self {
             Engine::Native(e) => e,
@@ -84,6 +87,7 @@ impl XlaEngine {
         Ok(XlaEngine { client, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -7,9 +7,13 @@ use crate::error::{Error, Result};
 /// One compiled-graph artifact.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
+    /// Graph name (`assign`, `precondition`, ...).
     pub graph: String,
+    /// Ambient dimension the graph was compiled for.
     pub p: usize,
+    /// Batch (chunk columns) the graph was compiled for.
     pub b: usize,
+    /// Cluster count the graph was compiled for (0 when irrelevant).
     pub k: usize,
     /// Path to the `.hlo.txt`, resolved against the manifest directory.
     pub path: PathBuf,
@@ -65,6 +69,7 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
+    /// All artifacts, in file order.
     pub fn entries(&self) -> &[ManifestEntry] {
         &self.entries
     }

@@ -82,6 +82,8 @@ pub struct IndexSampler {
 }
 
 impl IndexSampler {
+    /// Build a sampler over `{0..p}` (scratch is allocated once, reused
+    /// across draws).
     pub fn new(p: usize) -> Self {
         IndexSampler { p, val: vec![0; p], epoch: vec![0; p], cur: 0 }
     }
@@ -133,6 +135,31 @@ impl IndexSampler {
 /// (`p_work`), preconditions and samples in the padded space, and reports
 /// `p()` = `p_work`. Zero-padding composes with an orthonormal map, so all
 /// estimator guarantees hold in the padded space; the adjoint un-pads.
+///
+/// # Example
+///
+/// ```
+/// use pds::linalg::Mat;
+/// use pds::rng::Pcg64;
+/// use pds::sampling::{Sparsifier, SparsifyConfig};
+/// use pds::transform::TransformKind;
+///
+/// let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 7 };
+/// let sp = Sparsifier::new(64, cfg)?;
+/// assert_eq!(sp.m(), 16); // keeps m = γ·p entries per sample
+///
+/// let mut rng = Pcg64::seed(1);
+/// let x = Mat::from_fn(64, 10, |_, _| rng.normal());
+/// let chunk = sp.compress_chunk(&x, 0)?; // precondition + sample, one pass
+/// assert_eq!(chunk.n(), 10);
+/// assert_eq!(chunk.m(), 16);
+///
+/// // Masks are keyed on the global column index, so chunk boundaries
+/// // never change the output:
+/// let left = sp.compress_chunk(&x.col_range(0, 4), 0)?;
+/// assert_eq!(left.col_indices(2), chunk.col_indices(2));
+/// # Ok::<(), pds::Error>(())
+/// ```
 pub struct Sparsifier {
     ros: Ros,
     /// Original ambient dimension (before any padding).
@@ -144,6 +171,8 @@ pub struct Sparsifier {
 }
 
 impl Sparsifier {
+    /// Build the operator for data of dimension `p` (padding to the next
+    /// power of two when the Hadamard transform requires it).
     pub fn new(p: usize, cfg: SparsifyConfig) -> Result<Self> {
         if !(cfg.gamma > 0.0 && cfg.gamma <= 1.0) {
             return invalid(format!("gamma must be in (0,1], got {}", cfg.gamma));
@@ -178,8 +207,14 @@ impl Sparsifier {
         self.m as f64 / self.p_work as f64
     }
 
+    /// The sampled ROS instance (sign diagonal + transform plan).
     pub fn ros(&self) -> &Ros {
         &self.ros
+    }
+
+    /// Root seed the sign diagonal and all sampling masks derive from.
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// Compress a dense chunk (`p_orig × n`, samples as columns) whose

@@ -11,6 +11,31 @@ use crate::linalg::Mat;
 
 /// A sparsified chunk of `n` samples in dimension `p`, exactly `m` kept
 /// entries per sample. Indices within each column are stored sorted.
+///
+/// # Example
+///
+/// ```
+/// use pds::sparse::SparseChunk;
+///
+/// // p = 5, m = 2 kept entries per sample, n = 2 samples starting at
+/// // global column 0: column 0 keeps coordinates {0, 3}, column 1 {1, 4}.
+/// let chunk = SparseChunk::from_raw(
+///     5,
+///     2,
+///     2,
+///     vec![0, 3, 1, 4],
+///     vec![0.5, -1.0, 2.0, 0.25],
+///     0,
+/// )
+/// .unwrap();
+/// chunk.validate().unwrap();
+/// assert_eq!(chunk.col_indices(1), &[1, 4]);
+/// assert_eq!(chunk.col_values(0), &[0.5, -1.0]);
+/// assert_eq!(chunk.gamma(), 0.4); // m / p
+/// let dense = chunk.to_dense(); // zeros at unsampled coordinates
+/// assert_eq!(dense.get(3, 0), -1.0);
+/// assert_eq!(dense.get(2, 0), 0.0);
+/// ```
 #[derive(Clone, Debug)]
 pub struct SparseChunk {
     p: usize,
@@ -57,6 +82,7 @@ impl SparseChunk {
         Ok(SparseChunk { p, m, n, indices, values, start_col })
     }
 
+    /// Ambient (possibly padded) dimension.
     #[inline]
     pub fn p(&self) -> usize {
         self.p
@@ -85,14 +111,31 @@ impl SparseChunk {
         self.m as f64 / self.p as f64
     }
 
+    /// Sorted kept coordinates of column `i` (length `m`).
     #[inline]
     pub fn col_indices(&self, i: usize) -> &[u32] {
         &self.indices[i * self.m..(i + 1) * self.m]
     }
 
+    /// Kept values of column `i` (length `m`, preconditioned-domain).
     #[inline]
     pub fn col_values(&self, i: usize) -> &[f64] {
         &self.values[i * self.m..(i + 1) * self.m]
+    }
+
+    /// The whole fixed-stride index buffer (`m·n` entries, column `i` at
+    /// `[i*m, (i+1)*m)`) — the exact layout the on-disk sparse store
+    /// serializes (see `docs/FORMAT.md`).
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    /// The whole fixed-stride value buffer (`m·n` entries, matching
+    /// [`indices`](Self::indices)).
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
     }
 
     /// Mutable access to one column's (indices, values).

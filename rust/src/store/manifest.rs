@@ -1,0 +1,417 @@
+//! The sparse-store manifest: a small text file (`manifest.pdsm`) written
+//! last — its presence is what marks a store complete. Line-oriented
+//! `key = value` pairs plus one `shard = ...` line per shard, in index
+//! order; `docs/FORMAT.md` is the normative spec.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{corrupt, invalid, Error, Result};
+use crate::sampling::SparsifyConfig;
+use crate::transform::TransformKind;
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.pdsm";
+
+/// Current manifest schema version. Readers reject greater versions;
+/// additive fields do not bump it (unknown keys are ignored on parse).
+const MANIFEST_VERSION: u32 = 1;
+
+/// Per-shard record: boundaries in the global column order plus the
+/// CRC-32 of the entire shard file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Shard index (also encoded in the file name).
+    pub index: usize,
+    /// Global column index of the shard's first sample.
+    pub start_col: usize,
+    /// Samples in this shard.
+    pub n_cols: usize,
+    /// CRC-32 (IEEE) of the entire shard file, header included.
+    pub crc32: u32,
+    /// Shard file name, relative to the store directory.
+    pub file: String,
+}
+
+/// Parsed sparse-store manifest — everything a reader needs to stream
+/// the shards back and to rebuild the matching
+/// [`Sparsifier`](crate::sampling::Sparsifier).
+#[derive(Clone, Debug)]
+pub struct StoreManifest {
+    /// Manifest schema version (see `docs/FORMAT.md` §versioning).
+    pub version: u32,
+    /// Working (possibly padded) dimension — the `p` of every chunk.
+    pub p: usize,
+    /// Original data dimension before Hadamard padding.
+    pub p_orig: usize,
+    /// Kept entries per sample.
+    pub m: usize,
+    /// Total samples across all shards.
+    pub n: usize,
+    /// Configured compression factor γ (exact, shortest-round-trip text).
+    pub gamma: f64,
+    /// Orthonormal transform of the ROS preconditioner.
+    pub transform: TransformKind,
+    /// Root seed of the sign diagonal and all sampling masks.
+    pub seed: u64,
+    /// Whether ROS preconditioning was applied (false = the paper's
+    /// no-precondition ablation arm; centers must not be unmixed).
+    pub preconditioned: bool,
+    /// Target columns per shard; every shard except the last holds
+    /// exactly this many.
+    pub shard_cols: usize,
+    /// Shard table in index order.
+    pub shards: Vec<ShardEntry>,
+}
+
+impl StoreManifest {
+    /// The sparsifier configuration this store was written with.
+    pub fn sparsify_config(&self) -> SparsifyConfig {
+        SparsifyConfig { gamma: self.gamma, transform: self.transform, seed: self.seed }
+    }
+
+    /// Compressed payload bytes across all shards (12 bytes per kept
+    /// entry: `u32` index + `f64` value), excluding headers.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.n as u64) * (self.m as u64) * 12
+    }
+
+    /// Index of the shard containing global column `col`.
+    pub fn shard_for_col(&self, col: usize) -> Option<usize> {
+        if col >= self.n || self.shard_cols == 0 {
+            return None;
+        }
+        // fixed stride: every shard but the last holds exactly shard_cols
+        let idx = col / self.shard_cols;
+        if idx < self.shards.len() {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    /// Serialize to the manifest text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# pds sparse store manifest — see docs/FORMAT.md\n");
+        out.push_str("format = pdss\n");
+        out.push_str(&format!("version = {}\n", self.version));
+        out.push_str(&format!("p = {}\n", self.p));
+        out.push_str(&format!("p_orig = {}\n", self.p_orig));
+        out.push_str(&format!("m = {}\n", self.m));
+        out.push_str(&format!("n = {}\n", self.n));
+        out.push_str(&format!("gamma = {:?}\n", self.gamma));
+        out.push_str(&format!("transform = {}\n", self.transform.name()));
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str(&format!("preconditioned = {}\n", self.preconditioned));
+        out.push_str(&format!("shard_cols = {}\n", self.shard_cols));
+        out.push_str(&format!("shard_count = {}\n", self.shards.len()));
+        for s in &self.shards {
+            out.push_str(&format!(
+                "shard = {} {} {} {:08x} {}\n",
+                s.index, s.start_col, s.n_cols, s.crc32, s.file
+            ));
+        }
+        out
+    }
+
+    /// Parse manifest text, then [`validate`](Self::validate).
+    pub fn parse(text: &str) -> Result<StoreManifest> {
+        let mut kv: Vec<(String, String)> = Vec::new();
+        let mut shards: Vec<ShardEntry> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return corrupt(format!("manifest line {}: no `=`", lineno + 1));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            if key == "shard" {
+                shards.push(parse_shard_line(value, lineno + 1)?);
+            } else {
+                kv.push((key.to_string(), value.to_string()));
+            }
+        }
+        if lookup(&kv, "format")? != "pdss" {
+            return corrupt("manifest: format is not `pdss`");
+        }
+        let version = lookup_num(&kv, "version")? as u32;
+        if version > MANIFEST_VERSION {
+            return corrupt(format!(
+                "manifest version {version} is newer than supported {MANIFEST_VERSION}"
+            ));
+        }
+        let gamma_text = lookup(&kv, "gamma")?;
+        let gamma: f64 = gamma_text
+            .parse()
+            .map_err(|_| Error::Corrupt(format!("manifest: bad gamma {gamma_text:?}")))?;
+        let tname = lookup(&kv, "transform")?;
+        let transform = TransformKind::from_name(tname)
+            .ok_or_else(|| Error::Corrupt(format!("manifest: unknown transform {tname:?}")))?;
+        let preconditioned = match lookup(&kv, "preconditioned")? {
+            "true" => true,
+            "false" => false,
+            other => {
+                return corrupt(format!("manifest: bad preconditioned flag {other:?}"));
+            }
+        };
+        let shard_count = lookup_num(&kv, "shard_count")? as usize;
+        if shard_count != shards.len() {
+            return corrupt(format!(
+                "manifest: shard_count {} but {} shard lines",
+                shard_count,
+                shards.len()
+            ));
+        }
+        let manifest = StoreManifest {
+            version,
+            p: lookup_num(&kv, "p")? as usize,
+            p_orig: lookup_num(&kv, "p_orig")? as usize,
+            m: lookup_num(&kv, "m")? as usize,
+            n: lookup_num(&kv, "n")? as usize,
+            gamma,
+            transform,
+            seed: lookup_num(&kv, "seed")?,
+            preconditioned,
+            shard_cols: lookup_num(&kv, "shard_cols")? as usize,
+            shards,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Structural validation: shard table is contiguous, stride-aligned,
+    /// and consistent with the scalar fields.
+    pub fn validate(&self) -> Result<()> {
+        if self.m == 0 || self.m > self.p {
+            return corrupt(format!("manifest: m = {} out of range for p = {}", self.m, self.p));
+        }
+        if self.p_orig == 0 || self.p_orig > self.p {
+            return corrupt(format!(
+                "manifest: p_orig = {} out of range for p = {}",
+                self.p_orig, self.p
+            ));
+        }
+        if self.shard_cols == 0 {
+            return corrupt("manifest: shard_cols = 0");
+        }
+        let mut expected_start = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.index != i {
+                return corrupt(format!("manifest: shard {i} has index {}", s.index));
+            }
+            if s.start_col != expected_start {
+                return corrupt(format!(
+                    "manifest: shard {i} starts at {} (expected {expected_start})",
+                    s.start_col
+                ));
+            }
+            if s.n_cols == 0 || s.n_cols > self.shard_cols {
+                return corrupt(format!(
+                    "manifest: shard {i} holds {} cols (stride {})",
+                    s.n_cols, self.shard_cols
+                ));
+            }
+            if i + 1 < self.shards.len() && s.n_cols != self.shard_cols {
+                return corrupt(format!(
+                    "manifest: non-final shard {i} is short ({} < {})",
+                    s.n_cols, self.shard_cols
+                ));
+            }
+            expected_start += s.n_cols;
+        }
+        if expected_start != self.n {
+            return corrupt(format!(
+                "manifest: shards cover {expected_start} cols but n = {}",
+                self.n
+            ));
+        }
+        Ok(())
+    }
+
+    /// Load and parse `<dir>/manifest.pdsm`.
+    pub fn load(dir: &Path) -> Result<StoreManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Invalid(format!("{}: cannot read sparse store manifest ({e})", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Write the manifest atomically: temp file in `dir`, fsync, rename.
+    /// Readers therefore only ever see a complete manifest.
+    pub fn write_atomic(&self, dir: &Path) -> Result<()> {
+        if self.version > MANIFEST_VERSION {
+            return invalid(format!("cannot write manifest version {}", self.version));
+        }
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(self.to_text().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+        Ok(())
+    }
+}
+
+/// Find a scalar key's value in the parsed key/value list.
+fn lookup<'a>(kv: &'a [(String, String)], name: &str) -> Result<&'a str> {
+    kv.iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+        .ok_or_else(|| Error::Corrupt(format!("manifest: missing key {name:?}")))
+}
+
+/// [`lookup`], parsed as an unsigned integer.
+fn lookup_num(kv: &[(String, String)], name: &str) -> Result<u64> {
+    let v = lookup(kv, name)?;
+    v.parse()
+        .map_err(|_| Error::Corrupt(format!("manifest: bad integer {name} = {v:?}")))
+}
+
+/// Parse one `shard = <index> <start_col> <n_cols> <crc32-hex> <file>`
+/// value.
+fn parse_shard_line(value: &str, lineno: usize) -> Result<ShardEntry> {
+    let fields: Vec<&str> = value.split_whitespace().collect();
+    if fields.len() != 5 {
+        return corrupt(format!(
+            "manifest line {lineno}: shard needs 5 fields, got {}",
+            fields.len()
+        ));
+    }
+    let num = |s: &str, what: &str| -> Result<usize> {
+        s.parse()
+            .map_err(|_| Error::Corrupt(format!("manifest line {lineno}: bad {what} {s:?}")))
+    };
+    Ok(ShardEntry {
+        index: num(fields[0], "shard index")?,
+        start_col: num(fields[1], "start_col")?,
+        n_cols: num(fields[2], "n_cols")?,
+        crc32: u32::from_str_radix(fields[3], 16)
+            .map_err(|_| Error::Corrupt(format!("manifest line {lineno}: bad crc {:?}", fields[3])))?,
+        file: fields[4].to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StoreManifest {
+        StoreManifest {
+            version: 1,
+            p: 128,
+            p_orig: 100,
+            m: 32,
+            n: 25,
+            gamma: 0.25,
+            transform: TransformKind::Hadamard,
+            seed: 7,
+            preconditioned: true,
+            shard_cols: 10,
+            shards: vec![
+                ShardEntry {
+                    index: 0,
+                    start_col: 0,
+                    n_cols: 10,
+                    crc32: 0xDEAD_BEEF,
+                    file: "shard-00000.pdsb".into(),
+                },
+                ShardEntry {
+                    index: 1,
+                    start_col: 10,
+                    n_cols: 10,
+                    crc32: 0x0000_0001,
+                    file: "shard-00001.pdsb".into(),
+                },
+                ShardEntry {
+                    index: 2,
+                    start_col: 20,
+                    n_cols: 5,
+                    crc32: 0xFFFF_FFFF,
+                    file: "shard-00002.pdsb".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_is_exact() {
+        let m = sample();
+        let parsed = StoreManifest::parse(&m.to_text()).unwrap();
+        assert_eq!(parsed.p, m.p);
+        assert_eq!(parsed.p_orig, m.p_orig);
+        assert_eq!(parsed.m, m.m);
+        assert_eq!(parsed.n, m.n);
+        assert_eq!(parsed.gamma.to_bits(), m.gamma.to_bits());
+        assert_eq!(parsed.transform, m.transform);
+        assert_eq!(parsed.seed, m.seed);
+        assert_eq!(parsed.preconditioned, m.preconditioned);
+        assert_eq!(parsed.shard_cols, m.shard_cols);
+        assert_eq!(parsed.shards, m.shards);
+    }
+
+    #[test]
+    fn gamma_text_roundtrips_awkward_values() {
+        for g in [0.1, 0.05, 1.0 / 3.0, 0.123456789012345] {
+            let mut m = sample();
+            m.gamma = g;
+            let parsed = StoreManifest::parse(&m.to_text()).unwrap();
+            assert_eq!(parsed.gamma.to_bits(), g.to_bits(), "gamma {g}");
+        }
+    }
+
+    #[test]
+    fn shard_for_col_uses_fixed_stride() {
+        let m = sample();
+        assert_eq!(m.shard_for_col(0), Some(0));
+        assert_eq!(m.shard_for_col(9), Some(0));
+        assert_eq!(m.shard_for_col(10), Some(1));
+        assert_eq!(m.shard_for_col(24), Some(2));
+        assert_eq!(m.shard_for_col(25), None);
+    }
+
+    #[test]
+    fn validate_rejects_gaps_and_miscounts() {
+        let mut gap = sample();
+        gap.shards[1].start_col = 11;
+        assert!(matches!(gap.validate(), Err(Error::Corrupt(_))));
+
+        let mut short = sample();
+        short.shards[0].n_cols = 9; // non-final short shard
+        assert!(short.validate().is_err());
+
+        let mut wrong_n = sample();
+        wrong_n.n = 26;
+        assert!(wrong_n.validate().is_err());
+
+        let mut bad_m = sample();
+        bad_m.m = 0;
+        assert!(bad_m.validate().is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_text() {
+        assert!(StoreManifest::parse("format = pdss\nversion = 1\n").is_err()); // missing keys
+        let mut text = sample().to_text();
+        text = text.replace("format = pdss", "format = nope");
+        assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
+        let future = sample().to_text().replace("version = 1", "version = 99");
+        assert!(StoreManifest::parse(&future).is_err());
+        let badcount = sample().to_text().replace("shard_count = 3", "shard_count = 2");
+        assert!(StoreManifest::parse(&badcount).is_err());
+        let nocrc = sample().to_text().replace("deadbeef", "zzzz");
+        assert!(StoreManifest::parse(&nocrc).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_ignored_for_forward_compat() {
+        let mut text = sample().to_text();
+        text.push_str("future_extension = whatever\n");
+        assert!(StoreManifest::parse(&text).is_ok());
+    }
+}

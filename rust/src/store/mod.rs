@@ -1,0 +1,154 @@
+//! Sharded on-disk store for **sparsified** data — compress once, analyze
+//! many.
+//!
+//! The paper's compression is a single streaming pass, but its output is
+//! what you want to keep: at γ = m/p the sparse form is 12·γ bytes per
+//! original 8-byte entry, and every downstream consumer (PCA, K-means,
+//! mean/covariance estimation) runs off it without ever revisiting the
+//! raw data (the Table IV out-of-core workflow). This module persists
+//! that output as a directory of fixed-stride shards plus a small text
+//! manifest, zarr-style:
+//!
+//! ```text
+//! store/
+//! ├── manifest.pdsm      # text manifest: p, m, n, config, shard table
+//! ├── shard-00000.pdsb   # columns [0, shard_cols)
+//! ├── shard-00001.pdsb   # columns [shard_cols, 2·shard_cols)
+//! └── ...                # last shard may be short
+//! ```
+//!
+//! Each shard serializes a [`SparseChunk`](crate::sparse::SparseChunk)
+//! verbatim (little-endian `u32` indices block, then `f64` values block,
+//! both in the chunk's fixed-stride layout), so a round trip is
+//! **bit-exact** and — because shard contents depend only on the global
+//! column order — the files are byte-identical for every compress worker
+//! count. Per-shard CRC-32 checksums live in the manifest; the manifest
+//! is written last (temp file + rename), so a crashed writer never leaves
+//! a store a reader would accept. `docs/FORMAT.md` specifies the exact
+//! bytes.
+//!
+//! * [`SparseStoreWriter`] — append [`SparseChunk`](crate::sparse::SparseChunk)s
+//!   (in any order within the pipeline's bounded reorder window) during
+//!   a `compress_stream` pass; atomic finish.
+//! * [`SparseStoreReader`] — memory-budgeted, resumable reads;
+//!   implements [`SparseChunkSource`](crate::coordinator::SparseChunkSource)
+//!   so the estimators and K-means consume stored data unchanged.
+//! * [`StoreManifest`] — the parsed manifest (shard table + the
+//!   [`SparsifyConfig`](crate::sampling::SparsifyConfig) needed to rebuild
+//!   the matching [`Sparsifier`](crate::sampling::Sparsifier) for center /
+//!   component unmixing).
+
+mod manifest;
+mod reader;
+mod writer;
+
+pub use manifest::{ShardEntry, StoreManifest, MANIFEST_FILE};
+pub use reader::SparseStoreReader;
+pub use writer::SparseStoreWriter;
+
+/// Magic bytes opening every shard file.
+pub(crate) const SHARD_MAGIC: &[u8; 4] = b"PDSS";
+
+/// Current shard format version (header field; bumped on layout changes).
+pub(crate) const SHARD_VERSION: u32 = 1;
+
+/// Fixed shard header length in bytes: magic + version + p + m + n_cols
+/// (4 × u32 + the 4-byte magic) + start_col (u64).
+pub(crate) const SHARD_HEADER_LEN: usize = 4 + 4 + 4 + 4 + 4 + 8;
+
+/// File name of shard `index` (`shard-00042.pdsb`).
+pub(crate) fn shard_file_name(index: usize) -> String {
+    format!("shard-{index:05}.pdsb")
+}
+
+/// CRC-32 (IEEE 802.3, reflected, polynomial `0xEDB88320`) lookup table,
+/// built at compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Incremental CRC-32 (IEEE 802.3) — the per-shard checksum recorded in
+/// the manifest. Matches the ubiquitous zlib/`cksum -o 3` definition so
+/// stores can be verified with standard tools.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    /// Start a fresh checksum.
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// Final checksum value (the object may keep accumulating afterwards;
+    /// this just reports the current state).
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE test vectors
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn crc32_incremental_matches_oneshot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let whole = crc32(&data);
+        let mut inc = Crc32::new();
+        for part in data.chunks(377) {
+            inc.update(part);
+        }
+        assert_eq!(inc.finish(), whole);
+    }
+
+    #[test]
+    fn shard_names_sort_in_index_order() {
+        assert_eq!(shard_file_name(0), "shard-00000.pdsb");
+        assert_eq!(shard_file_name(12), "shard-00012.pdsb");
+        assert!(shard_file_name(9) < shard_file_name(10));
+    }
+}

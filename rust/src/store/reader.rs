@@ -1,0 +1,686 @@
+//! Shard reader: streams a sparse store back as [`SparseChunk`]s with a
+//! configurable memory budget, per-shard checksum verification, and
+//! resume-at-any-column support. Implements
+//! [`SparseChunkSource`](crate::coordinator::SparseChunkSource), so every
+//! estimator and the K-means drivers consume stored data exactly as they
+//! consume freshly compressed chunks.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::SparseChunkSource;
+use crate::error::{corrupt, invalid, Error, Result};
+use crate::sampling::Sparsifier;
+use crate::sparse::SparseChunk;
+
+use super::manifest::StoreManifest;
+use super::{Crc32, SHARD_HEADER_LEN, SHARD_MAGIC, SHARD_VERSION};
+
+/// Streaming reader over a completed sparse store.
+///
+/// Reads shards in global column order, returning at most
+/// `chunk_cols` columns per [`next_chunk`](Self::next_chunk) (set via
+/// [`with_memory_budget`](Self::with_memory_budget); default: whole
+/// shards). Each shard's CRC-32 is verified against the manifest the
+/// first time the shard is opened in a pass; corruption surfaces as
+/// [`Error::Corrupt`], never a panic.
+///
+/// # Example
+///
+/// ```
+/// use pds::linalg::Mat;
+/// use pds::rng::Pcg64;
+/// use pds::sampling::{Sparsifier, SparsifyConfig};
+/// use pds::store::{SparseStoreReader, SparseStoreWriter};
+/// use pds::transform::TransformKind;
+///
+/// let dir = std::env::temp_dir().join(format!("pds_doc_reader_{}", std::process::id()));
+/// # let _ = std::fs::remove_dir_all(&dir);
+/// let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 9 };
+/// let sp = Sparsifier::new(8, cfg)?;
+/// let mut rng = Pcg64::seed(2);
+/// let x = Mat::from_fn(8, 7, |_, _| rng.normal());
+/// let mut writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 4)?;
+/// writer.append(sp.compress_chunk(&x, 0)?)?;
+/// writer.finish()?;
+///
+/// // memory-budgeted streaming: at most ~1 column in RAM per chunk here
+/// let mut reader = SparseStoreReader::open(&dir)?.with_memory_budget(64);
+/// let mut seen = 0;
+/// while let Some(chunk) = reader.next_chunk()? {
+///     seen += chunk.n();
+/// }
+/// assert_eq!(seen, 7);
+///
+/// // resumable: restart a pass from column 5
+/// reader.seek_to_col(5)?;
+/// assert_eq!(reader.next_chunk()?.unwrap().start_col(), 5);
+/// std::fs::remove_dir_all(&dir)?;
+/// # Ok::<(), pds::Error>(())
+/// ```
+pub struct SparseStoreReader {
+    dir: PathBuf,
+    manifest: StoreManifest,
+    /// Index of the shard the cursor is in.
+    shard: usize,
+    /// Columns of that shard already consumed.
+    col_in_shard: usize,
+    /// Open handle on the current shard (checksum already verified).
+    handle: Option<File>,
+    /// Max columns per returned chunk.
+    chunk_cols: usize,
+    /// Verify shard checksums on open (and chunk structure on read).
+    verify: bool,
+}
+
+impl SparseStoreReader {
+    /// Open a completed store (requires `manifest.pdsm`; a writer that
+    /// never finished leaves none).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = StoreManifest::load(dir)?;
+        let chunk_cols = manifest.shard_cols.max(1);
+        Ok(SparseStoreReader {
+            dir: dir.to_path_buf(),
+            manifest,
+            shard: 0,
+            col_in_shard: 0,
+            handle: None,
+            chunk_cols,
+            verify: true,
+        })
+    }
+
+    /// Cap the heap held by any returned chunk to roughly `bytes`
+    /// (12 bytes per kept entry), never below one column. Shards larger
+    /// than the budget are streamed in column slices.
+    ///
+    /// This bounds what the *reader* hands out per call; a consumer that
+    /// retains chunks (e.g. the K-means fit, which iterates over all
+    /// samples) still accumulates the full compressed size.
+    pub fn with_memory_budget(mut self, bytes: usize) -> Self {
+        let per_col = (self.manifest.m * 12).max(1);
+        self.chunk_cols = (bytes / per_col).max(1);
+        self
+    }
+
+    /// Enable/disable checksum + structural verification (on by default;
+    /// turning it off skips the extra read pass per shard).
+    pub fn with_verify(mut self, verify: bool) -> Self {
+        self.verify = verify;
+        self
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    /// Rebuild the [`Sparsifier`] this store was written with (needed to
+    /// unmix centers/components back to the original domain) and check it
+    /// against the manifest's recorded shape.
+    pub fn sparsifier(&self) -> Result<Sparsifier> {
+        let sp = Sparsifier::new(self.manifest.p_orig, self.manifest.sparsify_config())?;
+        if sp.p() != self.manifest.p || sp.m() != self.manifest.m {
+            return corrupt(format!(
+                "manifest inconsistent: config rebuilds to p={} m={}, manifest records p={} m={}",
+                sp.p(),
+                sp.m(),
+                self.manifest.p,
+                self.manifest.m
+            ));
+        }
+        Ok(sp)
+    }
+
+    /// Global column index the next [`next_chunk`](Self::next_chunk) will
+    /// start at (`n` when the pass is exhausted).
+    pub fn position(&self) -> usize {
+        match self.manifest.shards.get(self.shard) {
+            Some(s) => s.start_col + self.col_in_shard,
+            None => self.manifest.n,
+        }
+    }
+
+    /// Resume a pass at global column `col` (0 ≤ `col` ≤ `n`; `col = n`
+    /// positions at end-of-pass). This is the crash-resume hook: a
+    /// consumer that checkpoints [`position`](Self::position) can
+    /// continue without rereading earlier shards.
+    pub fn seek_to_col(&mut self, col: usize) -> Result<()> {
+        self.handle = None;
+        if col == self.manifest.n {
+            self.shard = self.manifest.shards.len();
+            self.col_in_shard = 0;
+            return Ok(());
+        }
+        let Some(idx) = self.manifest.shard_for_col(col) else {
+            return invalid(format!(
+                "seek_to_col: column {col} out of range (store holds {})",
+                self.manifest.n
+            ));
+        };
+        self.shard = idx;
+        self.col_in_shard = col - self.manifest.shards[idx].start_col;
+        Ok(())
+    }
+
+    /// Restart from column 0 (a fresh pass).
+    pub fn rewind(&mut self) {
+        self.shard = 0;
+        self.col_in_shard = 0;
+        self.handle = None;
+    }
+
+    /// Pull the next chunk (at most the memory budget's worth of
+    /// columns); `None` ends the pass.
+    pub fn next_chunk(&mut self) -> Result<Option<SparseChunk>> {
+        loop {
+            if self.shard >= self.manifest.shards.len() {
+                return Ok(None);
+            }
+            let (n_cols, start_col) = {
+                let e = &self.manifest.shards[self.shard];
+                (e.n_cols, e.start_col)
+            };
+            if self.col_in_shard >= n_cols {
+                self.shard += 1;
+                self.col_in_shard = 0;
+                self.handle = None;
+                continue;
+            }
+            if self.handle.is_none() {
+                self.open_shard()?;
+            }
+            let m = self.manifest.m;
+            let a = self.col_in_shard;
+            let b = (a + self.chunk_cols).min(n_cols);
+            let cols = b - a;
+            let f = self.handle.as_mut().expect("shard just opened");
+            // indices block, then values block (two seeks because the
+            // blocks are contiguous per shard, not interleaved)
+            f.seek(SeekFrom::Start((SHARD_HEADER_LEN + a * m * 4) as u64))?;
+            let mut ibuf = vec![0u8; cols * m * 4];
+            f.read_exact(&mut ibuf)?;
+            f.seek(SeekFrom::Start(
+                (SHARD_HEADER_LEN + n_cols * m * 4 + a * m * 8) as u64,
+            ))?;
+            let mut vbuf = vec![0u8; cols * m * 8];
+            f.read_exact(&mut vbuf)?;
+            let indices: Vec<u32> = ibuf
+                .chunks_exact(4)
+                .map(|q| u32::from_le_bytes([q[0], q[1], q[2], q[3]]))
+                .collect();
+            let values: Vec<f64> = vbuf
+                .chunks_exact(8)
+                .map(|q| {
+                    f64::from_le_bytes([q[0], q[1], q[2], q[3], q[4], q[5], q[6], q[7]])
+                })
+                .collect();
+            self.col_in_shard = b;
+            let chunk = SparseChunk::from_raw(self.manifest.p, m, cols, indices, values, start_col + a)?;
+            if self.verify {
+                if let Err(e) = chunk.validate() {
+                    return corrupt(format!("shard {}: invalid chunk structure ({e})", self.shard));
+                }
+            }
+            return Ok(Some(chunk));
+        }
+    }
+
+    /// Open the current shard: length check, optional CRC pass, header
+    /// validation against the manifest.
+    fn open_shard(&mut self) -> Result<()> {
+        let entry = &self.manifest.shards[self.shard];
+        let path = self.dir.join(&entry.file);
+        let m = self.manifest.m;
+        let expected_len = (SHARD_HEADER_LEN + entry.n_cols * m * 12) as u64;
+        let meta = std::fs::metadata(&path).map_err(|e| {
+            Error::Corrupt(format!("{}: missing shard file ({e})", path.display()))
+        })?;
+        if meta.len() != expected_len {
+            return corrupt(format!(
+                "{}: truncated or oversized shard ({} bytes, expected {expected_len})",
+                path.display(),
+                meta.len()
+            ));
+        }
+        let mut f = File::open(&path)?;
+        if self.verify {
+            let mut crc = Crc32::new();
+            let mut buf = vec![0u8; 64 * 1024];
+            loop {
+                let got = f.read(&mut buf)?;
+                if got == 0 {
+                    break;
+                }
+                crc.update(&buf[..got]);
+            }
+            if crc.finish() != entry.crc32 {
+                return corrupt(format!(
+                    "{}: checksum mismatch (computed {:08x}, manifest {:08x})",
+                    path.display(),
+                    crc.finish(),
+                    entry.crc32
+                ));
+            }
+            f.seek(SeekFrom::Start(0))?;
+        }
+        let mut header = [0u8; SHARD_HEADER_LEN];
+        f.read_exact(&mut header)?;
+        if &header[0..4] != SHARD_MAGIC {
+            return corrupt(format!("{}: bad shard magic", path.display()));
+        }
+        let u32_at = |off: usize| u32::from_le_bytes([header[off], header[off + 1], header[off + 2], header[off + 3]]);
+        let version = u32_at(4);
+        if version != SHARD_VERSION {
+            return corrupt(format!("{}: shard version {version} unsupported", path.display()));
+        }
+        let (hp, hm, hn) = (u32_at(8) as usize, u32_at(12) as usize, u32_at(16) as usize);
+        let hstart = u64::from_le_bytes([
+            header[20], header[21], header[22], header[23], header[24], header[25], header[26],
+            header[27],
+        ]) as usize;
+        if hp != self.manifest.p
+            || hm != m
+            || hn != entry.n_cols
+            || hstart != entry.start_col
+        {
+            return corrupt(format!(
+                "{}: shard header (p={hp} m={hm} n={hn} start={hstart}) disagrees with manifest \
+                 (p={} m={m} n={} start={})",
+                path.display(),
+                self.manifest.p,
+                entry.n_cols,
+                entry.start_col
+            ));
+        }
+        self.handle = Some(f);
+        Ok(())
+    }
+}
+
+impl SparseChunkSource for SparseStoreReader {
+    fn p(&self) -> usize {
+        self.manifest.p
+    }
+
+    fn m(&self) -> usize {
+        self.manifest.m
+    }
+
+    fn n_hint(&self) -> Option<usize> {
+        Some(self.manifest.n)
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<SparseChunk>> {
+        SparseStoreReader::next_chunk(self)
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.rewind();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::coordinator::{compress_stream, MatSource, StreamConfig};
+    use crate::error::Error;
+    use crate::linalg::Mat;
+    use crate::metrics::Timer;
+    use crate::rng::Pcg64;
+    use crate::sampling::SparsifyConfig;
+    use crate::store::{SparseStoreWriter, MANIFEST_FILE};
+    use crate::testing::prop::forall;
+    use crate::transform::TransformKind;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("pds_store_mod_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    /// Compress `x` through the full pipeline into a store at `dir`.
+    fn write_store(
+        dir: &PathBuf,
+        x: &Mat,
+        scfg: SparsifyConfig,
+        chunk_cols: usize,
+        shard_cols: usize,
+        workers: usize,
+    ) -> StoreManifest {
+        let sp = Sparsifier::new(x.rows(), scfg).unwrap();
+        let mut writer =
+            SparseStoreWriter::create(dir, &sp, scfg, true, shard_cols).unwrap();
+        let mut src = MatSource::new(x, chunk_cols);
+        let mut timer = Timer::new();
+        let cfg = StreamConfig { workers, queue_depth: 2, chunk_cols };
+        let mut sink = |c: SparseChunk| writer.append(c);
+        compress_stream(&mut src, &sp, cfg, true, &mut sink, &mut timer).unwrap();
+        writer.finish().unwrap()
+    }
+
+    /// Every file in `dir`, as (name, bytes), sorted by name.
+    fn dir_bytes(dir: &PathBuf) -> Vec<(String, Vec<u8>)> {
+        let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (
+                    e.file_name().to_string_lossy().into_owned(),
+                    std::fs::read(e.path()).unwrap(),
+                )
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    #[test]
+    fn roundtrip_property_random_shapes_and_budgets() {
+        forall("store_roundtrip", 12, |g| {
+            let p = 1usize << g.int(3, 6); // 8..64
+            let n = g.int(5, 120) as usize;
+            let gamma = g.float(0.1, 0.8);
+            let chunk_cols = g.int(1, 40) as usize;
+            let shard_cols = g.int(1, 50) as usize;
+            let seed = g.int(0, 1 << 30) as u64;
+            let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
+            let mut rng = Pcg64::seed(seed ^ 0xABCD);
+            let x = Mat::from_fn(p, n, |_, _| rng.normal());
+            let sp = Sparsifier::new(p, scfg).unwrap();
+            let direct = sp.compress_chunk(&x, 0).unwrap();
+
+            let dir = tmpdir(&format!("prop_{}", g.case));
+            let manifest = write_store(&dir, &x, scfg, chunk_cols, shard_cols, 1);
+            assert_eq!(manifest.n, n);
+            assert_eq!(manifest.m, sp.m());
+
+            // read back under a random memory budget, compare bit-exactly
+            let budget_cols = g.int(1, 30) as usize;
+            let mut reader = SparseStoreReader::open(&dir)
+                .unwrap()
+                .with_memory_budget(budget_cols * sp.m() * 12);
+            let mut col = 0usize;
+            while let Some(chunk) = reader.next_chunk().unwrap() {
+                assert_eq!(chunk.start_col(), col);
+                for i in 0..chunk.n() {
+                    assert_eq!(chunk.col_indices(i), direct.col_indices(col + i));
+                    let got = chunk.col_values(i);
+                    let want = direct.col_values(col + i);
+                    for (a, b) in got.iter().zip(want) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                col += chunk.n();
+            }
+            assert_eq!(col, n);
+            std::fs::remove_dir_all(&dir).ok();
+        });
+    }
+
+    #[test]
+    fn store_bytes_are_worker_count_invariant() {
+        let p = 32;
+        let n = 157; // awkward: not a multiple of chunk or shard size
+        let scfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 9 };
+        let mut rng = Pcg64::seed(4);
+        let x = Mat::from_fn(p, n, |_, _| rng.normal());
+        let dir1 = tmpdir("workers1");
+        let dir4 = tmpdir("workers4");
+        write_store(&dir1, &x, scfg, 13, 29, 1);
+        write_store(&dir4, &x, scfg, 13, 29, 4);
+        let a = dir_bytes(&dir1);
+        let b = dir_bytes(&dir4);
+        assert_eq!(a.len(), b.len());
+        for ((na, ba), (nb, bb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(ba, bb, "file {na} differs between worker counts");
+        }
+        std::fs::remove_dir_all(&dir1).ok();
+        std::fs::remove_dir_all(&dir4).ok();
+    }
+
+    fn small_store(name: &str) -> (PathBuf, StoreManifest) {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
+        let mut rng = Pcg64::seed(8);
+        let x = Mat::from_fn(16, 25, |_, _| rng.normal());
+        let dir = tmpdir(name);
+        let manifest = write_store(&dir, &x, scfg, 7, 10, 1);
+        (dir, manifest)
+    }
+
+    fn read_all(reader: &mut SparseStoreReader) -> Result<usize> {
+        let mut cols = 0;
+        while let Some(c) = reader.next_chunk()? {
+            cols += c.n();
+        }
+        Ok(cols)
+    }
+
+    #[test]
+    fn truncated_shard_is_a_typed_error() {
+        let (dir, manifest) = small_store("truncated");
+        let shard = dir.join(&manifest.shards[1].file);
+        let bytes = std::fs::read(&shard).unwrap();
+        std::fs::write(&shard, &bytes[..bytes.len() - 5]).unwrap();
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        match read_all(&mut reader) {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flipped_byte_fails_the_checksum() {
+        let (dir, manifest) = small_store("badcrc");
+        let shard = dir.join(&manifest.shards[0].file);
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let at = bytes.len() - 3; // deep in the values block
+        bytes[at] ^= 0x40;
+        std::fs::write(&shard, &bytes).unwrap();
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        match read_all(&mut reader) {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // with verification off the corruption goes undetected (documented
+        // trade-off) but still reads without panicking
+        let mut unchecked = SparseStoreReader::open(&dir).unwrap().with_verify(false);
+        assert_eq!(read_all(&mut unchecked).unwrap(), 25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_manifest_m_is_a_typed_error() {
+        let (dir, _) = small_store("badm");
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        // m = 8 for p=16, gamma=0.5; shard sizes stop matching under m=7
+        std::fs::write(&mpath, text.replace("m = 8", "m = 7")).unwrap();
+        match SparseStoreReader::open(&dir) {
+            Ok(mut reader) => match read_all(&mut reader) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("expected Corrupt, got {other:?}"),
+            },
+            Err(Error::Corrupt(_)) => {}
+            Err(other) => panic!("expected Corrupt, got {other}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_shard_file_is_a_typed_error() {
+        let (dir, manifest) = small_store("missing");
+        std::fs::remove_file(dir.join(&manifest.shards[2].file)).unwrap();
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        match read_all(&mut reader) {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("missing"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unfinished_store_is_invisible_to_readers() {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
+        let sp = Sparsifier::new(16, scfg).unwrap();
+        let dir = tmpdir("unfinished");
+        let mut rng = Pcg64::seed(1);
+        let x = Mat::from_fn(16, 12, |_, _| rng.normal());
+        let mut writer = SparseStoreWriter::create(&dir, &sp, scfg, true, 4).unwrap();
+        writer.append(sp.compress_chunk(&x, 0).unwrap()).unwrap();
+        // no finish(): shards exist, manifest does not
+        assert!(SparseStoreReader::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gap_in_stream_fails_finish() {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
+        let sp = Sparsifier::new(8, scfg).unwrap();
+        let dir = tmpdir("gap");
+        let mut rng = Pcg64::seed(2);
+        let x = Mat::from_fn(8, 10, |_, _| rng.normal());
+        let mut writer = SparseStoreWriter::create(&dir, &sp, scfg, true, 4).unwrap();
+        // append columns 5.. but never 0..5
+        writer
+            .append(sp.compress_chunk(&x.col_range(5, 10), 5).unwrap())
+            .unwrap();
+        match writer.finish() {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("gap"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_order_appends_reorder_deterministically() {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 4 };
+        let sp = Sparsifier::new(8, scfg).unwrap();
+        let mut rng = Pcg64::seed(3);
+        let x = Mat::from_fn(8, 20, |_, _| rng.normal());
+        let c0 = sp.compress_chunk(&x.col_range(0, 6), 0).unwrap();
+        let c1 = sp.compress_chunk(&x.col_range(6, 13), 6).unwrap();
+        let c2 = sp.compress_chunk(&x.col_range(13, 20), 13).unwrap();
+
+        let dir_fwd = tmpdir("order_fwd");
+        let mut w = SparseStoreWriter::create(&dir_fwd, &sp, scfg, true, 9).unwrap();
+        for c in [c0.clone(), c1.clone(), c2.clone()] {
+            w.append(c).unwrap();
+        }
+        w.finish().unwrap();
+
+        let dir_rev = tmpdir("order_rev");
+        let mut w = SparseStoreWriter::create(&dir_rev, &sp, scfg, true, 9).unwrap();
+        for c in [c2, c0, c1] {
+            w.append(c).unwrap();
+        }
+        w.finish().unwrap();
+
+        assert_eq!(dir_bytes(&dir_fwd), dir_bytes(&dir_rev));
+        std::fs::remove_dir_all(&dir_fwd).ok();
+        std::fs::remove_dir_all(&dir_rev).ok();
+    }
+
+    #[test]
+    fn writer_rejects_overlap_duplicate_and_bad_shape() {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 5 };
+        let sp = Sparsifier::new(8, scfg).unwrap();
+        let dir = tmpdir("rejects");
+        let mut rng = Pcg64::seed(5);
+        let x = Mat::from_fn(8, 10, |_, _| rng.normal());
+        let mut writer = SparseStoreWriter::create(&dir, &sp, scfg, true, 16).unwrap();
+        writer.append(sp.compress_chunk(&x.col_range(0, 6), 0).unwrap()).unwrap();
+        // overlap: starts inside already-written data
+        let overlap = sp.compress_chunk(&x.col_range(3, 8), 3).unwrap();
+        assert!(matches!(writer.append(overlap), Err(Error::Invalid(_))));
+        // duplicate pending start
+        let ahead = sp.compress_chunk(&x.col_range(8, 10), 8).unwrap();
+        writer.append(ahead.clone()).unwrap();
+        assert!(matches!(writer.append(ahead), Err(Error::Invalid(_))));
+        // range overlap with a parked chunk (would otherwise surface as a
+        // misleading gap error at finish)
+        let into_parked = sp.compress_chunk(&x.col_range(6, 9), 6).unwrap();
+        match writer.append(into_parked) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("overlaps pending"), "{msg}"),
+            other => panic!("expected Invalid overlap, got {other:?}"),
+        }
+        // wrong shape
+        let other = Sparsifier::new(
+            16,
+            SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 5 },
+        )
+        .unwrap();
+        let bad = other.compress_chunk(&Mat::zeros(16, 2), 6).unwrap();
+        assert!(matches!(writer.append(bad), Err(Error::Shape(_))));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_refuses_to_clobber_a_finished_store() {
+        let (dir, _) = small_store("clobber");
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
+        let sp = Sparsifier::new(16, scfg).unwrap();
+        assert!(matches!(
+            SparseStoreWriter::create(&dir, &sp, scfg, true, 4),
+            Err(Error::Invalid(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn seek_and_position_resume_mid_pass() {
+        let (dir, _) = small_store("resume");
+        let mut full = SparseStoreReader::open(&dir).unwrap();
+        let mut all: Vec<(Vec<u32>, Vec<u64>)> = Vec::new();
+        while let Some(c) = full.next_chunk().unwrap() {
+            for i in 0..c.n() {
+                all.push((
+                    c.col_indices(i).to_vec(),
+                    c.col_values(i).iter().map(|v| v.to_bits()).collect(),
+                ));
+            }
+        }
+        assert_eq!(all.len(), 25);
+        assert_eq!(full.position(), 25);
+
+        // resume at an arbitrary column, mid-shard
+        let mut resumed = SparseStoreReader::open(&dir).unwrap();
+        resumed.seek_to_col(13).unwrap();
+        assert_eq!(resumed.position(), 13);
+        let mut col = 13usize;
+        while let Some(c) = resumed.next_chunk().unwrap() {
+            assert_eq!(c.start_col(), col);
+            for i in 0..c.n() {
+                assert_eq!(c.col_indices(i), &all[col + i].0[..]);
+            }
+            col += c.n();
+        }
+        assert_eq!(col, 25);
+        // seek to the very end is legal; past it is not
+        resumed.seek_to_col(25).unwrap();
+        assert!(resumed.next_chunk().unwrap().is_none());
+        assert!(resumed.seek_to_col(26).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 6 };
+        let sp = Sparsifier::new(8, scfg).unwrap();
+        let dir = tmpdir("empty");
+        let writer = SparseStoreWriter::create(&dir, &sp, scfg, true, 4).unwrap();
+        let manifest = writer.finish().unwrap();
+        assert_eq!(manifest.n, 0);
+        assert!(manifest.shards.is_empty());
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        assert!(reader.next_chunk().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,300 @@
+//! Shard writer: turns a stream of [`SparseChunk`]s into the on-disk
+//! store. Chunks may arrive out of stream order (the compress pipeline's
+//! workers race); the writer reorders them through a bounded pending map,
+//! so the emitted bytes depend only on the global column order — making
+//! store files **byte-identical for every worker count**.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{invalid, shape_err, Error, Result};
+use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sparse::SparseChunk;
+use crate::transform::TransformKind;
+
+use super::manifest::{ShardEntry, StoreManifest, MANIFEST_FILE};
+use super::{shard_file_name, Crc32, SHARD_MAGIC, SHARD_VERSION};
+
+/// Serialization block size (entries per `write_all`) — bounds the
+/// scratch buffer while keeping syscalls large.
+const WRITE_BLOCK: usize = 16 * 1024;
+
+/// Streaming writer for a sharded sparse store.
+///
+/// Append [`SparseChunk`]s as they come off `compress_stream` (any order
+/// within the pipeline's bounded in-flight window); every full
+/// `shard_cols` columns are flushed to a `shard-NNNNN.pdsb` file with a
+/// running CRC-32. [`finish`](Self::finish) flushes the tail shard and
+/// writes the manifest atomically — a store is invisible to readers until
+/// that final rename.
+///
+/// # Example
+///
+/// ```
+/// use pds::linalg::Mat;
+/// use pds::rng::Pcg64;
+/// use pds::sampling::{Sparsifier, SparsifyConfig};
+/// use pds::store::{SparseStoreReader, SparseStoreWriter};
+/// use pds::transform::TransformKind;
+///
+/// let dir = std::env::temp_dir().join(format!("pds_doc_writer_{}", std::process::id()));
+/// # let _ = std::fs::remove_dir_all(&dir);
+/// let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
+/// let sp = Sparsifier::new(16, cfg)?;
+/// let mut rng = Pcg64::seed(1);
+/// let x = Mat::from_fn(16, 12, |_, _| rng.normal());
+///
+/// // compress once ...
+/// let mut writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 5)?;
+/// writer.append(sp.compress_chunk(&x, 0)?)?;
+/// let manifest = writer.finish()?;
+/// assert_eq!(manifest.n, 12);
+/// assert_eq!(manifest.shards.len(), 3); // 5 + 5 + 2 columns
+///
+/// // ... analyze many: read back bit-exactly
+/// let mut reader = SparseStoreReader::open(&dir)?;
+/// let first = reader.next_chunk()?.unwrap();
+/// assert_eq!(first.col_indices(0), sp.compress_chunk(&x, 0)?.col_indices(0));
+/// std::fs::remove_dir_all(&dir)?;
+/// # Ok::<(), pds::Error>(())
+/// ```
+pub struct SparseStoreWriter {
+    dir: PathBuf,
+    p: usize,
+    p_orig: usize,
+    m: usize,
+    gamma: f64,
+    transform: TransformKind,
+    seed: u64,
+    preconditioned: bool,
+    shard_cols: usize,
+    /// Next global column the store is waiting for.
+    next_col: usize,
+    /// Reorder window: chunks that arrived ahead of `next_col`, keyed by
+    /// `start_col`. Bounded by the compress pipeline's in-flight cap.
+    pending: BTreeMap<usize, SparseChunk>,
+    /// Fixed-stride buffers of the shard currently being filled.
+    cur_indices: Vec<u32>,
+    cur_values: Vec<f64>,
+    /// Global column index of the current shard's first sample.
+    cur_start: usize,
+    shards: Vec<ShardEntry>,
+}
+
+impl SparseStoreWriter {
+    /// Create the store directory (and parents) and start writing a store
+    /// for the output of `sp`. Fails if `dir` already holds a completed
+    /// store. `preconditioned` records whether chunks went through the
+    /// ROS (false for the ablation arm) so readers unmix correctly.
+    pub fn create(
+        dir: &Path,
+        sp: &Sparsifier,
+        cfg: SparsifyConfig,
+        preconditioned: bool,
+        shard_cols: usize,
+    ) -> Result<Self> {
+        if shard_cols == 0 {
+            return invalid("SparseStoreWriter: shard_cols must be positive");
+        }
+        std::fs::create_dir_all(dir)?;
+        if dir.join(MANIFEST_FILE).exists() {
+            return invalid(format!(
+                "{}: a completed sparse store already exists here",
+                dir.display()
+            ));
+        }
+        Ok(SparseStoreWriter {
+            dir: dir.to_path_buf(),
+            p: sp.p(),
+            p_orig: sp.p_orig(),
+            m: sp.m(),
+            gamma: cfg.gamma,
+            transform: cfg.transform,
+            seed: cfg.seed,
+            preconditioned,
+            shard_cols,
+            next_col: 0,
+            pending: BTreeMap::new(),
+            cur_indices: Vec::new(),
+            cur_values: Vec::new(),
+            cur_start: 0,
+            shards: Vec::new(),
+        })
+    }
+
+    /// Columns absorbed into shards (or the current shard buffer) so far.
+    pub fn columns_written(&self) -> usize {
+        self.next_col
+    }
+
+    /// Append one compressed chunk. Chunks ahead of the stream cursor are
+    /// parked until their predecessors arrive; chunks behind it are
+    /// rejected (duplicate or overlapping ranges).
+    pub fn append(&mut self, chunk: SparseChunk) -> Result<()> {
+        if chunk.p() != self.p || chunk.m() != self.m {
+            return shape_err(format!(
+                "store append: chunk is {}x{} per column, store is {}x{}",
+                chunk.p(),
+                chunk.m(),
+                self.p,
+                self.m
+            ));
+        }
+        if chunk.n() == 0 {
+            return Ok(());
+        }
+        let start = chunk.start_col();
+        let end = start + chunk.n();
+        if start < self.next_col {
+            return invalid(format!(
+                "store append: chunk at column {start} overlaps already-written data \
+                 (cursor {})",
+                self.next_col
+            ));
+        }
+        // reject range overlap against parked chunks up front, so a buggy
+        // producer gets an overlap error here instead of a misleading
+        // gap error at finish()
+        if let Some((&ps, pc)) = self.pending.range(..start).next_back() {
+            if ps + pc.n() > start {
+                return invalid(format!(
+                    "store append: chunk [{start}, {end}) overlaps pending chunk [{ps}, {})",
+                    ps + pc.n()
+                ));
+            }
+        }
+        if let Some((&ns, nc)) = self.pending.range(start..).next() {
+            if ns < end {
+                return invalid(format!(
+                    "store append: chunk [{start}, {end}) overlaps pending chunk [{ns}, {})",
+                    ns + nc.n()
+                ));
+            }
+        }
+        self.pending.insert(start, chunk);
+        // drain every chunk that is now contiguous with the cursor
+        loop {
+            let first = match self.pending.keys().next() {
+                Some(&k) if k == self.next_col => k,
+                _ => break,
+            };
+            let chunk = self.pending.remove(&first).expect("key just observed");
+            self.absorb(&chunk)?;
+        }
+        Ok(())
+    }
+
+    /// Copy a contiguous chunk into the shard buffers, flushing every
+    /// time the buffer reaches `shard_cols` columns.
+    fn absorb(&mut self, chunk: &SparseChunk) -> Result<()> {
+        let m = self.m;
+        let n = chunk.n();
+        let mut off = 0usize;
+        while off < n {
+            let room = self.shard_cols - self.cur_cols();
+            let take = room.min(n - off);
+            self.cur_indices
+                .extend_from_slice(&chunk.indices()[off * m..(off + take) * m]);
+            self.cur_values
+                .extend_from_slice(&chunk.values()[off * m..(off + take) * m]);
+            off += take;
+            self.next_col += take;
+            if self.cur_cols() == self.shard_cols {
+                self.flush_shard()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn cur_cols(&self) -> usize {
+        self.cur_indices.len() / self.m
+    }
+
+    /// Write the buffered shard to disk (header, indices block, values
+    /// block), fsync it, and record its manifest entry.
+    fn flush_shard(&mut self) -> Result<()> {
+        let n_cols = self.cur_cols();
+        if n_cols == 0 {
+            return Ok(());
+        }
+        let index = self.shards.len();
+        let file = shard_file_name(index);
+        let path = self.dir.join(&file);
+        let mut crc = Crc32::new();
+        let mut out = BufWriter::new(File::create(&path)?);
+
+        let mut header = Vec::with_capacity(super::SHARD_HEADER_LEN);
+        header.extend_from_slice(SHARD_MAGIC);
+        header.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+        header.extend_from_slice(&(self.p as u32).to_le_bytes());
+        header.extend_from_slice(&(self.m as u32).to_le_bytes());
+        header.extend_from_slice(&(n_cols as u32).to_le_bytes());
+        header.extend_from_slice(&(self.cur_start as u64).to_le_bytes());
+        crc.update(&header);
+        out.write_all(&header)?;
+
+        let mut buf = Vec::with_capacity(WRITE_BLOCK * 8);
+        for block in self.cur_indices.chunks(WRITE_BLOCK) {
+            buf.clear();
+            for v in block {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            crc.update(&buf);
+            out.write_all(&buf)?;
+        }
+        for block in self.cur_values.chunks(WRITE_BLOCK) {
+            buf.clear();
+            for v in block {
+                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            crc.update(&buf);
+            out.write_all(&buf)?;
+        }
+        out.flush()?;
+        let f = out.into_inner().map_err(|e| Error::Io(e.into_error()))?;
+        f.sync_all()?;
+
+        self.shards.push(ShardEntry {
+            index,
+            start_col: self.cur_start,
+            n_cols,
+            crc32: crc.finish(),
+            file,
+        });
+        self.cur_start += n_cols;
+        self.cur_indices.clear();
+        self.cur_values.clear();
+        Ok(())
+    }
+
+    /// Flush the tail shard and write the manifest atomically. Fails —
+    /// leaving no manifest, so the partial store stays invisible — if any
+    /// parked chunk never had its predecessors appended.
+    pub fn finish(mut self) -> Result<StoreManifest> {
+        if let Some(&first) = self.pending.keys().next() {
+            return invalid(format!(
+                "store finish: columns {}..{first} were never appended (gap in the stream)",
+                self.next_col
+            ));
+        }
+        self.flush_shard()?;
+        let manifest = StoreManifest {
+            version: 1,
+            p: self.p,
+            p_orig: self.p_orig,
+            m: self.m,
+            n: self.next_col,
+            gamma: self.gamma,
+            transform: self.transform,
+            seed: self.seed,
+            preconditioned: self.preconditioned,
+            shard_cols: self.shard_cols,
+            shards: std::mem::take(&mut self.shards),
+        };
+        manifest.validate()?;
+        manifest.write_atomic(&self.dir)?;
+        Ok(manifest)
+    }
+}

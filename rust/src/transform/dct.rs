@@ -16,6 +16,7 @@ pub struct DctPlan {
 }
 
 impl DctPlan {
+    /// Precompute twiddle tables for dimension `p`.
     pub fn new(p: usize) -> Self {
         assert!(p > 0);
         let mut mat = vec![0.0; p * p];
@@ -32,6 +33,7 @@ impl DctPlan {
         DctPlan { p, mat }
     }
 
+    /// Dimension the plan was built for.
     pub fn p(&self) -> usize {
         self.p
     }

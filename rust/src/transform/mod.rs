@@ -34,6 +34,23 @@ impl TransformKind {
             TransformKind::Dct => 0.5,
         }
     }
+
+    /// Stable lowercase name, used by store manifests and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransformKind::Hadamard => "hadamard",
+            TransformKind::Dct => "dct",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name); `None` for unknown strings.
+    pub fn from_name(s: &str) -> Option<TransformKind> {
+        match s {
+            "hadamard" => Some(TransformKind::Hadamard),
+            "dct" => Some(TransformKind::Dct),
+            _ => None,
+        }
+    }
 }
 
 /// A sampled ROS instance: the `D` diagonal (±1 signs) plus the `H` plan.
@@ -65,10 +82,12 @@ impl Ros {
         Ok(Ros { kind, signs: signs(p, rng), dct, p })
     }
 
+    /// Dimension this ROS instance was sampled for.
     pub fn p(&self) -> usize {
         self.p
     }
 
+    /// Which orthonormal transform `H` this instance applies.
     pub fn kind(&self) -> TransformKind {
         self.kind
     }
