@@ -3,20 +3,25 @@
 //! is reproducible.
 //!
 //! Measures (1) the blocked FWHT, (2) mask sampling (O(p)-reset reference
-//! vs the O(m) `IndexSampler`), (3) masked assignment and (4) the
+//! vs the O(m) `IndexSampler`), (3) masked assignment, (4) the
 //! covariance scatter — the latter two at 1/2/4 workers to show thread
-//! scaling. Results are also emitted as `BENCH_hotpaths.json` at the
-//! repository root (schema documented in EXPERIMENTS.md).
+//! scaling — and (5) the PCA solver comparison: materialized-covariance
+//! (`sym_eig_topk` on the p×p estimate) vs covariance-free block-Krylov
+//! (`SparseCovOp`) at p = 2^12..2^14. Results are also emitted as
+//! `BENCH_hotpaths.json` at the repository root (schema documented in
+//! EXPERIMENTS.md).
 
 use std::io::Write as _;
 
 use pds::bench::BenchResult;
 use pds::data::{digits, DigitConfig};
-use pds::estimators::CovarianceEstimator;
+use pds::estimators::{CovarianceEstimator, SparseCovOp};
 use pds::kmeans::{kmeans_pp_dense, NativeAssigner, SparseAssigner};
 use pds::linalg::Mat;
+use pds::pca::Pca;
 use pds::rng::Pcg64;
 use pds::sampling::{sample_indices, IndexSampler, Sparsifier, SparsifyConfig};
+use pds::testing::fixtures::sparse_chunk;
 use pds::transform::fwht_inplace;
 use pds::transform::TransformKind;
 
@@ -130,6 +135,64 @@ fn main() {
         let rate = scatters / r.median_s / 1e6;
         println!("   -> {rate:.1} M scatter-madds/s");
         entries.push(Entry { result: r, metric: "M scatter-madds/s", value: rate });
+    }
+
+    // 5) PCA solver comparison at p = 2^12..2^14: the p×p-materializing
+    //    covariance path (scatter + estimate + subspace iteration) vs the
+    //    covariance-free block-Krylov path on the same chunk. Matched
+    //    iteration budgets so the comparison isolates the data structure.
+    //    The covariance arm allocates O(p²) — ~6 GB transient at p=16384
+    //    (accumulator + two estimate copies) — so that one size is gated
+    //    behind PDS_BENCH_FULL=1; the krylov arm runs everywhere in
+    //    O(p·(k+4)) on top of the ~5 MB chunk.
+    pds::bench::section("pca solver: covariance (p x p) vs krylov (covariance-free)");
+    const SOLVER_K: usize = 10;
+    const SOLVER_ITERS: usize = 4;
+    let full = std::env::var("PDS_BENCH_FULL").is_ok();
+    for p in [4096usize, 8192, 16384] {
+        let n = 512usize;
+        let m = p / 20; // gamma = 0.05
+        let chunk = sparse_chunk(p, m, n, 0, 0xC0FFEE ^ p as u64);
+        if p < 16384 || full {
+            let r = pds::bench::bench(
+                &format!("pca solve covariance p={p} (n={n},m={m},k={SOLVER_K})"),
+                0,
+                3,
+                || {
+                    let mut est = CovarianceEstimator::new(p, m);
+                    est.accumulate(&chunk);
+                    let c = est.estimate();
+                    let (vals, _) = pds::linalg::sym_eig_topk(&c, SOLVER_K, SOLVER_ITERS, 1);
+                    vals[0]
+                },
+            );
+            let ms = r.median_s * 1e3;
+            println!("   -> {ms:.1} ms/solve, holds a {p}x{p} f64 matrix");
+            entries.push(Entry { result: r, metric: "ms/solve", value: ms });
+        } else {
+            println!(
+                "bench pca solve covariance p={p}: skipped (O(p^2) = {:.1} GB transient; \
+                 set PDS_BENCH_FULL=1 to run)",
+                3.0 * (p * p * 8) as f64 / 1e9
+            );
+        }
+        for workers in [1usize, 4] {
+            let chunks = [chunk.clone()];
+            let r = pds::bench::bench(
+                &format!("pca solve krylov p={p} (n={n},m={m},k={SOLVER_K}) w={workers}"),
+                0,
+                3,
+                || {
+                    let mut op = SparseCovOp::new(&chunks, workers).unwrap();
+                    let pca =
+                        Pca::from_sparse_operator(&mut op, SOLVER_K, SOLVER_ITERS, 1).unwrap();
+                    pca.eigenvalues[0]
+                },
+            );
+            let ms = r.median_s * 1e3;
+            println!("   -> {ms:.1} ms/solve, no p x p allocation");
+            entries.push(Entry { result: r, metric: "ms/solve", value: ms });
+        }
     }
 
     if let Err(e) = write_json(&entries) {

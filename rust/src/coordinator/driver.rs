@@ -46,11 +46,14 @@ pub struct PipelineReport {
 }
 
 /// Target column count when coalescing stream chunks for a fit.
-const FIT_COALESCE_COLS: usize = 8192;
+pub(crate) const FIT_COALESCE_COLS: usize = 8192;
 
 /// Merge sorted, contiguous stream chunks into pieces of at least
 /// `target_cols` columns (the tail piece may be smaller).
-fn coalesce_chunks(chunks: Vec<SparseChunk>, target_cols: usize) -> Result<Vec<SparseChunk>> {
+pub(crate) fn coalesce_chunks(
+    chunks: Vec<SparseChunk>,
+    target_cols: usize,
+) -> Result<Vec<SparseChunk>> {
     let mut out = Vec::new();
     let mut group: Vec<SparseChunk> = Vec::new();
     let mut group_cols = 0usize;

@@ -1,0 +1,337 @@
+//! Covariance-free PCA drivers: the block-Krylov solver wired to the
+//! streaming pipeline and to the persistent sparse store.
+//!
+//! [`run_pca_stream`](super::run_pca_stream) materializes the p×p
+//! Theorem 6 estimate before eigendecomposing — O(p²) memory and the
+//! dominant cost at large p. The drivers here keep only the sparsified
+//! chunks and evaluate the estimate's *action* per block product
+//! ([`estimators::SparseCovOp`](crate::estimators::SparseCovOp), or
+//! [`SourceCovOp`] streaming a [`SparseChunkSource`] once per product),
+//! so the whole fit runs in O(p·(k+4)) working memory on top of the
+//! compressed data:
+//!
+//! * [`run_pca_krylov_stream`] — compress the raw stream once (1 raw
+//!   pass), hold the compressed chunks, solve in memory.
+//! * [`run_pca_krylov_from_store`] / [`run_pca_krylov_sparse`] — fit
+//!   straight from a sparse store (or any sparse source) with **zero**
+//!   raw passes; each Krylov iteration is one memory-budgeted pass over
+//!   the store, so even the compressed data never has to fit in RAM.
+//!
+//! Every path inherits the PR 1 bitwise contract: results are identical
+//! for every worker count and every reader memory budget, and the
+//! mean estimate is bit-identical to the covariance path's.
+
+use std::time::Instant;
+
+use crate::error::{invalid, Result};
+use crate::estimators::{
+    finish_apply, scatter_chunk, unbias_scales, ScatterDiag, SparseCovOp, SparseMeanEstimator,
+};
+use crate::linalg::{Mat, SymOp};
+use crate::metrics::Timer;
+use crate::pca::Pca;
+use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sparse::SparseChunk;
+use crate::store::SparseStoreReader;
+
+use super::driver::{coalesce_chunks, FIT_COALESCE_COLS};
+use super::{compress_stream, ChunkSource, PipelineReport, SparseChunkSource, StreamConfig};
+
+/// Krylov iterations used by the drivers — the same constant as
+/// [`Pca::from_covariance`]'s subspace-iteration count
+/// ([`pca::DEFAULT_PCA_ITERS`](crate::pca::DEFAULT_PCA_ITERS)), so the
+/// two solvers always run matched budgets. Each iteration costs one pass
+/// over the compressed data.
+pub const DEFAULT_KRYLOV_ITERS: usize = crate::pca::DEFAULT_PCA_ITERS;
+
+/// PCA outputs of the covariance-free path. Unlike
+/// [`PcaReport`](super::PcaReport) there is no `covariance` field — not
+/// materializing it is the point.
+pub struct KrylovPcaReport {
+    /// Unbiased sample-mean estimate (Thm 4), original-domain.
+    pub mean: Vec<f64>,
+    /// Top-k principal components + eigenvalues of the implicit Thm 6
+    /// estimate, unmixed to the original domain.
+    pub pca: Pca,
+}
+
+/// The Theorem 6 covariance estimate over a rewindable
+/// [`SparseChunkSource`], as a [`SymOp`]: every
+/// [`apply`](SymOp::apply) resets the source and streams it once,
+/// folding each chunk through the same partition-invariant scatter as
+/// [`SparseCovOp`](crate::estimators::SparseCovOp) — bits never depend
+/// on the worker count or the source's chunk granularity (a store
+/// reader's memory budget included).
+pub struct SourceCovOp<'a> {
+    source: &'a mut dyn SparseChunkSource,
+    p: usize,
+    c1: f64,
+    c2: f64,
+    diag: Vec<f64>,
+    workers: usize,
+    passes: usize,
+}
+
+impl<'a> SourceCovOp<'a> {
+    /// Build the operator: one stats pass over the source (from the
+    /// start) accumulates `diag(W Wᵀ)` and the sample count.
+    pub fn new(source: &'a mut dyn SparseChunkSource, workers: usize) -> Result<Self> {
+        let mut stats = ScatterDiag::new(source.p());
+        source.reset()?;
+        while let Some(chunk) = source.next_chunk()? {
+            stats.accumulate(&chunk);
+        }
+        Self::from_stats(source, &stats, workers)
+    }
+
+    /// Build from an already-accumulated stats pass (the drivers fold
+    /// the diagonal into their mean pass to avoid a second sweep).
+    pub(crate) fn from_stats(
+        source: &'a mut dyn SparseChunkSource,
+        stats: &ScatterDiag,
+        workers: usize,
+    ) -> Result<Self> {
+        let (p, m) = (source.p(), source.m());
+        if m < 2 {
+            return invalid("SourceCovOp needs m >= 2 (Eq. 19 rescale)");
+        }
+        if stats.diag().len() != p {
+            return invalid(format!(
+                "SourceCovOp: stats dimension {} != source p {p}",
+                stats.diag().len()
+            ));
+        }
+        if stats.n() == 0 {
+            return invalid("SourceCovOp: source is empty");
+        }
+        let (c1, c2) = unbias_scales(p, m, stats.n());
+        Ok(SourceCovOp {
+            source,
+            p,
+            c1,
+            c2,
+            diag: stats.diag().to_vec(),
+            workers: workers.max(1),
+            passes: 0,
+        })
+    }
+
+    /// Passes over the sparse source made by [`apply`](SymOp::apply) so
+    /// far (a top-k solve costs `iters + 2`).
+    pub fn passes(&self) -> usize {
+        self.passes
+    }
+}
+
+impl SymOp for SourceCovOp<'_> {
+    fn dim(&self) -> usize {
+        self.p
+    }
+
+    fn apply(&mut self, block: &Mat) -> Result<Mat> {
+        assert_eq!(block.rows(), self.p, "SourceCovOp: block rows != p");
+        let bt = block.transpose();
+        let mut gt = Mat::zeros(block.cols(), self.p);
+        self.source.reset()?;
+        while let Some(chunk) = self.source.next_chunk()? {
+            scatter_chunk(&chunk, &bt, &mut gt, self.workers);
+        }
+        self.passes += 1;
+        Ok(finish_apply(block, &gt, self.c1, self.c2, &self.diag))
+    }
+}
+
+/// One-pass covariance-free streaming PCA: compress the raw stream
+/// (the only raw pass), hold the compressed chunks, and solve the top-k
+/// eigenproblem by block-Krylov iteration over them. Memory is the
+/// compressed size (~`12·m·n` bytes) plus O(p·(k+4)) solver state —
+/// never a p×p matrix. The mean estimate is bit-identical to
+/// [`run_pca_stream`](super::run_pca_stream)'s.
+pub fn run_pca_krylov_stream(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    topk: usize,
+    stream: StreamConfig,
+) -> Result<(KrylovPcaReport, PipelineReport)> {
+    let sp = Sparsifier::new(source.p(), scfg)?;
+    let mut timer = Timer::new();
+    let mut chunks: Vec<SparseChunk> = Vec::new();
+    let mut collect = |c: SparseChunk| -> Result<()> {
+        chunks.push(c);
+        Ok(())
+    };
+    let n = compress_stream(source, &sp, stream, true, &mut collect, &mut timer)?;
+    if n == 0 {
+        return invalid("krylov pca stream: source is empty");
+    }
+    // racing workers deliver chunks out of order; sort + coalesce so
+    // every downstream fold runs in global column order
+    chunks.sort_by_key(|c| c.start_col());
+    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    for c in &chunks {
+        mean_est.accumulate(c);
+    }
+    let mut op = SparseCovOp::new(&chunks, stream.workers)?;
+    let pca_pre = timer.time("eig", || {
+        Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, scfg.seed)
+    })?;
+    let components = sp.unmix(&pca_pre.components);
+    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
+    let mean = sp.unmix(&mean_pre).col(0).to_vec();
+    let report = PipelineReport { timer, n, passes: 1, iterations: 0, engine: "native" };
+    Ok((
+        KrylovPcaReport { mean, pca: Pca { components, eigenvalues: pca_pre.eigenvalues } },
+        report,
+    ))
+}
+
+/// Covariance-free PCA over any rewindable sparse source: one stats
+/// pass (mean + scatter diagonal), then `DEFAULT_KRYLOV_ITERS + 2`
+/// streamed block products. Zero passes over the raw data. The source
+/// is consumed from the start (the driver rewinds it).
+/// `preconditioned = false` skips the adjoint and only drops padding
+/// (ablation stores).
+pub fn run_pca_krylov_sparse(
+    source: &mut dyn SparseChunkSource,
+    sp: &Sparsifier,
+    topk: usize,
+    workers: usize,
+    preconditioned: bool,
+) -> Result<(KrylovPcaReport, PipelineReport)> {
+    if source.p() != sp.p() || source.m() != sp.m() {
+        return invalid(format!(
+            "krylov pca: source is p={} m={}, sparsifier is p={} m={}",
+            source.p(),
+            source.m(),
+            sp.p(),
+            sp.m()
+        ));
+    }
+    let mut timer = Timer::new();
+    let t0 = Instant::now();
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut stats = ScatterDiag::new(sp.p());
+    source.reset()?;
+    while let Some(chunk) = source.next_chunk()? {
+        mean_est.accumulate(&chunk);
+        stats.accumulate(&chunk);
+    }
+    timer.add("stats", t0.elapsed().as_secs_f64());
+    let n = stats.n();
+    if n == 0 {
+        return invalid("krylov pca: source is empty");
+    }
+    let mut op = SourceCovOp::from_stats(source, &stats, workers)?;
+    let pca_pre = timer.time("eig", || {
+        Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, sp.seed())
+    })?;
+    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
+    let (components, mean) = if preconditioned {
+        (sp.unmix(&pca_pre.components), sp.unmix(&mean_pre).col(0).to_vec())
+    } else {
+        (sp.truncate(&pca_pre.components), sp.truncate(&mean_pre).col(0).to_vec())
+    };
+    let report = PipelineReport { timer, n, passes: 0, iterations: 0, engine: "native" };
+    Ok((
+        KrylovPcaReport { mean, pca: Pca { components, eigenvalues: pca_pre.eigenvalues } },
+        report,
+    ))
+}
+
+/// Covariance-free PCA straight from a persistent sparse store
+/// (manifest-driven sparsifier reconstruction; zero raw-data passes).
+/// Each Krylov iteration streams the store once under the reader's
+/// memory budget, so neither p×p *nor* the full compressed data needs
+/// to fit in RAM — the budget bounds the fit's working set.
+pub fn run_pca_krylov_from_store(
+    store: &mut SparseStoreReader,
+    topk: usize,
+    workers: usize,
+) -> Result<(KrylovPcaReport, PipelineReport)> {
+    let sp = store.sparsifier()?;
+    let preconditioned = store.manifest().preconditioned;
+    run_pca_krylov_sparse(store, &sp, topk, workers, preconditioned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_pca_stream, MatSource};
+    use crate::pca::recovered_components;
+    use crate::rng::Pcg64;
+    use crate::transform::TransformKind;
+
+    #[test]
+    fn krylov_stream_matches_covariance_solver() {
+        let mut rng = Pcg64::seed(19);
+        let d = crate::data::spiked(32, 900, &[8.0, 4.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
+        let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
+
+        let mut src = MatSource::new(&d.data, 128);
+        let (cov, cov_report) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
+        let mut src2 = MatSource::new(&d.data, 128);
+        let (kry, kry_report) = run_pca_krylov_stream(&mut src2, scfg, 2, stream).unwrap();
+
+        assert_eq!(cov_report.passes, 1);
+        assert_eq!(kry_report.passes, 1);
+        assert_eq!(kry_report.n, 900);
+        // same implicit matrix, same iteration budget: same components
+        assert_eq!(
+            recovered_components(&kry.pca.components, &cov.pca.components, 0.95),
+            2
+        );
+        // the mean estimator path is shared — bit-identical
+        for (a, b) in kry.mean.iter().zip(&cov.mean) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mean");
+        }
+        // both recover the planted spikes
+        assert!(recovered_components(&kry.pca.components, &d.centers, 0.9) >= 2);
+    }
+
+    #[test]
+    fn krylov_stream_is_bitwise_worker_invariant() {
+        let mut rng = Pcg64::seed(47);
+        let d = crate::data::spiked(32, 500, &[5.0, 2.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 8 };
+        let mut base_src = MatSource::new(&d.data, 64);
+        let base_stream = StreamConfig { workers: 1, chunk_cols: 64, ..Default::default() };
+        let (base, _) = run_pca_krylov_stream(&mut base_src, scfg, 2, base_stream).unwrap();
+        for workers in [2usize, 4] {
+            let mut src = MatSource::new(&d.data, 64);
+            let stream = StreamConfig { workers, chunk_cols: 64, ..Default::default() };
+            let (par, _) = run_pca_krylov_stream(&mut src, scfg, 2, stream).unwrap();
+            for (a, b) in par
+                .pca
+                .components
+                .as_slice()
+                .iter()
+                .zip(base.pca.components.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "components, workers={workers}");
+            }
+            for (a, b) in par.pca.eigenvalues.iter().zip(&base.pca.eigenvalues) {
+                assert_eq!(a.to_bits(), b.to_bits(), "eigenvalues, workers={workers}");
+            }
+            for (a, b) in par.mean.iter().zip(&base.mean) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mean, workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn source_op_counts_its_passes() {
+        let mut rng = Pcg64::seed(5);
+        let d = crate::data::spiked(16, 200, &[4.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
+        let sp = Sparsifier::new(16, scfg).unwrap();
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+        let mut source = crate::coordinator::SparseVecSource::new(vec![chunk]).unwrap();
+        let mut op = SourceCovOp::new(&mut source, 1).unwrap();
+        assert_eq!(op.dim(), 16);
+        assert_eq!(op.passes(), 0);
+        let (_, _) = crate::linalg::block_krylov_topk(&mut op, 2, 5, 1).unwrap();
+        assert_eq!(op.passes(), 5 + 2);
+    }
+}

@@ -13,6 +13,7 @@
 //! CPU-bound pipeline (DESIGN.md §2).
 
 mod driver;
+mod krylov;
 mod pipeline;
 
 pub use driver::{
@@ -20,6 +21,10 @@ pub use driver::{
     run_sparsified_kmeans_from_store, run_sparsified_kmeans_sparse,
     run_sparsified_kmeans_stream, run_two_pass_stream, two_pass_refine_stream, PcaReport,
     PipelineReport,
+};
+pub use krylov::{
+    run_pca_krylov_from_store, run_pca_krylov_sparse, run_pca_krylov_stream, KrylovPcaReport,
+    SourceCovOp, DEFAULT_KRYLOV_ITERS,
 };
 pub use pipeline::{compress_stream, SparseConsumer};
 

@@ -86,7 +86,10 @@ impl CovarianceEstimator {
     /// Column-partitioned parallel scatter: worker `t` owns columns
     /// `ranges[t]` of `acc` (a contiguous panel of the column-major
     /// buffer) and, per sample, binary-searches the sorted index list for
-    /// the positions that scatter into its panel.
+    /// the positions that scatter into its panel. The first (range,
+    /// panel) runs inline on the caller — the `parallel::run_ranges` /
+    /// `NativeAssigner::assign_into` discipline — so all `workers` cores
+    /// do scatter work instead of one sitting in `join`.
     fn accumulate_scatter_par(&mut self, chunk: &SparseChunk) {
         let p = self.p;
         if self.ranges_cache.is_none() {
@@ -98,35 +101,32 @@ impl CovarianceEstimator {
                 |j| (p - j) as f64,
             ));
         }
-        let ranges = self.ranges_cache.clone().expect("just populated");
-        let panels = parallel::split_col_panels(self.acc.as_mut_slice(), p, &ranges);
-        let jobs: Vec<_> = ranges.into_iter().zip(panels).collect();
-        crossbeam_utils::thread::scope(|scope| {
-            for (r, panel) in jobs {
-                scope.spawn(move |_| {
-                    let (lo, hi) = (r.start as u32, r.end as u32);
-                    for i in 0..chunk.n() {
-                        let idx = chunk.col_indices(i);
-                        let val = chunk.col_values(i);
-                        let a_lo = idx.partition_point(|&j| j < lo);
-                        let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
-                        for a in a_lo..a_hi {
-                            let ja = idx[a] as usize;
-                            let va = val[a];
-                            if va == 0.0 {
-                                continue;
-                            }
-                            let col =
-                                &mut panel[(ja - r.start) * p..(ja - r.start + 1) * p];
-                            for (b, &jb) in idx.iter().enumerate().skip(a) {
-                                col[jb as usize] += val[b] * va;
-                            }
-                        }
+        // borrow the cached split in place (disjoint from the `acc`
+        // borrow below — no per-chunk clone)
+        let ranges = self.ranges_cache.as_deref().expect("just populated");
+        let panels = parallel::split_col_panels(self.acc.as_mut_slice(), p, ranges);
+        let jobs: Vec<_> = ranges.iter().cloned().zip(panels).collect();
+        let work = |r: std::ops::Range<usize>, panel: &mut [f64]| {
+            let (lo, hi) = (r.start as u32, r.end as u32);
+            for i in 0..chunk.n() {
+                let idx = chunk.col_indices(i);
+                let val = chunk.col_values(i);
+                let a_lo = idx.partition_point(|&j| j < lo);
+                let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
+                for a in a_lo..a_hi {
+                    let ja = idx[a] as usize;
+                    let va = val[a];
+                    if va == 0.0 {
+                        continue;
                     }
-                });
+                    let col = &mut panel[(ja - r.start) * p..(ja - r.start + 1) * p];
+                    for (b, &jb) in idx.iter().enumerate().skip(a) {
+                        col[jb as usize] += val[b] * va;
+                    }
+                }
             }
-        })
-        .expect("covariance scatter scope panicked");
+        };
+        parallel::run_panel_jobs(jobs, work);
     }
 
     /// Materialize the symmetric accumulator (mirror lower → upper).
@@ -258,28 +258,14 @@ impl CovBoundInputs {
 mod tests {
     use super::*;
     use crate::linalg::spectral_norm_sym;
-    use crate::rng::Pcg64;
     use crate::sampling::{Sparsifier, SparsifyConfig};
     use crate::transform::TransformKind;
 
+    /// The k=3 spiked workload all these tests were calibrated on
+    /// (λ = 3, 2, 1), from the shared fixture pool — identical bytes to
+    /// the local builder this replaced.
     fn spiked_data(p: usize, n: usize, seed: u64) -> Mat {
-        // x_i = sum_j kappa_ij * lambda_j * u_j, k=3
-        let mut rng = Pcg64::seed(seed);
-        let g = Mat::from_fn(p, 3, |_, _| rng.normal());
-        let u = crate::linalg::orthonormalize(&g);
-        let lambda = [3.0, 2.0, 1.0];
-        let mut x = Mat::zeros(p, n);
-        for j in 0..n {
-            let kap: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
-            for i in 0..p {
-                let mut s = 0.0;
-                for t in 0..3 {
-                    s += kap[t] * lambda[t] * u.get(i, t);
-                }
-                x.set(i, j, s);
-            }
-        }
-        x
+        crate::testing::fixtures::spiked_data(p, n, &[3.0, 2.0, 1.0], seed)
     }
 
     #[test]
@@ -338,7 +324,9 @@ mod tests {
     fn workers_do_not_change_the_accumulator() {
         // column-partitioned scatter: every worker count must reproduce
         // the serial accumulator bit for bit, including across several
-        // accumulate() calls into the same estimator
+        // accumulate() calls into the same estimator. `1` is in the list
+        // as the inline-first regression guard: running the first (range,
+        // panel) on the caller must not perturb any path.
         let (p, n) = (48usize, 200usize);
         let x = spiked_data(p, n, 21);
         let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 13 };
@@ -351,11 +339,34 @@ mod tests {
         serial.accumulate(&c1);
         let e_serial = serial.estimate();
 
-        for w in [2usize, 4, 7] {
+        for w in [1usize, 2, 4, 7] {
             let mut par = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(w);
             par.accumulate(&c0);
             par.accumulate(&c1);
             assert_eq!(par.n(), serial.n());
+            let e_par = par.estimate();
+            for (a, b) in e_serial.as_slice().iter().zip(e_par.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn inline_first_scatter_regression_workers_124() {
+        // regression for the inline-first change: the first (range,
+        // panel) now runs on the calling thread and the cached split is
+        // borrowed instead of cloned per chunk — the scatter bits must be
+        // unchanged for workers ∈ {1, 2, 4}, on raw random chunks too
+        let chunk_a = crate::testing::fixtures::sparse_chunk(40, 7, 150, 0, 91);
+        let chunk_b = crate::testing::fixtures::sparse_chunk(40, 7, 60, 150, 92);
+        let mut serial = CovarianceEstimator::new(40, 7);
+        serial.accumulate(&chunk_a);
+        serial.accumulate(&chunk_b);
+        let e_serial = serial.estimate();
+        for w in [1usize, 2, 4] {
+            let mut par = CovarianceEstimator::new(40, 7).with_workers(w);
+            par.accumulate(&chunk_a);
+            par.accumulate(&chunk_b);
             let e_par = par.estimate();
             for (a, b) in e_serial.as_slice().iter().zip(e_par.as_slice()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={w}");

@@ -1,0 +1,376 @@
+//! The Theorem 6 covariance estimate as an *implicit* operator.
+//!
+//! [`CovarianceEstimator`](super::CovarianceEstimator) materializes the
+//! p×p scatter; for the PCA arm that matrix only ever feeds a top-k
+//! eigensolve, which the block-Krylov solver
+//! ([`linalg::block_krylov_topk`](crate::linalg::block_krylov_topk))
+//! drives through block products alone. This module evaluates that
+//! product directly from sparsified chunks:
+//!
+//! `Ĉ_n · B = c₁ · W (Wᵀ B) − c₂ · diag(W Wᵀ) ∘ B`
+//!
+//! where `W` is the p×n sparse sample matrix (m kept entries per
+//! column), `c₁ = p(p−1)/(m(m−1))/n` is the Eq. 19 rescale and
+//! `c₂ = c₁·(p−m)/(p−1)` the Eq. 21 diagonal unbiasing — the exact same
+//! estimate [`CovarianceEstimator::estimate`](super::CovarianceEstimator::estimate)
+//! materializes, applied in O(n·m·b) flops and O(p·b) memory with **no
+//! p×p allocation**.
+//!
+//! Parallelism follows the PR 1 contract (deterministic range partition +
+//! in-order per-cell accumulation): the dot phase `D = Wᵀ B` partitions
+//! *samples* (each output column is computed by exactly one worker, pure
+//! per sample), the scatter phase `G·B += W·D` partitions the *output
+//! rows* (each cell accumulates its contributions in global sample order
+//! via the same sorted-index binary search as the K-means center update).
+//! Results are therefore bitwise invariant to the worker count **and** to
+//! chunk granularity — a store reader's memory budget changes chunk
+//! boundaries, never bits.
+
+use std::ops::Range;
+
+use crate::error::{invalid, Result};
+use crate::linalg::{Mat, SymOp};
+use crate::parallel;
+use crate::sparse::SparseChunk;
+
+/// Streaming accumulator for `diag(W Wᵀ)` (a p-vector) and the sample
+/// count — the only whole-pass statistics the implicit operator needs.
+/// Accumulation is serial in sample order, so the result is independent
+/// of chunk boundaries.
+#[derive(Clone, Debug)]
+pub struct ScatterDiag {
+    diag: Vec<f64>,
+    n: usize,
+}
+
+impl ScatterDiag {
+    /// Fresh accumulator for chunks of dimension `p`.
+    pub fn new(p: usize) -> Self {
+        ScatterDiag { diag: vec![0.0; p], n: 0 }
+    }
+
+    /// Fold one chunk: `diag[j] += w²` over every kept entry.
+    pub fn accumulate(&mut self, chunk: &SparseChunk) {
+        assert_eq!(chunk.p(), self.diag.len(), "chunk p mismatch");
+        for i in 0..chunk.n() {
+            for (&j, &v) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
+                self.diag[j as usize] += v * v;
+            }
+        }
+        self.n += chunk.n();
+    }
+
+    /// Samples seen so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The accumulated diagonal of the raw scatter `W Wᵀ` (unscaled).
+    pub fn diag(&self) -> &[f64] {
+        &self.diag
+    }
+}
+
+/// The Eq. 19/21 scale pair `(c₁, c₂)`: `Ĉ_n = c₁·G − c₂·diag(G)` for the
+/// raw scatter `G = W Wᵀ`.
+pub(crate) fn unbias_scales(p: usize, m: usize, n: usize) -> (f64, f64) {
+    debug_assert!(m >= 2 && n > 0);
+    let (pf, mf) = (p as f64, m as f64);
+    let c1 = pf * (pf - 1.0) / (mf * (mf - 1.0)) / n as f64;
+    let c2 = c1 * (pf - mf) / (pf - 1.0);
+    (c1, c2)
+}
+
+/// Below this many columns the fork overhead beats the scatter work;
+/// run the chunk serially (bitwise identical either way).
+const MIN_SCATTER_COLS: usize = 256;
+
+/// Fold one chunk's contribution into `gt = (W Wᵀ B)ᵀ` (b×p,
+/// accumulated across calls). `bt` is the transposed block `Bᵀ` (b×p) —
+/// both transposed so every per-index access is a contiguous b-vector.
+pub(crate) fn scatter_chunk(chunk: &SparseChunk, bt: &Mat, gt: &mut Mat, workers: usize) {
+    let b = bt.rows();
+    let p = bt.cols();
+    debug_assert_eq!(chunk.p(), p);
+    debug_assert_eq!((gt.rows(), gt.cols()), (b, p));
+    let nc = chunk.n();
+    if nc == 0 {
+        return;
+    }
+    let workers = if nc < MIN_SCATTER_COLS { 1 } else { workers.max(1) };
+    // phase 1 — Dᵀ (b×nc): column i holds d_i = Σ_t w_t · Bᵀ[:, idx_t].
+    // Sample-partitioned; each column is computed by exactly one worker
+    // with a pure per-sample kernel, so the values are partition-free.
+    let mut dt = Mat::zeros(b, nc);
+    {
+        let ranges = parallel::split_ranges(nc, workers);
+        let panels = parallel::split_col_panels(dt.as_mut_slice(), b, &ranges);
+        let jobs: Vec<_> = ranges.into_iter().zip(panels).collect();
+        parallel::run_panel_jobs(jobs, |r: Range<usize>, panel: &mut [f64]| {
+            for (local, i) in r.enumerate() {
+                let dcol = &mut panel[local * b..(local + 1) * b];
+                for (&j, &v) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
+                    let bcol = bt.col(j as usize);
+                    for (d, x) in dcol.iter_mut().zip(bcol) {
+                        *d += v * x;
+                    }
+                }
+            }
+        });
+    }
+    // phase 2 — gt[:, j] += Σ_i w_{j,i} · d_i, output-row partitioned
+    // (columns of the transposed gt): worker t owns a contiguous column
+    // panel and walks all samples in order, locating its slice of each
+    // sorted index list by binary search — every cell accumulates in
+    // global sample order regardless of the partition.
+    {
+        let ranges = parallel::split_ranges(p, workers);
+        let panels = parallel::split_col_panels(gt.as_mut_slice(), b, &ranges);
+        let jobs: Vec<_> = ranges.into_iter().zip(panels).collect();
+        let dt = &dt;
+        parallel::run_panel_jobs(jobs, |r: Range<usize>, panel: &mut [f64]| {
+            let (lo, hi) = (r.start as u32, r.end as u32);
+            for i in 0..nc {
+                let idx = chunk.col_indices(i);
+                let val = chunk.col_values(i);
+                let a_lo = idx.partition_point(|&j| j < lo);
+                let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
+                if a_lo == a_hi {
+                    continue;
+                }
+                let dcol = dt.col(i);
+                for a in a_lo..a_hi {
+                    let j = (idx[a] as usize) - r.start;
+                    let va = val[a];
+                    let out = &mut panel[j * b..(j + 1) * b];
+                    for (o, d) in out.iter_mut().zip(dcol) {
+                        *o += va * d;
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// Assemble the estimate's action from the accumulated transposed
+/// product: `out[j, l] = c₁·gt[l, j] − c₂·diag[j]·block[j, l]`.
+pub(crate) fn finish_apply(block: &Mat, gt: &Mat, c1: f64, c2: f64, diag: &[f64]) -> Mat {
+    let p = block.rows();
+    let b = block.cols();
+    debug_assert_eq!((gt.rows(), gt.cols()), (b, p));
+    debug_assert_eq!(diag.len(), p);
+    let mut out = Mat::zeros(p, b);
+    for l in 0..b {
+        let bcol = block.col(l);
+        let ocol = out.col_mut(l);
+        for j in 0..p {
+            ocol[j] = c1 * gt.get(l, j) - c2 * diag[j] * bcol[j];
+        }
+    }
+    out
+}
+
+/// The Theorem 6 covariance estimate over in-memory sparsified chunks,
+/// as a [`SymOp`] — the covariance-free backend of
+/// [`Pca::from_sparse_operator`](crate::pca::Pca::from_sparse_operator).
+///
+/// Chunks must share one `(p, m)` shape and should be in global column
+/// order (the drivers sort) so results are bit-for-bit reproducible.
+/// Construction makes one cheap pass to accumulate `diag(W Wᵀ)` and the
+/// sample count; every [`apply`](SymOp::apply) is then one pass over the
+/// chunks.
+///
+/// # Example
+///
+/// ```
+/// use pds::estimators::SparseCovOp;
+/// use pds::linalg::{block_krylov_topk, Mat, SymOp};
+/// use pds::rng::Pcg64;
+/// use pds::sampling::{Sparsifier, SparsifyConfig};
+/// use pds::transform::TransformKind;
+///
+/// let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
+/// let sp = Sparsifier::new(16, cfg)?;
+/// let mut rng = Pcg64::seed(1);
+/// let x = Mat::from_fn(16, 40, |_, _| rng.normal());
+/// let chunks = [sp.compress_chunk(&x, 0)?];
+///
+/// let mut op = SparseCovOp::new(&chunks, 1)?;
+/// assert_eq!(op.dim(), 16);
+/// let (vals, vecs) = block_krylov_topk(&mut op, 2, 30, 7)?;
+/// assert_eq!((vecs.rows(), vecs.cols()), (16, 2));
+/// assert!(vals[0] >= vals[1]);
+/// # Ok::<(), pds::Error>(())
+/// ```
+pub struct SparseCovOp<'a> {
+    chunks: &'a [SparseChunk],
+    p: usize,
+    c1: f64,
+    c2: f64,
+    diag: Vec<f64>,
+    workers: usize,
+}
+
+impl<'a> SparseCovOp<'a> {
+    /// Build the operator over `chunks` with a fork/join width of
+    /// `workers` per block product (any width yields identical bits).
+    pub fn new(chunks: &'a [SparseChunk], workers: usize) -> Result<Self> {
+        let Some(first) = chunks.first() else {
+            return invalid("SparseCovOp: no chunks");
+        };
+        let (p, m) = (first.p(), first.m());
+        if m < 2 {
+            return invalid("SparseCovOp needs m >= 2 (Eq. 19 rescale)");
+        }
+        if chunks.iter().any(|c| c.p() != p || c.m() != m) {
+            return invalid("SparseCovOp: mixed chunk shapes");
+        }
+        let mut stats = ScatterDiag::new(p);
+        for c in chunks {
+            stats.accumulate(c);
+        }
+        if stats.n() == 0 {
+            return invalid("SparseCovOp: no samples");
+        }
+        let (c1, c2) = unbias_scales(p, m, stats.n());
+        let diag = stats.diag().to_vec();
+        Ok(SparseCovOp { chunks, p, c1, c2, diag, workers: workers.max(1) })
+    }
+}
+
+impl SymOp for SparseCovOp<'_> {
+    fn dim(&self) -> usize {
+        self.p
+    }
+
+    fn apply(&mut self, block: &Mat) -> Result<Mat> {
+        assert_eq!(block.rows(), self.p, "SparseCovOp: block rows != p");
+        let bt = block.transpose();
+        let mut gt = Mat::zeros(block.cols(), self.p);
+        for chunk in self.chunks {
+            scatter_chunk(chunk, &bt, &mut gt, self.workers);
+        }
+        Ok(finish_apply(block, &gt, self.c1, self.c2, &self.diag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::CovarianceEstimator;
+    use crate::linalg::DenseSymOp;
+    use crate::testing::fixtures::{randmat, sparse_chunk};
+    use crate::testing::prop::forall;
+
+    /// Split one chunk into contiguous pieces of `cols` columns — the
+    /// memory-budget shape a store reader would hand out.
+    fn split_chunk(chunk: &SparseChunk, cols: usize) -> Vec<SparseChunk> {
+        let mut out = Vec::new();
+        let mut a = 0usize;
+        while a < chunk.n() {
+            let b = (a + cols).min(chunk.n());
+            let (m, n) = (chunk.m(), b - a);
+            out.push(
+                SparseChunk::from_raw(
+                    chunk.p(),
+                    m,
+                    n,
+                    chunk.indices()[a * m..b * m].to_vec(),
+                    chunk.values()[a * m..b * m].to_vec(),
+                    chunk.start_col() + a,
+                )
+                .unwrap(),
+            );
+            a = b;
+        }
+        out
+    }
+
+    #[test]
+    fn apply_matches_explicit_dense_estimate() {
+        // property: op.apply(B) == CovarianceEstimator::estimate() · B
+        // (the materialized Thm 6 matrix) on random chunks and blocks
+        forall("cov_op_vs_dense", 15, |g| {
+            let p = g.int(4, 40) as usize;
+            let m = g.int(2, p as i64) as usize;
+            let n = g.int(1, 60) as usize;
+            let b = g.int(1, 6) as usize;
+            let seed = g.int(0, 1 << 40) as u64;
+            let chunk = sparse_chunk(p, m, n, 0, seed);
+            let block = randmat(p, b, seed ^ 0x5A5A);
+
+            let mut est = CovarianceEstimator::new(p, m);
+            est.accumulate(&chunk);
+            let dense = est.estimate();
+            let want = dense.matmul(&block);
+
+            let chunks = [chunk];
+            let mut op = SparseCovOp::new(&chunks, 1).unwrap();
+            let got = op.apply(&block).unwrap();
+            let scale = want.max_abs().max(1.0);
+            assert!(
+                got.sub(&want).max_abs() / scale < 1e-9,
+                "case {}: |op - dense| = {}",
+                g.case,
+                got.sub(&want).max_abs()
+            );
+
+            // and the dense operator wrapper agrees too (sanity of the
+            // test itself)
+            let mut dop = DenseSymOp::new(&dense);
+            let via_dense = dop.apply(&block).unwrap();
+            assert!(via_dense.sub(&want).max_abs() == 0.0);
+        });
+    }
+
+    #[test]
+    fn apply_is_bitwise_invariant_to_workers_and_chunking() {
+        let p = 48;
+        let m = 9;
+        let n = 700;
+        let whole = sparse_chunk(p, m, n, 0, 31);
+        let block = randmat(p, 5, 77);
+        let chunks = [whole.clone()];
+        let mut base_op = SparseCovOp::new(&chunks, 1).unwrap();
+        let base = base_op.apply(&block).unwrap();
+        for workers in [2usize, 4, 7] {
+            for cols in [64usize, 257, 1000] {
+                let pieces = split_chunk(&whole, cols);
+                let mut op = SparseCovOp::new(&pieces, workers).unwrap();
+                let got = op.apply(&block).unwrap();
+                for (a, b) in got.as_slice().iter().zip(base.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "workers={workers} cols={cols}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_diag_is_chunk_granularity_independent() {
+        let whole = sparse_chunk(24, 5, 100, 0, 3);
+        let mut one = ScatterDiag::new(24);
+        one.accumulate(&whole);
+        let mut many = ScatterDiag::new(24);
+        for piece in split_chunk(&whole, 17) {
+            many.accumulate(&piece);
+        }
+        assert_eq!(one.n(), many.n());
+        for (a, b) in one.diag().iter().zip(many.diag()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(SparseCovOp::new(&[], 1).is_err());
+        let a = sparse_chunk(16, 4, 3, 0, 1);
+        let b = sparse_chunk(16, 5, 3, 3, 2);
+        let both = [a.clone(), b];
+        assert!(SparseCovOp::new(&both, 1).is_err(), "mixed m must be rejected");
+        let thin = sparse_chunk(16, 1, 3, 0, 1);
+        let chunks = [thin];
+        assert!(SparseCovOp::new(&chunks, 1).is_err(), "m < 2 must be rejected");
+        let ok = [a];
+        assert!(SparseCovOp::new(&ok, 1).is_ok());
+    }
+}

@@ -5,12 +5,16 @@
 //!   explicit bound Eq. 16, Corollary 5 sample-size law).
 //! * [`CovarianceEstimator`] — Theorem 6 (Eqs. 19–26: unbiasing, L, σ²,
 //!   spectral-norm bound).
+//! * [`SparseCovOp`] / [`ScatterDiag`] — the same Theorem 6 estimate as
+//!   an *implicit* operator (`Ĉ_n · B` straight from the chunks, no p×p
+//!   materialization) for the covariance-free block-Krylov PCA path.
 //! * [`HkAccumulator`] — Theorem 7 (conditioning of the center-update
 //!   system `H_k μ' = m_k`).
 //! * [`bounds`] — shared Bernstein machinery + data-dependent norms.
 
 mod bounds;
 mod covariance;
+mod covariance_op;
 mod hk;
 mod mean;
 
@@ -18,5 +22,8 @@ pub use bounds::{
     bernstein_invert, corollary5_min_m, rho_preconditioned, tau, DataStats,
 };
 pub use covariance::{CovBoundInputs, CovarianceEstimator};
+pub use covariance_op::{ScatterDiag, SparseCovOp};
 pub use hk::HkAccumulator;
 pub use mean::{MeanBoundInputs, SparseMeanEstimator};
+
+pub(crate) use covariance_op::{finish_apply, scatter_chunk, unbias_scales};

@@ -21,8 +21,12 @@
 //! * [`estimators`] — unbiased sample-mean (Thm 4) and covariance (Thm 6)
 //!   estimators with their concentration bounds, plus the `H_k`
 //!   conditioning result (Thm 7).
-//! * [`pca`] — principal components / explained variance from the
-//!   estimated covariance.
+//! * [`pca`] — principal components / explained variance, from the
+//!   materialized covariance estimate (`Pca::from_covariance`) or
+//!   covariance-free via randomized block-Krylov iteration on an
+//!   implicit operator (`Pca::from_sparse_operator` over
+//!   [`linalg::SymOp`] — no p×p allocation; the `run_pca_krylov_*`
+//!   drivers stream the operator from memory or from the sparse store).
 //! * [`kmeans`] — standard K-means, k-means++ seeding, and **sparsified
 //!   K-means** (Algorithm 1) with its two-pass refinement (Algorithm 2).
 //! * [`baselines`] — feature extraction / feature selection

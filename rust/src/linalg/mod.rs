@@ -4,16 +4,20 @@
 //! the crate, matching the paper's `X ∈ R^{p×n}` convention. The hot
 //! kernels (`matmul`, `syrk`) use an axpy-ordered loop that streams
 //! contiguous columns; QR / symmetric-eig / randomized-SVD live in
-//! submodules.
+//! submodules. [`krylov`](self) adds the operator-driven
+//! ([`SymOp`]) block-Krylov top-k eigensolver, the covariance-free
+//! counterpart of [`sym_eig_topk`].
 
 mod chol;
 mod eig;
+mod krylov;
 mod mat;
 mod qr;
 mod svd;
 
 pub use chol::{cholesky, cholesky_solve};
 pub use eig::{jacobi_eigh, spectral_norm_sym, sym_eig_topk};
+pub use krylov::{block_krylov_topk, DenseSymOp, SymOp};
 pub use mat::Mat;
 pub use qr::{orthonormalize, qr_thin};
 pub use svd::{leverage_scores, randomized_svd, Svd};
@@ -21,12 +25,7 @@ pub use svd::{leverage_scores, randomized_svd, Svd};
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rng::Pcg64;
-
-    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
-        let mut rng = Pcg64::seed(seed);
-        Mat::from_fn(r, c, |_, _| rng.normal())
-    }
+    use crate::testing::fixtures::randmat;
 
     #[test]
     fn matmul_against_naive() {

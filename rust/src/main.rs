@@ -16,8 +16,9 @@ use std::process::ExitCode;
 
 use pds::cli::Args;
 use pds::coordinator::{
-    run_compress_to_store, run_pca_from_store, run_pca_stream,
-    run_sparsified_kmeans_from_store, run_sparsified_kmeans_stream, MatSource, StreamConfig,
+    run_compress_to_store, run_pca_from_store, run_pca_krylov_from_store,
+    run_pca_krylov_stream, run_pca_stream, run_sparsified_kmeans_from_store,
+    run_sparsified_kmeans_stream, MatSource, StreamConfig,
 };
 use pds::data::{gaussian_blobs, DigitConfig};
 use pds::error::{Error, Result};
@@ -79,10 +80,11 @@ fn usage() {
          \x20 pds xp <id|all|list> [--runs N] [--full] [--gammas a,b,c] ...\n\
          \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G] [--workers W] [--engine native|xla]\n\
          \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G] [--workers W]\n\
+         \x20\x20\x20\x20 [--solver covariance|krylov]\n\
          \x20 pds compress --store DIR [--data blobs|digits] [--n N] [--p P] [--gamma G]\n\
          \x20\x20\x20\x20 [--seed S] [--workers W] [--shard-cols C] [--no-precondition]\n\
          \x20 pds fit --store DIR [--task kmeans|pca] [--k K] [--topk K] [--workers W]\n\
-         \x20\x20\x20\x20 [--budget-mb MB]\n\
+         \x20\x20\x20\x20 [--budget-mb MB] [--solver covariance|krylov]\n\
          \x20 pds store-info --store DIR\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
@@ -154,21 +156,39 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--solver` option shared by `pca` and `fit --task pca`.
+fn solver_arg(args: &Args) -> Result<&str> {
+    match args.get("solver").unwrap_or("covariance") {
+        s @ ("covariance" | "krylov") => Ok(s),
+        other => Err(Error::Invalid(format!("--solver {other:?} (want covariance|krylov)"))),
+    }
+}
+
 fn cmd_pca(args: &Args) -> Result<()> {
     let n: usize = args.get_parse("n", 10_000)?;
     let p: usize = args.get_parse("p", 256)?;
     let topk: usize = args.get_parse("topk", 5)?;
     let gamma: f64 = args.get_parse("gamma", 0.1)?;
     let seed: u64 = args.get_parse("seed", 0)?;
+    let solver = solver_arg(args)?;
     let mut rng = Pcg64::seed(seed);
     let d = pds::data::spiked(p, n, &[10.0, 8.0, 6.0, 4.0, 2.0], false, &mut rng);
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
     let mut src = MatSource::new(&d.data, 2048);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
-    let (pca_report, report) = run_pca_stream(&mut src, scfg, topk, stream)?;
-    println!("streaming PCA: n={} gamma={gamma} passes={}", report.n, report.passes);
-    println!("top-{topk} eigenvalues: {:?}", pca_report.pca.eigenvalues);
-    let rec = pds::pca::recovered_components(&pca_report.pca.components, &d.centers, 0.95);
+    let (pca, report) = if solver == "krylov" {
+        let (r, rep) = run_pca_krylov_stream(&mut src, scfg, topk, stream)?;
+        (r.pca, rep)
+    } else {
+        let (r, rep) = run_pca_stream(&mut src, scfg, topk, stream)?;
+        (r.pca, rep)
+    };
+    println!(
+        "streaming PCA ({solver} solver): n={} gamma={gamma} passes={}",
+        report.n, report.passes
+    );
+    println!("top-{topk} eigenvalues: {:?}", pca.eigenvalues);
+    let rec = pds::pca::recovered_components(&pca.components, &d.centers, 0.95);
     println!("recovered {rec}/{} true spiked components (threshold .95)", d.centers.cols());
     for (name, secs) in report.timer.phases() {
         println!("  {name:<10} {secs:.3} s");
@@ -266,12 +286,19 @@ fn cmd_fit(args: &Args) -> Result<()> {
     match task {
         "pca" => {
             let topk: usize = args.get_parse("topk", 5)?;
-            let (pca_report, report) = run_pca_from_store(&mut reader, topk, workers)?;
+            let solver = solver_arg(args)?;
+            let (pca, report) = if solver == "krylov" {
+                let (r, rep) = run_pca_krylov_from_store(&mut reader, topk, workers)?;
+                (r.pca, rep)
+            } else {
+                let (r, rep) = run_pca_from_store(&mut reader, topk, workers)?;
+                (r.pca, rep)
+            };
             println!(
-                "PCA from store: n={} passes over raw data={}",
+                "PCA from store ({solver} solver): n={} passes over raw data={}",
                 report.n, report.passes
             );
-            println!("top-{topk} eigenvalues: {:?}", pca_report.pca.eigenvalues);
+            println!("top-{topk} eigenvalues: {:?}", pca.eigenvalues);
             for (name, secs) in report.timer.phases() {
                 println!("  {name:<10} {secs:.3} s");
             }

@@ -115,6 +115,37 @@ where
     run_ranges(split_ranges(n, workers), work)
 }
 
+/// Run pre-carved `(range, panel)` jobs on scoped threads, first job
+/// inline on the caller — the [`run_ranges`] discipline for consumers
+/// that partition a mutable buffer into per-range panels (via
+/// [`split_col_panels`]). A single job runs entirely inline, so the
+/// serial path stays byte-identical to a plain loop.
+pub fn run_panel_jobs<'p, F>(jobs: Vec<(Range<usize>, &'p mut [f64])>, work: F)
+where
+    F: Fn(Range<usize>, &mut [f64]) + Sync,
+{
+    if jobs.len() <= 1 {
+        for (r, panel) in jobs {
+            work(r, panel);
+        }
+        return;
+    }
+    let work = &work;
+    crossbeam_utils::thread::scope(|scope| {
+        let mut iter = jobs.into_iter();
+        let first = iter.next().expect("len > 1");
+        let handles: Vec<_> = iter
+            .map(|(r, panel)| scope.spawn(move |_| work(r, panel)))
+            .collect();
+        let (r, panel) = first;
+        work(r, panel);
+        for h in handles {
+            h.join().expect("panel worker panicked");
+        }
+    })
+    .expect("panel scope panicked");
+}
+
 /// Split a column-major `rows × cols` buffer into disjoint mutable column
 /// panels, one per range. `ranges` must be contiguous, in order, and
 /// cover `0..cols` (exactly what [`split_ranges`] /
@@ -224,6 +255,28 @@ mod tests {
                 for i in 0..rows {
                     assert_eq!(data[j * rows + i], t as f64);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_jobs_cover_every_cell_at_any_width() {
+        let rows = 2;
+        let cols = 9;
+        for workers in [1usize, 3, 9] {
+            let mut data = vec![0.0f64; rows * cols];
+            let ranges = split_ranges(cols, workers);
+            let panels = split_col_panels(&mut data, rows, &ranges);
+            let jobs: Vec<_> = ranges.into_iter().zip(panels).collect();
+            run_panel_jobs(jobs, |r: Range<usize>, panel: &mut [f64]| {
+                for (local, j) in r.enumerate() {
+                    for i in 0..rows {
+                        panel[local * rows + i] = (j * rows + i) as f64;
+                    }
+                }
+            });
+            for (pos, v) in data.iter().enumerate() {
+                assert_eq!(*v, pos as f64, "workers={workers}");
             }
         }
     }

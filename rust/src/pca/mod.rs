@@ -2,7 +2,14 @@
 //! quality metrics: explained variance (Fig. 1) and recovered-PC count
 //! (Table I, inner product ≥ 0.95).
 
-use crate::linalg::{sym_eig_topk, Mat};
+use crate::error::Result;
+use crate::linalg::{block_krylov_topk, sym_eig_topk, Mat, SymOp};
+
+/// Subspace-iteration count used by [`Pca::from_covariance`] and, via
+/// `coordinator::DEFAULT_KRYLOV_ITERS`, by the covariance-free drivers —
+/// one constant so the two solvers always run matched iteration budgets
+/// (the solver-comparison experiments and tests rely on this).
+pub const DEFAULT_PCA_ITERS: usize = 30;
 
 /// Principal components extracted from a symmetric covariance estimate.
 pub struct Pca {
@@ -16,8 +23,50 @@ impl Pca {
     /// Top-`k` eigenpairs of a symmetric (estimated) covariance matrix via
     /// randomized subspace iteration.
     pub fn from_covariance(c: &Mat, k: usize, seed: u64) -> Pca {
-        let (vals, vecs) = sym_eig_topk(c, k, 30, seed);
+        let (vals, vecs) = sym_eig_topk(c, k, DEFAULT_PCA_ITERS, seed);
         Pca { components: vecs, eigenvalues: vals }
+    }
+
+    /// Top-`k` eigenpairs of an *implicit* covariance operator via
+    /// randomized block-Krylov iteration
+    /// ([`block_krylov_topk`](crate::linalg::block_krylov_topk)) — the
+    /// covariance-free PCA path. With a sparse operator
+    /// ([`SparseCovOp`](crate::estimators::SparseCovOp), or the
+    /// store-streaming operator inside the `run_pca_krylov_*` drivers)
+    /// this never materializes a p×p matrix: working memory is
+    /// O(p·(k+4)) and the operator is applied `iters + 2` times.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use pds::estimators::SparseCovOp;
+    /// use pds::linalg::Mat;
+    /// use pds::pca::Pca;
+    /// use pds::rng::Pcg64;
+    /// use pds::sampling::{Sparsifier, SparsifyConfig};
+    /// use pds::transform::TransformKind;
+    ///
+    /// let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
+    /// let sp = Sparsifier::new(32, cfg)?;
+    /// let mut rng = Pcg64::seed(5);
+    /// let x = Mat::from_fn(32, 60, |_, _| rng.normal());
+    /// let chunks = [sp.compress_chunk(&x, 0)?];
+    ///
+    /// // top-3 PCs of the Thm 6 estimate, no p×p matrix anywhere
+    /// let mut op = SparseCovOp::new(&chunks, 1)?;
+    /// let pca = Pca::from_sparse_operator(&mut op, 3, 30, cfg.seed)?;
+    /// assert_eq!(pca.components.cols(), 3);
+    /// assert!(pca.eigenvalues[0] >= pca.eigenvalues[2]);
+    /// # Ok::<(), pds::Error>(())
+    /// ```
+    pub fn from_sparse_operator(
+        op: &mut dyn SymOp,
+        k: usize,
+        iters: usize,
+        seed: u64,
+    ) -> Result<Pca> {
+        let (vals, vecs) = block_krylov_topk(op, k, iters, seed)?;
+        Ok(Pca { components: vecs, eigenvalues: vals })
     }
 
     /// Explained-variance fraction `tr(Ûᵀ C Û) / tr(C)` for this basis
@@ -83,24 +132,7 @@ mod tests {
     use super::*;
     use crate::linalg::orthonormalize;
     use crate::rng::Pcg64;
-
-    fn spiked_cov(p: usize, lambdas: &[f64], seed: u64) -> (Mat, Mat) {
-        let mut rng = Pcg64::seed(seed);
-        let u = orthonormalize(&Mat::from_fn(p, lambdas.len(), |_, _| rng.normal()));
-        let mut c = Mat::zeros(p, p);
-        for (t, &l) in lambdas.iter().enumerate() {
-            for i in 0..p {
-                for j in 0..p {
-                    c.add_at(i, j, l * u.get(i, t) * u.get(j, t));
-                }
-            }
-        }
-        // small isotropic floor so the matrix is PD
-        for i in 0..p {
-            c.add_at(i, i, 0.01);
-        }
-        (c, u)
-    }
+    use crate::testing::fixtures::spiked_cov;
 
     #[test]
     fn recovers_spiked_components() {
@@ -127,6 +159,29 @@ mod tests {
         let mut rng = Pcg64::seed(11);
         let u_est = orthonormalize(&Mat::from_fn(50, 3, |_, _| rng.normal()));
         assert_eq!(recovered_components(&u_est, &u_true, 0.95), 0);
+    }
+
+    #[test]
+    fn sparse_operator_pca_matches_covariance_pca() {
+        // both solvers target the same Thm 6 estimate; on a well-gapped
+        // spiked workload they must find the same top components
+        use crate::estimators::{CovarianceEstimator, SparseCovOp};
+        use crate::sampling::{Sparsifier, SparsifyConfig};
+        use crate::transform::TransformKind;
+        let x = crate::testing::fixtures::spiked_data(64, 2000, &[10.0, 6.0, 3.0], 3);
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 9 };
+        let sp = Sparsifier::new(64, cfg).unwrap();
+        let chunk = sp.compress_chunk(&x, 0).unwrap();
+        let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+        est.accumulate(&chunk);
+        let dense = Pca::from_covariance(&est.estimate(), 3, 7);
+        let chunks = [chunk];
+        let mut op = SparseCovOp::new(&chunks, 2).unwrap();
+        let kry = Pca::from_sparse_operator(&mut op, 3, 30, 7).unwrap();
+        assert_eq!(recovered_components(&kry.components, &dense.components, 0.95), 3);
+        for (a, b) in kry.eigenvalues.iter().zip(&dense.eigenvalues) {
+            assert!((a - b).abs() / b.abs().max(1e-12) < 1e-3, "{a} vs {b}");
+        }
     }
 
     #[test]

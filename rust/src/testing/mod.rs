@@ -1,6 +1,13 @@
-//! In-tree property-testing mini-harness (proptest is unavailable in this
-//! offline build). `prop::forall` runs a closure over `n` generated cases
-//! from a seeded [`prop::Gen`]; on panic it reports the case number and
-//! seed so the failure replays deterministically.
+//! In-tree test support (proptest et al. are unavailable in this offline
+//! build).
+//!
+//! * [`prop`] — `forall`-style randomized property tests: a closure runs
+//!   over `n` generated cases from a seeded [`prop::Gen`]; on panic it
+//!   reports the case number and seed so the failure replays
+//!   deterministically.
+//! * [`fixtures`] — the seeded matrix / chunk generators shared by the
+//!   inline `mod tests` blocks (one definition instead of a copy per
+//!   file).
 
+pub mod fixtures;
 pub mod prop;

@@ -3,15 +3,18 @@
 //! required — pure native engine).
 
 use pds::coordinator::{
-    run_pca_stream, run_sparsified_kmeans_stream, run_two_pass_stream, ChunkSource, MatSource,
-    StoreSource, StreamConfig,
+    run_compress_to_store, run_pca_krylov_from_store, run_pca_krylov_stream, run_pca_stream,
+    run_sparsified_kmeans_stream, run_two_pass_stream, ChunkSource, MatSource, StoreSource,
+    StreamConfig,
 };
 use pds::data::{digits, ChunkStore, ChunkStoreReader, DigitConfig, DigitStream};
 use pds::estimators::{HkAccumulator, SparseMeanEstimator};
 use pds::kmeans::{KmeansOpts, NativeAssigner};
 use pds::metrics::clustering_accuracy;
+use pds::pca::{explained_variance, recovered_components};
 use pds::rng::Pcg64;
 use pds::sampling::{Sparsifier, SparsifyConfig};
+use pds::store::SparseStoreReader;
 use pds::testing::prop::forall;
 use pds::transform::TransformKind;
 
@@ -120,6 +123,95 @@ fn streaming_pca_mean_matches_direct_estimator() {
     for i in 0..64 {
         assert!((pca_report.mean[i] - direct.get(i, 0)).abs() < 1e-9);
     }
+}
+
+#[test]
+fn both_pca_solvers_recover_the_same_digit_pcs() {
+    // acceptance: on the digits dataset the covariance solver and the
+    // covariance-free krylov solver find the same top PCs — matched
+    // one-to-one with inner product >= 0.95 per component
+    let d = digits(1500, DigitConfig { seed: 11, ..Default::default() });
+    let scfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 17 };
+    let stream = StreamConfig::default();
+    let mut src = MatSource::new(&d.data, 256);
+    let (cov, _) = run_pca_stream(&mut src, scfg, 3, stream).unwrap();
+    let mut src2 = MatSource::new(&d.data, 256);
+    let (kry, report) = run_pca_krylov_stream(&mut src2, scfg, 3, stream).unwrap();
+    assert_eq!(report.passes, 1);
+    assert_eq!(kry.pca.components.rows(), 784, "components live in the original domain");
+    assert_eq!(
+        recovered_components(&kry.pca.components, &cov.pca.components, 0.95),
+        3,
+        "solvers disagree on the digit PCs"
+    );
+    // the shared mean-estimator path is bit-identical
+    for (a, b) in kry.mean.iter().zip(&cov.mean) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn krylov_pca_from_store_matches_streaming_and_is_invariant() {
+    // compress-to-store -> covariance-free fit: explained variance must
+    // match the streaming covariance solver, the fit must be bitwise
+    // invariant to worker count and to the reader memory budget, and it
+    // must report zero raw-data passes
+    let mut rng = Pcg64::seed(41);
+    let n = 1200usize;
+    let d = pds::data::spiked(64, n, &[8.0, 5.0, 3.0], false, &mut rng);
+    let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 6 };
+    let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
+
+    let mut src = MatSource::new(&d.data, 128);
+    let (cov, _) = run_pca_stream(&mut src, scfg, 3, stream).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("pds_it_krylov_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut src2 = MatSource::new(&d.data, 128);
+    run_compress_to_store(&mut src2, scfg, &dir, 97, stream, true).unwrap();
+
+    let c_full = d.data.syrk().scaled(1.0 / n as f64);
+    let mut store = SparseStoreReader::open(&dir).unwrap();
+    let (base, report) = run_pca_krylov_from_store(&mut store, 3, 1).unwrap();
+    assert_eq!(report.passes, 0, "store-backed krylov fit reads no raw data");
+    assert_eq!(report.n, n);
+    let ev_cov = explained_variance(&cov.pca.components, &c_full);
+    let ev_kry = explained_variance(&base.pca.components, &c_full);
+    assert!(
+        (ev_cov - ev_kry).abs() < 1e-3,
+        "explained variance: covariance {ev_cov} vs krylov {ev_kry}"
+    );
+    assert_eq!(recovered_components(&base.pca.components, &cov.pca.components, 0.95), 3);
+
+    // worker count and memory budget may change speed, never bits
+    for (workers, budget_bytes) in [(2usize, 0usize), (4, 64 * 1024), (1, 4096)] {
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        if budget_bytes > 0 {
+            reader = reader.with_memory_budget(budget_bytes);
+        }
+        let (got, rep) = run_pca_krylov_from_store(&mut reader, 3, workers).unwrap();
+        assert_eq!(rep.passes, 0);
+        for (a, b) in got
+            .pca
+            .components
+            .as_slice()
+            .iter()
+            .zip(base.pca.components.as_slice())
+        {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "components, workers={workers} budget={budget_bytes}"
+            );
+        }
+        for (a, b) in got.pca.eigenvalues.iter().zip(&base.pca.eigenvalues) {
+            assert_eq!(a.to_bits(), b.to_bits(), "eigenvalues");
+        }
+        for (a, b) in got.mean.iter().zip(&base.mean) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mean");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
