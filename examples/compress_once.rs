@@ -4,20 +4,20 @@
 //! data through the ROS + sampling operator — is paid exactly once here
 //! and its output is persisted as a sharded sparse store
 //! (`docs/FORMAT.md`). Every later analysis (K-means, PCA, re-runs with
-//! different k, ...) streams the compressed shards from disk and never
-//! touches the raw data again: zero raw passes, and results bit-identical
-//! to the in-memory streaming pipeline.
+//! different k, ...) streams the compressed shards from disk through the
+//! `FitPlan` session API and never touches the raw data again: zero raw
+//! passes, and results bit-identical to the in-memory streaming
+//! pipeline. The final fit shows the fully out-of-core K-means solver
+//! (`Solver::Stream`), whose working set is just the reader's memory
+//! budget.
 //!
 //! Run: `cargo run --release --example compress_once [n]`
 
 use std::time::Instant;
 
-use pds::coordinator::{
-    run_compress_to_store, run_pca_from_store, run_sparsified_kmeans_from_store,
-    run_sparsified_kmeans_stream, MatSource, StreamConfig,
-};
+use pds::coordinator::{FitPlan, MatSource, Solver, StreamConfig};
 use pds::data::gaussian_blobs;
-use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::kmeans::KmeansOpts;
 use pds::metrics::clustering_accuracy;
 use pds::rng::Pcg64;
 use pds::sampling::SparsifyConfig;
@@ -38,8 +38,13 @@ fn main() -> pds::Result<()> {
     // ---- compress ONCE: one pass over the raw data ---------------------
     let t0 = Instant::now();
     let mut src = MatSource::new(&d.data, 2048);
-    let (manifest, creport) =
-        run_compress_to_store(&mut src, scfg, &dir, 4096, stream, true)?;
+    let creport = FitPlan::compress()
+        .stream(&mut src, scfg)
+        .store_dir(&dir)
+        .shard_cols(4096)
+        .stream_config(stream)
+        .run()?;
+    let manifest = creport.store_manifest().expect("compress plan");
     println!(
         "compressed {} samples into {} shards in {:.2}s ({:.1} MB sparse vs {:.1} MB dense, \
          {} raw pass)",
@@ -48,60 +53,85 @@ fn main() -> pds::Result<()> {
         t0.elapsed().as_secs_f64(),
         manifest.payload_bytes() as f64 / (1024.0 * 1024.0),
         (n * p * 8) as f64 / (1024.0 * 1024.0),
-        creport.passes
+        creport.raw_passes
     );
 
     // ---- analyze MANY: every fit below reads only the store ------------
     let opts = KmeansOpts { n_init: 3, ..Default::default() };
     let mut store = SparseStoreReader::open(&dir)?;
     let t1 = Instant::now();
-    let (model, kreport) =
-        run_sparsified_kmeans_from_store(&mut store, k, opts, &NativeAssigner, 2)?;
+    let kreport = FitPlan::kmeans()
+        .store(&mut store)
+        .k(k)
+        .kmeans_opts(opts)
+        .workers(2)
+        .run()?;
+    let model = kreport.kmeans_model().expect("kmeans plan");
     let acc = clustering_accuracy(&model.result.assign, &d.labels, k);
     println!(
         "K-means from store:  accuracy {acc:.4}, {} iterations, {:.2}s, raw passes: {}",
         model.result.iterations,
         t1.elapsed().as_secs_f64(),
-        kreport.passes
+        kreport.raw_passes
     );
 
     store.rewind();
     let t2 = Instant::now();
-    let (pca, preport) = run_pca_from_store(&mut store, 5, 2)?;
+    let preport = FitPlan::pca().store(&mut store).topk(5).workers(2).run()?;
+    let pca = preport.pca_fit().expect("pca plan");
     println!(
         "PCA from store:      top eigenvalue {:.3}, {:.2}s, raw passes: {}",
         pca.pca.eigenvalues[0],
         t2.elapsed().as_secs_f64(),
-        preport.passes
+        preport.raw_passes
     );
 
-    // ---- the store fit is bit-identical to the streaming pipeline ------
-    let mut src2 = MatSource::new(&d.data, 2048);
-    let (direct, _) = run_sparsified_kmeans_stream(
-        &mut src2,
-        scfg,
-        k,
-        opts,
-        &NativeAssigner,
-        stream,
-        true,
-    )?;
-    assert_eq!(model.result.assign, direct.result.assign, "assignments diverged");
-    assert_eq!(
-        model.result.objective.to_bits(),
-        direct.result.objective.to_bits(),
-        "objective diverged"
+    // ---- out-of-core: the streaming K-means solver under a tight
+    //      memory budget (one sparse pass per Lloyd iteration) ----------
+    let mut budgeted = SparseStoreReader::open(&dir)?.with_memory_budget(256 * 1024);
+    let t3 = Instant::now();
+    let sreport = FitPlan::kmeans()
+        .store(&mut budgeted)
+        .k(k)
+        .kmeans_opts(opts)
+        .solver(Solver::Stream)
+        .run()?;
+    let smodel = sreport.kmeans_model().expect("kmeans plan");
+    println!(
+        "K-means, stream solver (256 KiB reader budget): {:.2}s, raw passes: {}, sparse \
+         passes: {}",
+        t3.elapsed().as_secs_f64(),
+        sreport.raw_passes,
+        sreport.sparse_passes
     );
-    for (a, b) in model
-        .result
-        .centers
-        .as_slice()
-        .iter()
-        .zip(direct.result.centers.as_slice())
-    {
-        assert_eq!(a.to_bits(), b.to_bits(), "centers diverged");
+
+    // ---- every path is bit-identical to the streaming pipeline ---------
+    let mut src2 = MatSource::new(&d.data, 2048);
+    let dreport = FitPlan::kmeans()
+        .stream(&mut src2, scfg)
+        .k(k)
+        .kmeans_opts(opts)
+        .stream_config(stream)
+        .run()?;
+    let direct = dreport.kmeans_model().expect("kmeans plan");
+    for (name, got) in [("store", model), ("stream-solver", smodel)] {
+        assert_eq!(got.result.assign, direct.result.assign, "{name}: assignments diverged");
+        assert_eq!(
+            got.result.objective.to_bits(),
+            direct.result.objective.to_bits(),
+            "{name}: objective diverged"
+        );
+        for (a, b) in got
+            .result
+            .centers
+            .as_slice()
+            .iter()
+            .zip(direct.result.centers.as_slice())
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}: centers diverged");
+        }
     }
-    println!("store fit is bit-identical to the streaming fit ✓");
+    println!("store + out-of-core fits are bit-identical to the streaming fit ✓");
 
     std::fs::remove_dir_all(&dir).ok();
     println!("compress_once OK");

@@ -19,8 +19,7 @@
 use std::time::Instant;
 
 use pds::coordinator::{
-    run_sparsified_kmeans_stream, two_pass_refine_stream, GeneratorSource, PipelineReport,
-    StreamConfig,
+    two_pass_refine_stream, FitPlan, GeneratorSource, StreamConfig,
 };
 use pds::data::{DigitConfig, DigitStream, DIGIT_P};
 use pds::kmeans::{kmeans_dense, KmeansOpts, NativeAssigner, SparseAssigner};
@@ -63,18 +62,27 @@ fn main() -> pds::Result<()> {
         None => &NativeAssigner,
     };
 
-    // --- 1-pass sparsified K-means through the streaming coordinator ---
+    // --- 1-pass sparsified K-means through the FitPlan session API ---
     let gen = DigitStream::new(DigitConfig { seed: 2026, ..Default::default() });
     let mut src = GeneratorSource::new(DIGIT_P, n, 2048, move |s, c| gen.chunk(s, c));
     let t0 = Instant::now();
-    let (model, report) =
-        run_sparsified_kmeans_stream(&mut src, scfg, k, opts, assigner, stream_cfg, true)?;
+    let report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(k)
+        .kmeans_opts(opts)
+        .assigner(assigner)
+        .stream_config(stream_cfg)
+        .run()?;
+    let model = report.kmeans_model().expect("kmeans plan");
     let t_sparse = t0.elapsed().as_secs_f64();
     let acc1 = clustering_accuracy(&model.result.assign, &labels, k);
     println!(
         "\n[1-pass sparsified, engine={}] accuracy {acc1:.4}  iters {}  total {t_sparse:.1}s",
         report.engine, model.result.iterations
     );
+    if let Some(bound) = report.center_bound.last() {
+        println!("   final-iteration center-error bound (Eq. 43): {bound:.3}");
+    }
     for (name, secs) in report.timer.phases() {
         println!("   {name:<10} {secs:.3} s");
     }
@@ -82,24 +90,25 @@ fn main() -> pds::Result<()> {
     // --- 2-pass refinement (Algorithm 2) on the SAME pass-1 model ---
     let gen = DigitStream::new(DigitConfig { seed: 2026, ..Default::default() });
     let mut src = GeneratorSource::new(DIGIT_P, n, 2048, move |s, c| gen.chunk(s, c));
-    let mut rep2 = PipelineReport {
-        timer: pds::metrics::Timer::new(),
-        n,
-        passes: 1,
-        iterations: model.result.iterations,
-        engine: report.engine,
-    };
-    let two = two_pass_refine_stream(&mut src, &model, k, &mut rep2)?;
+    let (two, pass2_secs) = two_pass_refine_stream(&mut src, model, k)?;
     let acc2 = clustering_accuracy(&two.assign, &labels, k);
-    println!("[2-pass sparsified] accuracy {acc2:.4}  passes {}", rep2.passes);
+    println!(
+        "[2-pass sparsified] accuracy {acc2:.4}  passes {}  (+{pass2_secs:.1}s refine)",
+        report.raw_passes + 1
+    );
 
     // --- native-engine fit: the production CPU hot path, and the
     //     timing anchor for the paper's speedup claim ---
     let gen = DigitStream::new(DigitConfig { seed: 2026, ..Default::default() });
     let mut src = GeneratorSource::new(DIGIT_P, n, 2048, move |s, c| gen.chunk(s, c));
-    let (native_model, native_report) = run_sparsified_kmeans_stream(
-        &mut src, scfg, k, opts, &NativeAssigner, stream_cfg, true,
-    )?;
+    let native_report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(k)
+        .kmeans_opts(opts)
+        .assigner(&NativeAssigner)
+        .stream_config(stream_cfg)
+        .run()?;
+    let native_model = native_report.kmeans_model().expect("kmeans plan");
     let acc_native = clustering_accuracy(&native_model.result.assign, &labels, k);
     println!(
         "[1-pass sparsified, engine=native] accuracy {acc_native:.4}  kmeans {:.1}s",

@@ -7,9 +7,9 @@
 
 use std::time::Instant;
 
-use pds::coordinator::{run_sparsified_kmeans_stream, StoreSource, StreamConfig};
+use pds::coordinator::{FitPlan, StoreSource, StreamConfig};
 use pds::data::{ChunkStore, ChunkStoreReader, DigitConfig, DigitStream, DIGIT_P};
-use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::kmeans::KmeansOpts;
 use pds::metrics::clustering_accuracy;
 use pds::sampling::SparsifyConfig;
 use pds::transform::TransformKind;
@@ -53,15 +53,13 @@ fn main() -> pds::Result<()> {
     let mut src = StoreSource::new(ChunkStoreReader::open(&path)?);
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 9 };
     let t0 = Instant::now();
-    let (model, report) = run_sparsified_kmeans_stream(
-        &mut src,
-        scfg,
-        3,
-        KmeansOpts { n_init: 3, ..Default::default() },
-        &NativeAssigner,
-        StreamConfig { workers: 1, queue_depth: 4, chunk_cols },
-        true,
-    )?;
+    let report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(3)
+        .kmeans_opts(KmeansOpts { n_init: 3, ..Default::default() })
+        .stream_config(StreamConfig { workers: 1, queue_depth: 4, chunk_cols })
+        .run()?;
+    let model = report.kmeans_model().expect("kmeans plan");
     let total = t0.elapsed().as_secs_f64();
     std::fs::remove_file(&path).ok();
 
@@ -72,11 +70,11 @@ fn main() -> pds::Result<()> {
         model.result.iterations
     );
     println!(
-        "  disk load {:.1}s | compress {:.1}s | kmeans {:.1}s | passes {}",
+        "  disk load {:.1}s | compress {:.1}s | kmeans {:.1}s | raw passes {}",
         report.timer.get("load"),
         report.timer.get("compress"),
         report.timer.get("kmeans"),
-        report.passes
+        report.raw_passes
     );
     println!("out_of_core OK");
     Ok(())

@@ -1,13 +1,13 @@
 //! Quickstart: compress a synthetic dataset once, then run *both*
 //! downstream consumers (streaming PCA and sparsified K-means) from the
 //! same compressed stream — the paper's core "one pass, many analyses"
-//! workflow.
+//! workflow, driven entirely through the `FitPlan` session API.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use pds::coordinator::{run_pca_stream, run_sparsified_kmeans_stream, MatSource, StreamConfig};
+use pds::coordinator::{FitPlan, MatSource, StreamConfig};
 use pds::data::gaussian_blobs;
-use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::kmeans::KmeansOpts;
 use pds::metrics::clustering_accuracy;
 use pds::pca::recovered_components;
 use pds::rng::Pcg64;
@@ -25,32 +25,34 @@ fn main() -> pds::Result<()> {
 
     // --- sparsified K-means (Algorithm 1): one pass, native engine ---
     let mut src = MatSource::new(&d.data, 2048);
-    let (model, report) = run_sparsified_kmeans_stream(
-        &mut src,
-        scfg,
-        k,
-        KmeansOpts { n_init: 5, ..Default::default() },
-        &NativeAssigner,
-        StreamConfig::default(),
-        true,
-    )?;
+    let report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(k)
+        .kmeans_opts(KmeansOpts { n_init: 5, ..Default::default() })
+        .stream_config(StreamConfig::default())
+        .run()?;
+    let model = report.kmeans_model().expect("kmeans plan");
     let acc = clustering_accuracy(&model.result.assign, &d.labels, k);
     println!(
-        "\nsparsified K-means: accuracy {acc:.4}, {} iterations, passes {}",
-        model.result.iterations, report.passes
+        "\nsparsified K-means: accuracy {acc:.4}, {} iterations, raw passes {}",
+        model.result.iterations, report.raw_passes
     );
+    if let Some(bound) = report.center_bound.last() {
+        println!("final-iteration center-error bound (Eq. 43): {bound:.3}");
+    }
     for (name, secs) in report.timer.phases() {
         println!("  {name:<10} {secs:.3} s");
     }
 
     // --- streaming PCA from the same compression scheme ---
     let mut src = MatSource::new(&d.data, 2048);
-    let (pca, report) = run_pca_stream(&mut src, scfg, k, StreamConfig::default())?;
+    let report = FitPlan::pca().stream(&mut src, scfg).topk(k).run()?;
+    let pca = report.pca_fit().expect("pca plan");
     println!("\nstreaming PCA: top-{k} eigenvalues {:?}", pca.pca.eigenvalues);
     // the blob centers span a k-dim subspace; check the PCs capture it
     let rec = recovered_components(&pca.pca.components, &d.centers, 0.5);
     println!("PCs aligned with cluster-center subspace: {rec}/{k} (loose .5 threshold)");
-    println!("passes over raw data: {}", report.passes);
+    println!("passes over raw data: {}", report.raw_passes);
     println!("\nquickstart OK");
     Ok(())
 }

@@ -5,9 +5,12 @@
 //! Measures (1) the blocked FWHT, (2) mask sampling (O(p)-reset reference
 //! vs the O(m) `IndexSampler`), (3) masked assignment, (4) the
 //! covariance scatter — the latter two at 1/2/4 workers to show thread
-//! scaling — and (5) the PCA solver comparison: materialized-covariance
+//! scaling — (5) the PCA solver comparison: materialized-covariance
 //! (`sym_eig_topk` on the p×p estimate) vs covariance-free block-Krylov
-//! (`SparseCovOp`) at p = 2^12..2^14. Results are also emitted as
+//! (`SparseCovOp`) at p = 2^12..2^14 — and (6) the K-means solver
+//! comparison: the in-memory chunk fit vs the source-driven streaming
+//! fit (`CenterStep` over store-budget-sized chunks) at p = 4096/8192,
+//! workers 1/2/4, in ms per Lloyd iteration. Results are also emitted as
 //! `BENCH_hotpaths.json` at the repository root (schema documented in
 //! EXPERIMENTS.md).
 
@@ -192,6 +195,70 @@ fn main() {
             let ms = r.median_s * 1e3;
             println!("   -> {ms:.1} ms/solve, no p x p allocation");
             entries.push(Entry { result: r, metric: "ms/solve", value: ms });
+        }
+    }
+
+    // 6) K-means solver comparison: in-memory chunk fit vs the
+    //    source-driven streaming fit (CenterStep folding budget-sized
+    //    chunks — the exact shape a memory-budgeted store reader hands
+    //    out, minus disk noise). Both run the same seeding + Lloyd
+    //    schedule and produce bitwise identical fits; the delta is pure
+    //    per-chunk fold overhead. Reported as ms per Lloyd iteration.
+    pds::bench::section("kmeans solver: in-memory fit vs streaming CenterStep fit");
+    {
+        use pds::kmeans::{KmeansOpts, SparsifiedKmeans};
+        use pds::sparse::SparseVecSource;
+        const KM_K: usize = 8;
+        const KM_ITERS: usize = 3;
+        for p in [4096usize, 8192] {
+            let n = 4096usize;
+            let mut rng = Pcg64::seed(0xBEEF ^ p as u64);
+            let x = Mat::from_fn(p, n, |_, _| rng.normal());
+            let cfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 3 };
+            let sp = Sparsifier::new(p, cfg).unwrap();
+            let whole = sp.compress_chunk(&x, 0).unwrap();
+            // 512-column pieces ≈ a few-MB reader budget at this (p, m)
+            let mut pieces = Vec::new();
+            let mut a = 0usize;
+            while a < n {
+                let b = (a + 512).min(n);
+                pieces.push(sp.compress_chunk(&x.col_range(a, b), a).unwrap());
+                a = b;
+            }
+            let opts =
+                KmeansOpts { n_init: 1, max_iters: KM_ITERS, tol_frac: 0.0, seed: 1 };
+            for workers in [1usize, 2, 4] {
+                let chunks = [whole.clone()];
+                let r = pds::bench::bench(
+                    &format!("kmeans inmemory p={p} (n={n},K={KM_K}) w={workers}"),
+                    0,
+                    3,
+                    || {
+                        let sk = SparsifiedKmeans::new(cfg, KM_K, opts).with_workers(workers);
+                        let m = sk.fit_chunks(&sp, &chunks, &NativeAssigner).unwrap();
+                        m.result.objective
+                    },
+                );
+                let ms = r.median_s * 1e3 / KM_ITERS as f64;
+                println!("   -> {ms:.1} ms/iteration (in-memory)");
+                entries.push(Entry { result: r, metric: "ms/iter", value: ms });
+
+                let r = pds::bench::bench(
+                    &format!("kmeans stream p={p} (n={n},K={KM_K},chunk=512) w={workers}"),
+                    0,
+                    3,
+                    || {
+                        let mut src = SparseVecSource::new(pieces.clone()).unwrap();
+                        let sk = SparsifiedKmeans::new(cfg, KM_K, opts).with_workers(workers);
+                        let (m, _passes) =
+                            sk.fit_source(&sp, &mut src, &NativeAssigner, true).unwrap();
+                        m.result.objective
+                    },
+                );
+                let ms = r.median_s * 1e3 / KM_ITERS as f64;
+                println!("   -> {ms:.1} ms/iteration (streaming)");
+                entries.push(Entry { result: r, metric: "ms/iter", value: ms });
+            }
         }
     }
 

@@ -1,36 +1,31 @@
-//! High-level drivers: end-to-end runs combining the compress pipeline
-//! with the estimators / K-means, with pass accounting and the timing
-//! breakdowns of Tables III–V.
+//! Legacy high-level drivers — thin **deprecated** shims over
+//! [`FitPlan`](super::FitPlan).
 //!
-//! Two families:
-//!
-//! * **Streaming** (`run_*_stream`) — compress the raw stream and fit in
-//!   one go; the compressed data is transient.
-//! * **Store-backed** — [`run_compress_to_store`] pays the compression
-//!   pass once and persists the sparse form; [`run_pca_from_store`] /
-//!   [`run_sparsified_kmeans_from_store`] then fit from disk with **zero
-//!   raw-data passes** (`PipelineReport::passes` = 0) and are bit-exact
-//!   matches of the streaming path on the same data.
+//! The `run_{pca,sparsified_kmeans,two_pass,compress}_{stream,sparse,from_store}`
+//! matrix predates the session API; every function here now just builds
+//! the equivalent plan and unpacks its [`FitReport`](super::FitReport)
+//! into the historical `(output, PipelineReport)` pair. New code uses
+//! `FitPlan` directly — CI builds the crate with `-D deprecated` (plus a
+//! grep allowlist pinning the callers to this module and `krylov.rs`), so
+//! internal code cannot regrow on the shims.
 
-use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
 
-use crate::error::{invalid, Result};
-use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
-use crate::kmeans::{
-    assign_dense, KmeansOpts, KmeansResult, SparseAssigner, SparsifiedKmeans, SparsifiedModel,
-};
+use crate::error::Result;
+use crate::kmeans::{KmeansOpts, KmeansResult, SparseAssigner, SparsifiedModel};
 use crate::linalg::Mat;
 use crate::metrics::Timer;
 use crate::pca::Pca;
 use crate::sampling::{Sparsifier, SparsifyConfig};
-use crate::sparse::SparseChunk;
-use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
+use crate::sparse::SparseChunkSource;
+use crate::store::{SparseStoreReader, StoreManifest};
 
-use super::{compress_stream, ChunkSource, SparseChunkSource, StreamConfig};
+use super::plan::{FitOutcome, FitPlan, FitReport};
+use super::{ChunkSource, StreamConfig};
 
 /// Accounting for one driver run — the raw material of Tables III/IV.
+/// Superseded by [`FitReport`](super::FitReport), which splits raw and
+/// sparse pass counts and carries the per-iteration center-error bound.
 #[derive(Debug)]
 pub struct PipelineReport {
     /// Phase timings: `load`, `compress`, `kmeans` / `eig`, `pass2`.
@@ -45,157 +40,7 @@ pub struct PipelineReport {
     pub engine: &'static str,
 }
 
-/// Target column count when coalescing stream chunks for a fit.
-pub(crate) const FIT_COALESCE_COLS: usize = 8192;
-
-/// Merge sorted, contiguous stream chunks into pieces of at least
-/// `target_cols` columns (the tail piece may be smaller).
-pub(crate) fn coalesce_chunks(
-    chunks: Vec<SparseChunk>,
-    target_cols: usize,
-) -> Result<Vec<SparseChunk>> {
-    let mut out = Vec::new();
-    let mut group: Vec<SparseChunk> = Vec::new();
-    let mut group_cols = 0usize;
-    for c in chunks {
-        group_cols += c.n();
-        group.push(c);
-        if group_cols >= target_cols {
-            out.push(merge_group(&mut group)?);
-            group_cols = 0;
-        }
-    }
-    if !group.is_empty() {
-        out.push(merge_group(&mut group)?);
-    }
-    Ok(out)
-}
-
-fn merge_group(group: &mut Vec<SparseChunk>) -> Result<SparseChunk> {
-    let merged = if group.len() == 1 {
-        group.pop().expect("non-empty group")
-    } else {
-        SparseChunk::concat(group)?
-    };
-    group.clear();
-    Ok(merged)
-}
-
-/// One-pass sparsified K-means over a stream (Algorithm 1 at scale):
-/// compress with backpressure (the compressed data — `γ·p·n` values — is
-/// what's held in memory, never the raw stream), then iterate.
-pub fn run_sparsified_kmeans_stream(
-    source: &mut dyn ChunkSource,
-    scfg: SparsifyConfig,
-    k: usize,
-    opts: KmeansOpts,
-    assigner: &dyn SparseAssigner,
-    stream: StreamConfig,
-    precondition: bool,
-) -> Result<(SparsifiedModel, PipelineReport)> {
-    let sp = Sparsifier::new(source.p(), scfg)?;
-    let mut timer = Timer::new();
-    let mut chunks: Vec<SparseChunk> = Vec::new();
-    let mut collect = |c: SparseChunk| -> Result<()> {
-        chunks.push(c);
-        Ok(())
-    };
-    let n = compress_stream(source, &sp, stream, precondition, &mut collect, &mut timer)?;
-    chunks.sort_by_key(|c| c.start_col());
-    // coalesce the (often chunk_cols-sized) stream pieces so the parallel
-    // assigner fans out over large column ranges instead of paying a
-    // fork/join per tiny chunk; bitwise identical — the fit depends only
-    // on the global column order
-    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
-    // reuse the compress pool width for the fit: assignment and center
-    // accumulation are bitwise worker-count-invariant, so this only
-    // changes speed
-    let sk = SparsifiedKmeans::new(scfg, k, opts).with_workers(stream.workers);
-    let model = timer.time("kmeans", || sk.fit_chunks(&sp, &chunks, assigner))?;
-    let iterations = model.result.iterations;
-    Ok((
-        model,
-        PipelineReport { timer, n, passes: 1, iterations, engine: assigner.name() },
-    ))
-}
-
-/// Two-pass sparsified K-means over a stream (Algorithm 2 at scale): run
-/// the one-pass algorithm, then revisit the raw stream once to (a)
-/// recompute centers as exact class means and (b) reassign against the
-/// pass-1 center estimates in the original domain.
-pub fn run_two_pass_stream(
-    source: &mut dyn ChunkSource,
-    scfg: SparsifyConfig,
-    k: usize,
-    opts: KmeansOpts,
-    assigner: &dyn SparseAssigner,
-    stream: StreamConfig,
-) -> Result<(KmeansResult, PipelineReport)> {
-    let (model, mut report) = run_sparsified_kmeans_stream(
-        source, scfg, k, opts, assigner, stream, true,
-    )?;
-    let result = two_pass_refine_stream(source, &model, k, &mut report)?;
-    Ok((result, report))
-}
-
-/// The second pass of Algorithm 2, applied to an existing pass-1 model:
-/// revisit the raw stream once to recompute exact class means and to
-/// reassign against the pass-1 centers in the original domain.
-pub fn two_pass_refine_stream(
-    source: &mut dyn ChunkSource,
-    model: &SparsifiedModel,
-    k: usize,
-    report: &mut PipelineReport,
-) -> Result<KmeansResult> {
-    let one = &model.result;
-    let p = source.p();
-    source.reset()?;
-    let t0 = std::time::Instant::now();
-    let mut sums = Mat::zeros(p, k);
-    let mut counts = vec![0usize; k];
-    let mut assign = vec![0u32; one.assign.len()];
-    let mut objective = 0.0;
-    while let Some(chunk) = source.next_chunk()? {
-        // (a) exact class means under the pass-1 assignment
-        for j in 0..chunk.data.cols() {
-            let c = one.assign[chunk.start_col + j] as usize;
-            counts[c] += 1;
-            let col = chunk.data.col(j);
-            let s = sums.col_mut(c);
-            for i in 0..p {
-                s[i] += col[i];
-            }
-        }
-        // (b) reassignment against pass-1 centers, original domain
-        let (a, obj) = assign_dense(&chunk.data, &one.centers);
-        objective += obj;
-        assign[chunk.start_col..chunk.start_col + a.len()].copy_from_slice(&a);
-    }
-    let mut centers = one.centers.clone();
-    for c in 0..k {
-        if counts[c] > 0 {
-            let inv = 1.0 / counts[c] as f64;
-            for v in centers.col_mut(c).iter_mut() {
-                *v *= 0.0;
-            }
-            let (s, dst) = (sums.col(c), centers.col_mut(c));
-            for i in 0..p {
-                dst[i] = s[i] * inv;
-            }
-        }
-    }
-    report.timer.add("pass2", t0.elapsed().as_secs_f64());
-    report.passes += 1;
-    Ok(KmeansResult {
-        centers,
-        assign,
-        objective,
-        iterations: one.iterations,
-        converged: one.converged,
-    })
-}
-
-/// PCA outputs from one streaming pass.
+/// PCA outputs of the covariance-solver drivers.
 pub struct PcaReport {
     /// Unbiased sample-mean estimate (Thm 4), original-domain.
     pub mean: Vec<f64>,
@@ -206,70 +51,108 @@ pub struct PcaReport {
     pub pca: Pca,
 }
 
-/// One-pass streaming PCA: accumulate the Thm 4/6 estimators chunk by
-/// chunk, eigendecompose, and unmix the components (PCs of `HDX` map to
-/// PCs of `X` through `(HD)ᵀ`).
+/// Split a [`FitReport`] into the legacy `(report, outcome)` shape.
+fn legacy(report: FitReport) -> (PipelineReport, FitOutcome) {
+    let FitReport { timer, n, raw_passes, iterations, engine, outcome, .. } = report;
+    (PipelineReport { timer, n, passes: raw_passes, iterations, engine }, outcome)
+}
+
+fn legacy_kmeans(report: FitReport) -> (SparsifiedModel, PipelineReport) {
+    let (rep, outcome) = legacy(report);
+    match outcome {
+        FitOutcome::Kmeans { model, .. } => (model, rep),
+        _ => unreachable!("kmeans plan returns a kmeans outcome"),
+    }
+}
+
+fn legacy_pca(report: FitReport) -> (PcaReport, PipelineReport) {
+    let (rep, outcome) = legacy(report);
+    match outcome {
+        FitOutcome::Pca(fit) => (
+            PcaReport {
+                mean: fit.mean,
+                covariance: fit.covariance.expect("covariance solver materializes the estimate"),
+                pca: fit.pca,
+            },
+            rep,
+        ),
+        _ => unreachable!("pca plan returns a pca outcome"),
+    }
+}
+
+/// One-pass sparsified K-means over a stream (Algorithm 1 at scale).
+#[deprecated(
+    note = "use FitPlan::kmeans().stream(source, scfg).k(k).kmeans_opts(opts)\
+            .assigner(a).stream_config(stream).precondition(p).run()"
+)]
+pub fn run_sparsified_kmeans_stream(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    stream: StreamConfig,
+    precondition: bool,
+) -> Result<(SparsifiedModel, PipelineReport)> {
+    let report = FitPlan::kmeans()
+        .stream(source, scfg)
+        .k(k)
+        .kmeans_opts(opts)
+        .assigner(assigner)
+        .stream_config(stream)
+        .precondition(precondition)
+        .run()?;
+    Ok(legacy_kmeans(report))
+}
+
+/// Two-pass sparsified K-means over a stream (Algorithm 2 at scale).
+#[deprecated(
+    note = "use FitPlan::kmeans().stream(source, scfg).k(k).two_pass(true).run()"
+)]
+pub fn run_two_pass_stream(
+    source: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    stream: StreamConfig,
+) -> Result<(KmeansResult, PipelineReport)> {
+    let report = FitPlan::kmeans()
+        .stream(source, scfg)
+        .k(k)
+        .kmeans_opts(opts)
+        .assigner(assigner)
+        .stream_config(stream)
+        .two_pass(true)
+        .run()?;
+    let (rep, outcome) = legacy(report);
+    match outcome {
+        FitOutcome::Kmeans { refined: Some(result), .. } => Ok((result, rep)),
+        _ => unreachable!("two-pass plan returns a refined outcome"),
+    }
+}
+
+/// One-pass streaming PCA (covariance solver).
+#[deprecated(note = "use FitPlan::pca().stream(source, scfg).topk(k).run()")]
 pub fn run_pca_stream(
     source: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
     topk: usize,
     stream: StreamConfig,
 ) -> Result<(PcaReport, PipelineReport)> {
-    let sp = Sparsifier::new(source.p(), scfg)?;
-    let mut timer = Timer::new();
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
-    // the covariance scatter is the PCA hot path; give it the same pool
-    // width as the compress stage (bitwise invariant to the worker count)
-    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(stream.workers);
-    // Racing workers deliver chunks out of stream order; f64 accumulation
-    // is order-sensitive, so reorder through a pending map (bounded by
-    // the pipeline's in-flight cap) and fold in global column order —
-    // this is what makes the estimates bitwise invariant to the worker
-    // count, the same discipline as the store writer.
-    let mut pending: BTreeMap<usize, SparseChunk> = BTreeMap::new();
-    let mut next_col = 0usize;
-    let mut fold = |c: SparseChunk| -> Result<()> {
-        pending.insert(c.start_col(), c);
-        loop {
-            let first = match pending.keys().next() {
-                Some(&k) if k == next_col => k,
-                _ => break,
-            };
-            let chunk = pending.remove(&first).expect("key just observed");
-            next_col += chunk.n();
-            mean_est.accumulate(&chunk);
-            cov_est.accumulate(&chunk);
-        }
-        Ok(())
-    };
-    let n = compress_stream(source, &sp, stream, true, &mut fold, &mut timer)?;
-    if !pending.is_empty() || next_col != n {
-        return invalid(format!(
-            "pca stream: non-contiguous chunk stream (folded {next_col} of {n} columns)"
-        ));
-    }
-    let covariance = cov_est.estimate();
-    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, scfg.seed));
-    // unmix components and mean to the original domain
-    let components = sp.unmix(&pca_pre.components);
-    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
-    let mean = sp.unmix(&mean_pre).col(0).to_vec();
-    let report = PipelineReport { timer, n, passes: 1, iterations: 0, engine: "native" };
-    Ok((
-        PcaReport {
-            mean,
-            covariance,
-            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
-        },
-        report,
-    ))
+    let report = FitPlan::pca()
+        .stream(source, scfg)
+        .topk(topk)
+        .stream_config(stream)
+        .run()?;
+    Ok(legacy_pca(report))
 }
 
-/// Compress a raw stream **once** into an on-disk sparse store at `dir`
-/// (the "compress once" half of compress-once/analyze-many). The store's
-/// bytes depend only on the global column order, so they are identical
-/// for every `stream.workers` setting. Counts as one pass over the raw
-/// data.
+/// Compress a raw stream **once** into an on-disk sparse store at `dir`.
+#[deprecated(
+    note = "use FitPlan::compress().stream(source, scfg).store_dir(dir)\
+            .shard_cols(c).run()"
+)]
 pub fn run_compress_to_store(
     source: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
@@ -278,48 +161,24 @@ pub fn run_compress_to_store(
     stream: StreamConfig,
     precondition: bool,
 ) -> Result<(StoreManifest, PipelineReport)> {
-    let sp = Sparsifier::new(source.p(), scfg)?;
-    let mut timer = Timer::new();
-    let mut writer = SparseStoreWriter::create(dir, &sp, scfg, precondition, shard_cols)?;
-    let mut sink = |c: SparseChunk| writer.append(c);
-    let n = compress_stream(source, &sp, stream, precondition, &mut sink, &mut timer)?;
-    let manifest = timer.time("store", || writer.finish())?;
-    Ok((
-        manifest,
-        PipelineReport { timer, n, passes: 1, iterations: 0, engine: "native" },
-    ))
-}
-
-/// Drain a sparse source into memory, order and coalesce the chunks for
-/// an efficient fit. Returns the chunks plus the total sample count.
-fn collect_sparse(
-    source: &mut dyn SparseChunkSource,
-    timer: &mut Timer,
-) -> Result<(Vec<SparseChunk>, usize)> {
-    let t0 = Instant::now();
-    let mut chunks = Vec::new();
-    while let Some(c) = source.next_chunk()? {
-        chunks.push(c);
+    let report = FitPlan::compress()
+        .stream(source, scfg)
+        .store_dir(dir)
+        .shard_cols(shard_cols)
+        .stream_config(stream)
+        .precondition(precondition)
+        .run()?;
+    let (rep, outcome) = legacy(report);
+    match outcome {
+        FitOutcome::Compressed(manifest) => Ok((manifest, rep)),
+        _ => unreachable!("compress plan returns a manifest"),
     }
-    timer.add("load", t0.elapsed().as_secs_f64());
-    let n = chunks.iter().map(|c| c.n()).sum();
-    chunks.sort_by_key(|c| c.start_col());
-    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
-    Ok((chunks, n))
 }
 
-/// Sparsified K-means (Algorithm 1) over already-compressed chunks — the
-/// "analyze" half of compress-once/analyze-many. `sp` must be the
-/// sparsifier the chunks were produced with (for center unmixing); pass
-/// `unmix = false` when they skipped preconditioning. Zero passes over
-/// the raw data; bit-identical to
-/// [`run_sparsified_kmeans_stream`] on the same stream because every fit
-/// step depends only on the global column order, not chunk boundaries.
-///
-/// Memory note: Lloyd iterations revisit every sample, so this driver
-/// materializes the whole compressed source (~`12·m·n` bytes — the
-/// paper's working-set model) regardless of any reader memory budget;
-/// budgets bound chunk granularity, not the fit's working set.
+/// Sparsified K-means (Algorithm 1) over already-compressed chunks.
+#[deprecated(
+    note = "use FitPlan::kmeans().source(source, sp, unmix).k(k).workers(w).run()"
+)]
 pub fn run_sparsified_kmeans_sparse(
     source: &mut dyn SparseChunkSource,
     sp: &Sparsifier,
@@ -329,33 +188,18 @@ pub fn run_sparsified_kmeans_sparse(
     workers: usize,
     unmix: bool,
 ) -> Result<(SparsifiedModel, PipelineReport)> {
-    if source.p() != sp.p() || source.m() != sp.m() {
-        return invalid(format!(
-            "sparse fit: source is p={} m={}, sparsifier is p={} m={}",
-            source.p(),
-            source.m(),
-            sp.p(),
-            sp.m()
-        ));
-    }
-    let mut timer = Timer::new();
-    let (chunks, n) = collect_sparse(source, &mut timer)?;
-    if n == 0 {
-        return invalid("sparse fit: source is empty");
-    }
-    let scfg = SparsifyConfig { gamma: sp.gamma(), transform: sp.ros().kind(), seed: sp.seed() };
-    let sk = SparsifiedKmeans::new(scfg, k, opts).with_workers(workers.max(1));
-    let model =
-        timer.time("kmeans", || sk.fit_chunks_raw(sp, &chunks, assigner, unmix))?;
-    let iterations = model.result.iterations;
-    Ok((
-        model,
-        PipelineReport { timer, n, passes: 0, iterations, engine: assigner.name() },
-    ))
+    let report = FitPlan::kmeans()
+        .source(source, sp, unmix)
+        .k(k)
+        .kmeans_opts(opts)
+        .assigner(assigner)
+        .workers(workers)
+        .run()?;
+    Ok(legacy_kmeans(report))
 }
 
-/// Sparsified K-means straight from a persistent store: rebuilds the
-/// sparsifier from the manifest and fits without touching the raw data.
+/// Sparsified K-means straight from a persistent store.
+#[deprecated(note = "use FitPlan::kmeans().store(store).k(k).workers(w).run()")]
 pub fn run_sparsified_kmeans_from_store(
     store: &mut SparseStoreReader,
     k: usize,
@@ -363,15 +207,20 @@ pub fn run_sparsified_kmeans_from_store(
     assigner: &dyn SparseAssigner,
     workers: usize,
 ) -> Result<(SparsifiedModel, PipelineReport)> {
-    let sp = store.sparsifier()?;
-    let unmix = store.manifest().preconditioned;
-    run_sparsified_kmeans_sparse(store, &sp, k, opts, assigner, workers, unmix)
+    let report = FitPlan::kmeans()
+        .store(store)
+        .k(k)
+        .kmeans_opts(opts)
+        .assigner(assigner)
+        .workers(workers)
+        .run()?;
+    Ok(legacy_kmeans(report))
 }
 
-/// One-pass PCA over already-compressed chunks: fold the Thm 4/6
-/// estimators in global column order, eigendecompose, unmix. Zero passes
-/// over the raw data. `preconditioned = false` (ablation stores) skips
-/// the adjoint and only drops padding.
+/// One-pass PCA over already-compressed chunks (covariance solver).
+#[deprecated(
+    note = "use FitPlan::pca().source(source, sp, preconditioned).topk(k).workers(w).run()"
+)]
 pub fn run_pca_sparse(
     source: &mut dyn SparseChunkSource,
     sp: &Sparsifier,
@@ -379,99 +228,72 @@ pub fn run_pca_sparse(
     workers: usize,
     preconditioned: bool,
 ) -> Result<(PcaReport, PipelineReport)> {
-    if source.p() != sp.p() || source.m() != sp.m() {
-        return invalid(format!(
-            "sparse pca: source is p={} m={}, sparsifier is p={} m={}",
-            source.p(),
-            source.m(),
-            sp.p(),
-            sp.m()
-        ));
-    }
-    let mut timer = Timer::new();
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
-    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(workers.max(1));
-    let mut n = 0usize;
-    loop {
-        let t0 = Instant::now();
-        let next = source.next_chunk()?;
-        timer.add("load", t0.elapsed().as_secs_f64());
-        let Some(chunk) = next else { break };
-        n += chunk.n();
-        let t1 = Instant::now();
-        mean_est.accumulate(&chunk);
-        cov_est.accumulate(&chunk);
-        timer.add("accumulate", t1.elapsed().as_secs_f64());
-    }
-    if n == 0 {
-        return invalid("sparse pca: source is empty");
-    }
-    let covariance = cov_est.estimate();
-    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, sp.seed()));
-    let (components, mean) = if preconditioned {
-        let components = sp.unmix(&pca_pre.components);
-        let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
-        (components, sp.unmix(&mean_pre).col(0).to_vec())
-    } else {
-        let components = sp.truncate(&pca_pre.components);
-        let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
-        (components, sp.truncate(&mean_pre).col(0).to_vec())
-    };
-    let report = PipelineReport { timer, n, passes: 0, iterations: 0, engine: "native" };
-    Ok((
-        PcaReport {
-            mean,
-            covariance,
-            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
-        },
-        report,
-    ))
+    let report = FitPlan::pca()
+        .source(source, sp, preconditioned)
+        .topk(topk)
+        .workers(workers)
+        .run()?;
+    Ok(legacy_pca(report))
 }
 
-/// Streaming PCA straight from a persistent store (manifest-driven
-/// sparsifier reconstruction; zero raw-data passes).
+/// Streaming PCA straight from a persistent store (covariance solver).
+#[deprecated(note = "use FitPlan::pca().store(store).topk(k).workers(w).run()")]
 pub fn run_pca_from_store(
     store: &mut SparseStoreReader,
     topk: usize,
     workers: usize,
 ) -> Result<(PcaReport, PipelineReport)> {
-    let sp = store.sparsifier()?;
-    let preconditioned = store.manifest().preconditioned;
-    run_pca_sparse(store, &sp, topk, workers, preconditioned)
+    let report = FitPlan::pca().store(store).topk(topk).workers(workers).run()?;
+    Ok(legacy_pca(report))
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
+    use super::super::{two_pass_refine_stream, MatSource, SparseVecSource};
     use super::*;
-    use crate::coordinator::MatSource;
     use crate::data::gaussian_blobs;
-    use crate::kmeans::NativeAssigner;
-    use crate::metrics::clustering_accuracy;
-    use crate::pca::recovered_components;
+    use crate::kmeans::{NativeAssigner, SparsifiedKmeans};
     use crate::rng::Pcg64;
     use crate::transform::TransformKind;
 
+    fn bits_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}");
+        }
+    }
+
     #[test]
-    fn one_pass_stream_matches_fit_dense() {
+    fn kmeans_stream_shim_matches_fitplan_bitwise() {
         let mut rng = Pcg64::seed(1);
         let d = gaussian_blobs(32, 300, 3, 0.1, &mut rng);
         let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 4 };
         let opts = KmeansOpts { n_init: 2, ..Default::default() };
+        let stream = StreamConfig { workers: 2, ..Default::default() };
 
         let mut src = MatSource::new(&d.data, 64);
         let (model, report) = run_sparsified_kmeans_stream(
-            &mut src,
-            scfg,
-            3,
-            opts,
-            &NativeAssigner,
-            StreamConfig { workers: 2, ..Default::default() },
-            true,
+            &mut src, scfg, 3, opts, &NativeAssigner, stream, true,
         )
         .unwrap();
         assert_eq!(report.n, 300);
         assert_eq!(report.passes, 1);
 
+        let mut src2 = MatSource::new(&d.data, 64);
+        let plan = FitPlan::kmeans()
+            .stream(&mut src2, scfg)
+            .k(3)
+            .kmeans_opts(opts)
+            .stream_config(stream)
+            .run()
+            .unwrap();
+        let pm = plan.kmeans_model().unwrap();
+        assert_eq!(model.result.assign, pm.result.assign);
+        assert_eq!(model.result.objective.to_bits(), pm.result.objective.to_bits());
+        bits_eq(model.result.centers.as_slice(), pm.result.centers.as_slice(), "centers");
+
+        // ... and both match the direct dense fit (the original contract)
         let sk = SparsifiedKmeans::new(scfg, 3, opts);
         let direct = sk.fit_dense(&d.data).unwrap();
         assert_eq!(model.result.assign, direct.assign);
@@ -479,194 +301,144 @@ mod tests {
     }
 
     #[test]
-    fn two_pass_improves_or_matches() {
+    fn two_pass_shim_matches_fitplan_and_refine_helper() {
         let mut rng = Pcg64::seed(3);
-        let d = gaussian_blobs(64, 800, 3, 0.3, &mut rng);
+        let d = gaussian_blobs(64, 500, 3, 0.3, &mut rng);
         let scfg = SparsifyConfig { gamma: 0.1, transform: TransformKind::Hadamard, seed: 7 };
-        let opts = KmeansOpts { n_init: 4, ..Default::default() };
+        let opts = KmeansOpts { n_init: 3, ..Default::default() };
+
         let mut src = MatSource::new(&d.data, 128);
         let (two, report) =
             run_two_pass_stream(&mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default())
                 .unwrap();
         assert_eq!(report.passes, 2);
         assert!(report.timer.get("pass2") > 0.0);
-        let acc2 = clustering_accuracy(&two.assign, &d.labels, 3);
-        assert!(acc2 > 0.9, "two-pass accuracy {acc2}");
-        // centers are exact class means of pass-1 assignment: finite & sane
-        assert!(two.centers.as_slice().iter().all(|v| v.is_finite()));
+
+        // equivalent: one-pass fit + the public refine helper
+        let mut src2 = MatSource::new(&d.data, 128);
+        let (model, _) = run_sparsified_kmeans_stream(
+            &mut src2, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
+        )
+        .unwrap();
+        let (refined, _secs) = two_pass_refine_stream(&mut src2, &model, 3).unwrap();
+        assert_eq!(two.assign, refined.assign);
+        assert_eq!(two.objective.to_bits(), refined.objective.to_bits());
+        bits_eq(two.centers.as_slice(), refined.centers.as_slice(), "refined centers");
     }
 
     #[test]
-    fn streaming_pca_recovers_spiked_components() {
+    fn pca_stream_shim_matches_fitplan_bitwise() {
         let mut rng = Pcg64::seed(5);
-        let d = crate::data::spiked(64, 6000, &[8.0, 5.0, 3.0], false, &mut rng);
+        let d = crate::data::spiked(32, 700, &[6.0, 3.0], false, &mut rng);
         let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 2 };
-        let mut src = MatSource::new(&d.data, 512);
-        let (pca_report, report) =
-            run_pca_stream(&mut src, scfg, 3, StreamConfig::default()).unwrap();
-        assert_eq!(report.n, 6000);
-        let rec = recovered_components(&pca_report.pca.components, &d.centers, 0.9);
-        assert!(rec >= 2, "recovered {rec}/3 spiked PCs");
+        let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
+        let mut src = MatSource::new(&d.data, 128);
+        let (pca, report) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
+        assert_eq!(report.passes, 1);
+        let mut src2 = MatSource::new(&d.data, 128);
+        let plan = FitPlan::pca().stream(&mut src2, scfg).topk(2).stream_config(stream).run().unwrap();
+        let fit = plan.pca_fit().unwrap();
+        bits_eq(&pca.mean, &fit.mean, "mean");
+        bits_eq(pca.covariance.as_slice(), fit.covariance.as_ref().unwrap().as_slice(), "cov");
+        bits_eq(pca.pca.components.as_slice(), fit.pca.components.as_slice(), "components");
     }
 
     #[test]
-    fn streaming_pca_is_bitwise_worker_invariant() {
-        // the fold reorders out-of-order worker output before
-        // accumulating, so every worker count produces identical bits
-        let mut rng = Pcg64::seed(41);
-        let d = crate::data::spiked(32, 700, &[5.0, 2.0], false, &mut rng);
-        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 6 };
-        let mut base_src = MatSource::new(&d.data, 64);
-        let base_stream = StreamConfig { workers: 1, chunk_cols: 64, ..Default::default() };
-        let (base, _) = run_pca_stream(&mut base_src, scfg, 2, base_stream).unwrap();
-        for workers in [2usize, 4] {
-            let mut src = MatSource::new(&d.data, 64);
-            let stream = StreamConfig { workers, chunk_cols: 64, ..Default::default() };
-            let (par, _) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
-            for (a, b) in par.covariance.as_slice().iter().zip(base.covariance.as_slice()) {
-                assert_eq!(a.to_bits(), b.to_bits(), "covariance, workers={workers}");
-            }
-            for (a, b) in par.mean.iter().zip(&base.mean) {
-                assert_eq!(a.to_bits(), b.to_bits(), "mean, workers={workers}");
-            }
-        }
-    }
-
-    fn tmpdir(name: &str) -> std::path::PathBuf {
-        let p = std::env::temp_dir()
-            .join(format!("pds_driver_test_{name}_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&p);
-        p
-    }
-
-    #[test]
-    fn kmeans_from_store_is_bit_identical_to_streaming() {
+    fn sparse_and_store_shims_match_fitplan() {
         let mut rng = Pcg64::seed(17);
         let d = gaussian_blobs(32, 400, 3, 0.1, &mut rng);
         let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 5 };
         let opts = KmeansOpts { n_init: 2, ..Default::default() };
-        let stream = StreamConfig { workers: 2, chunk_cols: 64, ..Default::default() };
+        let sp = Sparsifier::new(32, scfg).unwrap();
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
 
-        // reference: the in-memory streaming path
-        let mut src = MatSource::new(&d.data, 64);
-        let (direct, dreport) = run_sparsified_kmeans_stream(
-            &mut src,
-            scfg,
-            3,
-            opts,
-            &crate::kmeans::NativeAssigner,
-            stream,
-            true,
+        let mut src = SparseVecSource::new(vec![chunk.clone()]).unwrap();
+        let (model, report) = run_sparsified_kmeans_sparse(
+            &mut src, &sp, 3, opts, &NativeAssigner, 2, true,
         )
         .unwrap();
-        assert_eq!(dreport.passes, 1);
+        assert_eq!(report.passes, 0, "sparse fit reads no raw data");
 
-        // compress once to a store (different shard size than chunk size,
-        // on purpose), then fit from it
-        let dir = tmpdir("kmeans_roundtrip");
-        let mut src2 = MatSource::new(&d.data, 64);
-        let (manifest, creport) =
-            run_compress_to_store(&mut src2, scfg, &dir, 50, stream, true).unwrap();
-        assert_eq!(manifest.n, 400);
-        assert_eq!(creport.passes, 1);
-        let mut store = crate::store::SparseStoreReader::open(&dir).unwrap();
-        for workers in [1usize, 2] {
-            store.rewind();
-            let (from_store, sreport) = run_sparsified_kmeans_from_store(
-                &mut store,
-                3,
-                opts,
-                &crate::kmeans::NativeAssigner,
-                workers,
-            )
+        let mut src2 = SparseVecSource::new(vec![chunk.clone()]).unwrap();
+        let plan = FitPlan::kmeans()
+            .source(&mut src2, &sp, true)
+            .k(3)
+            .kmeans_opts(opts)
+            .workers(2)
+            .run()
             .unwrap();
-            assert_eq!(sreport.passes, 0, "fit from store reads no raw data");
-            assert_eq!(from_store.result.assign, direct.result.assign, "workers={workers}");
-            assert_eq!(
-                from_store.result.objective.to_bits(),
-                direct.result.objective.to_bits()
-            );
-            for (a, b) in from_store
-                .result
-                .centers
-                .as_slice()
-                .iter()
-                .zip(direct.result.centers.as_slice())
-            {
-                assert_eq!(a.to_bits(), b.to_bits(), "centers, workers={workers}");
-            }
-        }
-        std::fs::remove_dir_all(&dir).ok();
+        let pm = plan.kmeans_model().unwrap();
+        assert_eq!(plan.raw_passes, 0);
+        assert_eq!(model.result.assign, pm.result.assign);
+        bits_eq(model.result.centers.as_slice(), pm.result.centers.as_slice(), "centers");
+
+        let mut src3 = SparseVecSource::new(vec![chunk]).unwrap();
+        let (pca, preport) = run_pca_sparse(&mut src3, &sp, 2, 1, true).unwrap();
+        assert_eq!(preport.passes, 0);
+        assert_eq!(pca.pca.components.cols(), 2);
     }
 
     #[test]
-    fn pca_from_store_is_bit_identical_to_streaming() {
+    fn compress_shim_writes_an_identical_store() {
         let mut rng = Pcg64::seed(23);
-        let d = crate::data::spiked(32, 900, &[6.0, 3.0], false, &mut rng);
-        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 11 };
-        // workers = 2: the streaming fold reorders racing chunks, so the
-        // accumulation order is the global column order either way
-        let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
+        let d = gaussian_blobs(16, 200, 2, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 9 };
+        let base = std::env::temp_dir()
+            .join(format!("pds_shim_compress_{}", std::process::id()));
+        let dir_a = base.join("shim");
+        let dir_b = base.join("plan");
+        let _ = std::fs::remove_dir_all(&base);
 
-        let mut src = MatSource::new(&d.data, 128);
-        let (direct, _) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
+        let mut src = MatSource::new(&d.data, 64);
+        let (manifest, report) =
+            run_compress_to_store(&mut src, scfg, &dir_a, 50, StreamConfig::default(), true)
+                .unwrap();
+        assert_eq!(manifest.n, 200);
+        assert_eq!(report.passes, 1);
 
-        let dir = tmpdir("pca_roundtrip");
-        let mut src2 = MatSource::new(&d.data, 128);
-        run_compress_to_store(&mut src2, scfg, &dir, 77, stream, true).unwrap();
-        let mut store = crate::store::SparseStoreReader::open(&dir).unwrap();
-        let (from_store, report) = run_pca_from_store(&mut store, 2, 1).unwrap();
-        assert_eq!(report.passes, 0);
-        assert_eq!(report.n, 900);
-        for (a, b) in from_store
-            .covariance
-            .as_slice()
-            .iter()
-            .zip(direct.covariance.as_slice())
-        {
-            assert_eq!(a.to_bits(), b.to_bits(), "covariance");
-        }
-        for (a, b) in from_store.mean.iter().zip(&direct.mean) {
-            assert_eq!(a.to_bits(), b.to_bits(), "mean");
-        }
-        for (a, b) in from_store
-            .pca
-            .components
-            .as_slice()
-            .iter()
-            .zip(direct.pca.components.as_slice())
-        {
-            assert_eq!(a.to_bits(), b.to_bits(), "components");
-        }
-        std::fs::remove_dir_all(&dir).ok();
-    }
+        let mut src2 = MatSource::new(&d.data, 64);
+        let plan = FitPlan::compress()
+            .stream(&mut src2, scfg)
+            .store_dir(&dir_b)
+            .shard_cols(50)
+            .run()
+            .unwrap();
+        assert_eq!(plan.store_manifest().unwrap().n, 200);
 
-    #[test]
-    fn one_store_serves_many_analyses() {
-        // the whole point: one compression pass, multiple consumers
-        let mut rng = Pcg64::seed(31);
-        let d = gaussian_blobs(16, 300, 2, 0.1, &mut rng);
-        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
-        let dir = tmpdir("many_analyses");
-        let mut src = MatSource::new(&d.data, 100);
-        run_compress_to_store(&mut src, scfg, &dir, 64, StreamConfig::default(), true).unwrap();
+        // byte-identical stores
+        let read_dir = |d: &std::path::Path| -> Vec<(String, Vec<u8>)> {
+            let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(d)
+                .unwrap()
+                .map(|e| {
+                    let e = e.unwrap();
+                    (
+                        e.file_name().to_string_lossy().into_owned(),
+                        std::fs::read(e.path()).unwrap(),
+                    )
+                })
+                .collect();
+            out.sort_by(|a, b| a.0.cmp(&b.0));
+            out
+        };
+        assert_eq!(read_dir(&dir_a), read_dir(&dir_b));
 
-        let mut store = crate::store::SparseStoreReader::open(&dir).unwrap();
+        // and the store shims match the plan's store fits
+        let mut store = SparseStoreReader::open(&dir_a).unwrap();
         let opts = KmeansOpts { n_init: 2, ..Default::default() };
-        let (model, _) = run_sparsified_kmeans_from_store(
-            &mut store,
-            2,
-            opts,
-            &crate::kmeans::NativeAssigner,
-            1,
-        )
-        .unwrap();
-        assert_eq!(model.result.assign.len(), 300);
+        let (model, sreport) =
+            run_sparsified_kmeans_from_store(&mut store, 2, opts, &NativeAssigner, 1).unwrap();
+        assert_eq!(sreport.passes, 0);
+        let mut store2 = SparseStoreReader::open(&dir_b).unwrap();
+        let plan = FitPlan::kmeans().store(&mut store2).k(2).kmeans_opts(opts).run().unwrap();
+        let pm = plan.kmeans_model().unwrap();
+        assert_eq!(model.result.assign, pm.result.assign);
+        bits_eq(model.result.centers.as_slice(), pm.result.centers.as_slice(), "centers");
 
         store.rewind();
         let (pca, _) = run_pca_from_store(&mut store, 2, 1).unwrap();
-        assert_eq!(pca.mean.len(), 16);
-        assert_eq!(pca.pca.components.cols(), 2);
-        std::fs::remove_dir_all(&dir).ok();
+        let mut store3 = SparseStoreReader::open(&dir_b).unwrap();
+        let plan = FitPlan::pca().store(&mut store3).topk(2).run().unwrap();
+        bits_eq(&pca.mean, &plan.pca_fit().unwrap().mean, "store pca mean");
+        std::fs::remove_dir_all(&base).ok();
     }
 }

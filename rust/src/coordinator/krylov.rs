@@ -1,41 +1,30 @@
-//! Covariance-free PCA drivers: the block-Krylov solver wired to the
-//! streaming pipeline and to the persistent sparse store.
+//! Covariance-free PCA: the [`SourceCovOp`] streaming operator plus the
+//! legacy `run_pca_krylov_*` drivers (now **deprecated** shims over
+//! [`FitPlan::pca().solver(Solver::Krylov)`](super::FitPlan)).
 //!
-//! [`run_pca_stream`](super::run_pca_stream) materializes the p×p
+//! [`Solver::Covariance`](super::Solver::Covariance) materializes the p×p
 //! Theorem 6 estimate before eigendecomposing — O(p²) memory and the
-//! dominant cost at large p. The drivers here keep only the sparsified
-//! chunks and evaluate the estimate's *action* per block product
-//! ([`estimators::SparseCovOp`](crate::estimators::SparseCovOp), or
-//! [`SourceCovOp`] streaming a [`SparseChunkSource`] once per product),
-//! so the whole fit runs in O(p·(k+4)) working memory on top of the
-//! compressed data:
-//!
-//! * [`run_pca_krylov_stream`] — compress the raw stream once (1 raw
-//!   pass), hold the compressed chunks, solve in memory.
-//! * [`run_pca_krylov_from_store`] / [`run_pca_krylov_sparse`] — fit
-//!   straight from a sparse store (or any sparse source) with **zero**
-//!   raw passes; each Krylov iteration is one memory-budgeted pass over
-//!   the store, so even the compressed data never has to fit in RAM.
-//!
-//! Every path inherits the PR 1 bitwise contract: results are identical
-//! for every worker count and every reader memory budget, and the
-//! mean estimate is bit-identical to the covariance path's.
-
-use std::time::Instant;
+//! dominant cost at large p. The Krylov path keeps only the sparsified
+//! chunks and evaluates the estimate's *action* per block product
+//! ([`estimators::SparseCovOp`](crate::estimators::SparseCovOp) in
+//! memory, or [`SourceCovOp`] streaming a
+//! [`SparseChunkSource`](crate::sparse::SparseChunkSource) once per
+//! product), so the whole fit runs in O(p·(k+4)) working memory on top
+//! of the compressed data. Every path inherits the PR 1 bitwise
+//! contract: results are identical for every worker count and every
+//! reader memory budget, and the mean estimate is bit-identical to the
+//! covariance path's.
 
 use crate::error::{invalid, Result};
-use crate::estimators::{
-    finish_apply, scatter_chunk, unbias_scales, ScatterDiag, SparseCovOp, SparseMeanEstimator,
-};
+use crate::estimators::{finish_apply, scatter_chunk, unbias_scales, ScatterDiag};
 use crate::linalg::{Mat, SymOp};
-use crate::metrics::Timer;
 use crate::pca::Pca;
 use crate::sampling::{Sparsifier, SparsifyConfig};
-use crate::sparse::SparseChunk;
+use crate::sparse::SparseChunkSource;
 use crate::store::SparseStoreReader;
 
-use super::driver::{coalesce_chunks, FIT_COALESCE_COLS};
-use super::{compress_stream, ChunkSource, PipelineReport, SparseChunkSource, StreamConfig};
+use super::plan::{FitOutcome, FitPlan, FitReport, Solver};
+use super::{ChunkSource, PipelineReport, StreamConfig};
 
 /// Krylov iterations used by the drivers — the same constant as
 /// [`Pca::from_covariance`]'s subspace-iteration count
@@ -141,57 +130,39 @@ impl SymOp for SourceCovOp<'_> {
     }
 }
 
-/// One-pass covariance-free streaming PCA: compress the raw stream
-/// (the only raw pass), hold the compressed chunks, and solve the top-k
-/// eigenproblem by block-Krylov iteration over them. Memory is the
-/// compressed size (~`12·m·n` bytes) plus O(p·(k+4)) solver state —
-/// never a p×p matrix. The mean estimate is bit-identical to
-/// [`run_pca_stream`](super::run_pca_stream)'s.
+fn legacy_krylov(report: FitReport) -> (KrylovPcaReport, PipelineReport) {
+    let FitReport { timer, n, raw_passes, iterations, engine, outcome, .. } = report;
+    let rep = PipelineReport { timer, n, passes: raw_passes, iterations, engine };
+    match outcome {
+        FitOutcome::Pca(fit) => (KrylovPcaReport { mean: fit.mean, pca: fit.pca }, rep),
+        _ => unreachable!("pca plan returns a pca outcome"),
+    }
+}
+
+/// One-pass covariance-free streaming PCA.
+#[deprecated(
+    note = "use FitPlan::pca().stream(source, scfg).topk(k).solver(Solver::Krylov).run()"
+)]
 pub fn run_pca_krylov_stream(
     source: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
     topk: usize,
     stream: StreamConfig,
 ) -> Result<(KrylovPcaReport, PipelineReport)> {
-    let sp = Sparsifier::new(source.p(), scfg)?;
-    let mut timer = Timer::new();
-    let mut chunks: Vec<SparseChunk> = Vec::new();
-    let mut collect = |c: SparseChunk| -> Result<()> {
-        chunks.push(c);
-        Ok(())
-    };
-    let n = compress_stream(source, &sp, stream, true, &mut collect, &mut timer)?;
-    if n == 0 {
-        return invalid("krylov pca stream: source is empty");
-    }
-    // racing workers deliver chunks out of order; sort + coalesce so
-    // every downstream fold runs in global column order
-    chunks.sort_by_key(|c| c.start_col());
-    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
-    for c in &chunks {
-        mean_est.accumulate(c);
-    }
-    let mut op = SparseCovOp::new(&chunks, stream.workers)?;
-    let pca_pre = timer.time("eig", || {
-        Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, scfg.seed)
-    })?;
-    let components = sp.unmix(&pca_pre.components);
-    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
-    let mean = sp.unmix(&mean_pre).col(0).to_vec();
-    let report = PipelineReport { timer, n, passes: 1, iterations: 0, engine: "native" };
-    Ok((
-        KrylovPcaReport { mean, pca: Pca { components, eigenvalues: pca_pre.eigenvalues } },
-        report,
-    ))
+    let report = FitPlan::pca()
+        .stream(source, scfg)
+        .topk(topk)
+        .solver(Solver::Krylov)
+        .stream_config(stream)
+        .run()?;
+    Ok(legacy_krylov(report))
 }
 
-/// Covariance-free PCA over any rewindable sparse source: one stats
-/// pass (mean + scatter diagonal), then `DEFAULT_KRYLOV_ITERS + 2`
-/// streamed block products. Zero passes over the raw data. The source
-/// is consumed from the start (the driver rewinds it).
-/// `preconditioned = false` skips the adjoint and only drops padding
-/// (ablation stores).
+/// Covariance-free PCA over any rewindable sparse source.
+#[deprecated(
+    note = "use FitPlan::pca().source(source, sp, preconditioned).topk(k)\
+            .solver(Solver::Krylov).workers(w).run()"
+)]
 pub fn run_pca_krylov_sparse(
     source: &mut dyn SparseChunkSource,
     sp: &Sparsifier,
@@ -199,92 +170,68 @@ pub fn run_pca_krylov_sparse(
     workers: usize,
     preconditioned: bool,
 ) -> Result<(KrylovPcaReport, PipelineReport)> {
-    if source.p() != sp.p() || source.m() != sp.m() {
-        return invalid(format!(
-            "krylov pca: source is p={} m={}, sparsifier is p={} m={}",
-            source.p(),
-            source.m(),
-            sp.p(),
-            sp.m()
-        ));
-    }
-    let mut timer = Timer::new();
-    let t0 = Instant::now();
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
-    let mut stats = ScatterDiag::new(sp.p());
-    source.reset()?;
-    while let Some(chunk) = source.next_chunk()? {
-        mean_est.accumulate(&chunk);
-        stats.accumulate(&chunk);
-    }
-    timer.add("stats", t0.elapsed().as_secs_f64());
-    let n = stats.n();
-    if n == 0 {
-        return invalid("krylov pca: source is empty");
-    }
-    let mut op = SourceCovOp::from_stats(source, &stats, workers)?;
-    let pca_pre = timer.time("eig", || {
-        Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, sp.seed())
-    })?;
-    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
-    let (components, mean) = if preconditioned {
-        (sp.unmix(&pca_pre.components), sp.unmix(&mean_pre).col(0).to_vec())
-    } else {
-        (sp.truncate(&pca_pre.components), sp.truncate(&mean_pre).col(0).to_vec())
-    };
-    let report = PipelineReport { timer, n, passes: 0, iterations: 0, engine: "native" };
-    Ok((
-        KrylovPcaReport { mean, pca: Pca { components, eigenvalues: pca_pre.eigenvalues } },
-        report,
-    ))
+    let report = FitPlan::pca()
+        .source(source, sp, preconditioned)
+        .topk(topk)
+        .solver(Solver::Krylov)
+        .workers(workers)
+        .run()?;
+    Ok(legacy_krylov(report))
 }
 
-/// Covariance-free PCA straight from a persistent sparse store
-/// (manifest-driven sparsifier reconstruction; zero raw-data passes).
-/// Each Krylov iteration streams the store once under the reader's
-/// memory budget, so neither p×p *nor* the full compressed data needs
-/// to fit in RAM — the budget bounds the fit's working set.
+/// Covariance-free PCA straight from a persistent sparse store.
+#[deprecated(
+    note = "use FitPlan::pca().store(store).topk(k).solver(Solver::Krylov).workers(w).run()"
+)]
 pub fn run_pca_krylov_from_store(
     store: &mut SparseStoreReader,
     topk: usize,
     workers: usize,
 ) -> Result<(KrylovPcaReport, PipelineReport)> {
-    let sp = store.sparsifier()?;
-    let preconditioned = store.manifest().preconditioned;
-    run_pca_krylov_sparse(store, &sp, topk, workers, preconditioned)
+    let report = FitPlan::pca()
+        .store(store)
+        .topk(topk)
+        .solver(Solver::Krylov)
+        .workers(workers)
+        .run()?;
+    Ok(legacy_krylov(report))
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
+    use super::super::MatSource;
     use super::*;
-    use crate::coordinator::{run_pca_stream, MatSource};
     use crate::pca::recovered_components;
     use crate::rng::Pcg64;
     use crate::transform::TransformKind;
 
     #[test]
-    fn krylov_stream_matches_covariance_solver() {
+    fn krylov_shim_matches_fitplan_bitwise() {
         let mut rng = Pcg64::seed(19);
         let d = crate::data::spiked(32, 900, &[8.0, 4.0], false, &mut rng);
         let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 3 };
         let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
 
         let mut src = MatSource::new(&d.data, 128);
-        let (cov, cov_report) = run_pca_stream(&mut src, scfg, 2, stream).unwrap();
-        let mut src2 = MatSource::new(&d.data, 128);
-        let (kry, kry_report) = run_pca_krylov_stream(&mut src2, scfg, 2, stream).unwrap();
+        let (kry, report) = run_pca_krylov_stream(&mut src, scfg, 2, stream).unwrap();
+        assert_eq!(report.passes, 1);
+        assert_eq!(report.n, 900);
 
-        assert_eq!(cov_report.passes, 1);
-        assert_eq!(kry_report.passes, 1);
-        assert_eq!(kry_report.n, 900);
-        // same implicit matrix, same iteration budget: same components
-        assert_eq!(
-            recovered_components(&kry.pca.components, &cov.pca.components, 0.95),
-            2
-        );
-        // the mean estimator path is shared — bit-identical
-        for (a, b) in kry.mean.iter().zip(&cov.mean) {
+        let mut src2 = MatSource::new(&d.data, 128);
+        let plan = FitPlan::pca()
+            .stream(&mut src2, scfg)
+            .topk(2)
+            .solver(Solver::Krylov)
+            .stream_config(stream)
+            .run()
+            .unwrap();
+        let fit = plan.pca_fit().unwrap();
+        for (a, b) in kry.mean.iter().zip(&fit.mean) {
             assert_eq!(a.to_bits(), b.to_bits(), "mean");
+        }
+        for (a, b) in kry.pca.components.as_slice().iter().zip(fit.pca.components.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "components");
         }
         // both recover the planted spikes
         assert!(recovered_components(&kry.pca.components, &d.centers, 0.9) >= 2);
@@ -327,7 +274,7 @@ mod tests {
         let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
         let sp = Sparsifier::new(16, scfg).unwrap();
         let chunk = sp.compress_chunk(&d.data, 0).unwrap();
-        let mut source = crate::coordinator::SparseVecSource::new(vec![chunk]).unwrap();
+        let mut source = crate::sparse::SparseVecSource::new(vec![chunk]).unwrap();
         let mut op = SourceCovOp::new(&mut source, 1).unwrap();
         assert_eq!(op.dim(), 16);
         assert_eq!(op.passes(), 0);

@@ -4,8 +4,9 @@
 //! [`ChunkSource`] (in-memory matrix, on-disk store, or generator),
 //! bounded channels provide backpressure, a pool of sparsifier workers
 //! runs the fused precondition+sample operator, and an accumulator folds
-//! the resulting [`SparseChunk`]s into a consumer (estimators, a
-//! collector for K-means, …).
+//! the resulting [`SparseChunk`](crate::sparse::SparseChunk)s into a
+//! consumer (estimators, a collector for K-means, …). The public face is
+//! the [`FitPlan`] session API.
 //!
 //! Design note: the spec'd stack calls for tokio, which is unavailable in
 //! this offline build; `std::sync::mpsc::sync_channel` + scoped threads
@@ -15,23 +16,31 @@
 mod driver;
 mod krylov;
 mod pipeline;
+mod plan;
 
+#[allow(deprecated)]
 pub use driver::{
     run_compress_to_store, run_pca_from_store, run_pca_sparse, run_pca_stream,
     run_sparsified_kmeans_from_store, run_sparsified_kmeans_sparse,
-    run_sparsified_kmeans_stream, run_two_pass_stream, two_pass_refine_stream, PcaReport,
-    PipelineReport,
+    run_sparsified_kmeans_stream, run_two_pass_stream, PcaReport, PipelineReport,
 };
+#[allow(deprecated)]
 pub use krylov::{
     run_pca_krylov_from_store, run_pca_krylov_sparse, run_pca_krylov_stream, KrylovPcaReport,
     SourceCovOp, DEFAULT_KRYLOV_ITERS,
 };
 pub use pipeline::{compress_stream, SparseConsumer};
+pub use plan::{
+    two_pass_refine_stream, FitOutcome, FitPlan, FitReport, PcaFit, Solver, Task, DEFAULT_TOPK,
+};
+// Re-exported from the data layer for compatibility: the sparse-source
+// abstraction moved to `sparse::source` so estimators and K-means can
+// stream sparsified data without depending on the coordinator.
+pub use crate::sparse::{SparseChunkSource, SparseVecSource};
 
 use crate::data::ChunkStoreReader;
 use crate::error::Result;
 use crate::linalg::Mat;
-use crate::sparse::SparseChunk;
 
 /// A dense chunk in flight: columns `[start_col, start_col + data.cols())`
 /// of the logical stream.
@@ -55,79 +64,6 @@ pub trait ChunkSource: Send {
     fn next_chunk(&mut self) -> Result<Option<DenseChunk>>;
     /// Restart for another pass.
     fn reset(&mut self) -> Result<()>;
-}
-
-/// Abstract source of **already-sparsified** chunks — the mirror of
-/// [`ChunkSource`] for data that skipped (or already paid for) the
-/// compression pass. The canonical implementation is
-/// [`SparseStoreReader`](crate::store::SparseStoreReader), which streams
-/// a persistent store; [`SparseVecSource`] wraps in-memory chunks.
-/// Consumers fold the yielded chunks into the estimators / K-means
-/// exactly as the streaming drivers do — the estimators never know
-/// whether data came from a fresh compress pass or from disk.
-pub trait SparseChunkSource: Send {
-    /// Working (possibly padded) ambient dimension of every chunk.
-    fn p(&self) -> usize;
-    /// Kept entries per sample.
-    fn m(&self) -> usize;
-    /// Total samples if known.
-    fn n_hint(&self) -> Option<usize>;
-    /// Pull the next chunk (in global column order); `None` ends the pass.
-    fn next_chunk(&mut self) -> Result<Option<SparseChunk>>;
-    /// Restart for another pass.
-    fn reset(&mut self) -> Result<()>;
-}
-
-/// In-memory [`SparseChunkSource`]: replays a vector of chunks (sorted by
-/// `start_col` on construction).
-pub struct SparseVecSource {
-    chunks: Vec<SparseChunk>,
-    p: usize,
-    m: usize,
-    pos: usize,
-}
-
-impl SparseVecSource {
-    /// Wrap chunks (must be non-empty, uniform `p`/`m`).
-    pub fn new(mut chunks: Vec<SparseChunk>) -> Result<Self> {
-        let Some(first) = chunks.first() else {
-            return crate::error::invalid("SparseVecSource: no chunks");
-        };
-        let (p, m) = (first.p(), first.m());
-        if chunks.iter().any(|c| c.p() != p || c.m() != m) {
-            return crate::error::shape_err("SparseVecSource: mixed chunk shapes");
-        }
-        chunks.sort_by_key(|c| c.start_col());
-        Ok(SparseVecSource { chunks, p, m, pos: 0 })
-    }
-}
-
-impl SparseChunkSource for SparseVecSource {
-    fn p(&self) -> usize {
-        self.p
-    }
-
-    fn m(&self) -> usize {
-        self.m
-    }
-
-    fn n_hint(&self) -> Option<usize> {
-        Some(self.chunks.iter().map(|c| c.n()).sum())
-    }
-
-    fn next_chunk(&mut self) -> Result<Option<SparseChunk>> {
-        if self.pos >= self.chunks.len() {
-            return Ok(None);
-        }
-        let chunk = self.chunks[self.pos].clone();
-        self.pos += 1;
-        Ok(Some(chunk))
-    }
-
-    fn reset(&mut self) -> Result<()> {
-        self.pos = 0;
-        Ok(())
-    }
 }
 
 /// Streaming configuration.

@@ -1,0 +1,1274 @@
+//! `FitPlan` — the one composable entry point to the driver stack.
+//!
+//! The coordinator used to expose a combinatorial
+//! `run_{pca,pca_krylov,sparsified_kmeans,two_pass,compress}_{stream,sparse,from_store}`
+//! matrix (12+ near-duplicate free functions) that every new solver
+//! multiplied. `FitPlan` collapses it into a builder over three
+//! orthogonal axes:
+//!
+//! * **task** — [`FitPlan::pca`], [`FitPlan::kmeans`],
+//!   [`FitPlan::compress`];
+//! * **source** — a raw dense stream ([`stream`](FitPlan::stream)), an
+//!   already-sparsified source ([`source`](FitPlan::source)), or a
+//!   persistent sparse store ([`store`](FitPlan::store));
+//! * **solver** — [`Solver::Covariance`] / [`Solver::Krylov`] for PCA,
+//!   [`Solver::InMemory`] / [`Solver::Stream`] for K-means.
+//!
+//! Every combination returns the same [`FitReport`]: phase timings, raw
+//! *and* sparse pass accounting, and — for K-means — the paper's
+//! per-iteration center-error bound evaluated from
+//! [`estimators::center_error_bound`](crate::estimators::center_error_bound).
+//! The legacy `run_*` functions survive as thin deprecated shims over
+//! this module.
+//!
+//! Invariants inherited from the kernels underneath: for a fixed seed,
+//! results are bitwise identical for every worker count, every reader
+//! memory budget, and every chunk granularity, and a store-backed fit is
+//! bit-for-bit the streaming fit of the same data.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::error::{invalid, Result};
+use crate::estimators::{CovarianceEstimator, ScatterDiag, SparseCovOp, SparseMeanEstimator};
+use crate::kmeans::{
+    assign_dense, KmeansOpts, KmeansResult, NativeAssigner, SparseAssigner, SparsifiedKmeans,
+    SparsifiedModel,
+};
+use crate::linalg::Mat;
+use crate::metrics::Timer;
+use crate::pca::Pca;
+use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sparse::{SparseChunk, SparseChunkSource};
+use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
+
+use super::krylov::{SourceCovOp, DEFAULT_KRYLOV_ITERS};
+use super::{compress_stream, ChunkSource, StreamConfig};
+
+/// Default number of principal components when a PCA plan does not set
+/// [`topk`](FitPlan::topk).
+pub const DEFAULT_TOPK: usize = 5;
+
+/// What a [`FitPlan`] computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Streaming PCA (Thm 4 mean + Thm 6 covariance estimates).
+    Pca,
+    /// Sparsified K-means (Algorithm 1, optional Algorithm 2 refinement).
+    Kmeans,
+    /// Compress a raw stream into a persistent sparse store.
+    Compress,
+}
+
+/// Solver selection, spanning both tasks (validated per task at
+/// [`run`](FitPlan::run) time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// PCA: materialize the p×p Thm 6 estimate, then eigendecompose.
+    Covariance,
+    /// PCA: covariance-free block-Krylov on the implicit estimate —
+    /// O(p·(k+4)) solver memory, one sparse pass per block product.
+    Krylov,
+    /// K-means: hold the (coalesced) sparse chunks in memory and iterate
+    /// over them — the fastest path when the compressed data fits in RAM.
+    InMemory,
+    /// K-means: source-driven Lloyd via the `CenterStep` kernel — one
+    /// sparse pass per iteration, nothing materialized; with a
+    /// memory-budgeted store reader the whole fit is out-of-core.
+    Stream,
+}
+
+impl Solver {
+    /// CLI-facing name (`pds fit --solver <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Solver::Covariance => "covariance",
+            Solver::Krylov => "krylov",
+            Solver::InMemory => "inmemory",
+            Solver::Stream => "stream",
+        }
+    }
+
+    /// Parse a CLI-facing solver name.
+    pub fn parse(name: &str) -> Result<Solver> {
+        Ok(match name {
+            "covariance" => Solver::Covariance,
+            "krylov" => Solver::Krylov,
+            "inmemory" => Solver::InMemory,
+            "stream" => Solver::Stream,
+            other => {
+                return invalid(format!(
+                    "unknown solver {other:?} (want covariance|krylov|inmemory|stream)"
+                ))
+            }
+        })
+    }
+}
+
+/// PCA outputs of a [`FitPlan`] run.
+pub struct PcaFit {
+    /// Unbiased sample-mean estimate (Thm 4), original-domain.
+    pub mean: Vec<f64>,
+    /// The materialized Thm 6 covariance estimate in the *preconditioned*
+    /// domain — `Some` only for [`Solver::Covariance`] (not materializing
+    /// it is the point of [`Solver::Krylov`]).
+    pub covariance: Option<Mat>,
+    /// Top-k principal components + eigenvalues, unmixed to the original
+    /// domain.
+    pub pca: Pca,
+}
+
+/// Task-specific result carried by a [`FitReport`].
+pub enum FitOutcome {
+    /// PCA components / eigenvalues / mean.
+    Pca(PcaFit),
+    /// The fitted K-means model, plus the Algorithm 2 refinement when the
+    /// plan asked for [`two_pass`](FitPlan::two_pass).
+    Kmeans {
+        /// The pass-1 sparsified model (original-domain centers).
+        model: SparsifiedModel,
+        /// Exact-mean / original-domain reassignment (Algorithm 2), if
+        /// a refinement pass ran.
+        refined: Option<KmeansResult>,
+    },
+    /// Manifest of the store written by a [`FitPlan::compress`] run.
+    Compressed(StoreManifest),
+}
+
+/// The single report every plan returns: accounting + outcome.
+pub struct FitReport {
+    /// Phase timings (`load`, `compress`, `kmeans`, `eig`, `stats`,
+    /// `pass2`, `store` — whichever phases the plan exercised).
+    pub timer: Timer,
+    /// Samples processed.
+    pub n: usize,
+    /// Passes over the **raw** dense data (paper Table II discipline):
+    /// 1 for a fresh compress, 0 for sparse/store-backed fits, +1 for an
+    /// Algorithm 2 refinement.
+    pub raw_passes: usize,
+    /// Passes started over the **sparsified** data: 1 for an in-memory
+    /// materialization; for [`Solver::Stream`] every source walk counts —
+    /// one per Lloyd iteration plus the k-means++ seeding's sub-passes
+    /// (≈2 per seed, some stopped early) per restart; `iters + 2` block
+    /// products (+1 stats pass) for [`Solver::Krylov`].
+    pub sparse_passes: usize,
+    /// Lloyd iterations of the winning restart (K-means tasks).
+    pub iterations: usize,
+    /// Assignment engine used (K-means tasks; `"native"` otherwise).
+    pub engine: &'static str,
+    /// Per-iteration worst-cluster center-error bound (Eq. 43 at
+    /// δ = [`CENTER_BOUND_DELTA`](crate::kmeans::CENTER_BOUND_DELTA)),
+    /// copied from [`SparsifiedModel::center_bound`]; empty for PCA /
+    /// compress plans.
+    pub center_bound: Vec<f64>,
+    /// The task-specific result.
+    pub outcome: FitOutcome,
+}
+
+impl FitReport {
+    /// The fitted K-means model, if this was a K-means plan.
+    pub fn kmeans_model(&self) -> Option<&SparsifiedModel> {
+        match &self.outcome {
+            FitOutcome::Kmeans { model, .. } => Some(model),
+            _ => None,
+        }
+    }
+
+    /// The Algorithm 2 refinement, if the plan ran one.
+    pub fn refined(&self) -> Option<&KmeansResult> {
+        match &self.outcome {
+            FitOutcome::Kmeans { refined, .. } => refined.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// The PCA outputs, if this was a PCA plan.
+    pub fn pca_fit(&self) -> Option<&PcaFit> {
+        match &self.outcome {
+            FitOutcome::Pca(fit) => Some(fit),
+            _ => None,
+        }
+    }
+
+    /// The written store's manifest, if this was a compress plan.
+    pub fn store_manifest(&self) -> Option<&StoreManifest> {
+        match &self.outcome {
+            FitOutcome::Compressed(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// The plan's data input, normalized at `run` time.
+enum SourceKind<'a> {
+    /// Raw dense stream + the compression config to apply.
+    Raw(&'a mut dyn ChunkSource),
+    /// Already-sparsified source with its (cloned) sparsifier.
+    Sparse {
+        src: &'a mut dyn SparseChunkSource,
+        sp: Sparsifier,
+        preconditioned: bool,
+    },
+    /// Persistent sparse store (sparsifier rebuilt from the manifest).
+    Store(&'a mut SparseStoreReader),
+}
+
+/// Builder for one end-to-end fit over three orthogonal axes — task
+/// ([`pca`](Self::pca) / [`kmeans`](Self::kmeans) /
+/// [`compress`](Self::compress)), source ([`stream`](Self::stream) /
+/// [`source`](Self::source) / [`store`](Self::store)), and
+/// [`solver`](Self::solver) — validated at [`run`](Self::run) time. All
+/// setters are chainable and `run` consumes the plan.
+///
+/// # Example — PCA
+///
+/// ```
+/// use pds::coordinator::{FitPlan, MatSource, Solver};
+/// use pds::linalg::Mat;
+/// use pds::rng::Pcg64;
+/// use pds::sampling::SparsifyConfig;
+/// use pds::transform::TransformKind;
+///
+/// let mut rng = Pcg64::seed(1);
+/// let x = Mat::from_fn(16, 300, |_, _| rng.normal());
+/// let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 2 };
+/// let mut src = MatSource::new(&x, 64);
+/// let report = FitPlan::pca()
+///     .stream(&mut src, scfg)
+///     .topk(2)
+///     .solver(Solver::Krylov)
+///     .workers(2)
+///     .run()?;
+/// let fit = report.pca_fit().expect("pca plan");
+/// assert_eq!(fit.pca.components.cols(), 2);
+/// assert_eq!(fit.mean.len(), 16);
+/// assert_eq!(report.raw_passes, 1);
+/// # Ok::<(), pds::Error>(())
+/// ```
+pub struct FitPlan<'a> {
+    task: Task,
+    source: Option<SourceKind<'a>>,
+    scfg: Option<SparsifyConfig>,
+    stream: StreamConfig,
+    precondition: bool,
+    topk: usize,
+    solver: Option<Solver>,
+    k: Option<usize>,
+    opts: KmeansOpts,
+    assigner: Option<&'a dyn SparseAssigner>,
+    two_pass: bool,
+    refine: Option<&'a mut dyn ChunkSource>,
+    store_dir: Option<PathBuf>,
+    shard_cols: usize,
+}
+
+/// Shared default assigner instance (`&'static` so the builder can fall
+/// back to it without an allocation).
+static NATIVE_ASSIGNER: NativeAssigner = NativeAssigner;
+
+impl<'a> FitPlan<'a> {
+    fn new(task: Task) -> Self {
+        FitPlan {
+            task,
+            source: None,
+            scfg: None,
+            stream: StreamConfig::default(),
+            precondition: true,
+            topk: DEFAULT_TOPK,
+            solver: None,
+            k: None,
+            opts: KmeansOpts::default(),
+            assigner: None,
+            two_pass: false,
+            refine: None,
+            store_dir: None,
+            shard_cols: 8192,
+        }
+    }
+
+    /// Plan a streaming PCA fit.
+    pub fn pca() -> Self {
+        FitPlan::new(Task::Pca)
+    }
+
+    /// Plan a sparsified K-means fit (Algorithm 1).
+    ///
+    /// ```
+    /// use pds::coordinator::FitPlan;
+    /// use pds::data::gaussian_blobs;
+    /// use pds::coordinator::MatSource;
+    /// use pds::rng::Pcg64;
+    /// use pds::sampling::SparsifyConfig;
+    /// use pds::transform::TransformKind;
+    ///
+    /// let mut rng = Pcg64::seed(3);
+    /// let d = gaussian_blobs(32, 300, 3, 0.1, &mut rng);
+    /// let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 4 };
+    /// let mut src = MatSource::new(&d.data, 64);
+    /// let report = FitPlan::kmeans()
+    ///     .stream(&mut src, scfg)
+    ///     .k(3)
+    ///     .restarts(2)
+    ///     .run()?;
+    /// let model = report.kmeans_model().expect("kmeans plan");
+    /// assert_eq!(model.result.assign.len(), 300);
+    /// // one Thm-level center-error bound per Lloyd iteration
+    /// assert_eq!(report.center_bound.len(), report.iterations);
+    /// assert_eq!(report.raw_passes, 1);
+    /// # Ok::<(), pds::Error>(())
+    /// ```
+    pub fn kmeans() -> Self {
+        FitPlan::new(Task::Kmeans)
+    }
+
+    /// Plan a compress-once pass into a persistent sparse store.
+    pub fn compress() -> Self {
+        FitPlan::new(Task::Compress)
+    }
+
+    /// Feed the plan from a raw dense stream, compressed on the fly with
+    /// `scfg` (this is the plan's one raw pass).
+    pub fn stream(mut self, src: &'a mut dyn ChunkSource, scfg: SparsifyConfig) -> Self {
+        self.source = Some(SourceKind::Raw(src));
+        self.scfg = Some(scfg);
+        self
+    }
+
+    /// Feed the plan from an already-sparsified source. `sp` must be the
+    /// sparsifier the chunks were produced with; `preconditioned = false`
+    /// marks ablation data compressed without the ROS (centers /
+    /// components then only drop padding instead of unmixing).
+    pub fn source(
+        mut self,
+        src: &'a mut dyn SparseChunkSource,
+        sp: &Sparsifier,
+        preconditioned: bool,
+    ) -> Self {
+        self.source = Some(SourceKind::Sparse { src, sp: sp.clone(), preconditioned });
+        self
+    }
+
+    /// Feed the plan from a persistent sparse store (zero raw passes; the
+    /// sparsifier is rebuilt from the manifest).
+    pub fn store(mut self, reader: &'a mut SparseStoreReader) -> Self {
+        self.source = Some(SourceKind::Store(reader));
+        self
+    }
+
+    /// Fork/join width for every stage (compress workers, assignment,
+    /// center/covariance accumulation, restart fan-out). Any value yields
+    /// bitwise identical results.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.stream.workers = workers.max(1);
+        self
+    }
+
+    /// Full streaming configuration (queue depth, chunk columns, workers)
+    /// for raw-stream sources.
+    pub fn stream_config(mut self, cfg: StreamConfig) -> Self {
+        self.stream = cfg;
+        self
+    }
+
+    /// Toggle the ROS preconditioning on a raw-stream compress (default
+    /// `true`; `false` is the paper's ablation arm).
+    pub fn precondition(mut self, on: bool) -> Self {
+        self.precondition = on;
+        self
+    }
+
+    /// Number of principal components (PCA plans; default
+    /// [`DEFAULT_TOPK`]).
+    pub fn topk(mut self, topk: usize) -> Self {
+        self.topk = topk;
+        self
+    }
+
+    /// Solver override. PCA accepts [`Solver::Covariance`] (default) or
+    /// [`Solver::Krylov`]; K-means accepts [`Solver::InMemory`] (default)
+    /// or [`Solver::Stream`].
+    pub fn solver(mut self, solver: Solver) -> Self {
+        self.solver = Some(solver);
+        self
+    }
+
+    /// Number of clusters (required for K-means plans).
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Lloyd / restart options (K-means plans).
+    pub fn kmeans_opts(mut self, opts: KmeansOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Number of k-means++ restarts (`opts.n_init`): restarts run over
+    /// seeded sub-RNG streams — in parallel on the in-memory solver when
+    /// [`workers`](Self::workers) allows — and the best inertia wins,
+    /// deterministically for a fixed seed regardless of worker count.
+    pub fn restarts(mut self, restarts: usize) -> Self {
+        self.opts.n_init = restarts.max(1);
+        self
+    }
+
+    /// Assignment engine (default: the native masked-distance assigner).
+    pub fn assigner(mut self, assigner: &'a dyn SparseAssigner) -> Self {
+        self.assigner = Some(assigner);
+        self
+    }
+
+    /// Run the Algorithm 2 refinement after the fit: one extra pass over
+    /// the raw stream recomputing exact class means and reassigning in
+    /// the original domain. Raw-stream plans reuse their own source;
+    /// sparse/store plans must provide one via
+    /// [`refine_stream`](Self::refine_stream).
+    pub fn two_pass(mut self, on: bool) -> Self {
+        self.two_pass = on;
+        self
+    }
+
+    /// Raw stream for the Algorithm 2 refinement of a sparse/store-backed
+    /// plan (implies [`two_pass`](Self::two_pass)).
+    pub fn refine_stream(mut self, raw: &'a mut dyn ChunkSource) -> Self {
+        self.refine = Some(raw);
+        self.two_pass = true;
+        self
+    }
+
+    /// Output directory for a [`compress`](Self::compress) plan.
+    pub fn store_dir(mut self, dir: &Path) -> Self {
+        self.store_dir = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Columns per shard for a [`compress`](Self::compress) plan
+    /// (default 8192).
+    pub fn shard_cols(mut self, cols: usize) -> Self {
+        self.shard_cols = cols.max(1);
+        self
+    }
+
+    /// Execute the plan.
+    pub fn run(self) -> Result<FitReport> {
+        match self.task {
+            Task::Pca => self.run_pca(),
+            Task::Kmeans => self.run_kmeans(),
+            Task::Compress => self.run_compress(),
+        }
+    }
+
+    /// Validate + resolve the solver for the task.
+    fn resolve_solver(&self) -> Result<Solver> {
+        let solver = self.solver.unwrap_or(match self.task {
+            Task::Pca => Solver::Covariance,
+            _ => Solver::InMemory,
+        });
+        let ok = match self.task {
+            Task::Pca => matches!(solver, Solver::Covariance | Solver::Krylov),
+            Task::Kmeans => matches!(solver, Solver::InMemory | Solver::Stream),
+            Task::Compress => true,
+        };
+        if !ok {
+            return invalid(format!(
+                "FitPlan: solver {:?} does not apply to task {:?} (pca: covariance|krylov, \
+                 kmeans: inmemory|stream)",
+                self.solver, self.task
+            ));
+        }
+        Ok(solver)
+    }
+
+    fn take_source(source: &mut Option<SourceKind<'a>>) -> Result<SourceKind<'a>> {
+        source.take().ok_or_else(|| {
+            crate::error::Error::Invalid(
+                "FitPlan: no source — call .stream(), .source() or .store()".into(),
+            )
+        })
+    }
+
+    // ---------------------------------------------------------------- pca
+
+    fn run_pca(mut self) -> Result<FitReport> {
+        let solver = self.resolve_solver()?;
+        let topk = self.topk;
+        let workers = self.stream.workers;
+        match Self::take_source(&mut self.source)? {
+            SourceKind::Raw(src) => {
+                let Some(scfg) = self.scfg else {
+                    return invalid("FitPlan: raw stream needs a SparsifyConfig");
+                };
+                match solver {
+                    Solver::Covariance => {
+                        pca_cov_stream(src, scfg, topk, self.stream, self.precondition)
+                    }
+                    _ => pca_krylov_stream(src, scfg, topk, self.stream, self.precondition),
+                }
+            }
+            SourceKind::Sparse { src, sp, preconditioned } => match solver {
+                Solver::Covariance => pca_cov_sparse(src, &sp, topk, workers, preconditioned),
+                _ => pca_krylov_sparse(src, &sp, topk, workers, preconditioned),
+            },
+            SourceKind::Store(reader) => {
+                let sp = reader.sparsifier()?;
+                let preconditioned = reader.manifest().preconditioned;
+                match solver {
+                    Solver::Covariance => {
+                        pca_cov_sparse(reader, &sp, topk, workers, preconditioned)
+                    }
+                    _ => pca_krylov_sparse(reader, &sp, topk, workers, preconditioned),
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- kmeans
+
+    fn run_kmeans(mut self) -> Result<FitReport> {
+        let solver = self.resolve_solver()?;
+        let Some(k) = self.k else {
+            return invalid("FitPlan::kmeans() needs .k(clusters)");
+        };
+        let assigner: &dyn SparseAssigner = match self.assigner {
+            Some(a) => a,
+            None => &NATIVE_ASSIGNER,
+        };
+        let workers = self.stream.workers;
+        let opts = self.opts;
+        let refine = self.refine.take();
+        let report = match Self::take_source(&mut self.source)? {
+            SourceKind::Raw(src) => {
+                let Some(scfg) = self.scfg else {
+                    return invalid("FitPlan: raw stream needs a SparsifyConfig");
+                };
+                if solver == Solver::Stream {
+                    return invalid(
+                        "FitPlan: the stream K-means solver re-reads the sparse data every \
+                         iteration; compress to a store first (FitPlan::compress), then \
+                         .store(reader).solver(Solver::Stream)",
+                    );
+                }
+                // reborrow: the plan's own source is revisited below when
+                // a two-pass refinement was requested
+                let mut report = kmeans_inmemory_stream(
+                    &mut *src,
+                    scfg,
+                    k,
+                    opts,
+                    assigner,
+                    self.stream,
+                    self.precondition,
+                )?;
+                if self.two_pass {
+                    if !self.precondition {
+                        return invalid(
+                            "FitPlan: the Algorithm 2 refinement needs preconditioned \
+                             pass-1 centers (precondition(true))",
+                        );
+                    }
+                    // Algorithm 2 revisits the raw data: an explicit
+                    // .refine_stream() source wins, else the plan's own
+                    // source is rewound and reused
+                    match refine {
+                        Some(raw) => refine_into_report(raw, k, &mut report)?,
+                        None => refine_into_report(src, k, &mut report)?,
+                    }
+                }
+                report
+            }
+            SourceKind::Sparse { src, sp, preconditioned } => {
+                let mut report = kmeans_from_sparse(
+                    src,
+                    &sp,
+                    k,
+                    opts,
+                    assigner,
+                    workers,
+                    preconditioned,
+                    solver,
+                )?;
+                if self.two_pass {
+                    if !preconditioned {
+                        return invalid(
+                            "FitPlan: the Algorithm 2 refinement needs preconditioned \
+                             pass-1 centers (this source was compressed without the ROS)",
+                        );
+                    }
+                    let Some(raw) = refine else {
+                        return invalid(
+                            "FitPlan: a sparse-source two-pass refinement needs \
+                             .refine_stream(raw source)",
+                        );
+                    };
+                    refine_into_report(raw, k, &mut report)?;
+                }
+                return Ok(report);
+            }
+            SourceKind::Store(reader) => {
+                let sp = reader.sparsifier()?;
+                let preconditioned = reader.manifest().preconditioned;
+                let mut report = kmeans_from_sparse(
+                    reader,
+                    &sp,
+                    k,
+                    opts,
+                    assigner,
+                    workers,
+                    preconditioned,
+                    solver,
+                )?;
+                if self.two_pass {
+                    if !preconditioned {
+                        return invalid(
+                            "FitPlan: the Algorithm 2 refinement needs preconditioned \
+                             pass-1 centers (this store was compressed without the ROS)",
+                        );
+                    }
+                    let Some(raw) = refine else {
+                        return invalid(
+                            "FitPlan: a store-backed two-pass refinement needs \
+                             .refine_stream(raw source)",
+                        );
+                    };
+                    refine_into_report(raw, k, &mut report)?;
+                }
+                return Ok(report);
+            }
+        };
+        // only raw-source plans fall through here (the sparse/store arms
+        // return early so `refine` can be moved per arm)
+        Ok(report)
+    }
+
+    // ----------------------------------------------------------- compress
+
+    fn run_compress(mut self) -> Result<FitReport> {
+        let Some(dir) = self.store_dir.clone() else {
+            return invalid("FitPlan::compress() needs .store_dir(path)");
+        };
+        let SourceKind::Raw(src) = Self::take_source(&mut self.source)? else {
+            return invalid("FitPlan::compress() consumes a raw stream (.stream(...))");
+        };
+        let Some(scfg) = self.scfg else {
+            return invalid("FitPlan: raw stream needs a SparsifyConfig");
+        };
+        let sp = Sparsifier::new(src.p(), scfg)?;
+        let mut timer = Timer::new();
+        let mut writer =
+            SparseStoreWriter::create(&dir, &sp, scfg, self.precondition, self.shard_cols)?;
+        let mut sink = |c: SparseChunk| writer.append(c);
+        let n = compress_stream(src, &sp, self.stream, self.precondition, &mut sink, &mut timer)?;
+        let manifest = timer.time("store", || writer.finish())?;
+        Ok(FitReport {
+            timer,
+            n,
+            raw_passes: 1,
+            sparse_passes: 0,
+            iterations: 0,
+            engine: "native",
+            center_bound: Vec::new(),
+            outcome: FitOutcome::Compressed(manifest),
+        })
+    }
+}
+
+// ====================================================================
+// shared machinery (the former run_* driver bodies)
+// ====================================================================
+
+/// Target column count when coalescing stream chunks for a fit.
+pub(crate) const FIT_COALESCE_COLS: usize = 8192;
+
+/// Merge sorted, contiguous stream chunks into pieces of at least
+/// `target_cols` columns (the tail piece may be smaller).
+pub(crate) fn coalesce_chunks(
+    chunks: Vec<SparseChunk>,
+    target_cols: usize,
+) -> Result<Vec<SparseChunk>> {
+    let mut out = Vec::new();
+    let mut group: Vec<SparseChunk> = Vec::new();
+    let mut group_cols = 0usize;
+    for c in chunks {
+        group_cols += c.n();
+        group.push(c);
+        if group_cols >= target_cols {
+            out.push(merge_group(&mut group)?);
+            group_cols = 0;
+        }
+    }
+    if !group.is_empty() {
+        out.push(merge_group(&mut group)?);
+    }
+    Ok(out)
+}
+
+fn merge_group(group: &mut Vec<SparseChunk>) -> Result<SparseChunk> {
+    let merged = if group.len() == 1 {
+        group.pop().expect("non-empty group")
+    } else {
+        SparseChunk::concat(group)?
+    };
+    group.clear();
+    Ok(merged)
+}
+
+/// Compress a raw stream, collecting the chunks sorted + coalesced for an
+/// efficient in-memory fit. Returns (chunks, n).
+fn compress_collect(
+    src: &mut dyn ChunkSource,
+    sp: &Sparsifier,
+    stream: StreamConfig,
+    precondition: bool,
+    timer: &mut Timer,
+) -> Result<(Vec<SparseChunk>, usize)> {
+    let mut chunks: Vec<SparseChunk> = Vec::new();
+    let mut collect = |c: SparseChunk| -> Result<()> {
+        chunks.push(c);
+        Ok(())
+    };
+    let n = compress_stream(src, sp, stream, precondition, &mut collect, timer)?;
+    chunks.sort_by_key(|c| c.start_col());
+    // coalesce the (often chunk_cols-sized) stream pieces so the parallel
+    // kernels fan out over large column ranges instead of paying a
+    // fork/join per tiny chunk; bitwise identical — every fit depends
+    // only on the global column order
+    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
+    Ok((chunks, n))
+}
+
+/// Drain a sparse source into memory, order and coalesce the chunks for
+/// an efficient fit. Returns the chunks plus the total sample count.
+fn collect_sparse(
+    source: &mut dyn SparseChunkSource,
+    timer: &mut Timer,
+) -> Result<(Vec<SparseChunk>, usize)> {
+    let t0 = Instant::now();
+    let mut chunks = Vec::new();
+    while let Some(c) = source.next_chunk()? {
+        chunks.push(c);
+    }
+    timer.add("load", t0.elapsed().as_secs_f64());
+    let n = chunks.iter().map(|c| c.n()).sum();
+    chunks.sort_by_key(|c| c.start_col());
+    let chunks = coalesce_chunks(chunks, FIT_COALESCE_COLS)?;
+    Ok((chunks, n))
+}
+
+fn check_source_shape(source: &dyn SparseChunkSource, sp: &Sparsifier) -> Result<()> {
+    if source.p() != sp.p() || source.m() != sp.m() {
+        return invalid(format!(
+            "FitPlan: source is p={} m={}, sparsifier is p={} m={}",
+            source.p(),
+            source.m(),
+            sp.p(),
+            sp.m()
+        ));
+    }
+    Ok(())
+}
+
+/// One-pass sparsified K-means over a raw stream (Algorithm 1 at scale):
+/// compress with backpressure, hold the compressed chunks, iterate.
+fn kmeans_inmemory_stream(
+    src: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    stream: StreamConfig,
+    precondition: bool,
+) -> Result<FitReport> {
+    let sp = Sparsifier::new(src.p(), scfg)?;
+    let mut timer = Timer::new();
+    let (chunks, n) = compress_collect(src, &sp, stream, precondition, &mut timer)?;
+    if n == 0 {
+        return invalid("FitPlan: stream is empty");
+    }
+    // reuse the compress pool width for the fit (assignment, center
+    // accumulation and the restart fan-out are all bitwise
+    // worker-count-invariant, so this only changes speed)
+    let sk = SparsifiedKmeans::new(scfg, k, opts)
+        .with_workers(stream.workers)
+        .with_restart_workers(stream.workers);
+    let model = timer.time("kmeans", || sk.fit_chunks_raw(&sp, &chunks, assigner, precondition))?;
+    let iterations = model.result.iterations;
+    let center_bound = model.center_bound.clone();
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 1,
+        sparse_passes: 1,
+        iterations,
+        engine: assigner.name(),
+        center_bound,
+        outcome: FitOutcome::Kmeans { model, refined: None },
+    })
+}
+
+/// Sparsified K-means over an already-compressed source — in-memory
+/// (materialize + iterate) or streaming (one source pass per Lloyd
+/// iteration through the `CenterStep` kernel). Zero raw passes either
+/// way, and bit-identical outputs to the raw-stream path on the same
+/// data.
+#[allow(clippy::too_many_arguments)]
+fn kmeans_from_sparse(
+    source: &mut dyn SparseChunkSource,
+    sp: &Sparsifier,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    workers: usize,
+    preconditioned: bool,
+    solver: Solver,
+) -> Result<FitReport> {
+    check_source_shape(source, sp)?;
+    let scfg = SparsifyConfig { gamma: sp.gamma(), transform: sp.ros().kind(), seed: sp.seed() };
+    let mut timer = Timer::new();
+    let (model, n, sparse_passes) = if solver == Solver::Stream {
+        let sk = SparsifiedKmeans::new(scfg, k, opts).with_workers(workers.max(1));
+        let (model, passes) =
+            timer.time("kmeans", || sk.fit_source(sp, source, assigner, preconditioned))?;
+        let n = model.result.assign.len();
+        (model, n, passes)
+    } else {
+        let (chunks, n) = collect_sparse(source, &mut timer)?;
+        if n == 0 {
+            return invalid("FitPlan: source is empty");
+        }
+        let sk = SparsifiedKmeans::new(scfg, k, opts)
+            .with_workers(workers.max(1))
+            .with_restart_workers(workers.max(1));
+        let model =
+            timer.time("kmeans", || sk.fit_chunks_raw(sp, &chunks, assigner, preconditioned))?;
+        (model, n, 1)
+    };
+    let iterations = model.result.iterations;
+    let center_bound = model.center_bound.clone();
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 0,
+        sparse_passes,
+        iterations,
+        engine: assigner.name(),
+        center_bound,
+        outcome: FitOutcome::Kmeans { model, refined: None },
+    })
+}
+
+/// The second pass of Algorithm 2, applied to an existing pass-1 model:
+/// revisit the raw stream once to recompute exact class means and to
+/// reassign against the pass-1 centers in the original domain. Returns
+/// the refined result and the pass's wall-clock seconds.
+pub fn two_pass_refine_stream(
+    source: &mut dyn ChunkSource,
+    model: &SparsifiedModel,
+    k: usize,
+) -> Result<(KmeansResult, f64)> {
+    let one = &model.result;
+    let p = source.p();
+    source.reset()?;
+    let t0 = Instant::now();
+    let mut sums = Mat::zeros(p, k);
+    let mut counts = vec![0usize; k];
+    let mut assign = vec![0u32; one.assign.len()];
+    let mut objective = 0.0;
+    while let Some(chunk) = source.next_chunk()? {
+        // (a) exact class means under the pass-1 assignment
+        for j in 0..chunk.data.cols() {
+            let c = one.assign[chunk.start_col + j] as usize;
+            counts[c] += 1;
+            let col = chunk.data.col(j);
+            let s = sums.col_mut(c);
+            for i in 0..p {
+                s[i] += col[i];
+            }
+        }
+        // (b) reassignment against pass-1 centers, original domain
+        let (a, obj) = assign_dense(&chunk.data, &one.centers);
+        objective += obj;
+        assign[chunk.start_col..chunk.start_col + a.len()].copy_from_slice(&a);
+    }
+    let mut centers = one.centers.clone();
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f64;
+            let (s, dst) = (sums.col(c), centers.col_mut(c));
+            for i in 0..p {
+                dst[i] = s[i] * inv;
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    Ok((
+        KmeansResult {
+            centers,
+            assign,
+            objective,
+            iterations: one.iterations,
+            converged: one.converged,
+        },
+        secs,
+    ))
+}
+
+/// Run the Algorithm 2 refinement and fold it into a K-means report.
+fn refine_into_report(
+    source: &mut dyn ChunkSource,
+    k: usize,
+    report: &mut FitReport,
+) -> Result<()> {
+    let FitOutcome::Kmeans { model, refined } = &mut report.outcome else {
+        return invalid("FitPlan: refinement applies to K-means plans only");
+    };
+    let (result, secs) = two_pass_refine_stream(source, model, k)?;
+    *refined = Some(result);
+    report.timer.add("pass2", secs);
+    report.raw_passes += 1;
+    Ok(())
+}
+
+/// One-pass streaming PCA, covariance solver: fold the Thm 4/6 estimators
+/// in global column order during the compress, eigendecompose, unmix.
+fn pca_cov_stream(
+    src: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    topk: usize,
+    stream: StreamConfig,
+    precondition: bool,
+) -> Result<FitReport> {
+    let sp = Sparsifier::new(src.p(), scfg)?;
+    let mut timer = Timer::new();
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    // the covariance scatter is the PCA hot path; give it the same pool
+    // width as the compress stage (bitwise invariant to the worker count)
+    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(stream.workers);
+    // Racing workers deliver chunks out of stream order; f64 accumulation
+    // is order-sensitive, so reorder through a pending map (bounded by
+    // the pipeline's in-flight cap) and fold in global column order —
+    // this is what makes the estimates bitwise invariant to the worker
+    // count, the same discipline as the store writer.
+    let mut pending: BTreeMap<usize, SparseChunk> = BTreeMap::new();
+    let mut next_col = 0usize;
+    let mut fold = |c: SparseChunk| -> Result<()> {
+        pending.insert(c.start_col(), c);
+        loop {
+            let first = match pending.keys().next() {
+                Some(&k) if k == next_col => k,
+                _ => break,
+            };
+            let chunk = pending.remove(&first).expect("key just observed");
+            next_col += chunk.n();
+            mean_est.accumulate(&chunk);
+            cov_est.accumulate(&chunk);
+        }
+        Ok(())
+    };
+    let n = compress_stream(src, &sp, stream, precondition, &mut fold, &mut timer)?;
+    if !pending.is_empty() || next_col != n {
+        return invalid(format!(
+            "pca stream: non-contiguous chunk stream (folded {next_col} of {n} columns)"
+        ));
+    }
+    if n == 0 {
+        return invalid("FitPlan: stream is empty");
+    }
+    let covariance = cov_est.estimate();
+    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, scfg.seed));
+    let (components, mean) = unmix_outputs(&sp, &pca_pre.components, &mean_est, precondition)?;
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 1,
+        sparse_passes: 1,
+        iterations: 0,
+        engine: "native",
+        center_bound: Vec::new(),
+        outcome: FitOutcome::Pca(PcaFit {
+            mean,
+            covariance: Some(covariance),
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        }),
+    })
+}
+
+/// One-pass covariance-free streaming PCA: compress (the only raw pass),
+/// hold the compressed chunks, solve top-k by block-Krylov over them.
+fn pca_krylov_stream(
+    src: &mut dyn ChunkSource,
+    scfg: SparsifyConfig,
+    topk: usize,
+    stream: StreamConfig,
+    precondition: bool,
+) -> Result<FitReport> {
+    let sp = Sparsifier::new(src.p(), scfg)?;
+    let mut timer = Timer::new();
+    let (chunks, n) = compress_collect(src, &sp, stream, precondition, &mut timer)?;
+    if n == 0 {
+        return invalid("FitPlan: stream is empty");
+    }
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    for c in &chunks {
+        mean_est.accumulate(c);
+    }
+    let mut op = SparseCovOp::new(&chunks, stream.workers)?;
+    let pca_pre = timer.time("eig", || {
+        Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, scfg.seed)
+    })?;
+    let (components, mean) = unmix_outputs(&sp, &pca_pre.components, &mean_est, precondition)?;
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 1,
+        // one mean sweep + (iters + 2) block products over the chunks
+        sparse_passes: 1 + DEFAULT_KRYLOV_ITERS + 2,
+        iterations: 0,
+        engine: "native",
+        center_bound: Vec::new(),
+        outcome: FitOutcome::Pca(PcaFit {
+            mean,
+            covariance: None,
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        }),
+    })
+}
+
+/// One-pass PCA over an already-compressed source, covariance solver.
+fn pca_cov_sparse(
+    source: &mut dyn SparseChunkSource,
+    sp: &Sparsifier,
+    topk: usize,
+    workers: usize,
+    preconditioned: bool,
+) -> Result<FitReport> {
+    check_source_shape(source, sp)?;
+    let mut timer = Timer::new();
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(workers.max(1));
+    let mut n = 0usize;
+    loop {
+        let t0 = Instant::now();
+        let next = source.next_chunk()?;
+        timer.add("load", t0.elapsed().as_secs_f64());
+        let Some(chunk) = next else { break };
+        n += chunk.n();
+        let t1 = Instant::now();
+        mean_est.accumulate(&chunk);
+        cov_est.accumulate(&chunk);
+        timer.add("accumulate", t1.elapsed().as_secs_f64());
+    }
+    if n == 0 {
+        return invalid("FitPlan: source is empty");
+    }
+    let covariance = cov_est.estimate();
+    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, sp.seed()));
+    let (components, mean) = unmix_outputs(sp, &pca_pre.components, &mean_est, preconditioned)?;
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 0,
+        sparse_passes: 1,
+        iterations: 0,
+        engine: "native",
+        center_bound: Vec::new(),
+        outcome: FitOutcome::Pca(PcaFit {
+            mean,
+            covariance: Some(covariance),
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        }),
+    })
+}
+
+/// Covariance-free PCA over any rewindable sparse source: one stats pass
+/// (mean + scatter diagonal), then `DEFAULT_KRYLOV_ITERS + 2` streamed
+/// block products. With a memory-budgeted store reader the whole fit is
+/// out-of-core.
+fn pca_krylov_sparse(
+    source: &mut dyn SparseChunkSource,
+    sp: &Sparsifier,
+    topk: usize,
+    workers: usize,
+    preconditioned: bool,
+) -> Result<FitReport> {
+    check_source_shape(source, sp)?;
+    let mut timer = Timer::new();
+    let t0 = Instant::now();
+    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut stats = ScatterDiag::new(sp.p());
+    source.reset()?;
+    while let Some(chunk) = source.next_chunk()? {
+        mean_est.accumulate(&chunk);
+        stats.accumulate(&chunk);
+    }
+    timer.add("stats", t0.elapsed().as_secs_f64());
+    let n = stats.n();
+    if n == 0 {
+        return invalid("FitPlan: source is empty");
+    }
+    let mut op = SourceCovOp::from_stats(source, &stats, workers)?;
+    let pca_pre = timer.time("eig", || {
+        Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, sp.seed())
+    })?;
+    let op_passes = op.passes();
+    let (components, mean) = unmix_outputs(sp, &pca_pre.components, &mean_est, preconditioned)?;
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 0,
+        sparse_passes: 1 + op_passes,
+        iterations: 0,
+        engine: "native",
+        center_bound: Vec::new(),
+        outcome: FitOutcome::Pca(PcaFit {
+            mean,
+            covariance: None,
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        }),
+    })
+}
+
+/// Map preconditioned-domain components + mean back to the original
+/// domain: the ROS adjoint when the data was preconditioned, a plain
+/// padding drop otherwise.
+fn unmix_outputs(
+    sp: &Sparsifier,
+    components_pre: &Mat,
+    mean_est: &SparseMeanEstimator,
+    preconditioned: bool,
+) -> Result<(Mat, Vec<f64>)> {
+    let mean_pre = Mat::from_vec(sp.p(), 1, mean_est.estimate())?;
+    Ok(if preconditioned {
+        (sp.unmix(components_pre), sp.unmix(&mean_pre).col(0).to_vec())
+    } else {
+        (sp.truncate(components_pre), sp.truncate(&mean_pre).col(0).to_vec())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MatSource;
+    use crate::data::gaussian_blobs;
+    use crate::rng::Pcg64;
+    use crate::transform::TransformKind;
+
+    #[test]
+    fn plan_validates_task_solver_combinations() {
+        let mut rng = Pcg64::seed(1);
+        let d = gaussian_blobs(16, 50, 2, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 1 };
+
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::pca().stream(&mut src, scfg).solver(Solver::Stream).run();
+        assert!(err.is_err(), "pca + stream solver must be rejected");
+
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::kmeans().stream(&mut src, scfg).k(2).solver(Solver::Krylov).run();
+        assert!(err.is_err(), "kmeans + krylov solver must be rejected");
+
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::kmeans().stream(&mut src, scfg).k(2).solver(Solver::Stream).run();
+        assert!(err.is_err(), "kmeans stream solver needs a sparse source");
+
+        let err = FitPlan::kmeans().k(2).run();
+        assert!(err.is_err(), "missing source must be rejected");
+
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::kmeans().stream(&mut src, scfg).run();
+        assert!(err.is_err(), "missing k must be rejected");
+
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::compress().stream(&mut src, scfg).run();
+        assert!(err.is_err(), "compress without store_dir must be rejected");
+    }
+
+    #[test]
+    fn kmeans_report_carries_bounds_and_passes() {
+        let mut rng = Pcg64::seed(5);
+        let d = gaussian_blobs(32, 400, 3, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 7 };
+        let mut src = MatSource::new(&d.data, 128);
+        let report = FitPlan::kmeans()
+            .stream(&mut src, scfg)
+            .k(3)
+            .restarts(2)
+            .workers(2)
+            .run()
+            .unwrap();
+        assert_eq!(report.n, 400);
+        assert_eq!(report.raw_passes, 1);
+        assert_eq!(report.sparse_passes, 1);
+        assert!(report.iterations > 0);
+        assert_eq!(report.center_bound.len(), report.iterations);
+        assert!(report.center_bound.iter().all(|b| b.is_finite() && *b > 0.0));
+        let model = report.kmeans_model().unwrap();
+        assert_eq!(model.result.assign.len(), 400);
+        assert!(report.refined().is_none());
+        assert!(report.pca_fit().is_none());
+    }
+
+    #[test]
+    fn two_pass_plan_refines_and_counts_the_extra_raw_pass() {
+        let mut rng = Pcg64::seed(9);
+        let d = gaussian_blobs(32, 500, 3, 0.2, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 3 };
+        let mut src = MatSource::new(&d.data, 128);
+        let report = FitPlan::kmeans()
+            .stream(&mut src, scfg)
+            .k(3)
+            .restarts(2)
+            .two_pass(true)
+            .run()
+            .unwrap();
+        assert_eq!(report.raw_passes, 2);
+        assert!(report.timer.get("pass2") > 0.0);
+        let refined = report.refined().expect("refinement ran");
+        assert_eq!(refined.assign.len(), 500);
+        assert!(refined.centers.as_slice().iter().all(|v| v.is_finite()));
+
+        // an explicit .refine_stream() on a raw plan is honored (not
+        // silently replaced by the plan's own source): same data through
+        // a differently-chunked refine source gives the same refinement
+        let mut src_a = MatSource::new(&d.data, 128);
+        let mut src_b = MatSource::new(&d.data, 256);
+        let report2 = FitPlan::kmeans()
+            .stream(&mut src_a, scfg)
+            .k(3)
+            .restarts(2)
+            .refine_stream(&mut src_b)
+            .run()
+            .unwrap();
+        assert_eq!(report2.refined().expect("refinement ran").assign, refined.assign);
+    }
+
+    #[test]
+    fn pca_solvers_agree_through_the_plan() {
+        let mut rng = Pcg64::seed(11);
+        let d = crate::data::spiked(32, 800, &[7.0, 3.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 5 };
+        let mut src = MatSource::new(&d.data, 128);
+        let cov = FitPlan::pca().stream(&mut src, scfg).topk(2).run().unwrap();
+        let mut src2 = MatSource::new(&d.data, 128);
+        let kry = FitPlan::pca()
+            .stream(&mut src2, scfg)
+            .topk(2)
+            .solver(Solver::Krylov)
+            .run()
+            .unwrap();
+        let covf = cov.pca_fit().unwrap();
+        let kryf = kry.pca_fit().unwrap();
+        assert!(covf.covariance.is_some());
+        assert!(kryf.covariance.is_none());
+        assert!(kry.sparse_passes > cov.sparse_passes, "krylov makes iters+2 sparse passes");
+        // shared mean-estimator path is bit-identical
+        for (a, b) in kryf.mean.iter().zip(&covf.mean) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(
+            crate::pca::recovered_components(&kryf.pca.components, &covf.pca.components, 0.95),
+            2
+        );
+    }
+}

@@ -19,6 +19,28 @@ pub fn bernstein_invert(sigma2: f64, l: f64, prefactor: f64, delta: f64) -> f64 
     a + (a * a + 2.0 * sigma2 * lf).sqrt()
 }
 
+/// The paper's per-step K-means center-error guarantee (§V, the Eq. 43
+/// deviation behind the Theorem "error in the center estimators at a
+/// given step"): the smallest `t` such that the masked center update for
+/// a cluster with `n_k` members satisfies `‖H_k − I‖₂ ≤ t` with
+/// probability ≥ 1 − δ — i.e. the entry-wise averaging of Eq. (39) is a
+/// `(1 ± t)`-perturbation of the plain class mean. Evaluated per Lloyd
+/// iteration (per cluster, from the observed cluster sizes) by the
+/// K-means fit and surfaced through
+/// [`FitReport::center_bound`](crate::coordinator::FitReport).
+///
+/// With `r = p/m`: `σ² = (r − 1)/n_k`, `L = (r + 1)/n_k`, prefactor `p`
+/// (the matrix-Bernstein union over coordinates), inverted by
+/// [`bernstein_invert`].
+pub fn center_error_bound(p: usize, m: usize, n_k: usize, delta: f64) -> f64 {
+    assert!(n_k > 0, "center_error_bound needs a non-empty cluster");
+    let r = p as f64 / m as f64;
+    let nk = n_k as f64;
+    let sigma2 = (r - 1.0) / nk;
+    let l = (r + 1.0) / nk;
+    bernstein_invert(sigma2, l, p as f64, delta)
+}
+
 /// Corollary 3 / Section V: the norm-reduction factor ρ after
 /// preconditioning — `ρ = (m/p)(2/η) log(2np/α)` (valid w.p. ≥ 1−α),
 /// clipped at the trivial ρ = 1.

@@ -5,7 +5,6 @@
 //! by `p/(m·n_k)`. Theorem 7 bounds `‖H_k − I‖₂` — i.e. how close the
 //! entry-wise averaging of Eq. (39) is to a plain average.
 
-use crate::estimators::bounds::bernstein_invert;
 use crate::sparse::SparseChunk;
 
 /// Streaming accumulator for the per-coordinate sampling counts of one
@@ -69,13 +68,11 @@ impl HkAccumulator {
     }
 
     /// Theorem 7 bound: `t` such that `‖H_k − I‖₂ ≤ t` w.p. ≥ 1 − δ₃,
-    /// given `n_k` member samples (Eq. 43).
+    /// given `n_k` member samples (Eq. 43). Delegates to the shared
+    /// [`center_error_bound`](crate::estimators::center_error_bound)
+    /// inversion, which the K-means fit also evaluates per iteration.
     pub fn t_for_delta(p: usize, m: usize, n_k: usize, delta3: f64) -> f64 {
-        let r = p as f64 / m as f64;
-        let nk = n_k as f64;
-        let sigma2 = (r - 1.0) / nk;
-        let l = (r + 1.0) / nk;
-        bernstein_invert(sigma2, l, p as f64, delta3)
+        crate::estimators::center_error_bound(p, m, n_k, delta3)
     }
 
     /// Failure probability δ₃ at deviation `t` (Eq. 43, forward direction).

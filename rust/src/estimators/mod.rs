@@ -10,7 +10,10 @@
 //!   materialization) for the covariance-free block-Krylov PCA path.
 //! * [`HkAccumulator`] — Theorem 7 (conditioning of the center-update
 //!   system `H_k μ' = m_k`).
-//! * [`bounds`] — shared Bernstein machinery + data-dependent norms.
+//! * `bounds` (re-exported here) — shared Bernstein machinery +
+//!   data-dependent norms, including [`center_error_bound`] (the K-means
+//!   per-step center guarantee the `FitPlan` K-means fits evaluate each
+//!   Lloyd iteration).
 
 mod bounds;
 mod covariance;
@@ -19,7 +22,7 @@ mod hk;
 mod mean;
 
 pub use bounds::{
-    bernstein_invert, corollary5_min_m, rho_preconditioned, tau, DataStats,
+    bernstein_invert, center_error_bound, corollary5_min_m, rho_preconditioned, tau, DataStats,
 };
 pub use covariance::{CovBoundInputs, CovarianceEstimator};
 pub use covariance_op::{ScatterDiag, SparseCovOp};

@@ -9,13 +9,11 @@ use std::time::Instant;
 
 use crate::baselines::FeatureExtraction;
 use crate::cli::Args;
-use crate::coordinator::{
-    run_sparsified_kmeans_stream, run_two_pass_stream, GeneratorSource, StreamConfig,
-};
+use crate::coordinator::{FitPlan, GeneratorSource, StreamConfig};
 use crate::data::{DigitConfig, DigitStream, DIGIT_P};
 use crate::error::Result;
 use crate::experiments::common::{pm, print_table, scaled};
-use crate::kmeans::{KmeansOpts, NativeAssigner};
+use crate::kmeans::KmeansOpts;
 use crate::metrics::{clustering_accuracy, mean_std};
 use crate::rng::Pcg64;
 use crate::sampling::SparsifyConfig;
@@ -53,15 +51,17 @@ fn run_one(
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: seed ^ 0x10 };
     let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols: 2048 };
     let t0 = Instant::now();
-    let (assign, report) = if two_pass {
-        let (res, rep) =
-            run_two_pass_stream(&mut src, scfg, K, opts, &NativeAssigner, stream_cfg)?;
-        (res.assign, rep)
-    } else {
-        let (model, rep) = run_sparsified_kmeans_stream(
-            &mut src, scfg, K, opts, &NativeAssigner, stream_cfg, precond,
-        )?;
-        (model.result.assign, rep)
+    let report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(K)
+        .kmeans_opts(opts)
+        .stream_config(stream_cfg)
+        .precondition(precond)
+        .two_pass(two_pass)
+        .run()?;
+    let assign = match report.refined() {
+        Some(refined) => refined.assign.clone(),
+        None => report.kmeans_model().expect("kmeans plan").result.assign.clone(),
     };
     let total_s = t0.elapsed().as_secs_f64();
     let labels = stream.labels(0, n);

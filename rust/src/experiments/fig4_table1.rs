@@ -7,17 +7,17 @@
 //! to DCT-II (η = 1/2) — the η-ablation called out in DESIGN.md.
 
 use crate::cli::Args;
+use crate::coordinator::{FitPlan, Solver};
 use crate::data::spiked;
 use crate::error::Result;
-use crate::estimators::{
-    rho_preconditioned, CovBoundInputs, CovarianceEstimator, DataStats, SparseCovOp,
-};
+use crate::estimators::{rho_preconditioned, CovBoundInputs, CovarianceEstimator, DataStats};
 use crate::experiments::common::{pm, print_table, scaled};
 use crate::linalg::{spectral_norm_sym, Mat};
 use crate::metrics::mean_std;
-use crate::pca::{recovered_components, Pca, DEFAULT_PCA_ITERS};
+use crate::pca::{recovered_components, Pca};
 use crate::rng::Pcg64;
 use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sparse::SparseVecSource;
 use crate::transform::TransformKind;
 
 const K: usize = 10;
@@ -91,15 +91,18 @@ fn one_arm(
     let comps: Mat = if precondition { sp.unmix(&pca.components) } else { pca.components };
     let recovered = recovered_components(&comps, &d.centers, 0.95);
 
-    // krylov arm: the same Thm 6 estimate applied implicitly, matched
-    // iteration budget (DEFAULT_PCA_ITERS)
+    // krylov arm: the same Thm 6 estimate applied implicitly via the
+    // session API (matched iteration budget — DEFAULT_KRYLOV_ITERS ==
+    // DEFAULT_PCA_ITERS); unmix/truncate handled by the plan
     let recovered_krylov = if with_krylov {
-        let chunks = [chunk];
-        let mut op = SparseCovOp::new(&chunks, 1)?;
-        let pca_k = Pca::from_sparse_operator(&mut op, K, DEFAULT_PCA_ITERS, seed)?;
-        let comps_k: Mat =
-            if precondition { sp.unmix(&pca_k.components) } else { pca_k.components };
-        recovered_components(&comps_k, &d.centers, 0.95)
+        let mut src = SparseVecSource::new(vec![chunk])?;
+        let report = FitPlan::pca()
+            .source(&mut src, &sp, precondition)
+            .topk(K)
+            .solver(Solver::Krylov)
+            .run()?;
+        let fit = report.pca_fit().expect("pca plan");
+        recovered_components(&fit.pca.components, &d.centers, 0.95)
     } else {
         0
     };

@@ -18,8 +18,8 @@ pub fn run(_args: &Args) -> Result<()> {
         ],
     );
     println!(
-        "(our drivers expose the actual pass count in PipelineReport::passes; \
-         the integration tests assert 1 and 2 for the sparsified variants)"
+        "(the session API exposes the actual counts in FitReport::raw_passes / \
+         sparse_passes; the integration tests assert 1 and 2 for the sparsified variants)"
     );
     Ok(())
 }

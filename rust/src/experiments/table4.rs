@@ -15,14 +15,11 @@
 use std::time::Instant;
 
 use crate::cli::Args;
-use crate::coordinator::{
-    run_compress_to_store, run_sparsified_kmeans_from_store, two_pass_refine_stream,
-    StoreSource, StreamConfig,
-};
+use crate::coordinator::{FitPlan, StoreSource, StreamConfig};
 use crate::data::{ChunkStore, ChunkStoreReader, DigitConfig, DigitStream, DIGIT_P};
 use crate::error::Result;
 use crate::experiments::common::{print_table, scaled};
-use crate::kmeans::{KmeansOpts, NativeAssigner};
+use crate::kmeans::KmeansOpts;
 use crate::metrics::clustering_accuracy;
 use crate::sampling::SparsifyConfig;
 use crate::store::SparseStoreReader;
@@ -71,33 +68,30 @@ pub fn run(args: &Args) -> Result<()> {
         let _ = std::fs::remove_dir_all(&sparse_dir);
         let mut raw = StoreSource::new(ChunkStoreReader::open(&raw_path)?);
         let t0 = Instant::now();
-        let (manifest, creport) = run_compress_to_store(
-            &mut raw,
-            scfg,
-            &sparse_dir,
-            chunk_cols,
-            stream_cfg,
-            true,
-        )?;
+        let creport = FitPlan::compress()
+            .stream(&mut raw, scfg)
+            .store_dir(&sparse_dir)
+            .shard_cols(chunk_cols)
+            .stream_config(stream_cfg)
+            .run()?;
         let compress_total = t0.elapsed().as_secs_f64();
+        let manifest = creport.store_manifest().expect("compress plan");
         let sparse_mb = manifest.payload_bytes() as f64 / (1024.0 * 1024.0);
 
         for two_pass in [false, true] {
             // every fit consumes the SAME sparse store — no re-compression
             let mut store = SparseStoreReader::open(&sparse_dir)?;
+            let mut raw2;
             let t1 = Instant::now();
-            let (model, mut freport) = run_sparsified_kmeans_from_store(
-                &mut store,
-                K,
-                opts,
-                &NativeAssigner,
-                1,
-            )?;
-            let assign = if two_pass {
-                let mut raw2 = StoreSource::new(ChunkStoreReader::open(&raw_path)?);
-                two_pass_refine_stream(&mut raw2, &model, K, &mut freport)?.assign
-            } else {
-                model.result.assign.clone()
+            let mut plan = FitPlan::kmeans().store(&mut store).k(K).kmeans_opts(opts);
+            if two_pass {
+                raw2 = StoreSource::new(ChunkStoreReader::open(&raw_path)?);
+                plan = plan.refine_stream(&mut raw2);
+            }
+            let freport = plan.run()?;
+            let assign = match freport.refined() {
+                Some(refined) => refined.assign.clone(),
+                None => freport.kmeans_model().expect("kmeans plan").result.assign.clone(),
             };
             let fit_total = t1.elapsed().as_secs_f64();
             let acc = clustering_accuracy(&assign, &labels, K);
@@ -117,7 +111,7 @@ pub fn run(args: &Args) -> Result<()> {
                 ),
                 format!("{sparse_mb:.0}"),
                 // raw passes: 1 compress (+1 refinement for Algorithm 2)
-                format!("{}", creport.passes + freport.passes),
+                format!("{}", creport.raw_passes + freport.raw_passes),
             ]);
         }
         std::fs::remove_dir_all(&sparse_dir).ok();

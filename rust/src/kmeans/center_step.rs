@@ -1,0 +1,418 @@
+//! The `CenterStep` kernel: one Lloyd iteration folded chunk-by-chunk
+//! from any rewindable chunk stream — the K-means mirror of
+//! [`SparseCovOp`](crate::estimators::SparseCovOp)'s dot/scatter split.
+//!
+//! Each [`fold`](CenterStep::fold) runs two phases on one chunk:
+//!
+//! 1. **dot** (Eq. 36): per-sample masked-distance assignment through a
+//!    [`SparseAssigner`] — pure per sample, so neither chunk granularity
+//!    nor the assigner's fan-out can change a single bit;
+//! 2. **scatter** (Eq. 39): the masked center sums/counts update. Each
+//!    worker owns a fixed contiguous *row range* of the accumulators for
+//!    the whole pass and locates its slice of every sample's sorted index
+//!    list by binary search, so every accumulator cell receives its
+//!    contributions in global sample order — the same order as the serial
+//!    loop — regardless of worker count **and** of where the chunk
+//!    boundaries fall (a store reader's memory budget changes boundaries,
+//!    never bits).
+//!
+//! One pass per Lloyd iteration, O(p·k·workers) accumulator state plus
+//! 12 bytes per sample (assignment + distance), and **no** requirement
+//! that the sparse matrix is ever resident: this is what lets
+//! [`SparsifiedKmeans::fit_source`](super::SparsifiedKmeans::fit_source)
+//! run out-of-core over a memory-budgeted
+//! [`SparseStoreReader`](crate::store::SparseStoreReader) while staying
+//! bitwise identical to the in-memory
+//! [`fit_chunks`](super::SparsifiedKmeans::fit_chunks) path.
+
+use std::ops::Range;
+
+use crate::error::{invalid, Result};
+use crate::linalg::Mat;
+use crate::parallel;
+use crate::sparse::{SparseChunk, SparseChunkSource};
+
+use super::{solve_centers, SparseAssigner};
+
+/// Below this many columns the scatter runs its range jobs inline — the
+/// fork overhead beats the work (bitwise identical either way).
+const MIN_CENTER_COLS: usize = 256;
+
+/// A rewindable stream of borrowed chunks — the internal walking
+/// abstraction the Lloyd loop and the k-means++ seeding share. One
+/// [`walk`](ChunkWalk::walk) call is one pass in global column order; the
+/// visitor returns `Ok(false)` to stop the pass early (used by the
+/// seeding's single-column fetch).
+pub(crate) trait ChunkWalk {
+    /// Run one pass, feeding every chunk to `f` in global column order.
+    fn walk(&mut self, f: &mut dyn FnMut(&SparseChunk) -> Result<bool>) -> Result<()>;
+}
+
+/// Borrowing walk over in-memory chunks (no clones — the slice is the
+/// storage).
+pub(crate) struct SliceWalk<'a>(pub(crate) &'a [SparseChunk]);
+
+impl ChunkWalk for SliceWalk<'_> {
+    fn walk(&mut self, f: &mut dyn FnMut(&SparseChunk) -> Result<bool>) -> Result<()> {
+        for chunk in self.0 {
+            if !f(chunk)? {
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Walk over any [`SparseChunkSource`]; counts the passes it makes (the
+/// raw material of `FitReport`'s sparse-pass accounting).
+pub(crate) struct SourceWalk<'a> {
+    source: &'a mut dyn SparseChunkSource,
+    /// Passes started so far (each `walk` call resets the source).
+    pub(crate) passes: usize,
+}
+
+impl<'a> SourceWalk<'a> {
+    pub(crate) fn new(source: &'a mut dyn SparseChunkSource) -> Self {
+        SourceWalk { source, passes: 0 }
+    }
+}
+
+impl ChunkWalk for SourceWalk<'_> {
+    fn walk(&mut self, f: &mut dyn FnMut(&SparseChunk) -> Result<bool>) -> Result<()> {
+        self.source.reset()?;
+        self.passes += 1;
+        while let Some(chunk) = self.source.next_chunk()? {
+            if !f(&chunk)? {
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scatter kernel over one contiguous accumulator row range `[lo, hi)`:
+/// fold one chunk's masked sums/counts contributions, visiting cells in
+/// global sample order. `s` / `cnt` are the range's column-major
+/// `rows × k` panels.
+fn scatter_range(
+    chunk: &SparseChunk,
+    assign: &[u32],
+    r: Range<usize>,
+    s: &mut [f64],
+    cnt: &mut [f64],
+) {
+    let rows = r.len();
+    let (lo, hi) = (r.start as u32, r.end as u32);
+    for i in 0..chunk.n() {
+        let c = assign[i] as usize;
+        let idx = chunk.col_indices(i);
+        let vals = chunk.col_values(i);
+        let a_lo = idx.partition_point(|&j| j < lo);
+        let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
+        if a_lo == a_hi {
+            continue;
+        }
+        let scol = &mut s[c * rows..(c + 1) * rows];
+        let ccol = &mut cnt[c * rows..(c + 1) * rows];
+        for a in a_lo..a_hi {
+            let j = (idx[a] - lo) as usize;
+            scol[j] += vals[a];
+            ccol[j] += 1.0;
+        }
+    }
+}
+
+/// One Lloyd iteration as a chunk-fold: assignment (the **dot** phase,
+/// Eq. 36) + center accumulation (the **scatter** phase, Eq. 39),
+/// source-driven — the K-means mirror of
+/// [`SparseCovOp`](crate::estimators::SparseCovOp)'s split. Every
+/// accumulator cell receives its contributions in global sample order
+/// (fixed row ranges + per-sample binary search), so results are bitwise
+/// invariant to the worker count and to chunk granularity.
+///
+/// Lifecycle per iteration: [`begin`](Self::begin) → one
+/// [`fold`](Self::fold) per chunk (in global column order) →
+/// [`assign`](Self::assign) / [`objective`](Self::objective) /
+/// [`cluster_sizes`](Self::cluster_sizes) / [`solve`](Self::solve).
+pub struct CenterStep {
+    p: usize,
+    k: usize,
+    workers: usize,
+    /// Fixed row partition of `0..p` — one entry per scatter worker.
+    ranges: Vec<Range<usize>>,
+    /// Per-range masked sums panel (`rows × k`, column-major).
+    sums: Vec<Vec<f64>>,
+    /// Per-range observation counts panel (same layout).
+    counts: Vec<Vec<f64>>,
+    /// Per-sample assignments for the pass so far.
+    assign: Vec<u32>,
+    /// Per-sample min masked distances (summed in sample order at the
+    /// end of the pass, so the objective is granularity-invariant).
+    dist: Vec<f64>,
+}
+
+impl CenterStep {
+    /// Kernel for dimension `p`, `k` clusters, a fan-out of `workers`.
+    pub fn new(p: usize, k: usize, workers: usize) -> Self {
+        let ranges = parallel::split_ranges(p, workers.max(1));
+        let sums = ranges.iter().map(|r| vec![0.0; r.len() * k]).collect();
+        let counts = ranges.iter().map(|r| vec![0.0; r.len() * k]).collect();
+        CenterStep {
+            p,
+            k,
+            workers: workers.max(1),
+            ranges,
+            sums,
+            counts,
+            assign: Vec::new(),
+            dist: Vec::new(),
+        }
+    }
+
+    /// Start a fresh iteration: zero the accumulators, forget the pass
+    /// state (buffer capacity is retained across iterations).
+    pub fn begin(&mut self) {
+        for s in &mut self.sums {
+            s.fill(0.0);
+        }
+        for c in &mut self.counts {
+            c.fill(0.0);
+        }
+        self.assign.clear();
+        self.dist.clear();
+    }
+
+    /// Fold one chunk: assign its columns against `centers`, then
+    /// accumulate the masked center update under that assignment.
+    pub fn fold(
+        &mut self,
+        chunk: &SparseChunk,
+        centers: &Mat,
+        assigner: &dyn SparseAssigner,
+    ) -> Result<()> {
+        if chunk.p() != self.p {
+            return invalid(format!(
+                "CenterStep: chunk p={} does not match kernel p={}",
+                chunk.p(),
+                self.p
+            ));
+        }
+        debug_assert_eq!(centers.cols(), self.k);
+        let off = self.assign.len();
+        let cn = chunk.n();
+        self.assign.resize(off + cn, 0);
+        self.dist.resize(off + cn, 0.0);
+        // dot phase: per-sample, partition-free
+        assigner.assign_into(
+            chunk,
+            centers,
+            self.workers,
+            &mut self.assign[off..off + cn],
+            &mut self.dist[off..off + cn],
+        )?;
+        // scatter phase: fixed row ranges, per-cell global sample order
+        let assign = &self.assign[off..off + cn];
+        let jobs: Vec<(Range<usize>, &mut [f64], &mut [f64])> = self
+            .ranges
+            .iter()
+            .cloned()
+            .zip(self.sums.iter_mut())
+            .zip(self.counts.iter_mut())
+            .map(|((r, s), c)| (r, s.as_mut_slice(), c.as_mut_slice()))
+            .collect();
+        if jobs.len() <= 1 || cn < MIN_CENTER_COLS {
+            for (r, s, c) in jobs {
+                scatter_range(chunk, assign, r, s, c);
+            }
+        } else {
+            crossbeam_utils::thread::scope(|scope| {
+                let mut iter = jobs.into_iter();
+                let first = iter.next().expect("len > 1");
+                let handles: Vec<_> = iter
+                    .map(|(r, s, c)| {
+                        scope.spawn(move |_| scatter_range(chunk, assign, r, s, c))
+                    })
+                    .collect();
+                let (r, s, c) = first;
+                scatter_range(chunk, assign, r, s, c);
+                for h in handles {
+                    h.join().expect("center scatter worker panicked");
+                }
+            })
+            .expect("center scatter scope panicked");
+        }
+        Ok(())
+    }
+
+    /// Samples folded so far this iteration.
+    pub fn n(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Per-sample assignments of the completed pass (global order).
+    pub fn assign(&self) -> &[u32] {
+        &self.assign
+    }
+
+    /// The Eq. 34 objective: per-sample min masked distances reduced in
+    /// sample order (independent of chunking and fan-out).
+    pub fn objective(&self) -> f64 {
+        self.dist.iter().sum()
+    }
+
+    /// Members per cluster under the completed pass's assignment.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &a in &self.assign {
+            sizes[a as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Assemble the accumulated sums/counts and solve the Eq. 39/40
+    /// diagonal system (`prev` supplies entries for never-sampled
+    /// coordinates).
+    pub fn solve(&self, prev: &Mat) -> Mat {
+        let mut sums = Mat::zeros(self.p, self.k);
+        let mut counts = Mat::zeros(self.p, self.k);
+        for (t, r) in self.ranges.iter().enumerate() {
+            let rows = r.len();
+            for c in 0..self.k {
+                sums.col_mut(c)[r.start..r.end]
+                    .copy_from_slice(&self.sums[t][c * rows..(c + 1) * rows]);
+                counts.col_mut(c)[r.start..r.end]
+                    .copy_from_slice(&self.counts[t][c * rows..(c + 1) * rows]);
+            }
+        }
+        solve_centers(&sums, &counts, prev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{accumulate_center_update, NativeAssigner};
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::rng::Pcg64;
+    use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::transform::TransformKind;
+
+    fn compressed(n: usize, split_at: &[usize]) -> (Sparsifier, Vec<SparseChunk>) {
+        let mut rng = Pcg64::seed(77);
+        let d = gaussian_blobs(64, n, 4, 0.2, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 5 };
+        let sp = Sparsifier::new(64, cfg).unwrap();
+        let mut chunks = Vec::new();
+        let mut a = 0usize;
+        for &b in split_at.iter().chain(std::iter::once(&n)) {
+            if b > a {
+                chunks.push(sp.compress_chunk(&d.data.col_range(a, b), a).unwrap());
+                a = b;
+            }
+        }
+        (sp, chunks)
+    }
+
+    /// Reference iteration: serial assignment + the fused serial center
+    /// update kernel, exactly the pre-CenterStep code path.
+    fn reference_step(
+        sp: &Sparsifier,
+        chunks: &[SparseChunk],
+        centers: &Mat,
+        k: usize,
+    ) -> (Vec<u32>, f64, Mat) {
+        let n: usize = chunks.iter().map(|c| c.n()).sum();
+        let mut assign = vec![0u32; n];
+        let mut dist = vec![0.0f64; n];
+        let mut off = 0usize;
+        for chunk in chunks {
+            NativeAssigner
+                .assign_into(
+                    chunk,
+                    centers,
+                    1,
+                    &mut assign[off..off + chunk.n()],
+                    &mut dist[off..off + chunk.n()],
+                )
+                .unwrap();
+            off += chunk.n();
+        }
+        let mut sums = Mat::zeros(sp.p(), k);
+        let mut counts = Mat::zeros(sp.p(), k);
+        let mut off = 0usize;
+        for chunk in chunks {
+            accumulate_center_update(chunk, &assign[off..off + chunk.n()], &mut sums, &mut counts);
+            off += chunk.n();
+        }
+        let next = solve_centers(&sums, &counts, centers);
+        (assign, dist.iter().sum(), next)
+    }
+
+    #[test]
+    fn fold_matches_reference_for_any_granularity_and_workers() {
+        let k = 4;
+        let (sp, whole) = compressed(700, &[]);
+        let mut rng = Pcg64::seed(3);
+        let centers = Mat::from_fn(sp.p(), k, |_, _| rng.normal());
+        let (a_ref, obj_ref, next_ref) = reference_step(&sp, &whole, &centers, k);
+        for (splits, workers) in [
+            (vec![], 1usize),
+            (vec![100, 350], 1),
+            (vec![100, 350], 3),
+            (vec![1, 2, 3, 699], 4),
+            (vec![350], 8),
+        ] {
+            let (_, chunks) = compressed(700, &splits);
+            let mut step = CenterStep::new(sp.p(), k, workers);
+            step.begin();
+            for c in &chunks {
+                step.fold(c, &centers, &NativeAssigner).unwrap();
+            }
+            assert_eq!(step.n(), 700);
+            assert_eq!(step.assign(), &a_ref[..], "splits {splits:?} workers {workers}");
+            assert_eq!(
+                step.objective().to_bits(),
+                obj_ref.to_bits(),
+                "objective, splits {splits:?} workers {workers}"
+            );
+            let next = step.solve(&centers);
+            for (a, b) in next.as_slice().iter().zip(next_ref.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "splits {splits:?} workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn begin_resets_for_the_next_iteration() {
+        let k = 4;
+        let (sp, chunks) = compressed(300, &[120]);
+        let mut rng = Pcg64::seed(9);
+        let centers = Mat::from_fn(sp.p(), k, |_, _| rng.normal());
+        let mut step = CenterStep::new(sp.p(), k, 2);
+        step.begin();
+        for c in &chunks {
+            step.fold(c, &centers, &NativeAssigner).unwrap();
+        }
+        let first = (step.assign().to_vec(), step.objective());
+        step.begin();
+        assert_eq!(step.n(), 0);
+        for c in &chunks {
+            step.fold(c, &centers, &NativeAssigner).unwrap();
+        }
+        assert_eq!(step.assign(), &first.0[..]);
+        assert_eq!(step.objective().to_bits(), first.1.to_bits());
+        let sizes = step.cluster_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn fold_rejects_mismatched_chunk() {
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 1 };
+        let sp = Sparsifier::new(16, cfg).unwrap();
+        let chunk = sp.compress_chunk(&Mat::zeros(16, 3), 0).unwrap();
+        let mut step = CenterStep::new(32, 2, 1);
+        step.begin();
+        let centers = Mat::zeros(32, 2);
+        assert!(step.fold(&chunk, &centers, &NativeAssigner).is_err());
+    }
+}

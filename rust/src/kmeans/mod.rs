@@ -1,17 +1,26 @@
 //! K-means: the standard dense algorithm, k-means++ seeding, and the
 //! paper's **sparsified K-means** (Algorithm 1) with its two-pass
 //! refinement (Algorithm 2).
+//!
+//! The sparsified fit is source-driven end to end: seeding and every
+//! Lloyd iteration fold chunk-by-chunk through the [`CenterStep`]
+//! kernel from any rewindable
+//! [`SparseChunkSource`](crate::sparse::SparseChunkSource), so the fit
+//! runs out-of-core ([`SparsifiedKmeans::fit_source`]) bitwise-identical
+//! to the in-memory path ([`SparsifiedKmeans::fit_chunks`]).
 
+mod center_step;
 mod dense;
 mod plusplus;
 mod sparsified;
 mod twopass;
 
+pub use center_step::CenterStep;
 pub use dense::{assign_dense, kmeans_dense, lloyd_once_dense};
-pub use plusplus::{kmeans_pp_dense, kmeans_pp_sparse};
+pub use plusplus::{kmeans_pp_dense, kmeans_pp_sparse, kmeans_pp_sparse_chunks};
 pub use sparsified::{
     accumulate_center_update, solve_centers, NativeAssigner, SparseAssigner, SparsifiedKmeans,
-    SparsifiedModel,
+    SparsifiedModel, CENTER_BOUND_DELTA,
 };
 pub use twopass::two_pass_refine;
 

@@ -2,10 +2,21 @@
 //! for sparsified chunks. The sparse variant runs D²-weighting directly on
 //! the masked representation — exactly what Algorithm 1 line 5 does: the
 //! seeding, like every other step, never touches the original data.
+//!
+//! The sparse seeding is *source-driven*: it consumes any rewindable
+//! [`SparseChunkSource`] (a memory-budgeted store reader included) in
+//! whole passes, so no stage ever materializes the sparse matrix. The
+//! picks are byte-identical to seeding over the equivalent in-memory
+//! chunks — every step (the D² table, the RNG draw sequence, the
+//! densified seeds) depends only on the global column order, never on
+//! chunk boundaries.
 
+use crate::error::{invalid, Result};
 use crate::linalg::Mat;
 use crate::rng::{weighted_index, Pcg64};
-use crate::sparse::SparseChunk;
+use crate::sparse::{SparseChunk, SparseChunkSource};
+
+use super::center_step::{ChunkWalk, SliceWalk, SourceWalk};
 
 /// k-means++ on a dense matrix: returns p×k centers (copies of columns).
 pub fn kmeans_pp_dense(x: &Mat, k: usize, rng: &mut Pcg64) -> Mat {
@@ -63,65 +74,120 @@ pub(crate) fn masked_dist2(idx: &[u32], vals: &[f64], center: &[f64]) -> f64 {
     s0 + s1
 }
 
-/// k-means++ on sparsified chunks: D²-weighted seeding with masked
-/// distances, candidate centers are densified sparse columns *as-is*
-/// (no `p/m` rescale). Rescaling the seeds plants large spikes at the
-/// seed's kept coordinates; any sample whose mask covers a spike then
-/// avoids that cluster forever, so the spike is never averaged away — a
-/// self-reinforcing degenerate fixed point of the masked Lloyd update.
-/// Unscaled seeds stay within the data's magnitude range and are washed
-/// out after one update, matching the paper's "run k-means++ on the
-/// sparse matrix" (Algorithm 1 line 5).
-pub fn kmeans_pp_sparse(chunks: &[SparseChunk], k: usize, rng: &mut Pcg64) -> Mat {
+/// Densify global column `target` of the walked stream into `out`
+/// (zeros at unsampled coordinates). Stops the pass as soon as the
+/// owning chunk has been visited.
+fn densify_col(walk: &mut dyn ChunkWalk, target: usize, out: &mut [f64]) -> Result<()> {
+    out.fill(0.0);
+    let mut off = 0usize;
+    let mut found = false;
+    walk.walk(&mut |ch| {
+        if target < off + ch.n() {
+            let i = target - off;
+            for (&j, &v) in ch.col_indices(i).iter().zip(ch.col_values(i)) {
+                out[j as usize] = v;
+            }
+            found = true;
+            return Ok(false); // stop the pass early
+        }
+        off += ch.n();
+        Ok(true)
+    })?;
+    if !found {
+        return invalid(format!("kmeans++: seed column {target} beyond end of stream ({off})"));
+    }
+    Ok(())
+}
+
+/// One D² pass: `init` overwrites the table (distances to the first
+/// seed), otherwise entries only shrink (min against the new seed).
+fn update_d2(walk: &mut dyn ChunkWalk, center: &[f64], d2: &mut [f64], init: bool) -> Result<()> {
+    let mut g = 0usize;
+    walk.walk(&mut |ch| {
+        if g + ch.n() > d2.len() {
+            return invalid(format!(
+                "kmeans++: source yielded more than its {} hinted samples",
+                d2.len()
+            ));
+        }
+        for i in 0..ch.n() {
+            let d = masked_dist2(ch.col_indices(i), ch.col_values(i), center);
+            if init || d < d2[g] {
+                d2[g] = d;
+            }
+            g += 1;
+        }
+        Ok(true)
+    })
+}
+
+/// The walk-driven core of the sparse seeding. Candidate centers are
+/// densified sparse columns *as-is* (no `p/m` rescale). Rescaling the
+/// seeds plants large spikes at the seed's kept coordinates; any sample
+/// whose mask covers a spike then avoids that cluster forever, so the
+/// spike is never averaged away — a self-reinforcing degenerate fixed
+/// point of the masked Lloyd update. Unscaled seeds stay within the
+/// data's magnitude range and are washed out after one update, matching
+/// the paper's "run k-means++ on the sparse matrix" (Algorithm 1 line 5).
+pub(crate) fn kmeans_pp_walk(
+    walk: &mut dyn ChunkWalk,
+    p: usize,
+    n: usize,
+    k: usize,
+    rng: &mut Pcg64,
+) -> Result<Mat> {
+    assert!(n >= 1 && k >= 1);
+    let mut centers = Mat::zeros(p, k);
+    let first = rng.next_range(n as u32) as usize;
+    densify_col(walk, first, centers.col_mut(0))?;
+    let mut d2 = vec![0.0f64; n];
+    update_d2(walk, centers.col(0), &mut d2, true)?;
+    for c in 1..k {
+        let pick = weighted_index(&d2, rng);
+        densify_col(walk, pick, centers.col_mut(c))?;
+        if c + 1 < k {
+            update_d2(walk, centers.col(c), &mut d2, false)?;
+        }
+    }
+    Ok(centers)
+}
+
+/// k-means++ on sparsified data from any rewindable source: D²-weighted
+/// seeding with masked distances, in whole passes over the source — the
+/// sparse matrix is never materialized. Byte-identical center picks to
+/// [`kmeans_pp_sparse_chunks`] on the same data for a given RNG state.
+pub fn kmeans_pp_sparse(
+    source: &mut dyn SparseChunkSource,
+    k: usize,
+    rng: &mut Pcg64,
+) -> Result<Mat> {
+    let p = source.p();
+    let n = match source.n_hint() {
+        Some(n) => n,
+        None => {
+            let mut n = 0usize;
+            SourceWalk::new(&mut *source).walk(&mut |c| {
+                n += c.n();
+                Ok(true)
+            })?;
+            n
+        }
+    };
+    if n == 0 {
+        return invalid("kmeans++: source is empty");
+    }
+    kmeans_pp_walk(&mut SourceWalk::new(source), p, n, k, rng)
+}
+
+/// k-means++ over in-memory sparsified chunks (ordered by `start_col`):
+/// the borrowing fast path of [`kmeans_pp_sparse`] — same picks, no
+/// source indirection.
+pub fn kmeans_pp_sparse_chunks(chunks: &[SparseChunk], k: usize, rng: &mut Pcg64) -> Mat {
     assert!(!chunks.is_empty());
     let p = chunks[0].p();
     let n: usize = chunks.iter().map(|c| c.n()).sum();
-    assert!(n >= 1 && k >= 1);
-    let col_of = |global: usize| -> (&SparseChunk, usize) {
-        let mut g = global;
-        for ch in chunks {
-            if g < ch.n() {
-                return (ch, g);
-            }
-            g -= ch.n();
-        }
-        unreachable!()
-    };
-    let densify = |global: usize, out: &mut [f64]| {
-        out.fill(0.0);
-        let (ch, i) = col_of(global);
-        for (&j, &v) in ch.col_indices(i).iter().zip(ch.col_values(i)) {
-            out[j as usize] = v;
-        }
-    };
-    let mut centers = Mat::zeros(p, k);
-    let first = rng.next_range(n as u32) as usize;
-    densify(first, centers.col_mut(0));
-    let mut d2 = vec![0.0f64; n];
-    let mut g = 0usize;
-    for ch in chunks {
-        for i in 0..ch.n() {
-            d2[g] = masked_dist2(ch.col_indices(i), ch.col_values(i), centers.col(0));
-            g += 1;
-        }
-    }
-    for c in 1..k {
-        let pick = weighted_index(&d2, rng);
-        densify(pick, centers.col_mut(c));
-        if c + 1 < k {
-            let mut g = 0usize;
-            for ch in chunks {
-                for i in 0..ch.n() {
-                    let d = masked_dist2(ch.col_indices(i), ch.col_values(i), centers.col(c));
-                    if d < d2[g] {
-                        d2[g] = d;
-                    }
-                    g += 1;
-                }
-            }
-        }
-    }
-    centers
+    kmeans_pp_walk(&mut SliceWalk(chunks), p, n, k, rng)
+        .expect("in-memory seeding cannot fail")
 }
 
 #[cfg(test)]
@@ -129,6 +195,7 @@ mod tests {
     use super::*;
     use crate::data::gaussian_blobs;
     use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::sparse::SparseVecSource;
     use crate::transform::TransformKind;
 
     #[test]
@@ -178,7 +245,7 @@ mod tests {
         let sp = Sparsifier::new(32, cfg).unwrap();
         let c0 = sp.compress_chunk(&d.data.col_range(0, 120), 0).unwrap();
         let c1 = sp.compress_chunk(&d.data.col_range(120, 200), 120).unwrap();
-        let centers = kmeans_pp_sparse(&[c0.clone(), c1], 4, &mut rng);
+        let centers = kmeans_pp_sparse_chunks(&[c0.clone(), c1], 4, &mut rng);
         assert_eq!(centers.rows(), 32);
         assert_eq!(centers.cols(), 4);
         // each center has at most m nonzeros and unscaled data values
@@ -186,6 +253,32 @@ mod tests {
         for c in 0..4 {
             let nnz = centers.col(c).iter().filter(|&&v| v != 0.0).count();
             assert!(nnz <= m, "nnz {nnz} > m {m}");
+        }
+    }
+
+    #[test]
+    fn source_seeding_is_byte_identical_to_chunk_seeding() {
+        // the satellite contract: the SparseChunkSource signature keeps
+        // byte-identical center picks for the in-memory case — at every
+        // chunk granularity
+        let mut rng = Pcg64::seed(13);
+        let d = gaussian_blobs(32, 260, 4, 0.1, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 8 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let whole = sp.compress_chunk(&d.data, 0).unwrap();
+        let mut r0 = Pcg64::seed(99);
+        let base = kmeans_pp_sparse_chunks(&[whole.clone()], 4, &mut r0);
+        for bounds in [vec![0usize, 260], vec![0, 50, 260], vec![0, 1, 2, 130, 260]] {
+            let pieces: Vec<SparseChunk> = bounds
+                .windows(2)
+                .map(|w| sp.compress_chunk(&d.data.col_range(w[0], w[1]), w[0]).unwrap())
+                .collect();
+            let mut src = SparseVecSource::new(pieces).unwrap();
+            let mut r1 = Pcg64::seed(99);
+            let centers = kmeans_pp_sparse(&mut src, 4, &mut r1).unwrap();
+            for (a, b) in centers.as_slice().iter().zip(base.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bounds {bounds:?}");
+            }
         }
     }
 

@@ -7,31 +7,54 @@
 //! assignments *and* original-domain centers — the paper's headline
 //! property.
 //!
-//! Both hot steps fan out over [`crate::parallel`] scoped threads when
-//! `workers > 1`: assignment partitions the *samples* (embarrassingly
-//! parallel; per-sample distances are recorded and reduced in sample
-//! order), the center update partitions the *coordinates* (each worker
-//! owns a row range of `sums`/`counts`, so every cell is accumulated by
-//! exactly one worker in global sample order). Results are therefore
-//! bitwise identical for every worker count, including `workers = 1` —
-//! which runs the original serial loops inline.
+//! The Lloyd iteration is **source-driven**: every step (seeding,
+//! assignment, center accumulation) is a whole-pass fold over a
+//! rewindable chunk stream through the [`CenterStep`](super::CenterStep)
+//! kernel, so the fit never requires the sparse matrix to be resident.
+//! [`fit_chunks`](SparsifiedKmeans::fit_chunks) walks in-memory slices
+//! (the streaming drivers' path);
+//! [`fit_source`](SparsifiedKmeans::fit_source) walks any
+//! [`SparseChunkSource`] — with a memory-budgeted
+//! [`SparseStoreReader`](crate::store::SparseStoreReader) the whole fit
+//! is out-of-core at one sparse pass per Lloyd iteration. Both paths are
+//! bitwise identical to each other for every worker count and chunk
+//! granularity (see `CenterStep`'s invariants), and the fit additionally
+//! evaluates the paper's per-step center-error guarantee
+//! ([`estimators::center_error_bound`](crate::estimators::center_error_bound))
+//! at each iteration's observed cluster sizes.
+//!
+//! Restarts (`KmeansOpts::n_init`) run over seeded sub-RNG streams and
+//! may fan out across threads
+//! ([`with_restart_workers`](SparsifiedKmeans::with_restart_workers)):
+//! each restart is bitwise deterministic given its stream and the
+//! best-inertia merge visits restarts in index order, so the selected
+//! model is identical for every restart worker count.
 
 use std::ops::Range;
 
-use crate::error::Result;
+use crate::error::{invalid, Result};
 use crate::linalg::Mat;
 use crate::parallel;
 use crate::rng::Pcg64;
 use crate::sampling::{Sparsifier, SparsifyConfig};
-use crate::sparse::SparseChunk;
+use crate::sparse::{SparseChunk, SparseChunkSource};
 
-use super::plusplus::{kmeans_pp_sparse, masked_dist2};
+use super::center_step::{CenterStep, ChunkWalk, SliceWalk, SourceWalk};
+use super::plusplus::{kmeans_pp_walk, masked_dist2};
 use super::{KmeansOpts, KmeansResult};
+
+/// Failure probability δ at which the per-iteration center-error bound
+/// ([`SparsifiedModel::center_bound`]) is evaluated.
+pub const CENTER_BOUND_DELTA: f64 = 1e-3;
 
 /// Strategy for the per-chunk assignment step — the pipeline hot spot.
 /// Implemented natively ([`sparsified`](self)) and by the PJRT runtime
 /// (`runtime::XlaEngine`) executing the AOT Pallas `assign` graph.
-pub trait SparseAssigner {
+///
+/// `Sync` is part of the contract: the parallel multi-restart path shares
+/// one assigner across restart threads (engines keep interior state
+/// behind a lock).
+pub trait SparseAssigner: Sync {
     /// Assign each column of `chunk` to its nearest center (centers live
     /// in the preconditioned domain, `p × K`). Returns per-column cluster
     /// ids and the summed min masked distance (the Eq. 34 objective).
@@ -175,6 +198,9 @@ impl SparseAssigner for NativeAssigner {
 /// Accumulate one chunk's contribution to the masked center update
 /// (Eq. 39): `sums[j,k] += w_ij`, `counts[j,k] += 1` over kept entries of
 /// samples assigned to `k` — one fused pass over each column's indices.
+/// This is the serial reference kernel; the production fold is
+/// [`CenterStep`](super::CenterStep), which is bitwise identical to it
+/// at every worker count and chunk granularity.
 pub fn accumulate_center_update(
     chunk: &SparseChunk,
     assign: &[u32],
@@ -189,65 +215,6 @@ pub fn accumulate_center_update(
         for (&j, &v) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
             scol[j as usize] += v;
             ccol[j as usize] += 1.0;
-        }
-    }
-}
-
-/// Whole-pass center update over `chunks` (global chunk-ordered `assign`),
-/// fanned out over disjoint coordinate ranges. `sums`/`counts` must be
-/// zeroed on entry. Each worker owns rows `[lo, hi)` of both matrices and
-/// walks all samples in global order, locating its slice of each sorted
-/// index column by binary search — so every cell receives its
-/// contributions in exactly the serial order regardless of `workers`,
-/// making the result bitwise worker-count-invariant.
-fn accumulate_center_update_rows(
-    chunks: &[SparseChunk],
-    assign: &[u32],
-    sums: &mut Mat,
-    counts: &mut Mat,
-    workers: usize,
-) {
-    let p = sums.rows();
-    let k = sums.cols();
-    let ranges = parallel::split_ranges(p, workers);
-    if ranges.len() <= 1 {
-        let mut off = 0usize;
-        for chunk in chunks {
-            accumulate_center_update(chunk, &assign[off..off + chunk.n()], sums, counts);
-            off += chunk.n();
-        }
-        return;
-    }
-    let partials = parallel::run_ranges(ranges, |r| {
-        let rows = r.len();
-        let (lo, hi) = (r.start as u32, r.end as u32);
-        let mut s = vec![0.0f64; rows * k];
-        let mut cnt = vec![0.0f64; rows * k];
-        let mut off = 0usize;
-        for chunk in chunks {
-            for i in 0..chunk.n() {
-                let c = assign[off + i] as usize;
-                let idx = chunk.col_indices(i);
-                let vals = chunk.col_values(i);
-                let a_lo = idx.partition_point(|&j| j < lo);
-                let a_hi = a_lo + idx[a_lo..].partition_point(|&j| j < hi);
-                let scol = &mut s[c * rows..(c + 1) * rows];
-                let ccol = &mut cnt[c * rows..(c + 1) * rows];
-                for a in a_lo..a_hi {
-                    let j = (idx[a] - lo) as usize;
-                    scol[j] += vals[a];
-                    ccol[j] += 1.0;
-                }
-            }
-            off += chunk.n();
-        }
-        (r, s, cnt)
-    });
-    for (r, s, cnt) in partials {
-        let rows = r.len();
-        for c in 0..k {
-            sums.col_mut(c)[r.start..r.end].copy_from_slice(&s[c * rows..(c + 1) * rows]);
-            counts.col_mut(c)[r.start..r.end].copy_from_slice(&cnt[c * rows..(c + 1) * rows]);
         }
     }
 }
@@ -269,15 +236,25 @@ pub fn solve_centers(sums: &Mat, counts: &Mat, prev: &Mat) -> Mat {
 }
 
 /// The fitted sparsified model: result plus the preconditioned-domain
-/// centers (useful for resuming / streaming assignment of new data).
+/// centers (useful for resuming / streaming assignment of new data) and
+/// the per-iteration center-error bound.
 pub struct SparsifiedModel {
     /// The fitted clustering (centers in the original domain).
     pub result: KmeansResult,
     /// Centers in the preconditioned (padded) domain, p_work × K.
     pub centers_precond: Mat,
+    /// The paper's per-step center-estimator guarantee, evaluated at each
+    /// Lloyd iteration of the winning restart: entry `t` is the worst
+    /// cluster's Eq. 43 deviation bound
+    /// ([`estimators::center_error_bound`](crate::estimators::center_error_bound)
+    /// at δ = [`CENTER_BOUND_DELTA`]) given iteration `t`'s observed
+    /// cluster sizes. Small values mean the masked averaging of Eq. 39
+    /// was provably close to plain class means at every step.
+    pub center_bound: Vec<f64>,
 }
 
 /// Sparsified K-means (Algorithm 1).
+#[derive(Clone, Copy)]
 pub struct SparsifiedKmeans {
     /// Compression configuration (used by [`fit_dense`](Self::fit_dense)).
     pub sparsify: SparsifyConfig,
@@ -289,18 +266,34 @@ pub struct SparsifiedKmeans {
     /// default) runs the serial loops inline; any value yields bitwise
     /// identical fits (see module docs).
     pub workers: usize,
+    /// Fork/join width across k-means++ *restarts* (`opts.n_init`). `1`
+    /// (the default) runs restarts serially; any value selects the same
+    /// best model (see module docs). Only the in-memory
+    /// [`fit_chunks`](Self::fit_chunks) path fans restarts out — a
+    /// streamed source is a single cursor, so
+    /// [`fit_source`](Self::fit_source) restarts serially.
+    pub restart_workers: usize,
 }
 
 impl SparsifiedKmeans {
     /// Build an Algorithm 1 runner (single-threaded; see
     /// [`with_workers`](Self::with_workers)).
     pub fn new(sparsify: SparsifyConfig, k: usize, opts: KmeansOpts) -> Self {
-        SparsifiedKmeans { sparsify, k, opts, workers: 1 }
+        SparsifiedKmeans { sparsify, k, opts, workers: 1, restart_workers: 1 }
     }
 
-    /// Builder-style worker-count override.
+    /// Builder-style worker-count override (within one restart).
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Builder-style restart fan-out override: run `opts.n_init` restarts
+    /// on up to `workers` threads, selecting the best inertia exactly as
+    /// the serial loop does — deterministic for a fixed seed regardless
+    /// of the worker count.
+    pub fn with_restart_workers(mut self, workers: usize) -> Self {
+        self.restart_workers = workers.max(1);
         self
     }
 
@@ -335,79 +328,192 @@ impl SparsifiedKmeans {
         unmix: bool,
     ) -> Result<SparsifiedModel> {
         assert!(!chunks.is_empty(), "fit_chunks: no data");
-        let p = sp.p();
         let n: usize = chunks.iter().map(|c| c.n()).sum();
-        let mut best: Option<SparsifiedModel> = None;
-        for start in 0..self.opts.n_init.max(1) {
-            let mut rng = Pcg64::seed_stream(self.opts.seed, 0xC0DE ^ start as u64);
-            let mut centers = kmeans_pp_sparse(chunks, self.k, &mut rng);
-            let mut assign = vec![0u32; n];
-            let mut next = vec![0u32; n];
-            let mut dist = vec![0.0f64; n];
-            let mut have_assign = false;
-            let mut obj = f64::INFINITY;
-            let mut iterations = 0;
-            let mut converged = false;
-            for it in 0..self.opts.max_iters {
-                // Step 1 (Eq. 36): assignments + per-sample distances
-                let mut off = 0usize;
-                for chunk in chunks {
-                    let cn = chunk.n();
-                    assigner.assign_into(
-                        chunk,
-                        &centers,
-                        self.workers,
-                        &mut next[off..off + cn],
-                        &mut dist[off..off + cn],
-                    )?;
-                    off += cn;
-                }
-                let changed = if have_assign {
-                    assign.iter().zip(&next).filter(|(a, b)| a != b).count()
-                } else {
-                    n
-                };
-                std::mem::swap(&mut assign, &mut next);
-                have_assign = true;
-                // the objective is reduced in sample order, so it does
-                // not depend on chunking or worker count
-                obj = dist.iter().sum();
-                // Step 2 (Eq. 39): masked sums/counts, then center solve
-                let mut sums = Mat::zeros(p, self.k);
-                let mut counts = Mat::zeros(p, self.k);
-                accumulate_center_update_rows(
-                    chunks,
-                    &assign,
-                    &mut sums,
-                    &mut counts,
-                    self.workers,
-                );
-                centers = solve_centers(&sums, &counts, &centers);
-                iterations = it + 1;
-                if (changed as f64) <= self.opts.tol_frac * n as f64 {
-                    converged = true;
-                    break;
-                }
+        let starts = self.opts.n_init.max(1);
+        let restart_workers = self.restart_workers.max(1).min(starts);
+        if restart_workers <= 1 {
+            let mut best: Option<SparsifiedModel> = None;
+            for start in 0..starts {
+                let mut walk = SliceWalk(chunks);
+                let model = self.fit_one_start(sp, n, &mut walk, assigner, unmix, start)?;
+                merge_best(&mut best, model);
             }
-            // Eq. 32: unmix to the original domain (or just drop padding
-            // for the no-preconditioning ablation)
-            let centers_orig =
-                if unmix { sp.unmix(&centers) } else { sp.truncate(&centers) };
-            let candidate = SparsifiedModel {
-                result: KmeansResult {
-                    centers: centers_orig,
-                    assign: assign.clone(),
-                    objective: obj,
-                    iterations,
-                    converged,
-                },
-                centers_precond: centers,
-            };
-            if best.as_ref().map_or(true, |b| candidate.result.objective < b.result.objective) {
-                best = Some(candidate);
+            return Ok(best.expect("n_init >= 1"));
+        }
+        // Parallel multi-restart: contiguous blocks of restart indices
+        // run on scoped threads, and the remaining thread budget is
+        // spent inside each restart (workers / restart blocks), so the
+        // total fan-out stays ~self.workers whether restarts or
+        // per-restart kernels dominate. Every restart is bitwise
+        // deterministic given its sub-RNG stream — the inner width
+        // never changes bits — and blocks are merged in start order
+        // under the same strictly-better rule as the serial loop, so
+        // the selected model is identical for every worker count.
+        let inner_workers = (self.workers / restart_workers).max(1);
+        let inner = SparsifiedKmeans { workers: inner_workers, restart_workers: 1, ..*self };
+        let blocks = parallel::map_ranges(starts, restart_workers, |r| {
+            let mut best: Option<SparsifiedModel> = None;
+            for start in r {
+                let mut walk = SliceWalk(chunks);
+                let model = inner.fit_one_start(sp, n, &mut walk, assigner, unmix, start)?;
+                merge_best(&mut best, model);
+            }
+            Ok::<Option<SparsifiedModel>, crate::error::Error>(best)
+        });
+        let mut best: Option<SparsifiedModel> = None;
+        for block in blocks {
+            if let Some(model) = block? {
+                merge_best(&mut best, model);
             }
         }
         Ok(best.expect("n_init >= 1"))
+    }
+
+    /// Fit straight from a rewindable [`SparseChunkSource`] — the
+    /// out-of-core path. No stage materializes the sparse matrix: the
+    /// k-means++ seeding and every Lloyd iteration are whole passes over
+    /// the source (one pass per iteration), so with a memory-budgeted
+    /// [`SparseStoreReader`](crate::store::SparseStoreReader) the working
+    /// set is the reader budget plus O(p·k·workers) accumulators plus
+    /// 12 bytes per sample. Bitwise identical to
+    /// [`fit_chunks`](Self::fit_chunks) on the same data for every worker
+    /// count, reader memory budget, and chunk granularity.
+    ///
+    /// Returns the model plus the number of passes *started* over the
+    /// sparse source: one per Lloyd iteration plus the seeding's
+    /// sub-passes (≈2 per seed — one early-stopped column fetch and one
+    /// D² sweep) per restart, and a counting pass when the source gives
+    /// no `n_hint`.
+    pub fn fit_source(
+        &self,
+        sp: &Sparsifier,
+        source: &mut dyn SparseChunkSource,
+        assigner: &dyn SparseAssigner,
+        unmix: bool,
+    ) -> Result<(SparsifiedModel, usize)> {
+        if source.p() != sp.p() || source.m() != sp.m() {
+            return invalid(format!(
+                "kmeans fit: source is p={} m={}, sparsifier is p={} m={}",
+                source.p(),
+                source.m(),
+                sp.p(),
+                sp.m()
+            ));
+        }
+        let hint = source.n_hint();
+        let mut walk = SourceWalk::new(source);
+        let n = match hint {
+            Some(n) => n,
+            None => {
+                let mut n = 0usize;
+                walk.walk(&mut |c| {
+                    n += c.n();
+                    Ok(true)
+                })?;
+                n
+            }
+        };
+        if n == 0 {
+            return invalid("kmeans fit: source is empty");
+        }
+        let mut best: Option<SparsifiedModel> = None;
+        for start in 0..self.opts.n_init.max(1) {
+            let model = self.fit_one_start(sp, n, &mut walk, assigner, unmix, start)?;
+            merge_best(&mut best, model);
+        }
+        Ok((best.expect("n_init >= 1"), walk.passes))
+    }
+
+    /// One restart: k-means++ seeding then Lloyd iterations, all as
+    /// whole-pass folds over `walk` through the [`CenterStep`] kernel.
+    fn fit_one_start(
+        &self,
+        sp: &Sparsifier,
+        n: usize,
+        walk: &mut dyn ChunkWalk,
+        assigner: &dyn SparseAssigner,
+        unmix: bool,
+        start: usize,
+    ) -> Result<SparsifiedModel> {
+        let p = sp.p();
+        let m = sp.m();
+        let mut rng = Pcg64::seed_stream(self.opts.seed, 0xC0DE ^ start as u64);
+        // Algorithm 1 line 5: seeding on the sparse matrix
+        let mut centers = kmeans_pp_walk(walk, p, n, self.k, &mut rng)?;
+        let mut step = CenterStep::new(p, self.k, self.workers);
+        let mut assign = vec![0u32; n];
+        let mut have_assign = false;
+        let mut obj = f64::INFINITY;
+        let mut iterations = 0;
+        let mut converged = false;
+        let mut center_bound = Vec::new();
+        for it in 0..self.opts.max_iters {
+            // one pass: Step 1 (Eq. 36) + Step 2 (Eq. 39) fused per chunk
+            step.begin();
+            walk.walk(&mut |chunk| {
+                step.fold(chunk, &centers, assigner)?;
+                Ok(true)
+            })?;
+            if step.n() != n {
+                return invalid(format!(
+                    "kmeans fit: pass covered {} of {n} samples",
+                    step.n()
+                ));
+            }
+            let changed = if have_assign {
+                assign.iter().zip(step.assign()).filter(|(a, b)| a != b).count()
+            } else {
+                n
+            };
+            assign.copy_from_slice(step.assign());
+            have_assign = true;
+            // the objective is reduced in sample order, so it does not
+            // depend on chunking or worker count
+            obj = step.objective();
+            // the paper's per-step guarantee: worst-cluster Eq. 43 bound
+            // at this iteration's observed cluster sizes
+            center_bound.push(
+                step.cluster_sizes()
+                    .iter()
+                    .filter(|&&nk| nk > 0)
+                    .map(|&nk| {
+                        crate::estimators::center_error_bound(p, m, nk, CENTER_BOUND_DELTA)
+                    })
+                    .fold(0.0f64, f64::max),
+            );
+            centers = step.solve(&centers);
+            iterations = it + 1;
+            if (changed as f64) <= self.opts.tol_frac * n as f64 {
+                converged = true;
+                break;
+            }
+        }
+        // Eq. 32: unmix to the original domain (or just drop padding
+        // for the no-preconditioning ablation)
+        let centers_orig = if unmix { sp.unmix(&centers) } else { sp.truncate(&centers) };
+        Ok(SparsifiedModel {
+            result: KmeansResult {
+                centers: centers_orig,
+                assign,
+                objective: obj,
+                iterations,
+                converged,
+            },
+            centers_precond: centers,
+            center_bound,
+        })
+    }
+}
+
+/// Best-inertia merge, visiting candidates in restart order: strictly
+/// better objectives win, so the earliest of exact ties is kept — the
+/// same rule at every fan-out.
+fn merge_best(best: &mut Option<SparsifiedModel>, candidate: SparsifiedModel) {
+    if best
+        .as_ref()
+        .map_or(true, |b| candidate.result.objective < b.result.objective)
+    {
+        *best = Some(candidate);
     }
 }
 
@@ -416,6 +522,7 @@ mod tests {
     use super::*;
     use crate::data::gaussian_blobs;
     use crate::metrics::clustering_accuracy;
+    use crate::sparse::SparseVecSource;
     use crate::transform::TransformKind;
 
     fn fit(gamma: f64, seed: u64, n: usize) -> (KmeansResult, Vec<u32>) {
@@ -535,33 +642,115 @@ mod tests {
     }
 
     #[test]
-    fn parallel_center_accumulation_matches_serial() {
-        // accumulate_center_update_rows at workers > 1 against the fused
-        // serial kernel, directly
-        let mut rng = Pcg64::seed(47);
-        let d = gaussian_blobs(96, 300, 4, 0.2, &mut rng);
-        let cfg = SparsifyConfig { gamma: 0.15, transform: TransformKind::Hadamard, seed: 5 };
-        let sp = Sparsifier::new(96, cfg).unwrap();
-        let c0 = sp.compress_chunk(&d.data.col_range(0, 130), 0).unwrap();
-        let c1 = sp.compress_chunk(&d.data.col_range(130, 300), 130).unwrap();
-        let chunks = [c0, c1];
-        let assign: Vec<u32> = (0..300).map(|i| (i % 4) as u32).collect();
-        let p = sp.p();
-        let mut s_ser = Mat::zeros(p, 4);
-        let mut c_ser = Mat::zeros(p, 4);
-        accumulate_center_update(&chunks[0], &assign[..130], &mut s_ser, &mut c_ser);
-        accumulate_center_update(&chunks[1], &assign[130..], &mut s_ser, &mut c_ser);
-        for w in [2usize, 3, 8] {
-            let mut s_par = Mat::zeros(p, 4);
-            let mut c_par = Mat::zeros(p, 4);
-            accumulate_center_update_rows(&chunks, &assign, &mut s_par, &mut c_par, w);
-            for (a, b) in s_ser.as_slice().iter().zip(s_par.as_slice()) {
-                assert_eq!(a.to_bits(), b.to_bits(), "sums, workers={w}");
+    fn parallel_restarts_select_the_same_model() {
+        // the --restarts contract: n_init restarts fanned out over any
+        // number of threads pick the same best model, bit for bit
+        let mut rng = Pcg64::seed(57);
+        let d = gaussian_blobs(32, 600, 4, 0.3, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 2 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let chunks = [sp.compress_chunk(&d.data, 0).unwrap()];
+        let opts = KmeansOpts { n_init: 6, ..Default::default() };
+        let base = SparsifiedKmeans::new(cfg, 4, opts)
+            .fit_chunks(&sp, &chunks, &NativeAssigner)
+            .unwrap();
+        for rw in [2usize, 3, 8] {
+            let par = SparsifiedKmeans::new(cfg, 4, opts)
+                .with_restart_workers(rw)
+                .fit_chunks(&sp, &chunks, &NativeAssigner)
+                .unwrap();
+            assert_eq!(base.result.assign, par.result.assign, "restart workers={rw}");
+            assert_eq!(
+                base.result.objective.to_bits(),
+                par.result.objective.to_bits(),
+                "restart workers={rw}"
+            );
+            assert_eq!(base.result.iterations, par.result.iterations);
+            for (a, b) in base
+                .centers_precond
+                .as_slice()
+                .iter()
+                .zip(par.centers_precond.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "centers, restart workers={rw}");
             }
-            for (a, b) in c_ser.as_slice().iter().zip(c_par.as_slice()) {
-                assert_eq!(a.to_bits(), b.to_bits(), "counts, workers={w}");
+            assert_eq!(base.center_bound.len(), par.center_bound.len());
+            for (a, b) in base.center_bound.iter().zip(&par.center_bound) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bounds, restart workers={rw}");
             }
         }
+    }
+
+    #[test]
+    fn fit_source_matches_fit_chunks_bitwise() {
+        // streaming Lloyd over a source == in-memory fit, at several
+        // chunk granularities (the store-reader memory-budget shape)
+        let mut rng = Pcg64::seed(63);
+        let d = gaussian_blobs(32, 500, 3, 0.2, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 9 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let whole = sp.compress_chunk(&d.data, 0).unwrap();
+        let opts = KmeansOpts { n_init: 2, ..Default::default() };
+        let sk = SparsifiedKmeans::new(cfg, 3, opts);
+        let base = sk.fit_chunks(&sp, &[whole], &NativeAssigner).unwrap();
+        for bounds in [vec![0usize, 500], vec![0, 70, 500], vec![0, 1, 250, 499, 500]] {
+            let pieces: Vec<SparseChunk> = bounds
+                .windows(2)
+                .map(|w| sp.compress_chunk(&d.data.col_range(w[0], w[1]), w[0]).unwrap())
+                .collect();
+            let mut src = SparseVecSource::new(pieces).unwrap();
+            let (got, passes) = sk.fit_source(&sp, &mut src, &NativeAssigner, true).unwrap();
+            assert!(passes > 0);
+            assert_eq!(base.result.assign, got.result.assign, "bounds {bounds:?}");
+            assert_eq!(
+                base.result.objective.to_bits(),
+                got.result.objective.to_bits(),
+                "bounds {bounds:?}"
+            );
+            for (a, b) in base
+                .result
+                .centers
+                .as_slice()
+                .iter()
+                .zip(got.result.centers.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "bounds {bounds:?}");
+            }
+            for (a, b) in base.center_bound.iter().zip(&got.center_bound) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bounds {bounds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn center_bound_tracks_iterations_and_dominates_deviation() {
+        let mut rng = Pcg64::seed(71);
+        let d = gaussian_blobs(64, 2000, 3, 0.05, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 3 };
+        let sp = Sparsifier::new(64, cfg).unwrap();
+        let chunks = [sp.compress_chunk(&d.data, 0).unwrap()];
+        let opts = KmeansOpts { n_init: 1, ..Default::default() };
+        let model = SparsifiedKmeans::new(cfg, 3, opts)
+            .fit_chunks(&sp, &chunks, &NativeAssigner)
+            .unwrap();
+        // one bound per Lloyd iteration, all finite and positive
+        assert_eq!(model.center_bound.len(), model.result.iterations);
+        assert!(model.center_bound.iter().all(|b| b.is_finite() && *b > 0.0));
+        // with ~666 members per cluster at gamma=0.3 the guarantee is
+        // non-vacuous (well below the trivial ||H_k|| scale p/m)
+        let last = *model.center_bound.last().unwrap();
+        assert!(last < sp.p() as f64 / sp.m() as f64, "bound {last} is vacuous");
+        // and it matches a direct evaluation at the final cluster sizes
+        let mut sizes = vec![0usize; 3];
+        for &a in &model.result.assign {
+            sizes[a as usize] += 1;
+        }
+        let direct = sizes
+            .iter()
+            .filter(|&&nk| nk > 0)
+            .map(|&nk| crate::estimators::center_error_bound(sp.p(), sp.m(), nk, CENTER_BOUND_DELTA))
+            .fold(0.0f64, f64::max);
+        assert_eq!(last.to_bits(), direct.to_bits());
     }
 
     #[test]
@@ -575,7 +764,7 @@ mod tests {
         let sp = Sparsifier::new(32, cfg).unwrap();
         let chunk = sp.compress_chunk(&d.data, 0).unwrap();
         let mut rng2 = Pcg64::seed(54);
-        let centers = sp.precondition_dense(&kmeans_pp_sparse_seed(&chunk, 3, &mut rng2));
+        let centers = sp.precondition_dense(&random_column_seed(&chunk, 3, &mut rng2));
         let (ids_ref, obj_ref) = NativeAssigner.assign(&chunk, &centers).unwrap();
         for w in [1usize, 4] {
             let mut ids = vec![0u32; n];
@@ -588,7 +777,7 @@ mod tests {
     }
 
     /// Dense seed helper for the assigner test (original-domain columns).
-    fn kmeans_pp_sparse_seed(chunk: &SparseChunk, k: usize, rng: &mut Pcg64) -> Mat {
+    fn random_column_seed(chunk: &SparseChunk, k: usize, rng: &mut Pcg64) -> Mat {
         let dense = chunk.to_dense();
         let mut centers = Mat::zeros(dense.rows(), k);
         for c in 0..k {

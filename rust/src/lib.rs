@@ -25,8 +25,9 @@
 //!   materialized covariance estimate (`Pca::from_covariance`) or
 //!   covariance-free via randomized block-Krylov iteration on an
 //!   implicit operator (`Pca::from_sparse_operator` over
-//!   [`linalg::SymOp`] — no p×p allocation; the `run_pca_krylov_*`
-//!   drivers stream the operator from memory or from the sparse store).
+//!   [`linalg::SymOp`] — no p×p allocation; select it with
+//!   `FitPlan::pca().solver(Solver::Krylov)` to stream the operator from
+//!   memory or from the sparse store).
 //! * [`kmeans`] — standard K-means, k-means++ seeding, and **sparsified
 //!   K-means** (Algorithm 1) with its two-pass refinement (Algorithm 2).
 //! * [`baselines`] — feature extraction / feature selection
@@ -34,7 +35,9 @@
 //!   comparisons.
 //! * [`coordinator`] — the L3 streaming orchestrator: chunked (optionally
 //!   out-of-core) ingestion, sparsifier worker pool with bounded-channel
-//!   backpressure, estimator accumulators and K-means drivers.
+//!   backpressure, and the [`coordinator::FitPlan`] session API — the one
+//!   builder every fit (PCA / K-means / compress, from a raw stream, an
+//!   in-memory sparse source, or the persistent store) runs through.
 //! * [`parallel`] — the fork/join execution layer under the hot paths:
 //!   scoped threads over contiguous index ranges with deterministic
 //!   in-order merge (K-means assignment/center accumulation and the
@@ -45,10 +48,11 @@
 //!   [`runtime::NativeEngine`] implements the same chunk ops in pure Rust
 //!   and is the default engine.
 //! * [`store`] — the persistent sharded store for sparsified data:
-//!   compress once with [`coordinator::run_compress_to_store`], then fit
-//!   PCA / K-means any number of times from disk without touching the raw
-//!   stream again (`rust/ARCHITECTURE.md` maps the full pipeline,
-//!   `docs/FORMAT.md` specifies the bytes).
+//!   compress once with `FitPlan::compress()`, then fit PCA / K-means any
+//!   number of times from disk without touching the raw stream again —
+//!   including fully out-of-core K-means via
+//!   `FitPlan::kmeans().solver(Solver::Stream)` (`rust/ARCHITECTURE.md`
+//!   maps the full pipeline, `docs/FORMAT.md` specifies the bytes).
 
 #![warn(missing_docs)]
 
@@ -78,8 +82,9 @@ pub use error::{Error, Result};
 /// Convenience re-exports of the types most programs touch.
 pub mod prelude {
     pub use crate::coordinator::{
-        ChunkSource, DenseChunk, SparseChunkSource, StreamConfig,
+        ChunkSource, DenseChunk, FitOutcome, FitPlan, FitReport, Solver, StreamConfig,
     };
+    pub use crate::sparse::{SparseChunkSource, SparseVecSource};
     pub use crate::error::{Error, Result};
     pub use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
     pub use crate::kmeans::{KmeansOpts, KmeansResult, SparsifiedKmeans};

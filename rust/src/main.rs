@@ -1,4 +1,5 @@
-//! `pds` — the command-line front end.
+//! `pds` — the command-line front end. Every fit routes through the
+//! [`FitPlan`](pds::coordinator::FitPlan) session API.
 //!
 //! ```text
 //! pds xp <id|all|list> [--runs N] [--full] [...]   regenerate a paper table/figure
@@ -15,14 +16,10 @@ use std::path::Path;
 use std::process::ExitCode;
 
 use pds::cli::Args;
-use pds::coordinator::{
-    run_compress_to_store, run_pca_from_store, run_pca_krylov_from_store,
-    run_pca_krylov_stream, run_pca_stream, run_sparsified_kmeans_from_store,
-    run_sparsified_kmeans_stream, MatSource, StreamConfig,
-};
+use pds::coordinator::{FitPlan, FitReport, MatSource, Solver, StreamConfig};
 use pds::data::{gaussian_blobs, DigitConfig};
 use pds::error::{Error, Result};
-use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::kmeans::KmeansOpts;
 use pds::metrics::clustering_accuracy;
 use pds::rng::Pcg64;
 use pds::runtime::{artifact_dir, XlaEngine};
@@ -78,13 +75,15 @@ fn usage() {
          \n\
          usage:\n\
          \x20 pds xp <id|all|list> [--runs N] [--full] [--gammas a,b,c] ...\n\
-         \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G] [--workers W] [--engine native|xla]\n\
+         \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G]\n\
+         \x20\x20\x20\x20 [--restarts R] [--workers W] [--engine native|xla]\n\
          \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G] [--workers W]\n\
          \x20\x20\x20\x20 [--solver covariance|krylov]\n\
          \x20 pds compress --store DIR [--data blobs|digits] [--n N] [--p P] [--gamma G]\n\
          \x20\x20\x20\x20 [--seed S] [--workers W] [--shard-cols C] [--no-precondition]\n\
          \x20 pds fit --store DIR [--task kmeans|pca] [--k K] [--topk K] [--workers W]\n\
-         \x20\x20\x20\x20 [--budget-mb MB] [--solver covariance|krylov]\n\
+         \x20\x20\x20\x20 [--restarts R] [--budget-mb MB]\n\
+         \x20\x20\x20\x20 [--solver covariance|krylov (pca) | inmemory|stream (kmeans)]\n\
          \x20 pds store-info --store DIR\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
@@ -101,6 +100,36 @@ fn cmd_xp(args: &Args) -> Result<()> {
         return Ok(());
     }
     pds::experiments::run(id, args)
+}
+
+/// Print a K-means report's tail: objective, bound, pass counts, phases.
+fn print_kmeans_report(report: &FitReport) {
+    let model = report.kmeans_model().expect("kmeans plan");
+    println!("objective = {:.4}", model.result.objective);
+    if let Some(bound) = report.center_bound.last() {
+        println!(
+            "per-iteration center-error bound (Eq. 43, worst cluster, final iter): {bound:.4}"
+        );
+    }
+    println!(
+        "passes: raw {} | sparse {}",
+        report.raw_passes, report.sparse_passes
+    );
+    for (name, secs) in report.timer.phases() {
+        println!("  {name:<10} {secs:.3} s");
+    }
+}
+
+fn kmeans_opts(args: &Args) -> Result<KmeansOpts> {
+    // --restarts is the preferred spelling; --starts kept for
+    // compatibility with earlier scripts
+    let default_restarts: usize = args.get_parse("starts", 5)?;
+    Ok(KmeansOpts {
+        n_init: args.get_parse("restarts", default_restarts)?,
+        max_iters: args.get_parse("max-iters", 100)?,
+        tol_frac: 0.0,
+        seed: args.get_parse("seed", 0)?,
+    })
 }
 
 fn cmd_kmeans(args: &Args) -> Result<()> {
@@ -123,45 +152,53 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         }
     };
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
-    let opts = KmeansOpts {
-        n_init: args.get_parse("starts", 5)?,
-        max_iters: args.get_parse("max-iters", 100)?,
-        tol_frac: 0.0,
-        seed,
-    };
+    let opts = kmeans_opts(args)?;
     let mut src = MatSource::new(&data, args.get_parse("chunk", 2048)?);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
 
-    let use_xla = args.get("engine") == Some("xla");
-    let (model, report) = if use_xla {
-        let engine = XlaEngine::new(None)?;
-        run_sparsified_kmeans_stream(&mut src, scfg, k, opts, &engine, stream, true)?
+    let engine = if args.get("engine") == Some("xla") {
+        Some(XlaEngine::new(None)?)
     } else {
-        run_sparsified_kmeans_stream(&mut src, scfg, k, opts, &NativeAssigner, stream, true)?
+        None
     };
+    let mut plan = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(k)
+        .kmeans_opts(opts)
+        .stream_config(stream);
+    if let Some(e) = &engine {
+        plan = plan.assigner(e);
+    }
+    let report = plan.run()?;
+    let model = report.kmeans_model().expect("kmeans plan");
     println!(
-        "sparsified K-means: n={} gamma={gamma} engine={} iterations={} converged={}",
-        report.n, report.engine, model.result.iterations, model.result.converged
+        "sparsified K-means: n={} gamma={gamma} engine={} restarts={} iterations={} converged={}",
+        report.n, report.engine, opts.n_init, model.result.iterations, model.result.converged
     );
-    println!("objective = {:.4}", model.result.objective);
     if !labels.is_empty() {
         println!(
             "accuracy vs ground truth = {:.4}",
             clustering_accuracy(&model.result.assign, &labels, k)
         );
     }
-    for (name, secs) in report.timer.phases() {
-        println!("  {name:<10} {secs:.3} s");
-    }
+    print_kmeans_report(&report);
     Ok(())
 }
 
-/// The `--solver` option shared by `pca` and `fit --task pca`.
-fn solver_arg(args: &Args) -> Result<&str> {
-    match args.get("solver").unwrap_or("covariance") {
-        s @ ("covariance" | "krylov") => Ok(s),
-        other => Err(Error::Invalid(format!("--solver {other:?} (want covariance|krylov)"))),
+/// The `--solver` option: validated against the task's solver family.
+fn solver_arg(args: &Args, task: &str) -> Result<Option<Solver>> {
+    let Some(name) = args.get("solver") else { return Ok(None) };
+    let solver = Solver::parse(name)?;
+    let ok = match task {
+        "pca" => matches!(solver, Solver::Covariance | Solver::Krylov),
+        _ => matches!(solver, Solver::InMemory | Solver::Stream),
+    };
+    if !ok {
+        return Err(Error::Invalid(format!(
+            "--solver {name:?} does not apply to task {task:?}"
+        )));
     }
+    Ok(Some(solver))
 }
 
 fn cmd_pca(args: &Args) -> Result<()> {
@@ -170,25 +207,28 @@ fn cmd_pca(args: &Args) -> Result<()> {
     let topk: usize = args.get_parse("topk", 5)?;
     let gamma: f64 = args.get_parse("gamma", 0.1)?;
     let seed: u64 = args.get_parse("seed", 0)?;
-    let solver = solver_arg(args)?;
+    let solver = solver_arg(args, "pca")?.unwrap_or(Solver::Covariance);
     let mut rng = Pcg64::seed(seed);
     let d = pds::data::spiked(p, n, &[10.0, 8.0, 6.0, 4.0, 2.0], false, &mut rng);
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
     let mut src = MatSource::new(&d.data, 2048);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
-    let (pca, report) = if solver == "krylov" {
-        let (r, rep) = run_pca_krylov_stream(&mut src, scfg, topk, stream)?;
-        (r.pca, rep)
-    } else {
-        let (r, rep) = run_pca_stream(&mut src, scfg, topk, stream)?;
-        (r.pca, rep)
-    };
+    let report = FitPlan::pca()
+        .stream(&mut src, scfg)
+        .topk(topk)
+        .solver(solver)
+        .stream_config(stream)
+        .run()?;
+    let fit = report.pca_fit().expect("pca plan");
     println!(
-        "streaming PCA ({solver} solver): n={} gamma={gamma} passes={}",
-        report.n, report.passes
+        "streaming PCA ({} solver): n={} gamma={gamma} passes: raw {} | sparse {}",
+        solver.name(),
+        report.n,
+        report.raw_passes,
+        report.sparse_passes
     );
-    println!("top-{topk} eigenvalues: {:?}", pca.eigenvalues);
-    let rec = pds::pca::recovered_components(&pca.components, &d.centers, 0.95);
+    println!("top-{topk} eigenvalues: {:?}", fit.pca.eigenvalues);
+    let rec = pds::pca::recovered_components(&fit.pca.components, &d.centers, 0.95);
     println!("recovered {rec}/{} true spiked components (threshold .95)", d.centers.cols());
     for (name, secs) in report.timer.phases() {
         println!("  {name:<10} {secs:.3} s");
@@ -221,18 +261,16 @@ fn cmd_compress(args: &Args) -> Result<()> {
         }
     };
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
-    let precondition = !args.flag("no-precondition");
     let mut src = MatSource::new(&data, args.get_parse("chunk", 2048)?);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
-    let shard_cols: usize = args.get_parse("shard-cols", 8192)?;
-    let (manifest, report) = run_compress_to_store(
-        &mut src,
-        scfg,
-        Path::new(store_dir),
-        shard_cols,
-        stream,
-        precondition,
-    )?;
+    let report = FitPlan::compress()
+        .stream(&mut src, scfg)
+        .store_dir(Path::new(store_dir))
+        .shard_cols(args.get_parse("shard-cols", 8192)?)
+        .stream_config(stream)
+        .precondition(!args.flag("no-precondition"))
+        .run()?;
+    let manifest = report.store_manifest().expect("compress plan");
     println!(
         "compressed {} samples (p={} -> m={} per sample, gamma={:.4}) into {}",
         manifest.n,
@@ -247,7 +285,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         manifest.payload_bytes() as f64 / (1024.0 * 1024.0),
         100.0 * manifest.payload_bytes() as f64
             / (manifest.n as f64 * manifest.p_orig as f64 * 8.0),
-        report.passes
+        report.raw_passes
     );
     for (name, secs) in report.timer.phases() {
         println!("  {name:<10} {secs:.3} s");
@@ -260,15 +298,17 @@ fn cmd_fit(args: &Args) -> Result<()> {
     let task = args.get("task").unwrap_or("kmeans");
     let workers: usize = args.get_parse("workers", 1)?;
     let budget_mb: usize = args.get_parse("budget-mb", 0)?;
+    let solver = solver_arg(args, task)?;
     let mut reader = SparseStoreReader::open(Path::new(store_dir))?;
     if budget_mb > 0 {
-        if task == "kmeans" {
-            // K-means iterates over all compressed data, so the fit holds
-            // the whole sparse store (~12·m·n bytes) in RAM; the budget
-            // only bounds chunk granularity for streaming consumers.
+        if task == "kmeans" && solver != Some(Solver::Stream) {
+            // the in-memory K-means solver materializes the whole sparse
+            // store (~12·m·n bytes); only --solver stream honors the
+            // budget as a true working-set cap
             eprintln!(
-                "note: --budget-mb caps streaming chunk sizes (pca); the kmeans fit still \
-                 holds the full compressed store in memory"
+                "note: --budget-mb caps streaming chunk sizes; the inmemory kmeans solver \
+                 still holds the full compressed store in memory (use --solver stream for \
+                 a true out-of-core fit)"
             );
         }
         reader = reader.with_memory_budget(budget_mb * 1024 * 1024);
@@ -286,42 +326,48 @@ fn cmd_fit(args: &Args) -> Result<()> {
     match task {
         "pca" => {
             let topk: usize = args.get_parse("topk", 5)?;
-            let solver = solver_arg(args)?;
-            let (pca, report) = if solver == "krylov" {
-                let (r, rep) = run_pca_krylov_from_store(&mut reader, topk, workers)?;
-                (r.pca, rep)
-            } else {
-                let (r, rep) = run_pca_from_store(&mut reader, topk, workers)?;
-                (r.pca, rep)
-            };
+            let solver = solver.unwrap_or(Solver::Covariance);
+            let report = FitPlan::pca()
+                .store(&mut reader)
+                .topk(topk)
+                .solver(solver)
+                .workers(workers)
+                .run()?;
+            let fit = report.pca_fit().expect("pca plan");
             println!(
-                "PCA from store ({solver} solver): n={} passes over raw data={}",
-                report.n, report.passes
+                "PCA from store ({} solver): n={} passes: raw {} | sparse {}",
+                solver.name(),
+                report.n,
+                report.raw_passes,
+                report.sparse_passes
             );
-            println!("top-{topk} eigenvalues: {:?}", pca.eigenvalues);
+            println!("top-{topk} eigenvalues: {:?}", fit.pca.eigenvalues);
             for (name, secs) in report.timer.phases() {
                 println!("  {name:<10} {secs:.3} s");
             }
         }
         "kmeans" => {
             let k: usize = args.get_parse("k", 5)?;
-            let opts = KmeansOpts {
-                n_init: args.get_parse("starts", 5)?,
-                max_iters: args.get_parse("max-iters", 100)?,
-                tol_frac: 0.0,
-                seed: args.get_parse("seed", 0)?,
-            };
-            let (model, report) =
-                run_sparsified_kmeans_from_store(&mut reader, k, opts, &NativeAssigner, workers)?;
+            let opts = kmeans_opts(args)?;
+            let solver = solver.unwrap_or(Solver::InMemory);
+            let report = FitPlan::kmeans()
+                .store(&mut reader)
+                .k(k)
+                .kmeans_opts(opts)
+                .solver(solver)
+                .workers(workers)
+                .run()?;
+            let model = report.kmeans_model().expect("kmeans plan");
             println!(
-                "sparsified K-means from store: n={} iterations={} converged={} passes over \
-                 raw data={}",
-                report.n, model.result.iterations, model.result.converged, report.passes
+                "sparsified K-means from store ({} solver): n={} restarts={} iterations={} \
+                 converged={}",
+                solver.name(),
+                report.n,
+                opts.n_init,
+                model.result.iterations,
+                model.result.converged
             );
-            println!("objective = {:.4}", model.result.objective);
-            for (name, secs) in report.timer.phases() {
-                println!("  {name:<10} {secs:.3} s");
-            }
+            print_kmeans_report(&report);
         }
         other => return Err(Error::Invalid(format!("--task {other:?} (want kmeans|pca)"))),
     }

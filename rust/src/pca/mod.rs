@@ -32,9 +32,10 @@ impl Pca {
     /// ([`block_krylov_topk`](crate::linalg::block_krylov_topk)) — the
     /// covariance-free PCA path. With a sparse operator
     /// ([`SparseCovOp`](crate::estimators::SparseCovOp), or the
-    /// store-streaming operator inside the `run_pca_krylov_*` drivers)
-    /// this never materializes a p×p matrix: working memory is
-    /// O(p·(k+4)) and the operator is applied `iters + 2` times.
+    /// store-streaming operator behind
+    /// `FitPlan::pca().solver(Solver::Krylov)`) this never materializes
+    /// a p×p matrix: working memory is O(p·(k+4)) and the operator is
+    /// applied `iters + 2` times.
     ///
     /// # Example
     ///

@@ -2,8 +2,8 @@
 //! [`NativeEngine`], both implementing [`SparseAssigner`] so the
 //! coordinator can swap them freely.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::error::{Error, Result};
 use crate::kmeans::{NativeAssigner, SparseAssigner};
@@ -68,13 +68,15 @@ fn colmajor_to_rowmajor(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 /// PJRT-backed engine executing the AOT artifacts.
 ///
 /// Executables are compiled lazily on first use and cached per
-/// `(graph, p, b, k)`. Not `Sync`: the coordinator runs assignment on the
-/// driver thread (workers only sparsify), so single-threaded access is
-/// the intended discipline.
+/// `(graph, p, b, k)` behind a `Mutex`, making the engine `Sync` — the
+/// [`SparseAssigner`] contract — so the parallel multi-restart K-means
+/// path can share one engine across restart threads (executions
+/// serialize on the cache lock; PJRT devices are a serial resource here
+/// anyway).
 pub struct XlaEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<(String, usize, usize, usize), xla::PjRtLoadedExecutable>>,
 }
 
 impl XlaEngine {
@@ -84,7 +86,7 @@ impl XlaEngine {
         let dir = dir.unwrap_or_else(super::artifact_dir);
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(XlaEngine { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(XlaEngine { client, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     /// The loaded artifact manifest.
@@ -95,14 +97,17 @@ impl XlaEngine {
     /// Compile (or fetch from cache) the executable for a graph signature.
     fn executable(&self, graph: &str, p: usize, b: usize, k: usize) -> Result<()> {
         let key = (graph.to_string(), p, b, k);
-        if self.cache.borrow().contains_key(&key) {
+        // hold the lock across the compile: racing restart threads must
+        // not both pay the parse+compile for the same signature
+        let mut cache = self.cache.lock().expect("engine cache poisoned");
+        if cache.contains_key(&key) {
             return Ok(());
         }
         let entry = self.manifest.find(graph, p, b, k)?;
         let proto = xla::HloModuleProto::from_text_file(&entry.path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        self.cache.borrow_mut().insert(key, exe);
+        cache.insert(key, exe);
         Ok(())
     }
 
@@ -115,7 +120,7 @@ impl XlaEngine {
         args: &[xla::Literal],
     ) -> Result<Vec<xla::Literal>> {
         self.executable(graph, p, b, k)?;
-        let cache = self.cache.borrow();
+        let cache = self.cache.lock().expect("engine cache poisoned");
         let exe = cache.get(&(graph.to_string(), p, b, k)).expect("just inserted");
         let result = exe.execute::<xla::Literal>(args)?;
         let lit = result[0][0].to_literal_sync()?;

@@ -160,6 +160,7 @@ impl IndexSampler {
 /// assert_eq!(left.col_indices(2), chunk.col_indices(2));
 /// # Ok::<(), pds::Error>(())
 /// ```
+#[derive(Clone)]
 pub struct Sparsifier {
     ros: Ros,
     /// Original ambient dimension (before any padding).

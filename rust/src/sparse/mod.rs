@@ -6,6 +6,10 @@
 //! This gives branch-free iteration, trivially computable offsets, and
 //! `8·m·n + 4·m·n` bytes — the compression ratio the paper reports.
 
+mod source;
+
+pub use source::{SparseChunkSource, SparseVecSource};
+
 use crate::error::{shape_err, Result};
 use crate::linalg::Mat;
 

@@ -1,0 +1,131 @@
+//! Sources of already-sparsified chunks.
+//!
+//! [`SparseChunkSource`] is the data-layer mirror of
+//! [`ChunkSource`](crate::coordinator::ChunkSource): a rewindable stream
+//! of [`SparseChunk`]s that skipped (or already paid for) the compression
+//! pass. It lives here — not in the coordinator — so that every consumer
+//! layer (estimators, K-means, the PCA operators) can stream sparsified
+//! data without depending on the pipeline orchestration. The canonical
+//! on-disk implementation is
+//! [`SparseStoreReader`](crate::store::SparseStoreReader); the in-memory
+//! one is [`SparseVecSource`].
+//!
+//! The contract every implementation upholds:
+//!
+//! * chunks are yielded in **global column order** and are contiguous
+//!   within a pass,
+//! * every chunk has the source's `(p, m)` shape,
+//! * [`reset`](SparseChunkSource::reset) restarts an identical pass —
+//!   byte-for-byte the same chunks in the same order (chunk *boundaries*
+//!   may legally differ between implementations, e.g. under different
+//!   reader memory budgets; all downstream folds are
+//!   granularity-invariant by design).
+
+use crate::error::Result;
+use crate::sparse::SparseChunk;
+
+/// Abstract source of **already-sparsified** chunks — the mirror of
+/// [`ChunkSource`](crate::coordinator::ChunkSource) for data that skipped
+/// (or already paid for) the compression pass. Consumers fold the yielded
+/// chunks into the estimators / K-means exactly as the streaming drivers
+/// do — the estimators never know whether data came from a fresh
+/// compress pass or from disk.
+pub trait SparseChunkSource: Send {
+    /// Working (possibly padded) ambient dimension of every chunk.
+    fn p(&self) -> usize;
+    /// Kept entries per sample.
+    fn m(&self) -> usize;
+    /// Total samples if known.
+    fn n_hint(&self) -> Option<usize>;
+    /// Pull the next chunk (in global column order); `None` ends the pass.
+    fn next_chunk(&mut self) -> Result<Option<SparseChunk>>;
+    /// Restart for another pass.
+    fn reset(&mut self) -> Result<()>;
+}
+
+/// In-memory [`SparseChunkSource`]: replays a vector of chunks (sorted by
+/// `start_col` on construction).
+pub struct SparseVecSource {
+    chunks: Vec<SparseChunk>,
+    p: usize,
+    m: usize,
+    pos: usize,
+}
+
+impl SparseVecSource {
+    /// Wrap chunks (must be non-empty, uniform `p`/`m`).
+    pub fn new(mut chunks: Vec<SparseChunk>) -> Result<Self> {
+        let Some(first) = chunks.first() else {
+            return crate::error::invalid("SparseVecSource: no chunks");
+        };
+        let (p, m) = (first.p(), first.m());
+        if chunks.iter().any(|c| c.p() != p || c.m() != m) {
+            return crate::error::shape_err("SparseVecSource: mixed chunk shapes");
+        }
+        chunks.sort_by_key(|c| c.start_col());
+        Ok(SparseVecSource { chunks, p, m, pos: 0 })
+    }
+}
+
+impl SparseChunkSource for SparseVecSource {
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n_hint(&self) -> Option<usize> {
+        Some(self.chunks.iter().map(|c| c.n()).sum())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<SparseChunk>> {
+        if self.pos >= self.chunks.len() {
+            return Ok(None);
+        }
+        let chunk = self.chunks[self.pos].clone();
+        self.pos += 1;
+        Ok(Some(chunk))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.pos = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(start: usize, n: usize) -> SparseChunk {
+        let indices: Vec<u32> = (0..n).flat_map(|_| [0u32, 2]).collect();
+        let values: Vec<f64> = (0..2 * n).map(|v| v as f64).collect();
+        SparseChunk::from_raw(4, 2, n, indices, values, start).unwrap()
+    }
+
+    #[test]
+    fn vec_source_replays_in_order() {
+        // construct out of order; the source must sort by start_col
+        let mut src = SparseVecSource::new(vec![chunk(3, 2), chunk(0, 3)]).unwrap();
+        assert_eq!(src.p(), 4);
+        assert_eq!(src.m(), 2);
+        assert_eq!(src.n_hint(), Some(5));
+        let mut starts = Vec::new();
+        while let Some(c) = src.next_chunk().unwrap() {
+            starts.push(c.start_col());
+        }
+        assert_eq!(starts, vec![0, 3]);
+        src.reset().unwrap();
+        assert_eq!(src.next_chunk().unwrap().unwrap().start_col(), 0);
+    }
+
+    #[test]
+    fn vec_source_rejects_bad_shapes() {
+        assert!(SparseVecSource::new(vec![]).is_err());
+        let odd =
+            SparseChunk::from_raw(4, 1, 1, vec![1], vec![9.0], 3).unwrap();
+        assert!(SparseVecSource::new(vec![chunk(0, 3), odd]).is_err());
+    }
+}

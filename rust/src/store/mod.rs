@@ -31,7 +31,7 @@
 //!   (in any order within the pipeline's bounded reorder window) during
 //!   a `compress_stream` pass; atomic finish.
 //! * [`SparseStoreReader`] — memory-budgeted, resumable reads;
-//!   implements [`SparseChunkSource`](crate::coordinator::SparseChunkSource)
+//!   implements [`SparseChunkSource`](crate::sparse::SparseChunkSource)
 //!   so the estimators and K-means consume stored data unchanged.
 //! * [`StoreManifest`] — the parsed manifest (shard table + the
 //!   [`SparsifyConfig`](crate::sampling::SparsifyConfig) needed to rebuild

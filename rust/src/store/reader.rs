@@ -1,7 +1,7 @@
 //! Shard reader: streams a sparse store back as [`SparseChunk`]s with a
 //! configurable memory budget, per-shard checksum verification, and
 //! resume-at-any-column support. Implements
-//! [`SparseChunkSource`](crate::coordinator::SparseChunkSource), so every
+//! [`SparseChunkSource`](crate::sparse::SparseChunkSource), so every
 //! estimator and the K-means drivers consume stored data exactly as they
 //! consume freshly compressed chunks.
 
@@ -9,7 +9,7 @@ use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::SparseChunkSource;
+use crate::sparse::SparseChunkSource;
 use crate::error::{corrupt, invalid, Error, Result};
 use crate::sampling::Sparsifier;
 use crate::sparse::SparseChunk;

@@ -9,6 +9,7 @@
 //! slow component.
 
 /// Precomputed orthonormal DCT-II plan for dimension `p`.
+#[derive(Clone)]
 pub struct DctPlan {
     p: usize,
     /// Column-major p×p orthonormal DCT matrix `C`.

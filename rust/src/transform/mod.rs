@@ -58,6 +58,7 @@ impl TransformKind {
 /// `HD` is orthonormal, so [`Ros::adjoint_inplace`] is an exact inverse of
 /// [`Ros::apply_inplace`]; center estimates computed in the preconditioned
 /// domain are unmixed with the adjoint (paper Eq. 32).
+#[derive(Clone)]
 pub struct Ros {
     kind: TransformKind,
     signs: Vec<f64>,

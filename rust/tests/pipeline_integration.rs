@@ -1,15 +1,14 @@
 //! Cross-module integration: streaming pipeline ↔ estimators ↔ K-means ↔
 //! out-of-core store, plus end-to-end statistical sanity (no artifacts
-//! required — pure native engine).
+//! required — pure native engine). Every fit routes through the
+//! `FitPlan` session API.
 
 use pds::coordinator::{
-    run_compress_to_store, run_pca_krylov_from_store, run_pca_krylov_stream, run_pca_stream,
-    run_sparsified_kmeans_stream, run_two_pass_stream, ChunkSource, MatSource, StoreSource,
-    StreamConfig,
+    compress_stream, ChunkSource, FitPlan, MatSource, Solver, StoreSource, StreamConfig,
 };
 use pds::data::{digits, ChunkStore, ChunkStoreReader, DigitConfig, DigitStream};
 use pds::estimators::{HkAccumulator, SparseMeanEstimator};
-use pds::kmeans::{KmeansOpts, NativeAssigner};
+use pds::kmeans::KmeansOpts;
 use pds::metrics::clustering_accuracy;
 use pds::pca::{explained_variance, recovered_components};
 use pds::rng::Pcg64;
@@ -23,21 +22,21 @@ fn digits_cluster_via_streaming_pipeline() {
     let d = digits(2000, DigitConfig { seed: 3, ..Default::default() });
     let scfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 9 };
     let mut src = MatSource::new(&d.data, 256);
-    let (model, report) = run_sparsified_kmeans_stream(
-        &mut src,
-        scfg,
-        3,
-        KmeansOpts { n_init: 8, ..Default::default() },
-        &NativeAssigner,
-        StreamConfig { workers: 2, ..Default::default() },
-        true,
-    )
-    .unwrap();
+    let report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(3)
+        .kmeans_opts(KmeansOpts { n_init: 8, ..Default::default() })
+        .stream_config(StreamConfig { workers: 2, ..Default::default() })
+        .run()
+        .unwrap();
+    let model = report.kmeans_model().expect("kmeans plan");
     let acc = clustering_accuracy(&model.result.assign, &d.labels, 3);
     assert!(acc > 0.85, "digit accuracy at gamma=0.05: {acc}");
     assert_eq!(report.n, 2000);
     // centers live in the original 784-dim space (padding dropped)
     assert_eq!(model.result.centers.rows(), 784);
+    // one Eq. 43 bound per Lloyd iteration
+    assert_eq!(report.center_bound.len(), report.iterations);
 }
 
 #[test]
@@ -58,50 +57,55 @@ fn out_of_core_roundtrip_matches_in_memory() {
     let opts = KmeansOpts { n_init: 3, ..Default::default() };
 
     let mut mem_src = MatSource::new(&d.data, 128);
-    let (mem, _) = run_sparsified_kmeans_stream(
-        &mut mem_src, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
-    )
-    .unwrap();
+    let mem = FitPlan::kmeans()
+        .stream(&mut mem_src, scfg)
+        .k(3)
+        .kmeans_opts(opts)
+        .run()
+        .unwrap();
 
     // f32 storage introduces tiny value differences; the *structure* of
     // the clustering must survive the disk roundtrip.
     let mut disk_src = StoreSource::new(ChunkStoreReader::open(&path).unwrap());
-    let (disk, report) = run_sparsified_kmeans_stream(
-        &mut disk_src, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
-    )
-    .unwrap();
+    let disk = FitPlan::kmeans()
+        .stream(&mut disk_src, scfg)
+        .k(3)
+        .kmeans_opts(opts)
+        .run()
+        .unwrap();
     std::fs::remove_file(&path).ok();
-    assert_eq!(report.n, 400);
-    let agree = mem
-        .result
-        .assign
-        .iter()
-        .zip(&disk.result.assign)
-        .filter(|(a, b)| a == b)
-        .count();
-    let frac = agree as f64 / 400.0;
+    assert_eq!(disk.n, 400);
+    let mem_assign = &mem.kmeans_model().unwrap().result.assign;
+    let disk_assign = &disk.kmeans_model().unwrap().result.assign;
     // identical up to label permutation; compare via accuracy metric
-    let cross = clustering_accuracy(&mem.result.assign, &disk.result.assign, 3);
-    assert!(cross > 0.99, "disk vs memory clustering agreement {cross} (raw {frac})");
+    let cross = clustering_accuracy(mem_assign, disk_assign, 3);
+    assert!(cross > 0.99, "disk vs memory clustering agreement {cross}");
 }
 
 #[test]
-fn two_pass_stream_beats_one_pass_on_noisy_digits() {
+fn two_pass_plan_beats_one_pass_on_noisy_digits() {
     let d = digits(1200, DigitConfig { seed: 7, noise: 0.25, ..Default::default() });
     let scfg = SparsifyConfig { gamma: 0.02, transform: TransformKind::Hadamard, seed: 13 };
     let opts = KmeansOpts { n_init: 3, ..Default::default() };
     let mut src = MatSource::new(&d.data, 256);
-    let (one, _) = run_sparsified_kmeans_stream(
-        &mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
-    )
-    .unwrap();
+    let one = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(3)
+        .kmeans_opts(opts)
+        .run()
+        .unwrap();
     src.reset().unwrap();
-    let (two, report) =
-        run_two_pass_stream(&mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default())
-            .unwrap();
-    assert_eq!(report.passes, 2);
-    let a1 = clustering_accuracy(&one.result.assign, &d.labels, 3);
-    let a2 = clustering_accuracy(&two.assign, &d.labels, 3);
+    let two = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(3)
+        .kmeans_opts(opts)
+        .two_pass(true)
+        .run()
+        .unwrap();
+    assert_eq!(two.raw_passes, 2);
+    assert!(two.timer.get("pass2") > 0.0);
+    let a1 = clustering_accuracy(&one.kmeans_model().unwrap().result.assign, &d.labels, 3);
+    let a2 = clustering_accuracy(&two.refined().expect("refinement ran").assign, &d.labels, 3);
     assert!(a2 >= a1 - 0.01, "two-pass {a2} vs one-pass {a1}");
 }
 
@@ -111,8 +115,9 @@ fn streaming_pca_mean_matches_direct_estimator() {
     let d = pds::data::spiked(64, 3000, &[6.0, 3.0], false, &mut rng);
     let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 19 };
     let mut src = MatSource::new(&d.data, 500);
-    let (pca_report, report) = run_pca_stream(&mut src, scfg, 2, StreamConfig::default()).unwrap();
+    let report = FitPlan::pca().stream(&mut src, scfg).topk(2).run().unwrap();
     assert_eq!(report.n, 3000);
+    let fit = report.pca_fit().expect("pca plan");
     // direct (single-chunk) estimator must agree exactly: same masks
     let sp = Sparsifier::new(64, scfg).unwrap();
     let chunk = sp.compress_chunk(&d.data, 0).unwrap();
@@ -121,7 +126,7 @@ fn streaming_pca_mean_matches_direct_estimator() {
     let direct_pre = pds::linalg::Mat::from_vec(sp.p(), 1, mean.estimate()).unwrap();
     let direct = sp.unmix(&direct_pre);
     for i in 0..64 {
-        assert!((pca_report.mean[i] - direct.get(i, 0)).abs() < 1e-9);
+        assert!((fit.mean[i] - direct.get(i, 0)).abs() < 1e-9);
     }
 }
 
@@ -132,20 +137,26 @@ fn both_pca_solvers_recover_the_same_digit_pcs() {
     // one-to-one with inner product >= 0.95 per component
     let d = digits(1500, DigitConfig { seed: 11, ..Default::default() });
     let scfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 17 };
-    let stream = StreamConfig::default();
     let mut src = MatSource::new(&d.data, 256);
-    let (cov, _) = run_pca_stream(&mut src, scfg, 3, stream).unwrap();
+    let cov = FitPlan::pca().stream(&mut src, scfg).topk(3).run().unwrap();
     let mut src2 = MatSource::new(&d.data, 256);
-    let (kry, report) = run_pca_krylov_stream(&mut src2, scfg, 3, stream).unwrap();
-    assert_eq!(report.passes, 1);
-    assert_eq!(kry.pca.components.rows(), 784, "components live in the original domain");
+    let kry = FitPlan::pca()
+        .stream(&mut src2, scfg)
+        .topk(3)
+        .solver(Solver::Krylov)
+        .run()
+        .unwrap();
+    assert_eq!(kry.raw_passes, 1);
+    let covf = cov.pca_fit().unwrap();
+    let kryf = kry.pca_fit().unwrap();
+    assert_eq!(kryf.pca.components.rows(), 784, "components live in the original domain");
     assert_eq!(
-        recovered_components(&kry.pca.components, &cov.pca.components, 0.95),
+        recovered_components(&kryf.pca.components, &covf.pca.components, 0.95),
         3,
         "solvers disagree on the digit PCs"
     );
     // the shared mean-estimator path is bit-identical
-    for (a, b) in kry.mean.iter().zip(&cov.mean) {
+    for (a, b) in kryf.mean.iter().zip(&covf.mean) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
 }
@@ -163,25 +174,40 @@ fn krylov_pca_from_store_matches_streaming_and_is_invariant() {
     let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
 
     let mut src = MatSource::new(&d.data, 128);
-    let (cov, _) = run_pca_stream(&mut src, scfg, 3, stream).unwrap();
+    let cov = FitPlan::pca().stream(&mut src, scfg).topk(3).stream_config(stream).run().unwrap();
 
     let dir = std::env::temp_dir().join(format!("pds_it_krylov_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     let mut src2 = MatSource::new(&d.data, 128);
-    run_compress_to_store(&mut src2, scfg, &dir, 97, stream, true).unwrap();
+    FitPlan::compress()
+        .stream(&mut src2, scfg)
+        .store_dir(&dir)
+        .shard_cols(97)
+        .stream_config(stream)
+        .run()
+        .unwrap();
 
     let c_full = d.data.syrk().scaled(1.0 / n as f64);
     let mut store = SparseStoreReader::open(&dir).unwrap();
-    let (base, report) = run_pca_krylov_from_store(&mut store, 3, 1).unwrap();
-    assert_eq!(report.passes, 0, "store-backed krylov fit reads no raw data");
-    assert_eq!(report.n, n);
-    let ev_cov = explained_variance(&cov.pca.components, &c_full);
-    let ev_kry = explained_variance(&base.pca.components, &c_full);
+    let base = FitPlan::pca()
+        .store(&mut store)
+        .topk(3)
+        .solver(Solver::Krylov)
+        .run()
+        .unwrap();
+    assert_eq!(base.raw_passes, 0, "store-backed krylov fit reads no raw data");
+    assert_eq!(base.n, n);
+    let basef = base.pca_fit().unwrap();
+    let ev_cov = explained_variance(&cov.pca_fit().unwrap().pca.components, &c_full);
+    let ev_kry = explained_variance(&basef.pca.components, &c_full);
     assert!(
         (ev_cov - ev_kry).abs() < 1e-3,
         "explained variance: covariance {ev_cov} vs krylov {ev_kry}"
     );
-    assert_eq!(recovered_components(&base.pca.components, &cov.pca.components, 0.95), 3);
+    assert_eq!(
+        recovered_components(&basef.pca.components, &cov.pca_fit().unwrap().pca.components, 0.95),
+        3
+    );
 
     // worker count and memory budget may change speed, never bits
     for (workers, budget_bytes) in [(2usize, 0usize), (4, 64 * 1024), (1, 4096)] {
@@ -189,14 +215,21 @@ fn krylov_pca_from_store_matches_streaming_and_is_invariant() {
         if budget_bytes > 0 {
             reader = reader.with_memory_budget(budget_bytes);
         }
-        let (got, rep) = run_pca_krylov_from_store(&mut reader, 3, workers).unwrap();
-        assert_eq!(rep.passes, 0);
-        for (a, b) in got
+        let got = FitPlan::pca()
+            .store(&mut reader)
+            .topk(3)
+            .solver(Solver::Krylov)
+            .workers(workers)
+            .run()
+            .unwrap();
+        assert_eq!(got.raw_passes, 0);
+        let gotf = got.pca_fit().unwrap();
+        for (a, b) in gotf
             .pca
             .components
             .as_slice()
             .iter()
-            .zip(base.pca.components.as_slice())
+            .zip(basef.pca.components.as_slice())
         {
             assert_eq!(
                 a.to_bits(),
@@ -204,14 +237,156 @@ fn krylov_pca_from_store_matches_streaming_and_is_invariant() {
                 "components, workers={workers} budget={budget_bytes}"
             );
         }
-        for (a, b) in got.pca.eigenvalues.iter().zip(&base.pca.eigenvalues) {
+        for (a, b) in gotf.pca.eigenvalues.iter().zip(&basef.pca.eigenvalues) {
             assert_eq!(a.to_bits(), b.to_bits(), "eigenvalues");
         }
-        for (a, b) in got.mean.iter().zip(&base.mean) {
+        for (a, b) in gotf.mean.iter().zip(&basef.mean) {
             assert_eq!(a.to_bits(), b.to_bits(), "mean");
         }
     }
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_kmeans_from_store_is_bitwise_identical_out_of_core() {
+    // the PR's acceptance path: `--task kmeans --solver stream` on a
+    // store larger than the reader budget — 0 raw passes, one sparse
+    // pass per Lloyd iteration, and bitwise identical centers /
+    // assignments / objective to the in-memory path at workers {1,2,4}
+    // and across reader memory budgets.
+    let mut rng = Pcg64::seed(73);
+    let d = pds::data::gaussian_blobs(64, 1500, 4, 0.15, &mut rng);
+    let scfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 21 };
+    let opts = KmeansOpts { n_init: 2, ..Default::default() };
+    let stream = StreamConfig { workers: 2, chunk_cols: 128, ..Default::default() };
+
+    // reference: the in-memory streaming path
+    let mut src = MatSource::new(&d.data, 128);
+    let direct = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(4)
+        .kmeans_opts(opts)
+        .stream_config(stream)
+        .run()
+        .unwrap();
+    assert_eq!(direct.raw_passes, 1, "stream fit pays exactly one raw pass");
+    assert_eq!(direct.sparse_passes, 1);
+    let dm = direct.kmeans_model().unwrap();
+
+    // compress once (shard size != chunk size on purpose), then fit
+    // out-of-core with budgets far below the compressed size
+    let dir = std::env::temp_dir().join(format!("pds_it_stream_km_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut src2 = MatSource::new(&d.data, 128);
+    let creport = FitPlan::compress()
+        .stream(&mut src2, scfg)
+        .store_dir(&dir)
+        .shard_cols(190)
+        .stream_config(stream)
+        .run()
+        .unwrap();
+    let payload = creport.store_manifest().unwrap().payload_bytes();
+
+    for workers in [1usize, 2, 4] {
+        // budget 0 = whole shards; the others are a small fraction of the
+        // compressed payload, forcing many chunks per pass
+        for budget_bytes in [0usize, payload / 20, payload / 7] {
+            let mut reader = SparseStoreReader::open(&dir).unwrap();
+            if budget_bytes > 0 {
+                reader = reader.with_memory_budget(budget_bytes);
+            }
+            let got = FitPlan::kmeans()
+                .store(&mut reader)
+                .k(4)
+                .kmeans_opts(opts)
+                .solver(Solver::Stream)
+                .workers(workers)
+                .run()
+                .unwrap();
+            assert_eq!(got.raw_passes, 0, "store fit reads no raw data");
+            // one seeding + d2 pass set per restart plus one pass per
+            // Lloyd iteration — at minimum iterations many passes
+            assert!(
+                got.sparse_passes > got.iterations,
+                "sparse passes {} vs iterations {}",
+                got.sparse_passes,
+                got.iterations
+            );
+            let gm = got.kmeans_model().unwrap();
+            assert_eq!(gm.result.assign, dm.result.assign, "w={workers} b={budget_bytes}");
+            assert_eq!(
+                gm.result.objective.to_bits(),
+                dm.result.objective.to_bits(),
+                "objective, w={workers} b={budget_bytes}"
+            );
+            assert_eq!(gm.result.iterations, dm.result.iterations);
+            for (a, b) in gm
+                .result
+                .centers
+                .as_slice()
+                .iter()
+                .zip(dm.result.centers.as_slice())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "centers, w={workers} b={budget_bytes}");
+            }
+            for (a, b) in got.center_bound.iter().zip(&direct.center_bound) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bounds, w={workers} b={budget_bytes}");
+            }
+        }
+    }
+
+    // the in-memory store solver agrees too (collect + iterate)
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let inmem = FitPlan::kmeans()
+        .store(&mut reader)
+        .k(4)
+        .kmeans_opts(opts)
+        .run()
+        .unwrap();
+    assert_eq!(inmem.raw_passes, 0);
+    assert_eq!(inmem.sparse_passes, 1);
+    let im = inmem.kmeans_model().unwrap();
+    assert_eq!(im.result.assign, dm.result.assign);
+    assert_eq!(im.result.objective.to_bits(), dm.result.objective.to_bits());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn restarts_are_deterministic_across_worker_counts() {
+    // `--restarts N` contract end to end: a multi-restart plan picks the
+    // same best model for every worker count
+    let mut rng = Pcg64::seed(83);
+    let d = pds::data::gaussian_blobs(32, 900, 3, 0.4, &mut rng);
+    let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 31 };
+    let mut base_src = MatSource::new(&d.data, 128);
+    let base = FitPlan::kmeans()
+        .stream(&mut base_src, scfg)
+        .k(3)
+        .restarts(5)
+        .workers(1)
+        .run()
+        .unwrap();
+    let bm = base.kmeans_model().unwrap();
+    for workers in [2usize, 4] {
+        let mut src = MatSource::new(&d.data, 128);
+        let got = FitPlan::kmeans()
+            .stream(&mut src, scfg)
+            .k(3)
+            .restarts(5)
+            .workers(workers)
+            .run()
+            .unwrap();
+        let gm = got.kmeans_model().unwrap();
+        assert_eq!(gm.result.assign, bm.result.assign, "workers={workers}");
+        assert_eq!(
+            gm.result.objective.to_bits(),
+            bm.result.objective.to_bits(),
+            "workers={workers}"
+        );
+        for (a, b) in gm.result.centers.as_slice().iter().zip(bm.result.centers.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+        }
+    }
 }
 
 #[test]
@@ -242,10 +417,8 @@ fn hk_accumulator_over_stream_matches_theorem7_shape() {
         acc.accumulate(&c);
         Ok(())
     };
-    pds::coordinator::compress_stream(
-        &mut src, &sp, StreamConfig::default(), true, &mut fold, &mut timer,
-    )
-    .unwrap();
+    compress_stream(&mut src, &sp, StreamConfig::default(), true, &mut fold, &mut timer)
+        .unwrap();
     let dev = acc.deviation_norm();
     let bound = HkAccumulator::t_for_delta(sp.p(), sp.m(), 4000, 1e-3);
     assert!(dev <= bound, "H_k deviation {dev} exceeded Thm 7 bound {bound}");

@@ -4,7 +4,7 @@
 //!
 //! Requires `make artifacts` (skips with a clear message otherwise).
 
-use pds::coordinator::{run_sparsified_kmeans_stream, MatSource, StreamConfig};
+use pds::coordinator::{FitPlan, MatSource, StreamConfig};
 use pds::data::gaussian_blobs;
 use pds::kmeans::{KmeansOpts, NativeAssigner, SparseAssigner};
 use pds::linalg::Mat;
@@ -91,17 +91,16 @@ fn full_driver_runs_on_xla_engine() {
     let d = gaussian_blobs(512, 600, 5, 0.05, &mut rng);
     let scfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 5 };
     let mut src = MatSource::new(&d.data, 256);
-    let (model, report) = run_sparsified_kmeans_stream(
-        &mut src,
-        scfg,
-        5,
-        KmeansOpts { n_init: 2, ..Default::default() },
-        &engine,
-        StreamConfig::default(),
-        true,
-    )
-    .unwrap();
+    let report = FitPlan::kmeans()
+        .stream(&mut src, scfg)
+        .k(5)
+        .kmeans_opts(KmeansOpts { n_init: 2, ..Default::default() })
+        .assigner(&engine)
+        .stream_config(StreamConfig::default())
+        .run()
+        .unwrap();
     assert_eq!(report.engine, "xla");
+    let model = report.kmeans_model().expect("kmeans plan");
     let acc = clustering_accuracy(&model.result.assign, &d.labels, 5);
     assert!(acc > 0.9, "xla-engine clustering accuracy {acc}");
 }
