@@ -16,7 +16,7 @@
 //! covariance path's.
 
 use crate::error::{invalid, Result};
-use crate::estimators::{finish_apply, scatter_chunk, unbias_scales, ScatterDiag};
+use crate::estimators::{finish_apply, scatter_chunk, unbias_scales, weighted_scales, ScatterDiag};
 use crate::linalg::{Mat, SymOp};
 use crate::pca::Pca;
 use crate::sampling::{Sparsifier, SparsifyConfig};
@@ -62,15 +62,28 @@ pub struct SourceCovOp<'a> {
 }
 
 impl<'a> SourceCovOp<'a> {
-    /// Build the operator: one stats pass over the source (from the
-    /// start) accumulates `diag(W Wᵀ)` and the sample count.
+    /// Build the operator over a **uniform-scheme** source: one stats
+    /// pass over the source (from the start) accumulates `diag(W Wᵀ)`
+    /// and the sample count.
     pub fn new(source: &'a mut dyn SparseChunkSource, workers: usize) -> Result<Self> {
+        Self::new_with_calib(source, workers, false)
+    }
+
+    /// As [`new`](Self::new) but selecting the estimator calibration
+    /// explicitly: `weighted = true` for sources of weighted
+    /// with-replacement chunks (`sampling::Scheme::Hybrid`), where the
+    /// accumulated per-slot diagonal is the exact cross-slot correction.
+    pub fn new_with_calib(
+        source: &'a mut dyn SparseChunkSource,
+        workers: usize,
+        weighted: bool,
+    ) -> Result<Self> {
         let mut stats = ScatterDiag::new(source.p());
         source.reset()?;
         while let Some(chunk) = source.next_chunk()? {
             stats.accumulate(&chunk);
         }
-        Self::from_stats(source, &stats, workers)
+        Self::from_stats(source, &stats, workers, weighted)
     }
 
     /// Build from an already-accumulated stats pass (the drivers fold
@@ -79,6 +92,7 @@ impl<'a> SourceCovOp<'a> {
         source: &'a mut dyn SparseChunkSource,
         stats: &ScatterDiag,
         workers: usize,
+        weighted: bool,
     ) -> Result<Self> {
         let (p, m) = (source.p(), source.m());
         if m < 2 {
@@ -93,7 +107,11 @@ impl<'a> SourceCovOp<'a> {
         if stats.n() == 0 {
             return invalid("SourceCovOp: source is empty");
         }
-        let (c1, c2) = unbias_scales(p, m, stats.n());
+        let (c1, c2) = if weighted {
+            weighted_scales(m, stats.n())
+        } else {
+            unbias_scales(p, m, stats.n())
+        };
         Ok(SourceCovOp {
             source,
             p,

@@ -39,7 +39,7 @@ use crate::kmeans::{
 use crate::linalg::Mat;
 use crate::metrics::Timer;
 use crate::pca::Pca;
-use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
 use crate::sparse::{SparseChunk, SparseChunkSource};
 use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
 
@@ -160,7 +160,9 @@ pub struct FitReport {
     /// Per-iteration worst-cluster center-error bound (Eq. 43 at
     /// δ = [`CENTER_BOUND_DELTA`](crate::kmeans::CENTER_BOUND_DELTA)),
     /// copied from [`SparsifiedModel::center_bound`]; empty for PCA /
-    /// compress plans.
+    /// compress plans. The bound applies to the uniform sampling schemes
+    /// only — weighted (hybrid) fits record `NaN` per iteration, never a
+    /// number the theory does not back.
     pub center_bound: Vec<f64>,
     /// The task-specific result.
     pub outcome: FitOutcome,
@@ -252,6 +254,10 @@ pub struct FitPlan<'a> {
     scfg: Option<SparsifyConfig>,
     stream: StreamConfig,
     precondition: bool,
+    /// `Some` only when the caller set a scheme explicitly — sparse- and
+    /// store-backed plans validate it against the source's recorded
+    /// scheme instead of silently ignoring it.
+    scheme: Option<Scheme>,
     topk: usize,
     solver: Option<Solver>,
     k: Option<usize>,
@@ -275,6 +281,7 @@ impl<'a> FitPlan<'a> {
             scfg: None,
             stream: StreamConfig::default(),
             precondition: true,
+            scheme: None,
             topk: DEFAULT_TOPK,
             solver: None,
             k: None,
@@ -372,10 +379,52 @@ impl<'a> FitPlan<'a> {
     }
 
     /// Toggle the ROS preconditioning on a raw-stream compress (default
-    /// `true`; `false` is the paper's ablation arm).
+    /// `true`; `false` is the paper's ablation arm — equivalent to
+    /// [`scheme(Scheme::Uniform)`](Self::scheme)).
     pub fn precondition(mut self, on: bool) -> Self {
         self.precondition = on;
         self
+    }
+
+    /// Element-sampling scheme (default [`Scheme::Precond`], the paper's
+    /// operator — byte-identical to not calling this).
+    /// [`Scheme::Hybrid`] selects the weighted hybrid-(ℓ1,ℓ2) comparison
+    /// scheme; the plan then wires the weighted estimator calibration
+    /// automatically. Sparse-source and store-backed plans take their
+    /// scheme from the sparsifier / manifest; setting one explicitly
+    /// there asserts it — a mismatch fails the plan instead of silently
+    /// fitting the wrong comparison arm.
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = Some(scheme);
+        self
+    }
+
+    /// The effective selection law of a raw-stream plan: the configured
+    /// scheme, downgraded from `Precond` to `Uniform` when the legacy
+    /// [`precondition(false)`](Self::precondition) ablation toggle is
+    /// set.
+    fn effective_scheme(&self) -> Scheme {
+        let scheme = self.scheme.unwrap_or(Scheme::Precond);
+        if !self.precondition && scheme == Scheme::Precond {
+            Scheme::Uniform
+        } else {
+            scheme
+        }
+    }
+
+    /// Sparse-/store-backed plans: an explicitly requested scheme must
+    /// match the source's recorded one.
+    fn check_requested_scheme(requested: Option<Scheme>, actual: Scheme) -> Result<()> {
+        if let Some(req) = requested {
+            if req != actual {
+                return invalid(format!(
+                    "FitPlan: .scheme({}) does not match this source's recorded scheme ({})",
+                    req.name(),
+                    actual.name()
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Number of principal components (PCA plans; default
@@ -495,24 +544,27 @@ impl<'a> FitPlan<'a> {
         let solver = self.resolve_solver()?;
         let topk = self.topk;
         let workers = self.stream.workers;
+        let scheme = self.effective_scheme();
         match Self::take_source(&mut self.source)? {
             SourceKind::Raw(src) => {
                 let Some(scfg) = self.scfg else {
                     return invalid("FitPlan: raw stream needs a SparsifyConfig");
                 };
                 match solver {
-                    Solver::Covariance => {
-                        pca_cov_stream(src, scfg, topk, self.stream, self.precondition)
-                    }
-                    _ => pca_krylov_stream(src, scfg, topk, self.stream, self.precondition),
+                    Solver::Covariance => pca_cov_stream(src, scfg, scheme, topk, self.stream),
+                    _ => pca_krylov_stream(src, scfg, scheme, topk, self.stream),
                 }
             }
-            SourceKind::Sparse { src, sp, preconditioned } => match solver {
-                Solver::Covariance => pca_cov_sparse(src, &sp, topk, workers, preconditioned),
-                _ => pca_krylov_sparse(src, &sp, topk, workers, preconditioned),
-            },
+            SourceKind::Sparse { src, sp, preconditioned } => {
+                Self::check_requested_scheme(self.scheme, sp.scheme())?;
+                match solver {
+                    Solver::Covariance => pca_cov_sparse(src, &sp, topk, workers, preconditioned),
+                    _ => pca_krylov_sparse(src, &sp, topk, workers, preconditioned),
+                }
+            }
             SourceKind::Store(reader) => {
                 let sp = reader.sparsifier()?;
+                Self::check_requested_scheme(self.scheme, sp.scheme())?;
                 let preconditioned = reader.manifest().preconditioned;
                 match solver {
                     Solver::Covariance => {
@@ -537,6 +589,7 @@ impl<'a> FitPlan<'a> {
         };
         let workers = self.stream.workers;
         let opts = self.opts;
+        let scheme = self.effective_scheme();
         let refine = self.refine.take();
         let report = match Self::take_source(&mut self.source)? {
             SourceKind::Raw(src) => {
@@ -555,17 +608,17 @@ impl<'a> FitPlan<'a> {
                 let mut report = kmeans_inmemory_stream(
                     &mut *src,
                     scfg,
+                    scheme,
                     k,
                     opts,
                     assigner,
                     self.stream,
-                    self.precondition,
                 )?;
                 if self.two_pass {
-                    if !self.precondition {
+                    if !scheme.preconditions() {
                         return invalid(
                             "FitPlan: the Algorithm 2 refinement needs preconditioned \
-                             pass-1 centers (precondition(true))",
+                             pass-1 centers (precondition(true) with the precond scheme)",
                         );
                     }
                     // Algorithm 2 revisits the raw data: an explicit
@@ -579,6 +632,7 @@ impl<'a> FitPlan<'a> {
                 report
             }
             SourceKind::Sparse { src, sp, preconditioned } => {
+                Self::check_requested_scheme(self.scheme, sp.scheme())?;
                 let mut report = kmeans_from_sparse(
                     src,
                     &sp,
@@ -608,6 +662,7 @@ impl<'a> FitPlan<'a> {
             }
             SourceKind::Store(reader) => {
                 let sp = reader.sparsifier()?;
+                Self::check_requested_scheme(self.scheme, sp.scheme())?;
                 let preconditioned = reader.manifest().preconditioned;
                 let mut report = kmeans_from_sparse(
                     reader,
@@ -654,12 +709,14 @@ impl<'a> FitPlan<'a> {
         let Some(scfg) = self.scfg else {
             return invalid("FitPlan: raw stream needs a SparsifyConfig");
         };
-        let sp = Sparsifier::new(src.p(), scfg)?;
+        let scheme = self.effective_scheme();
+        let precondition = scheme.preconditions();
+        let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
         let mut timer = Timer::new();
         let mut writer =
-            SparseStoreWriter::create(&dir, &sp, scfg, self.precondition, self.shard_cols)?;
+            SparseStoreWriter::create(&dir, &sp, scfg, precondition, self.shard_cols)?;
         let mut sink = |c: SparseChunk| writer.append(c);
-        let n = compress_stream(src, &sp, self.stream, self.precondition, &mut sink, &mut timer)?;
+        let n = compress_stream(src, &sp, self.stream, precondition, &mut sink, &mut timer)?;
         let manifest = timer.time("store", || writer.finish())?;
         Ok(FitReport {
             timer,
@@ -774,13 +831,14 @@ fn check_source_shape(source: &dyn SparseChunkSource, sp: &Sparsifier) -> Result
 fn kmeans_inmemory_stream(
     src: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
+    scheme: Scheme,
     k: usize,
     opts: KmeansOpts,
     assigner: &dyn SparseAssigner,
     stream: StreamConfig,
-    precondition: bool,
 ) -> Result<FitReport> {
-    let sp = Sparsifier::new(src.p(), scfg)?;
+    let precondition = scheme.preconditions();
+    let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
     let mut timer = Timer::new();
     let (chunks, n) = compress_collect(src, &sp, stream, precondition, &mut timer)?;
     if n == 0 {
@@ -930,21 +988,43 @@ fn refine_into_report(
     Ok(())
 }
 
+/// Mean estimator matched to the sparsifier's scheme calibration
+/// (weighted schemes store unbiased sketches — scale 1, not p/m).
+fn mean_estimator(sp: &Sparsifier) -> SparseMeanEstimator {
+    let est = SparseMeanEstimator::new(sp.p(), sp.m());
+    if sp.weighted() {
+        est.with_scale(1.0)
+    } else {
+        est
+    }
+}
+
+/// Covariance estimator matched to the sparsifier's scheme calibration.
+fn cov_estimator(sp: &Sparsifier, workers: usize) -> CovarianceEstimator {
+    let est = if sp.weighted() {
+        CovarianceEstimator::new_weighted(sp.p(), sp.m())
+    } else {
+        CovarianceEstimator::new(sp.p(), sp.m())
+    };
+    est.with_workers(workers)
+}
+
 /// One-pass streaming PCA, covariance solver: fold the Thm 4/6 estimators
 /// in global column order during the compress, eigendecompose, unmix.
 fn pca_cov_stream(
     src: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
+    scheme: Scheme,
     topk: usize,
     stream: StreamConfig,
-    precondition: bool,
 ) -> Result<FitReport> {
-    let sp = Sparsifier::new(src.p(), scfg)?;
+    let precondition = scheme.preconditions();
+    let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
     let mut timer = Timer::new();
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut mean_est = mean_estimator(&sp);
     // the covariance scatter is the PCA hot path; give it the same pool
     // width as the compress stage (bitwise invariant to the worker count)
-    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(stream.workers);
+    let mut cov_est = cov_estimator(&sp, stream.workers);
     // Racing workers deliver chunks out of stream order; f64 accumulation
     // is order-sensitive, so reorder through a pending map (bounded by
     // the pipeline's in-flight cap) and fold in global column order —
@@ -999,21 +1079,26 @@ fn pca_cov_stream(
 fn pca_krylov_stream(
     src: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
+    scheme: Scheme,
     topk: usize,
     stream: StreamConfig,
-    precondition: bool,
 ) -> Result<FitReport> {
-    let sp = Sparsifier::new(src.p(), scfg)?;
+    let precondition = scheme.preconditions();
+    let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
     let mut timer = Timer::new();
     let (chunks, n) = compress_collect(src, &sp, stream, precondition, &mut timer)?;
     if n == 0 {
         return invalid("FitPlan: stream is empty");
     }
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut mean_est = mean_estimator(&sp);
     for c in &chunks {
         mean_est.accumulate(c);
     }
-    let mut op = SparseCovOp::new(&chunks, stream.workers)?;
+    let mut op = if sp.weighted() {
+        SparseCovOp::new_weighted(&chunks, stream.workers)?
+    } else {
+        SparseCovOp::new(&chunks, stream.workers)?
+    };
     let pca_pre = timer.time("eig", || {
         Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, scfg.seed)
     })?;
@@ -1045,8 +1130,8 @@ fn pca_cov_sparse(
 ) -> Result<FitReport> {
     check_source_shape(source, sp)?;
     let mut timer = Timer::new();
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
-    let mut cov_est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(workers.max(1));
+    let mut mean_est = mean_estimator(sp);
+    let mut cov_est = cov_estimator(sp, workers.max(1));
     let mut n = 0usize;
     loop {
         let t0 = Instant::now();
@@ -1095,7 +1180,7 @@ fn pca_krylov_sparse(
     check_source_shape(source, sp)?;
     let mut timer = Timer::new();
     let t0 = Instant::now();
-    let mut mean_est = SparseMeanEstimator::new(sp.p(), sp.m());
+    let mut mean_est = mean_estimator(sp);
     let mut stats = ScatterDiag::new(sp.p());
     source.reset()?;
     while let Some(chunk) = source.next_chunk()? {
@@ -1107,7 +1192,7 @@ fn pca_krylov_sparse(
     if n == 0 {
         return invalid("FitPlan: source is empty");
     }
-    let mut op = SourceCovOp::from_stats(source, &stats, workers)?;
+    let mut op = SourceCovOp::from_stats(source, &stats, workers, sp.weighted())?;
     let pca_pre = timer.time("eig", || {
         Pca::from_sparse_operator(&mut op, topk, DEFAULT_KRYLOV_ITERS, sp.seed())
     })?;
@@ -1241,6 +1326,118 @@ mod tests {
             .run()
             .unwrap();
         assert_eq!(report2.refined().expect("refinement ran").assign, refined.assign);
+    }
+
+    #[test]
+    fn explicit_precond_scheme_is_byte_identical_to_the_default_plan() {
+        // `--scheme precond` must reproduce current behavior bit for bit
+        let mut rng = Pcg64::seed(15);
+        let d = crate::data::spiked(32, 400, &[6.0, 3.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 2 };
+        let mut src_a = MatSource::new(&d.data, 128);
+        let base = FitPlan::pca().stream(&mut src_a, scfg).topk(2).run().unwrap();
+        let mut src_b = MatSource::new(&d.data, 128);
+        let explicit = FitPlan::pca()
+            .stream(&mut src_b, scfg)
+            .scheme(Scheme::Precond)
+            .topk(2)
+            .run()
+            .unwrap();
+        let (a, b) = (base.pca_fit().unwrap(), explicit.pca_fit().unwrap());
+        for (x, y) in a.mean.iter().zip(&b.mean) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.pca.components.as_slice().iter().zip(b.pca.components.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // and the legacy precondition(false) toggle equals the uniform
+        // scheme, also bitwise
+        let mut src_c = MatSource::new(&d.data, 128);
+        let ablation =
+            FitPlan::pca().stream(&mut src_c, scfg).precondition(false).topk(2).run().unwrap();
+        let mut src_d = MatSource::new(&d.data, 128);
+        let uniform = FitPlan::pca()
+            .stream(&mut src_d, scfg)
+            .scheme(Scheme::Uniform)
+            .topk(2)
+            .run()
+            .unwrap();
+        let (c, u) = (ablation.pca_fit().unwrap(), uniform.pca_fit().unwrap());
+        for (x, y) in c.mean.iter().zip(&u.mean) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in c.pca.components.as_slice().iter().zip(u.pca.components.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn hybrid_scheme_plans_run_both_tasks_and_solvers() {
+        // the hybrid comparison arm must flow end to end: weighted mean
+        // calibration (scale 1), weighted covariance calibration on both
+        // PCA solvers, and a K-means fit on the weighted sketch
+        let mut rng = Pcg64::seed(27);
+        let d = crate::data::spiked(32, 600, &[9.0, 5.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 8 };
+        let mut src = MatSource::new(&d.data, 128);
+        let cov = FitPlan::pca()
+            .stream(&mut src, scfg)
+            .scheme(Scheme::Hybrid)
+            .topk(2)
+            .run()
+            .unwrap();
+        let covf = cov.pca_fit().unwrap();
+        assert!(covf.mean.iter().all(|v| v.is_finite()));
+        // hybrid samples the raw domain, so the mean estimate must be
+        // close to the true sample mean (scale-1 calibration; p/m here
+        // is 2.5x, so a mis-calibration would be far outside tolerance)
+        let truth = d.data.col_mean();
+        let scale = truth.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1.0);
+        for (est, tru) in covf.mean.iter().zip(&truth) {
+            assert!((est - tru).abs() < 0.5 * scale, "mean {est} vs {tru}");
+        }
+        let mut src2 = MatSource::new(&d.data, 128);
+        let kry = FitPlan::pca()
+            .stream(&mut src2, scfg)
+            .scheme(Scheme::Hybrid)
+            .topk(2)
+            .solver(Solver::Krylov)
+            .run()
+            .unwrap();
+        let kryf = kry.pca_fit().unwrap();
+        // both solvers apply the same weighted estimate; with a strong
+        // planted spike they agree on the leading subspace
+        assert_eq!(
+            crate::pca::recovered_components(&kryf.pca.components, &covf.pca.components, 0.9),
+            2
+        );
+        // K-means on the weighted sketch runs and labels every sample
+        let bl = gaussian_blobs(32, 300, 3, 0.05, &mut Pcg64::seed(5));
+        let mut src3 = MatSource::new(&bl.data, 128);
+        let km = FitPlan::kmeans()
+            .stream(&mut src3, scfg)
+            .scheme(Scheme::Hybrid)
+            .k(3)
+            .restarts(2)
+            .run()
+            .unwrap();
+        let model = km.kmeans_model().unwrap();
+        assert_eq!(model.result.assign.len(), 300);
+        assert!(model.result.centers.as_slice().iter().all(|v| v.is_finite()));
+        // the Eq. 43 bound is uniform-scheme theory: hybrid fits must
+        // record NaN (one per iteration), not a fake guarantee
+        assert_eq!(km.center_bound.len(), km.iterations);
+        assert!(km.center_bound.iter().all(|b| b.is_nan()));
+        // hybrid + two-pass refinement is rejected (needs preconditioned
+        // pass-1 centers)
+        let mut src4 = MatSource::new(&bl.data, 128);
+        let err = FitPlan::kmeans()
+            .stream(&mut src4, scfg)
+            .scheme(Scheme::Hybrid)
+            .k(3)
+            .two_pass(true)
+            .run();
+        assert!(err.is_err());
     }
 
     #[test]

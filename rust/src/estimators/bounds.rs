@@ -5,15 +5,29 @@
 use crate::linalg::Mat;
 
 /// `τ(m, p) = max(p/m − 1, 1)` — Eq. (9).
+///
+/// Panics (rather than silently producing a non-finite bound that
+/// propagates into reports) when `m = 0`.
 pub fn tau(m: usize, p: usize) -> f64 {
+    assert!(m > 0, "tau: m must be positive (division by m)");
     (p as f64 / m as f64 - 1.0).max(1.0)
 }
 
 /// Invert a (matrix) Bernstein tail `δ = prefactor · exp(−t²/2 / (σ² + L t / 3))`
 /// for `t` at a given failure probability: with `lf = ln(prefactor/δ)`,
 /// `t = L·lf/3 + sqrt((L·lf/3)² + 2 σ² lf)`.
+///
+/// Requires `delta > 0` and `prefactor > 0` (asserted). When
+/// `delta ≥ prefactor` the tail constraint is vacuous — any `t ≥ 0`
+/// satisfies it — so `lf` clamps at 0 and the function returns the
+/// degenerate (but correct) bound `t = 0`; callers that treat the return
+/// value as a meaningful error radius should keep `delta < prefactor`.
 pub fn bernstein_invert(sigma2: f64, l: f64, prefactor: f64, delta: f64) -> f64 {
-    assert!(delta > 0.0 && prefactor > 0.0);
+    assert!(
+        delta > 0.0 && prefactor > 0.0,
+        "bernstein_invert: delta and prefactor must be positive (got delta={delta}, \
+         prefactor={prefactor})"
+    );
     let lf = (prefactor / delta).ln().max(0.0);
     let a = l * lf / 3.0;
     a + (a * a + 2.0 * sigma2 * lf).sqrt()
@@ -34,6 +48,7 @@ pub fn bernstein_invert(sigma2: f64, l: f64, prefactor: f64, delta: f64) -> f64 
 /// [`bernstein_invert`].
 pub fn center_error_bound(p: usize, m: usize, n_k: usize, delta: f64) -> f64 {
     assert!(n_k > 0, "center_error_bound needs a non-empty cluster");
+    assert!(m > 0, "center_error_bound: m must be positive (division by m)");
     let r = p as f64 / m as f64;
     let nk = n_k as f64;
     let sigma2 = (r - 1.0) / nk;
@@ -164,6 +179,48 @@ mod tests {
         let t = bernstein_invert(sigma2, l, pref, delta);
         let back = pref * (-(t * t) / 2.0 / (sigma2 + l * t / 3.0)).exp();
         assert!((back - delta).abs() / delta < 1e-9, "back={back}");
+    }
+
+    #[test]
+    fn bernstein_invert_vacuous_tail_returns_zero() {
+        // documented degenerate case: delta >= prefactor makes the tail
+        // constraint vacuous and the inverted bound collapses to t = 0
+        assert_eq!(bernstein_invert(0.3, 0.05, 1.0, 1.0), 0.0);
+        assert_eq!(bernstein_invert(0.3, 0.05, 1.0, 2.0), 0.0);
+        // just inside the meaningful regime the bound is positive
+        assert!(bernstein_invert(0.3, 0.05, 1.0, 0.999) > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "delta and prefactor must be positive")]
+    fn bernstein_invert_rejects_nonpositive_delta() {
+        bernstein_invert(0.3, 0.05, 1.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "m must be positive")]
+    fn tau_rejects_zero_m() {
+        tau(0, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "m must be positive")]
+    fn center_error_bound_rejects_zero_m() {
+        center_error_bound(64, 0, 10, 1e-2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty cluster")]
+    fn center_error_bound_rejects_empty_cluster() {
+        center_error_bound(64, 8, 0, 1e-2);
+    }
+
+    #[test]
+    fn center_error_bound_is_finite_and_monotone_in_cluster_size() {
+        let small = center_error_bound(512, 26, 10, 1e-2);
+        let large = center_error_bound(512, 26, 10_000, 1e-2);
+        assert!(small.is_finite() && large.is_finite());
+        assert!(large < small, "more members must tighten the bound");
     }
 
     #[test]

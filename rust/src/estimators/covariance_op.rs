@@ -37,6 +37,11 @@ use crate::sparse::SparseChunk;
 /// count — the only whole-pass statistics the implicit operator needs.
 /// Accumulation is serial in sample order, so the result is independent
 /// of chunk boundaries.
+///
+/// The sum runs over *slots*, so on weighted with-replacement chunks
+/// (`sampling::Scheme::Hybrid`, duplicate indices allowed) it yields the
+/// per-slot squares `S` — exactly the diagonal correction the weighted
+/// covariance calibration needs (see [`SparseCovOp::new_weighted`]).
 #[derive(Clone, Debug)]
 pub struct ScatterDiag {
     diag: Vec<f64>,
@@ -72,13 +77,27 @@ impl ScatterDiag {
 }
 
 /// The Eq. 19/21 scale pair `(c₁, c₂)`: `Ĉ_n = c₁·G − c₂·diag(G)` for the
-/// raw scatter `G = W Wᵀ`.
+/// raw scatter `G = W Wᵀ` under **uniform** (without-replacement)
+/// sampling.
 pub(crate) fn unbias_scales(p: usize, m: usize, n: usize) -> (f64, f64) {
     debug_assert!(m >= 2 && n > 0);
     let (pf, mf) = (p as f64, m as f64);
     let c1 = pf * (pf - 1.0) / (mf * (mf - 1.0)) / n as f64;
     let c2 = c1 * (pf - mf) / (pf - 1.0);
     (c1, c2)
+}
+
+/// The scale pair for **weighted with-replacement** schemes
+/// (`sampling::Scheme::Hybrid`): with `S = diag(ΣΣ u²)` the per-slot
+/// squares (exactly what [`ScatterDiag`] accumulates over weighted
+/// chunks), `Ĉ = c·(G − S)` with `c = m/((m−1)·n)` is exactly unbiased —
+/// both constants of the shared `c₁·G − c₂·diag` kernel collapse to `c`.
+/// See `sampling::scheme` for the derivation.
+pub(crate) fn weighted_scales(m: usize, n: usize) -> (f64, f64) {
+    debug_assert!(m >= 2 && n > 0);
+    let mf = m as f64;
+    let c = mf / (mf - 1.0) / n as f64;
+    (c, c)
 }
 
 /// Below this many columns the fork overhead beats the scatter work;
@@ -212,9 +231,23 @@ pub struct SparseCovOp<'a> {
 }
 
 impl<'a> SparseCovOp<'a> {
-    /// Build the operator over `chunks` with a fork/join width of
-    /// `workers` per block product (any width yields identical bits).
+    /// Build the operator over **uniform-scheme** chunks with a fork/join
+    /// width of `workers` per block product (any width yields identical
+    /// bits).
     pub fn new(chunks: &'a [SparseChunk], workers: usize) -> Result<Self> {
+        Self::build(chunks, workers, false)
+    }
+
+    /// Build the operator over **weighted with-replacement** chunks
+    /// (`sampling::Scheme::Hybrid`): same kernels, the weighted
+    /// `c₁ = c₂ = m/((m−1)·n)` calibration — the accumulated per-slot
+    /// diagonal *is* the correction term, so `apply` evaluates the
+    /// exactly unbiased cross-slot estimate.
+    pub fn new_weighted(chunks: &'a [SparseChunk], workers: usize) -> Result<Self> {
+        Self::build(chunks, workers, true)
+    }
+
+    fn build(chunks: &'a [SparseChunk], workers: usize, weighted: bool) -> Result<Self> {
         let Some(first) = chunks.first() else {
             return invalid("SparseCovOp: no chunks");
         };
@@ -232,7 +265,11 @@ impl<'a> SparseCovOp<'a> {
         if stats.n() == 0 {
             return invalid("SparseCovOp: no samples");
         }
-        let (c1, c2) = unbias_scales(p, m, stats.n());
+        let (c1, c2) = if weighted {
+            weighted_scales(m, stats.n())
+        } else {
+            unbias_scales(p, m, stats.n())
+        };
         let diag = stats.diag().to_vec();
         Ok(SparseCovOp { chunks, p, c1, c2, diag, workers: workers.max(1) })
     }
@@ -343,6 +380,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn weighted_apply_matches_dense_weighted_estimate() {
+        // hybrid (weighted, duplicate-slot) chunks: the implicit operator
+        // with the weighted calibration must act exactly like the dense
+        // weighted estimator's materialized matrix
+        use crate::rng::Pcg64;
+        use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
+        use crate::transform::TransformKind;
+        forall("weighted_cov_op_vs_dense", 10, |g| {
+            let p = 1usize << g.int(3, 5); // 8..32, pow2 so p_work == p
+            let n = g.int(2, 40) as usize;
+            let b = g.int(1, 5) as usize;
+            let seed = g.int(0, 1 << 40) as u64;
+            let cfg = SparsifyConfig {
+                gamma: g.float(0.2, 0.8),
+                transform: TransformKind::Hadamard,
+                seed,
+            };
+            let sp = Sparsifier::with_scheme(p, cfg, Scheme::Hybrid).unwrap();
+            let mut rng = Pcg64::seed(seed ^ 0x77);
+            let x = crate::linalg::Mat::from_fn(p, n, |_, _| rng.normal());
+            let chunk = sp.compress_chunk(&x, 0).unwrap();
+            chunk.validate_weighted().unwrap();
+            let block = randmat(p, b, seed ^ 0x1234);
+
+            let mut est = CovarianceEstimator::new_weighted(p, sp.m());
+            est.accumulate(&chunk);
+            let want = est.estimate().matmul(&block);
+
+            let chunks = [chunk];
+            let mut op = SparseCovOp::new_weighted(&chunks, 1).unwrap();
+            let got = op.apply(&block).unwrap();
+            let scale = want.max_abs().max(1.0);
+            assert!(
+                got.sub(&want).max_abs() / scale < 1e-9,
+                "case {}: |op - dense| = {}",
+                g.case,
+                got.sub(&want).max_abs()
+            );
+        });
     }
 
     #[test]

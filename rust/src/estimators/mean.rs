@@ -13,12 +13,26 @@ pub struct SparseMeanEstimator {
     m: usize,
     sum: Vec<f64>,
     n: usize,
+    /// Scheme-supplied override of the Eq. 8 `p/m` rescale. `None` keeps
+    /// the uniform-scheme default; weighted schemes
+    /// (`sampling::Scheme::Hybrid`) store inverse-probability-scaled
+    /// slots whose scatter-add is already an unbiased sketch, so they
+    /// pass `Some(1.0)`.
+    scale: Option<f64>,
 }
 
 impl SparseMeanEstimator {
-    /// Fresh estimator for chunks of shape `(p, m)`.
+    /// Fresh estimator for chunks of shape `(p, m)` from a uniform
+    /// sampling scheme (the Eq. 8 `p/m` rescale).
     pub fn new(p: usize, m: usize) -> Self {
-        SparseMeanEstimator { p, m, sum: vec![0.0; p], n: 0 }
+        SparseMeanEstimator { p, m, sum: vec![0.0; p], n: 0, scale: None }
+    }
+
+    /// Override the per-sum rescale (before the `1/n`); weighted schemes
+    /// pass `1.0`.
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        self.scale = Some(scale);
+        self
     }
 
     /// Fold one sparsified chunk into the running sums.
@@ -38,17 +52,25 @@ impl SparseMeanEstimator {
         self.n
     }
 
-    /// The estimate `x̂̄_n` (Eq. 8). Panics if no samples were accumulated.
+    /// The estimate `x̂̄_n` (Eq. 8, or the scheme-supplied rescale).
+    /// Panics if no samples were accumulated.
     pub fn estimate(&self) -> Vec<f64> {
         assert!(self.n > 0, "no samples accumulated");
-        let scale = (self.p as f64 / self.m as f64) / self.n as f64;
+        let scale = match self.scale {
+            Some(s) => s / self.n as f64,
+            None => (self.p as f64 / self.m as f64) / self.n as f64,
+        };
         self.sum.iter().map(|s| s * scale).collect()
     }
 
     /// Merge a partner accumulator (distributed / multi-worker reduction).
+    /// Both sides must use the same rescale calibration — merging a
+    /// weighted (scale-1) partition into a uniform (`p/m`) one would
+    /// silently mis-scale every sum that came from it.
     pub fn merge(&mut self, other: &SparseMeanEstimator) {
         assert_eq!(self.p, other.p);
         assert_eq!(self.m, other.m);
+        assert_eq!(self.scale, other.scale, "cannot merge mixed mean calibrations");
         for (a, b) in self.sum.iter_mut().zip(&other.sum) {
             *a += b;
         }
@@ -160,6 +182,47 @@ mod tests {
             errs.push(linf(&est.estimate(), &y.col_mean()));
         }
         assert!(errs[2] < errs[0], "errors must decrease: {errs:?}");
+    }
+
+    #[test]
+    fn hybrid_mean_is_unbiased_with_unit_scale() {
+        // Weighted (hybrid) chunks are unbiased sketches: the mean
+        // estimator with scale 1 (not p/m) must converge to the plain
+        // sample mean of the raw data. Monte Carlo over scheme seeds with
+        // a self-calibrated tolerance.
+        use crate::sampling::Scheme;
+        let (p, n, trials) = (16usize, 8usize, 6000usize);
+        let mut rng = Pcg64::seed(33);
+        let x = Mat::from_fn(p, n, |_, _| rng.normal());
+        let truth = x.col_mean();
+        let mut sum = vec![0.0f64; p];
+        let mut sumsq = vec![0.0f64; p];
+        for t in 0..trials {
+            let cfg = SparsifyConfig {
+                gamma: 0.25,
+                transform: TransformKind::Hadamard,
+                seed: 40_000 + t as u64,
+            };
+            let sp = Sparsifier::with_scheme(p, cfg, Scheme::Hybrid).unwrap();
+            let chunk = sp.compress_chunk(&x, 0).unwrap();
+            let mut est = SparseMeanEstimator::new(sp.p(), sp.m()).with_scale(1.0);
+            est.accumulate(&chunk);
+            for (j, v) in est.estimate().into_iter().enumerate() {
+                sum[j] += v;
+                sumsq[j] += v * v;
+            }
+        }
+        let tf = trials as f64;
+        for j in 0..p {
+            let mean = sum[j] / tf;
+            let var = (sumsq[j] / tf - mean * mean).max(0.0);
+            let se = (var / tf).sqrt();
+            assert!(
+                (mean - truth[j]).abs() <= 6.0 * se + 1e-9,
+                "coord {j}: mean {mean} vs truth {} (se {se})",
+                truth[j]
+            );
+        }
     }
 
     #[test]

@@ -8,6 +8,14 @@
 //! * [`SparseCovOp`] / [`ScatterDiag`] — the same Theorem 6 estimate as
 //!   an *implicit* operator (`Ĉ_n · B` straight from the chunks, no p×p
 //!   materialization) for the covariance-free block-Krylov PCA path.
+//!
+//! Every estimator exists in two calibrations selected by the sampling
+//! scheme (`sampling::Scheme`): the paper's uniform-sampling constants
+//! (default), and the weighted with-replacement calibration for
+//! `Scheme::Hybrid` chunks ([`CovarianceEstimator::new_weighted`],
+//! [`SparseCovOp::new_weighted`], mean scale `1` via
+//! [`SparseMeanEstimator::with_scale`]) — both exactly unbiased for
+//! their scheme.
 //! * [`HkAccumulator`] — Theorem 7 (conditioning of the center-update
 //!   system `H_k μ' = m_k`).
 //! * `bounds` (re-exported here) — shared Bernstein machinery +
@@ -29,4 +37,4 @@ pub use covariance_op::{ScatterDiag, SparseCovOp};
 pub use hk::HkAccumulator;
 pub use mean::{MeanBoundInputs, SparseMeanEstimator};
 
-pub(crate) use covariance_op::{finish_apply, scatter_chunk, unbias_scales};
+pub(crate) use covariance_op::{finish_apply, scatter_chunk, unbias_scales, weighted_scales};

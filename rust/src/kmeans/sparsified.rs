@@ -249,7 +249,9 @@ pub struct SparsifiedModel {
     /// ([`estimators::center_error_bound`](crate::estimators::center_error_bound)
     /// at δ = [`CENTER_BOUND_DELTA`]) given iteration `t`'s observed
     /// cluster sizes. Small values mean the masked averaging of Eq. 39
-    /// was provably close to plain class means at every step.
+    /// was provably close to plain class means at every step. The bound
+    /// is uniform-scheme theory: fits over weighted (hybrid) chunks
+    /// record `NaN` per iteration instead of an unbacked number.
     pub center_bound: Vec<f64>,
 }
 
@@ -471,16 +473,22 @@ impl SparsifiedKmeans {
             // depend on chunking or worker count
             obj = step.objective();
             // the paper's per-step guarantee: worst-cluster Eq. 43 bound
-            // at this iteration's observed cluster sizes
-            center_bound.push(
+            // at this iteration's observed cluster sizes. The bound's
+            // Bernstein constants are derived for the uniform
+            // (without-replacement, unweighted) schemes; weighted
+            // (hybrid) fits record NaN so the report never presents an
+            // invalid number as a guarantee.
+            center_bound.push(if sp.weighted() {
+                f64::NAN
+            } else {
                 step.cluster_sizes()
                     .iter()
                     .filter(|&&nk| nk > 0)
                     .map(|&nk| {
                         crate::estimators::center_error_bound(p, m, nk, CENTER_BOUND_DELTA)
                     })
-                    .fold(0.0f64, f64::max),
-            );
+                    .fold(0.0f64, f64::max)
+            });
             centers = step.solve(&centers);
             iterations = it + 1;
             if (changed as f64) <= self.opts.tol_frac * n as f64 {

@@ -16,6 +16,13 @@
 //!    matrix `R_i` per sample — the property that makes one-pass center
 //!    and covariance estimation *consistent*).
 //!
+//! The element-selection law is pluggable ([`sampling::SamplingScheme`]):
+//! besides the paper's preconditioned-uniform operator, the repo ships
+//! the no-ROS uniform ablation and the hybrid-(ℓ1,ℓ2) importance-sampling
+//! scheme of Kundu et al. (arXiv:1503.00547) — the "related sampling
+//! approaches" the paper positions against — selected per fit with
+//! `FitPlan::scheme` / `--scheme` and recorded in store manifests.
+//!
 //! Downstream consumers implemented here, matching the paper's evaluation:
 //!
 //! * [`estimators`] — unbiased sample-mean (Thm 4) and covariance (Thm 6)
@@ -90,7 +97,7 @@ pub mod prelude {
     pub use crate::kmeans::{KmeansOpts, KmeansResult, SparsifiedKmeans};
     pub use crate::linalg::Mat;
     pub use crate::rng::Pcg64;
-    pub use crate::sampling::{Sparsifier, SparsifyConfig};
+    pub use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
     pub use crate::sparse::SparseChunk;
     pub use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
     pub use crate::transform::{Ros, TransformKind};

@@ -23,7 +23,7 @@ use pds::kmeans::KmeansOpts;
 use pds::metrics::clustering_accuracy;
 use pds::rng::Pcg64;
 use pds::runtime::{artifact_dir, XlaEngine};
-use pds::sampling::SparsifyConfig;
+use pds::sampling::{Scheme, SparsifyConfig};
 use pds::store::SparseStoreReader;
 use pds::transform::TransformKind;
 
@@ -77,12 +77,14 @@ fn usage() {
          \x20 pds xp <id|all|list> [--runs N] [--full] [--gammas a,b,c] ...\n\
          \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G]\n\
          \x20\x20\x20\x20 [--restarts R] [--workers W] [--engine native|xla]\n\
+         \x20\x20\x20\x20 [--scheme precond|uniform|hybrid]\n\
          \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G] [--workers W]\n\
-         \x20\x20\x20\x20 [--solver covariance|krylov]\n\
+         \x20\x20\x20\x20 [--solver covariance|krylov] [--scheme precond|uniform|hybrid]\n\
          \x20 pds compress --store DIR [--data blobs|digits] [--n N] [--p P] [--gamma G]\n\
          \x20\x20\x20\x20 [--seed S] [--workers W] [--shard-cols C] [--no-precondition]\n\
+         \x20\x20\x20\x20 [--scheme precond|uniform|hybrid]\n\
          \x20 pds fit --store DIR [--task kmeans|pca] [--k K] [--topk K] [--workers W]\n\
-         \x20\x20\x20\x20 [--restarts R] [--budget-mb MB]\n\
+         \x20\x20\x20\x20 [--restarts R] [--budget-mb MB] [--scheme precond|uniform|hybrid]\n\
          \x20\x20\x20\x20 [--solver covariance|krylov (pca) | inmemory|stream (kmeans)]\n\
          \x20 pds store-info --store DIR\n\
          \x20 pds artifacts-check\n\
@@ -106,7 +108,9 @@ fn cmd_xp(args: &Args) -> Result<()> {
 fn print_kmeans_report(report: &FitReport) {
     let model = report.kmeans_model().expect("kmeans plan");
     println!("objective = {:.4}", model.result.objective);
-    if let Some(bound) = report.center_bound.last() {
+    // NaN bounds mark a weighted (hybrid) fit, where the Eq. 43 theory
+    // does not apply — omit the line rather than print a non-guarantee
+    if let Some(bound) = report.center_bound.last().filter(|b| b.is_finite()) {
         println!(
             "per-iteration center-error bound (Eq. 43, worst cluster, final iter): {bound:.4}"
         );
@@ -161,8 +165,10 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let scheme = scheme_arg(args)?;
     let mut plan = FitPlan::kmeans()
         .stream(&mut src, scfg)
+        .scheme(scheme)
         .k(k)
         .kmeans_opts(opts)
         .stream_config(stream);
@@ -172,8 +178,14 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let report = plan.run()?;
     let model = report.kmeans_model().expect("kmeans plan");
     println!(
-        "sparsified K-means: n={} gamma={gamma} engine={} restarts={} iterations={} converged={}",
-        report.n, report.engine, opts.n_init, model.result.iterations, model.result.converged
+        "sparsified K-means: n={} gamma={gamma} scheme={} engine={} restarts={} iterations={} \
+         converged={}",
+        report.n,
+        scheme.name(),
+        report.engine,
+        opts.n_init,
+        model.result.iterations,
+        model.result.converged
     );
     if !labels.is_empty() {
         println!(
@@ -183,6 +195,15 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     }
     print_kmeans_report(&report);
     Ok(())
+}
+
+/// The `--scheme` option (default: the paper's preconditioned-uniform
+/// operator).
+fn scheme_arg(args: &Args) -> Result<Scheme> {
+    match args.get("scheme") {
+        None => Ok(Scheme::Precond),
+        Some(name) => Scheme::parse(name),
+    }
 }
 
 /// The `--solver` option: validated against the task's solver family.
@@ -213,16 +234,19 @@ fn cmd_pca(args: &Args) -> Result<()> {
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
     let mut src = MatSource::new(&d.data, 2048);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
+    let scheme = scheme_arg(args)?;
     let report = FitPlan::pca()
         .stream(&mut src, scfg)
+        .scheme(scheme)
         .topk(topk)
         .solver(solver)
         .stream_config(stream)
         .run()?;
     let fit = report.pca_fit().expect("pca plan");
     println!(
-        "streaming PCA ({} solver): n={} gamma={gamma} passes: raw {} | sparse {}",
+        "streaming PCA ({} solver, {} scheme): n={} gamma={gamma} passes: raw {} | sparse {}",
         solver.name(),
+        scheme.name(),
         report.n,
         report.raw_passes,
         report.sparse_passes
@@ -265,6 +289,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
     let report = FitPlan::compress()
         .stream(&mut src, scfg)
+        .scheme(scheme_arg(args)?)
         .store_dir(Path::new(store_dir))
         .shard_cols(args.get_parse("shard-cols", 8192)?)
         .stream_config(stream)
@@ -272,11 +297,12 @@ fn cmd_compress(args: &Args) -> Result<()> {
         .run()?;
     let manifest = report.store_manifest().expect("compress plan");
     println!(
-        "compressed {} samples (p={} -> m={} per sample, gamma={:.4}) into {}",
+        "compressed {} samples (p={} -> m={} per sample, gamma={:.4}, scheme={}) into {}",
         manifest.n,
         manifest.p,
         manifest.m,
         manifest.m as f64 / manifest.p as f64,
+        manifest.scheme.name(),
         store_dir
     );
     println!(
@@ -314,12 +340,26 @@ fn cmd_fit(args: &Args) -> Result<()> {
         reader = reader.with_memory_budget(budget_mb * 1024 * 1024);
     }
     let m = reader.manifest();
+    // a store fit always uses the recorded scheme; an explicit --scheme
+    // is validated against it so seeded comparisons fail loudly instead
+    // of silently fitting the wrong arm
+    if let Some(requested) = args.get("scheme") {
+        let requested = Scheme::parse(requested)?;
+        if requested != m.scheme {
+            return Err(Error::Invalid(format!(
+                "--scheme {} does not match this store (recorded scheme: {})",
+                requested.name(),
+                m.scheme.name()
+            )));
+        }
+    }
     println!(
-        "store {}: n={} p={} m={} preconditioned={} ({} shards)",
+        "store {}: n={} p={} m={} scheme={} preconditioned={} ({} shards)",
         store_dir,
         m.n,
         m.p,
         m.m,
+        m.scheme.name(),
         m.preconditioned,
         m.shards.len()
     );
@@ -383,6 +423,7 @@ fn cmd_store_info(args: &Args) -> Result<()> {
     println!("  dimension p     = {} (original {})", m.p, m.p_orig);
     println!("  kept per sample = {} (gamma {:.4})", m.m, m.m as f64 / m.p as f64);
     println!("  transform       = {}, seed {}", m.transform.name(), m.seed);
+    println!("  scheme          = {}", m.scheme.name());
     println!("  preconditioned  = {}", m.preconditioned);
     println!(
         "  shards          = {} x {} cols, {:.1} MB payload",

@@ -222,6 +222,20 @@ impl XlaEngine {
     ) -> Result<()> {
         let p = chunk.p();
         let k = centers.cols();
+        // The masked-panel distance counts every coordinate once; the
+        // native assigner's slot-wise loop counts a duplicated index
+        // once per slot. Weighted (with-replacement) chunks would
+        // therefore silently break the native/XLA equivalence contract —
+        // reject them instead.
+        for i in 0..chunk.n() {
+            if chunk.col_indices(i).windows(2).any(|w| w[0] == w[1]) {
+                return Err(Error::Invalid(
+                    "xla engine: weighted (duplicate-slot) chunks are not supported; \
+                     use the native assigner for hybrid-scheme fits"
+                        .into(),
+                ));
+            }
+        }
         let b = self.batch_for("assign", p, k)?;
         let (w_cm, mask_cm) = chunk.to_dense_f32_masked();
         // centers to row-major f32

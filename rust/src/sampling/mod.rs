@@ -1,11 +1,22 @@
 //! The paper's compression operator: ROS preconditioning + uniform m-of-p
-//! element sampling, fused into a single pass over each chunk.
+//! element sampling, fused into a single pass over each chunk — plus a
+//! pluggable scheme layer that generalizes the element-selection law
+//! (uniform with/without preconditioning, hybrid-(ℓ1,ℓ2) importance
+//! sampling) behind one [`SamplingScheme`] trait.
 //!
-//! Every sample gets an *independent* sampling matrix `R_i` (m distinct
-//! canonical basis vectors, uniform without replacement). Per-column RNG
-//! streams are forked from `(seed, global column index)`, so the output
-//! is invariant to chunk boundaries and worker scheduling — the
-//! coordinator's reproducibility guarantee.
+//! Under the default [`Scheme::Precond`], every sample gets an
+//! *independent* sampling matrix `R_i` (m distinct canonical basis
+//! vectors, uniform without replacement). Per-column RNG streams are
+//! forked from `(seed, global column index)`, so the output is invariant
+//! to chunk boundaries and worker scheduling — the coordinator's
+//! reproducibility guarantee, upheld by every scheme.
+
+mod scheme;
+
+pub use scheme::{
+    HybridL1L2, PreconditionedUniform, SamplingScheme, Scheme, UniformNoPrecondition,
+    DEFAULT_HYBRID_L1_MIX,
+};
 
 use crate::error::{invalid, Result};
 use crate::linalg::Mat;
@@ -169,12 +180,27 @@ pub struct Sparsifier {
     p_work: usize,
     m: usize,
     seed: u64,
+    /// Element-selection law (default [`Scheme::Precond`]).
+    scheme: Scheme,
 }
 
 impl Sparsifier {
     /// Build the operator for data of dimension `p` (padding to the next
-    /// power of two when the Hadamard transform requires it).
+    /// power of two when the Hadamard transform requires it), using the
+    /// paper's default [`Scheme::Precond`] element-selection law.
     pub fn new(p: usize, cfg: SparsifyConfig) -> Result<Self> {
+        Self::with_scheme(p, cfg, Scheme::Precond)
+    }
+
+    /// Build the operator with an explicit element-sampling [`Scheme`].
+    /// `Scheme::Precond` is byte-identical to [`new`](Self::new).
+    ///
+    /// The ROS instance is constructed for every scheme (it also anchors
+    /// the seed-stream layout); for the raw-domain schemes it is never
+    /// *applied*, which is free under Hadamard (a sign vector) but pays
+    /// the O(p²) DCT plan precompute under `TransformKind::Dct` — prefer
+    /// Hadamard for large-p raw-domain sampling.
+    pub fn with_scheme(p: usize, cfg: SparsifyConfig, scheme: Scheme) -> Result<Self> {
         if !(cfg.gamma > 0.0 && cfg.gamma <= 1.0) {
             return invalid(format!("gamma must be in (0,1], got {}", cfg.gamma));
         }
@@ -182,10 +208,19 @@ impl Sparsifier {
             TransformKind::Hadamard if !is_pow2(p) => p.next_power_of_two(),
             _ => p,
         };
+        // the clamp below has min = 2: a working dimension under 2 would
+        // panic (`clamp` with min > max) and cannot satisfy the m >= 2
+        // estimator requirement anyway — reject it as a typed error
+        if p_work < 2 {
+            return invalid(format!(
+                "Sparsifier: dimension p = {p} (working dimension {p_work}) is below the \
+                 minimum of 2"
+            ));
+        }
         let m = ((cfg.gamma * p_work as f64).round() as usize).clamp(2, p_work);
         let mut rng = Pcg64::seed(cfg.seed);
         let ros = Ros::new(p_work, cfg.transform, &mut rng)?;
-        Ok(Sparsifier { ros, p_orig: p, p_work, m, seed: cfg.seed })
+        Ok(Sparsifier { ros, p_orig: p, p_work, m, seed: cfg.seed, scheme })
     }
 
     /// Working (possibly padded) dimension — the `p` of downstream chunks.
@@ -218,54 +253,79 @@ impl Sparsifier {
         self.seed
     }
 
+    /// The element-sampling [`Scheme`] this operator applies.
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    /// Whether chunks carry importance-weighted with-replacement slots
+    /// (see [`Scheme::weighted`]) — selects the estimators' weighted
+    /// calibration and mean scale `1` downstream.
+    pub fn weighted(&self) -> bool {
+        self.scheme.weighted()
+    }
+
     /// Compress a dense chunk (`p_orig × n`, samples as columns) whose
-    /// first column has global index `start_col`. One pass: precondition
-    /// each column, sample its mask, store kept values.
+    /// first column has global index `start_col`. One pass per column:
+    /// precondition (schemes that ask for it), then let the scheme select
+    /// the mask and stored values. Under [`Scheme::Uniform`] /
+    /// [`Scheme::Hybrid`] no ROS is applied — the column is sampled in
+    /// the raw (zero-padded) domain.
     pub fn compress_chunk(&self, x: &Mat, start_col: usize) -> Result<SparseChunk> {
         if x.rows() != self.p_orig {
             return invalid(format!("chunk rows {} != p {}", x.rows(), self.p_orig));
         }
-        let n = x.cols();
-        let mut out = SparseChunk::with_capacity(self.p_work, self.m, n, start_col);
-        let mut buf = vec![0.0f64; self.p_work];
-        let mut scratch = vec![0.0f64; self.p_work];
-        let mut sampler = IndexSampler::new(self.p_work);
-        let mask_root = Pcg64::seed(self.seed ^ 0x9E37_79B9_7F4A_7C15);
-        for i in 0..n {
-            // pad + precondition
-            buf[..self.p_orig].copy_from_slice(x.col(i));
-            buf[self.p_orig..].fill(0.0);
-            self.ros.apply_col(&mut buf, &mut scratch);
-            // per-sample mask from a fork keyed on the global column index
-            let mut crng = mask_root.fork((start_col + i) as u64);
-            let (idx, vals) = out.col_mut(i);
-            sampler.sample(&mut crng, idx);
-            for (v, &j) in vals.iter_mut().zip(idx.iter()) {
-                *v = buf[j as usize];
-            }
-        }
-        Ok(out)
+        let scheme = self.scheme.instance();
+        self.compress_with(x, start_col, scheme, scheme.preconditions())
     }
 
     /// Sparsify *without* preconditioning (the paper's "no precondition"
-    /// ablation arm — Figs 7/10, Table I/III). Masks are drawn from the
-    /// same streams as [`compress_chunk`](Self::compress_chunk).
+    /// ablation arm — Figs 7/10, Table I/III). For the uniform schemes
+    /// masks are drawn from the same streams as
+    /// [`compress_chunk`](Self::compress_chunk); for [`Scheme::Hybrid`]
+    /// (which never preconditions) this is identical to `compress_chunk`.
     pub fn compress_chunk_no_precondition(&self, x: &Mat, start_col: usize) -> Result<SparseChunk> {
         if x.rows() != self.p_orig {
             return invalid(format!("chunk rows {} != p {}", x.rows(), self.p_orig));
         }
+        let scheme = match self.scheme {
+            // the no-ROS arm of the preconditioned scheme is exactly the
+            // uniform scheme (same masks, raw values)
+            Scheme::Precond => Scheme::Uniform.instance(),
+            s => s.instance(),
+        };
+        self.compress_with(x, start_col, scheme, false)
+    }
+
+    /// Shared compress loop: pad each column, optionally precondition,
+    /// fork the per-column RNG off the global column index, and let the
+    /// scheme fill the mask + values.
+    fn compress_with(
+        &self,
+        x: &Mat,
+        start_col: usize,
+        scheme: &dyn SamplingScheme,
+        precondition: bool,
+    ) -> Result<SparseChunk> {
         let n = x.cols();
         let mut out = SparseChunk::with_capacity(self.p_work, self.m, n, start_col);
+        let mut buf = vec![0.0f64; self.p_work];
+        let mut scratch = vec![0.0f64; self.p_work];
+        let mut wscratch = vec![0.0f64; self.p_work];
         let mut sampler = IndexSampler::new(self.p_work);
         let mask_root = Pcg64::seed(self.seed ^ 0x9E37_79B9_7F4A_7C15);
         for i in 0..n {
-            let col = x.col(i);
+            // pad (+ precondition when the scheme samples the ROS domain)
+            buf[..self.p_orig].copy_from_slice(x.col(i));
+            buf[self.p_orig..].fill(0.0);
+            if precondition {
+                self.ros.apply_col(&mut buf, &mut scratch);
+            }
+            // per-sample stream from a fork keyed on the global column
+            // index — the chunk-boundary-invariance contract
             let mut crng = mask_root.fork((start_col + i) as u64);
             let (idx, vals) = out.col_mut(i);
-            sampler.sample(&mut crng, idx);
-            for (v, &j) in vals.iter_mut().zip(idx.iter()) {
-                *v = if (j as usize) < self.p_orig { col[j as usize] } else { 0.0 };
-            }
+            scheme.sample_column(&buf, &mut crng, &mut sampler, idx, vals, &mut wscratch);
         }
         Ok(out)
     }
@@ -514,6 +574,110 @@ mod tests {
         let b = sp.compress_chunk_no_precondition(&x, 0).unwrap();
         for i in 0..5 {
             assert_eq!(a.col_indices(i), b.col_indices(i));
+        }
+    }
+
+    #[test]
+    fn dimension_below_two_is_a_typed_error_not_a_panic() {
+        // regression: `((γ·p).round() as usize).clamp(2, p_work)` panics
+        // when p_work < 2 (clamp with min > max); p < 2 must surface as
+        // Error::Invalid instead
+        for p in [0usize, 1] {
+            for kind in [TransformKind::Hadamard, TransformKind::Dct] {
+                let cfg = SparsifyConfig { gamma: 0.5, transform: kind, seed: 1 };
+                match Sparsifier::new(p, cfg) {
+                    Err(crate::error::Error::Invalid(msg)) => {
+                        assert!(msg.contains("minimum of 2") || msg.contains("p must be"), "{msg}")
+                    }
+                    other => panic!("p={p} {kind:?}: expected Invalid, got {:?}", other.is_ok()),
+                }
+            }
+        }
+        // p = 2 is the smallest legal dimension
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 1 };
+        assert!(Sparsifier::new(2, cfg).is_ok());
+    }
+
+    #[test]
+    fn precond_scheme_is_byte_identical_to_the_default_constructor() {
+        // the trait refactor contract: Scheme::Precond reproduces the
+        // pre-scheme operator bit for bit, masks and values
+        let p = 48; // pads to 64
+        let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 31 };
+        let old = Sparsifier::new(p, cfg).unwrap();
+        let new = Sparsifier::with_scheme(p, cfg, Scheme::Precond).unwrap();
+        assert_eq!(new.scheme(), Scheme::Precond);
+        assert!(!new.weighted());
+        let mut rng = Pcg64::seed(7);
+        let x = Mat::from_fn(p, 9, |_, _| rng.normal());
+        let a = old.compress_chunk(&x, 5).unwrap();
+        let b = new.compress_chunk(&x, 5).unwrap();
+        for i in 0..9 {
+            assert_eq!(a.col_indices(i), b.col_indices(i));
+            for (va, vb) in a.col_values(i).iter().zip(b.col_values(i)) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        // and the no-precondition arm matches the uniform scheme
+        let uni = Sparsifier::with_scheme(p, cfg, Scheme::Uniform).unwrap();
+        let c = old.compress_chunk_no_precondition(&x, 5).unwrap();
+        let d = uni.compress_chunk(&x, 5).unwrap();
+        for i in 0..9 {
+            assert_eq!(c.col_indices(i), d.col_indices(i));
+            for (va, vb) in c.col_values(i).iter().zip(d.col_values(i)) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn precond_masks_pin_the_index_sampler_stream() {
+        // pins compress_chunk's mask derivation to the documented stream:
+        // Pcg64::seed(seed ^ 0x9E37_79B9_7F4A_7C15).fork(global column),
+        // drawn through IndexSampler — the seeded-experiment contract
+        let p = 32;
+        let seed = 19u64;
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed };
+        let sp = Sparsifier::new(p, cfg).unwrap();
+        let mut rng = Pcg64::seed(3);
+        let x = Mat::from_fn(p, 7, |_, _| rng.normal());
+        let start_col = 11usize;
+        let chunk = sp.compress_chunk(&x, start_col).unwrap();
+        let root = Pcg64::seed(seed ^ 0x9E37_79B9_7F4A_7C15);
+        let mut sampler = IndexSampler::new(p);
+        let mut expect = vec![0u32; sp.m()];
+        for i in 0..7 {
+            let mut crng = root.fork((start_col + i) as u64);
+            sampler.sample(&mut crng, &mut expect);
+            assert_eq!(chunk.col_indices(i), &expect[..], "col {i}");
+        }
+    }
+
+    #[test]
+    fn hybrid_chunks_are_weighted_and_chunk_boundary_invariant() {
+        let p = 32;
+        let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 23 };
+        let sp = Sparsifier::with_scheme(p, cfg, Scheme::Hybrid).unwrap();
+        assert!(sp.weighted());
+        let mut rng = Pcg64::seed(6);
+        let x = Mat::from_fn(p, 18, |_, _| rng.normal());
+        let whole = sp.compress_chunk(&x, 0).unwrap();
+        whole.validate_weighted().unwrap();
+        let first = sp.compress_chunk(&x.col_range(0, 7), 0).unwrap();
+        let second = sp.compress_chunk(&x.col_range(7, 18), 7).unwrap();
+        for i in 0..7 {
+            assert_eq!(whole.col_indices(i), first.col_indices(i));
+            assert_eq!(whole.col_values(i), first.col_values(i));
+        }
+        for i in 0..11 {
+            assert_eq!(whole.col_indices(7 + i), second.col_indices(i));
+            assert_eq!(whole.col_values(7 + i), second.col_values(i));
+        }
+        // no-precondition entry point is the same path for hybrid
+        let again = sp.compress_chunk_no_precondition(&x, 0).unwrap();
+        for i in 0..18 {
+            assert_eq!(whole.col_indices(i), again.col_indices(i));
+            assert_eq!(whole.col_values(i), again.col_values(i));
         }
     }
 

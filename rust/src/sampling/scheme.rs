@@ -1,0 +1,596 @@
+//! Pluggable per-column element-sampling schemes.
+//!
+//! The paper's compression operator is *one point* in a family of
+//! element-sampling schemes: precondition-then-sample-uniformly. Its
+//! abstract positions that choice against "related sampling approaches" —
+//! canonically the hybrid-(ℓ1,ℓ2) element sampling of Kundu, Drineas &
+//! Magdon-Ismail (arXiv:1503.00547). This module makes the scheme a
+//! first-class axis so those comparisons are reproducible:
+//!
+//! * [`PreconditionedUniform`] — the paper's operator: ROS precondition,
+//!   then keep `m` of `p` entries uniformly without replacement. Raw
+//!   (unweighted) values; the Thm 4/6 estimators apply their uniform
+//!   rescales downstream. **Byte-identical** to the pre-trait
+//!   implementation (asserted in tests).
+//! * [`UniformNoPrecondition`] — the same uniform masks on the raw data
+//!   (the paper's ablation arm, Figs 7/10, Tables I/III). Same mask
+//!   streams as [`PreconditionedUniform`], so ablations isolate the
+//!   preconditioner.
+//! * [`HybridL1L2`] — per-column importance sampling *with replacement*:
+//!   `m` i.i.d. draws from `q_j ∝ λ·|y_j|/‖y‖₁ + (1−λ)·y_j²/‖y‖₂²`
+//!   (the hybrid-(ℓ1,ℓ2) distribution with an ℓ1 mixing floor `λ`),
+//!   each kept slot storing the inverse-probability-scaled value
+//!   `y_j/(m·q_j)`. The resulting column is an exactly **unbiased
+//!   sketch** of `y`, and the cross-slot covariance calibration below
+//!   keeps the Thm 6-style estimate exactly unbiased too.
+//!
+//! # Weighted-scheme calibration (why the consumers stay unchanged)
+//!
+//! Downstream kernels never branch on the scheme: weights live in the
+//! chunk values, and the estimators only swap two scalar constants.
+//! With `v_i = Σ_l u_l e_{j_l}` the scatter-add of column `i`'s slots,
+//! `G = Σ_i v_i v_iᵀ` the raw scatter and `S` the diagonal of per-slot
+//! squares (`S_jj = Σ slots u²` — exactly what
+//! [`ScatterDiag`](crate::estimators::ScatterDiag) accumulates), the
+//! hybrid estimator is
+//!
+//! ```text
+//! Ĉ = m/((m−1)·n) · (G − diag(S))
+//! ```
+//!
+//! which is **exactly unbiased** for `C_emp = (1/n) Σ y_i y_iᵀ`: every
+//! ordered cross-slot pair `(a ≠ b)` contributes
+//! `E[u_a u_b 1{j_a=j, j_b=k}] = y_j y_k / m²` and there are `m(m−1)` of
+//! them, for *every* cell including the diagonal — while `G − diag(S)`
+//! is precisely the cross-slot part of `G`. (A fixed-size
+//! *without*-replacement design cannot be calibrated this way: the two
+//! moment conditions on a single per-entry weight are jointly satisfiable
+//! only at the uniform design — which is exactly the "certain benefits"
+//! contrast the source paper draws. See `rust/ARCHITECTURE.md`
+//! §Sampling schemes for the derivation.)
+//!
+//! Mean estimation under the hybrid scheme needs scale `1` (not `p/m`):
+//! `E[v_i] = y_i` already. [`Scheme::weighted`] drives both calibrations
+//! through `FitPlan`.
+
+use crate::error::{invalid, Result};
+use crate::rng::Pcg64;
+
+use super::IndexSampler;
+
+/// Default ℓ1 mixing floor `λ` of [`HybridL1L2`] — small but positive, as
+/// recommended by Kundu et al. (the ℓ1 term guards the variance of
+/// inverse-probability weights on heavy-tailed columns).
+pub const DEFAULT_HYBRID_L1_MIX: f64 = 0.1;
+
+/// A per-column element-selection law: given one (possibly
+/// preconditioned, zero-padded) column, choose which `m` slots to keep
+/// and what (possibly importance-weighted) values to store.
+///
+/// Implementations must be deterministic functions of `(y, crng)` — the
+/// caller forks `crng` from `(seed, global column index)`, which is what
+/// keeps compressed chunks independent of chunk boundaries and worker
+/// scheduling (the coordinator's reproducibility contract).
+pub trait SamplingScheme: Send + Sync {
+    /// Stable lowercase name (CLI `--scheme`, store manifests).
+    fn name(&self) -> &'static str;
+
+    /// Whether columns are ROS-preconditioned before sampling.
+    fn preconditions(&self) -> bool;
+
+    /// Whether stored values are importance-weighted with-replacement
+    /// slots (duplicate indices allowed; consumers must use the
+    /// weighted estimator calibration and mean scale `1`).
+    fn weighted(&self) -> bool;
+
+    /// Fill one column's mask (`idx`) and stored values (`vals`), both of
+    /// length `m`, from the length-`p` column `y`.
+    ///
+    /// * `sampler` — shared O(m) uniform mask sampler (uniform schemes
+    ///   draw through it so their RNG stream stays byte-identical to the
+    ///   pre-trait implementation).
+    /// * `scratch` — caller-provided length-`p` workspace (cumulative
+    ///   weights for the hybrid scheme; uniform schemes ignore it).
+    ///
+    /// On return `idx` is sorted ascending (strictly for uniform schemes,
+    /// non-strictly — duplicates allowed — for weighted ones) and every
+    /// index is `< p`.
+    fn sample_column(
+        &self,
+        y: &[f64],
+        crng: &mut Pcg64,
+        sampler: &mut IndexSampler,
+        idx: &mut [u32],
+        vals: &mut [f64],
+        scratch: &mut [f64],
+    );
+}
+
+/// Shared body of both uniform schemes: draw the uniform
+/// without-replacement mask through [`IndexSampler`] (byte-identical RNG
+/// stream to the pre-trait `compress_chunk` loop) and store raw values.
+fn uniform_sample_column(
+    y: &[f64],
+    crng: &mut Pcg64,
+    sampler: &mut IndexSampler,
+    idx: &mut [u32],
+    vals: &mut [f64],
+) {
+    sampler.sample(crng, idx);
+    for (v, &j) in vals.iter_mut().zip(idx.iter()) {
+        *v = y[j as usize];
+    }
+}
+
+/// The paper's operator: ROS preconditioning + uniform `m`-of-`p`
+/// element sampling without replacement, raw values.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PreconditionedUniform;
+
+impl SamplingScheme for PreconditionedUniform {
+    fn name(&self) -> &'static str {
+        "precond"
+    }
+
+    fn preconditions(&self) -> bool {
+        true
+    }
+
+    fn weighted(&self) -> bool {
+        false
+    }
+
+    fn sample_column(
+        &self,
+        y: &[f64],
+        crng: &mut Pcg64,
+        sampler: &mut IndexSampler,
+        idx: &mut [u32],
+        vals: &mut [f64],
+        _scratch: &mut [f64],
+    ) {
+        uniform_sample_column(y, crng, sampler, idx, vals);
+    }
+}
+
+/// Uniform element sampling of the **raw** data (no ROS) — the paper's
+/// ablation arm. Masks are drawn from the same per-column streams as
+/// [`PreconditionedUniform`], so the two arms differ only in the
+/// preconditioner.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UniformNoPrecondition;
+
+impl SamplingScheme for UniformNoPrecondition {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn preconditions(&self) -> bool {
+        false
+    }
+
+    fn weighted(&self) -> bool {
+        false
+    }
+
+    fn sample_column(
+        &self,
+        y: &[f64],
+        crng: &mut Pcg64,
+        sampler: &mut IndexSampler,
+        idx: &mut [u32],
+        vals: &mut [f64],
+        _scratch: &mut [f64],
+    ) {
+        uniform_sample_column(y, crng, sampler, idx, vals);
+    }
+}
+
+/// Hybrid-(ℓ1,ℓ2) element sampling (Kundu, Drineas & Magdon-Ismail,
+/// arXiv:1503.00547), per column, with replacement:
+///
+/// `m` i.i.d. draws from `q_j ∝ λ·|y_j|/‖y‖₁ + (1−λ)·y_j²/‖y‖₂²`, each
+/// slot storing `y_j/(m·q_j)`. The scatter-add of a column's slots is an
+/// exactly unbiased sketch of `y`, and the cross-slot calibration (module
+/// docs) keeps the covariance estimate exactly unbiased. Slots are
+/// stored sorted by index with duplicates allowed.
+///
+/// Zero columns fall back to the uniform mask (all stored values are
+/// zero either way, and the fallback keeps the per-column RNG cost
+/// bounded).
+#[derive(Clone, Copy, Debug)]
+pub struct HybridL1L2 {
+    /// ℓ1 mixing floor `λ ∈ [0, 1]` (`0` = pure ℓ2, `1` = pure ℓ1).
+    l1_mix: f64,
+}
+
+impl HybridL1L2 {
+    /// Hybrid scheme with mixing floor `λ` (clamped to `[0, 1]`), for
+    /// driving [`sample_column`](SamplingScheme::sample_column) directly
+    /// (library use, property tests). The `Sparsifier`/`FitPlan`/store
+    /// pipeline resolves [`Scheme::Hybrid`] to the shared instance at
+    /// [`DEFAULT_HYBRID_L1_MIX`] — a custom `λ` is **not** threadable
+    /// through the pipeline (the manifest records only the scheme name),
+    /// by design: one canonical hybrid arm keeps every seeded
+    /// scheme-comparison reproducible from the scheme name alone.
+    pub fn new(l1_mix: f64) -> Self {
+        HybridL1L2 { l1_mix: l1_mix.clamp(0.0, 1.0) }
+    }
+
+    /// The configured ℓ1 mixing floor.
+    pub fn l1_mix(&self) -> f64 {
+        self.l1_mix
+    }
+}
+
+impl Default for HybridL1L2 {
+    fn default() -> Self {
+        HybridL1L2 { l1_mix: DEFAULT_HYBRID_L1_MIX }
+    }
+}
+
+impl SamplingScheme for HybridL1L2 {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn preconditions(&self) -> bool {
+        false
+    }
+
+    fn weighted(&self) -> bool {
+        true
+    }
+
+    fn sample_column(
+        &self,
+        y: &[f64],
+        crng: &mut Pcg64,
+        sampler: &mut IndexSampler,
+        idx: &mut [u32],
+        vals: &mut [f64],
+        scratch: &mut [f64],
+    ) {
+        let p = y.len();
+        let m = idx.len();
+        debug_assert_eq!(scratch.len(), p);
+        let mut l1 = 0.0f64;
+        let mut l2 = 0.0f64;
+        for &v in y {
+            l1 += v.abs();
+            l2 += v * v;
+        }
+        if !(l1 > 0.0 && l2 > 0.0 && l1.is_finite() && l2.is_finite()) {
+            // degenerate column — all zero (any mask is correct, values
+            // are 0) or non-finite (importance weights are undefined):
+            // fall back to the uniform mask with the raw values, exactly
+            // what the uniform schemes would store
+            uniform_sample_column(y, crng, sampler, idx, vals);
+            return;
+        }
+        // cumulative un-normalized hybrid weights w_j = λ|y_j|/‖y‖₁ +
+        // (1−λ)y_j²/‖y‖₂² (so Σ w_j = 1 up to rounding; we sample
+        // against the actual running total, never assuming it is 1)
+        let (la, lb) = (self.l1_mix / l1, (1.0 - self.l1_mix) / l2);
+        let weight = |v: f64| la * v.abs() + lb * v * v;
+        let mut total = 0.0f64;
+        for (c, &v) in scratch.iter_mut().zip(y.iter()) {
+            total += weight(v);
+            *c = total;
+        }
+        // m i.i.d. draws, kept as separate slots, drawn straight into
+        // `idx` (no per-column heap allocation on the compress hot path)
+        for slot in idx.iter_mut() {
+            let u = crng.next_f64() * total;
+            let mut j = scratch.partition_point(|&c| c <= u).min(p - 1);
+            // a zero-weight index is unreachable except through a
+            // floating-point boundary tie; walk to the nearest positive
+            // weight (total > 0 guarantees one exists)
+            let mut wj = weight(y[j]);
+            while wj <= 0.0 && j > 0 {
+                j -= 1;
+                wj = weight(y[j]);
+            }
+            while wj <= 0.0 && j + 1 < p {
+                j += 1;
+                wj = weight(y[j]);
+            }
+            debug_assert!(wj > 0.0, "hybrid draw landed on zero total mass");
+            *slot = j as u32;
+        }
+        // sorted by index, duplicates allowed. A slot's value
+        // `y_j/(m·q_j)` is a pure function of its index, so the values
+        // are filled after the sort — equal indices carry bitwise-equal
+        // values, making the draw order immaterial.
+        idx.sort_unstable();
+        for (v, &j) in vals.iter_mut().zip(idx.iter()) {
+            let yj = y[j as usize];
+            *v = yj * total / (m as f64 * weight(yj));
+        }
+    }
+}
+
+/// Nameable scheme selector — the configuration-level handle used by
+/// [`Sparsifier::with_scheme`](super::Sparsifier::with_scheme), the CLI
+/// (`--scheme`), and store manifests. Resolves to a shared
+/// [`SamplingScheme`] instance via [`instance`](Scheme::instance).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// [`PreconditionedUniform`] — the paper's operator (default).
+    Precond,
+    /// [`UniformNoPrecondition`] — uniform masks on raw data.
+    Uniform,
+    /// [`HybridL1L2`] — weighted hybrid-(ℓ1,ℓ2) sampling at
+    /// [`DEFAULT_HYBRID_L1_MIX`].
+    Hybrid,
+}
+
+static PRECOND_INSTANCE: PreconditionedUniform = PreconditionedUniform;
+static UNIFORM_INSTANCE: UniformNoPrecondition = UniformNoPrecondition;
+static HYBRID_INSTANCE: HybridL1L2 = HybridL1L2 { l1_mix: DEFAULT_HYBRID_L1_MIX };
+
+impl Scheme {
+    /// The shared implementation instance for this selector.
+    pub fn instance(self) -> &'static dyn SamplingScheme {
+        match self {
+            Scheme::Precond => &PRECOND_INSTANCE,
+            Scheme::Uniform => &UNIFORM_INSTANCE,
+            Scheme::Hybrid => &HYBRID_INSTANCE,
+        }
+    }
+
+    /// Stable lowercase name (CLI flags, store manifests).
+    pub fn name(self) -> &'static str {
+        self.instance().name()
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn parse(s: &str) -> Result<Scheme> {
+        Ok(match s {
+            "precond" => Scheme::Precond,
+            "uniform" => Scheme::Uniform,
+            "hybrid" => Scheme::Hybrid,
+            other => {
+                return invalid(format!(
+                    "unknown sampling scheme {other:?} (want precond|uniform|hybrid)"
+                ))
+            }
+        })
+    }
+
+    /// Whether this scheme ROS-preconditions before sampling.
+    pub fn preconditions(self) -> bool {
+        self.instance().preconditions()
+    }
+
+    /// Whether this scheme stores importance-weighted with-replacement
+    /// slots (see the module docs for the estimator calibration).
+    pub fn weighted(self) -> bool {
+        self.instance().weighted()
+    }
+}
+
+impl Default for Scheme {
+    fn default() -> Self {
+        Scheme::Precond
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for s in [Scheme::Precond, Scheme::Uniform, Scheme::Hybrid] {
+            assert_eq!(Scheme::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scheme::parse("nope").is_err());
+        assert_eq!(Scheme::default(), Scheme::Precond);
+        assert!(Scheme::Precond.preconditions());
+        assert!(!Scheme::Uniform.preconditions());
+        assert!(!Scheme::Hybrid.preconditions());
+        assert!(Scheme::Hybrid.weighted());
+        assert!(!Scheme::Precond.weighted());
+    }
+
+    #[test]
+    fn uniform_schemes_replicate_the_index_sampler_stream() {
+        // the trait refactor must not change a single RNG draw: the
+        // uniform schemes' masks are the IndexSampler stream, bit for bit
+        let (p, m) = (64usize, 16usize);
+        let mut rng = Pcg64::seed(3);
+        let y: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        for scheme in [Scheme::Precond, Scheme::Uniform] {
+            let mut direct = vec![0u32; m];
+            let mut via_trait = vec![0u32; m];
+            let mut vals = vec![0.0f64; m];
+            let mut scratch = vec![0.0f64; p];
+            for col in 0..5u64 {
+                let root = Pcg64::seed(9 ^ 0x9E37_79B9_7F4A_7C15);
+                let mut sampler_a = IndexSampler::new(p);
+                let mut sampler_b = IndexSampler::new(p);
+                let mut crng_a = root.fork(col);
+                let mut crng_b = root.fork(col);
+                sampler_a.sample(&mut crng_a, &mut direct);
+                scheme.instance().sample_column(
+                    &y,
+                    &mut crng_b,
+                    &mut sampler_b,
+                    &mut via_trait,
+                    &mut vals,
+                    &mut scratch,
+                );
+                assert_eq!(direct, via_trait, "scheme {} col {col}", scheme.name());
+                for (v, &j) in vals.iter().zip(via_trait.iter()) {
+                    assert_eq!(v.to_bits(), y[j as usize].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_slots_are_sorted_in_range_and_weighted() {
+        let (p, m) = (32usize, 12usize);
+        let mut rng = Pcg64::seed(7);
+        let y: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let scheme = HybridL1L2::default();
+        let mut sampler = IndexSampler::new(p);
+        let mut idx = vec![0u32; m];
+        let mut vals = vec![0.0f64; m];
+        let mut scratch = vec![0.0f64; p];
+        for col in 0..20u64 {
+            let mut crng = Pcg64::seed(5).fork(col);
+            scheme.sample_column(&y, &mut crng, &mut sampler, &mut idx, &mut vals, &mut scratch);
+            for w in idx.windows(2) {
+                assert!(w[0] <= w[1], "non-decreasing violated: {idx:?}");
+            }
+            assert!(*idx.last().unwrap() < p as u32);
+            for (&j, &v) in idx.iter().zip(&vals) {
+                // slot value has the sign of (and is proportional to) y_j
+                assert!(v * y[j as usize] > 0.0 || y[j as usize] == 0.0);
+                assert!(v.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_zero_column_falls_back_to_uniform_mask() {
+        let (p, m) = (16usize, 4usize);
+        let y = vec![0.0f64; p];
+        let scheme = HybridL1L2::default();
+        let mut sampler = IndexSampler::new(p);
+        let mut idx = vec![0u32; m];
+        let mut vals = vec![1.0f64; m];
+        let mut scratch = vec![0.0f64; p];
+        let mut crng = Pcg64::seed(11).fork(0);
+        scheme.sample_column(&y, &mut crng, &mut sampler, &mut idx, &mut vals, &mut scratch);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "fallback mask must be distinct + sorted");
+        }
+        assert!(vals.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hybrid_sketch_is_unbiased_for_the_column() {
+        // Monte-Carlo: the scatter-add of a column's slots averages to
+        // the column itself — E[v] = y, the Kundu et al. sketch property.
+        // Tolerance is self-calibrated from the per-coordinate MC
+        // standard error, so the test does not depend on hand-tuned
+        // constants.
+        let (p, m, trials) = (16usize, 6usize, 20_000usize);
+        let mut rng = Pcg64::seed(21);
+        let y: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let scheme = HybridL1L2::new(0.2);
+        let mut sampler = IndexSampler::new(p);
+        let mut idx = vec![0u32; m];
+        let mut vals = vec![0.0f64; m];
+        let mut scratch = vec![0.0f64; p];
+        let mut sum = vec![0.0f64; p];
+        let mut sumsq = vec![0.0f64; p];
+        let root = Pcg64::seed(1234);
+        let mut v = vec![0.0f64; p];
+        for t in 0..trials {
+            let mut crng = root.fork(t as u64);
+            scheme.sample_column(&y, &mut crng, &mut sampler, &mut idx, &mut vals, &mut scratch);
+            v.iter_mut().for_each(|x| *x = 0.0);
+            for (&j, &val) in idx.iter().zip(&vals) {
+                v[j as usize] += val;
+            }
+            for j in 0..p {
+                sum[j] += v[j];
+                sumsq[j] += v[j] * v[j];
+            }
+        }
+        let tf = trials as f64;
+        for j in 0..p {
+            let mean = sum[j] / tf;
+            let var = (sumsq[j] / tf - mean * mean).max(0.0);
+            let se = (var / tf).sqrt();
+            assert!(
+                (mean - y[j]).abs() <= 6.0 * se + 1e-9,
+                "coord {j}: mean {mean} vs y {} (se {se})",
+                y[j]
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_l2_bias_concentrates_mass_on_heavy_coordinates() {
+        // With one dominant coordinate and small λ, the hybrid draws must
+        // hit it far more often than uniform sampling would (that is the
+        // point of importance sampling).
+        let (p, m, trials) = (32usize, 4usize, 4000usize);
+        let mut y = vec![0.05f64; p];
+        y[7] = 10.0;
+        let scheme = HybridL1L2::new(0.1);
+        let mut sampler = IndexSampler::new(p);
+        let mut idx = vec![0u32; m];
+        let mut vals = vec![0.0f64; m];
+        let mut scratch = vec![0.0f64; p];
+        let mut hits = 0usize;
+        let root = Pcg64::seed(77);
+        for t in 0..trials {
+            let mut crng = root.fork(t as u64);
+            scheme.sample_column(&y, &mut crng, &mut sampler, &mut idx, &mut vals, &mut scratch);
+            hits += idx.iter().filter(|&&j| j == 7).count();
+        }
+        let rate = hits as f64 / (trials * m) as f64;
+        // uniform would give 1/32 ≈ 0.031; ℓ2-dominated q gives ≈ 0.95
+        assert!(rate > 0.5, "heavy coordinate hit rate {rate} too low");
+    }
+
+    #[test]
+    fn hybrid_is_deterministic_per_column_stream() {
+        let (p, m) = (24usize, 8usize);
+        let mut rng = Pcg64::seed(2);
+        let y: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+        let scheme = HybridL1L2::default();
+        let run = |seed: u64| {
+            let mut sampler = IndexSampler::new(p);
+            let mut idx = vec![0u32; m];
+            let mut vals = vec![0.0f64; m];
+            let mut scratch = vec![0.0f64; p];
+            let mut crng = Pcg64::seed(seed).fork(3);
+            scheme.sample_column(&y, &mut crng, &mut sampler, &mut idx, &mut vals, &mut scratch);
+            (idx, vals.iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9).0, run(10).0);
+    }
+
+    #[test]
+    fn hybrid_scheme_through_sparsifier_matches_direct_sampling() {
+        // the Sparsifier plumbing must feed the scheme the padded raw
+        // column and the per-column fork — cross-check against a direct
+        // call
+        use crate::sampling::{Sparsifier, SparsifyConfig};
+        use crate::transform::TransformKind;
+        let p = 24usize; // pads to 32 under Hadamard
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 13 };
+        let sp = Sparsifier::with_scheme(p, cfg, Scheme::Hybrid).unwrap();
+        assert_eq!(sp.p(), 32);
+        let mut rng = Pcg64::seed(4);
+        let x = Mat::from_fn(p, 6, |_, _| rng.normal());
+        let chunk = sp.compress_chunk(&x, 3).unwrap();
+        chunk.validate_weighted().unwrap();
+        let scheme = HybridL1L2::default();
+        let mut sampler = IndexSampler::new(sp.p());
+        let mut idx = vec![0u32; sp.m()];
+        let mut vals = vec![0.0f64; sp.m()];
+        let mut scratch = vec![0.0f64; sp.p()];
+        let root = Pcg64::seed(13 ^ 0x9E37_79B9_7F4A_7C15);
+        for i in 0..6 {
+            let mut y = vec![0.0f64; sp.p()];
+            y[..p].copy_from_slice(x.col(i));
+            let mut crng = root.fork((3 + i) as u64);
+            scheme.sample_column(&y, &mut crng, &mut sampler, &mut idx, &mut vals, &mut scratch);
+            assert_eq!(chunk.col_indices(i), &idx[..]);
+            for (a, b) in chunk.col_values(i).iter().zip(&vals) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}

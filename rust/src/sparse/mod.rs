@@ -209,13 +209,16 @@ impl SparseChunk {
 
     /// Densify values + 0/1 mask as f32 column-major buffers — the exact
     /// operand layout of the AOT `assign`/`kmeans_step` executables.
+    /// Values are scatter-*added* so a weighted chunk's duplicate slots
+    /// densify to the sketch `v = Σ u·e` rather than silently dropping
+    /// slots (identical to plain assignment for distinct-index chunks).
     pub fn to_dense_f32_masked(&self) -> (Vec<f32>, Vec<f32>) {
         let mut w = vec![0.0f32; self.p * self.n];
         let mut mask = vec![0.0f32; self.p * self.n];
         for i in 0..self.n {
             let base = i * self.p;
             for (idx, val) in self.col_indices(i).iter().zip(self.col_values(i)) {
-                w[base + *idx as usize] = *val as f32;
+                w[base + *idx as usize] += *val as f32;
                 mask[base + *idx as usize] = 1.0;
             }
         }
@@ -228,13 +231,37 @@ impl SparseChunk {
     }
 
     /// Structural invariants (used by property tests and debug assertions):
-    /// sorted, distinct, in-range indices in every column.
+    /// **strictly** sorted, distinct, in-range indices in every column —
+    /// the contract of the uniform (without-replacement) sampling
+    /// schemes. Chunks from weighted with-replacement schemes (e.g.
+    /// `sampling::Scheme::Hybrid`) legally repeat indices; validate those
+    /// with [`validate_weighted`](Self::validate_weighted) instead.
     pub fn validate(&self) -> Result<()> {
         for i in 0..self.n {
             let idx = self.col_indices(i);
             for w in idx.windows(2) {
                 if w[0] >= w[1] {
                     return shape_err(format!("col {i}: indices not strictly sorted"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.p {
+                    return shape_err(format!("col {i}: index {last} >= p={}", self.p));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// [`validate`](Self::validate) for weighted with-replacement chunks:
+    /// indices must be non-decreasing and in range, but duplicates — one
+    /// slot per draw — are allowed.
+    pub fn validate_weighted(&self) -> Result<()> {
+        for i in 0..self.n {
+            let idx = self.col_indices(i);
+            for w in idx.windows(2) {
+                if w[0] > w[1] {
+                    return shape_err(format!("col {i}: indices not sorted"));
                 }
             }
             if let Some(&last) = idx.last() {
@@ -305,6 +332,20 @@ mod tests {
         let oob = SparseChunk::from_raw(5, 2, 1, vec![3, 9], vec![0.0, 0.0], 0).unwrap();
         assert!(oob.validate().is_err());
         assert!(sample_chunk().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_weighted_allows_duplicates_but_not_disorder() {
+        // duplicates (one slot per with-replacement draw) pass the
+        // weighted check while still failing the strict one
+        let dup = SparseChunk::from_raw(5, 3, 1, vec![1, 1, 4], vec![0.5, 0.5, 1.0], 0).unwrap();
+        assert!(dup.validate().is_err());
+        assert!(dup.validate_weighted().is_ok());
+        let unsorted = SparseChunk::from_raw(5, 3, 1, vec![4, 1, 1], vec![0.0; 3], 0).unwrap();
+        assert!(unsorted.validate_weighted().is_err());
+        let oob = SparseChunk::from_raw(5, 2, 1, vec![3, 9], vec![0.0, 0.0], 0).unwrap();
+        assert!(oob.validate_weighted().is_err());
+        assert!(sample_chunk().validate_weighted().is_ok());
     }
 
     #[test]

@@ -53,7 +53,15 @@ pub struct SparseVecSource {
 }
 
 impl SparseVecSource {
-    /// Wrap chunks (must be non-empty, uniform `p`/`m`).
+    /// Wrap chunks (must be non-empty, uniform `p`/`m`, and — after the
+    /// sort — contiguous in the global column order: each chunk starts
+    /// exactly where the previous one ends).
+    ///
+    /// Contiguity is a hard error, not a warning: an overlapping or
+    /// duplicated `start_col` range would silently double-count those
+    /// samples in every estimator/K-means fold, and a gap would
+    /// mis-align every consumer that indexes per-sample state by
+    /// `start_col` (assignments, the two-pass refinement).
     pub fn new(mut chunks: Vec<SparseChunk>) -> Result<Self> {
         let Some(first) = chunks.first() else {
             return crate::error::invalid("SparseVecSource: no chunks");
@@ -63,6 +71,23 @@ impl SparseVecSource {
             return crate::error::shape_err("SparseVecSource: mixed chunk shapes");
         }
         chunks.sort_by_key(|c| c.start_col());
+        let mut expected = chunks[0].start_col();
+        for c in &chunks {
+            let start = c.start_col();
+            if start < expected {
+                return crate::error::shape_err(format!(
+                    "SparseVecSource: chunk at column {start} overlaps the previous chunk \
+                     (which ends at {expected})"
+                ));
+            }
+            if start > expected {
+                return crate::error::shape_err(format!(
+                    "SparseVecSource: gap in the stream — columns {expected}..{start} are \
+                     missing"
+                ));
+            }
+            expected = start + c.n();
+        }
         Ok(SparseVecSource { chunks, p, m, pos: 0 })
     }
 }
@@ -127,5 +152,27 @@ mod tests {
         let odd =
             SparseChunk::from_raw(4, 1, 1, vec![1], vec![9.0], 3).unwrap();
         assert!(SparseVecSource::new(vec![chunk(0, 3), odd]).is_err());
+    }
+
+    #[test]
+    fn vec_source_rejects_overlap_gap_and_duplicate_start() {
+        use crate::error::Error;
+        // overlap: [0,3) and [2,4) double-count columns 2
+        match SparseVecSource::new(vec![chunk(0, 3), chunk(2, 2)]) {
+            Err(Error::Shape(msg)) => assert!(msg.contains("overlap"), "{msg}"),
+            other => panic!("expected Shape overlap error, got ok={}", other.is_ok()),
+        }
+        // gap: [0,3) then [5,7) leaves columns 3..5 missing
+        match SparseVecSource::new(vec![chunk(0, 3), chunk(5, 2)]) {
+            Err(Error::Shape(msg)) => assert!(msg.contains("gap"), "{msg}"),
+            other => panic!("expected Shape gap error, got ok={}", other.is_ok()),
+        }
+        // duplicate start: two chunks both claiming column 0
+        match SparseVecSource::new(vec![chunk(0, 2), chunk(0, 2)]) {
+            Err(Error::Shape(msg)) => assert!(msg.contains("overlap"), "{msg}"),
+            other => panic!("expected Shape overlap error, got ok={}", other.is_ok()),
+        }
+        // contiguous (possibly offset) streams still pass
+        assert!(SparseVecSource::new(vec![chunk(7, 2), chunk(9, 3)]).is_ok());
     }
 }

@@ -8,7 +8,7 @@ use std::io::Write;
 use std::path::Path;
 
 use crate::error::{corrupt, invalid, Error, Result};
-use crate::sampling::SparsifyConfig;
+use crate::sampling::{Scheme, SparsifyConfig};
 use crate::transform::TransformKind;
 
 /// Manifest file name inside a store directory.
@@ -16,7 +16,16 @@ pub const MANIFEST_FILE: &str = "manifest.pdsm";
 
 /// Current manifest schema version. Readers reject greater versions;
 /// additive fields do not bump it (unknown keys are ignored on parse).
-const MANIFEST_VERSION: u32 = 1;
+///
+/// * v1 — the original schema (no `scheme` key; every store was
+///   uniform-masked, preconditioned or not).
+/// * v2 — adds the `scheme` key (`precond | uniform | hybrid`). The bump
+///   is semantic, not just additive: `hybrid` shards store
+///   importance-weighted with-replacement slots whose indices may
+///   repeat, which a v1 reader would mis-validate and mis-estimate. v1
+///   manifests are still read (the scheme is inferred from
+///   `preconditioned`).
+const MANIFEST_VERSION: u32 = 2;
 
 /// Per-shard record: boundaries in the global column order plus the
 /// CRC-32 of the entire shard file.
@@ -58,6 +67,12 @@ pub struct StoreManifest {
     /// Whether ROS preconditioning was applied (false = the paper's
     /// no-precondition ablation arm; centers must not be unmixed).
     pub preconditioned: bool,
+    /// The element-sampling scheme the chunks were produced with
+    /// (v2 key; inferred from `preconditioned` for v1 manifests).
+    /// Consumers use it to rebuild the matching sparsifier and to select
+    /// the estimator calibration (`Scheme::Hybrid` stores weighted
+    /// with-replacement slots).
+    pub scheme: Scheme,
     /// Target columns per shard; every shard except the last holds
     /// exactly this many.
     pub shard_cols: usize,
@@ -105,6 +120,7 @@ impl StoreManifest {
         out.push_str(&format!("transform = {}\n", self.transform.name()));
         out.push_str(&format!("seed = {}\n", self.seed));
         out.push_str(&format!("preconditioned = {}\n", self.preconditioned));
+        out.push_str(&format!("scheme = {}\n", self.scheme.name()));
         out.push_str(&format!("shard_cols = {}\n", self.shard_cols));
         out.push_str(&format!("shard_count = {}\n", self.shards.len()));
         for s in &self.shards {
@@ -158,6 +174,20 @@ impl StoreManifest {
                 return corrupt(format!("manifest: bad preconditioned flag {other:?}"));
             }
         };
+        let scheme = match kv.iter().find(|(k, _)| k == "scheme") {
+            Some((_, v)) => Scheme::parse(v)
+                .map_err(|_| Error::Corrupt(format!("manifest: unknown scheme {v:?}")))?,
+            // v1 manifests predate the scheme key: every store was
+            // uniform-masked, with or without the ROS
+            None if version < 2 => {
+                if preconditioned {
+                    Scheme::Precond
+                } else {
+                    Scheme::Uniform
+                }
+            }
+            None => return corrupt("manifest: version >= 2 requires a scheme key"),
+        };
         let shard_count = lookup_num(&kv, "shard_count")? as usize;
         if shard_count != shards.len() {
             return corrupt(format!(
@@ -176,6 +206,7 @@ impl StoreManifest {
             transform,
             seed: lookup_num(&kv, "seed")?,
             preconditioned,
+            scheme,
             shard_cols: lookup_num(&kv, "shard_cols")? as usize,
             shards,
         };
@@ -197,6 +228,13 @@ impl StoreManifest {
         }
         if self.shard_cols == 0 {
             return corrupt("manifest: shard_cols = 0");
+        }
+        if self.scheme.preconditions() != self.preconditioned {
+            return corrupt(format!(
+                "manifest: scheme {} is inconsistent with preconditioned = {}",
+                self.scheme.name(),
+                self.preconditioned
+            ));
         }
         let mut expected_start = 0usize;
         for (i, s) in self.shards.iter().enumerate() {
@@ -303,7 +341,7 @@ mod tests {
 
     fn sample() -> StoreManifest {
         StoreManifest {
-            version: 1,
+            version: 2,
             p: 128,
             p_orig: 100,
             m: 32,
@@ -312,6 +350,7 @@ mod tests {
             transform: TransformKind::Hadamard,
             seed: 7,
             preconditioned: true,
+            scheme: Scheme::Precond,
             shard_cols: 10,
             shards: vec![
                 ShardEntry {
@@ -351,8 +390,57 @@ mod tests {
         assert_eq!(parsed.transform, m.transform);
         assert_eq!(parsed.seed, m.seed);
         assert_eq!(parsed.preconditioned, m.preconditioned);
+        assert_eq!(parsed.scheme, m.scheme);
         assert_eq!(parsed.shard_cols, m.shard_cols);
         assert_eq!(parsed.shards, m.shards);
+    }
+
+    #[test]
+    fn v1_manifest_infers_scheme_from_preconditioned() {
+        // a pre-scheme (v1) manifest parses, with the scheme inferred
+        let strip = |m: StoreManifest, precond: bool| {
+            let mut m = m;
+            m.version = 1;
+            m.preconditioned = precond;
+            m.scheme = if precond { Scheme::Precond } else { Scheme::Uniform };
+            let text: String = m
+                .to_text()
+                .lines()
+                .filter(|l| !l.starts_with("scheme"))
+                .map(|l| format!("{l}\n"))
+                .collect();
+            StoreManifest::parse(&text).unwrap()
+        };
+        assert_eq!(strip(sample(), true).scheme, Scheme::Precond);
+        assert_eq!(strip(sample(), false).scheme, Scheme::Uniform);
+        // v2 without a scheme key is corrupt, not inferred
+        let text: String = sample()
+            .to_text()
+            .lines()
+            .filter(|l| !l.starts_with("scheme"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn scheme_roundtrips_and_inconsistency_is_corrupt() {
+        let mut hybrid = sample();
+        hybrid.scheme = Scheme::Hybrid;
+        hybrid.preconditioned = false;
+        let parsed = StoreManifest::parse(&hybrid.to_text()).unwrap();
+        assert_eq!(parsed.scheme, Scheme::Hybrid);
+        assert!(!parsed.preconditioned);
+
+        // scheme says preconditioned, flag says not — corrupt
+        let mut bad = sample();
+        bad.preconditioned = false; // scheme stays Precond
+        assert!(matches!(bad.validate(), Err(Error::Corrupt(_))));
+        assert!(StoreManifest::parse(&bad.to_text()).is_err());
+
+        // unknown scheme name
+        let text = sample().to_text().replace("scheme = precond", "scheme = mystery");
+        assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
     }
 
     #[test]
@@ -400,7 +488,7 @@ mod tests {
         let mut text = sample().to_text();
         text = text.replace("format = pdss", "format = nope");
         assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
-        let future = sample().to_text().replace("version = 1", "version = 99");
+        let future = sample().to_text().replace("version = 2", "version = 99");
         assert!(StoreManifest::parse(&future).is_err());
         let badcount = sample().to_text().replace("shard_count = 3", "shard_count = 2");
         assert!(StoreManifest::parse(&badcount).is_err());

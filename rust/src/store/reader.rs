@@ -116,11 +116,16 @@ impl SparseStoreReader {
         &self.manifest
     }
 
-    /// Rebuild the [`Sparsifier`] this store was written with (needed to
-    /// unmix centers/components back to the original domain) and check it
-    /// against the manifest's recorded shape.
+    /// Rebuild the [`Sparsifier`] this store was written with — including
+    /// its element-sampling scheme, so downstream consumers pick the
+    /// matching estimator calibration — and check it against the
+    /// manifest's recorded shape.
     pub fn sparsifier(&self) -> Result<Sparsifier> {
-        let sp = Sparsifier::new(self.manifest.p_orig, self.manifest.sparsify_config())?;
+        let sp = Sparsifier::with_scheme(
+            self.manifest.p_orig,
+            self.manifest.sparsify_config(),
+            self.manifest.scheme,
+        )?;
         if sp.p() != self.manifest.p || sp.m() != self.manifest.m {
             return corrupt(format!(
                 "manifest inconsistent: config rebuilds to p={} m={}, manifest records p={} m={}",
@@ -219,7 +224,15 @@ impl SparseStoreReader {
             self.col_in_shard = b;
             let chunk = SparseChunk::from_raw(self.manifest.p, m, cols, indices, values, start_col + a)?;
             if self.verify {
-                if let Err(e) = chunk.validate() {
+                // weighted schemes legally repeat indices (one slot per
+                // with-replacement draw); uniform schemes must be
+                // strictly sorted
+                let structural = if self.manifest.scheme.weighted() {
+                    chunk.validate_weighted()
+                } else {
+                    chunk.validate()
+                };
+                if let Err(e) = structural {
                     return corrupt(format!("shard {}: invalid chunk structure ({e})", self.shard));
                 }
             }

@@ -10,7 +10,7 @@ use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::{invalid, shape_err, Error, Result};
-use crate::sampling::{Sparsifier, SparsifyConfig};
+use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
 use crate::sparse::SparseChunk;
 use crate::transform::TransformKind;
 
@@ -69,6 +69,9 @@ pub struct SparseStoreWriter {
     transform: TransformKind,
     seed: u64,
     preconditioned: bool,
+    /// Element-sampling scheme recorded in the manifest (derived from the
+    /// sparsifier's scheme and the precondition flag at `create`).
+    scheme: Scheme,
     shard_cols: usize,
     /// Next global column the store is waiting for.
     next_col: usize,
@@ -87,7 +90,11 @@ impl SparseStoreWriter {
     /// Create the store directory (and parents) and start writing a store
     /// for the output of `sp`. Fails if `dir` already holds a completed
     /// store. `preconditioned` records whether chunks went through the
-    /// ROS (false for the ablation arm) so readers unmix correctly.
+    /// ROS (false for the ablation arm) so readers unmix correctly; the
+    /// manifest additionally records the *effective* sampling scheme
+    /// (the sparsifier's scheme, downgraded from `precond` to `uniform`
+    /// when `preconditioned` is false) so readers rebuild the matching
+    /// sparsifier and estimator calibration.
     pub fn create(
         dir: &Path,
         sp: &Sparsifier,
@@ -105,6 +112,14 @@ impl SparseStoreWriter {
                 dir.display()
             ));
         }
+        // the recorded scheme is the *effective* selection law: a
+        // preconditioned-uniform sparsifier run with the ROS disabled
+        // produced plain uniform chunks
+        let scheme = match (sp.scheme(), preconditioned) {
+            (Scheme::Precond, false) => Scheme::Uniform,
+            (s, _) => s,
+        };
+        let preconditioned = preconditioned && scheme.preconditions();
         Ok(SparseStoreWriter {
             dir: dir.to_path_buf(),
             p: sp.p(),
@@ -114,6 +129,7 @@ impl SparseStoreWriter {
             transform: cfg.transform,
             seed: cfg.seed,
             preconditioned,
+            scheme,
             shard_cols,
             next_col: 0,
             pending: BTreeMap::new(),
@@ -281,7 +297,7 @@ impl SparseStoreWriter {
         }
         self.flush_shard()?;
         let manifest = StoreManifest {
-            version: 1,
+            version: 2,
             p: self.p,
             p_orig: self.p_orig,
             m: self.m,
@@ -290,6 +306,7 @@ impl SparseStoreWriter {
             transform: self.transform,
             seed: self.seed,
             preconditioned: self.preconditioned,
+            scheme: self.scheme,
             shard_cols: self.shard_cols,
             shards: std::mem::take(&mut self.shards),
         };

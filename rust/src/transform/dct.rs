@@ -2,11 +2,12 @@
 //!
 //! Reference implementation via a precomputed p×p matrix: exact for any
 //! `p`, O(p²) per column. The streaming hot path prefers the O(p log p)
-//! Hadamard transform (zero-padding `p` up to the next power of two when
-//! necessary — see `sampling::SparsifyConfig::pad_to_pow2`); the DCT path
-//! exists for parity with the paper's MNIST setup and for the η-ablation,
-//! mirroring the paper's own remark (§VII.C) that its Matlab DCT was the
-//! slow component.
+//! Hadamard transform — when `p` is not a power of two,
+//! [`Sparsifier::new`](crate::sampling::Sparsifier::new) transparently
+//! zero-pads to the next power of two and samples in the padded space
+//! (the adjoint un-pads). The DCT path exists for parity with the
+//! paper's MNIST setup and for the η-ablation, mirroring the paper's own
+//! remark (§VII.C) that its Matlab DCT was the slow component.
 
 /// Precomputed orthonormal DCT-II plan for dimension `p`.
 #[derive(Clone)]

@@ -1,0 +1,241 @@
+//! End-to-end coverage of the pluggable sampling-scheme layer: scheme
+//! selection through `FitPlan`, byte-identity of the default
+//! (preconditioned-uniform) scheme, hybrid store round trips through the
+//! v2 manifest, and scheme-matched estimator calibration on store-backed
+//! fits.
+
+use pds::coordinator::{FitPlan, MatSource, Solver, StreamConfig};
+use pds::error::Error;
+use pds::linalg::Mat;
+use pds::rng::Pcg64;
+use pds::sampling::{Scheme, Sparsifier, SparsifyConfig};
+use pds::sparse::{SparseChunkSource, SparseVecSource};
+use pds::store::SparseStoreReader;
+use pds::transform::TransformKind;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("pds_scheme_it_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn spiked(p: usize, n: usize, seed: u64) -> pds::data::Dataset {
+    let mut rng = Pcg64::seed(seed);
+    pds::data::spiked(p, n, &[8.0, 4.0], false, &mut rng)
+}
+
+/// `pds fit --scheme precond` contract: a store written with the
+/// explicit precond scheme is byte-identical, file for file, to one
+/// written through the pre-scheme default path for matched seeds.
+#[test]
+fn precond_scheme_store_is_byte_identical_to_default() {
+    let d = spiked(32, 150, 3);
+    let scfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 7 };
+
+    let dir_default = tmpdir("default");
+    let mut src = MatSource::new(&d.data, 64);
+    FitPlan::compress()
+        .stream(&mut src, scfg)
+        .store_dir(&dir_default)
+        .shard_cols(40)
+        .run()
+        .unwrap();
+
+    let dir_explicit = tmpdir("explicit");
+    let mut src2 = MatSource::new(&d.data, 64);
+    FitPlan::compress()
+        .stream(&mut src2, scfg)
+        .scheme(Scheme::Precond)
+        .store_dir(&dir_explicit)
+        .shard_cols(40)
+        .run()
+        .unwrap();
+
+    let mut names_a: Vec<_> = std::fs::read_dir(&dir_default)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names_a.sort();
+    for name in &names_a {
+        let a = std::fs::read(dir_default.join(name)).unwrap();
+        let b = std::fs::read(dir_explicit.join(name)).unwrap();
+        assert_eq!(a, b, "file {name} differs between default and explicit precond scheme");
+    }
+    // the recorded scheme is precond, and a store fit reproduces the
+    // streaming fit bit for bit
+    let mut reader = SparseStoreReader::open(&dir_default).unwrap();
+    assert_eq!(reader.manifest().scheme, Scheme::Precond);
+    assert!(reader.manifest().preconditioned);
+    let from_store = FitPlan::pca().store(&mut reader).topk(2).run().unwrap();
+    let mut src3 = MatSource::new(&d.data, 64);
+    let from_stream = FitPlan::pca().stream(&mut src3, scfg).topk(2).run().unwrap();
+    let (a, b) = (from_store.pca_fit().unwrap(), from_stream.pca_fit().unwrap());
+    for (x, y) in a.mean.iter().zip(&b.mean) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in a.pca.components.as_slice().iter().zip(b.pca.components.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    std::fs::remove_dir_all(&dir_default).ok();
+    std::fs::remove_dir_all(&dir_explicit).ok();
+}
+
+/// Hybrid store round trip: the manifest records the scheme (v2), the
+/// reader rebuilds a weighted sparsifier, chunks (with duplicate slots)
+/// survive verification, and the store-backed PCA is bit-identical to
+/// the in-memory fit of the same chunks under the weighted calibration.
+#[test]
+fn hybrid_store_roundtrips_and_restores_the_scheme() {
+    let d = spiked(24, 200, 9); // pads to 32 under Hadamard
+    let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 21 };
+    let dir = tmpdir("hybrid");
+    let mut src = MatSource::new(&d.data, 64);
+    let report = FitPlan::compress()
+        .stream(&mut src, scfg)
+        .scheme(Scheme::Hybrid)
+        .store_dir(&dir)
+        .shard_cols(33) // awkward stride: shards cut inside chunks
+        .run()
+        .unwrap();
+    let manifest = report.store_manifest().unwrap();
+    assert_eq!(manifest.version, 2);
+    assert_eq!(manifest.scheme, Scheme::Hybrid);
+    assert!(!manifest.preconditioned);
+    assert_eq!(manifest.n, 200);
+
+    // reader: scheme restored, chunks verified with the weighted check
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let sp = reader.sparsifier().unwrap();
+    assert_eq!(sp.scheme(), Scheme::Hybrid);
+    assert!(sp.weighted());
+    let mut chunks = Vec::new();
+    let mut cols = 0usize;
+    while let Some(c) = SparseChunkSource::next_chunk(&mut reader).unwrap() {
+        c.validate_weighted().unwrap();
+        cols += c.n();
+        chunks.push(c);
+    }
+    assert_eq!(cols, 200);
+
+    // store bytes are exact: the read-back chunks equal a direct
+    // compression, slot for slot
+    let direct = sp.compress_chunk(&d.data, 0).unwrap();
+    let mut col = 0usize;
+    for c in &chunks {
+        for i in 0..c.n() {
+            assert_eq!(c.col_indices(i), direct.col_indices(col + i));
+            for (a, b) in c.col_values(i).iter().zip(direct.col_values(col + i)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        col += c.n();
+    }
+
+    // store-backed weighted PCA == in-memory weighted PCA, bit for bit,
+    // on both solvers
+    for solver in [Solver::Covariance, Solver::Krylov] {
+        SparseChunkSource::reset(&mut reader).unwrap();
+        let from_store =
+            FitPlan::pca().store(&mut reader).topk(2).solver(solver).run().unwrap();
+        let mut mem = SparseVecSource::new(chunks.clone()).unwrap();
+        let in_memory = FitPlan::pca()
+            .source(&mut mem, &sp, false)
+            .topk(2)
+            .solver(solver)
+            .run()
+            .unwrap();
+        let (a, b) = (from_store.pca_fit().unwrap(), in_memory.pca_fit().unwrap());
+        for (x, y) in a.mean.iter().zip(&b.mean) {
+            assert_eq!(x.to_bits(), y.to_bits(), "mean, {solver:?}");
+        }
+        for (x, y) in a.pca.components.as_slice().iter().zip(b.pca.components.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "components, {solver:?}");
+        }
+        assert_eq!(from_store.raw_passes, 0);
+    }
+
+    // an explicitly requested scheme that contradicts the store's
+    // recorded one fails the plan instead of silently fitting the
+    // wrong comparison arm
+    SparseChunkSource::reset(&mut reader).unwrap();
+    let err = FitPlan::pca().store(&mut reader).scheme(Scheme::Precond).topk(2).run();
+    assert!(matches!(err, Err(Error::Invalid(_))));
+    // asserting the matching scheme is fine
+    SparseChunkSource::reset(&mut reader).unwrap();
+    assert!(FitPlan::pca().store(&mut reader).scheme(Scheme::Hybrid).topk(2).run().is_ok());
+
+    // K-means from the hybrid store runs on both solvers and agrees
+    // with itself bit for bit (inmemory vs stream)
+    let opts = pds::kmeans::KmeansOpts { n_init: 2, ..Default::default() };
+    SparseChunkSource::reset(&mut reader).unwrap();
+    let km_mem = FitPlan::kmeans().store(&mut reader).k(3).kmeans_opts(opts).run().unwrap();
+    SparseChunkSource::reset(&mut reader).unwrap();
+    let km_stream = FitPlan::kmeans()
+        .store(&mut reader)
+        .k(3)
+        .kmeans_opts(opts)
+        .solver(Solver::Stream)
+        .run()
+        .unwrap();
+    let (ma, mb) = (km_mem.kmeans_model().unwrap(), km_stream.kmeans_model().unwrap());
+    assert_eq!(ma.result.assign, mb.result.assign);
+    assert_eq!(ma.result.objective.to_bits(), mb.result.objective.to_bits());
+    for (x, y) in ma.result.centers.as_slice().iter().zip(mb.result.centers.as_slice()) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The hybrid covariance estimate through the full plan converges to the
+/// raw-data covariance as n grows — the end-to-end face of the weighted
+/// calibration (the exact Monte-Carlo unbiasedness property lives in
+/// `estimators::covariance`).
+#[test]
+fn hybrid_plan_covariance_tracks_the_raw_covariance() {
+    let p = 16usize;
+    let n = 30_000usize;
+    let mut rng = Pcg64::seed(41);
+    let x = Mat::from_fn(p, n, |_, _| rng.normal());
+    let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 4 };
+    let mut src = MatSource::new(&x, 4096);
+    let report = FitPlan::pca()
+        .stream(&mut src, scfg)
+        .scheme(Scheme::Hybrid)
+        .topk(3)
+        .stream_config(StreamConfig { workers: 2, ..Default::default() })
+        .run()
+        .unwrap();
+    let fit = report.pca_fit().unwrap();
+    let chat = fit.covariance.as_ref().expect("covariance solver materializes");
+    let cemp = x.syrk().scaled(1.0 / n as f64);
+    let err = chat.sub(&cemp).max_abs();
+    // heavy averaging: the unbiased weighted estimate concentrates; a
+    // mis-calibrated (uniform-constant) estimate would be off by ~4x on
+    // the off-diagonals
+    assert!(err < 0.15, "|Chat - Cemp|_max = {err}");
+}
+
+/// Sparse-source plans take the calibration from the sparsifier the
+/// caller passes — a hybrid sparsifier with uniform chunks (or vice
+/// versa) is the caller's bug, but shape mismatches surface as errors.
+#[test]
+fn sparse_source_plan_checks_shapes_and_runs_hybrid() {
+    let d = spiked(32, 300, 17);
+    let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 6 };
+    let sp = Sparsifier::with_scheme(32, scfg, Scheme::Hybrid).unwrap();
+    let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+    let mut src = SparseVecSource::new(vec![chunk]).unwrap();
+    let report = FitPlan::pca().source(&mut src, &sp, false).topk(2).run().unwrap();
+    assert!(report.pca_fit().unwrap().mean.iter().all(|v| v.is_finite()));
+
+    // mismatched sparsifier shape is rejected
+    let other = Sparsifier::with_scheme(
+        64,
+        SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 6 },
+        Scheme::Hybrid,
+    )
+    .unwrap();
+    let mut src2 = SparseVecSource::new(vec![sp.compress_chunk(&d.data, 0).unwrap()]).unwrap();
+    let err = FitPlan::pca().source(&mut src2, &other, false).topk(2).run();
+    assert!(matches!(err, Err(Error::Invalid(_))));
+}
