@@ -19,7 +19,7 @@ fn main() {
         let chunk = sp.compress_chunk(&d.data, 0).unwrap();
         let centers = sp.precondition_dense(&d.centers);
         pds::bench::bench(&format!("assign/native gamma={gamma} (p=512,n=2048,K=5)"), 1, 10, || {
-            NativeAssigner.assign(&chunk, &centers).unwrap().1
+            NativeAssigner::new().assign(&chunk, &centers).unwrap().1
         });
         if artifact_dir().join("manifest.tsv").exists() {
             let engine = XlaEngine::new(None).unwrap();

@@ -2,17 +2,25 @@
 //! arithmetic-intensity context so the §Perf log in `rust/EXPERIMENTS.md`
 //! is reproducible.
 //!
-//! Measures (1) the blocked FWHT, (2) mask sampling (O(p)-reset reference
-//! vs the O(m) `IndexSampler`), (3) masked assignment, (4) the
-//! covariance scatter — the latter two at 1/2/4 workers to show thread
-//! scaling — (5) the PCA solver comparison: materialized-covariance
-//! (`sym_eig_topk` on the p×p estimate) vs covariance-free block-Krylov
-//! (`SparseCovOp`) at p = 2^12..2^14 — and (6) the K-means solver
-//! comparison: the in-memory chunk fit vs the source-driven streaming
-//! fit (`CenterStep` over store-budget-sized chunks) at p = 4096/8192,
-//! workers 1/2/4, in ms per Lloyd iteration. Results are also emitted as
-//! `BENCH_hotpaths.json` at the repository root (schema documented in
-//! EXPERIMENTS.md).
+//! Measures (1) the blocked FWHT with scalar-vs-SIMD arms, (2) mask
+//! sampling (O(p)-reset reference vs the O(m) `IndexSampler`), (3) masked
+//! assignment — scalar-vs-SIMD and f64-vs-f32 arms, plus thread scaling —
+//! (4) the covariance scatter at 1/2/4 workers and the shared
+//! `col_dot`/`col_scatter` kernel pair in isolation, (5) the PCA solver
+//! comparison: materialized-covariance (`sym_eig_topk` on the p×p
+//! estimate) vs covariance-free block-Krylov (`SparseCovOp`) at
+//! p = 2^12..2^14 — and (6) the K-means solver comparison: the in-memory
+//! chunk fit vs the source-driven streaming fit (`CenterStep` over
+//! store-budget-sized chunks) at p = 4096/8192, workers 1/2/4, in ms per
+//! Lloyd iteration. A final non-timing check records the f32-vs-f64
+//! explained-variance parity on the Fig-1 digits shape. Results are also
+//! emitted as `BENCH_hotpaths.json` at the repository root (schema
+//! documented in EXPERIMENTS.md §Perf log).
+//!
+//! `PDS_BENCH_QUICK=1` shrinks iteration counts and skips the slow
+//! solver-comparison sections (5 and 6) — the profile the CI perf gate
+//! runs; the gated rows (FWHT / assignment / scatter-kernel arms and the
+//! parity check) are all still emitted.
 
 use std::io::Write as _;
 
@@ -24,6 +32,8 @@ use pds::linalg::Mat;
 use pds::pca::Pca;
 use pds::rng::Pcg64;
 use pds::sampling::{sample_indices, IndexSampler, Sparsifier, SparsifyConfig};
+use pds::simd::Isa;
+use pds::sparse::{Precision, SparseChunk};
 use pds::testing::fixtures::sparse_chunk;
 use pds::transform::fwht_inplace;
 use pds::transform::TransformKind;
@@ -36,28 +46,48 @@ struct Entry {
     value: f64,
 }
 
-fn main() {
-    let mut entries: Vec<Entry> = Vec::new();
+/// One emitted pass/fail numeric check (not a timing): the CI gate
+/// verifies `value <= tolerance`.
+struct Check {
+    name: &'static str,
+    value: f64,
+    tolerance: f64,
+}
 
-    pds::bench::section("perf: L3 hot paths");
+fn main() {
+    let quick = std::env::var("PDS_BENCH_QUICK").is_ok();
+    // (warmup, iters) for the cheap kernel sections; the O(seconds)
+    // solver sections below use their own smaller budgets
+    let (bw, bi) = if quick { (1, 8) } else { (2, 20) };
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut checks: Vec<Check> = Vec::new();
+    let best = pds::simd::detect();
+
+    pds::bench::section(&format!("perf: L3 hot paths (detected ISA: {})", best.name()));
     // 1) FWHT throughput (the compress hot loop); 16384 is the
-    //    firmly-out-of-L1 size the blocked schedule targets
+    //    firmly-out-of-L1 size the blocked schedule targets. The scalar
+    //    arm pins the dispatcher to the reference schedule; every tier is
+    //    bitwise identical, so the arms differ only in speed.
     for p in [512usize, 1024, 4096, 16384] {
-        let mut rng = Pcg64::seed(1);
-        let mut cols: Vec<Vec<f64>> =
-            (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
-        let r = pds::bench::bench(&format!("fwht p={p} x64cols"), 2, 20, || {
-            for c in cols.iter_mut() {
-                fwht_inplace(c);
-            }
-            cols[0][0]
-        });
-        let bytes = (64 * p * 8) as f64;
-        let flops = (64 * p) as f64 * (p as f64).log2();
-        let gbs = bytes * 2.0 / r.median_s / 1e9;
-        println!("   -> {:.2} GB/s streamed, {:.2} GFLOP/s", gbs, flops / r.median_s / 1e9);
-        entries.push(Entry { result: r, metric: "GB/s", value: gbs });
+        for (arm, isa) in [("scalar", Some(Isa::Scalar)), ("simd", None)] {
+            pds::simd::force(isa);
+            let mut rng = Pcg64::seed(1);
+            let mut cols: Vec<Vec<f64>> =
+                (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+            let r = pds::bench::bench(&format!("fwht p={p} x64cols [{arm}]"), bw, bi, || {
+                for c in cols.iter_mut() {
+                    fwht_inplace(c);
+                }
+                cols[0][0]
+            });
+            let bytes = (64 * p * 8) as f64;
+            let flops = (64 * p) as f64 * (p as f64).log2();
+            let gbs = bytes * 2.0 / r.median_s / 1e9;
+            println!("   -> {:.2} GB/s streamed, {:.2} GFLOP/s", gbs, flops / r.median_s / 1e9);
+            entries.push(Entry { result: r, metric: "GB/s", value: gbs });
+        }
     }
+    pds::simd::force(None);
 
     // 2) mask sampling: O(p)-reset reference vs the O(m) IndexSampler at
     //    the gamma=0.05, p=4096 point where the reset dominates
@@ -66,7 +96,7 @@ fn main() {
         let mut out = vec![0u32; m];
         let mut perm = vec![0u32; p];
         let mut rng = Pcg64::seed(11);
-        let r = pds::bench::bench("mask sample reference (p=4096,m=205) x1k", 2, 20, || {
+        let r = pds::bench::bench("mask sample reference (p=4096,m=205) x1k", bw, bi, || {
             for _ in 0..1000 {
                 sample_indices(&mut rng, p, &mut out, &mut perm);
             }
@@ -78,7 +108,7 @@ fn main() {
 
         let mut sampler = IndexSampler::new(p);
         let mut rng = Pcg64::seed(11);
-        let r = pds::bench::bench("mask sample O(m) sampler (p=4096,m=205) x1k", 2, 20, || {
+        let r = pds::bench::bench("mask sample O(m) sampler (p=4096,m=205) x1k", bw, bi, || {
             for _ in 0..1000 {
                 sampler.sample(&mut rng, &mut out);
             }
@@ -89,23 +119,104 @@ fn main() {
         entries.push(Entry { result: r, metric: "M masks/s", value: masks });
     }
 
-    // 3) masked assignment (the kmeans hot loop), thread scaling
+    // 3) masked assignment (the kmeans hot loop): the gated
+    //    scalar-vs-SIMD / f64-vs-f32 arms at w=1, then thread scaling.
+    //    The f32-store arm runs the f64 kernels over a quantized chunk
+    //    (what a `--precision f32` store round trip yields); the packed
+    //    arm drives the 4-lane f32 kernel directly on an f32 value array
+    //    to isolate the bandwidth effect of halving the value bytes.
     let d = digits(20_000, DigitConfig::default());
     let cfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 2 };
     let sp = Sparsifier::new(784, cfg).unwrap();
     let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+    let chunk32 = chunk.clone().with_precision(Precision::F32);
     let mut rng = Pcg64::seed(3);
     let centers = sp.precondition_dense(&kmeans_pp_dense(&d.data, 3, &mut rng));
-    let gathers = (20_000 * chunk.m() * 3) as f64;
+    let m = chunk.m();
+    let gathers = (20_000 * m * 3) as f64;
+    {
+        let arms: [(&str, &SparseChunk, NativeAssigner); 3] = [
+            ("[scalar f64]", &chunk, NativeAssigner::new().with_isa(Isa::Scalar)),
+            ("[simd f64]", &chunk, NativeAssigner::new().with_isa(best)),
+            ("[scalar f32-store]", &chunk32, NativeAssigner::new().with_isa(Isa::Scalar)),
+        ];
+        for (arm, c, assigner) in &arms {
+            let mut ids = vec![0u32; c.n()];
+            let mut dist = vec![0.0f64; c.n()];
+            let r = pds::bench::bench(
+                &format!("assign (n=20k,m={m},K=3) {arm}"),
+                bw,
+                bi,
+                || {
+                    assigner.assign_into(c, &centers, 1, &mut ids, &mut dist).unwrap();
+                    dist.iter().sum::<f64>()
+                },
+            );
+            let rate = gathers / r.median_s / 1e6;
+            println!("   -> {rate:.1} M masked-gathers/s");
+            entries.push(Entry { result: r, metric: "M masked-gathers/s", value: rate });
+        }
+
+        // packed f32: the x4 kernel on an actual f32 value array. K=3
+        // fits one 4-wide group; only the 3 live lanes are scanned.
+        let p = sp.p();
+        let k = centers.cols();
+        let mut panel = vec![0.0f64; p * 4];
+        for c in 0..k {
+            for (j, &v) in centers.col(c).iter().enumerate() {
+                panel[j * 4 + c] = v;
+            }
+        }
+        let n = chunk32.n();
+        let mut vals32 = Vec::with_capacity(n * m);
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0usize);
+        for i in 0..n {
+            vals32.extend(chunk32.col_values(i).iter().map(|&v| v as f32));
+            off.push(vals32.len());
+        }
+        let mut ids = vec![0u32; n];
+        let mut dist = vec![0.0f64; n];
+        let r = pds::bench::bench(
+            &format!("assign packed (n=20k,m={m},K=3) [simd f32]"),
+            bw,
+            bi,
+            || {
+                for i in 0..n {
+                    let mut d4 = [0.0f64; 4];
+                    pds::simd::masked_dist2_x4_f32(
+                        best,
+                        chunk32.col_indices(i),
+                        &vals32[off[i]..off[i + 1]],
+                        &panel,
+                        &mut d4,
+                    );
+                    let (mut bc, mut bd) = (0u32, d4[0]);
+                    for (c, &dc) in d4.iter().enumerate().take(k).skip(1) {
+                        if dc < bd {
+                            bc = c as u32;
+                            bd = dc;
+                        }
+                    }
+                    ids[i] = bc;
+                    dist[i] = bd;
+                }
+                dist.iter().sum::<f64>()
+            },
+        );
+        let rate = gathers / r.median_s / 1e6;
+        println!("   -> {rate:.1} M masked-gathers/s");
+        entries.push(Entry { result: r, metric: "M masked-gathers/s", value: rate });
+    }
     for workers in [1usize, 2, 4] {
         let mut ids = vec![0u32; chunk.n()];
         let mut dist = vec![0.0f64; chunk.n()];
         let r = pds::bench::bench(
-            &format!("assign native (n=20k,m={},K=3) w={workers}", chunk.m()),
-            2,
-            20,
+            &format!("assign native (n=20k,m={m},K=3) w={workers}"),
+            bw,
+            bi,
             || {
-                NativeAssigner
+                NativeAssigner::new()
                     .assign_into(&chunk, &centers, workers, &mut ids, &mut dist)
                     .unwrap();
                 dist.iter().sum::<f64>()
@@ -116,19 +227,53 @@ fn main() {
         entries.push(Entry { result: r, metric: "M masked-gathers/s", value: rate });
     }
 
-    // 4) covariance scatter accumulation, thread scaling
+    // 4) covariance scatter accumulation: first the shared
+    //    col_dot/col_scatter kernel pair in isolation (the b-wide
+    //    dot+scatter phases SparseCovOp/SourceCovOp run per block
+    //    multiply), then the full estimator at 1/2/4 workers
     let mut rng = Pcg64::seed(5);
     let x = Mat::from_fn(256, 2560, |_, _| rng.normal());
     let cfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 7 };
     let sp = Sparsifier::new(256, cfg).unwrap();
     let chunk = sp.compress_chunk(&x, 0).unwrap();
     let m = sp.m();
+    {
+        const B: usize = 14; // block width k+4 at the k=10 default
+        let p = sp.p();
+        let n = chunk.n();
+        let mut rng = Pcg64::seed(17);
+        let bt: Vec<f64> = (0..p * B).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0f64; p * B];
+        let mut dcol = vec![0.0f64; B];
+        let madds = (2 * n * m * B) as f64;
+        for (arm, isa) in [("scalar", Isa::Scalar), ("simd", best)] {
+            let r = pds::bench::bench(
+                &format!("cov scatter kernels (p=256,n={n},m={m},b={B}) [{arm}]"),
+                bw,
+                bi,
+                || {
+                    out.iter_mut().for_each(|v| *v = 0.0);
+                    for i in 0..n {
+                        dcol.iter_mut().for_each(|v| *v = 0.0);
+                        let idx = chunk.col_indices(i);
+                        let val = chunk.col_values(i);
+                        pds::simd::col_dot(isa, &mut dcol, idx, val, &bt);
+                        pds::simd::col_scatter(isa, &mut out, idx, val, 0, &dcol);
+                    }
+                    out[0]
+                },
+            );
+            let rate = madds / r.median_s / 1e6;
+            println!("   -> {rate:.1} M madds/s (dot+scatter)");
+            entries.push(Entry { result: r, metric: "M madds/s", value: rate });
+        }
+    }
     let scatters = 2560.0 * (m * m) as f64 / 2.0; // lower triangle only
     for workers in [1usize, 2, 4] {
         let r = pds::bench::bench(
             &format!("cov accumulate (p=256,n=2560,m={m}) w={workers}"),
-            1,
-            10,
+            if quick { 0 } else { 1 },
+            if quick { 5 } else { 10 },
             || {
                 let mut est = CovarianceEstimator::new(sp.p(), sp.m()).with_workers(workers);
                 est.accumulate(&chunk);
@@ -148,128 +293,164 @@ fn main() {
     //    (accumulator + two estimate copies) — so that one size is gated
     //    behind PDS_BENCH_FULL=1; the krylov arm runs everywhere in
     //    O(p·(k+4)) on top of the ~5 MB chunk.
-    pds::bench::section("pca solver: covariance (p x p) vs krylov (covariance-free)");
-    const SOLVER_K: usize = 10;
-    const SOLVER_ITERS: usize = 4;
     let full = std::env::var("PDS_BENCH_FULL").is_ok();
-    for p in [4096usize, 8192, 16384] {
-        let n = 512usize;
-        let m = p / 20; // gamma = 0.05
-        let chunk = sparse_chunk(p, m, n, 0, 0xC0FFEE ^ p as u64);
-        if p < 16384 || full {
-            let r = pds::bench::bench(
-                &format!("pca solve covariance p={p} (n={n},m={m},k={SOLVER_K})"),
-                0,
-                3,
-                || {
-                    let mut est = CovarianceEstimator::new(p, m);
-                    est.accumulate(&chunk);
-                    let c = est.estimate();
-                    let (vals, _) = pds::linalg::sym_eig_topk(&c, SOLVER_K, SOLVER_ITERS, 1);
-                    vals[0]
-                },
-            );
-            let ms = r.median_s * 1e3;
-            println!("   -> {ms:.1} ms/solve, holds a {p}x{p} f64 matrix");
-            entries.push(Entry { result: r, metric: "ms/solve", value: ms });
-        } else {
-            println!(
-                "bench pca solve covariance p={p}: skipped (O(p^2) = {:.1} GB transient; \
-                 set PDS_BENCH_FULL=1 to run)",
-                3.0 * (p * p * 8) as f64 / 1e9
-            );
+    if quick {
+        println!("\n(PDS_BENCH_QUICK=1: skipping the solver-comparison sections)");
+    } else {
+        pds::bench::section("pca solver: covariance (p x p) vs krylov (covariance-free)");
+        const SOLVER_K: usize = 10;
+        const SOLVER_ITERS: usize = 4;
+        for p in [4096usize, 8192, 16384] {
+            let n = 512usize;
+            let m = p / 20; // gamma = 0.05
+            let chunk = sparse_chunk(p, m, n, 0, 0xC0FFEE ^ p as u64);
+            if p < 16384 || full {
+                let r = pds::bench::bench(
+                    &format!("pca solve covariance p={p} (n={n},m={m},k={SOLVER_K})"),
+                    0,
+                    3,
+                    || {
+                        let mut est = CovarianceEstimator::new(p, m);
+                        est.accumulate(&chunk);
+                        let c = est.estimate();
+                        let (vals, _) = pds::linalg::sym_eig_topk(&c, SOLVER_K, SOLVER_ITERS, 1);
+                        vals[0]
+                    },
+                );
+                let ms = r.median_s * 1e3;
+                println!("   -> {ms:.1} ms/solve, holds a {p}x{p} f64 matrix");
+                entries.push(Entry { result: r, metric: "ms/solve", value: ms });
+            } else {
+                println!(
+                    "bench pca solve covariance p={p}: skipped (O(p^2) = {:.1} GB transient; \
+                     set PDS_BENCH_FULL=1 to run)",
+                    3.0 * (p * p * 8) as f64 / 1e9
+                );
+            }
+            for workers in [1usize, 4] {
+                let chunks = [chunk.clone()];
+                let r = pds::bench::bench(
+                    &format!("pca solve krylov p={p} (n={n},m={m},k={SOLVER_K}) w={workers}"),
+                    0,
+                    3,
+                    || {
+                        let mut op = SparseCovOp::new(&chunks, workers).unwrap();
+                        let pca =
+                            Pca::from_sparse_operator(&mut op, SOLVER_K, SOLVER_ITERS, 1).unwrap();
+                        pca.eigenvalues[0]
+                    },
+                );
+                let ms = r.median_s * 1e3;
+                println!("   -> {ms:.1} ms/solve, no p x p allocation");
+                entries.push(Entry { result: r, metric: "ms/solve", value: ms });
+            }
         }
-        for workers in [1usize, 4] {
-            let chunks = [chunk.clone()];
-            let r = pds::bench::bench(
-                &format!("pca solve krylov p={p} (n={n},m={m},k={SOLVER_K}) w={workers}"),
-                0,
-                3,
-                || {
-                    let mut op = SparseCovOp::new(&chunks, workers).unwrap();
-                    let pca =
-                        Pca::from_sparse_operator(&mut op, SOLVER_K, SOLVER_ITERS, 1).unwrap();
-                    pca.eigenvalues[0]
-                },
-            );
-            let ms = r.median_s * 1e3;
-            println!("   -> {ms:.1} ms/solve, no p x p allocation");
-            entries.push(Entry { result: r, metric: "ms/solve", value: ms });
+
+        // 6) K-means solver comparison: in-memory chunk fit vs the
+        //    source-driven streaming fit (CenterStep folding budget-sized
+        //    chunks — the exact shape a memory-budgeted store reader hands
+        //    out, minus disk noise). Both run the same seeding + Lloyd
+        //    schedule and produce bitwise identical fits; the delta is pure
+        //    per-chunk fold overhead. Reported as ms per Lloyd iteration.
+        pds::bench::section("kmeans solver: in-memory fit vs streaming CenterStep fit");
+        {
+            use pds::kmeans::{KmeansOpts, SparsifiedKmeans};
+            use pds::sparse::SparseVecSource;
+            const KM_K: usize = 8;
+            const KM_ITERS: usize = 3;
+            for p in [4096usize, 8192] {
+                let n = 4096usize;
+                let mut rng = Pcg64::seed(0xBEEF ^ p as u64);
+                let x = Mat::from_fn(p, n, |_, _| rng.normal());
+                let cfg =
+                    SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 3 };
+                let sp = Sparsifier::new(p, cfg).unwrap();
+                let whole = sp.compress_chunk(&x, 0).unwrap();
+                // 512-column pieces ≈ a few-MB reader budget at this (p, m)
+                let mut pieces = Vec::new();
+                let mut a = 0usize;
+                while a < n {
+                    let b = (a + 512).min(n);
+                    pieces.push(sp.compress_chunk(&x.col_range(a, b), a).unwrap());
+                    a = b;
+                }
+                let opts = KmeansOpts { n_init: 1, max_iters: KM_ITERS, tol_frac: 0.0, seed: 1 };
+                for workers in [1usize, 2, 4] {
+                    let chunks = [whole.clone()];
+                    let r = pds::bench::bench(
+                        &format!("kmeans inmemory p={p} (n={n},K={KM_K}) w={workers}"),
+                        0,
+                        3,
+                        || {
+                            let sk =
+                                SparsifiedKmeans::new(cfg, KM_K, opts).with_workers(workers);
+                            let m = sk.fit_chunks(&sp, &chunks, &NativeAssigner::new()).unwrap();
+                            m.result.objective
+                        },
+                    );
+                    let ms = r.median_s * 1e3 / KM_ITERS as f64;
+                    println!("   -> {ms:.1} ms/iteration (in-memory)");
+                    entries.push(Entry { result: r, metric: "ms/iter", value: ms });
+
+                    let r = pds::bench::bench(
+                        &format!("kmeans stream p={p} (n={n},K={KM_K},chunk=512) w={workers}"),
+                        0,
+                        3,
+                        || {
+                            let mut src = SparseVecSource::new(pieces.clone()).unwrap();
+                            let sk =
+                                SparsifiedKmeans::new(cfg, KM_K, opts).with_workers(workers);
+                            let (m, _passes) =
+                                sk.fit_source(&sp, &mut src, &NativeAssigner::new(), true).unwrap();
+                            m.result.objective
+                        },
+                    );
+                    let ms = r.median_s * 1e3 / KM_ITERS as f64;
+                    println!("   -> {ms:.1} ms/iteration (streaming)");
+                    entries.push(Entry { result: r, metric: "ms/iter", value: ms });
+                }
+            }
         }
     }
 
-    // 6) K-means solver comparison: in-memory chunk fit vs the
-    //    source-driven streaming fit (CenterStep folding budget-sized
-    //    chunks — the exact shape a memory-budgeted store reader hands
-    //    out, minus disk noise). Both run the same seeding + Lloyd
-    //    schedule and produce bitwise identical fits; the delta is pure
-    //    per-chunk fold overhead. Reported as ms per Lloyd iteration.
-    pds::bench::section("kmeans solver: in-memory fit vs streaming CenterStep fit");
+    // 7) precision parity check (not a timing): explained variance of the
+    //    top-10 subspace on the Fig-1 digits shape, f32-quantized chunk
+    //    vs f64. f64 accumulation on top of f32 storage keeps this at
+    //    quantization level — orders of magnitude under the 1e-3 bound
+    //    the format documents.
+    pds::bench::section("precision check: f32 vs f64 explained variance (fig1 digits)");
     {
-        use pds::kmeans::{KmeansOpts, SparsifiedKmeans};
-        use pds::sparse::SparseVecSource;
-        const KM_K: usize = 8;
-        const KM_ITERS: usize = 3;
-        for p in [4096usize, 8192] {
-            let n = 4096usize;
-            let mut rng = Pcg64::seed(0xBEEF ^ p as u64);
-            let x = Mat::from_fn(p, n, |_, _| rng.normal());
-            let cfg = SparsifyConfig { gamma: 0.05, transform: TransformKind::Hadamard, seed: 3 };
-            let sp = Sparsifier::new(p, cfg).unwrap();
-            let whole = sp.compress_chunk(&x, 0).unwrap();
-            // 512-column pieces ≈ a few-MB reader budget at this (p, m)
-            let mut pieces = Vec::new();
-            let mut a = 0usize;
-            while a < n {
-                let b = (a + 512).min(n);
-                pieces.push(sp.compress_chunk(&x.col_range(a, b), a).unwrap());
-                a = b;
-            }
-            let opts =
-                KmeansOpts { n_init: 1, max_iters: KM_ITERS, tol_frac: 0.0, seed: 1 };
-            for workers in [1usize, 2, 4] {
-                let chunks = [whole.clone()];
-                let r = pds::bench::bench(
-                    &format!("kmeans inmemory p={p} (n={n},K={KM_K}) w={workers}"),
-                    0,
-                    3,
-                    || {
-                        let sk = SparsifiedKmeans::new(cfg, KM_K, opts).with_workers(workers);
-                        let m = sk.fit_chunks(&sp, &chunks, &NativeAssigner).unwrap();
-                        m.result.objective
-                    },
-                );
-                let ms = r.median_s * 1e3 / KM_ITERS as f64;
-                println!("   -> {ms:.1} ms/iteration (in-memory)");
-                entries.push(Entry { result: r, metric: "ms/iter", value: ms });
-
-                let r = pds::bench::bench(
-                    &format!("kmeans stream p={p} (n={n},K={KM_K},chunk=512) w={workers}"),
-                    0,
-                    3,
-                    || {
-                        let mut src = SparseVecSource::new(pieces.clone()).unwrap();
-                        let sk = SparsifiedKmeans::new(cfg, KM_K, opts).with_workers(workers);
-                        let (m, _passes) =
-                            sk.fit_source(&sp, &mut src, &NativeAssigner, true).unwrap();
-                        m.result.objective
-                    },
-                );
-                let ms = r.median_s * 1e3 / KM_ITERS as f64;
-                println!("   -> {ms:.1} ms/iteration (streaming)");
-                entries.push(Entry { result: r, metric: "ms/iter", value: ms });
-            }
-        }
+        let nd = if quick { 2000 } else { 5000 };
+        let d = digits(nd, DigitConfig::default());
+        let cfg = SparsifyConfig { gamma: 0.15, transform: TransformKind::Hadamard, seed: 4 };
+        let sp = Sparsifier::new(784, cfg).unwrap();
+        let c64 = sp.compress_chunk(&d.data, 0).unwrap();
+        let c32 = c64.clone().with_precision(Precision::F32);
+        let ev = |c: &SparseChunk| {
+            let mut est = CovarianceEstimator::new(sp.p(), sp.m());
+            est.accumulate(c);
+            let cov = est.estimate();
+            let (vals, _) = pds::linalg::sym_eig_topk(&cov, 10, 6, 1);
+            vals.iter().sum::<f64>()
+        };
+        let (e64, e32) = (ev(&c64), ev(&c32));
+        let rel = ((e64 - e32) / e64).abs();
+        println!("top-10 explained variance: f64 {e64:.6e}, f32 {e32:.6e}, rel diff {rel:.3e}");
+        checks.push(Check {
+            name: "fig1 digits explained-variance parity (f32 vs f64)",
+            value: rel,
+            tolerance: 1e-3,
+        });
     }
 
-    if let Err(e) = write_json(&entries) {
+    if let Err(e) = write_json(&entries, &checks) {
         eprintln!("warning: could not write BENCH_hotpaths.json: {e}");
     }
 }
 
 /// Emit the machine-readable perf log at the repository root (one dir
 /// above the crate).
-fn write_json(entries: &[Entry]) -> std::io::Result<()> {
+fn write_json(entries: &[Entry], checks: &[Check]) -> std::io::Result<()> {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .map(|p| p.to_path_buf())
@@ -291,6 +472,16 @@ fn write_json(entries: &[Entry]) -> std::io::Result<()> {
             e.metric,
             e.value,
             if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ],\n  \"checks\": [\n");
+    for (i, c) in checks.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"name\": \"{}\", \"value\": {:e}, \"tolerance\": {:e}}}{}\n",
+            c.name,
+            c.value,
+            c.tolerance,
+            if i + 1 < checks.len() { "," } else { "" }
         ));
     }
     body.push_str("  ]\n}\n");

@@ -274,7 +274,7 @@ mod tests {
 
         let mut src = MatSource::new(&d.data, 64);
         let (model, report) = run_sparsified_kmeans_stream(
-            &mut src, scfg, 3, opts, &NativeAssigner, stream, true,
+            &mut src, scfg, 3, opts, &NativeAssigner::new(), stream, true,
         )
         .unwrap();
         assert_eq!(report.n, 300);
@@ -309,7 +309,7 @@ mod tests {
 
         let mut src = MatSource::new(&d.data, 128);
         let (two, report) =
-            run_two_pass_stream(&mut src, scfg, 3, opts, &NativeAssigner, StreamConfig::default())
+            run_two_pass_stream(&mut src, scfg, 3, opts, &NativeAssigner::new(), StreamConfig::default())
                 .unwrap();
         assert_eq!(report.passes, 2);
         assert!(report.timer.get("pass2") > 0.0);
@@ -317,7 +317,7 @@ mod tests {
         // equivalent: one-pass fit + the public refine helper
         let mut src2 = MatSource::new(&d.data, 128);
         let (model, _) = run_sparsified_kmeans_stream(
-            &mut src2, scfg, 3, opts, &NativeAssigner, StreamConfig::default(), true,
+            &mut src2, scfg, 3, opts, &NativeAssigner::new(), StreamConfig::default(), true,
         )
         .unwrap();
         let (refined, _secs) = two_pass_refine_stream(&mut src2, &model, 3).unwrap();
@@ -354,7 +354,7 @@ mod tests {
 
         let mut src = SparseVecSource::new(vec![chunk.clone()]).unwrap();
         let (model, report) = run_sparsified_kmeans_sparse(
-            &mut src, &sp, 3, opts, &NativeAssigner, 2, true,
+            &mut src, &sp, 3, opts, &NativeAssigner::new(), 2, true,
         )
         .unwrap();
         assert_eq!(report.passes, 0, "sparse fit reads no raw data");
@@ -426,7 +426,7 @@ mod tests {
         let mut store = SparseStoreReader::open(&dir_a).unwrap();
         let opts = KmeansOpts { n_init: 2, ..Default::default() };
         let (model, sreport) =
-            run_sparsified_kmeans_from_store(&mut store, 2, opts, &NativeAssigner, 1).unwrap();
+            run_sparsified_kmeans_from_store(&mut store, 2, opts, &NativeAssigner::new(), 1).unwrap();
         assert_eq!(sreport.passes, 0);
         let mut store2 = SparseStoreReader::open(&dir_b).unwrap();
         let plan = FitPlan::kmeans().store(&mut store2).k(2).kmeans_opts(opts).run().unwrap();

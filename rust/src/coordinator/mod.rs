@@ -75,11 +75,23 @@ pub struct StreamConfig {
     pub queue_depth: usize,
     /// Columns per chunk when slicing in-memory matrices.
     pub chunk_cols: usize,
+    /// Serial-fallback crossover for parallel K-means assignment: the
+    /// assigner only fans out when every worker gets at least this many
+    /// columns. `None` (the default) resolves at fit time — the
+    /// `PDS_ASSIGN_COLS_PER_WORKER` env var if set, else the measured
+    /// per-(precision, ISA) table. Any value is bitwise-safe; this only
+    /// moves the serial/parallel break-even.
+    pub assign_cols_per_worker: Option<usize>,
 }
 
 impl Default for StreamConfig {
     fn default() -> Self {
-        StreamConfig { workers: 1, queue_depth: 4, chunk_cols: 256 }
+        StreamConfig {
+            workers: 1,
+            queue_depth: 4,
+            chunk_cols: 256,
+            assign_cols_per_worker: None,
+        }
     }
 }
 

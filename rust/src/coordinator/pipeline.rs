@@ -161,7 +161,7 @@ mod tests {
         let mut src = MatSource::new(x, 7); // awkward chunk size on purpose
         let mut chunks: Vec<SparseChunk> = Vec::new();
         let mut timer = Timer::new();
-        let cfg = StreamConfig { workers, queue_depth: 2, chunk_cols: 7 };
+        let cfg = StreamConfig { workers, queue_depth: 2, chunk_cols: 7, ..Default::default() };
         let mut push = |c: SparseChunk| -> Result<()> {
             chunks.push(c);
             Ok(())

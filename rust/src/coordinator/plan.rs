@@ -40,7 +40,7 @@ use crate::linalg::Mat;
 use crate::metrics::Timer;
 use crate::pca::Pca;
 use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
-use crate::sparse::{SparseChunk, SparseChunkSource};
+use crate::sparse::{Precision, SparseChunk, SparseChunkSource};
 use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
 
 use super::krylov::{SourceCovOp, DEFAULT_KRYLOV_ITERS};
@@ -258,6 +258,10 @@ pub struct FitPlan<'a> {
     /// store-backed plans validate it against the source's recorded
     /// scheme instead of silently ignoring it.
     scheme: Option<Scheme>,
+    /// `Some` only when the caller set a precision explicitly — sparse-
+    /// and store-backed plans validate it against the source's recorded
+    /// precision, mirroring the `scheme` contract.
+    precision: Option<Precision>,
     topk: usize,
     solver: Option<Solver>,
     k: Option<usize>,
@@ -271,7 +275,7 @@ pub struct FitPlan<'a> {
 
 /// Shared default assigner instance (`&'static` so the builder can fall
 /// back to it without an allocation).
-static NATIVE_ASSIGNER: NativeAssigner = NativeAssigner;
+static NATIVE_ASSIGNER: NativeAssigner = NativeAssigner::new();
 
 impl<'a> FitPlan<'a> {
     fn new(task: Task) -> Self {
@@ -282,6 +286,7 @@ impl<'a> FitPlan<'a> {
             stream: StreamConfig::default(),
             precondition: true,
             scheme: None,
+            precision: None,
             topk: DEFAULT_TOPK,
             solver: None,
             k: None,
@@ -397,6 +402,38 @@ impl<'a> FitPlan<'a> {
     pub fn scheme(mut self, scheme: Scheme) -> Self {
         self.scheme = Some(scheme);
         self
+    }
+
+    /// Storage precision for the sparsified values (default
+    /// [`Precision::F64`] — byte-identical to not calling this).
+    /// [`Precision::F32`] quantizes each kept value once at compress
+    /// time and halves the chunk / store value bytes; all accumulation
+    /// stays in `f64`, so the only error is the per-value quantization
+    /// (≤ 0.5 ulp of `f32`). Sparse-source and store-backed plans take
+    /// their precision from the source / manifest; setting one
+    /// explicitly there asserts it — a mismatch fails the plan.
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
+    /// Sparse-/store-backed plans: an explicitly requested precision
+    /// must match the source's recorded one.
+    fn check_requested_precision(
+        requested: Option<Precision>,
+        actual: Precision,
+    ) -> Result<()> {
+        if let Some(req) = requested {
+            if req != actual {
+                return invalid(format!(
+                    "FitPlan: .precision({}) does not match this source's recorded \
+                     precision ({})",
+                    req.name(),
+                    actual.name()
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// The effective selection law of a raw-stream plan: the configured
@@ -545,18 +582,22 @@ impl<'a> FitPlan<'a> {
         let topk = self.topk;
         let workers = self.stream.workers;
         let scheme = self.effective_scheme();
+        let precision = self.precision.unwrap_or_default();
         match Self::take_source(&mut self.source)? {
             SourceKind::Raw(src) => {
                 let Some(scfg) = self.scfg else {
                     return invalid("FitPlan: raw stream needs a SparsifyConfig");
                 };
                 match solver {
-                    Solver::Covariance => pca_cov_stream(src, scfg, scheme, topk, self.stream),
-                    _ => pca_krylov_stream(src, scfg, scheme, topk, self.stream),
+                    Solver::Covariance => {
+                        pca_cov_stream(src, scfg, scheme, precision, topk, self.stream)
+                    }
+                    _ => pca_krylov_stream(src, scfg, scheme, precision, topk, self.stream),
                 }
             }
             SourceKind::Sparse { src, sp, preconditioned } => {
                 Self::check_requested_scheme(self.scheme, sp.scheme())?;
+                Self::check_requested_precision(self.precision, src.precision())?;
                 match solver {
                     Solver::Covariance => pca_cov_sparse(src, &sp, topk, workers, preconditioned),
                     _ => pca_krylov_sparse(src, &sp, topk, workers, preconditioned),
@@ -565,6 +606,7 @@ impl<'a> FitPlan<'a> {
             SourceKind::Store(reader) => {
                 let sp = reader.sparsifier()?;
                 Self::check_requested_scheme(self.scheme, sp.scheme())?;
+                Self::check_requested_precision(self.precision, reader.manifest().precision)?;
                 let preconditioned = reader.manifest().preconditioned;
                 match solver {
                     Solver::Covariance => {
@@ -583,13 +625,23 @@ impl<'a> FitPlan<'a> {
         let Some(k) = self.k else {
             return invalid("FitPlan::kmeans() needs .k(clusters)");
         };
+        // a StreamConfig fan-out override builds a configured local
+        // assigner; otherwise the shared static default is used as-is
+        let local_assigner;
         let assigner: &dyn SparseAssigner = match self.assigner {
             Some(a) => a,
-            None => &NATIVE_ASSIGNER,
+            None => match self.stream.assign_cols_per_worker {
+                Some(cols) => {
+                    local_assigner = NativeAssigner::new().with_cols_per_worker(cols);
+                    &local_assigner
+                }
+                None => &NATIVE_ASSIGNER,
+            },
         };
         let workers = self.stream.workers;
         let opts = self.opts;
         let scheme = self.effective_scheme();
+        let precision = self.precision.unwrap_or_default();
         let refine = self.refine.take();
         let report = match Self::take_source(&mut self.source)? {
             SourceKind::Raw(src) => {
@@ -609,6 +661,7 @@ impl<'a> FitPlan<'a> {
                     &mut *src,
                     scfg,
                     scheme,
+                    precision,
                     k,
                     opts,
                     assigner,
@@ -633,6 +686,7 @@ impl<'a> FitPlan<'a> {
             }
             SourceKind::Sparse { src, sp, preconditioned } => {
                 Self::check_requested_scheme(self.scheme, sp.scheme())?;
+                Self::check_requested_precision(self.precision, src.precision())?;
                 let mut report = kmeans_from_sparse(
                     src,
                     &sp,
@@ -663,6 +717,7 @@ impl<'a> FitPlan<'a> {
             SourceKind::Store(reader) => {
                 let sp = reader.sparsifier()?;
                 Self::check_requested_scheme(self.scheme, sp.scheme())?;
+                Self::check_requested_precision(self.precision, reader.manifest().precision)?;
                 let preconditioned = reader.manifest().preconditioned;
                 let mut report = kmeans_from_sparse(
                     reader,
@@ -714,7 +769,8 @@ impl<'a> FitPlan<'a> {
         let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
         let mut timer = Timer::new();
         let mut writer =
-            SparseStoreWriter::create(&dir, &sp, scfg, precondition, self.shard_cols)?;
+            SparseStoreWriter::create(&dir, &sp, scfg, precondition, self.shard_cols)?
+                .with_precision(self.precision.unwrap_or_default());
         let mut sink = |c: SparseChunk| writer.append(c);
         let n = compress_stream(src, &sp, self.stream, precondition, &mut sink, &mut timer)?;
         let manifest = timer.time("store", || writer.finish())?;
@@ -772,17 +828,20 @@ fn merge_group(group: &mut Vec<SparseChunk>) -> Result<SparseChunk> {
 }
 
 /// Compress a raw stream, collecting the chunks sorted + coalesced for an
-/// efficient in-memory fit. Returns (chunks, n).
+/// efficient in-memory fit. Returns (chunks, n). Chunks are quantized to
+/// `precision` as they arrive (a no-op at `F64`), so the fit sees exactly
+/// what an equivalent store round trip would yield.
 fn compress_collect(
     src: &mut dyn ChunkSource,
     sp: &Sparsifier,
     stream: StreamConfig,
     precondition: bool,
+    precision: Precision,
     timer: &mut Timer,
 ) -> Result<(Vec<SparseChunk>, usize)> {
     let mut chunks: Vec<SparseChunk> = Vec::new();
     let mut collect = |c: SparseChunk| -> Result<()> {
-        chunks.push(c);
+        chunks.push(c.with_precision(precision));
         Ok(())
     };
     let n = compress_stream(src, sp, stream, precondition, &mut collect, timer)?;
@@ -828,10 +887,12 @@ fn check_source_shape(source: &dyn SparseChunkSource, sp: &Sparsifier) -> Result
 
 /// One-pass sparsified K-means over a raw stream (Algorithm 1 at scale):
 /// compress with backpressure, hold the compressed chunks, iterate.
+#[allow(clippy::too_many_arguments)]
 fn kmeans_inmemory_stream(
     src: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
     scheme: Scheme,
+    precision: Precision,
     k: usize,
     opts: KmeansOpts,
     assigner: &dyn SparseAssigner,
@@ -840,7 +901,7 @@ fn kmeans_inmemory_stream(
     let precondition = scheme.preconditions();
     let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
     let mut timer = Timer::new();
-    let (chunks, n) = compress_collect(src, &sp, stream, precondition, &mut timer)?;
+    let (chunks, n) = compress_collect(src, &sp, stream, precondition, precision, &mut timer)?;
     if n == 0 {
         return invalid("FitPlan: stream is empty");
     }
@@ -1015,6 +1076,7 @@ fn pca_cov_stream(
     src: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
     scheme: Scheme,
+    precision: Precision,
     topk: usize,
     stream: StreamConfig,
 ) -> Result<FitReport> {
@@ -1033,6 +1095,9 @@ fn pca_cov_stream(
     let mut pending: BTreeMap<usize, SparseChunk> = BTreeMap::new();
     let mut next_col = 0usize;
     let mut fold = |c: SparseChunk| -> Result<()> {
+        // quantize (no-op at F64) before the in-order fold, so the
+        // estimates match a store round trip at the same precision
+        let c = c.with_precision(precision);
         pending.insert(c.start_col(), c);
         loop {
             let first = match pending.keys().next() {
@@ -1080,13 +1145,14 @@ fn pca_krylov_stream(
     src: &mut dyn ChunkSource,
     scfg: SparsifyConfig,
     scheme: Scheme,
+    precision: Precision,
     topk: usize,
     stream: StreamConfig,
 ) -> Result<FitReport> {
     let precondition = scheme.preconditions();
     let sp = Sparsifier::with_scheme(src.p(), scfg, scheme)?;
     let mut timer = Timer::new();
-    let (chunks, n) = compress_collect(src, &sp, stream, precondition, &mut timer)?;
+    let (chunks, n) = compress_collect(src, &sp, stream, precondition, precision, &mut timer)?;
     if n == 0 {
         return invalid("FitPlan: stream is empty");
     }
@@ -1467,5 +1533,134 @@ mod tests {
             crate::pca::recovered_components(&kryf.pca.components, &covf.pca.components, 0.95),
             2
         );
+    }
+
+    #[test]
+    fn explicit_f64_precision_is_byte_identical_to_the_default_plan() {
+        // `--precision f64` must reproduce current behavior bit for bit
+        let mut rng = Pcg64::seed(31);
+        let d = crate::data::spiked(32, 400, &[6.0, 3.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 2 };
+        let mut src_a = MatSource::new(&d.data, 128);
+        let base = FitPlan::pca().stream(&mut src_a, scfg).topk(2).run().unwrap();
+        let mut src_b = MatSource::new(&d.data, 128);
+        let explicit = FitPlan::pca()
+            .stream(&mut src_b, scfg)
+            .precision(Precision::F64)
+            .topk(2)
+            .run()
+            .unwrap();
+        let (a, b) = (base.pca_fit().unwrap(), explicit.pca_fit().unwrap());
+        for (x, y) in a.mean.iter().zip(&b.mean) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.pca.components.as_slice().iter().zip(b.pca.components.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_precision_tracks_f64_pca_within_tolerance() {
+        // f32 storage + f64 accumulation: the only error source is the
+        // one-time value quantization at the sparsifier boundary, so the
+        // recovered spectrum must agree to well under the documented 1e-3
+        // relative explained-variance tolerance
+        let mut rng = Pcg64::seed(33);
+        let d = crate::data::spiked(32, 800, &[7.0, 3.0], false, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 5 };
+        let mut src = MatSource::new(&d.data, 128);
+        let full = FitPlan::pca().stream(&mut src, scfg).topk(2).run().unwrap();
+        let mut src2 = MatSource::new(&d.data, 128);
+        let quant = FitPlan::pca()
+            .stream(&mut src2, scfg)
+            .precision(Precision::F32)
+            .topk(2)
+            .run()
+            .unwrap();
+        let a = full.pca_fit().unwrap();
+        let b = quant.pca_fit().unwrap();
+        let ev64: f64 = a.pca.eigenvalues.iter().sum();
+        let ev32: f64 = b.pca.eigenvalues.iter().sum();
+        let rel = ((ev64 - ev32) / ev64).abs();
+        assert!(rel < 1e-3, "explained-variance drift {rel:e} exceeds 1e-3");
+        assert_eq!(
+            crate::pca::recovered_components(&b.pca.components, &a.pca.components, 0.95),
+            2
+        );
+    }
+
+    #[test]
+    fn f32_store_roundtrip_fits_and_precision_mismatch_is_rejected() {
+        let mut rng = Pcg64::seed(35);
+        let d = gaussian_blobs(32, 300, 3, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed: 7 };
+        let base = std::env::temp_dir()
+            .join(format!("pds_plan_precision_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let dir32 = base.join("f32");
+        let dir64 = base.join("f64");
+
+        let mut src = MatSource::new(&d.data, 64);
+        let report = FitPlan::compress()
+            .stream(&mut src, scfg)
+            .precision(Precision::F32)
+            .store_dir(&dir32)
+            .run()
+            .unwrap();
+        assert_eq!(report.store_manifest().unwrap().precision, Precision::F32);
+        let mut src = MatSource::new(&d.data, 64);
+        FitPlan::compress().stream(&mut src, scfg).store_dir(&dir64).run().unwrap();
+
+        // the f32 store fits end to end, and an explicit matching
+        // .precision() passes the compatibility check
+        let mut reader = SparseStoreReader::open(&dir32).unwrap();
+        let fit = FitPlan::kmeans()
+            .store(&mut reader)
+            .k(3)
+            .precision(Precision::F32)
+            .run()
+            .unwrap();
+        let model = fit.kmeans_model().unwrap();
+        assert_eq!(model.result.assign.len(), 300);
+        assert!(model.result.objective.is_finite());
+
+        // mismatches are rejected in both directions
+        let mut reader = SparseStoreReader::open(&dir32).unwrap();
+        let err = FitPlan::pca().store(&mut reader).precision(Precision::F64).run();
+        assert!(err.is_err(), "f64 request on an f32 store must be rejected");
+        let mut reader = SparseStoreReader::open(&dir64).unwrap();
+        let err =
+            FitPlan::kmeans().store(&mut reader).k(3).precision(Precision::F32).run();
+        assert!(err.is_err(), "f32 request on an f64 store must be rejected");
+
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn assign_cols_per_worker_override_is_bitwise_invariant() {
+        // the StreamConfig fan-out override only moves the serial/parallel
+        // crossover; the fit itself must not change
+        let mut rng = Pcg64::seed(37);
+        let d = gaussian_blobs(32, 400, 3, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 9 };
+        let mut src = MatSource::new(&d.data, 128);
+        let serial = FitPlan::kmeans().stream(&mut src, scfg).k(3).run().unwrap();
+        let mut src = MatSource::new(&d.data, 128);
+        let fanned = FitPlan::kmeans()
+            .stream(&mut src, scfg)
+            .k(3)
+            .stream_config(StreamConfig {
+                workers: 4,
+                assign_cols_per_worker: Some(16),
+                ..Default::default()
+            })
+            .run()
+            .unwrap();
+        let a = serial.kmeans_model().unwrap();
+        let b = fanned.kmeans_model().unwrap();
+        assert_eq!(a.result.assign, b.result.assign);
+        for (x, y) in a.result.centers.as_slice().iter().zip(b.result.centers.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

@@ -117,6 +117,10 @@ pub(crate) fn scatter_chunk(chunk: &SparseChunk, bt: &Mat, gt: &mut Mat, workers
         return;
     }
     let workers = if nc < MIN_SCATTER_COLS { 1 } else { workers.max(1) };
+    // one ISA decision per chunk — both phases run the crate::simd
+    // dot/scatter kernels, whose tiers are bitwise identical, so the
+    // partition-invariance argument below is unaffected by dispatch
+    let isa = crate::simd::active();
     // phase 1 — Dᵀ (b×nc): column i holds d_i = Σ_t w_t · Bᵀ[:, idx_t].
     // Sample-partitioned; each column is computed by exactly one worker
     // with a pure per-sample kernel, so the values are partition-free.
@@ -125,15 +129,11 @@ pub(crate) fn scatter_chunk(chunk: &SparseChunk, bt: &Mat, gt: &mut Mat, workers
         let ranges = parallel::split_ranges(nc, workers);
         let panels = parallel::split_col_panels(dt.as_mut_slice(), b, &ranges);
         let jobs: Vec<_> = ranges.into_iter().zip(panels).collect();
+        let bts = bt.as_slice();
         parallel::run_panel_jobs(jobs, |r: Range<usize>, panel: &mut [f64]| {
             for (local, i) in r.enumerate() {
                 let dcol = &mut panel[local * b..(local + 1) * b];
-                for (&j, &v) in chunk.col_indices(i).iter().zip(chunk.col_values(i)) {
-                    let bcol = bt.col(j as usize);
-                    for (d, x) in dcol.iter_mut().zip(bcol) {
-                        *d += v * x;
-                    }
-                }
+                crate::simd::col_dot(isa, dcol, chunk.col_indices(i), chunk.col_values(i), bts);
             }
         });
     }
@@ -158,14 +158,14 @@ pub(crate) fn scatter_chunk(chunk: &SparseChunk, bt: &Mat, gt: &mut Mat, workers
                     continue;
                 }
                 let dcol = dt.col(i);
-                for a in a_lo..a_hi {
-                    let j = (idx[a] as usize) - r.start;
-                    let va = val[a];
-                    let out = &mut panel[j * b..(j + 1) * b];
-                    for (o, d) in out.iter_mut().zip(dcol) {
-                        *o += va * d;
-                    }
-                }
+                crate::simd::col_scatter(
+                    isa,
+                    panel,
+                    &idx[a_lo..a_hi],
+                    &val[a_lo..a_hi],
+                    lo,
+                    dcol,
+                );
             }
         });
     }

@@ -147,7 +147,7 @@ pub fn run_algo(
                 let chunk = sp.compress_chunk_no_precondition(&d.data, 0)?;
                 let sk = SparsifiedKmeans::new(scfg_np, k, opts);
                 let model =
-                    sk.fit_chunks_raw(&sp, &[chunk], &crate::kmeans::NativeAssigner, false)?;
+                    sk.fit_chunks_raw(&sp, &[chunk], &crate::kmeans::NativeAssigner::new(), false)?;
                 model.result
             } else {
                 let sk = SparsifiedKmeans::new(scfg, k, opts);

@@ -49,7 +49,7 @@ fn run_one(
 ) -> Result<BigRun> {
     let (stream, mut src) = source(n, seed);
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: seed ^ 0x10 };
-    let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols: 2048 };
+    let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols: 2048, ..Default::default() };
     let t0 = Instant::now();
     let report = FitPlan::kmeans()
         .stream(&mut src, scfg)

@@ -60,7 +60,7 @@ pub fn run(args: &Args) -> Result<()> {
     let mut rows = Vec::new();
     for (gi, &gamma) in gammas.iter().enumerate() {
         let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed: 7 };
-        let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols };
+        let stream_cfg = StreamConfig { workers: 1, queue_depth: 4, chunk_cols, ..Default::default() };
 
         // compress ONCE per gamma: raw store -> sparse store (1 raw pass)
         let sparse_dir = std::env::temp_dir()

@@ -58,7 +58,7 @@ pub fn run(args: &Args) -> Result<()> {
     let chunk = sp.compress_chunk(&d.data, 0)?;
     let centers_pre = sp.precondition_dense(&centers);
     let t0 = Instant::now();
-    let (assign_sp, _) = NativeAssigner.assign(&chunk, &centers_pre)?;
+    let (assign_sp, _) = NativeAssigner::new().assign(&chunk, &centers_pre)?;
     let t_assign_sp = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
     {

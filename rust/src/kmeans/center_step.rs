@@ -326,7 +326,7 @@ mod tests {
         let mut dist = vec![0.0f64; n];
         let mut off = 0usize;
         for chunk in chunks {
-            NativeAssigner
+            NativeAssigner::new()
                 .assign_into(
                     chunk,
                     centers,
@@ -366,7 +366,7 @@ mod tests {
             let mut step = CenterStep::new(sp.p(), k, workers);
             step.begin();
             for c in &chunks {
-                step.fold(c, &centers, &NativeAssigner).unwrap();
+                step.fold(c, &centers, &NativeAssigner::new()).unwrap();
             }
             assert_eq!(step.n(), 700);
             assert_eq!(step.assign(), &a_ref[..], "splits {splits:?} workers {workers}");
@@ -391,13 +391,13 @@ mod tests {
         let mut step = CenterStep::new(sp.p(), k, 2);
         step.begin();
         for c in &chunks {
-            step.fold(c, &centers, &NativeAssigner).unwrap();
+            step.fold(c, &centers, &NativeAssigner::new()).unwrap();
         }
         let first = (step.assign().to_vec(), step.objective());
         step.begin();
         assert_eq!(step.n(), 0);
         for c in &chunks {
-            step.fold(c, &centers, &NativeAssigner).unwrap();
+            step.fold(c, &centers, &NativeAssigner::new()).unwrap();
         }
         assert_eq!(step.assign(), &first.0[..]);
         assert_eq!(step.objective().to_bits(), first.1.to_bits());
@@ -413,6 +413,6 @@ mod tests {
         let mut step = CenterStep::new(32, 2, 1);
         step.begin();
         let centers = Mat::zeros(32, 2);
-        assert!(step.fold(&chunk, &centers, &NativeAssigner).is_err());
+        assert!(step.fold(&chunk, &centers, &NativeAssigner::new()).is_err());
     }
 }

@@ -11,7 +11,7 @@
 
 mod center_step;
 mod dense;
-mod plusplus;
+pub(crate) mod plusplus;
 mod sparsified;
 mod twopass;
 

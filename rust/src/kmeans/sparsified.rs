@@ -31,13 +31,15 @@
 //! model is identical for every restart worker count.
 
 use std::ops::Range;
+use std::sync::OnceLock;
 
 use crate::error::{invalid, Result};
 use crate::linalg::Mat;
 use crate::parallel;
 use crate::rng::Pcg64;
 use crate::sampling::{Sparsifier, SparsifyConfig};
-use crate::sparse::{SparseChunk, SparseChunkSource};
+use crate::simd::Isa;
+use crate::sparse::{Precision, SparseChunk, SparseChunkSource};
 
 use super::center_step::{CenterStep, ChunkWalk, SliceWalk, SourceWalk};
 use super::plusplus::{kmeans_pp_walk, masked_dist2};
@@ -93,51 +95,209 @@ pub trait SparseAssigner: Sync {
     }
 }
 
-/// Minimum columns per worker before the parallel assigner fans out.
-const MIN_ASSIGN_COLS_PER_WORKER: usize = 1024;
+/// Measured serial→parallel crossover: the smallest per-worker column
+/// slice worth a scoped-thread spawn, per (precision, ISA) mode. Policy:
+/// a worker's slice should cost ≥ ~10× the ~10 µs spawn+join overhead.
+/// On the §assignment bench workload (digits, m=51, K=3) the scalar
+/// kernel runs ~109 ns/col and the AVX2 panel kernel ~56 ns/col
+/// (`BENCH_hotpaths.json`), giving ~1k and ~2k columns respectively.
+/// Precision does not move the crossover — `f32`-stored chunks run the
+/// same `f64` kernels after exact widening.
+fn measured_cols_per_worker(precision: Precision, isa: Isa) -> usize {
+    let _ = precision;
+    match isa {
+        // the assignment kernel has no SSE2 variant (falls back to
+        // scalar), so SSE2 shares the scalar crossover
+        Isa::Scalar | Isa::Sse2 => 1024,
+        Isa::Avx2 => 2048,
+    }
+}
 
-/// Assignment kernel over one contiguous column range.
+/// Parse a `PDS_ASSIGN_COLS_PER_WORKER` override (must be a positive
+/// integer; anything else warns and is ignored). Split out from the env
+/// read so it is unit-testable without racing the process environment.
+pub(crate) fn parse_assign_cols_override(raw: Option<&str>) -> Option<usize> {
+    let s = raw?.trim();
+    match s.parse::<usize>() {
+        Ok(v) if v > 0 => Some(v),
+        _ => {
+            eprintln!(
+                "warning: PDS_ASSIGN_COLS_PER_WORKER={s:?} is not a positive integer; \
+                 using the measured crossover"
+            );
+            None
+        }
+    }
+}
+
+fn env_assign_cols_override() -> Option<usize> {
+    static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        parse_assign_cols_override(std::env::var("PDS_ASSIGN_COLS_PER_WORKER").ok().as_deref())
+    })
+}
+
+/// Resolved per-chunk assignment strategy: the scalar center-major loop,
+/// or the AVX2 panel kernel over 4-center groups.
+enum AssignKernel {
+    Scalar,
+    /// `panel[g*p*4 ..][j*4 + c]` = coordinate `j` of center `4g + c`;
+    /// lanes past `k` in the last group are zero (computed, never
+    /// scanned by the argmin).
+    Panel { panel: Vec<f64>, k: usize, isa: Isa },
+}
+
+fn build_assign_kernel(centers: &Mat, isa: Isa) -> AssignKernel {
+    if isa < Isa::Avx2 {
+        // no SSE2 assignment variant: 2 lanes don't cover the 2 loads +
+        // broadcast per slot, and the scalar loop is already SSE2 code
+        return AssignKernel::Scalar;
+    }
+    let p = centers.rows();
+    let k = centers.cols();
+    let groups = (k + 3) / 4;
+    let mut panel = vec![0.0f64; groups * p * 4];
+    for c in 0..k {
+        let dst = &mut panel[(c / 4) * p * 4..];
+        let lane = c % 4;
+        for (j, &v) in centers.col(c).iter().enumerate() {
+            dst[j * 4 + lane] = v;
+        }
+    }
+    AssignKernel::Panel { panel, k, isa }
+}
+
+/// Assignment kernel over one contiguous column range. Both arms visit
+/// centers in index order with a strict `<`, so the first of tied
+/// minima wins — and the panel kernel's distances are bitwise equal to
+/// the scalar chain (see `crate::simd`), so the two arms agree exactly.
 fn assign_range(
     chunk: &SparseChunk,
     centers: &Mat,
+    kernel: &AssignKernel,
     r: Range<usize>,
     out: &mut [u32],
     dist: &mut [f64],
 ) {
-    let k = centers.cols();
-    for (local, i) in r.enumerate() {
-        let idx = chunk.col_indices(i);
-        let vals = chunk.col_values(i);
-        let mut best = f64::INFINITY;
-        let mut arg = 0u32;
-        for c in 0..k {
-            let d = masked_dist2(idx, vals, centers.col(c));
-            if d < best {
-                best = d;
-                arg = c as u32;
+    match kernel {
+        AssignKernel::Scalar => {
+            let k = centers.cols();
+            for (local, i) in r.enumerate() {
+                let idx = chunk.col_indices(i);
+                let vals = chunk.col_values(i);
+                let mut best = f64::INFINITY;
+                let mut arg = 0u32;
+                for c in 0..k {
+                    let d = masked_dist2(idx, vals, centers.col(c));
+                    if d < best {
+                        best = d;
+                        arg = c as u32;
+                    }
+                }
+                out[local] = arg;
+                dist[local] = best;
             }
         }
-        out[local] = arg;
-        dist[local] = best;
+        AssignKernel::Panel { panel, k, isa } => {
+            let group_len = centers.rows() * 4;
+            let groups = panel.len() / group_len;
+            let mut d4 = [0.0f64; 4];
+            for (local, i) in r.enumerate() {
+                let idx = chunk.col_indices(i);
+                let vals = chunk.col_values(i);
+                let mut best = f64::INFINITY;
+                let mut arg = 0u32;
+                for g in 0..groups {
+                    crate::simd::masked_dist2_x4(
+                        *isa,
+                        idx,
+                        vals,
+                        &panel[g * group_len..(g + 1) * group_len],
+                        &mut d4,
+                    );
+                    let lanes = (*k - 4 * g).min(4);
+                    for (c, &d) in d4.iter().take(lanes).enumerate() {
+                        if d < best {
+                            best = d;
+                            arg = (4 * g + c) as u32;
+                        }
+                    }
+                }
+                out[local] = arg;
+                dist[local] = best;
+            }
+        }
     }
 }
 
-/// Pure-Rust masked-distance assigner. Uses the same algebraic expansion
-/// as the Pallas kernel — `‖w‖² − 2⟨w,μ⟩ + Σ_mask μ²` — but traverses the
-/// m kept indices per sample instead of masking dense panels (optimal on
-/// CPU where gathers are cheap and FLOPs are not).
-pub struct NativeAssigner;
+/// Pure-Rust masked-distance assigner. Traverses the m kept indices per
+/// sample instead of masking dense panels; on AVX2 it scores 4 centers
+/// at once from a transposed center panel with *broadcast* values —
+/// gather-based K-simultaneous forms were measured slower than scalar
+/// (centers are L1-resident), which is also why the single-center
+/// distance in the k-means++ seeding stays scalar.
+///
+/// Construct with [`new`](Self::new); the builders pin the fan-out
+/// crossover ([`with_cols_per_worker`](Self::with_cols_per_worker)) or
+/// the ISA tier ([`with_isa`](Self::with_isa)) — every configuration
+/// produces bitwise-identical output.
+pub struct NativeAssigner {
+    cols_per_worker: Option<usize>,
+    isa: Option<Isa>,
+}
+
+impl NativeAssigner {
+    /// Default assigner: ISA from [`crate::simd::active`], fan-out
+    /// crossover from `PDS_ASSIGN_COLS_PER_WORKER` or the measured
+    /// per-(precision, ISA) table.
+    pub const fn new() -> Self {
+        NativeAssigner { cols_per_worker: None, isa: None }
+    }
+
+    /// Pin the serial-fallback threshold: [`assign_into`] only fans out
+    /// when every worker gets at least this many columns. Takes
+    /// precedence over the `PDS_ASSIGN_COLS_PER_WORKER` env var and the
+    /// measured table.
+    ///
+    /// [`assign_into`]: SparseAssigner::assign_into
+    pub fn with_cols_per_worker(mut self, cols: usize) -> Self {
+        self.cols_per_worker = Some(cols.max(1));
+        self
+    }
+
+    /// Pin the ISA tier (clamped to what the CPU supports). Results are
+    /// bitwise identical across tiers; this exists for tests and A/B
+    /// timing.
+    pub fn with_isa(mut self, isa: Isa) -> Self {
+        self.isa = Some(isa);
+        self
+    }
+
+    fn isa(&self) -> Isa {
+        self.isa.unwrap_or_else(crate::simd::active).min(crate::simd::detect())
+    }
+
+    fn cols_per_worker(&self, precision: Precision, isa: Isa) -> usize {
+        self.cols_per_worker
+            .or_else(env_assign_cols_override)
+            .unwrap_or_else(|| measured_cols_per_worker(precision, isa))
+    }
+}
+
+impl Default for NativeAssigner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl SparseAssigner for NativeAssigner {
     fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
-        // Perf note (§Perf log): a K-simultaneous accumulator over a
-        // transposed center panel was tried and measured 2x SLOWER than
-        // this center-major form — the single-accumulator inner loop
-        // vectorizes, the K-wide one does not. Keep center-major.
+        let isa = self.isa();
+        let kernel = build_assign_kernel(centers, isa);
         let n = chunk.n();
         let mut assign = vec![0u32; n];
         let mut dist = vec![0.0f64; n];
-        assign_range(chunk, centers, 0..n, &mut assign, &mut dist);
+        assign_range(chunk, centers, &kernel, 0..n, &mut assign, &mut dist);
         let obj = dist.iter().sum();
         Ok((assign, obj))
     }
@@ -157,13 +317,16 @@ impl SparseAssigner for NativeAssigner {
         let n = chunk.n();
         debug_assert_eq!(out.len(), n);
         debug_assert_eq!(dist.len(), n);
-        // below ~1k columns per worker the scoped-thread spawn overhead
-        // beats the gather work — fall back to fewer (or zero) forks;
-        // the result is bitwise identical either way
-        let eff_workers = workers.min(n / MIN_ASSIGN_COLS_PER_WORKER).max(1);
+        let isa = self.isa();
+        let kernel = build_assign_kernel(centers, isa);
+        // below the measured crossover the scoped-thread spawn overhead
+        // beats the per-column work — fall back to fewer (or zero)
+        // forks; the result is bitwise identical either way
+        let min_cols = self.cols_per_worker(chunk.precision(), isa);
+        let eff_workers = workers.min(n / min_cols).max(1);
         let ranges = parallel::split_ranges(n, eff_workers);
         if ranges.len() <= 1 {
-            assign_range(chunk, centers, 0..n, out, dist);
+            assign_range(chunk, centers, &kernel, 0..n, out, dist);
             return Ok(());
         }
         // carve the output buffers into per-range slices
@@ -178,14 +341,17 @@ impl SparseAssigner for NativeAssigner {
             rest_dist = rd;
             jobs.push((r, o, d));
         }
+        let kernel = &kernel;
         crossbeam_utils::thread::scope(|scope| {
             let mut iter = jobs.into_iter();
             let first = iter.next().expect("len > 1");
             let handles: Vec<_> = iter
-                .map(|(r, o, d)| scope.spawn(move |_| assign_range(chunk, centers, r, o, d)))
+                .map(|(r, o, d)| {
+                    scope.spawn(move |_| assign_range(chunk, centers, kernel, r, o, d))
+                })
                 .collect();
             let (r, o, d) = first;
-            assign_range(chunk, centers, r, o, d);
+            assign_range(chunk, centers, kernel, r, o, d);
             for h in handles {
                 h.join().expect("assign worker panicked");
             }
@@ -303,7 +469,7 @@ impl SparsifiedKmeans {
     pub fn fit_dense(&self, x: &Mat) -> Result<KmeansResult> {
         let sp = Sparsifier::new(x.rows(), self.sparsify)?;
         let chunk = sp.compress_chunk(x, 0)?;
-        Ok(self.fit_chunks(&sp, &[chunk], &NativeAssigner)?.result)
+        Ok(self.fit_chunks(&sp, &[chunk], &NativeAssigner::new())?.result)
     }
 
     /// Fit on already-compressed chunks (the streaming path). `chunks`
@@ -588,11 +754,11 @@ mod tests {
         let sk = SparsifiedKmeans::new(cfg, 3, opts);
 
         let whole = sp.compress_chunk(&d.data, 0).unwrap();
-        let mono = sk.fit_chunks(&sp, &[whole], &NativeAssigner).unwrap();
+        let mono = sk.fit_chunks(&sp, &[whole], &NativeAssigner::new()).unwrap();
 
         let c0 = sp.compress_chunk(&d.data.col_range(0, 150), 0).unwrap();
         let c1 = sp.compress_chunk(&d.data.col_range(150, 400), 150).unwrap();
-        let split = sk.fit_chunks(&sp, &[c0, c1], &NativeAssigner).unwrap();
+        let split = sk.fit_chunks(&sp, &[c0, c1], &NativeAssigner::new()).unwrap();
 
         assert_eq!(mono.result.assign, split.result.assign);
         assert!((mono.result.objective - split.result.objective).abs() < 1e-9);
@@ -608,7 +774,7 @@ mod tests {
         // workers ∈ {1, 2, 4} must produce identical assignments and
         // bitwise-identical centers/objective
         let mut rng = Pcg64::seed(91);
-        // 2500 samples: past MIN_ASSIGN_COLS_PER_WORKER so the assigner
+        // 2500 samples: past the serial-fallback crossover so the assigner
         // genuinely fans out
         let d = gaussian_blobs(64, 2500, 3, 0.1, &mut rng);
         let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 17 };
@@ -618,13 +784,13 @@ mod tests {
         let chunks = [c0, c1];
         let opts = KmeansOpts { n_init: 2, ..Default::default() };
         let base = SparsifiedKmeans::new(cfg, 3, opts)
-            .fit_chunks(&sp, &chunks, &NativeAssigner)
+            .fit_chunks(&sp, &chunks, &NativeAssigner::new())
             .unwrap();
         assert_eq!(base.result.assign.len(), 2500);
         for w in [2usize, 4] {
             let par = SparsifiedKmeans::new(cfg, 3, opts)
                 .with_workers(w)
-                .fit_chunks(&sp, &chunks, &NativeAssigner)
+                .fit_chunks(&sp, &chunks, &NativeAssigner::new())
                 .unwrap();
             assert_eq!(base.result.assign, par.result.assign, "workers={w}");
             assert_eq!(
@@ -660,12 +826,12 @@ mod tests {
         let chunks = [sp.compress_chunk(&d.data, 0).unwrap()];
         let opts = KmeansOpts { n_init: 6, ..Default::default() };
         let base = SparsifiedKmeans::new(cfg, 4, opts)
-            .fit_chunks(&sp, &chunks, &NativeAssigner)
+            .fit_chunks(&sp, &chunks, &NativeAssigner::new())
             .unwrap();
         for rw in [2usize, 3, 8] {
             let par = SparsifiedKmeans::new(cfg, 4, opts)
                 .with_restart_workers(rw)
-                .fit_chunks(&sp, &chunks, &NativeAssigner)
+                .fit_chunks(&sp, &chunks, &NativeAssigner::new())
                 .unwrap();
             assert_eq!(base.result.assign, par.result.assign, "restart workers={rw}");
             assert_eq!(
@@ -700,14 +866,14 @@ mod tests {
         let whole = sp.compress_chunk(&d.data, 0).unwrap();
         let opts = KmeansOpts { n_init: 2, ..Default::default() };
         let sk = SparsifiedKmeans::new(cfg, 3, opts);
-        let base = sk.fit_chunks(&sp, &[whole], &NativeAssigner).unwrap();
+        let base = sk.fit_chunks(&sp, &[whole], &NativeAssigner::new()).unwrap();
         for bounds in [vec![0usize, 500], vec![0, 70, 500], vec![0, 1, 250, 499, 500]] {
             let pieces: Vec<SparseChunk> = bounds
                 .windows(2)
                 .map(|w| sp.compress_chunk(&d.data.col_range(w[0], w[1]), w[0]).unwrap())
                 .collect();
             let mut src = SparseVecSource::new(pieces).unwrap();
-            let (got, passes) = sk.fit_source(&sp, &mut src, &NativeAssigner, true).unwrap();
+            let (got, passes) = sk.fit_source(&sp, &mut src, &NativeAssigner::new(), true).unwrap();
             assert!(passes > 0);
             assert_eq!(base.result.assign, got.result.assign, "bounds {bounds:?}");
             assert_eq!(
@@ -739,7 +905,7 @@ mod tests {
         let chunks = [sp.compress_chunk(&d.data, 0).unwrap()];
         let opts = KmeansOpts { n_init: 1, ..Default::default() };
         let model = SparsifiedKmeans::new(cfg, 3, opts)
-            .fit_chunks(&sp, &chunks, &NativeAssigner)
+            .fit_chunks(&sp, &chunks, &NativeAssigner::new())
             .unwrap();
         // one bound per Lloyd iteration, all finite and positive
         assert_eq!(model.center_bound.len(), model.result.iterations);
@@ -764,7 +930,7 @@ mod tests {
     #[test]
     fn assign_into_default_and_parallel_agree() {
         // 4400 samples: enough for a real 4-way fan-out past the
-        // MIN_ASSIGN_COLS_PER_WORKER gate
+        // serial-fallback crossover gate
         let n = 4400usize;
         let mut rng = Pcg64::seed(53);
         let d = gaussian_blobs(32, n, 3, 0.2, &mut rng);
@@ -773,14 +939,84 @@ mod tests {
         let chunk = sp.compress_chunk(&d.data, 0).unwrap();
         let mut rng2 = Pcg64::seed(54);
         let centers = sp.precondition_dense(&random_column_seed(&chunk, 3, &mut rng2));
-        let (ids_ref, obj_ref) = NativeAssigner.assign(&chunk, &centers).unwrap();
+        let (ids_ref, obj_ref) = NativeAssigner::new().assign(&chunk, &centers).unwrap();
         for w in [1usize, 4] {
             let mut ids = vec![0u32; n];
             let mut dist = vec![0.0f64; n];
-            NativeAssigner.assign_into(&chunk, &centers, w, &mut ids, &mut dist).unwrap();
+            NativeAssigner::new().assign_into(&chunk, &centers, w, &mut ids, &mut dist).unwrap();
             assert_eq!(ids, ids_ref, "workers={w}");
             let obj: f64 = dist.iter().sum();
             assert_eq!(obj.to_bits(), obj_ref.to_bits(), "workers={w}");
+        }
+    }
+
+    #[test]
+    fn isa_tiers_assign_bitwise_identically() {
+        // same chunk/centers through every ISA tier the CPU supports,
+        // with k=5 so the panel kernel has a ragged last group (one real
+        // lane, three zero dummies): ids and distance bits must match
+        // the forced-scalar reference exactly
+        let n = 700usize;
+        let mut rng = Pcg64::seed(77);
+        let d = gaussian_blobs(64, n, 5, 0.3, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.2, transform: TransformKind::Hadamard, seed: 11 };
+        let sp = Sparsifier::new(64, cfg).unwrap();
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+        let mut rng2 = Pcg64::seed(78);
+        let centers = sp.precondition_dense(&random_column_seed(&chunk, 5, &mut rng2));
+        let scalar = NativeAssigner::new().with_isa(Isa::Scalar);
+        let (ids_ref, obj_ref) = scalar.assign(&chunk, &centers).unwrap();
+        for isa in [Isa::Sse2, Isa::Avx2] {
+            if crate::simd::detect() < isa {
+                continue;
+            }
+            let (ids, obj) =
+                NativeAssigner::new().with_isa(isa).assign(&chunk, &centers).unwrap();
+            assert_eq!(ids, ids_ref, "{}", isa.name());
+            assert_eq!(obj.to_bits(), obj_ref.to_bits(), "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn cols_per_worker_override_fans_out_bitwise() {
+        // n=600 is below every measured crossover, so the default
+        // assigner would run serial at workers=4; pinning the threshold
+        // to 50 forces a genuine fan-out — which must stay bitwise
+        // identical to the serial result
+        let n = 600usize;
+        let mut rng = Pcg64::seed(91);
+        let d = gaussian_blobs(32, n, 3, 0.25, &mut rng);
+        let cfg = SparsifyConfig { gamma: 0.25, transform: TransformKind::Hadamard, seed: 5 };
+        let sp = Sparsifier::new(32, cfg).unwrap();
+        let chunk = sp.compress_chunk(&d.data, 0).unwrap();
+        let mut rng2 = Pcg64::seed(92);
+        let centers = sp.precondition_dense(&random_column_seed(&chunk, 3, &mut rng2));
+        let (ids_ref, obj_ref) = NativeAssigner::new().assign(&chunk, &centers).unwrap();
+        let forced = NativeAssigner::new().with_cols_per_worker(50);
+        let mut ids = vec![0u32; n];
+        let mut dist = vec![0.0f64; n];
+        forced.assign_into(&chunk, &centers, 4, &mut ids, &mut dist).unwrap();
+        assert_eq!(ids, ids_ref);
+        let obj: f64 = dist.iter().sum();
+        assert_eq!(obj.to_bits(), obj_ref.to_bits());
+    }
+
+    #[test]
+    fn assign_cols_override_parsing() {
+        assert_eq!(parse_assign_cols_override(None), None);
+        assert_eq!(parse_assign_cols_override(Some("512")), Some(512));
+        assert_eq!(parse_assign_cols_override(Some("  2048 ")), Some(2048));
+        assert_eq!(parse_assign_cols_override(Some("0")), None);
+        assert_eq!(parse_assign_cols_override(Some("-4")), None);
+        assert_eq!(parse_assign_cols_override(Some("lots")), None);
+    }
+
+    #[test]
+    fn measured_crossover_table_is_sane() {
+        for precision in [Precision::F64, Precision::F32] {
+            assert_eq!(measured_cols_per_worker(precision, Isa::Scalar), 1024);
+            assert_eq!(measured_cols_per_worker(precision, Isa::Sse2), 1024);
+            assert_eq!(measured_cols_per_worker(precision, Isa::Avx2), 2048);
         }
     }
 

@@ -50,6 +50,11 @@
 //!   in-order merge (K-means assignment/center accumulation and the
 //!   covariance scatter partition their *output* space, so results are
 //!   bitwise independent of the worker count).
+//! * [`simd`] — explicit-SIMD kernels (AVX2/SSE2, runtime-dispatched
+//!   with a scalar fallback) under the FWHT, assignment, and covariance
+//!   scatter hot paths; every tier is bitwise identical in `f64`. The
+//!   companion `f32` storage mode ([`sparse::Precision`]) halves chunk
+//!   and store bytes while keeping all accumulation in `f64`.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas graphs
 //!   (`artifacts/*.hlo.txt` built by `make artifacts`); the
 //!   [`runtime::NativeEngine`] implements the same chunk ops in pure Rust
@@ -79,6 +84,7 @@ pub mod pca;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod simd;
 pub mod sparse;
 pub mod store;
 pub mod testing;
@@ -98,7 +104,7 @@ pub mod prelude {
     pub use crate::linalg::Mat;
     pub use crate::rng::Pcg64;
     pub use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
-    pub use crate::sparse::SparseChunk;
+    pub use crate::sparse::{Precision, SparseChunk};
     pub use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
     pub use crate::transform::{Ros, TransformKind};
 }

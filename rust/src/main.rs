@@ -24,6 +24,7 @@ use pds::metrics::clustering_accuracy;
 use pds::rng::Pcg64;
 use pds::runtime::{artifact_dir, XlaEngine};
 use pds::sampling::{Scheme, SparsifyConfig};
+use pds::sparse::Precision;
 use pds::store::SparseStoreReader;
 use pds::transform::TransformKind;
 
@@ -77,15 +78,17 @@ fn usage() {
          \x20 pds xp <id|all|list> [--runs N] [--full] [--gammas a,b,c] ...\n\
          \x20 pds kmeans [--data blobs|digits] [--n N] [--p P] [--k K] [--gamma G]\n\
          \x20\x20\x20\x20 [--restarts R] [--workers W] [--engine native|xla]\n\
-         \x20\x20\x20\x20 [--scheme precond|uniform|hybrid]\n\
+         \x20\x20\x20\x20 [--scheme precond|uniform|hybrid] [--precision f32|f64]\n\
          \x20 pds pca [--n N] [--p P] [--topk K] [--gamma G] [--workers W]\n\
          \x20\x20\x20\x20 [--solver covariance|krylov] [--scheme precond|uniform|hybrid]\n\
+         \x20\x20\x20\x20 [--precision f32|f64]\n\
          \x20 pds compress --store DIR [--data blobs|digits] [--n N] [--p P] [--gamma G]\n\
          \x20\x20\x20\x20 [--seed S] [--workers W] [--shard-cols C] [--no-precondition]\n\
-         \x20\x20\x20\x20 [--scheme precond|uniform|hybrid]\n\
+         \x20\x20\x20\x20 [--scheme precond|uniform|hybrid] [--precision f32|f64]\n\
          \x20 pds fit --store DIR [--task kmeans|pca] [--k K] [--topk K] [--workers W]\n\
          \x20\x20\x20\x20 [--restarts R] [--budget-mb MB] [--scheme precond|uniform|hybrid]\n\
          \x20\x20\x20\x20 [--solver covariance|krylov (pca) | inmemory|stream (kmeans)]\n\
+         \x20\x20\x20\x20 [--precision f32|f64]\n\
          \x20 pds store-info --store DIR\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
@@ -175,6 +178,9 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     if let Some(e) = &engine {
         plan = plan.assigner(e);
     }
+    if let Some(pr) = precision_arg(args)? {
+        plan = plan.precision(pr);
+    }
     let report = plan.run()?;
     let model = report.kmeans_model().expect("kmeans plan");
     println!(
@@ -203,6 +209,19 @@ fn scheme_arg(args: &Args) -> Result<Scheme> {
     match args.get("scheme") {
         None => Ok(Scheme::Precond),
         Some(name) => Scheme::parse(name),
+    }
+}
+
+/// The `--precision` option: `f32` stores sparse values in single
+/// precision (accumulation stays f64); `f64` is the default full-width
+/// pipeline. `None` means "whatever the source records" (stores) or f64
+/// (raw streams).
+fn precision_arg(args: &Args) -> Result<Option<Precision>> {
+    match args.get("precision") {
+        None => Ok(None),
+        Some(name) => Precision::parse(name)
+            .map(Some)
+            .ok_or_else(|| Error::Invalid(format!("--precision {name:?} (want f32|f64)"))),
     }
 }
 
@@ -235,13 +254,16 @@ fn cmd_pca(args: &Args) -> Result<()> {
     let mut src = MatSource::new(&d.data, 2048);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
     let scheme = scheme_arg(args)?;
-    let report = FitPlan::pca()
+    let mut plan = FitPlan::pca()
         .stream(&mut src, scfg)
         .scheme(scheme)
         .topk(topk)
         .solver(solver)
-        .stream_config(stream)
-        .run()?;
+        .stream_config(stream);
+    if let Some(pr) = precision_arg(args)? {
+        plan = plan.precision(pr);
+    }
+    let report = plan.run()?;
     let fit = report.pca_fit().expect("pca plan");
     println!(
         "streaming PCA ({} solver, {} scheme): n={} gamma={gamma} passes: raw {} | sparse {}",
@@ -287,22 +309,27 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
     let mut src = MatSource::new(&data, args.get_parse("chunk", 2048)?);
     let stream = StreamConfig { workers: args.get_parse("workers", 1)?, ..Default::default() };
-    let report = FitPlan::compress()
+    let mut plan = FitPlan::compress()
         .stream(&mut src, scfg)
         .scheme(scheme_arg(args)?)
         .store_dir(Path::new(store_dir))
         .shard_cols(args.get_parse("shard-cols", 8192)?)
         .stream_config(stream)
-        .precondition(!args.flag("no-precondition"))
-        .run()?;
+        .precondition(!args.flag("no-precondition"));
+    if let Some(pr) = precision_arg(args)? {
+        plan = plan.precision(pr);
+    }
+    let report = plan.run()?;
     let manifest = report.store_manifest().expect("compress plan");
     println!(
-        "compressed {} samples (p={} -> m={} per sample, gamma={:.4}, scheme={}) into {}",
+        "compressed {} samples (p={} -> m={} per sample, gamma={:.4}, scheme={}, \
+         precision={}) into {}",
         manifest.n,
         manifest.p,
         manifest.m,
         manifest.m as f64 / manifest.p as f64,
         manifest.scheme.name(),
+        manifest.precision.name(),
         store_dir
     );
     println!(
@@ -353,13 +380,17 @@ fn cmd_fit(args: &Args) -> Result<()> {
             )));
         }
     }
+    // same loud-failure contract for --precision: a store fit always uses
+    // the recorded value encoding, so an explicit request must match it
+    let precision = precision_arg(args)?;
     println!(
-        "store {}: n={} p={} m={} scheme={} preconditioned={} ({} shards)",
+        "store {}: n={} p={} m={} scheme={} precision={} preconditioned={} ({} shards)",
         store_dir,
         m.n,
         m.p,
         m.m,
         m.scheme.name(),
+        m.precision.name(),
         m.preconditioned,
         m.shards.len()
     );
@@ -367,12 +398,15 @@ fn cmd_fit(args: &Args) -> Result<()> {
         "pca" => {
             let topk: usize = args.get_parse("topk", 5)?;
             let solver = solver.unwrap_or(Solver::Covariance);
-            let report = FitPlan::pca()
+            let mut plan = FitPlan::pca()
                 .store(&mut reader)
                 .topk(topk)
                 .solver(solver)
-                .workers(workers)
-                .run()?;
+                .workers(workers);
+            if let Some(pr) = precision {
+                plan = plan.precision(pr);
+            }
+            let report = plan.run()?;
             let fit = report.pca_fit().expect("pca plan");
             println!(
                 "PCA from store ({} solver): n={} passes: raw {} | sparse {}",
@@ -390,13 +424,16 @@ fn cmd_fit(args: &Args) -> Result<()> {
             let k: usize = args.get_parse("k", 5)?;
             let opts = kmeans_opts(args)?;
             let solver = solver.unwrap_or(Solver::InMemory);
-            let report = FitPlan::kmeans()
+            let mut plan = FitPlan::kmeans()
                 .store(&mut reader)
                 .k(k)
                 .kmeans_opts(opts)
                 .solver(solver)
-                .workers(workers)
-                .run()?;
+                .workers(workers);
+            if let Some(pr) = precision {
+                plan = plan.precision(pr);
+            }
+            let report = plan.run()?;
             let model = report.kmeans_model().expect("kmeans plan");
             println!(
                 "sparsified K-means from store ({} solver): n={} restarts={} iterations={} \
@@ -424,6 +461,7 @@ fn cmd_store_info(args: &Args) -> Result<()> {
     println!("  kept per sample = {} (gamma {:.4})", m.m, m.m as f64 / m.p as f64);
     println!("  transform       = {}, seed {}", m.transform.name(), m.seed);
     println!("  scheme          = {}", m.scheme.name());
+    println!("  precision       = {}", m.precision.name());
     println!("  preconditioned  = {}", m.preconditioned);
     println!(
         "  shards          = {} x {} cols, {:.1} MB payload",

@@ -34,7 +34,7 @@ pub struct NativeEngine;
 
 impl SparseAssigner for NativeEngine {
     fn assign(&self, chunk: &SparseChunk, centers: &Mat) -> Result<(Vec<u32>, f64)> {
-        NativeAssigner.assign(chunk, centers)
+        NativeAssigner::new().assign(chunk, centers)
     }
 
     fn assign_into(
@@ -45,7 +45,7 @@ impl SparseAssigner for NativeEngine {
         out: &mut [u32],
         dist: &mut [f64],
     ) -> Result<()> {
-        NativeAssigner.assign_into(chunk, centers, workers, out, dist)
+        NativeAssigner::new().assign_into(chunk, centers, workers, out, dist)
     }
 
     fn name(&self) -> &'static str {

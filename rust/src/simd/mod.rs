@@ -1,0 +1,619 @@
+//! Explicit-SIMD kernel layer for the three hot paths (FWHT butterflies,
+//! sparse-dense assignment distances, covariance dot/scatter), with a
+//! scalar fallback and one-time runtime dispatch.
+//!
+//! # Dispatch
+//!
+//! [`detect`] probes the CPU once (cached) and returns the widest
+//! supported [`Isa`]; `PDS_SIMD=scalar|sse2|avx2` caps the result for
+//! A/B runs (never raises it above what the CPU supports). [`active`]
+//! is what the hot paths consult; [`force`] overrides it process-wide
+//! and exists for the single-threaded bench harness, which times
+//! scalar-vs-SIMD arms inside one process — tests use the explicit
+//! `isa` parameter on each kernel instead, because `force` is global
+//! state and `cargo test` runs in parallel.
+//!
+//! # Invariance contract
+//!
+//! Every kernel here is **bitwise identical** to its scalar reference in
+//! `f64`: the vector arithmetic performs the same additions and
+//! multiplications on the same operands in the same order as the scalar
+//! chains (lane-parallelism only reorders *independent* work). The
+//! property tests in this module pin that equality across odd lengths,
+//! misaligned offsets, and duplicate slots, so the repo-wide guarantee —
+//! bitwise invariance to worker count and chunk granularity — holds not
+//! just *within* an ISA mode but *across* Scalar/SSE2/AVX2 on the same
+//! inputs. The `f32` storage mode differs from `f64` only by the initial
+//! value quantization (≤ 0.5 ulp of `f32` per stored value, exact
+//! widening afterwards); see `Precision` in [`crate::sparse`].
+//!
+//! # Kernel notes (measured on AVX2, see `BENCH_hotpaths.json`)
+//!
+//! * FWHT: a fused 16-wide first pass (stages h=1,2,4,8 via
+//!   `hadd/hsub/blend` in-register butterflies) plus 4-wide radix-4 and
+//!   radix-16 stage kernels; radix-16 is restricted to strides ≤ 256
+//!   because at an 8 KB stride its 16 concurrent lines alias into one
+//!   L1 set and thrash an 8-way cache.
+//! * Assignment: a 4-center kernel over a transposed center panel with
+//!   broadcast column values — AVX2 *gathers* lose to scalar here
+//!   (centers are L1-resident), so the single-center distance used by
+//!   k-means++ seeding stays scalar everywhere.
+//! * Dot/scatter: per-column fused axpy kernels; the block width
+//!   `b ≈ 5–14` is too short to pay a non-inlinable `target_feature`
+//!   call per nonzero slot.
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction-set tier a kernel can be dispatched at. Ordered:
+/// `Scalar < Sse2 < Avx2`, so `min` with [`detect`] clamps a request to
+/// what the CPU supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable scalar path — bit-identical to the pre-SIMD kernels.
+    Scalar,
+    /// 2-wide `f64` (x86-64 baseline): FWHT stages and dot/scatter; the
+    /// assignment kernel has no SSE2 variant and falls back to scalar.
+    Sse2,
+    /// 4-wide `f64` via AVX2: all three hot paths.
+    Avx2,
+}
+
+impl Isa {
+    /// Stable lowercase name (CLI/env/bench row labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a lowercase tier name as accepted by `PDS_SIMD`.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            _ => None,
+        }
+    }
+}
+
+fn detect_raw() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+        // SSE2 is part of the x86-64 baseline.
+        return Isa::Sse2;
+    }
+    #[allow(unreachable_code)]
+    Isa::Scalar
+}
+
+/// Widest [`Isa`] this process will dispatch to: the CPU's best tier,
+/// optionally capped (never raised) by the `PDS_SIMD` env var. Probed
+/// once and cached.
+pub fn detect() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let hw = detect_raw();
+        match std::env::var("PDS_SIMD") {
+            Ok(s) => match Isa::parse(&s) {
+                Some(req) => req.min(hw),
+                None => {
+                    eprintln!(
+                        "warning: PDS_SIMD={s:?} not one of scalar|sse2|avx2; ignoring"
+                    );
+                    hw
+                }
+            },
+            Err(_) => hw,
+        }
+    })
+}
+
+/// `force(None)` state: defer to [`detect`].
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// Override [`active`] process-wide (clamped to [`detect`], so forcing a
+/// tier the CPU lacks is safe). `force(None)` restores auto-detection.
+///
+/// Intended for the single-threaded bench harness only — this is global
+/// state, so racing it against concurrent kernel calls (e.g. parallel
+/// `cargo test`) makes *which* tier runs nondeterministic (never unsafe:
+/// every tier computes bit-identical `f64` results).
+pub fn force(isa: Option<Isa>) {
+    let v = match isa {
+        None => 0,
+        Some(Isa::Scalar) => 1,
+        Some(Isa::Sse2) => 2,
+        Some(Isa::Avx2) => 3,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+/// The [`Isa`] hot paths should dispatch at right now: the [`force`]d
+/// tier if set (clamped to [`detect`]), else [`detect`].
+pub fn active() -> Isa {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Sse2.min(detect()),
+        3 => Isa::Avx2.min(detect()),
+        _ => detect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference kernels. These are the ground truth the SIMD variants
+// are pinned against, and the dispatch fallback.
+// ---------------------------------------------------------------------
+
+/// Masked squared distances from one sparse column to a group of 4
+/// centers stored as a transposed panel (`panel[j * 4 + c]` = coordinate
+/// `j` of center `c`; length `4 * p`). Scalar reference: each lane `c`
+/// runs exactly the dual-accumulator chain of the single-center
+/// `masked_dist2` (pairs into `s0`/`s1`, odd tail into `s0`).
+pub fn masked_dist2_x4_scalar(
+    indices: &[u32],
+    values: &[f64],
+    panel: &[f64],
+    out: &mut [f64; 4],
+) {
+    assert_eq!(indices.len(), values.len());
+    let mut s0 = [0.0f64; 4];
+    let mut s1 = [0.0f64; 4];
+    let pairs = indices.len() / 2;
+    for t in 0..pairs {
+        let j0 = indices[2 * t] as usize * 4;
+        let j1 = indices[2 * t + 1] as usize * 4;
+        let v0 = values[2 * t];
+        let v1 = values[2 * t + 1];
+        for c in 0..4 {
+            let d0 = v0 - panel[j0 + c];
+            let d1 = v1 - panel[j1 + c];
+            s0[c] += d0 * d0;
+            s1[c] += d1 * d1;
+        }
+    }
+    if indices.len() % 2 == 1 {
+        let last = indices.len() - 1;
+        let j = indices[last] as usize * 4;
+        let v = values[last];
+        for c in 0..4 {
+            let d = v - panel[j + c];
+            s0[c] += d * d;
+        }
+    }
+    for c in 0..4 {
+        out[c] = s0[c] + s1[c];
+    }
+}
+
+/// [`masked_dist2_x4_scalar`] over `f32` stored values, widened exactly
+/// to `f64` before the arithmetic (all accumulation stays `f64`).
+pub fn masked_dist2_x4_f32_scalar(
+    indices: &[u32],
+    values: &[f32],
+    panel: &[f64],
+    out: &mut [f64; 4],
+) {
+    assert_eq!(indices.len(), values.len());
+    let mut s0 = [0.0f64; 4];
+    let mut s1 = [0.0f64; 4];
+    let pairs = indices.len() / 2;
+    for t in 0..pairs {
+        let j0 = indices[2 * t] as usize * 4;
+        let j1 = indices[2 * t + 1] as usize * 4;
+        let v0 = values[2 * t] as f64;
+        let v1 = values[2 * t + 1] as f64;
+        for c in 0..4 {
+            let d0 = v0 - panel[j0 + c];
+            let d1 = v1 - panel[j1 + c];
+            s0[c] += d0 * d0;
+            s1[c] += d1 * d1;
+        }
+    }
+    if indices.len() % 2 == 1 {
+        let last = indices.len() - 1;
+        let j = indices[last] as usize * 4;
+        let v = values[last] as f64;
+        for c in 0..4 {
+            let d = v - panel[j + c];
+            s0[c] += d * d;
+        }
+    }
+    for c in 0..4 {
+        out[c] = s0[c] + s1[c];
+    }
+}
+
+/// Accumulate one sparse column's contribution to the dot phase:
+/// `dcol[i] += values[t] * bt[indices[t] * b + i]` for every nonzero
+/// slot `t` and `i < b = dcol.len()` (`bt` is the transposed block,
+/// row-major `p × b`). Scalar reference for the estimator phase-1 loop.
+pub fn col_dot_scalar(dcol: &mut [f64], indices: &[u32], values: &[f64], bt: &[f64]) {
+    assert_eq!(indices.len(), values.len());
+    let b = dcol.len();
+    for (t, &j) in indices.iter().enumerate() {
+        let v = values[t];
+        let col = &bt[j as usize * b..j as usize * b + b];
+        for (d, x) in dcol.iter_mut().zip(col) {
+            *d += v * x;
+        }
+    }
+}
+
+/// Scatter one column's dot vector back to the output rows:
+/// `out[(indices[t] - row_base) * b + i] += values[t] * dcol[i]` for
+/// every slot `t` (all `indices` must lie in
+/// `[row_base, row_base + out.len()/b)`). Scalar reference for the
+/// estimator phase-2 loop.
+pub fn col_scatter_scalar(
+    out: &mut [f64],
+    indices: &[u32],
+    values: &[f64],
+    row_base: u32,
+    dcol: &[f64],
+) {
+    assert_eq!(indices.len(), values.len());
+    let b = dcol.len();
+    for (t, &j) in indices.iter().enumerate() {
+        let v = values[t];
+        let o = (j - row_base) as usize * b;
+        let orow = &mut out[o..o + b];
+        for (o, x) in orow.iter_mut().zip(dcol) {
+            *o += v * x;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Safe dispatchers. Each clamps `isa` to the detected tier, validates
+// bounds, then calls the matching kernel; tiers without a variant fall
+// back down (results are bit-identical either way).
+// ---------------------------------------------------------------------
+
+#[inline]
+fn clamp(isa: Isa) -> Isa {
+    isa.min(detect())
+}
+
+/// Dispatched [`masked_dist2_x4_scalar`]: AVX2 uses the 4-lane panel
+/// kernel; SSE2 has no variant and runs scalar.
+pub fn masked_dist2_x4(
+    isa: Isa,
+    indices: &[u32],
+    values: &[f64],
+    panel: &[f64],
+    out: &mut [f64; 4],
+) {
+    match clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            assert_eq!(indices.len(), values.len());
+            assert!(indices.iter().all(|&j| j as usize * 4 + 4 <= panel.len()));
+            // SAFETY: AVX2 is detected (clamp) and indices are in-bounds
+            // for `panel` (asserted above).
+            unsafe { x86::masked_dist2_x4_avx2(indices, values, panel, out) }
+        }
+        _ => masked_dist2_x4_scalar(indices, values, panel, out),
+    }
+}
+
+/// Dispatched [`masked_dist2_x4_f32_scalar`] (packed `f32` storage,
+/// `f64` accumulation).
+pub fn masked_dist2_x4_f32(
+    isa: Isa,
+    indices: &[u32],
+    values: &[f32],
+    panel: &[f64],
+    out: &mut [f64; 4],
+) {
+    match clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            assert_eq!(indices.len(), values.len());
+            assert!(indices.iter().all(|&j| j as usize * 4 + 4 <= panel.len()));
+            // SAFETY: AVX2 detected; indices in-bounds (asserted).
+            unsafe { x86::masked_dist2_x4_f32_avx2(indices, values, panel, out) }
+        }
+        _ => masked_dist2_x4_f32_scalar(indices, values, panel, out),
+    }
+}
+
+/// Dispatched [`col_dot_scalar`] (4-wide on AVX2, 2-wide on SSE2).
+pub fn col_dot(isa: Isa, dcol: &mut [f64], indices: &[u32], values: &[f64], bt: &[f64]) {
+    let b = dcol.len();
+    match clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            assert_eq!(indices.len(), values.len());
+            assert!(indices.iter().all(|&j| j as usize * b + b <= bt.len()));
+            // SAFETY: AVX2 detected; indices in-bounds for `bt`.
+            unsafe { x86::col_dot_avx2(dcol, indices, values, bt) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => {
+            assert_eq!(indices.len(), values.len());
+            assert!(indices.iter().all(|&j| j as usize * b + b <= bt.len()));
+            // SAFETY: SSE2 is the x86-64 baseline; indices in-bounds.
+            unsafe { x86::col_dot_sse2(dcol, indices, values, bt) }
+        }
+        _ => col_dot_scalar(dcol, indices, values, bt),
+    }
+}
+
+/// Dispatched [`col_scatter_scalar`] (4-wide on AVX2, 2-wide on SSE2).
+pub fn col_scatter(
+    isa: Isa,
+    out: &mut [f64],
+    indices: &[u32],
+    values: &[f64],
+    row_base: u32,
+    dcol: &[f64],
+) {
+    let b = dcol.len();
+    match clamp(isa) {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            assert_eq!(indices.len(), values.len());
+            assert!(indices.iter().all(
+                |&j| j >= row_base && (j - row_base) as usize * b + b <= out.len()
+            ));
+            // SAFETY: AVX2 detected; local rows in-bounds for `out`.
+            unsafe { x86::col_scatter_avx2(out, indices, values, row_base, dcol) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => {
+            assert_eq!(indices.len(), values.len());
+            assert!(indices.iter().all(
+                |&j| j >= row_base && (j - row_base) as usize * b + b <= out.len()
+            ));
+            // SAFETY: SSE2 baseline; local rows in-bounds for `out`.
+            unsafe { x86::col_scatter_sse2(out, indices, values, row_base, dcol) }
+        }
+        _ => col_scatter_scalar(out, indices, values, row_base, dcol),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// ISA tiers available on the test machine (always includes Scalar).
+    fn tiers() -> Vec<Isa> {
+        let mut v = vec![Isa::Scalar];
+        if detect() >= Isa::Sse2 {
+            v.push(Isa::Sse2);
+        }
+        if detect() >= Isa::Avx2 {
+            v.push(Isa::Avx2);
+        }
+        v
+    }
+
+    /// Random strictly-increasing index set of size `m` into `0..p`,
+    /// optionally with a duplicated weighted slot appended (the kernels
+    /// must handle repeated indices — weighted chunks produce them).
+    fn random_slots(
+        rng: &mut Pcg64,
+        p: usize,
+        m: usize,
+        dup: bool,
+    ) -> (Vec<u32>, Vec<f64>) {
+        let mut idx: Vec<u32> = Vec::with_capacity(m);
+        let mut seen = vec![false; p];
+        while idx.len() < m {
+            let j = rng.next_range(p as u32);
+            if !seen[j as usize] {
+                seen[j as usize] = true;
+                idx.push(j);
+            }
+        }
+        idx.sort_unstable();
+        let mut vals: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        if dup && m > 0 {
+            idx.push(idx[m - 1]);
+            vals.push(rng.normal() * 2.0);
+        }
+        (idx, vals)
+    }
+
+    #[test]
+    fn masked_dist2_x4_matches_per_lane_reference() {
+        // the scalar x4 kernel must equal four independent runs of the
+        // k-means++ `masked_dist2` chain (same pairing, same order)
+        let mut rng = Pcg64::seed(11);
+        for &(p, m) in &[(16usize, 1usize), (64, 5), (128, 17), (512, 51)] {
+            for dup in [false, true] {
+                let (idx, vals) = random_slots(&mut rng, p, m, dup);
+                let centers: Vec<Vec<f64>> = (0..4)
+                    .map(|_| (0..p).map(|_| rng.normal()).collect())
+                    .collect();
+                let mut panel = vec![0.0f64; 4 * p];
+                for (c, col) in centers.iter().enumerate() {
+                    for (j, &v) in col.iter().enumerate() {
+                        panel[j * 4 + c] = v;
+                    }
+                }
+                let mut got = [0.0f64; 4];
+                masked_dist2_x4_scalar(&idx, &vals, &panel, &mut got);
+                for c in 0..4 {
+                    let want = crate::kmeans::plusplus::masked_dist2(
+                        &idx,
+                        &vals,
+                        &centers[c],
+                    );
+                    assert_eq!(
+                        got[c].to_bits(),
+                        want.to_bits(),
+                        "p={p} m={m} dup={dup} lane {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_dist2_x4_simd_bitwise_matches_scalar() {
+        let mut rng = Pcg64::seed(12);
+        for isa in tiers() {
+            for &(p, m) in &[(16usize, 1usize), (32, 2), (64, 7), (256, 33), (512, 52)]
+            {
+                for dup in [false, true] {
+                    let (idx, vals) = random_slots(&mut rng, p, m, dup);
+                    let panel: Vec<f64> =
+                        (0..4 * p).map(|_| rng.normal()).collect();
+                    let mut want = [0.0f64; 4];
+                    masked_dist2_x4_scalar(&idx, &vals, &panel, &mut want);
+                    let mut got = [0.0f64; 4];
+                    masked_dist2_x4(isa, &idx, &vals, &panel, &mut got);
+                    for c in 0..4 {
+                        assert_eq!(
+                            got[c].to_bits(),
+                            want[c].to_bits(),
+                            "isa={} p={p} m={m} dup={dup} lane {c}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_dist2_x4_f32_simd_matches_scalar_and_widening() {
+        // the f32-storage kernel equals the scalar f32 reference bit for
+        // bit, and both equal the f64 kernel run on exactly-widened
+        // values (f32 -> f64 is exact, so the arithmetic is identical)
+        let mut rng = Pcg64::seed(13);
+        for isa in tiers() {
+            for &(p, m) in &[(64usize, 7usize), (128, 20), (512, 51)] {
+                let (idx, vals64) = random_slots(&mut rng, p, m, false);
+                let vals32: Vec<f32> = vals64.iter().map(|&v| v as f32).collect();
+                let widened: Vec<f64> = vals32.iter().map(|&v| v as f64).collect();
+                let panel: Vec<f64> = (0..4 * p).map(|_| rng.normal()).collect();
+                let mut want = [0.0f64; 4];
+                masked_dist2_x4_f32_scalar(&idx, &vals32, &panel, &mut want);
+                let mut got = [0.0f64; 4];
+                masked_dist2_x4_f32(isa, &idx, &vals32, &panel, &mut got);
+                let mut via_f64 = [0.0f64; 4];
+                masked_dist2_x4(isa, &idx, &widened, &panel, &mut via_f64);
+                for c in 0..4 {
+                    assert_eq!(got[c].to_bits(), want[c].to_bits(), "isa={}", isa.name());
+                    assert_eq!(got[c].to_bits(), via_f64[c].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_dot_and_scatter_bitwise_match_scalar() {
+        // b sweeps through every remainder class of the 4-wide and
+        // 2-wide kernels, including b < lane width
+        let mut rng = Pcg64::seed(14);
+        for isa in tiers() {
+            for &b in &[1usize, 2, 3, 4, 5, 7, 8, 11, 13, 14, 16, 17] {
+                for &(p, m) in &[(32usize, 5usize), (256, 77)] {
+                    for dup in [false, true] {
+                        let (idx, vals) = random_slots(&mut rng, p, m, dup);
+                        let bt: Vec<f64> = (0..p * b).map(|_| rng.normal()).collect();
+                        let mut want = vec![0.0f64; b];
+                        let mut got = vec![0.0f64; b];
+                        // seed accumulators with a nonzero prefix sum
+                        for i in 0..b {
+                            want[i] = (i as f64) * 0.25;
+                            got[i] = (i as f64) * 0.25;
+                        }
+                        col_dot_scalar(&mut want, &idx, &vals, &bt);
+                        col_dot(isa, &mut got, &idx, &vals, &bt);
+                        for i in 0..b {
+                            assert_eq!(
+                                got[i].to_bits(),
+                                want[i].to_bits(),
+                                "col_dot isa={} b={b} i={i}",
+                                isa.name()
+                            );
+                        }
+                        // scatter the (shared) dot vector back out, with
+                        // a nonzero row base to exercise offsetting
+                        let row_base = 0u32;
+                        let mut owant = vec![0.1f64; p * b];
+                        let mut ogot = owant.clone();
+                        col_scatter_scalar(&mut owant, &idx, &vals, row_base, &want);
+                        col_scatter(isa, &mut ogot, &idx, &vals, row_base, &want);
+                        assert!(owant
+                            .iter()
+                            .zip(&ogot)
+                            .all(|(a, b)| a.to_bits() == b.to_bits()));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_scatter_respects_row_base_window() {
+        let mut rng = Pcg64::seed(15);
+        let b = 6usize;
+        // indices restricted to [100, 160); output covers only that window
+        let idx: Vec<u32> = (0..24).map(|t| 100 + 2 * t + (t % 2)).collect();
+        let vals: Vec<f64> = (0..24).map(|_| rng.normal()).collect();
+        let dcol: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+        let rows = 60usize;
+        for isa in tiers() {
+            let mut want = vec![0.0f64; rows * b];
+            let mut got = want.clone();
+            col_scatter_scalar(&mut want, &idx, &vals, 100, &dcol);
+            col_scatter(isa, &mut got, &idx, &vals, 100, &dcol);
+            assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn misaligned_slices_are_handled() {
+        // loadu-only kernels must accept arbitrarily offset slices: run
+        // the same workload through sub-slices starting at odd offsets
+        let mut rng = Pcg64::seed(16);
+        let p = 128usize;
+        let m = 21usize;
+        let raw: Vec<f64> = (0..4 * p + 3).map(|_| rng.normal()).collect();
+        let panel = &raw[3..3 + 4 * p]; // 8-byte aligned, 32-byte misaligned
+        let (idx, vals) = random_slots(&mut rng, p, m, false);
+        for isa in tiers() {
+            let mut want = [0.0f64; 4];
+            masked_dist2_x4_scalar(&idx, &vals, panel, &mut want);
+            let mut got = [0.0f64; 4];
+            masked_dist2_x4(isa, &idx, &vals, panel, &mut got);
+            for c in 0..4 {
+                assert_eq!(got[c].to_bits(), want[c].to_bits(), "isa={}", isa.name());
+            }
+        }
+    }
+
+    #[test]
+    fn env_and_force_are_clamped_to_detect() {
+        // force above the detected tier must clamp, never crash
+        force(Some(Isa::Avx2));
+        assert!(active() <= detect());
+        force(Some(Isa::Scalar));
+        assert_eq!(active(), Isa::Scalar);
+        force(None);
+        assert_eq!(active(), detect());
+    }
+
+    #[test]
+    fn isa_parse_roundtrips() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512"), None);
+    }
+}

@@ -1,0 +1,541 @@
+//! x86-64 kernel variants (AVX2 4-wide, SSE2 2-wide). Every function
+//! here is a transliteration of the scalar reference chain in
+//! [`super`] / [`crate::transform`] with lane-parallelism over
+//! *independent* butterflies/centers/rows only — the per-result
+//! floating-point operation sequence is unchanged, so outputs are
+//! bitwise identical to the scalar path (pinned by the property tests
+//! in `simd::tests` and `transform::fwht::tests`).
+//!
+//! No FMA anywhere: `a + b*c` contracted to a fused multiply-add rounds
+//! once instead of twice and would break bit-identity with the scalar
+//! kernels, so every multiply-accumulate is an explicit
+//! `add(mul(..))` pair.
+//!
+//! # Safety
+//!
+//! All functions require the advertised target feature (`avx2` ones
+//! must only be called when `detect() >= Isa::Avx2`) and in-bounds
+//! index sets; the safe dispatchers in [`super`] check both.
+
+use crate::transform::fwht::{radix4_first_pass, FWHT_BLOCK};
+use std::arch::x86_64::*;
+
+// ---------------------------------------------------------------------
+// FWHT stage kernels (AVX2)
+// ---------------------------------------------------------------------
+
+/// Fused first pass over 16-element tiles: stages h=1,2 in-register
+/// (`hadd`/`hsub`/`blend` per 4-lane quad) and stages h=4,8 as vertical
+/// quad butterflies. `n % 16 == 0`. Outputs scaled by `s` (used only
+/// when the whole transform is a single tile, p = 16).
+#[target_feature(enable = "avx2")]
+unsafe fn tile16_pass_avx2(x: *mut f64, n: usize, s: f64) {
+    let vs = _mm256_set1_pd(s);
+    let scaled = s != 1.0;
+    let mut i = 0;
+    while i < n {
+        let p = x.add(i);
+        let mut q = [_mm256_setzero_pd(); 4];
+        for (k, qk) in q.iter_mut().enumerate() {
+            // v = [a, b, c, d]  ->  [a+b, a-b, c+d, c-d] (stages h=1,2
+            // happen on the transposed pair layout below)
+            let v = _mm256_loadu_pd(p.add(4 * k));
+            let hadd = _mm256_hadd_pd(v, v); // [a+b, a+b, c+d, c+d]
+            let hsub = _mm256_hsub_pd(v, v); // [a-b, a-b, c-d, c-d]
+            let t = _mm256_blend_pd::<0b1010>(hadd, hsub); // [ab, amb, cd, cmd]
+            let v1 = _mm256_permute2f128_pd::<0x00>(t, t); // [ab, amb, ab, amb]
+            let v2 = _mm256_permute2f128_pd::<0x11>(t, t); // [cd, cmd, cd, cmd]
+            // stage h=2: [ab+cd, amb+cmd, ab-cd, amb-cmd]
+            *qk = _mm256_blend_pd::<0b1100>(
+                _mm256_add_pd(v1, v2),
+                _mm256_sub_pd(v1, v2),
+            );
+        }
+        // stages h=4 and h=8 across the four quads (radix-4 butterfly)
+        let a = _mm256_add_pd(q[0], q[1]);
+        let b = _mm256_sub_pd(q[0], q[1]);
+        let c = _mm256_add_pd(q[2], q[3]);
+        let d = _mm256_sub_pd(q[2], q[3]);
+        let mut o = [
+            _mm256_add_pd(a, c),
+            _mm256_add_pd(b, d),
+            _mm256_sub_pd(a, c),
+            _mm256_sub_pd(b, d),
+        ];
+        if scaled {
+            for v in o.iter_mut() {
+                *v = _mm256_mul_pd(*v, vs);
+            }
+        }
+        for (k, &ok) in o.iter().enumerate() {
+            _mm256_storeu_pd(p.add(4 * k), ok);
+        }
+        i += 16;
+    }
+}
+
+/// One radix-2 stage at stride `h` (`h % 4 == 0`, `h >= 4`), outputs
+/// scaled by `s` — the 4-wide version of `stage_radix2`.
+#[target_feature(enable = "avx2")]
+unsafe fn stage_radix2_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
+    let vs = _mm256_set1_pd(s);
+    let step = 2 * h;
+    let mut base = 0;
+    while base < n {
+        let mut i = base;
+        while i < base + h {
+            let a = _mm256_loadu_pd(x.add(i));
+            let b = _mm256_loadu_pd(x.add(i + h));
+            _mm256_storeu_pd(x.add(i), _mm256_mul_pd(_mm256_add_pd(a, b), vs));
+            _mm256_storeu_pd(x.add(i + h), _mm256_mul_pd(_mm256_sub_pd(a, b), vs));
+            i += 4;
+        }
+        base += step;
+    }
+}
+
+/// Two fused radix-2 stages (strides `h`, `2h`) — 4-wide
+/// `stage_radix4`. `h % 4 == 0`, `h >= 4`.
+#[target_feature(enable = "avx2")]
+unsafe fn stage_radix4_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
+    let vs = _mm256_set1_pd(s);
+    let step = 4 * h;
+    let mut base = 0;
+    while base < n {
+        let mut i = base;
+        while i < base + h {
+            let x0 = _mm256_loadu_pd(x.add(i));
+            let x1 = _mm256_loadu_pd(x.add(i + h));
+            let x2 = _mm256_loadu_pd(x.add(i + 2 * h));
+            let x3 = _mm256_loadu_pd(x.add(i + 3 * h));
+            let a = _mm256_add_pd(x0, x1);
+            let b = _mm256_sub_pd(x0, x1);
+            let c = _mm256_add_pd(x2, x3);
+            let d = _mm256_sub_pd(x2, x3);
+            _mm256_storeu_pd(x.add(i), _mm256_mul_pd(_mm256_add_pd(a, c), vs));
+            _mm256_storeu_pd(x.add(i + h), _mm256_mul_pd(_mm256_add_pd(b, d), vs));
+            _mm256_storeu_pd(x.add(i + 2 * h), _mm256_mul_pd(_mm256_sub_pd(a, c), vs));
+            _mm256_storeu_pd(x.add(i + 3 * h), _mm256_mul_pd(_mm256_sub_pd(b, d), vs));
+            i += 4;
+        }
+        base += step;
+    }
+}
+
+/// Four fused radix-2 stages (strides `h..8h`) in one sweep — two
+/// back-to-back radix-4 butterflies held in registers. Worth it only
+/// while all 16 concurrent lines fit distinct L1 sets, hence the
+/// `h <= 256` guard at the call site. `h % 4 == 0`, `h >= 4`.
+#[target_feature(enable = "avx2")]
+unsafe fn stage_radix16_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
+    let vs = _mm256_set1_pd(s);
+    let scaled = s != 1.0;
+    let step = 16 * h;
+    let mut base = 0;
+    while base < n {
+        let mut i = base;
+        while i < base + h {
+            let mut q = [_mm256_setzero_pd(); 16];
+            for (k, qk) in q.iter_mut().enumerate() {
+                *qk = _mm256_loadu_pd(x.add(i + k * h));
+            }
+            // level 1: radix-4 butterfly inside each group of 4 strides
+            let mut y = [_mm256_setzero_pd(); 16];
+            for g in 0..4 {
+                let a = _mm256_add_pd(q[4 * g], q[4 * g + 1]);
+                let b = _mm256_sub_pd(q[4 * g], q[4 * g + 1]);
+                let c = _mm256_add_pd(q[4 * g + 2], q[4 * g + 3]);
+                let d = _mm256_sub_pd(q[4 * g + 2], q[4 * g + 3]);
+                y[4 * g] = _mm256_add_pd(a, c);
+                y[4 * g + 1] = _mm256_add_pd(b, d);
+                y[4 * g + 2] = _mm256_sub_pd(a, c);
+                y[4 * g + 3] = _mm256_sub_pd(b, d);
+            }
+            // level 2: radix-4 butterfly across the groups
+            for j in 0..4 {
+                let a = _mm256_add_pd(y[j], y[j + 4]);
+                let b = _mm256_sub_pd(y[j], y[j + 4]);
+                let c = _mm256_add_pd(y[j + 8], y[j + 12]);
+                let d = _mm256_sub_pd(y[j + 8], y[j + 12]);
+                let mut o = [
+                    _mm256_add_pd(a, c),
+                    _mm256_add_pd(b, d),
+                    _mm256_sub_pd(a, c),
+                    _mm256_sub_pd(b, d),
+                ];
+                if scaled {
+                    for v in o.iter_mut() {
+                        *v = _mm256_mul_pd(*v, vs);
+                    }
+                }
+                _mm256_storeu_pd(x.add(i + j * h), o[0]);
+                _mm256_storeu_pd(x.add(i + (j + 4) * h), o[1]);
+                _mm256_storeu_pd(x.add(i + (j + 8) * h), o[2]);
+                _mm256_storeu_pd(x.add(i + (j + 12) * h), o[3]);
+            }
+            i += 4;
+        }
+        base += step;
+    }
+}
+
+/// Run stages `from_h..n/2` greedily: peel one radix-2 if the stage
+/// count is odd, then radix-16 while `16h <= n` *and* `h <= 256` (the
+/// L1-aliasing guard), else radix-4. Radix-16 consumes 4 stages and
+/// radix-4 consumes 2, both even, so after the peel the schedule always
+/// lands exactly on `n`. Fusion regroups but never reorders the
+/// butterfly arithmetic, so the result is bit-identical to the scalar
+/// `fwht_stages`.
+#[target_feature(enable = "avx2")]
+unsafe fn fwht_stages_avx2(x: *mut f64, n: usize, from_h: usize, scale: f64) {
+    let mut h = from_h;
+    let stages = (n / h).trailing_zeros();
+    if stages % 2 == 1 {
+        stage_radix2_avx2(x, n, h, if 2 * h == n { scale } else { 1.0 });
+        h *= 2;
+    }
+    while h < n {
+        if 16 * h <= n && h <= 256 {
+            stage_radix16_avx2(x, n, h, if 16 * h == n { scale } else { 1.0 });
+            h *= 16;
+        } else {
+            stage_radix4_avx2(x, n, h, if 4 * h == n { scale } else { 1.0 });
+            h *= 4;
+        }
+    }
+}
+
+/// Full normalized in-place FWHT, AVX2 schedule: a 16-wide fused first
+/// pass plus greedy radix-16/radix-4 stages, cache-blocked at
+/// [`FWHT_BLOCK`] exactly like the scalar transform.
+///
+/// # Safety
+/// Requires AVX2; `x.len()` must be a power of two `>= 16`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn fwht_avx2(x: &mut [f64]) {
+    let p = x.len();
+    debug_assert!(p >= 16 && p & (p - 1) == 0);
+    let scale = 1.0 / (p as f64).sqrt();
+    let ptr = x.as_mut_ptr();
+    if p <= FWHT_BLOCK {
+        tile16_pass_avx2(ptr, p, if p == 16 { scale } else { 1.0 });
+        if p > 16 {
+            fwht_stages_avx2(ptr, p, 16, scale);
+        }
+    } else {
+        let mut base = 0;
+        while base < p {
+            tile16_pass_avx2(ptr.add(base), FWHT_BLOCK, 1.0);
+            fwht_stages_avx2(ptr.add(base), FWHT_BLOCK, 16, 1.0);
+            base += FWHT_BLOCK;
+        }
+        fwht_stages_avx2(ptr, p, FWHT_BLOCK, scale);
+    }
+}
+
+// ---------------------------------------------------------------------
+// FWHT stage kernels (SSE2 — x86-64 baseline, 2-wide)
+// ---------------------------------------------------------------------
+
+/// 2-wide radix-2 stage (`h % 2 == 0`, `h >= 2`).
+unsafe fn stage_radix2_sse2(x: *mut f64, n: usize, h: usize, s: f64) {
+    let vs = _mm_set1_pd(s);
+    let step = 2 * h;
+    let mut base = 0;
+    while base < n {
+        let mut i = base;
+        while i < base + h {
+            let a = _mm_loadu_pd(x.add(i));
+            let b = _mm_loadu_pd(x.add(i + h));
+            _mm_storeu_pd(x.add(i), _mm_mul_pd(_mm_add_pd(a, b), vs));
+            _mm_storeu_pd(x.add(i + h), _mm_mul_pd(_mm_sub_pd(a, b), vs));
+            i += 2;
+        }
+        base += step;
+    }
+}
+
+/// 2-wide fused radix-4 stage (`h % 2 == 0`, `h >= 2`).
+unsafe fn stage_radix4_sse2(x: *mut f64, n: usize, h: usize, s: f64) {
+    let vs = _mm_set1_pd(s);
+    let step = 4 * h;
+    let mut base = 0;
+    while base < n {
+        let mut i = base;
+        while i < base + h {
+            let x0 = _mm_loadu_pd(x.add(i));
+            let x1 = _mm_loadu_pd(x.add(i + h));
+            let x2 = _mm_loadu_pd(x.add(i + 2 * h));
+            let x3 = _mm_loadu_pd(x.add(i + 3 * h));
+            let a = _mm_add_pd(x0, x1);
+            let b = _mm_sub_pd(x0, x1);
+            let c = _mm_add_pd(x2, x3);
+            let d = _mm_sub_pd(x2, x3);
+            _mm_storeu_pd(x.add(i), _mm_mul_pd(_mm_add_pd(a, c), vs));
+            _mm_storeu_pd(x.add(i + h), _mm_mul_pd(_mm_add_pd(b, d), vs));
+            _mm_storeu_pd(x.add(i + 2 * h), _mm_mul_pd(_mm_sub_pd(a, c), vs));
+            _mm_storeu_pd(x.add(i + 3 * h), _mm_mul_pd(_mm_sub_pd(b, d), vs));
+            i += 2;
+        }
+        base += step;
+    }
+}
+
+/// 2-wide mirror of the scalar `fwht_stages` schedule (radix-2 peel,
+/// then radix-4).
+unsafe fn fwht_stages_sse2(x: *mut f64, n: usize, from_h: usize, scale: f64) {
+    let mut h = from_h;
+    let stages = (n / h).trailing_zeros();
+    if stages % 2 == 1 {
+        stage_radix2_sse2(x, n, h, if 2 * h == n { scale } else { 1.0 });
+        h *= 2;
+    }
+    while h < n {
+        stage_radix4_sse2(x, n, h, if 4 * h == n { scale } else { 1.0 });
+        h *= 4;
+    }
+}
+
+/// Full normalized in-place FWHT, SSE2 schedule: scalar fused first
+/// pass (stages h=1,2 are intra-pair and don't vectorize at 2 lanes)
+/// plus 2-wide stages, cache-blocked like the scalar transform.
+/// `x.len()` must be a power of two `>= 16`.
+pub(crate) fn fwht_sse2(x: &mut [f64]) {
+    let p = x.len();
+    debug_assert!(p >= 16 && p & (p - 1) == 0);
+    let scale = 1.0 / (p as f64).sqrt();
+    if p <= FWHT_BLOCK {
+        radix4_first_pass(x);
+        // SAFETY: SSE2 is the x86-64 baseline; strides stay in-bounds
+        // because p is a power of two >= 16.
+        unsafe { fwht_stages_sse2(x.as_mut_ptr(), p, 4, scale) };
+    } else {
+        for blk in x.chunks_exact_mut(FWHT_BLOCK) {
+            radix4_first_pass(blk);
+            // SAFETY: as above, within one FWHT_BLOCK.
+            unsafe { fwht_stages_sse2(blk.as_mut_ptr(), FWHT_BLOCK, 4, 1.0) };
+        }
+        // SAFETY: cross-block stages, strides FWHT_BLOCK..p/2 in-bounds.
+        unsafe { fwht_stages_sse2(x.as_mut_ptr(), p, FWHT_BLOCK, scale) };
+    }
+}
+
+// ---------------------------------------------------------------------
+// Assignment kernel (AVX2)
+// ---------------------------------------------------------------------
+
+/// 4-center masked squared distances over a transposed center panel
+/// (`panel[j*4 + c]`). Lane `c` executes exactly the scalar
+/// `masked_dist2` chain against center `c`: pairs of slots feed two
+/// independent accumulators, the odd tail goes to the first, and the
+/// final result is their sum. Values are *broadcast* and center rows
+/// *loaded* — no gathers (measured slower than scalar here).
+///
+/// # Safety
+/// Requires AVX2; `indices.len() == values.len()` and every
+/// `indices[t]*4 + 4 <= panel.len()`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn masked_dist2_x4_avx2(
+    indices: &[u32],
+    values: &[f64],
+    panel: &[f64],
+    out: &mut [f64; 4],
+) {
+    let ct = panel.as_ptr();
+    let len = indices.len();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let pairs = len / 2;
+    for t in 0..pairs {
+        let v0 = _mm256_set1_pd(*values.get_unchecked(2 * t));
+        let v1 = _mm256_set1_pd(*values.get_unchecked(2 * t + 1));
+        let c0 = _mm256_loadu_pd(ct.add(4 * *indices.get_unchecked(2 * t) as usize));
+        let c1 =
+            _mm256_loadu_pd(ct.add(4 * *indices.get_unchecked(2 * t + 1) as usize));
+        let d0 = _mm256_sub_pd(v0, c0);
+        let d1 = _mm256_sub_pd(v1, c1);
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(d0, d0));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(d1, d1));
+    }
+    if len % 2 == 1 {
+        let t = len - 1;
+        let v = _mm256_set1_pd(*values.get_unchecked(t));
+        let c = _mm256_loadu_pd(ct.add(4 * *indices.get_unchecked(t) as usize));
+        let d = _mm256_sub_pd(v, c);
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(d, d));
+    }
+    _mm256_storeu_pd(out.as_mut_ptr(), _mm256_add_pd(acc0, acc1));
+}
+
+/// [`masked_dist2_x4_avx2`] over packed `f32` stored values: each value
+/// is widened exactly to `f64` at broadcast time, so the arithmetic —
+/// and the result — is identical to the `f64` kernel on pre-widened
+/// input.
+///
+/// # Safety
+/// As [`masked_dist2_x4_avx2`].
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn masked_dist2_x4_f32_avx2(
+    indices: &[u32],
+    values: &[f32],
+    panel: &[f64],
+    out: &mut [f64; 4],
+) {
+    let ct = panel.as_ptr();
+    let len = indices.len();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let pairs = len / 2;
+    for t in 0..pairs {
+        let v0 = _mm256_set1_pd(*values.get_unchecked(2 * t) as f64);
+        let v1 = _mm256_set1_pd(*values.get_unchecked(2 * t + 1) as f64);
+        let c0 = _mm256_loadu_pd(ct.add(4 * *indices.get_unchecked(2 * t) as usize));
+        let c1 =
+            _mm256_loadu_pd(ct.add(4 * *indices.get_unchecked(2 * t + 1) as usize));
+        let d0 = _mm256_sub_pd(v0, c0);
+        let d1 = _mm256_sub_pd(v1, c1);
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(d0, d0));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(d1, d1));
+    }
+    if len % 2 == 1 {
+        let t = len - 1;
+        let v = _mm256_set1_pd(*values.get_unchecked(t) as f64);
+        let c = _mm256_loadu_pd(ct.add(4 * *indices.get_unchecked(t) as usize));
+        let d = _mm256_sub_pd(v, c);
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(d, d));
+    }
+    _mm256_storeu_pd(out.as_mut_ptr(), _mm256_add_pd(acc0, acc1));
+}
+
+// ---------------------------------------------------------------------
+// Dot/scatter kernels
+// ---------------------------------------------------------------------
+
+/// 4-wide fused per-column dot phase: for each nonzero slot `t`,
+/// `dcol[i] += values[t] * bt[indices[t]*b + i]`.
+///
+/// # Safety
+/// Requires AVX2; every `indices[t]*b + b <= bt.len()`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn col_dot_avx2(
+    dcol: &mut [f64],
+    indices: &[u32],
+    values: &[f64],
+    bt: &[f64],
+) {
+    let b = dcol.len();
+    let dp = dcol.as_mut_ptr();
+    let bp = bt.as_ptr();
+    for t in 0..indices.len() {
+        let v = *values.get_unchecked(t);
+        let vv = _mm256_set1_pd(v);
+        let bc = bp.add(*indices.get_unchecked(t) as usize * b);
+        let mut i = 0;
+        while i + 4 <= b {
+            let acc = _mm256_loadu_pd(dp.add(i));
+            let x = _mm256_loadu_pd(bc.add(i));
+            _mm256_storeu_pd(dp.add(i), _mm256_add_pd(acc, _mm256_mul_pd(vv, x)));
+            i += 4;
+        }
+        while i < b {
+            *dp.add(i) += v * *bc.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// 2-wide [`col_dot_avx2`].
+///
+/// # Safety
+/// Every `indices[t]*b + b <= bt.len()` (SSE2 is baseline).
+pub(crate) unsafe fn col_dot_sse2(
+    dcol: &mut [f64],
+    indices: &[u32],
+    values: &[f64],
+    bt: &[f64],
+) {
+    let b = dcol.len();
+    let dp = dcol.as_mut_ptr();
+    let bp = bt.as_ptr();
+    for t in 0..indices.len() {
+        let v = *values.get_unchecked(t);
+        let vv = _mm_set1_pd(v);
+        let bc = bp.add(*indices.get_unchecked(t) as usize * b);
+        let mut i = 0;
+        while i + 2 <= b {
+            let acc = _mm_loadu_pd(dp.add(i));
+            let x = _mm_loadu_pd(bc.add(i));
+            _mm_storeu_pd(dp.add(i), _mm_add_pd(acc, _mm_mul_pd(vv, x)));
+            i += 2;
+        }
+        if i < b {
+            *dp.add(i) += v * *bc.add(i);
+        }
+    }
+}
+
+/// 4-wide fused per-column scatter phase: for each slot `t`,
+/// `out[(indices[t]-row_base)*b + i] += values[t] * dcol[i]`.
+///
+/// # Safety
+/// Requires AVX2; every `indices[t] >= row_base` and
+/// `(indices[t]-row_base)*b + b <= out.len()`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn col_scatter_avx2(
+    out: &mut [f64],
+    indices: &[u32],
+    values: &[f64],
+    row_base: u32,
+    dcol: &[f64],
+) {
+    let b = dcol.len();
+    let op = out.as_mut_ptr();
+    let dp = dcol.as_ptr();
+    for t in 0..indices.len() {
+        let v = *values.get_unchecked(t);
+        let vv = _mm256_set1_pd(v);
+        let orow = op.add((*indices.get_unchecked(t) - row_base) as usize * b);
+        let mut i = 0;
+        while i + 4 <= b {
+            let acc = _mm256_loadu_pd(orow.add(i));
+            let x = _mm256_loadu_pd(dp.add(i));
+            _mm256_storeu_pd(orow.add(i), _mm256_add_pd(acc, _mm256_mul_pd(vv, x)));
+            i += 4;
+        }
+        while i < b {
+            *orow.add(i) += v * *dp.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// 2-wide [`col_scatter_avx2`].
+///
+/// # Safety
+/// Index/window bounds as [`col_scatter_avx2`] (SSE2 is baseline).
+pub(crate) unsafe fn col_scatter_sse2(
+    out: &mut [f64],
+    indices: &[u32],
+    values: &[f64],
+    row_base: u32,
+    dcol: &[f64],
+) {
+    let b = dcol.len();
+    let op = out.as_mut_ptr();
+    let dp = dcol.as_ptr();
+    for t in 0..indices.len() {
+        let v = *values.get_unchecked(t);
+        let vv = _mm_set1_pd(v);
+        let orow = op.add((*indices.get_unchecked(t) - row_base) as usize * b);
+        let mut i = 0;
+        while i + 2 <= b {
+            let acc = _mm_loadu_pd(orow.add(i));
+            let x = _mm_loadu_pd(dp.add(i));
+            _mm_storeu_pd(orow.add(i), _mm_add_pd(acc, _mm_mul_pd(vv, x)));
+            i += 2;
+        }
+        if i < b {
+            *orow.add(i) += v * *dp.add(i);
+        }
+    }
+}

@@ -13,6 +13,53 @@ pub use source::{SparseChunkSource, SparseVecSource};
 use crate::error::{shape_err, Result};
 use crate::linalg::Mat;
 
+/// Value-storage precision of a chunk (and of the on-disk store that
+/// serializes it — `docs/FORMAT.md` §Value encoding).
+///
+/// This is a *storage* axis, not a compute axis: kernels always
+/// accumulate in `f64`. In [`F32`](Precision::F32) mode every kept value
+/// is quantized through `f32` the moment it enters a chunk (≤ 0.5 ulp of
+/// `f32` relative error per value, the mode's documented ULP bound) and
+/// is widened back exactly for arithmetic, so downstream results differ
+/// from `f64` mode only by that initial quantization while shard value
+/// blocks shrink from 8 to 4 bytes per entry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// 4-byte stored values, `f64` accumulation.
+    F32,
+    /// Full 8-byte values end to end (the default; byte-identical to
+    /// the pre-precision-axis format).
+    #[default]
+    F64,
+}
+
+impl Precision {
+    /// Stable lowercase name (CLI `--precision`, store manifests).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        }
+    }
+
+    /// Parse a [`name`](Self::name).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "f64" => Some(Precision::F64),
+            _ => None,
+        }
+    }
+
+    /// Bytes per stored value in a shard's value block.
+    pub fn val_bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+}
+
 /// A sparsified chunk of `n` samples in dimension `p`, exactly `m` kept
 /// entries per sample. Indices within each column are stored sorted.
 ///
@@ -51,6 +98,11 @@ pub struct SparseChunk {
     values: Vec<f64>,
     /// Global index of the first sample in this chunk (streaming offset).
     start_col: usize,
+    /// Storage precision marker. In-RAM values are always `f64`; under
+    /// [`Precision::F32`] they are guaranteed exactly
+    /// `f32`-representable (quantized on entry), so `f64` arithmetic on
+    /// them equals `f32` storage with `f64` accumulators bit for bit.
+    precision: Precision,
 }
 
 impl SparseChunk {
@@ -63,6 +115,7 @@ impl SparseChunk {
             indices: vec![0; m * n],
             values: vec![0.0; m * n],
             start_col,
+            precision: Precision::F64,
         }
     }
 
@@ -83,7 +136,27 @@ impl SparseChunk {
                 m * n
             ));
         }
-        Ok(SparseChunk { p, m, n, indices, values, start_col })
+        Ok(SparseChunk { p, m, n, indices, values, start_col, precision: Precision::F64 })
+    }
+
+    /// Convert this chunk to the given storage precision. `F32`
+    /// quantizes every value through `f32` (idempotent; ≤ 0.5 ulp of
+    /// `f32` per value); `F64` only sets the marker — it cannot restore
+    /// bits a previous quantization dropped.
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        if precision == Precision::F32 {
+            for v in self.values.iter_mut() {
+                *v = *v as f32 as f64;
+            }
+        }
+        self.precision = precision;
+        self
+    }
+
+    /// Storage precision marker of this chunk.
+    #[inline]
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Ambient (possibly padded) dimension.
@@ -167,6 +240,7 @@ impl SparseChunk {
             None => return shape_err("SparseChunk::concat: no chunks"),
         };
         let (p, m, start_col) = (first.p, first.m, first.start_col);
+        let precision = first.precision;
         let mut expected = start_col;
         let mut n = 0usize;
         for c in chunks {
@@ -174,6 +248,13 @@ impl SparseChunk {
                 return shape_err(format!(
                     "SparseChunk::concat: mixed shapes ({}x{} vs {p}x{m})",
                     c.p, c.m
+                ));
+            }
+            if c.precision != precision {
+                return shape_err(format!(
+                    "SparseChunk::concat: mixed precisions ({} vs {})",
+                    c.precision.name(),
+                    precision.name()
                 ));
             }
             if c.start_col != expected {
@@ -191,7 +272,7 @@ impl SparseChunk {
             indices.extend_from_slice(&c.indices);
             values.extend_from_slice(&c.values);
         }
-        Ok(SparseChunk { p, m, n, indices, values, start_col })
+        Ok(SparseChunk { p, m, n, indices, values, start_col, precision })
     }
 
     /// Densify into a `p×n` matrix (zeros at unsampled coordinates):
@@ -346,6 +427,33 @@ mod tests {
         let oob = SparseChunk::from_raw(5, 2, 1, vec![3, 9], vec![0.0, 0.0], 0).unwrap();
         assert!(oob.validate_weighted().is_err());
         assert!(sample_chunk().validate_weighted().is_ok());
+    }
+
+    #[test]
+    fn precision_marker_and_quantization() {
+        let c = sample_chunk();
+        assert_eq!(c.precision(), Precision::F64);
+        let exact = 1.0 + 2f64.powi(-40); // not f32-representable
+        let mut q = SparseChunk::from_raw(5, 1, 1, vec![2], vec![exact], 0).unwrap();
+        q = q.with_precision(Precision::F32);
+        assert_eq!(q.precision(), Precision::F32);
+        assert_eq!(q.col_values(0)[0], 1.0); // quantized
+        assert_eq!(q.col_values(0)[0] as f32 as f64, q.col_values(0)[0]); // idempotent
+        // concat refuses mixed precisions and propagates matching ones
+        let a = SparseChunk::from_raw(5, 1, 1, vec![0], vec![0.5], 0)
+            .unwrap()
+            .with_precision(Precision::F32);
+        let b64 = SparseChunk::from_raw(5, 1, 1, vec![1], vec![0.25], 1).unwrap();
+        assert!(SparseChunk::concat(&[a.clone(), b64]).is_err());
+        let b32 = SparseChunk::from_raw(5, 1, 1, vec![1], vec![0.25], 1)
+            .unwrap()
+            .with_precision(Precision::F32);
+        let joined = SparseChunk::concat(&[a, b32]).unwrap();
+        assert_eq!(joined.precision(), Precision::F32);
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::F32.val_bytes(), 4);
+        assert_eq!(Precision::F64.val_bytes(), 8);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //!   granularity-invariant by design).
 
 use crate::error::Result;
-use crate::sparse::SparseChunk;
+use crate::sparse::{Precision, SparseChunk};
 
 /// Abstract source of **already-sparsified** chunks — the mirror of
 /// [`ChunkSource`](crate::coordinator::ChunkSource) for data that skipped
@@ -41,6 +41,12 @@ pub trait SparseChunkSource: Send {
     fn next_chunk(&mut self) -> Result<Option<SparseChunk>>;
     /// Restart for another pass.
     fn reset(&mut self) -> Result<()>;
+    /// Storage precision of the yielded chunks. Defaults to
+    /// [`Precision::F64`] (every pre-precision-axis source); the store
+    /// reader overrides it from the manifest.
+    fn precision(&self) -> Precision {
+        Precision::F64
+    }
 }
 
 /// In-memory [`SparseChunkSource`]: replays a vector of chunks (sorted by
@@ -49,6 +55,7 @@ pub struct SparseVecSource {
     chunks: Vec<SparseChunk>,
     p: usize,
     m: usize,
+    precision: Precision,
     pos: usize,
 }
 
@@ -67,8 +74,12 @@ impl SparseVecSource {
             return crate::error::invalid("SparseVecSource: no chunks");
         };
         let (p, m) = (first.p(), first.m());
+        let precision = first.precision();
         if chunks.iter().any(|c| c.p() != p || c.m() != m) {
             return crate::error::shape_err("SparseVecSource: mixed chunk shapes");
+        }
+        if chunks.iter().any(|c| c.precision() != precision) {
+            return crate::error::shape_err("SparseVecSource: mixed chunk precisions");
         }
         chunks.sort_by_key(|c| c.start_col());
         let mut expected = chunks[0].start_col();
@@ -88,7 +99,7 @@ impl SparseVecSource {
             }
             expected = start + c.n();
         }
-        Ok(SparseVecSource { chunks, p, m, pos: 0 })
+        Ok(SparseVecSource { chunks, p, m, precision, pos: 0 })
     }
 }
 
@@ -117,6 +128,10 @@ impl SparseChunkSource for SparseVecSource {
     fn reset(&mut self) -> Result<()> {
         self.pos = 0;
         Ok(())
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
     }
 }
 

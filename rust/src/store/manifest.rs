@@ -9,6 +9,7 @@ use std::path::Path;
 
 use crate::error::{corrupt, invalid, Error, Result};
 use crate::sampling::{Scheme, SparsifyConfig};
+use crate::sparse::Precision;
 use crate::transform::TransformKind;
 
 /// Manifest file name inside a store directory.
@@ -25,7 +26,12 @@ pub const MANIFEST_FILE: &str = "manifest.pdsm";
 ///   repeat, which a v1 reader would mis-validate and mis-estimate. v1
 ///   manifests are still read (the scheme is inferred from
 ///   `preconditioned`).
-const MANIFEST_VERSION: u32 = 2;
+/// * v3 — adds the `precision` key (`f32 | f64`). `f32` stores serialize
+///   shard value blocks as little-endian `f32` (shard version 2), which
+///   a v2 reader would mis-parse — hence the bump. The writer emits the
+///   **lowest capable** version: `f64` stores stay v2 (byte-identical to
+///   pre-precision releases); a missing key on read means `f64`.
+const MANIFEST_VERSION: u32 = 3;
 
 /// Per-shard record: boundaries in the global column order plus the
 /// CRC-32 of the entire shard file.
@@ -73,6 +79,9 @@ pub struct StoreManifest {
     /// the estimator calibration (`Scheme::Hybrid` stores weighted
     /// with-replacement slots).
     pub scheme: Scheme,
+    /// Storage precision of the shard value blocks (v3 key; absent —
+    /// and hence [`Precision::F64`] — in every earlier version).
+    pub precision: Precision,
     /// Target columns per shard; every shard except the last holds
     /// exactly this many.
     pub shard_cols: usize,
@@ -86,10 +95,11 @@ impl StoreManifest {
         SparsifyConfig { gamma: self.gamma, transform: self.transform, seed: self.seed }
     }
 
-    /// Compressed payload bytes across all shards (12 bytes per kept
-    /// entry: `u32` index + `f64` value), excluding headers.
+    /// Compressed payload bytes across all shards (per kept entry: a
+    /// 4-byte `u32` index plus a 4- or 8-byte value depending on
+    /// [`precision`](Self::precision)), excluding headers.
     pub fn payload_bytes(&self) -> u64 {
-        (self.n as u64) * (self.m as u64) * 12
+        (self.n as u64) * (self.m as u64) * (4 + self.precision.val_bytes() as u64)
     }
 
     /// Index of the shard containing global column `col`.
@@ -121,6 +131,11 @@ impl StoreManifest {
         out.push_str(&format!("seed = {}\n", self.seed));
         out.push_str(&format!("preconditioned = {}\n", self.preconditioned));
         out.push_str(&format!("scheme = {}\n", self.scheme.name()));
+        if self.version >= 3 {
+            // the key exists from v3 on; emitting it under v2 would
+            // break the byte-identity of f64 stores with old releases
+            out.push_str(&format!("precision = {}\n", self.precision.name()));
+        }
         out.push_str(&format!("shard_cols = {}\n", self.shard_cols));
         out.push_str(&format!("shard_count = {}\n", self.shards.len()));
         for s in &self.shards {
@@ -188,6 +203,13 @@ impl StoreManifest {
             }
             None => return corrupt("manifest: version >= 2 requires a scheme key"),
         };
+        let precision = match kv.iter().find(|(k, _)| k == "precision") {
+            Some((_, v)) => Precision::parse(v)
+                .ok_or_else(|| Error::Corrupt(format!("manifest: unknown precision {v:?}")))?,
+            // the key is optional at every version: pre-v3 stores (and
+            // v3 writers that chose to omit it) are all f64
+            None => Precision::F64,
+        };
         let shard_count = lookup_num(&kv, "shard_count")? as usize;
         if shard_count != shards.len() {
             return corrupt(format!(
@@ -207,6 +229,7 @@ impl StoreManifest {
             seed: lookup_num(&kv, "seed")?,
             preconditioned,
             scheme,
+            precision,
             shard_cols: lookup_num(&kv, "shard_cols")? as usize,
             shards,
         };
@@ -228,6 +251,12 @@ impl StoreManifest {
         }
         if self.shard_cols == 0 {
             return corrupt("manifest: shard_cols = 0");
+        }
+        if self.precision == Precision::F32 && self.version < 3 {
+            return corrupt(format!(
+                "manifest: f32 precision requires version >= 3 (got {})",
+                self.version
+            ));
         }
         if self.scheme.preconditions() != self.preconditioned {
             return corrupt(format!(
@@ -351,6 +380,7 @@ mod tests {
             seed: 7,
             preconditioned: true,
             scheme: Scheme::Precond,
+            precision: Precision::F64,
             shard_cols: 10,
             shards: vec![
                 ShardEntry {
@@ -440,6 +470,48 @@ mod tests {
 
         // unknown scheme name
         let text = sample().to_text().replace("scheme = precond", "scheme = mystery");
+        assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn precision_key_roundtrips_and_defaults_to_f64() {
+        // v2 manifest: no precision key emitted, parses as f64
+        let v2 = sample();
+        assert!(!v2.to_text().contains("precision"));
+        assert_eq!(StoreManifest::parse(&v2.to_text()).unwrap().precision, Precision::F64);
+
+        // v3 + f32 roundtrips
+        let mut v3 = sample();
+        v3.version = 3;
+        v3.precision = Precision::F32;
+        assert!(v3.to_text().contains("precision = f32"));
+        let parsed = StoreManifest::parse(&v3.to_text()).unwrap();
+        assert_eq!(parsed.precision, Precision::F32);
+        assert_eq!(parsed.version, 3);
+        assert_eq!(parsed.payload_bytes(), 25 * 32 * 8);
+        assert_eq!(sample().payload_bytes(), 25 * 32 * 12);
+
+        // v3 + f64 with the key stripped still parses (defaults f64)
+        let mut v3f64 = sample();
+        v3f64.version = 3;
+        let text: String = v3f64
+            .to_text()
+            .lines()
+            .filter(|l| !l.starts_with("precision"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert_eq!(StoreManifest::parse(&text).unwrap().precision, Precision::F64);
+
+        // f32 claimed under v2 is corrupt (a v2 reader would mis-parse
+        // the 4-byte value blocks)
+        let mut bad = sample();
+        bad.precision = Precision::F32;
+        assert!(matches!(bad.validate(), Err(Error::Corrupt(_))));
+
+        // unknown precision name
+        let mut v3bad = sample();
+        v3bad.version = 3;
+        let text = v3bad.to_text().replace("precision = f64", "precision = f16");
         assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
     }
 

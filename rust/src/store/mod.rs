@@ -49,8 +49,14 @@ pub use writer::SparseStoreWriter;
 /// Magic bytes opening every shard file.
 pub(crate) const SHARD_MAGIC: &[u8; 4] = b"PDSS";
 
-/// Current shard format version (header field; bumped on layout changes).
+/// Shard format version for `f64` value blocks (header field; the
+/// original and still-default layout — `f64` stores are byte-identical
+/// to every pre-`Precision` release).
 pub(crate) const SHARD_VERSION: u32 = 1;
+
+/// Shard format version for `f32` value blocks: same header and index
+/// block, values serialized as little-endian `f32` (4 bytes/entry).
+pub(crate) const SHARD_VERSION_F32: u32 = 2;
 
 /// Fixed shard header length in bytes: magic + version + p + m + n_cols
 /// (4 × u32 + the 4-byte magic) + start_col (u64).

@@ -12,10 +12,10 @@ use std::path::{Path, PathBuf};
 use crate::sparse::SparseChunkSource;
 use crate::error::{corrupt, invalid, Error, Result};
 use crate::sampling::Sparsifier;
-use crate::sparse::SparseChunk;
+use crate::sparse::{Precision, SparseChunk};
 
 use super::manifest::StoreManifest;
-use super::{Crc32, SHARD_HEADER_LEN, SHARD_MAGIC, SHARD_VERSION};
+use super::{Crc32, SHARD_HEADER_LEN, SHARD_MAGIC, SHARD_VERSION, SHARD_VERSION_F32};
 
 /// Streaming reader over a completed sparse store.
 ///
@@ -97,7 +97,10 @@ impl SparseStoreReader {
     ///
     /// This bounds what the *reader* hands out per call; a consumer that
     /// retains chunks (e.g. the K-means fit, which iterates over all
-    /// samples) still accumulates the full compressed size.
+    /// samples) still accumulates the full compressed size. The budget
+    /// is sized on the **in-RAM** chunk — whose values are always `f64`
+    /// regardless of the store's precision — not the (possibly smaller)
+    /// on-disk bytes.
     pub fn with_memory_budget(mut self, bytes: usize) -> Self {
         let per_col = (self.manifest.m * 12).max(1);
         self.chunk_cols = (bytes / per_col).max(1);
@@ -197,6 +200,7 @@ impl SparseStoreReader {
                 self.open_shard()?;
             }
             let m = self.manifest.m;
+            let vb = self.manifest.precision.val_bytes();
             let a = self.col_in_shard;
             let b = (a + self.chunk_cols).min(n_cols);
             let cols = b - a;
@@ -207,22 +211,32 @@ impl SparseStoreReader {
             let mut ibuf = vec![0u8; cols * m * 4];
             f.read_exact(&mut ibuf)?;
             f.seek(SeekFrom::Start(
-                (SHARD_HEADER_LEN + n_cols * m * 4 + a * m * 8) as u64,
+                (SHARD_HEADER_LEN + n_cols * m * 4 + a * m * vb) as u64,
             ))?;
-            let mut vbuf = vec![0u8; cols * m * 8];
+            let mut vbuf = vec![0u8; cols * m * vb];
             f.read_exact(&mut vbuf)?;
             let indices: Vec<u32> = ibuf
                 .chunks_exact(4)
                 .map(|q| u32::from_le_bytes([q[0], q[1], q[2], q[3]]))
                 .collect();
-            let values: Vec<f64> = vbuf
-                .chunks_exact(8)
-                .map(|q| {
-                    f64::from_le_bytes([q[0], q[1], q[2], q[3], q[4], q[5], q[6], q[7]])
-                })
-                .collect();
+            // decode to the chunk's in-RAM f64 values; the f32 → f64
+            // widening is exact, so every downstream fold runs the same
+            // f64 kernels whatever the store precision
+            let values: Vec<f64> = match self.manifest.precision {
+                Precision::F64 => vbuf
+                    .chunks_exact(8)
+                    .map(|q| {
+                        f64::from_le_bytes([q[0], q[1], q[2], q[3], q[4], q[5], q[6], q[7]])
+                    })
+                    .collect(),
+                Precision::F32 => vbuf
+                    .chunks_exact(4)
+                    .map(|q| f32::from_le_bytes([q[0], q[1], q[2], q[3]]) as f64)
+                    .collect(),
+            };
             self.col_in_shard = b;
-            let chunk = SparseChunk::from_raw(self.manifest.p, m, cols, indices, values, start_col + a)?;
+            let chunk = SparseChunk::from_raw(self.manifest.p, m, cols, indices, values, start_col + a)?
+                .with_precision(self.manifest.precision);
             if self.verify {
                 // weighted schemes legally repeat indices (one slot per
                 // with-replacement draw); uniform schemes must be
@@ -246,7 +260,8 @@ impl SparseStoreReader {
         let entry = &self.manifest.shards[self.shard];
         let path = self.dir.join(&entry.file);
         let m = self.manifest.m;
-        let expected_len = (SHARD_HEADER_LEN + entry.n_cols * m * 12) as u64;
+        let per_entry = 4 + self.manifest.precision.val_bytes();
+        let expected_len = (SHARD_HEADER_LEN + entry.n_cols * m * per_entry) as u64;
         let meta = std::fs::metadata(&path).map_err(|e| {
             Error::Corrupt(format!("{}: missing shard file ({e})", path.display()))
         })?;
@@ -285,8 +300,17 @@ impl SparseStoreReader {
         }
         let u32_at = |off: usize| u32::from_le_bytes([header[off], header[off + 1], header[off + 2], header[off + 3]]);
         let version = u32_at(4);
-        if version != SHARD_VERSION {
-            return corrupt(format!("{}: shard version {version} unsupported", path.display()));
+        let expected_version = match self.manifest.precision {
+            Precision::F64 => SHARD_VERSION,
+            Precision::F32 => SHARD_VERSION_F32,
+        };
+        if version != expected_version {
+            return corrupt(format!(
+                "{}: shard version {version} does not match the manifest's {} precision \
+                 (expected {expected_version})",
+                path.display(),
+                self.manifest.precision.name()
+            ));
         }
         let (hp, hm, hn) = (u32_at(8) as usize, u32_at(12) as usize, u32_at(16) as usize);
         let hstart = u64::from_le_bytes([
@@ -333,6 +357,10 @@ impl SparseChunkSource for SparseStoreReader {
         self.rewind();
         Ok(())
     }
+
+    fn precision(&self) -> Precision {
+        self.manifest.precision
+    }
 }
 
 #[cfg(test)]
@@ -371,7 +399,7 @@ mod tests {
             SparseStoreWriter::create(dir, &sp, scfg, true, shard_cols).unwrap();
         let mut src = MatSource::new(x, chunk_cols);
         let mut timer = Timer::new();
-        let cfg = StreamConfig { workers, queue_depth: 2, chunk_cols };
+        let cfg = StreamConfig { workers, queue_depth: 2, chunk_cols, ..Default::default() };
         let mut sink = |c: SparseChunk| writer.append(c);
         compress_stream(&mut src, &sp, cfg, true, &mut sink, &mut timer).unwrap();
         writer.finish().unwrap()
@@ -680,6 +708,71 @@ mod tests {
         resumed.seek_to_col(25).unwrap();
         assert!(resumed.next_chunk().unwrap().is_none());
         assert!(resumed.seek_to_col(26).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f64_store_emits_v2_manifest_and_v1_shards() {
+        // the precision axis must not disturb f64 stores: lowest capable
+        // version on disk, no precision key, 8-byte values, f64 chunks
+        let (dir, manifest) = small_store("f64_compat");
+        assert_eq!(manifest.version, 2);
+        assert_eq!(manifest.precision, Precision::F64);
+        let text = std::fs::read_to_string(dir.join(MANIFEST_FILE)).unwrap();
+        assert!(!text.contains("precision"), "{text}");
+        let shard = std::fs::read(dir.join(&manifest.shards[0].file)).unwrap();
+        assert_eq!(u32::from_le_bytes([shard[4], shard[5], shard[6], shard[7]]), 1);
+        assert_eq!(shard.len(), SHARD_HEADER_LEN + 10 * manifest.m * 12);
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        assert_eq!(SparseChunkSource::precision(&reader), Precision::F64);
+        let c = reader.next_chunk().unwrap().unwrap();
+        assert_eq!(c.precision(), Precision::F64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f32_store_roundtrips_quantized_values() {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 12 };
+        let sp = Sparsifier::new(16, scfg).unwrap();
+        let mut rng = Pcg64::seed(13);
+        let x = Mat::from_fn(16, 25, |_, _| rng.normal());
+        let direct = sp.compress_chunk(&x, 0).unwrap();
+        let dir = tmpdir("f32_roundtrip");
+        let mut writer = SparseStoreWriter::create(&dir, &sp, scfg, true, 10)
+            .unwrap()
+            .with_precision(Precision::F32);
+        writer.append(direct.clone()).unwrap();
+        let manifest = writer.finish().unwrap();
+
+        // v3 manifest + v2 shards, value block at 4 bytes/entry
+        assert_eq!(manifest.version, 3);
+        assert_eq!(manifest.precision, Precision::F32);
+        assert_eq!(manifest.payload_bytes(), (25 * manifest.m * 8) as u64);
+        let shard = std::fs::read(dir.join(&manifest.shards[0].file)).unwrap();
+        assert_eq!(u32::from_le_bytes([shard[4], shard[5], shard[6], shard[7]]), 2);
+        assert_eq!(shard.len(), SHARD_HEADER_LEN + 10 * manifest.m * 8);
+
+        // read back (under a budget, to cross the value-seek path):
+        // indices bit-exact, values exactly the f32 quantization of the
+        // originals, chunk marked f32
+        let want = direct.clone().with_precision(Precision::F32);
+        let mut reader = SparseStoreReader::open(&dir)
+            .unwrap()
+            .with_memory_budget(4 * manifest.m * 12);
+        assert_eq!(SparseChunkSource::precision(&reader), Precision::F32);
+        let mut col = 0usize;
+        while let Some(chunk) = reader.next_chunk().unwrap() {
+            assert_eq!(chunk.precision(), Precision::F32);
+            assert_eq!(chunk.start_col(), col);
+            for i in 0..chunk.n() {
+                assert_eq!(chunk.col_indices(i), want.col_indices(col + i));
+                for (a, b) in chunk.col_values(i).iter().zip(want.col_values(col + i)) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            col += chunk.n();
+        }
+        assert_eq!(col, 25);
         std::fs::remove_dir_all(&dir).ok();
     }
 

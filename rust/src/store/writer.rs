@@ -11,11 +11,11 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{invalid, shape_err, Error, Result};
 use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
-use crate::sparse::SparseChunk;
+use crate::sparse::{Precision, SparseChunk};
 use crate::transform::TransformKind;
 
 use super::manifest::{ShardEntry, StoreManifest, MANIFEST_FILE};
-use super::{shard_file_name, Crc32, SHARD_MAGIC, SHARD_VERSION};
+use super::{shard_file_name, Crc32, SHARD_MAGIC, SHARD_VERSION, SHARD_VERSION_F32};
 
 /// Serialization block size (entries per `write_all`) — bounds the
 /// scratch buffer while keeping syscalls large.
@@ -72,6 +72,9 @@ pub struct SparseStoreWriter {
     /// Element-sampling scheme recorded in the manifest (derived from the
     /// sparsifier's scheme and the precondition flag at `create`).
     scheme: Scheme,
+    /// Value-block storage precision. F64 (the default) produces stores
+    /// byte-identical to pre-precision releases.
+    precision: Precision,
     shard_cols: usize,
     /// Next global column the store is waiting for.
     next_col: usize,
@@ -130,6 +133,7 @@ impl SparseStoreWriter {
             seed: cfg.seed,
             preconditioned,
             scheme,
+            precision: Precision::F64,
             shard_cols,
             next_col: 0,
             pending: BTreeMap::new(),
@@ -138,6 +142,20 @@ impl SparseStoreWriter {
             cur_start: 0,
             shards: Vec::new(),
         })
+    }
+
+    /// Select the value-block storage precision (builder; call before the
+    /// first [`append`](Self::append)). [`Precision::F32`] halves the
+    /// value bytes (manifest v3, shard v2) and quantizes each value once
+    /// on absorb; [`Precision::F64`] — the default — keeps the store
+    /// byte-identical to pre-precision releases (manifest v2, shard v1).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        assert_eq!(
+            self.next_col, 0,
+            "with_precision must be called before the first append"
+        );
+        self.precision = precision;
+        self
     }
 
     /// Columns absorbed into shards (or the current shard buffer) so far.
@@ -213,8 +231,15 @@ impl SparseStoreWriter {
             let take = room.min(n - off);
             self.cur_indices
                 .extend_from_slice(&chunk.indices()[off * m..(off + take) * m]);
-            self.cur_values
-                .extend_from_slice(&chunk.values()[off * m..(off + take) * m]);
+            let vals = &chunk.values()[off * m..(off + take) * m];
+            match self.precision {
+                Precision::F64 => self.cur_values.extend_from_slice(vals),
+                // quantize exactly once at absorb, so the buffered state
+                // (and any future read-back) matches the disk bytes
+                Precision::F32 => {
+                    self.cur_values.extend(vals.iter().map(|&v| v as f32 as f64));
+                }
+            }
             off += take;
             self.next_col += take;
             if self.cur_cols() == self.shard_cols {
@@ -241,9 +266,13 @@ impl SparseStoreWriter {
         let mut crc = Crc32::new();
         let mut out = BufWriter::new(File::create(&path)?);
 
+        let shard_version = match self.precision {
+            Precision::F64 => SHARD_VERSION,
+            Precision::F32 => SHARD_VERSION_F32,
+        };
         let mut header = Vec::with_capacity(super::SHARD_HEADER_LEN);
         header.extend_from_slice(SHARD_MAGIC);
-        header.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+        header.extend_from_slice(&shard_version.to_le_bytes());
         header.extend_from_slice(&(self.p as u32).to_le_bytes());
         header.extend_from_slice(&(self.m as u32).to_le_bytes());
         header.extend_from_slice(&(n_cols as u32).to_le_bytes());
@@ -262,8 +291,19 @@ impl SparseStoreWriter {
         }
         for block in self.cur_values.chunks(WRITE_BLOCK) {
             buf.clear();
-            for v in block {
-                buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            match self.precision {
+                Precision::F64 => {
+                    for v in block {
+                        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                }
+                // buffered values are already quantized (absorb), so the
+                // narrowing cast here is exact
+                Precision::F32 => {
+                    for v in block {
+                        buf.extend_from_slice(&(*v as f32).to_bits().to_le_bytes());
+                    }
+                }
             }
             crc.update(&buf);
             out.write_all(&buf)?;
@@ -296,8 +336,14 @@ impl SparseStoreWriter {
             ));
         }
         self.flush_shard()?;
+        // emit the lowest capable manifest version: f64 stores stay v2
+        // and remain byte-identical to pre-precision releases
+        let version = match self.precision {
+            Precision::F64 => 2,
+            Precision::F32 => 3,
+        };
         let manifest = StoreManifest {
-            version: 2,
+            version,
             p: self.p,
             p_orig: self.p_orig,
             m: self.m,
@@ -307,6 +353,7 @@ impl SparseStoreWriter {
             seed: self.seed,
             preconditioned: self.preconditioned,
             scheme: self.scheme,
+            precision: self.precision,
             shard_cols: self.shard_cols,
             shards: std::mem::take(&mut self.shards),
         };

@@ -15,6 +15,8 @@
 //! `bitwise_matches_textbook_reference`) — blocking only reorders
 //! butterflies that touch disjoint data.
 
+use crate::simd::Isa;
+
 /// `true` iff `n` is a positive power of two.
 #[inline]
 pub fn is_pow2(n: usize) -> bool {
@@ -23,13 +25,13 @@ pub fn is_pow2(n: usize) -> bool {
 
 /// Intra-block transform size: 1024 f64 = 8 KB, half a typical 32 KB L1d,
 /// leaving room for the outer loop's other streams.
-const FWHT_BLOCK: usize = 1024;
+pub(crate) const FWHT_BLOCK: usize = 1024;
 
 /// Fused radix-4 first pass: stages h=1 and h=2 in one sweep over
 /// 4-aligned quads (`x.len() % 4 == 0`). Bitwise identical to running the
 /// two radix-2 stages back to back.
 #[inline]
-fn radix4_first_pass(x: &mut [f64]) {
+pub(crate) fn radix4_first_pass(x: &mut [f64]) {
     debug_assert_eq!(x.len() % 4, 0);
     let mut i = 0;
     while i < x.len() {
@@ -109,9 +111,38 @@ fn fwht_stages(x: &mut [f64], from_h: usize, scale: f64) {
 /// Normalized in-place FWHT over `x` (length must be a power of two).
 /// Involutive: applying twice restores the input. O(p log p), with the
 /// cache-blocked schedule described in the module docs for large `p`.
+///
+/// Dispatches on [`crate::simd::active`]; every ISA tier is bitwise
+/// identical to the scalar schedule below (see `crate::simd`), so the
+/// choice of tier never changes the output.
 pub fn fwht_inplace(x: &mut [f64]) {
+    fwht_inplace_isa(x, crate::simd::active());
+}
+
+/// [`fwht_inplace`] pinned to one ISA tier (used by tests; the public
+/// entry dispatches on the active tier). Requests above the detected
+/// tier clamp downward.
+pub(crate) fn fwht_inplace_isa(x: &mut [f64], isa: Isa) {
     let p = x.len();
     debug_assert!(is_pow2(p), "fwht requires power-of-two length");
+    // sizes below one 16-element tile always take the scalar path (the
+    // vector schedules need p >= 16); all tiers agree bit for bit anyway
+    if p >= 16 {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 if crate::simd::detect() >= Isa::Avx2 => {
+                // SAFETY: AVX2 is detected and p is a power of two >= 16.
+                unsafe { crate::simd::x86::fwht_avx2(x) };
+                return;
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 | Isa::Avx2 => {
+                crate::simd::x86::fwht_sse2(x);
+                return;
+            }
+            _ => {}
+        }
+    }
     let scale = 1.0 / (p as f64).sqrt();
     match p {
         1 => {
@@ -274,6 +305,52 @@ mod tests {
                     b.to_bits(),
                     "p={p} index {i}: blocked {a:e} != textbook {b:e}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_tier_bitwise_matches_textbook_reference() {
+        // the scalar fallback must stay byte-identical to the pre-SIMD
+        // kernels regardless of what the host CPU supports
+        for p in [8usize, 64, 512, 1024, 4096] {
+            let mut rng = Pcg64::seed(p as u64 ^ 0x5CA1);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let mut scalar = x.clone();
+            fwht_inplace_isa(&mut scalar, crate::simd::Isa::Scalar);
+            let mut textbook = x;
+            fwht_textbook(&mut textbook);
+            for (a, b) in scalar.iter().zip(&textbook) {
+                assert_eq!(a.to_bits(), b.to_bits(), "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_tiers_bitwise_match_scalar() {
+        use crate::simd::{detect, Isa};
+        // every available tier must produce bit-identical output to the
+        // scalar schedule, across the single-tile, intra-block, and
+        // cross-block regimes (odd/even stage counts included)
+        for p in [16usize, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 1 << 14] {
+            let mut rng = Pcg64::seed(p as u64 ^ 0x51D0);
+            let x: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let mut want = x.clone();
+            fwht_inplace_isa(&mut want, Isa::Scalar);
+            for isa in [Isa::Sse2, Isa::Avx2] {
+                if detect() < isa {
+                    continue;
+                }
+                let mut got = x.clone();
+                fwht_inplace_isa(&mut got, isa);
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "isa={} p={p} index {i}: {a:e} != {b:e}",
+                        isa.name()
+                    );
+                }
             }
         }
     }

@@ -8,7 +8,7 @@
 //! cross-checked in `rust/tests/xla_parity.rs`.
 
 mod dct;
-mod fwht;
+pub(crate) mod fwht;
 
 pub use dct::DctPlan;
 pub use fwht::{fwht_inplace, is_pow2};

@@ -38,7 +38,7 @@ fn assign_matches_native_engine() {
     let Some(engine) = engine_or_skip() else { return };
     // n = 300 exercises sub-batching (artifact b=256) + padding
     let (_sp, chunk, centers, _) = fixture(300, 11);
-    let (a_native, obj_native) = NativeAssigner.assign(&chunk, &centers).unwrap();
+    let (a_native, obj_native) = NativeAssigner::new().assign(&chunk, &centers).unwrap();
     let (a_xla, obj_xla) = engine.assign(&chunk, &centers).unwrap();
     assert_eq!(a_native.len(), a_xla.len());
     let mismatches = a_native.iter().zip(&a_xla).filter(|(a, b)| a != b).count();

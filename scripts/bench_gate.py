@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Perf regression gate for BENCH_hotpaths.json.
+
+Compares a freshly measured bench JSON against the committed baseline.
+Machines differ in absolute speed, so the gate is self-normalizing:
+
+  1. intersect the two `results` lists by row name,
+  2. ratio_i = fresh_median_i / committed_median_i for each shared row,
+  3. norm = median(ratio_i)  -- the overall speed of this machine
+     relative to the baseline host,
+  4. a row FAILS if ratio_i > norm * (1 + tolerance): it got more than
+     `tolerance` slower *relative to the rest of the suite*, which is
+     what a code regression (as opposed to a slow runner) looks like.
+
+It also enforces every entry of the fresh file's `checks` list
+(`value <= tolerance` per entry -- numeric invariants such as the
+f32-vs-f64 explained-variance parity).
+
+Usage:
+  scripts/bench_gate.py COMMITTED.json FRESH.json [--tolerance 0.25]
+
+Exit status 0 = pass, 1 = regression or failed check, 2 = bad input.
+The 25% default tolerance is documented in rust/EXPERIMENTS.md §Perf log.
+"""
+
+import argparse
+import json
+import statistics
+import sys
+
+MIN_SHARED_ROWS = 5  # an empty/tiny intersection must not silently pass
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot load {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("committed", help="baseline JSON (checked into the repo)")
+    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed slowdown relative to the suite-wide norm (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    committed = load(args.committed)
+    fresh = load(args.fresh)
+    base = {r["name"]: r for r in committed.get("results", [])}
+    shared = [r for r in fresh.get("results", []) if r["name"] in base]
+    if len(shared) < MIN_SHARED_ROWS:
+        print(
+            f"error: only {len(shared)} row(s) shared between {args.committed} and "
+            f"{args.fresh} (need >= {MIN_SHARED_ROWS}); row names out of sync?",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+
+    ratios = {r["name"]: r["median_s"] / base[r["name"]]["median_s"] for r in shared}
+    norm = statistics.median(ratios.values())
+    limit = norm * (1.0 + args.tolerance)
+    print(
+        f"bench gate: {len(shared)} shared rows, machine norm {norm:.3f}x baseline, "
+        f"per-row limit {limit:.3f}x (tolerance {args.tolerance:.0%})\n"
+    )
+    print(f"{'row':<56} {'base':>10} {'fresh':>10} {'ratio':>7}  status")
+    failed = []
+    for r in shared:
+        name = r["name"]
+        ratio = ratios[name]
+        ok = ratio <= limit
+        if not ok:
+            failed.append(name)
+        print(
+            f"{name:<56} {base[name]['median_s']:>10.3e} {r['median_s']:>10.3e} "
+            f"{ratio:>6.2f}x  {'ok' if ok else 'REGRESSED'}"
+        )
+
+    print()
+    bad_checks = []
+    for c in fresh.get("checks", []):
+        ok = c["value"] <= c["tolerance"]
+        if not ok:
+            bad_checks.append(c["name"])
+        print(
+            f"check {c['name']}: value {c['value']:.3e} vs tolerance "
+            f"{c['tolerance']:.1e} -- {'ok' if ok else 'FAILED'}"
+        )
+    # every committed check must still be emitted by the fresh run
+    committed_checks = {c["name"] for c in committed.get("checks", [])}
+    fresh_checks = {c["name"] for c in fresh.get("checks", [])}
+    for missing in sorted(committed_checks - fresh_checks):
+        bad_checks.append(missing)
+        print(f"check {missing}: MISSING from fresh run")
+
+    if failed or bad_checks:
+        print(
+            f"\nFAIL: {len(failed)} regressed row(s), {len(bad_checks)} failed check(s)",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print("\nPASS")
+
+
+if __name__ == "__main__":
+    main()
