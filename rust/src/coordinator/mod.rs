@@ -31,7 +31,8 @@ pub use krylov::{
 };
 pub use pipeline::{compress_stream, SparseConsumer};
 pub use plan::{
-    two_pass_refine_stream, FitOutcome, FitPlan, FitReport, PcaFit, Solver, Task, DEFAULT_TOPK,
+    two_pass_refine_stream, FitOutcome, FitPlan, FitReport, PcaFit, Solver, Task,
+    DEFAULT_CORESET_SIZE, DEFAULT_TOPK,
 };
 // Re-exported from the data layer for compatibility: the sparse-source
 // abstraction moved to `sparse::source` so estimators and K-means can

@@ -12,7 +12,17 @@
 //!   already-sparsified source ([`source`](FitPlan::source)), or a
 //!   persistent sparse store ([`store`](FitPlan::store));
 //! * **solver** — [`Solver::Covariance`] / [`Solver::Krylov`] for PCA,
-//!   [`Solver::InMemory`] / [`Solver::Stream`] for K-means.
+//!   [`Solver::InMemory`] / [`Solver::Stream`] / [`Solver::Coreset`] for
+//!   K-means.
+//!
+//! Store-backed plans additionally support **distributed fits**:
+//! [`partition`](FitPlan::partition) runs the fit as N mergeable
+//! shard-range partials (bit-identical for every N and merge order),
+//! [`partials`](FitPlan::partials) emits the workers' serialized
+//! [`PartialFit`](crate::distributed::PartialFit) artifacts instead of
+//! fitting, and [`merge_partials`](FitPlan::merge_partials) folds such
+//! artifacts back into the same [`FitReport`] a single-process fit
+//! produces.
 //!
 //! Every combination returns the same [`FitReport`]: phase timings, raw
 //! *and* sparse pass accounting, and — for K-means — the paper's
@@ -30,6 +40,9 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::distributed::{
+    kind, peek_kind, weighted_kmeans, CoresetPartial, PartialFit, PcaPartial,
+};
 use crate::error::{invalid, Result};
 use crate::estimators::{CovarianceEstimator, ScatterDiag, SparseCovOp, SparseMeanEstimator};
 use crate::kmeans::{
@@ -38,10 +51,11 @@ use crate::kmeans::{
 };
 use crate::linalg::Mat;
 use crate::metrics::Timer;
+use crate::parallel;
 use crate::pca::Pca;
 use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
 use crate::sparse::{Precision, SparseChunk, SparseChunkSource};
-use crate::store::{SparseStoreReader, SparseStoreWriter, StoreManifest};
+use crate::store::{ShardEntry, SparseStoreReader, SparseStoreWriter, StoreManifest};
 
 use super::krylov::{SourceCovOp, DEFAULT_KRYLOV_ITERS};
 use super::{compress_stream, ChunkSource, StreamConfig};
@@ -77,6 +91,15 @@ pub enum Solver {
     /// sparse pass per iteration, nothing materialized; with a
     /// memory-budgeted store reader the whole fit is out-of-core.
     Stream,
+    /// K-means: one-pass streaming via the merge-and-reduce coreset tree
+    /// (arXiv:1511.08990) — each store shard becomes a leaf, sibling
+    /// nodes reduce by importance sampling down to
+    /// [`coreset_size`](FitPlan::coreset_size) weighted points, and the
+    /// final weighted K-means runs on the surviving O(log n) nodes.
+    /// Approximate (see `EXPERIMENTS.md` for the tolerance contract vs
+    /// Lloyd) but single-pass, mergeable across workers, and
+    /// store-backed only.
+    Coreset,
 }
 
 impl Solver {
@@ -87,6 +110,7 @@ impl Solver {
             Solver::Krylov => "krylov",
             Solver::InMemory => "inmemory",
             Solver::Stream => "stream",
+            Solver::Coreset => "coreset",
         }
     }
 
@@ -97,9 +121,10 @@ impl Solver {
             "krylov" => Solver::Krylov,
             "inmemory" => Solver::InMemory,
             "stream" => Solver::Stream,
+            "coreset" => Solver::Coreset,
             other => {
                 return invalid(format!(
-                    "unknown solver {other:?} (want covariance|krylov|inmemory|stream)"
+                    "unknown solver {other:?} (want covariance|krylov|inmemory|stream|coreset)"
                 ))
             }
         })
@@ -161,8 +186,9 @@ pub struct FitReport {
     /// δ = [`CENTER_BOUND_DELTA`](crate::kmeans::CENTER_BOUND_DELTA)),
     /// copied from [`SparsifiedModel::center_bound`]; empty for PCA /
     /// compress plans. The bound applies to the uniform sampling schemes
-    /// only — weighted (hybrid) fits record `NaN` per iteration, never a
-    /// number the theory does not back.
+    /// only — weighted (hybrid) fits and [`Solver::Coreset`] fits (whose
+    /// centers come from the coreset, not the Eq. 39 estimator) record
+    /// `NaN` per iteration, never a number the theory does not back.
     pub center_bound: Vec<f64>,
     /// The task-specific result.
     pub outcome: FitOutcome,
@@ -271,7 +297,18 @@ pub struct FitPlan<'a> {
     refine: Option<&'a mut dyn ChunkSource>,
     store_dir: Option<PathBuf>,
     shard_cols: usize,
+    /// `Some(n)` runs a store-backed fit as `n` mergeable shard-range
+    /// partials (the distributed path); `None` is the classic
+    /// single-accumulator fit.
+    partition: Option<usize>,
+    /// Node capacity of the [`Solver::Coreset`] merge-and-reduce tree.
+    coreset_size: usize,
 }
+
+/// Default [`Solver::Coreset`] node capacity
+/// ([`FitPlan::coreset_size`]): 256 weighted points per surviving tree
+/// node.
+pub const DEFAULT_CORESET_SIZE: usize = 256;
 
 /// Shared default assigner instance (`&'static` so the builder can fall
 /// back to it without an allocation).
@@ -296,6 +333,8 @@ impl<'a> FitPlan<'a> {
             refine: None,
             store_dir: None,
             shard_cols: 8192,
+            partition: None,
+            coreset_size: DEFAULT_CORESET_SIZE,
         }
     }
 
@@ -472,8 +511,9 @@ impl<'a> FitPlan<'a> {
     }
 
     /// Solver override. PCA accepts [`Solver::Covariance`] (default) or
-    /// [`Solver::Krylov`]; K-means accepts [`Solver::InMemory`] (default)
-    /// or [`Solver::Stream`].
+    /// [`Solver::Krylov`]; K-means accepts [`Solver::InMemory`]
+    /// (default), [`Solver::Stream`] or [`Solver::Coreset`]
+    /// (store-backed only).
     pub fn solver(mut self, solver: Solver) -> Self {
         self.solver = Some(solver);
         self
@@ -537,6 +577,28 @@ impl<'a> FitPlan<'a> {
         self
     }
 
+    /// Run a store-backed fit as `n` mergeable shard-range partials —
+    /// the in-process form of the distributed fit, where each "worker"
+    /// folds its contiguous range of the store's shards into a
+    /// [`PartialFit`](crate::distributed::PartialFit) and the partials
+    /// are merged before finalizing. Because every partial keeps
+    /// per-shard subtotals (merged by disjoint union, finalized in
+    /// shard-index order), the fitted model is **bitwise identical for
+    /// every `n` and merge order**. Applies to store sources only;
+    /// supported by the covariance PCA solver and every K-means solver.
+    pub fn partition(mut self, n: usize) -> Self {
+        self.partition = Some(n.max(1));
+        self
+    }
+
+    /// Node capacity of the [`Solver::Coreset`] merge-and-reduce tree
+    /// (default [`DEFAULT_CORESET_SIZE`]). Larger values track the exact
+    /// Lloyd objective more closely at more memory per tree node.
+    pub fn coreset_size(mut self, size: usize) -> Self {
+        self.coreset_size = size.max(2);
+        self
+    }
+
     /// Execute the plan.
     pub fn run(self) -> Result<FitReport> {
         match self.task {
@@ -554,17 +616,32 @@ impl<'a> FitPlan<'a> {
         });
         let ok = match self.task {
             Task::Pca => matches!(solver, Solver::Covariance | Solver::Krylov),
-            Task::Kmeans => matches!(solver, Solver::InMemory | Solver::Stream),
+            Task::Kmeans => {
+                matches!(solver, Solver::InMemory | Solver::Stream | Solver::Coreset)
+            }
             Task::Compress => true,
         };
         if !ok {
             return invalid(format!(
                 "FitPlan: solver {:?} does not apply to task {:?} (pca: covariance|krylov, \
-                 kmeans: inmemory|stream)",
+                 kmeans: inmemory|stream|coreset)",
                 self.solver, self.task
             ));
         }
         Ok(solver)
+    }
+
+    /// Distributed features (partitioned fits, the coreset solver,
+    /// partial artifacts) are keyed to the store's shard table — they
+    /// need a store source.
+    fn check_distributed_source(&self, what: &str) -> Result<()> {
+        if !matches!(self.source, Some(SourceKind::Store(_))) {
+            return invalid(format!(
+                "FitPlan: {what} needs a store source (.store(reader)) — the store's \
+                 shards define the mergeable work units"
+            ));
+        }
+        Ok(())
     }
 
     fn take_source(source: &mut Option<SourceKind<'a>>) -> Result<SourceKind<'a>> {
@@ -583,6 +660,23 @@ impl<'a> FitPlan<'a> {
         let workers = self.stream.workers;
         let scheme = self.effective_scheme();
         let precision = self.precision.unwrap_or_default();
+        if let Some(parts) = self.partition {
+            self.check_distributed_source(".partition()")?;
+            if solver == Solver::Krylov {
+                return invalid(
+                    "FitPlan: .partition() applies to the covariance PCA solver — krylov \
+                     iterates over the whole store and has no one-shot partial",
+                );
+            }
+            let SourceKind::Store(reader) = Self::take_source(&mut self.source)? else {
+                unreachable!("checked above");
+            };
+            let sp = reader.sparsifier()?;
+            Self::check_requested_scheme(self.scheme, sp.scheme())?;
+            Self::check_requested_precision(self.precision, reader.manifest().precision)?;
+            let preconditioned = reader.manifest().preconditioned;
+            return pca_cov_partitioned(reader, &sp, topk, preconditioned, parts);
+        }
         match Self::take_source(&mut self.source)? {
             SourceKind::Raw(src) => {
                 let Some(scfg) = self.scfg else {
@@ -642,6 +736,12 @@ impl<'a> FitPlan<'a> {
         let opts = self.opts;
         let scheme = self.effective_scheme();
         let precision = self.precision.unwrap_or_default();
+        if solver == Solver::Coreset {
+            self.check_distributed_source("the coreset solver")?;
+        }
+        if self.partition.is_some() {
+            self.check_distributed_source(".partition()")?;
+        }
         let refine = self.refine.take();
         let report = match Self::take_source(&mut self.source)? {
             SourceKind::Raw(src) => {
@@ -719,16 +819,38 @@ impl<'a> FitPlan<'a> {
                 Self::check_requested_scheme(self.scheme, sp.scheme())?;
                 Self::check_requested_precision(self.precision, reader.manifest().precision)?;
                 let preconditioned = reader.manifest().preconditioned;
-                let mut report = kmeans_from_sparse(
-                    reader,
-                    &sp,
-                    k,
-                    opts,
-                    assigner,
-                    workers,
-                    preconditioned,
-                    solver,
-                )?;
+                let mut report = match (solver, self.partition) {
+                    (Solver::Coreset, parts) => kmeans_coreset_store(
+                        reader,
+                        &sp,
+                        k,
+                        opts,
+                        assigner,
+                        preconditioned,
+                        parts.unwrap_or(1),
+                        self.coreset_size,
+                    )?,
+                    (_, Some(parts)) => kmeans_partitioned_store(
+                        reader,
+                        &sp,
+                        k,
+                        opts,
+                        assigner,
+                        workers,
+                        preconditioned,
+                        parts,
+                    )?,
+                    (_, None) => kmeans_from_sparse(
+                        reader,
+                        &sp,
+                        k,
+                        opts,
+                        assigner,
+                        workers,
+                        preconditioned,
+                        solver,
+                    )?,
+                };
                 if self.two_pass {
                     if !preconditioned {
                         return invalid(
@@ -784,6 +906,161 @@ impl<'a> FitPlan<'a> {
             center_bound: Vec::new(),
             outcome: FitOutcome::Compressed(manifest),
         })
+    }
+
+    // -------------------------------------------------- distributed fit
+
+    /// Run the plan's worker side only: fold each of the
+    /// [`partition`](Self::partition) shard ranges (default 1) into a
+    /// serialized [`PartialFit`](crate::distributed::PartialFit)
+    /// artifact, one per worker, **without** finalizing a model. The
+    /// artifacts round-trip through the versioned `PDSP` envelope and are
+    /// merged — in any order, by any process holding (a piece of) the
+    /// same store — with [`merge_partials`](Self::merge_partials).
+    ///
+    /// Supported plans: PCA with the covariance solver (one
+    /// [`PcaPartial`](crate::distributed::PcaPartial) per worker) and
+    /// K-means with [`Solver::Coreset`] (one
+    /// [`CoresetPartial`](crate::distributed::CoresetPartial) per
+    /// worker). The Lloyd K-means solvers are iterative — their partials
+    /// are per-iteration, so a one-shot worker artifact cannot exist;
+    /// use [`run`](Self::run) with [`partition`](Self::partition)
+    /// instead.
+    pub fn partials(mut self) -> Result<Vec<Vec<u8>>> {
+        let solver = self.resolve_solver()?;
+        let parts = self.partition.unwrap_or(1);
+        self.check_distributed_source(".partials()")?;
+        let SourceKind::Store(reader) = Self::take_source(&mut self.source)? else {
+            unreachable!("checked above");
+        };
+        let sp = reader.sparsifier()?;
+        Self::check_requested_scheme(self.scheme, sp.scheme())?;
+        Self::check_requested_precision(self.precision, reader.manifest().precision)?;
+        check_source_shape(reader, &sp)?;
+        let shards = reader.manifest().shards.clone();
+        if shards.is_empty() {
+            return invalid("FitPlan: source is empty");
+        }
+        match (self.task, solver) {
+            (Task::Pca, Solver::Covariance) => {
+                let mut out = Vec::new();
+                for range in parallel::split_ranges(shards.len(), parts) {
+                    let partial = pca_partial_for_shards(reader, &sp, &shards[range])?;
+                    out.push(partial.to_bytes());
+                }
+                Ok(out)
+            }
+            (Task::Kmeans, Solver::Coreset) => {
+                let mut out = Vec::new();
+                for range in parallel::split_ranges(shards.len(), parts) {
+                    let partial = coreset_partial_for_shards(
+                        reader,
+                        &sp,
+                        &shards[range],
+                        self.coreset_size,
+                        self.opts.seed,
+                    )?;
+                    out.push(partial.to_bytes());
+                }
+                Ok(out)
+            }
+            (task, solver) => invalid(format!(
+                "FitPlan: no one-shot partial for task {:?} with solver {:?} (pca: \
+                 covariance, kmeans: coreset; the Lloyd solvers merge per-iteration — \
+                 use .run() with .partition(n))",
+                task, solver
+            )),
+        }
+    }
+
+    /// Coordinator side of the distributed fit: decode + merge worker
+    /// artifacts from [`partials`](Self::partials) (any order, any
+    /// grouping) and finalize them into the same [`FitReport`] the
+    /// equivalent single-process [`run`](Self::run) produces — bitwise
+    /// identical for PCA. The plan must hold the same store (`.store()`)
+    /// the workers fit, and the merged artifacts must cover its shard
+    /// set exactly; gaps, overlaps, kind mixtures and truncated or
+    /// tampered artifacts all fail with typed errors.
+    pub fn merge_partials(mut self, artifacts: &[Vec<u8>]) -> Result<FitReport> {
+        // the same default-assigner fallback as run_kmeans
+        let local_assigner;
+        let assigner: &dyn SparseAssigner = match self.assigner {
+            Some(a) => a,
+            None => match self.stream.assign_cols_per_worker {
+                Some(cols) => {
+                    local_assigner = NativeAssigner::new().with_cols_per_worker(cols);
+                    &local_assigner
+                }
+                None => &NATIVE_ASSIGNER,
+            },
+        };
+        self.check_distributed_source(".merge_partials()")?;
+        let SourceKind::Store(reader) = Self::take_source(&mut self.source)? else {
+            unreachable!("checked above");
+        };
+        let sp = reader.sparsifier()?;
+        Self::check_requested_scheme(self.scheme, sp.scheme())?;
+        Self::check_requested_precision(self.precision, reader.manifest().precision)?;
+        check_source_shape(reader, &sp)?;
+        let preconditioned = reader.manifest().preconditioned;
+        let Some(first) = artifacts.first() else {
+            return invalid("FitPlan: merge_partials() got no partial artifacts");
+        };
+        match peek_kind(first)? {
+            kind::PCA => {
+                if self.task != Task::Pca {
+                    return invalid(format!(
+                        "FitPlan: pca partial artifacts under a {:?} plan",
+                        self.task
+                    ));
+                }
+                let mut merged = PcaPartial::from_bytes(first)?;
+                for bytes in &artifacts[1..] {
+                    merged.merge_from(&PcaPartial::from_bytes(bytes)?)?;
+                }
+                let want: Vec<u32> =
+                    reader.manifest().shards.iter().map(|s| s.index as u32).collect();
+                if merged.shards() != want {
+                    return invalid(format!(
+                        "FitPlan: merged pca partials cover shards {:?}, the store holds \
+                         {:?}",
+                        merged.shards(),
+                        want
+                    ));
+                }
+                pca_report_from_partial(&merged, &sp, self.topk, preconditioned, Timer::new(), 0)
+            }
+            kind::CORESET => {
+                if self.task != Task::Kmeans {
+                    return invalid(format!(
+                        "FitPlan: coreset partial artifacts under a {:?} plan",
+                        self.task
+                    ));
+                }
+                let Some(k) = self.k else {
+                    return invalid("FitPlan::kmeans() needs .k(clusters)");
+                };
+                let mut merged = CoresetPartial::from_bytes(first)?;
+                for bytes in &artifacts[1..] {
+                    merged.merge_from(&CoresetPartial::from_bytes(bytes)?)?;
+                }
+                coreset_report(
+                    &merged,
+                    reader,
+                    &sp,
+                    k,
+                    self.opts,
+                    assigner,
+                    preconditioned,
+                    Timer::new(),
+                    0,
+                )
+            }
+            other => invalid(format!(
+                "FitPlan: cannot merge partial kind {other} (want pca or coreset worker \
+                 artifacts)"
+            )),
+        }
     }
 }
 
@@ -1280,6 +1557,289 @@ fn pca_krylov_sparse(
     })
 }
 
+// ====================================================================
+// distributed drivers (FitPlan::partition / partials / merge_partials)
+// ====================================================================
+
+/// Fold `shards` (a contiguous range of a store's shard table) into one
+/// worker's [`PcaPartial`]: per-shard mean + covariance subtotals,
+/// keyed by global shard index.
+fn pca_partial_for_shards(
+    reader: &mut SparseStoreReader,
+    sp: &Sparsifier,
+    shards: &[ShardEntry],
+) -> Result<PcaPartial> {
+    let mut partial = PcaPartial::new(sp.p(), sp.m(), sp.weighted());
+    for entry in shards {
+        reader.seek_to_col(entry.start_col)?;
+        let mut covered = 0usize;
+        while covered < entry.n_cols {
+            let Some(chunk) = reader.next_chunk()? else { break };
+            covered += chunk.n();
+            partial.fold_chunk(entry.index as u32, &chunk)?;
+        }
+        if covered != entry.n_cols {
+            return invalid(format!(
+                "FitPlan: shard {} pass covered {covered} of {} columns",
+                entry.index, entry.n_cols
+            ));
+        }
+    }
+    Ok(partial)
+}
+
+/// Finalize a merged [`PcaPartial`] into the covariance-solver PCA
+/// report — the same estimate → eigendecompose → unmix tail as
+/// [`pca_cov_sparse`], so a merged distributed fit and a partitioned
+/// in-process fit return identical reports.
+fn pca_report_from_partial(
+    partial: &PcaPartial,
+    sp: &Sparsifier,
+    topk: usize,
+    preconditioned: bool,
+    mut timer: Timer,
+    sparse_passes: usize,
+) -> Result<FitReport> {
+    let n = partial.n();
+    if n == 0 {
+        return invalid("FitPlan: source is empty");
+    }
+    let (mean_est, cov_est) = partial.finalize()?;
+    let covariance = cov_est.estimate();
+    let pca_pre = timer.time("eig", || Pca::from_covariance(&covariance, topk, sp.seed()));
+    let (components, mean) = unmix_outputs(sp, &pca_pre.components, &mean_est, preconditioned)?;
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 0,
+        sparse_passes,
+        iterations: 0,
+        engine: "native",
+        center_bound: Vec::new(),
+        outcome: FitOutcome::Pca(PcaFit {
+            mean,
+            covariance: Some(covariance),
+            pca: Pca { components, eigenvalues: pca_pre.eigenvalues },
+        }),
+    })
+}
+
+/// Partitioned covariance-solver PCA over a store: one [`PcaPartial`]
+/// per shard-range "worker", merged by disjoint union, finalized in
+/// shard-index order — bitwise identical for every partition count and
+/// merge order (`parts = 1` is the reference).
+fn pca_cov_partitioned(
+    reader: &mut SparseStoreReader,
+    sp: &Sparsifier,
+    topk: usize,
+    preconditioned: bool,
+    parts: usize,
+) -> Result<FitReport> {
+    check_source_shape(reader, sp)?;
+    let shards = reader.manifest().shards.clone();
+    if shards.is_empty() {
+        return invalid("FitPlan: source is empty");
+    }
+    let mut timer = Timer::new();
+    let t0 = Instant::now();
+    let mut merged: Option<PcaPartial> = None;
+    for range in parallel::split_ranges(shards.len(), parts) {
+        let partial = pca_partial_for_shards(reader, sp, &shards[range])?;
+        match &mut merged {
+            Some(m) => m.merge_from(&partial)?,
+            None => merged = Some(partial),
+        }
+    }
+    timer.add("accumulate", t0.elapsed().as_secs_f64());
+    let merged = merged.expect("split_ranges yields at least one range");
+    pca_report_from_partial(&merged, sp, topk, preconditioned, timer, 1)
+}
+
+/// Partitioned Lloyd K-means over a store (the in-process distributed
+/// fit): per-shard `CenterStep` subtotals captured in one
+/// [`CenterPartial`](crate::distributed::CenterPartial) per partition
+/// and merged every iteration. Bitwise identical for every partition
+/// count.
+#[allow(clippy::too_many_arguments)]
+fn kmeans_partitioned_store(
+    reader: &mut SparseStoreReader,
+    sp: &Sparsifier,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    workers: usize,
+    preconditioned: bool,
+    parts: usize,
+) -> Result<FitReport> {
+    let scfg = SparsifyConfig { gamma: sp.gamma(), transform: sp.ros().kind(), seed: sp.seed() };
+    let mut timer = Timer::new();
+    let sk = SparsifiedKmeans::new(scfg, k, opts).with_workers(workers.max(1));
+    let (model, sparse_passes) = timer.time("kmeans", || {
+        sk.fit_store_partitioned(sp, reader, assigner, preconditioned, parts)
+    })?;
+    let n = model.result.assign.len();
+    let iterations = model.result.iterations;
+    let center_bound = model.center_bound.clone();
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 0,
+        sparse_passes,
+        iterations,
+        engine: assigner.name(),
+        center_bound,
+        outcome: FitOutcome::Kmeans { model, refined: None },
+    })
+}
+
+/// Fold `shards` into one worker's [`CoresetPartial`]: each shard's
+/// columns are densified (at the scheme's unbiased scale — `p/m` for
+/// the uniform schemes, 1 for weighted sketches) and ingested as one
+/// unit-weight leaf of the merge-and-reduce tree.
+fn coreset_partial_for_shards(
+    reader: &mut SparseStoreReader,
+    sp: &Sparsifier,
+    shards: &[ShardEntry],
+    capacity: usize,
+    seed: u64,
+) -> Result<CoresetPartial> {
+    let p = sp.p();
+    let scale = if sp.weighted() { 1.0 } else { p as f64 / sp.m() as f64 };
+    let mut partial = CoresetPartial::new(p, capacity, seed)?;
+    for entry in shards {
+        reader.seek_to_col(entry.start_col)?;
+        let mut points = Mat::zeros(p, entry.n_cols);
+        let mut covered = 0usize;
+        while covered < entry.n_cols {
+            let Some(chunk) = reader.next_chunk()? else { break };
+            let dense = chunk.to_dense();
+            for j in 0..chunk.n() {
+                let (src, dst) = (dense.col(j), points.col_mut(covered + j));
+                for i in 0..p {
+                    dst[i] = src[i] * scale;
+                }
+            }
+            covered += chunk.n();
+        }
+        if covered != entry.n_cols {
+            return invalid(format!(
+                "FitPlan: shard {} pass covered {covered} of {} columns",
+                entry.index, entry.n_cols
+            ));
+        }
+        partial.add_leaf(entry.index as u64, points, vec![1.0; entry.n_cols])?;
+    }
+    Ok(partial)
+}
+
+/// Finalize a merged [`CoresetPartial`] into a K-means report: weighted
+/// K-means on the surviving tree nodes, then one full-store assignment
+/// pass so `assign` / `objective` are measured on the real data with
+/// the same masked metric as the Lloyd solvers (which is what the
+/// documented inertia tolerance is stated against). The Eq. 43
+/// center-error bound does not cover the coreset estimator, so
+/// `center_bound` records `NaN` per iteration — the same "never present
+/// an unbacked number" rule as the weighted schemes.
+#[allow(clippy::too_many_arguments)]
+fn coreset_report(
+    partial: &CoresetPartial,
+    reader: &mut SparseStoreReader,
+    sp: &Sparsifier,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    preconditioned: bool,
+    mut timer: Timer,
+    sparse_passes: usize,
+) -> Result<FitReport> {
+    let shard_count = reader.manifest().shards.len() as u64;
+    if !partial.covers_exactly(shard_count) {
+        return invalid(format!(
+            "FitPlan: merged coreset partials cover shard ranges {:?}, the store holds \
+             shards 0..{shard_count}",
+            partial.coverage()
+        ));
+    }
+    let (points, weights) = partial.points();
+    let (centers_pre, iterations, converged) =
+        timer.time("kmeans", || weighted_kmeans(&points, &weights, k, &opts))?;
+    // one real pass: assignments + the Eq. 34 objective on the store
+    let n = reader.manifest().n;
+    let col0 = reader.manifest().start_col();
+    let mut assign = vec![0u32; n];
+    let mut objective = 0.0;
+    let t0 = Instant::now();
+    reader.reset()?;
+    let mut covered = 0usize;
+    while let Some(chunk) = reader.next_chunk()? {
+        let (a, obj) = assigner.assign(&chunk, &centers_pre)?;
+        let off = chunk.start_col() - col0;
+        assign[off..off + a.len()].copy_from_slice(&a);
+        objective += obj;
+        covered += chunk.n();
+    }
+    timer.add("assign", t0.elapsed().as_secs_f64());
+    if covered != n {
+        return invalid(format!("FitPlan: assignment pass covered {covered} of {n} samples"));
+    }
+    let centers =
+        if preconditioned { sp.unmix(&centers_pre) } else { sp.truncate(&centers_pre) };
+    let center_bound = vec![f64::NAN; iterations];
+    let model = SparsifiedModel {
+        result: KmeansResult { centers, assign, objective, iterations, converged },
+        centers_precond: centers_pre,
+        center_bound: center_bound.clone(),
+    };
+    Ok(FitReport {
+        timer,
+        n,
+        raw_passes: 0,
+        sparse_passes: sparse_passes + 1,
+        iterations,
+        engine: assigner.name(),
+        center_bound,
+        outcome: FitOutcome::Kmeans { model, refined: None },
+    })
+}
+
+/// Store-backed [`Solver::Coreset`] K-means: build the merge-and-reduce
+/// tree in one pass (one worker partial per shard range, merged), then
+/// finalize through [`coreset_report`]. Approximate but single-pass and
+/// mergeable; bitwise identical for every partition count because leaf
+/// and reduction RNG streams are keyed by tree position, never by
+/// worker.
+#[allow(clippy::too_many_arguments)]
+fn kmeans_coreset_store(
+    reader: &mut SparseStoreReader,
+    sp: &Sparsifier,
+    k: usize,
+    opts: KmeansOpts,
+    assigner: &dyn SparseAssigner,
+    preconditioned: bool,
+    parts: usize,
+    capacity: usize,
+) -> Result<FitReport> {
+    check_source_shape(reader, sp)?;
+    let shards = reader.manifest().shards.clone();
+    if shards.is_empty() {
+        return invalid("FitPlan: source is empty");
+    }
+    let mut timer = Timer::new();
+    let t0 = Instant::now();
+    let mut merged: Option<CoresetPartial> = None;
+    for range in parallel::split_ranges(shards.len(), parts) {
+        let partial =
+            coreset_partial_for_shards(reader, sp, &shards[range], capacity, opts.seed)?;
+        match &mut merged {
+            Some(m) => m.merge_from(&partial)?,
+            None => merged = Some(partial),
+        }
+    }
+    timer.add("coreset", t0.elapsed().as_secs_f64());
+    let merged = merged.expect("split_ranges yields at least one range");
+    coreset_report(&merged, reader, sp, k, opts, assigner, preconditioned, timer, 1)
+}
+
 /// Map preconditioned-domain components + mean back to the original
 /// domain: the ROS adjoint when the data was preconditioned, a plain
 /// padding drop otherwise.
@@ -1662,5 +2222,172 @@ mod tests {
         for (x, y) in a.result.centers.as_slice().iter().zip(b.result.centers.as_slice()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+
+    #[test]
+    fn distributed_plans_validate_sources_and_solvers() {
+        assert_eq!(Solver::parse("coreset").unwrap(), Solver::Coreset);
+        assert_eq!(Solver::Coreset.name(), "coreset");
+
+        let mut rng = Pcg64::seed(39);
+        let d = gaussian_blobs(16, 60, 2, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 5 };
+
+        // the coreset solver and .partition() are keyed to a store's
+        // shard table — raw-stream plans must be rejected
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::kmeans().stream(&mut src, scfg).k(2).solver(Solver::Coreset).run();
+        assert!(err.is_err(), "coreset solver without a store must be rejected");
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::kmeans().stream(&mut src, scfg).k(2).partition(2).run();
+        assert!(err.is_err(), "partitioned kmeans without a store must be rejected");
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::pca().stream(&mut src, scfg).partition(2).run();
+        assert!(err.is_err(), "partitioned pca without a store must be rejected");
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::pca().stream(&mut src, scfg).partials();
+        assert!(err.is_err(), "partials() without a store must be rejected");
+
+        // pca + coreset is not a valid task/solver pairing
+        let mut src = MatSource::new(&d.data, 16);
+        let err = FitPlan::pca().stream(&mut src, scfg).solver(Solver::Coreset).run();
+        assert!(err.is_err(), "pca + coreset solver must be rejected");
+
+        // store-backed, but still invalid: krylov has no one-shot partial,
+        // Lloyd solvers have no one-shot partial, and merging nothing or
+        // garbage fails typed
+        let base = std::env::temp_dir()
+            .join(format!("pds_plan_distributed_invalid_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut src = MatSource::new(&d.data, 16);
+        FitPlan::compress().stream(&mut src, scfg).store_dir(&base).shard_cols(16).run().unwrap();
+
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let err = FitPlan::pca().store(&mut reader).solver(Solver::Krylov).partition(2).run();
+        assert!(err.is_err(), "krylov + partition must be rejected");
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let err = FitPlan::kmeans().store(&mut reader).k(2).partials();
+        assert!(err.is_err(), "Lloyd kmeans has no one-shot partial");
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let err = FitPlan::pca().store(&mut reader).merge_partials(&[]);
+        assert!(err.is_err(), "merging zero artifacts must be rejected");
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let err = FitPlan::pca().store(&mut reader).merge_partials(&[vec![0u8; 4]]);
+        assert!(matches!(err, Err(crate::error::Error::Corrupt(_))), "garbage artifact");
+
+        // artifact kind must match the plan's task
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let pca_artifacts = FitPlan::pca().store(&mut reader).partials().unwrap();
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let err = FitPlan::kmeans().store(&mut reader).k(2).merge_partials(&pca_artifacts);
+        assert!(err.is_err(), "pca artifacts under a kmeans plan must be rejected");
+
+        // incomplete shard coverage is rejected at merge time
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let partials =
+            FitPlan::pca().store(&mut reader).partition(2).partials().unwrap();
+        assert_eq!(partials.len(), 2);
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let err = FitPlan::pca().store(&mut reader).merge_partials(&partials[..1]);
+        assert!(err.is_err(), "a missing worker artifact must be rejected");
+
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn distributed_store_fits_are_partition_invariant_and_mergeable() {
+        let mut rng = Pcg64::seed(41);
+        let d = gaussian_blobs(16, 120, 3, 0.1, &mut rng);
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 11 };
+        let base = std::env::temp_dir()
+            .join(format!("pds_plan_distributed_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let mut src = MatSource::new(&d.data, 32);
+        FitPlan::compress().stream(&mut src, scfg).store_dir(&base).shard_cols(16).run().unwrap();
+
+        let pca_bits = |report: &FitReport| {
+            let fit = report.pca_fit().unwrap();
+            (
+                fit.pca.components.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fit.pca.eigenvalues.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                fit.mean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            )
+        };
+        // every partition count produces the same bits as partition(1)
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let reference = FitPlan::pca().store(&mut reader).topk(3).partition(1).run().unwrap();
+        for parts in [2usize, 4, 8] {
+            let mut reader = SparseStoreReader::open(&base).unwrap();
+            let got =
+                FitPlan::pca().store(&mut reader).topk(3).partition(parts).run().unwrap();
+            assert_eq!(pca_bits(&got), pca_bits(&reference), "pca partition({parts})");
+        }
+        // worker artifacts merge — in any order — to the same report
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let mut artifacts =
+            FitPlan::pca().store(&mut reader).topk(3).partition(4).partials().unwrap();
+        assert_eq!(artifacts.len(), 4);
+        artifacts.reverse();
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let merged =
+            FitPlan::pca().store(&mut reader).topk(3).merge_partials(&artifacts).unwrap();
+        assert_eq!(pca_bits(&merged), pca_bits(&reference), "merged pca artifacts");
+        assert_eq!(merged.raw_passes, 0);
+
+        let km_bits = |report: &FitReport| {
+            let m = report.kmeans_model().unwrap();
+            (
+                m.result.assign.clone(),
+                m.result.centers.as_slice().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                m.result.objective.to_bits(),
+            )
+        };
+        // distributed Lloyd: partition-invariant
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let km1 =
+            FitPlan::kmeans().store(&mut reader).k(3).restarts(2).partition(1).run().unwrap();
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let km3 =
+            FitPlan::kmeans().store(&mut reader).k(3).restarts(2).partition(3).run().unwrap();
+        assert_eq!(km_bits(&km1), km_bits(&km3), "kmeans partition(3)");
+        assert_eq!(km1.n, 120);
+        assert!(km1.iterations >= 1);
+        assert_eq!(km1.center_bound.len(), km1.iterations);
+
+        // coreset: partition-invariant, merge-order-invariant, and within
+        // the documented inertia tolerance of the exact Lloyd fit
+        fn coreset_plan(reader: &mut SparseStoreReader) -> FitPlan<'_> {
+            FitPlan::kmeans()
+                .store(reader)
+                .k(3)
+                .restarts(4)
+                .solver(Solver::Coreset)
+                .coreset_size(48)
+        }
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let cs1 = coreset_plan(&mut reader).partition(1).run().unwrap();
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let cs4 = coreset_plan(&mut reader).partition(4).run().unwrap();
+        assert_eq!(km_bits(&cs1), km_bits(&cs4), "coreset partition(4)");
+        assert!(cs1.center_bound.iter().all(|b| b.is_nan()), "no Eq. 43 claim for coresets");
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let mut artifacts = coreset_plan(&mut reader).partition(4).partials().unwrap();
+        assert_eq!(artifacts.len(), 4);
+        artifacts.rotate_left(1);
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let cs_merged = coreset_plan(&mut reader).merge_partials(&artifacts).unwrap();
+        assert_eq!(km_bits(&cs_merged), km_bits(&cs1), "merged coreset artifacts");
+
+        let mut reader = SparseStoreReader::open(&base).unwrap();
+        let lloyd =
+            FitPlan::kmeans().store(&mut reader).k(3).restarts(4).run().unwrap();
+        let exact = lloyd.kmeans_model().unwrap().result.objective;
+        let approx = cs1.kmeans_model().unwrap().result.objective;
+        assert!(
+            approx <= exact * 1.5 + 1e-9,
+            "coreset inertia {approx} exceeds 1.5x the Lloyd inertia {exact}"
+        );
+
+        std::fs::remove_dir_all(&base).ok();
     }
 }

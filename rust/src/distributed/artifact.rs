@@ -1,0 +1,295 @@
+//! The `.pdsp` partial-artifact envelope and payload codec primitives.
+//!
+//! Layout (all integers little-endian; full spec in `docs/FORMAT.md`):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "PDSP"
+//! 4       4     u32 payload format version (per kind)
+//! 8       4     u32 kind tag (see distributed::kind)
+//! 12      8     u64 payload length
+//! 20      len   payload bytes
+//! 20+len  4     u32 CRC-32 (IEEE) over bytes [0, 20+len)
+//! ```
+//!
+//! Decoding distinguishes damage from incompatibility: truncation, bad
+//! magic, CRC mismatch, and trailing bytes are
+//! [`Error::Corrupt`](crate::error::Error::Corrupt); an unexpected kind
+//! or a newer-than-this-build version is
+//! [`Error::Invalid`](crate::error::Error::Invalid).
+
+use crate::error::{corrupt, Result};
+use crate::store::crc32;
+
+/// Envelope magic.
+const MAGIC: [u8; 4] = *b"PDSP";
+/// Bytes before the payload.
+const HEADER_LEN: usize = 20;
+
+/// Wrap a payload in the `.pdsp` envelope.
+pub fn encode_artifact(kind: u32, version: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&kind.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let c = crc32(&out);
+    out.extend_from_slice(&c.to_le_bytes());
+    out
+}
+
+/// Unwrap a `.pdsp` envelope: returns `(version, kind, payload)`.
+pub fn decode_artifact(bytes: &[u8]) -> Result<(u32, u32, &[u8])> {
+    if bytes.len() < HEADER_LEN + 4 {
+        return corrupt(format!(
+            "partial artifact truncated: {} bytes, need at least {}",
+            bytes.len(),
+            HEADER_LEN + 4
+        ));
+    }
+    if bytes[..4] != MAGIC {
+        return corrupt("partial artifact: bad magic (want PDSP)");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+    let kind = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    let len = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+    let len: usize = match len.try_into() {
+        Ok(l) => l,
+        Err(_) => return corrupt(format!("partial artifact: payload length {len} overflows")),
+    };
+    let total = match HEADER_LEN.checked_add(len).and_then(|t| t.checked_add(4)) {
+        Some(t) => t,
+        None => return corrupt(format!("partial artifact: payload length {len} overflows")),
+    };
+    if bytes.len() < total {
+        return corrupt(format!(
+            "partial artifact truncated: {} bytes, header promises {total}",
+            bytes.len()
+        ));
+    }
+    if bytes.len() > total {
+        return corrupt(format!(
+            "partial artifact: {} trailing bytes after the checksum",
+            bytes.len() - total
+        ));
+    }
+    let body = &bytes[..HEADER_LEN + len];
+    let stored = u32::from_le_bytes(bytes[HEADER_LEN + len..].try_into().expect("4 bytes"));
+    let computed = crc32(body);
+    if stored != computed {
+        return corrupt(format!(
+            "partial artifact checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+        ));
+    }
+    Ok((version, kind, &bytes[HEADER_LEN..HEADER_LEN + len]))
+}
+
+/// Read just the kind tag of an artifact (CLI dispatch) — validates the
+/// whole envelope, including the checksum.
+pub fn peek_kind(bytes: &[u8]) -> Result<u32> {
+    decode_artifact(bytes).map(|(_, kind, _)| kind)
+}
+
+/// Little-endian payload writer.
+pub(crate) struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    pub(crate) fn new() -> Self {
+        PayloadWriter { buf: Vec::new() }
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn f64s(&mut self, vs: &[f64]) {
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+
+    pub(crate) fn u64s(&mut self, vs: &[u64]) {
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// Length-prefixed nested blob (e.g. a child partial's payload).
+    pub(crate) fn blob(&mut self, bytes: &[u8]) {
+        self.u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub(crate) fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Little-endian payload reader with typed truncation errors.
+pub(crate) struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        PayloadReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = match self.pos.checked_add(n) {
+            Some(e) if e <= self.buf.len() => e,
+            _ => {
+                return corrupt(format!(
+                    "partial payload truncated: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                ))
+            }
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// A `u64` that must fit in `usize` (lengths, dimensions).
+    pub(crate) fn len(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        v.try_into().or_else(|_| corrupt(format!("partial payload: length {v} overflows")))
+    }
+
+    pub(crate) fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(n.min(self.buf.len() / 8 + 1));
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let mut out = Vec::with_capacity(n.min(self.buf.len() / 8 + 1));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed nested blob.
+    pub(crate) fn blob(&mut self) -> Result<&'a [u8]> {
+        let n = self.len()?;
+        self.take(n)
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub(crate) fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return corrupt(format!(
+                "partial payload: {} trailing bytes",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    #[test]
+    fn envelope_round_trip() {
+        let payload = b"hello partial".to_vec();
+        let art = encode_artifact(5, 2, &payload);
+        let (version, kind, body) = decode_artifact(&art).unwrap();
+        assert_eq!((version, kind), (2, 5));
+        assert_eq!(body, &payload[..]);
+        assert_eq!(peek_kind(&art).unwrap(), 5);
+    }
+
+    #[test]
+    fn every_truncation_is_corrupt_not_panic() {
+        let art = encode_artifact(1, 1, &[7u8; 33]);
+        for cut in 0..art.len() {
+            match decode_artifact(&art[..cut]) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("cut at {cut}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_are_corrupt() {
+        let art = encode_artifact(1, 1, &[7u8; 33]);
+        // flip one bit in every byte position; every damaged buffer must
+        // fail typed (magic/length damage included — length damage either
+        // truncates or leaves trailing bytes, both Corrupt)
+        for pos in 0..art.len() {
+            let mut bad = art.clone();
+            bad[pos] ^= 0x10;
+            match decode_artifact(&bad) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("flip at {pos}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_corrupt() {
+        let mut art = encode_artifact(1, 1, b"x");
+        art.push(0);
+        assert!(matches!(decode_artifact(&art), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn payload_reader_truncation_is_typed() {
+        let mut w = PayloadWriter::new();
+        w.u64(3);
+        let bytes = w.finish();
+        let mut r = PayloadReader::new(&bytes);
+        assert_eq!(r.u64().unwrap(), 3);
+        assert!(matches!(r.u64(), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn payload_reader_rejects_trailing() {
+        let mut w = PayloadWriter::new();
+        w.u32(1);
+        w.u8(9);
+        let bytes = w.finish();
+        let mut r = PayloadReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 1);
+        assert!(matches!(r.finish(), Err(Error::Corrupt(_))));
+    }
+}

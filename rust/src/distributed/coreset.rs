@@ -1,0 +1,675 @@
+//! The Barger–Feldman merge-and-reduce coreset tree (arXiv:1511.08990)
+//! as a mergeable [`PartialFit`] for streaming / distributed K-means.
+//!
+//! Each store shard becomes a **leaf**: its sparsified columns are
+//! densified (rescaled by `p/m` under uniform schemes, by 1 under
+//! weighted schemes, matching the estimator calibrations) and reduced to
+//! at most `capacity` weighted points by lightweight-coreset importance
+//! sampling — `q(x) = ½·w/W + ½·w·d²(x, μ)/Σ w d²`, sampled weight
+//! `w/(t·q)` (Bachem et al.'s lightweight construction, the
+//! sampling-based reduce step the merge-and-reduce scheme composes).
+//!
+//! Leaves live at `(level 0, index = shard)` in a dyadic tree over shard
+//! indices; whenever both children `(h, 2j)` and `(h, 2j+1)` are
+//! present, they reduce into `(h+1, j)` (binary-counter carry). The
+//! reduction RNG is seeded from the produced node's `(level, index)`
+//! key, so the surviving node set **and every node's contents** are a
+//! function of the set of shards ingested — not of ingestion order,
+//! merge order, or how the shards were partitioned across workers. That
+//! is what makes the tree a lawful [`PartialFit`]: merge is a union of
+//! disjoint-coverage node maps followed by deterministic carries.
+//!
+//! Memory is O(levels × capacity) points per partial, independent of
+//! stream length — the bounded-memory property the paper's streaming
+//! claim needs.
+
+use std::collections::BTreeMap;
+
+use super::artifact::{PayloadReader, PayloadWriter};
+use super::{kind, PartialFit};
+use crate::error::{corrupt, invalid, Result};
+use crate::kmeans::KmeansOpts;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+
+/// Stream-salt for per-node reduction RNGs (mixed with the store seed).
+const CORESET_SALT: u64 = 0x434F_5245;
+
+/// Squared Euclidean distance.
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// One tree node: a weighted point set (points are columns).
+#[derive(Clone, Debug)]
+struct CoresetNode {
+    points: Mat,
+    weights: Vec<f64>,
+}
+
+/// Lightweight-coreset reduction: importance-sample `t` weighted points
+/// (with replacement) from a weighted point set.
+fn lightweight_sample(points: &Mat, weights: &[f64], t: usize, rng: &mut Pcg64) -> CoresetNode {
+    let (p, n) = (points.rows(), points.cols());
+    debug_assert!(n > t && n == weights.len());
+    let w_total: f64 = weights.iter().sum();
+    let mut mu = vec![0.0; p];
+    for j in 0..n {
+        let c = points.col(j);
+        for i in 0..p {
+            mu[i] += weights[j] * c[i];
+        }
+    }
+    for v in &mut mu {
+        *v /= w_total;
+    }
+    let d2: Vec<f64> = (0..n).map(|j| dist2(points.col(j), &mu)).collect();
+    let spread: f64 = weights.iter().zip(&d2).map(|(w, d)| w * d).sum();
+    // q(x_j) — if every point sits on the mean, fall back to pure
+    // weight-proportional sampling
+    let q: Vec<f64> = (0..n)
+        .map(|j| {
+            let tail =
+                if spread > 0.0 { 0.5 * weights[j] * d2[j] / spread } else { 0.5 * weights[j] / w_total };
+            0.5 * weights[j] / w_total + tail
+        })
+        .collect();
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for &qj in &q {
+        acc += qj;
+        cum.push(acc);
+    }
+    let total = acc;
+    let mut out = Mat::zeros(p, t);
+    let mut w_out = vec![0.0; t];
+    for s in 0..t {
+        let u = rng.next_f64() * total;
+        let j = cum.partition_point(|&c| c < u).min(n - 1);
+        out.col_mut(s).copy_from_slice(points.col(j));
+        w_out[s] = weights[j] / (t as f64 * q[j]);
+    }
+    CoresetNode { points: out, weights: w_out }
+}
+
+/// Merge-and-reduce coreset tree over store shards — see the [module
+/// docs](self).
+#[derive(Clone, Debug)]
+pub struct CoresetPartial {
+    p: usize,
+    /// Maximum points per node (the coreset size `t`).
+    capacity: usize,
+    /// Base seed (mix of the fit seed; per-node streams derive from it).
+    seed: u64,
+    /// Nodes keyed `(level, index)`; node `(h, i)` summarizes shards
+    /// `[i·2^h, (i+1)·2^h)`.
+    nodes: BTreeMap<(u32, u64), CoresetNode>,
+}
+
+/// The dyadic shard range `[lo, hi)` a node key covers. Callers keep
+/// `h` small enough that the shift cannot overflow (decode enforces it
+/// for untrusted input).
+fn node_range(key: (u32, u64)) -> (u64, u64) {
+    let (h, i) = key;
+    (i << h, (i + 1) << h)
+}
+
+/// Half-open interval overlap.
+fn ranges_overlap(a: (u64, u64), b: (u64, u64)) -> bool {
+    a.0 < b.1 && b.0 < a.1
+}
+
+impl CoresetPartial {
+    /// Empty tree for dimension `p`, node capacity `capacity`, fit seed
+    /// `seed` (all three are part of the partial's identity: partials
+    /// built with different parameters refuse to merge).
+    pub fn new(p: usize, capacity: usize, seed: u64) -> Result<Self> {
+        if capacity < 2 {
+            return invalid(format!("coreset capacity must be >= 2, got {capacity}"));
+        }
+        Ok(CoresetPartial { p, capacity, seed, nodes: BTreeMap::new() })
+    }
+
+    /// Node capacity `t`.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn node_rng(&self, key: (u32, u64)) -> Pcg64 {
+        let (h, i) = key;
+        Pcg64::seed_stream(self.seed ^ CORESET_SALT, ((h as u64) << 32) ^ i)
+    }
+
+    fn reduced(&self, key: (u32, u64), node: CoresetNode) -> CoresetNode {
+        if node.points.cols() <= self.capacity {
+            return node;
+        }
+        let mut rng = self.node_rng(key);
+        lightweight_sample(&node.points, &node.weights, self.capacity, &mut rng)
+    }
+
+    /// Whether `shard` is already summarized by some node.
+    fn covers(&self, shard: u64) -> bool {
+        self.nodes.keys().any(|&k| {
+            let (lo, hi) = node_range(k);
+            (lo..hi).contains(&shard)
+        })
+    }
+
+    /// Whether any node's range overlaps `range`.
+    fn covers_range(&self, range: (u64, u64)) -> bool {
+        self.nodes.keys().any(|&k| ranges_overlap(node_range(k), range))
+    }
+
+    /// Ingest one shard's densified columns as leaf `(0, shard)` with
+    /// unit weights, then carry-propagate sibling reductions.
+    pub fn add_leaf(&mut self, shard: u64, points: Mat, weights: Vec<f64>) -> Result<()> {
+        if points.rows() != self.p {
+            return invalid(format!(
+                "coreset leaf p={} does not match partial p={}",
+                points.rows(),
+                self.p
+            ));
+        }
+        if points.cols() != weights.len() || points.cols() == 0 {
+            return invalid(format!(
+                "coreset leaf: {} points with {} weights",
+                points.cols(),
+                weights.len()
+            ));
+        }
+        if self.covers(shard) {
+            return invalid(format!("coreset: shard {shard} ingested twice"));
+        }
+        let leaf = self.reduced((0, shard), CoresetNode { points, weights });
+        self.nodes.insert((0, shard), leaf);
+        self.carry();
+        Ok(())
+    }
+
+    /// Reduce every complete sibling pair bottom-up until none remain.
+    /// Confluent: node contents depend only on the leaf set, so the scan
+    /// order cannot matter.
+    fn carry(&mut self) {
+        loop {
+            let pair = self
+                .nodes
+                .keys()
+                .find(|&&(h, i)| i % 2 == 0 && self.nodes.contains_key(&(h, i + 1)))
+                .copied();
+            let Some((h, i)) = pair else { break };
+            let left = self.nodes.remove(&(h, i)).expect("present");
+            let right = self.nodes.remove(&(h, i + 1)).expect("present");
+            let parent = (h + 1, i / 2);
+            let mut points = Mat::zeros(self.p, left.points.cols() + right.points.cols());
+            let mut weights = Vec::with_capacity(left.weights.len() + right.weights.len());
+            let mut col = 0;
+            for node in [&left, &right] {
+                for j in 0..node.points.cols() {
+                    points.col_mut(col).copy_from_slice(node.points.col(j));
+                    col += 1;
+                }
+                weights.extend_from_slice(&node.weights);
+            }
+            let merged = self.reduced(parent, CoresetNode { points, weights });
+            self.nodes.insert(parent, merged);
+        }
+    }
+
+    /// Sorted dyadic shard ranges `[lo, hi)` the tree currently covers.
+    pub fn coverage(&self) -> Vec<(u64, u64)> {
+        let mut ranges: Vec<(u64, u64)> = self.nodes.keys().map(|&k| node_range(k)).collect();
+        ranges.sort_unstable();
+        ranges
+    }
+
+    /// Whether the tree covers exactly shards `0..shard_count`.
+    pub fn covers_exactly(&self, shard_count: u64) -> bool {
+        let mut next = 0;
+        for (lo, hi) in self.coverage() {
+            if lo != next {
+                return false;
+            }
+            next = hi;
+        }
+        next == shard_count
+    }
+
+    /// Concatenate the surviving nodes (in key order) into one weighted
+    /// point set — the coreset handed to the final weighted K-means.
+    pub fn points(&self) -> (Mat, Vec<f64>) {
+        let total: usize = self.nodes.values().map(|n| n.points.cols()).sum();
+        let mut points = Mat::zeros(self.p, total);
+        let mut weights = Vec::with_capacity(total);
+        let mut col = 0;
+        for node in self.nodes.values() {
+            for j in 0..node.points.cols() {
+                points.col_mut(col).copy_from_slice(node.points.col(j));
+                col += 1;
+            }
+            weights.extend_from_slice(&node.weights);
+        }
+        (points, weights)
+    }
+}
+
+impl PartialFit for CoresetPartial {
+    const KIND: u32 = kind::CORESET;
+    const VERSION: u32 = 1;
+
+    fn kind_name() -> &'static str {
+        "coreset"
+    }
+
+    fn identity_like(&self) -> Self {
+        CoresetPartial { p: self.p, capacity: self.capacity, seed: self.seed, nodes: BTreeMap::new() }
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        if (self.p, self.capacity, self.seed) != (other.p, other.capacity, other.seed) {
+            return invalid(format!(
+                "cannot merge coreset partial (p={}, capacity={}, seed={}) with (p={}, \
+                 capacity={}, seed={})",
+                self.p, self.capacity, self.seed, other.p, other.capacity, other.seed
+            ));
+        }
+        for &key in other.nodes.keys() {
+            let (lo, hi) = node_range(key);
+            if self.covers_range((lo, hi)) {
+                return invalid(format!(
+                    "coreset: shard range [{lo}, {hi}) present in both partials"
+                ));
+            }
+        }
+        for (&key, node) in &other.nodes {
+            self.nodes.insert(key, node.clone());
+        }
+        self.carry();
+        Ok(())
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.u64(self.p as u64);
+        w.u64(self.capacity as u64);
+        w.u64(self.seed);
+        w.u64(self.nodes.len() as u64);
+        for (&(h, i), node) in &self.nodes {
+            w.u32(h);
+            w.u64(i);
+            w.u64(node.points.cols() as u64);
+            w.f64s(&node.weights);
+            w.f64s(node.points.as_slice());
+        }
+        w.finish()
+    }
+
+    fn decode_payload(_version: u32, payload: &[u8]) -> Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let p = r.len()?;
+        let capacity = r.len()?;
+        let seed = r.u64()?;
+        let count = r.len()?;
+        if capacity < 2 {
+            return corrupt(format!("coreset partial: capacity {capacity} < 2"));
+        }
+        let mut out = CoresetPartial { p, capacity, seed, nodes: BTreeMap::new() };
+        for _ in 0..count {
+            let h = r.u32()?;
+            let i = r.u64()?;
+            // bound the dyadic range so node_range's shifts cannot
+            // overflow on hostile input (2^62 shards is far beyond any
+            // real store)
+            if h >= 63 || i >= (1u64 << (63 - h)) {
+                return corrupt(format!("coreset partial: node ({h}, {i}) range overflows"));
+            }
+            let n = r.len()?;
+            if n == 0 || n > capacity {
+                return corrupt(format!(
+                    "coreset partial: node ({h}, {i}) holds {n} points (capacity {capacity})"
+                ));
+            }
+            let weights = r.f64s(n)?;
+            let cells = p
+                .checked_mul(n)
+                .ok_or(())
+                .or_else(|_| corrupt(format!("coreset partial: p*n overflows ({p}*{n})")))?;
+            let points = Mat::from_vec(p, n, r.f64s(cells)?).expect("length matches");
+            if out.covers_range(node_range((h, i))) {
+                return corrupt(format!(
+                    "coreset partial: node ({h}, {i}) overlaps earlier coverage"
+                ));
+            }
+            out.nodes.insert((h, i), CoresetNode { points, weights });
+        }
+        r.finish()?;
+        Ok(out)
+    }
+}
+
+/// Weighted K-means on a dense weighted point set (the coreset):
+/// weighted k-means++ seeding + weighted Lloyd, `opts.n_init` restarts
+/// with the same per-start seed streams as the sparsified fit. Returns
+/// `(centers, iterations, converged)` of the best restart by weighted
+/// objective.
+pub fn weighted_kmeans(
+    points: &Mat,
+    weights: &[f64],
+    k: usize,
+    opts: &KmeansOpts,
+) -> Result<(Mat, usize, bool)> {
+    let (p, n) = (points.rows(), points.cols());
+    if n != weights.len() {
+        return invalid(format!("weighted_kmeans: {n} points with {} weights", weights.len()));
+    }
+    if k == 0 || k > n {
+        return invalid(format!("weighted_kmeans: k={k} with {n} points"));
+    }
+    let mut best: Option<(f64, Mat, usize, bool)> = None;
+    for start in 0..opts.n_init.max(1) {
+        let mut rng = Pcg64::seed_stream(opts.seed, 0xC0DE ^ start as u64);
+        let centers = weighted_pp(points, weights, k, &mut rng);
+        let (centers, obj, iters, converged) = weighted_lloyd(points, weights, centers, opts);
+        let better = match &best {
+            Some((b, ..)) => obj < *b,
+            None => true,
+        };
+        if better {
+            best = Some((obj, centers, iters, converged));
+        }
+    }
+    let (_, centers, iters, converged) = best.expect("n_init >= 1");
+    debug_assert_eq!(centers.rows(), p);
+    Ok((centers, iters, converged))
+}
+
+/// Weighted k-means++: first center drawn ∝ weight, subsequent centers
+/// ∝ weight × squared distance to the nearest chosen center.
+fn weighted_pp(points: &Mat, weights: &[f64], k: usize, rng: &mut Pcg64) -> Mat {
+    let (p, n) = (points.rows(), points.cols());
+    let mut centers = Mat::zeros(p, k);
+    let draw = |mass: &[f64], rng: &mut Pcg64| -> usize {
+        let total: f64 = mass.iter().sum();
+        if total <= 0.0 {
+            return (rng.next_u64() % n as u64) as usize;
+        }
+        let u = rng.next_f64() * total;
+        let mut acc = 0.0;
+        for (j, &m) in mass.iter().enumerate() {
+            acc += m;
+            if u < acc {
+                return j;
+            }
+        }
+        n - 1
+    };
+    let first = draw(weights, rng);
+    centers.col_mut(0).copy_from_slice(points.col(first));
+    let mut d2: Vec<f64> = (0..n).map(|j| dist2(points.col(j), centers.col(0))).collect();
+    for c in 1..k {
+        let mass: Vec<f64> = d2.iter().zip(weights).map(|(d, w)| d * w).collect();
+        let pick = draw(&mass, rng);
+        centers.col_mut(c).copy_from_slice(points.col(pick));
+        for j in 0..n {
+            let d = dist2(points.col(j), centers.col(c));
+            if d < d2[j] {
+                d2[j] = d;
+            }
+        }
+    }
+    centers
+}
+
+/// Weighted Lloyd iterations until assignments stabilize (≤ `tol_frac·n`
+/// changes) or `max_iters`. Empty clusters keep their previous center.
+fn weighted_lloyd(
+    points: &Mat,
+    weights: &[f64],
+    mut centers: Mat,
+    opts: &KmeansOpts,
+) -> (Mat, f64, usize, bool) {
+    let (p, n) = (points.rows(), points.cols());
+    let k = centers.cols();
+    let mut assign = vec![u32::MAX; n];
+    let mut objective = 0.0;
+    let mut converged = false;
+    let mut iters = 0;
+    let tol = (opts.tol_frac * n as f64) as usize;
+    for _ in 0..opts.max_iters.max(1) {
+        iters += 1;
+        let mut changed = 0usize;
+        objective = 0.0;
+        for j in 0..n {
+            let x = points.col(j);
+            let mut best_c = 0u32;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = dist2(x, centers.col(c));
+                if d < best_d {
+                    best_d = d;
+                    best_c = c as u32;
+                }
+            }
+            if assign[j] != best_c {
+                changed += 1;
+                assign[j] = best_c;
+            }
+            objective += weights[j] * best_d;
+        }
+        if changed <= tol {
+            converged = true;
+            break;
+        }
+        let mut sums = Mat::zeros(p, k);
+        let mut mass = vec![0.0f64; k];
+        for j in 0..n {
+            let c = assign[j] as usize;
+            let x = points.col(j);
+            let s = sums.col_mut(c);
+            for i in 0..p {
+                s[i] += weights[j] * x[i];
+            }
+            mass[c] += weights[j];
+        }
+        for c in 0..k {
+            if mass[c] > 0.0 {
+                let s = sums.col(c).to_vec();
+                let dst = centers.col_mut(c);
+                for i in 0..p {
+                    dst[i] = s[i] / mass[c];
+                }
+            }
+        }
+    }
+    (centers, objective, iters, converged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+    use crate::error::Error;
+    use crate::testing::prop::assert_mergeable;
+
+    fn leaf_points(p: usize, n: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg64::seed(seed);
+        (Mat::from_fn(p, n, |_, _| rng.normal()), vec![1.0; n])
+    }
+
+    fn tree_with_shards(shards: &[u64]) -> CoresetPartial {
+        let mut t = CoresetPartial::new(8, 16, 99).unwrap();
+        for &s in shards {
+            let (pts, w) = leaf_points(8, 24, 1000 + s);
+            t.add_leaf(s, pts, w).unwrap();
+        }
+        t
+    }
+
+    fn bits_eq(a: &CoresetPartial, b: &CoresetPartial) -> bool {
+        if a.nodes.keys().collect::<Vec<_>>() != b.nodes.keys().collect::<Vec<_>>() {
+            return false;
+        }
+        a.nodes.values().zip(b.nodes.values()).all(|(x, y)| {
+            x.weights.iter().zip(&y.weights).all(|(u, v)| u.to_bits() == v.to_bits())
+                && x.points
+                    .as_slice()
+                    .iter()
+                    .zip(y.points.as_slice())
+                    .all(|(u, v)| u.to_bits() == v.to_bits())
+        })
+    }
+
+    #[test]
+    fn merge_laws_bitwise() {
+        // one partial per shard; the checker permutes and partitions the
+        // merges — carries fire in all sorts of interleavings, and the
+        // per-node seed streams must make the outcome bitwise identical
+        let items: Vec<CoresetPartial> = (0..6).map(|s| tree_with_shards(&[s])).collect();
+        assert_mergeable(
+            "coreset_merge",
+            &items,
+            || CoresetPartial::new(8, 16, 99).unwrap(),
+            |a, b| a.merge_from(b).unwrap(),
+            bits_eq,
+        );
+    }
+
+    #[test]
+    fn ingestion_order_is_irrelevant() {
+        // same shard set, built leaf-by-leaf in different orders
+        let a = tree_with_shards(&[0, 1, 2, 3, 4]);
+        let b = tree_with_shards(&[4, 2, 0, 3, 1]);
+        assert!(bits_eq(&a, &b));
+        // 5 leaves → binary 101: one node at level 2, one at level 0
+        assert_eq!(a.nodes.keys().copied().collect::<Vec<_>>(), vec![(0, 4), (2, 0)]);
+        assert!(a.covers_exactly(5));
+        assert!(!a.covers_exactly(6));
+    }
+
+    #[test]
+    fn memory_stays_bounded() {
+        let t = tree_with_shards(&(0..32).collect::<Vec<_>>());
+        // 32 = 2^5 shards collapse to a single root node of ≤ capacity
+        assert_eq!(t.nodes.len(), 1);
+        let (pts, w) = t.points();
+        assert!(pts.cols() <= t.capacity());
+        assert_eq!(pts.cols(), w.len());
+        assert!(t.covers_exactly(32));
+    }
+
+    #[test]
+    fn weights_preserve_total_mass_approximately() {
+        // Σ sampled weights has expectation Σ original weights (n per
+        // leaf, unit weights); check it is in the right ballpark
+        let t = tree_with_shards(&[0, 1, 2, 3]);
+        let (_, w) = t.points();
+        let total: f64 = w.iter().sum();
+        let expect = 4.0 * 24.0;
+        assert!(
+            total > 0.4 * expect && total < 2.5 * expect,
+            "mass {total} vs ingested {expect}"
+        );
+    }
+
+    #[test]
+    fn duplicate_shard_is_invalid() {
+        let mut t = tree_with_shards(&[0, 1]);
+        let (pts, w) = leaf_points(8, 10, 5);
+        // shard 1 is covered by the (1, 0) parent now — still refused
+        match t.add_leaf(1, pts, w) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("twice"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mismatched_configs_refuse_to_merge() {
+        let mut a = tree_with_shards(&[0]);
+        let b = {
+            let mut t = CoresetPartial::new(8, 16, 100).unwrap(); // different seed
+            let (pts, w) = leaf_points(8, 24, 7);
+            t.add_leaf(1, pts, w).unwrap();
+            t
+        };
+        assert!(matches!(a.merge_from(&b), Err(Error::Invalid(_))));
+    }
+
+    #[test]
+    fn serialization_round_trip() {
+        let t = tree_with_shards(&[0, 1, 2]);
+        let back = CoresetPartial::from_bytes(&t.to_bytes()).unwrap();
+        assert!(bits_eq(&t, &back));
+        assert_eq!(back.capacity(), t.capacity());
+    }
+
+    #[test]
+    fn overfull_node_is_corrupt() {
+        // capacity says 16 but a node claims more points
+        let t = tree_with_shards(&[0]);
+        let mut payload_patch = t.encode_payload();
+        // capacity field is bytes [8, 16) of the payload — shrink it so
+        // the node's point count exceeds it
+        payload_patch[8..16].copy_from_slice(&2u64.to_le_bytes());
+        let art = super::super::encode_artifact(
+            CoresetPartial::KIND,
+            CoresetPartial::VERSION,
+            &payload_patch,
+        );
+        match CoresetPartial::from_bytes(&art) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn weighted_kmeans_recovers_blobs() {
+        let mut rng = Pcg64::seed(3);
+        let d = gaussian_blobs(6, 300, 3, 0.05, &mut rng);
+        let w = vec![1.0; 300];
+        let (centers, _, converged) =
+            weighted_kmeans(&d.data, &w, 3, &KmeansOpts { n_init: 4, ..Default::default() })
+                .unwrap();
+        assert!(converged);
+        // every sample should sit close to some center
+        for j in 0..300 {
+            let best = (0..3)
+                .map(|c| dist2(d.data.col(j), centers.col(c)))
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 1.0, "sample {j} far from all centers: {best}");
+        }
+    }
+
+    #[test]
+    fn weighted_kmeans_respects_weights() {
+        // two points, all the mass on one of them, k=1 → center ≈ heavy point
+        let mut pts = Mat::zeros(2, 2);
+        pts.col_mut(0).copy_from_slice(&[0.0, 0.0]);
+        pts.col_mut(1).copy_from_slice(&[10.0, 10.0]);
+        let (centers, _, _) = weighted_kmeans(
+            &pts,
+            &[1e-9, 1.0],
+            1,
+            &KmeansOpts { max_iters: 50, ..Default::default() },
+        )
+        .unwrap();
+        assert!((centers.get(0, 0) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weighted_kmeans_rejects_bad_args() {
+        let (pts, w) = leaf_points(4, 10, 1);
+        assert!(matches!(
+            weighted_kmeans(&pts, &w[..5], 2, &KmeansOpts::default()),
+            Err(Error::Invalid(_))
+        ));
+        assert!(matches!(
+            weighted_kmeans(&pts, &w, 11, &KmeansOpts::default()),
+            Err(Error::Invalid(_))
+        ));
+    }
+}

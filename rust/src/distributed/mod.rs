@@ -1,0 +1,128 @@
+//! Distributed fit: serializable, lawfully mergeable partial-fit state.
+//!
+//! The paper's headline claim is that sparsified data makes PCA and
+//! K-means cheap *"especially in a distributed-data setting"*: every
+//! estimator in this crate is a streaming fold, so N workers can each
+//! fold their own disjoint shard range of a
+//! [`SparseStoreReader`](crate::store::SparseStoreReader) and a
+//! coordinator can combine the partial states. This module makes those
+//! partials first-class: the [`PartialFit`] trait gives each one an
+//! identity element, a **checked** merge, and a versioned, checksummed
+//! byte encoding (the `.pdsp` artifact, specified in `docs/FORMAT.md`).
+//!
+//! ## Merge laws
+//!
+//! Every implementation satisfies, and is property-tested for
+//! (`testing::prop::assert_mergeable`):
+//!
+//! 1. **identity** — `identity_like() ⊕ x == x == x ⊕ identity_like()`;
+//! 2. **order invariance** — folding a set of partials yields the same
+//!    result under every permutation;
+//! 3. **partition invariance** — pre-merging any chunking of the set,
+//!    then merging the chunk results, equals the flat fold.
+//!
+//! For the f64 estimators these laws hold **bitwise**, not just
+//! approximately: a partial keeps its accumulated state *per shard*
+//! (keyed by shard index) and merge is a disjoint map union, so the
+//! float additions happen only at finalize time, always in shard-index
+//! order — no merge order or partition can re-associate them. The
+//! partitioned fit's bit-identity reference is therefore the
+//! single-process partitioned fit (`FitPlan::partition(1)`), which runs
+//! the identical per-shard fold; the legacy unpartitioned drivers fold
+//! sample-by-sample across shard boundaries, which is the same sum in a
+//! different association (equal to f64 rounding, not to the bit).
+//!
+//! ## The coreset partial
+//!
+//! [`CoresetPartial`] implements the merge-and-reduce coreset tree of
+//! Barger & Feldman, *k-Means for Streaming and Distributed Big Sparse
+//! Data* (arXiv:1511.08990): each shard becomes a weighted leaf coreset,
+//! siblings in a dyadic tree over shard indices reduce bottom-up, and the
+//! per-node reduction RNG is derived from the node's `(level, index)`
+//! key — so the surviving tree is a function of the *set* of shards
+//! ingested, not of the merge schedule. Bounded memory (O(levels ×
+//! capacity) points) for unbounded streams, behind
+//! `FitPlan::kmeans().solver(Solver::Coreset)`.
+
+mod artifact;
+mod coreset;
+mod partials;
+
+pub use artifact::{decode_artifact, encode_artifact, peek_kind};
+pub use coreset::{weighted_kmeans, CoresetPartial};
+pub use partials::{CenterPartial, CenterUpdate, PcaPartial};
+
+use crate::error::{invalid, Result};
+
+/// Mergeable, serializable partial-fit state — see the [module
+/// docs](self) for the laws every implementation upholds.
+pub trait PartialFit: Clone + Sized {
+    /// Stable artifact kind tag recorded in the `.pdsp` envelope.
+    const KIND: u32;
+    /// Payload format version this build writes (per kind).
+    const VERSION: u32;
+
+    /// Human-readable kind name for error messages.
+    fn kind_name() -> &'static str;
+
+    /// A fresh identity partial carrying this partial's shape/config
+    /// (merging it into anything is a no-op, and anything merges into it
+    /// unchanged).
+    fn identity_like(&self) -> Self;
+
+    /// Fold `other` into `self`. Checked: shape/config mismatches and
+    /// overlapping shard coverage return
+    /// [`Error::Invalid`](crate::error::Error::Invalid) instead of
+    /// silently mixing incompatible state.
+    fn merge_from(&mut self, other: &Self) -> Result<()>;
+
+    /// Encode the payload (everything inside the envelope).
+    fn encode_payload(&self) -> Vec<u8>;
+
+    /// Decode a payload written by format `version` (≤ [`VERSION`](Self::VERSION)).
+    fn decode_payload(version: u32, payload: &[u8]) -> Result<Self>;
+
+    /// Serialize into a `.pdsp` artifact (envelope + payload + CRC).
+    fn to_bytes(&self) -> Vec<u8> {
+        artifact::encode_artifact(Self::KIND, Self::VERSION, &self.encode_payload())
+    }
+
+    /// Deserialize a `.pdsp` artifact. Truncation, tampering, and
+    /// trailing bytes are [`Error::Corrupt`](crate::error::Error::Corrupt);
+    /// a foreign kind or a version newer than this build is
+    /// [`Error::Invalid`](crate::error::Error::Invalid).
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let (version, kind, payload) = artifact::decode_artifact(bytes)?;
+        if kind != Self::KIND {
+            return invalid(format!(
+                "partial artifact kind {kind} is not a {} partial (kind {})",
+                Self::kind_name(),
+                Self::KIND
+            ));
+        }
+        if version > Self::VERSION {
+            return invalid(format!(
+                "{} partial version {version} is newer than this build's {}",
+                Self::kind_name(),
+                Self::VERSION
+            ));
+        }
+        Self::decode_payload(version, payload)
+    }
+}
+
+/// Artifact kind tags (the `kind` field of the `.pdsp` envelope).
+pub mod kind {
+    /// [`SparseMeanEstimator`](crate::estimators::SparseMeanEstimator).
+    pub const MEAN: u32 = 1;
+    /// [`CovarianceEstimator`](crate::estimators::CovarianceEstimator).
+    pub const COVARIANCE: u32 = 2;
+    /// [`HkAccumulator`](crate::estimators::HkAccumulator).
+    pub const HK: u32 = 3;
+    /// [`CenterPartial`](super::CenterPartial) (one Lloyd iteration).
+    pub const CENTER: u32 = 4;
+    /// [`PcaPartial`](super::PcaPartial) (per-shard mean + covariance).
+    pub const PCA: u32 = 5;
+    /// [`CoresetPartial`](super::CoresetPartial) (merge-and-reduce tree).
+    pub const CORESET: u32 = 6;
+}

@@ -1,0 +1,805 @@
+//! [`PartialFit`] implementations: the estimator accumulators, the
+//! per-shard PCA partial, and the per-shard Lloyd-iteration partial.
+//!
+//! The estimator impls (`SparseMeanEstimator`, `CovarianceEstimator`,
+//! `HkAccumulator`) serialize and merge the accumulators directly —
+//! exact for the integer-count HK fold, order-invariant to f64
+//! re-association for the float sums. The composite partials
+//! ([`PcaPartial`], [`CenterPartial`]) keep their state **per shard**
+//! and merge by disjoint map union, so they are *bitwise*
+//! order/partition-invariant: the float folds happen only at finalize,
+//! always in shard-index order.
+
+use std::collections::BTreeMap;
+
+use super::artifact::{PayloadReader, PayloadWriter};
+use super::{kind, PartialFit};
+use crate::error::{corrupt, invalid, Result};
+use crate::estimators::{CovarianceEstimator, HkAccumulator, SparseMeanEstimator};
+use crate::kmeans::{solve_centers, CenterStep};
+use crate::linalg::Mat;
+use crate::sparse::SparseChunk;
+
+impl PartialFit for SparseMeanEstimator {
+    const KIND: u32 = kind::MEAN;
+    const VERSION: u32 = 1;
+
+    fn kind_name() -> &'static str {
+        "mean"
+    }
+
+    fn identity_like(&self) -> Self {
+        let (p, m) = self.shape();
+        match self.scale_opt() {
+            Some(s) => SparseMeanEstimator::new(p, m).with_scale(s),
+            None => SparseMeanEstimator::new(p, m),
+        }
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        if self.shape() != other.shape() || self.scale_opt() != other.scale_opt() {
+            return invalid(format!(
+                "cannot merge mean partial (p,m)={:?} scale={:?} with (p,m)={:?} scale={:?}",
+                self.shape(),
+                self.scale_opt(),
+                other.shape(),
+                other.scale_opt()
+            ));
+        }
+        self.merge(other);
+        Ok(())
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let (p, m) = self.shape();
+        let mut w = PayloadWriter::new();
+        w.u64(p as u64);
+        w.u64(m as u64);
+        w.u64(self.n() as u64);
+        match self.scale_opt() {
+            Some(s) => {
+                w.u8(1);
+                w.f64(s);
+            }
+            None => w.u8(0),
+        }
+        w.f64s(self.sum_raw());
+        w.finish()
+    }
+
+    fn decode_payload(_version: u32, payload: &[u8]) -> Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let p = r.len()?;
+        let m = r.len()?;
+        let n = r.len()?;
+        let scale = match r.u8()? {
+            0 => None,
+            1 => Some(r.f64()?),
+            other => return corrupt(format!("mean partial: bad scale flag {other}")),
+        };
+        let sum = r.f64s(p)?;
+        r.finish()?;
+        Ok(SparseMeanEstimator::from_raw(p, m, scale, sum, n))
+    }
+}
+
+impl PartialFit for CovarianceEstimator {
+    const KIND: u32 = kind::COVARIANCE;
+    const VERSION: u32 = 1;
+
+    fn kind_name() -> &'static str {
+        "covariance"
+    }
+
+    fn identity_like(&self) -> Self {
+        let (p, m) = self.shape();
+        if self.is_weighted() {
+            CovarianceEstimator::new_weighted(p, m)
+        } else {
+            CovarianceEstimator::new(p, m)
+        }
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        if self.shape() != other.shape() || self.is_weighted() != other.is_weighted() {
+            return invalid(format!(
+                "cannot merge covariance partial (p,m)={:?} weighted={} with (p,m)={:?} \
+                 weighted={}",
+                self.shape(),
+                self.is_weighted(),
+                other.shape(),
+                other.is_weighted()
+            ));
+        }
+        self.merge(other);
+        Ok(())
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let (p, m) = self.shape();
+        let mut w = PayloadWriter::new();
+        w.u64(p as u64);
+        w.u64(m as u64);
+        w.u64(self.n() as u64);
+        w.u8(self.is_weighted() as u8);
+        w.f64s(self.acc_raw().as_slice());
+        w.f64s(self.slot_diag_raw());
+        w.finish()
+    }
+
+    fn decode_payload(_version: u32, payload: &[u8]) -> Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let p = r.len()?;
+        let m = r.len()?;
+        let n = r.len()?;
+        let weighted = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => return corrupt(format!("covariance partial: bad weighted flag {other}")),
+        };
+        if m < 2 {
+            return corrupt(format!("covariance partial: m={m} < 2"));
+        }
+        let acc_len = p.checked_mul(p).ok_or(())
+            .or_else(|_| corrupt(format!("covariance partial: p={p} overflows p*p")))?;
+        let acc = Mat::from_vec(p, p, r.f64s(acc_len)?).expect("length matches by construction");
+        let slot_diag = r.f64s(if weighted { p } else { 0 })?;
+        r.finish()?;
+        Ok(CovarianceEstimator::from_raw(p, m, weighted, acc, slot_diag, n))
+    }
+}
+
+impl PartialFit for HkAccumulator {
+    const KIND: u32 = kind::HK;
+    const VERSION: u32 = 1;
+
+    fn kind_name() -> &'static str {
+        "hk"
+    }
+
+    fn identity_like(&self) -> Self {
+        let (p, m) = self.shape();
+        HkAccumulator::new(p, m)
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        self.merge(other)
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let (p, m) = self.shape();
+        let mut w = PayloadWriter::new();
+        w.u64(p as u64);
+        w.u64(m as u64);
+        w.u64(self.n() as u64);
+        w.u64s(self.counts_raw());
+        w.finish()
+    }
+
+    fn decode_payload(_version: u32, payload: &[u8]) -> Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let p = r.len()?;
+        let m = r.len()?;
+        let n = r.len()?;
+        let counts = r.u64s(p)?;
+        r.finish()?;
+        Ok(HkAccumulator::from_raw(p, m, counts, n))
+    }
+}
+
+/// One worker's PCA partial: an independent `(mean, covariance)`
+/// accumulator pair **per shard** of a sparse store. Merging is a
+/// disjoint union of the shard maps — any merge order and any partition
+/// of the shard set produce the same map, so
+/// [`finalize`](Self::finalize) (which folds the per-shard states in
+/// shard-index order) is bitwise reproducible.
+#[derive(Clone, Debug)]
+pub struct PcaPartial {
+    p: usize,
+    m: usize,
+    /// Weighted-scheme calibration: mean scale 1.0 + cross-slot
+    /// covariance instead of the uniform `p/m` rescales.
+    weighted: bool,
+    nodes: BTreeMap<u32, (SparseMeanEstimator, CovarianceEstimator)>,
+}
+
+impl PcaPartial {
+    /// Empty partial for chunks of shape `(p, m)`; `weighted` selects the
+    /// scheme calibration (matching `Sparsifier::weighted()`).
+    pub fn new(p: usize, m: usize, weighted: bool) -> Self {
+        PcaPartial { p, m, weighted, nodes: BTreeMap::new() }
+    }
+
+    fn fresh_node(&self) -> (SparseMeanEstimator, CovarianceEstimator) {
+        if self.weighted {
+            (
+                SparseMeanEstimator::new(self.p, self.m).with_scale(1.0),
+                CovarianceEstimator::new_weighted(self.p, self.m),
+            )
+        } else {
+            (SparseMeanEstimator::new(self.p, self.m), CovarianceEstimator::new(self.p, self.m))
+        }
+    }
+
+    /// Fold one chunk of shard `shard` into that shard's accumulators.
+    pub fn fold_chunk(&mut self, shard: u32, chunk: &SparseChunk) -> Result<()> {
+        if chunk.p() != self.p || chunk.m() != self.m {
+            return invalid(format!(
+                "pca partial: chunk (p,m)=({},{}) does not match partial ({},{})",
+                chunk.p(),
+                chunk.m(),
+                self.p,
+                self.m
+            ));
+        }
+        if !self.nodes.contains_key(&shard) {
+            let fresh = self.fresh_node();
+            self.nodes.insert(shard, fresh);
+        }
+        let node = self.nodes.get_mut(&shard).expect("just inserted");
+        node.0.accumulate(chunk);
+        node.1.accumulate(chunk);
+        Ok(())
+    }
+
+    /// Shard indices this partial covers (ascending).
+    pub fn shards(&self) -> Vec<u32> {
+        self.nodes.keys().copied().collect()
+    }
+
+    /// Samples accumulated across all shards.
+    pub fn n(&self) -> usize {
+        self.nodes.values().map(|(mean, _)| mean.n()).sum()
+    }
+
+    /// Fold the per-shard states in shard-index order into one
+    /// `(mean, covariance)` estimator pair. Fails on an empty partial.
+    pub fn finalize(&self) -> Result<(SparseMeanEstimator, CovarianceEstimator)> {
+        if self.nodes.is_empty() {
+            return invalid("pca partial: nothing to finalize (no shards folded)");
+        }
+        let (mut mean, mut cov) = self.fresh_node();
+        for node in self.nodes.values() {
+            mean.merge(&node.0);
+            cov.merge(&node.1);
+        }
+        Ok((mean, cov))
+    }
+}
+
+impl PartialFit for PcaPartial {
+    const KIND: u32 = kind::PCA;
+    const VERSION: u32 = 1;
+
+    fn kind_name() -> &'static str {
+        "pca"
+    }
+
+    fn identity_like(&self) -> Self {
+        PcaPartial::new(self.p, self.m, self.weighted)
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        if (self.p, self.m, self.weighted) != (other.p, other.m, other.weighted) {
+            return invalid(format!(
+                "cannot merge pca partial (p={}, m={}, weighted={}) with (p={}, m={}, \
+                 weighted={})",
+                self.p, self.m, self.weighted, other.p, other.m, other.weighted
+            ));
+        }
+        for shard in other.nodes.keys() {
+            if self.nodes.contains_key(shard) {
+                return invalid(format!("pca partial: shard {shard} present in both partials"));
+            }
+        }
+        for (shard, node) in &other.nodes {
+            self.nodes.insert(*shard, node.clone());
+        }
+        Ok(())
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.u64(self.p as u64);
+        w.u64(self.m as u64);
+        w.u8(self.weighted as u8);
+        w.u64(self.nodes.len() as u64);
+        for (shard, (mean, cov)) in &self.nodes {
+            w.u32(*shard);
+            w.blob(&mean.encode_payload());
+            w.blob(&cov.encode_payload());
+        }
+        w.finish()
+    }
+
+    fn decode_payload(_version: u32, payload: &[u8]) -> Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let p = r.len()?;
+        let m = r.len()?;
+        let weighted = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => return corrupt(format!("pca partial: bad weighted flag {other}")),
+        };
+        let count = r.len()?;
+        let mut out = PcaPartial::new(p, m, weighted);
+        for _ in 0..count {
+            let shard = r.u32()?;
+            let mean = SparseMeanEstimator::decode_payload(1, r.blob()?)?;
+            let cov = CovarianceEstimator::decode_payload(1, r.blob()?)?;
+            if mean.shape() != (p, m) || cov.shape() != (p, m) || cov.is_weighted() != weighted {
+                return corrupt(format!("pca partial: shard {shard} node config mismatch"));
+            }
+            let expect_scale = if weighted { Some(1.0) } else { None };
+            if mean.scale_opt() != expect_scale {
+                return corrupt(format!("pca partial: shard {shard} mean scale mismatch"));
+            }
+            if out.nodes.insert(shard, (mean, cov)).is_some() {
+                return corrupt(format!("pca partial: duplicate shard {shard}"));
+            }
+        }
+        r.finish()?;
+        Ok(out)
+    }
+}
+
+/// One shard's contribution to one Lloyd iteration.
+#[derive(Clone, Debug)]
+struct CenterNode {
+    /// Masked center sums (p × k), exported from [`CenterStep`].
+    sums: Mat,
+    /// Per-cell observation counts (p × k).
+    counts: Mat,
+    /// Per-sample assignments in the shard's column order.
+    assign: Vec<u32>,
+    /// Eq. 34 objective contribution (sum of min masked distances).
+    objective: f64,
+}
+
+/// One worker's Lloyd-iteration partial: the exported
+/// [`CenterStep`] update **per shard**, merged by disjoint union and
+/// finalized in shard-index order — the distributed form of one
+/// iteration of sparsified K-means (Eq. 36 + 39), bitwise identical at
+/// every partition and merge order.
+#[derive(Clone, Debug)]
+pub struct CenterPartial {
+    p: usize,
+    k: usize,
+    nodes: BTreeMap<u32, CenterNode>,
+}
+
+/// A finalized [`CenterPartial`]: everything the Lloyd loop needs from
+/// one full pass.
+#[derive(Clone, Debug)]
+pub struct CenterUpdate {
+    /// Solved next centers (Eq. 39/40), p × k.
+    pub centers: Mat,
+    /// Per-sample assignments in global column order.
+    pub assign: Vec<u32>,
+    /// Eq. 34 objective over all shards.
+    pub objective: f64,
+}
+
+impl CenterPartial {
+    /// Empty partial for dimension `p` and `k` clusters.
+    pub fn new(p: usize, k: usize) -> Self {
+        CenterPartial { p, k, nodes: BTreeMap::new() }
+    }
+
+    /// Capture a completed [`CenterStep`] pass over exactly one shard's
+    /// columns as that shard's node.
+    pub fn insert_step(&mut self, shard: u32, step: &CenterStep) -> Result<()> {
+        let (sums, counts) = step.export_update();
+        if (sums.rows(), sums.cols()) != (self.p, self.k) {
+            return invalid(format!(
+                "center partial: step (p,k)=({},{}) does not match partial ({},{})",
+                sums.rows(),
+                sums.cols(),
+                self.p,
+                self.k
+            ));
+        }
+        if self.nodes.contains_key(&shard) {
+            return invalid(format!("center partial: shard {shard} folded twice"));
+        }
+        self.nodes.insert(
+            shard,
+            CenterNode {
+                sums,
+                counts,
+                assign: step.assign().to_vec(),
+                objective: step.objective(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Shard indices this partial covers (ascending).
+    pub fn shards(&self) -> Vec<u32> {
+        self.nodes.keys().copied().collect()
+    }
+
+    /// Samples assigned across all shards.
+    pub fn n(&self) -> usize {
+        self.nodes.values().map(|node| node.assign.len()).sum()
+    }
+
+    /// Fold the per-shard updates in shard-index order and solve the
+    /// Eq. 39/40 system (`prev` supplies never-sampled coordinates).
+    pub fn finalize(&self, prev: &Mat) -> Result<CenterUpdate> {
+        if self.nodes.is_empty() {
+            return invalid("center partial: nothing to finalize (no shards folded)");
+        }
+        let mut sums = Mat::zeros(self.p, self.k);
+        let mut counts = Mat::zeros(self.p, self.k);
+        let mut assign = Vec::with_capacity(self.n());
+        let mut objective = 0.0;
+        for node in self.nodes.values() {
+            sums.axpy(1.0, &node.sums);
+            counts.axpy(1.0, &node.counts);
+            assign.extend_from_slice(&node.assign);
+            objective += node.objective;
+        }
+        let centers = solve_centers(&sums, &counts, prev);
+        Ok(CenterUpdate { centers, assign, objective })
+    }
+
+    /// Members per cluster under the merged assignment.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for node in self.nodes.values() {
+            for &a in &node.assign {
+                sizes[a as usize] += 1;
+            }
+        }
+        sizes
+    }
+}
+
+impl PartialFit for CenterPartial {
+    const KIND: u32 = kind::CENTER;
+    const VERSION: u32 = 1;
+
+    fn kind_name() -> &'static str {
+        "center"
+    }
+
+    fn identity_like(&self) -> Self {
+        CenterPartial::new(self.p, self.k)
+    }
+
+    fn merge_from(&mut self, other: &Self) -> Result<()> {
+        if (self.p, self.k) != (other.p, other.k) {
+            return invalid(format!(
+                "cannot merge center partial (p={}, k={}) with (p={}, k={})",
+                self.p, self.k, other.p, other.k
+            ));
+        }
+        for shard in other.nodes.keys() {
+            if self.nodes.contains_key(shard) {
+                return invalid(format!("center partial: shard {shard} present in both partials"));
+            }
+        }
+        for (shard, node) in &other.nodes {
+            self.nodes.insert(*shard, node.clone());
+        }
+        Ok(())
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.u64(self.p as u64);
+        w.u64(self.k as u64);
+        w.u64(self.nodes.len() as u64);
+        for (shard, node) in &self.nodes {
+            w.u32(*shard);
+            w.u64(node.assign.len() as u64);
+            w.f64(node.objective);
+            w.f64s(node.sums.as_slice());
+            w.f64s(node.counts.as_slice());
+            for &a in &node.assign {
+                w.u32(a);
+            }
+        }
+        w.finish()
+    }
+
+    fn decode_payload(_version: u32, payload: &[u8]) -> Result<Self> {
+        let mut r = PayloadReader::new(payload);
+        let p = r.len()?;
+        let k = r.len()?;
+        let count = r.len()?;
+        let cells = p
+            .checked_mul(k)
+            .ok_or(())
+            .or_else(|_| corrupt(format!("center partial: p*k overflows ({p}*{k})")))?;
+        let mut out = CenterPartial::new(p, k);
+        for _ in 0..count {
+            let shard = r.u32()?;
+            let n = r.len()?;
+            let objective = r.f64()?;
+            let sums = Mat::from_vec(p, k, r.f64s(cells)?).expect("length matches");
+            let counts = Mat::from_vec(p, k, r.f64s(cells)?).expect("length matches");
+            let mut assign = Vec::with_capacity(n.min(payload.len() / 4 + 1));
+            for _ in 0..n {
+                let a = r.u32()?;
+                if a as usize >= k {
+                    return corrupt(format!(
+                        "center partial: shard {shard} assignment {a} out of range (k={k})"
+                    ));
+                }
+                assign.push(a);
+            }
+            if out
+                .nodes
+                .insert(shard, CenterNode { sums, counts, assign, objective })
+                .is_some()
+            {
+                return corrupt(format!("center partial: duplicate shard {shard}"));
+            }
+        }
+        r.finish()?;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use crate::kmeans::NativeAssigner;
+    use crate::rng::Pcg64;
+    use crate::testing::fixtures::sparse_chunk;
+    use crate::testing::prop::assert_mergeable;
+
+    fn chunks(p: usize, m: usize, per: usize, count: usize) -> Vec<SparseChunk> {
+        (0..count).map(|i| sparse_chunk(p, m, per, i * per, 40 + i as u64)).collect()
+    }
+
+    fn close(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-12 * x.abs().max(y.abs()).max(1.0))
+    }
+
+    #[test]
+    fn mean_merge_laws() {
+        let items: Vec<SparseMeanEstimator> = chunks(24, 6, 50, 5)
+            .iter()
+            .map(|c| {
+                let mut e = SparseMeanEstimator::new(24, 6);
+                e.accumulate(c);
+                e
+            })
+            .collect();
+        // float-direct accumulator: permutations re-associate the sums,
+        // so equality is tolerance-based
+        assert_mergeable(
+            "mean_merge",
+            &items,
+            || SparseMeanEstimator::new(24, 6),
+            |a, b| a.merge_from(b).unwrap(),
+            |a, b| a.n() == b.n() && close(a.sum_raw(), b.sum_raw()),
+        );
+    }
+
+    #[test]
+    fn covariance_merge_laws() {
+        let items: Vec<CovarianceEstimator> = chunks(16, 5, 40, 4)
+            .iter()
+            .map(|c| {
+                let mut e = CovarianceEstimator::new(16, 5);
+                e.accumulate(c);
+                e
+            })
+            .collect();
+        assert_mergeable(
+            "covariance_merge",
+            &items,
+            || CovarianceEstimator::new(16, 5),
+            |a, b| a.merge_from(b).unwrap(),
+            |a, b| a.n() == b.n() && close(a.acc_raw().as_slice(), b.acc_raw().as_slice()),
+        );
+    }
+
+    #[test]
+    fn pca_partial_merge_laws_bitwise() {
+        // per-shard map union: *bitwise* order/partition invariance
+        let items: Vec<PcaPartial> = chunks(16, 5, 30, 6)
+            .iter()
+            .enumerate()
+            .map(|(shard, c)| {
+                let mut part = PcaPartial::new(16, 5, false);
+                part.fold_chunk(shard as u32, c).unwrap();
+                part
+            })
+            .collect();
+        let bits_eq = |a: &PcaPartial, b: &PcaPartial| {
+            if a.shards() != b.shards() {
+                return false;
+            }
+            a.nodes.iter().zip(&b.nodes).all(|((_, x), (_, y))| {
+                x.0.sum_raw().iter().zip(y.0.sum_raw()).all(|(u, v)| u.to_bits() == v.to_bits())
+                    && x.1
+                        .acc_raw()
+                        .as_slice()
+                        .iter()
+                        .zip(y.1.acc_raw().as_slice())
+                        .all(|(u, v)| u.to_bits() == v.to_bits())
+            })
+        };
+        assert_mergeable(
+            "pca_partial_merge",
+            &items,
+            || PcaPartial::new(16, 5, false),
+            |a, b| a.merge_from(b).unwrap(),
+            bits_eq,
+        );
+    }
+
+    #[test]
+    fn center_partial_merge_laws_bitwise() {
+        let k = 3;
+        let p = 16;
+        let mut rng = Pcg64::seed(7);
+        let centers = Mat::from_fn(p, k, |_, _| rng.normal());
+        let items: Vec<CenterPartial> = chunks(p, 5, 30, 5)
+            .iter()
+            .enumerate()
+            .map(|(shard, c)| {
+                let mut step = CenterStep::new(p, k, 1);
+                step.begin();
+                step.fold(c, &centers, &NativeAssigner::new()).unwrap();
+                let mut part = CenterPartial::new(p, k);
+                part.insert_step(shard as u32, &step).unwrap();
+                part
+            })
+            .collect();
+        let bits_eq = |a: &CenterPartial, b: &CenterPartial| {
+            a.shards() == b.shards()
+                && a.nodes.iter().zip(&b.nodes).all(|((_, x), (_, y))| {
+                    x.assign == y.assign
+                        && x.objective.to_bits() == y.objective.to_bits()
+                        && x.sums
+                            .as_slice()
+                            .iter()
+                            .zip(y.sums.as_slice())
+                            .all(|(u, v)| u.to_bits() == v.to_bits())
+                })
+        };
+        assert_mergeable(
+            "center_partial_merge",
+            &items,
+            || CenterPartial::new(p, k),
+            |a, b| a.merge_from(b).unwrap(),
+            bits_eq,
+        );
+        // and the merged finalize matches one step folding everything
+        let mut whole = CenterStep::new(p, k, 1);
+        whole.begin();
+        for c in &chunks(p, 5, 30, 5) {
+            whole.fold(c, &centers, &NativeAssigner::new()).unwrap();
+        }
+        let mut merged = CenterPartial::new(p, k);
+        for it in &items {
+            merged.merge_from(it).unwrap();
+        }
+        let update = merged.finalize(&centers).unwrap();
+        assert_eq!(update.assign, whole.assign());
+        let solved = whole.solve(&centers);
+        for (a, b) in update.centers.as_slice().iter().zip(solved.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn round_trip_every_kind() {
+        let c = sparse_chunk(16, 5, 40, 0, 11);
+
+        let mut mean = SparseMeanEstimator::new(16, 5).with_scale(1.0);
+        mean.accumulate(&c);
+        let back = SparseMeanEstimator::from_bytes(&mean.to_bytes()).unwrap();
+        assert_eq!(back.n(), mean.n());
+        assert_eq!(back.scale_opt(), mean.scale_opt());
+        assert!(back.sum_raw().iter().zip(mean.sum_raw()).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let mut cov = CovarianceEstimator::new(16, 5);
+        cov.accumulate(&c);
+        let back = CovarianceEstimator::from_bytes(&cov.to_bytes()).unwrap();
+        assert_eq!(back.n(), cov.n());
+        assert!(back
+            .acc_raw()
+            .as_slice()
+            .iter()
+            .zip(cov.acc_raw().as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let mut hk = HkAccumulator::new(16, 5);
+        hk.accumulate(&c);
+        let back = HkAccumulator::from_bytes(&hk.to_bytes()).unwrap();
+        assert_eq!(back.counts_raw(), hk.counts_raw());
+        assert_eq!(back.n(), hk.n());
+
+        let mut pca = PcaPartial::new(16, 5, false);
+        pca.fold_chunk(0, &c).unwrap();
+        pca.fold_chunk(3, &sparse_chunk(16, 5, 20, 40, 12)).unwrap();
+        let back = PcaPartial::from_bytes(&pca.to_bytes()).unwrap();
+        assert_eq!(back.shards(), pca.shards());
+        assert_eq!(back.n(), pca.n());
+
+        let centers = Mat::from_fn(16, 3, |i, j| ((i + 2 * j) % 5) as f64 - 2.0);
+        let mut step = CenterStep::new(16, 3, 1);
+        step.begin();
+        step.fold(&c, &centers, &NativeAssigner::new()).unwrap();
+        let mut cp = CenterPartial::new(16, 3);
+        cp.insert_step(7, &step).unwrap();
+        let back = CenterPartial::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(back.shards(), vec![7]);
+        let a = back.finalize(&centers).unwrap();
+        let b = cp.finalize(&centers).unwrap();
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+
+    #[test]
+    fn kind_and_version_mismatches_are_invalid() {
+        let mut hk = HkAccumulator::new(8, 4);
+        hk.accumulate(&sparse_chunk(8, 4, 10, 0, 3));
+        let bytes = hk.to_bytes();
+        // wrong kind for the decoder
+        match SparseMeanEstimator::from_bytes(&bytes) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("kind"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        // future version
+        let future = super::super::encode_artifact(kind::HK, HkAccumulator::VERSION + 1, &[]);
+        match HkAccumulator::from_bytes(&future) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("newer"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tampered_payloads_are_typed_never_panic() {
+        let mut pca = PcaPartial::new(8, 4, true);
+        pca.fold_chunk(0, &sparse_chunk(8, 4, 12, 0, 5)).unwrap();
+        let good = pca.to_bytes();
+        // truncate at every boundary: envelope decode or payload decode
+        // must return a typed error (the envelope CRC catches all of
+        // these, but the payload reader is also exercised directly below)
+        for cut in 0..good.len() {
+            assert!(PcaPartial::from_bytes(&good[..cut]).is_err());
+        }
+        // a syntactically valid envelope around a damaged payload:
+        // re-encode garbage payloads and check typed failure
+        for garbage in [&[][..], &[1, 2, 3][..], &[0xFF; 64][..]] {
+            let art = super::super::encode_artifact(kind::PCA, PcaPartial::VERSION, garbage);
+            match PcaPartial::from_bytes(&art) {
+                Err(Error::Corrupt(_)) | Err(Error::Invalid(_)) => {}
+                other => panic!("garbage payload: expected typed error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_shards_refuse_to_merge() {
+        let c = sparse_chunk(8, 4, 10, 0, 3);
+        let mut a = PcaPartial::new(8, 4, false);
+        a.fold_chunk(2, &c).unwrap();
+        let mut b = PcaPartial::new(8, 4, false);
+        b.fold_chunk(2, &c).unwrap();
+        match a.merge_from(&b) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("shard 2"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mixed_calibrations_refuse_to_merge() {
+        let mut a = SparseMeanEstimator::new(8, 4);
+        let b = SparseMeanEstimator::new(8, 4).with_scale(1.0);
+        assert!(matches!(a.merge_from(&b), Err(Error::Invalid(_))));
+        let mut cu = CovarianceEstimator::new(8, 4);
+        let cw = CovarianceEstimator::new_weighted(8, 4);
+        assert!(matches!(cu.merge_from(&cw), Err(Error::Invalid(_))));
+    }
+}

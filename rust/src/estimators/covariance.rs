@@ -274,6 +274,37 @@ impl CovarianceEstimator {
         }
         self.n += other.n;
     }
+
+    /// `(p, m)` the estimator was built for.
+    pub(crate) fn shape(&self) -> (usize, usize) {
+        (self.p, self.m)
+    }
+
+    /// The raw accumulated scatter (lower triangle populated) — the
+    /// serializable state, together with [`slot_diag_raw`](Self::slot_diag_raw).
+    pub(crate) fn acc_raw(&self) -> &Mat {
+        &self.acc
+    }
+
+    /// Raw per-coordinate slot-square sums (empty in uniform mode).
+    pub(crate) fn slot_diag_raw(&self) -> &[f64] {
+        &self.slot_diag
+    }
+
+    /// Rebuild from serialized state (the `distributed` codec). Worker
+    /// count is runtime configuration, not state — it resets to 1.
+    pub(crate) fn from_raw(
+        p: usize,
+        m: usize,
+        weighted: bool,
+        acc: Mat,
+        slot_diag: Vec<f64>,
+        n: usize,
+    ) -> Self {
+        assert_eq!((acc.rows(), acc.cols()), (p, p), "covariance state shape mismatch");
+        assert_eq!(slot_diag.len(), if weighted { p } else { 0 }, "slot_diag length mismatch");
+        CovarianceEstimator { p, m, acc, n, workers: 1, ranges_cache: None, weighted, slot_diag }
+    }
 }
 
 /// Inputs to the Theorem 6 bound (Eqs. 24–26). All norms refer to the

@@ -5,6 +5,7 @@
 //! by `p/(m·n_k)`. Theorem 7 bounds `‖H_k − I‖₂` — i.e. how close the
 //! entry-wise averaging of Eq. (39) is to a plain average.
 
+use crate::error::{invalid, Result};
 use crate::sparse::SparseChunk;
 
 /// Streaming accumulator for the per-coordinate sampling counts of one
@@ -48,6 +49,40 @@ impl HkAccumulator {
     /// Samples counted so far.
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// Merge a partner accumulator (distributed reduction). Integer
+    /// counts, so the fold is exactly associative and commutative —
+    /// fails with [`Error::Invalid`](crate::error::Error::Invalid) on a
+    /// shape mismatch instead of silently mixing count spaces.
+    pub fn merge(&mut self, other: &HkAccumulator) -> Result<()> {
+        if (self.p, self.m) != (other.p, other.m) {
+            return invalid(format!(
+                "cannot merge HkAccumulator (p={}, m={}) with (p={}, m={})",
+                self.p, self.m, other.p, other.m
+            ));
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        Ok(())
+    }
+
+    /// `(p, m)` the accumulator was built for.
+    pub(crate) fn shape(&self) -> (usize, usize) {
+        (self.p, self.m)
+    }
+
+    /// Raw per-coordinate sampling counts — the serializable state.
+    pub(crate) fn counts_raw(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Rebuild from serialized state (the `distributed` codec).
+    pub(crate) fn from_raw(p: usize, m: usize, counts: Vec<u64>, n: usize) -> Self {
+        assert_eq!(counts.len(), p, "hk state length mismatch");
+        HkAccumulator { p, m, counts, n }
     }
 
     /// Diagonal of `H_k` (Eq. 41).
@@ -139,14 +174,47 @@ mod tests {
     }
 
     #[test]
-    fn subset_accumulation() {
+    fn merge_laws() {
+        // each item is one cluster-shard's worth of counts, accumulated
+        // through accumulate_subset (members partition the chunk); the
+        // generic checker covers what the old ad-hoc split test did —
+        // subset folds compose back to the full accumulation — plus
+        // identity/order/partition invariance. u64 counts: exact eq.
         let (sp, c) = chunk(16, 0.5, 100, 9);
-        let mut all = HkAccumulator::new(sp.p(), sp.m());
-        all.accumulate(&c);
-        let mut sub = HkAccumulator::new(sp.p(), sp.m());
-        sub.accumulate_subset(&c, &(0..100).collect::<Vec<_>>());
-        assert_eq!(all.hk_diagonal(), sub.hk_diagonal());
-        assert_eq!(all.n(), sub.n());
+        let items: Vec<HkAccumulator> = (0..5)
+            .map(|w| {
+                let members: Vec<usize> = (0..100).filter(|i| i % 5 == w).collect();
+                let mut acc = HkAccumulator::new(sp.p(), sp.m());
+                acc.accumulate_subset(&c, &members);
+                acc
+            })
+            .collect();
+        crate::testing::prop::assert_mergeable(
+            "hk_merge",
+            &items,
+            || HkAccumulator::new(sp.p(), sp.m()),
+            |a, b| a.merge(b).unwrap(),
+            |a, b| a.counts_raw() == b.counts_raw() && a.n() == b.n(),
+        );
+        // and the fold reproduces the whole-chunk accumulation exactly
+        let mut whole = HkAccumulator::new(sp.p(), sp.m());
+        whole.accumulate(&c);
+        let mut folded = HkAccumulator::new(sp.p(), sp.m());
+        for it in &items {
+            folded.merge(it).unwrap();
+        }
+        assert_eq!(whole.counts_raw(), folded.counts_raw());
+        assert_eq!(whole.n(), folded.n());
+    }
+
+    #[test]
+    fn merge_shape_mismatch_is_typed() {
+        let mut a = HkAccumulator::new(16, 8);
+        let b = HkAccumulator::new(16, 4);
+        match a.merge(&b) {
+            Err(crate::error::Error::Invalid(_)) => {}
+            other => panic!("expected Error::Invalid, got {other:?}"),
+        }
     }
 
     #[test]

@@ -76,6 +76,33 @@ impl SparseMeanEstimator {
         }
         self.n += other.n;
     }
+
+    /// `(p, m)` the estimator was built for.
+    pub(crate) fn shape(&self) -> (usize, usize) {
+        (self.p, self.m)
+    }
+
+    /// The scheme-supplied rescale override, if any.
+    pub(crate) fn scale_opt(&self) -> Option<f64> {
+        self.scale
+    }
+
+    /// Raw coordinate sums (before any rescale) — the serializable state.
+    pub(crate) fn sum_raw(&self) -> &[f64] {
+        &self.sum
+    }
+
+    /// Rebuild from serialized state (the `distributed` codec).
+    pub(crate) fn from_raw(
+        p: usize,
+        m: usize,
+        scale: Option<f64>,
+        sum: Vec<f64>,
+        n: usize,
+    ) -> Self {
+        assert_eq!(sum.len(), p, "mean state length mismatch");
+        SparseMeanEstimator { p, m, sum, n, scale }
+    }
 }
 
 /// Data-dependent inputs to the Theorem 4 bound. Obtain from

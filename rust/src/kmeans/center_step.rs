@@ -269,10 +269,14 @@ impl CenterStep {
         sizes
     }
 
-    /// Assemble the accumulated sums/counts and solve the Eq. 39/40
-    /// diagonal system (`prev` supplies entries for never-sampled
-    /// coordinates).
-    pub fn solve(&self, prev: &Mat) -> Mat {
+    /// Assemble the per-range accumulator panels into dense `p × k`
+    /// masked-sum and count matrices — the iteration's raw Eq. 39 state,
+    /// in a worker-layout-independent form. This is what a distributed
+    /// partial ships to the coordinator: summing exported matrices from
+    /// disjoint sample sets equals one process folding all the samples,
+    /// up to f64 re-association (exact when partials are kept per shard
+    /// and folded in shard order).
+    pub fn export_update(&self) -> (Mat, Mat) {
         let mut sums = Mat::zeros(self.p, self.k);
         let mut counts = Mat::zeros(self.p, self.k);
         for (t, r) in self.ranges.iter().enumerate() {
@@ -284,6 +288,14 @@ impl CenterStep {
                     .copy_from_slice(&self.counts[t][c * rows..(c + 1) * rows]);
             }
         }
+        (sums, counts)
+    }
+
+    /// Assemble the accumulated sums/counts and solve the Eq. 39/40
+    /// diagonal system (`prev` supplies entries for never-sampled
+    /// coordinates).
+    pub fn solve(&self, prev: &Mat) -> Mat {
+        let (sums, counts) = self.export_update();
         solve_centers(&sums, &counts, prev)
     }
 }

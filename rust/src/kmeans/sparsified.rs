@@ -592,6 +592,150 @@ impl SparsifiedKmeans {
         Ok((best.expect("n_init >= 1"), walk.passes))
     }
 
+    /// Distributed Lloyd over a sparse store: every pass folds one
+    /// [`CenterStep`] **per shard**, captures the per-shard updates in a
+    /// [`CenterPartial`](crate::distributed::CenterPartial) per partition
+    /// (`partitions` contiguous shard ranges — the N "workers"), and
+    /// merges the partials before solving the next centers. Because the
+    /// partial keeps per-shard subtotals and
+    /// [`finalize`](crate::distributed::CenterPartial::finalize) folds
+    /// them in shard-index order, the fit is **bitwise identical for
+    /// every partition count and merge order** — `partitions` only
+    /// changes how the work would be dealt across workers, never the
+    /// model. (It is *not* bitwise identical to
+    /// [`fit_source`](Self::fit_source), whose single `CenterStep`
+    /// accumulates across shard boundaries — a different f64
+    /// association; `partitions = 1` is the distributed reference.)
+    ///
+    /// Returns the best model plus the number of sparse passes started
+    /// (seeding sub-passes + one per Lloyd iteration per restart).
+    pub fn fit_store_partitioned(
+        &self,
+        sp: &Sparsifier,
+        reader: &mut crate::store::SparseStoreReader,
+        assigner: &dyn SparseAssigner,
+        unmix: bool,
+        partitions: usize,
+    ) -> Result<(SparsifiedModel, usize)> {
+        use crate::distributed::{CenterPartial, PartialFit};
+
+        if reader.p() != sp.p() || reader.m() != sp.m() {
+            return invalid(format!(
+                "kmeans fit: store is p={} m={}, sparsifier is p={} m={}",
+                reader.p(),
+                reader.m(),
+                sp.p(),
+                sp.m()
+            ));
+        }
+        let p = sp.p();
+        let m = sp.m();
+        let manifest = reader.manifest();
+        let n = manifest.n;
+        let shards: Vec<(usize, usize, usize)> =
+            manifest.shards.iter().map(|s| (s.index, s.start_col, s.n_cols)).collect();
+        if n == 0 {
+            return invalid("kmeans fit: store is empty");
+        }
+        let ranges = parallel::split_ranges(shards.len(), partitions.max(1));
+        let mut passes = 0usize;
+        let mut best: Option<SparsifiedModel> = None;
+        for start in 0..self.opts.n_init.max(1) {
+            let mut rng = Pcg64::seed_stream(self.opts.seed, 0xC0DE ^ start as u64);
+            // Algorithm 1 line 5: seeding is a whole-store walk — the
+            // same pass for every partition count
+            let mut centers = {
+                let mut walk = SourceWalk::new(&mut *reader);
+                let centers = kmeans_pp_walk(&mut walk, p, n, self.k, &mut rng)?;
+                passes += walk.passes;
+                centers
+            };
+            let mut assign = vec![0u32; n];
+            let mut have_assign = false;
+            let mut obj = f64::INFINITY;
+            let mut iterations = 0;
+            let mut converged = false;
+            let mut center_bound = Vec::new();
+            for it in 0..self.opts.max_iters {
+                // one pass = one CenterStep per shard, one partial per
+                // partition, merged by disjoint union
+                let mut merged = CenterPartial::new(p, self.k);
+                for range in &ranges {
+                    let mut partial = CenterPartial::new(p, self.k);
+                    for &(index, start_col, n_cols) in &shards[range.clone()] {
+                        let mut step = CenterStep::new(p, self.k, self.workers);
+                        step.begin();
+                        reader.seek_to_col(start_col)?;
+                        let mut covered = 0usize;
+                        while covered < n_cols {
+                            let Some(chunk) = reader.next_chunk()? else { break };
+                            covered += chunk.n();
+                            step.fold(&chunk, &centers, assigner)?;
+                        }
+                        if covered != n_cols {
+                            return invalid(format!(
+                                "kmeans fit: shard {index} pass covered {covered} of \
+                                 {n_cols} columns"
+                            ));
+                        }
+                        partial.insert_step(index as u32, &step)?;
+                    }
+                    merged.merge_from(&partial)?;
+                }
+                passes += 1;
+                if merged.n() != n {
+                    return invalid(format!(
+                        "kmeans fit: pass covered {} of {n} samples",
+                        merged.n()
+                    ));
+                }
+                let sizes = merged.cluster_sizes();
+                let update = merged.finalize(&centers)?;
+                let changed = if have_assign {
+                    assign.iter().zip(update.assign.iter()).filter(|(a, b)| a != b).count()
+                } else {
+                    n
+                };
+                assign.copy_from_slice(&update.assign);
+                have_assign = true;
+                obj = update.objective;
+                center_bound.push(if sp.weighted() {
+                    f64::NAN
+                } else {
+                    sizes
+                        .iter()
+                        .filter(|&&nk| nk > 0)
+                        .map(|&nk| {
+                            crate::estimators::center_error_bound(p, m, nk, CENTER_BOUND_DELTA)
+                        })
+                        .fold(0.0f64, f64::max)
+                });
+                centers = update.centers;
+                iterations = it + 1;
+                if (changed as f64) <= self.opts.tol_frac * n as f64 {
+                    converged = true;
+                    break;
+                }
+            }
+            let centers_orig = if unmix { sp.unmix(&centers) } else { sp.truncate(&centers) };
+            merge_best(
+                &mut best,
+                SparsifiedModel {
+                    result: KmeansResult {
+                        centers: centers_orig,
+                        assign,
+                        objective: obj,
+                        iterations,
+                        converged,
+                    },
+                    centers_precond: centers,
+                    center_bound,
+                },
+            );
+        }
+        Ok((best.expect("n_init >= 1"), passes))
+    }
+
     /// One restart: k-means++ seeding then Lloyd iterations, all as
     /// whole-pass folds over `walk` through the [`CenterStep`] kernel.
     fn fit_one_start(

@@ -45,6 +45,14 @@
 //!   backpressure, and the [`coordinator::FitPlan`] session API — the one
 //!   builder every fit (PCA / K-means / compress, from a raw stream, an
 //!   in-memory sparse source, or the persistent store) runs through.
+//! * [`distributed`] — serializable, lawfully mergeable partial-fit
+//!   state ([`distributed::PartialFit`]): per-shard mean / covariance /
+//!   HK and Lloyd-update partials that N workers fit independently over
+//!   disjoint shard ranges and a coordinator merges — bit-identically in
+//!   every merge order and partition — plus the Barger–Feldman
+//!   merge-and-reduce coreset tree (arXiv:1511.08990) behind
+//!   `FitPlan::kmeans().solver(Solver::Coreset)` for bounded-memory
+//!   streaming K-means.
 //! * [`parallel`] — the fork/join execution layer under the hot paths:
 //!   scoped threads over contiguous index ranges with deterministic
 //!   in-order merge (K-means assignment/center accumulation and the
@@ -73,6 +81,7 @@ pub mod bench;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod distributed;
 pub mod error;
 pub mod estimators;
 pub mod experiments;
@@ -98,6 +107,7 @@ pub mod prelude {
         ChunkSource, DenseChunk, FitOutcome, FitPlan, FitReport, Solver, StreamConfig,
     };
     pub use crate::sparse::{SparseChunkSource, SparseVecSource};
+    pub use crate::distributed::PartialFit;
     pub use crate::error::{Error, Result};
     pub use crate::estimators::{CovarianceEstimator, SparseMeanEstimator};
     pub use crate::kmeans::{KmeansOpts, KmeansResult, SparsifiedKmeans};

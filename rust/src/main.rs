@@ -7,16 +7,22 @@
 //! pds pca    [--n N] [--p P] [--topk K] [--gamma G] streaming PCA demo run
 //! pds compress --store DIR [--n N] [--gamma G]     compress a stream into a sparse store
 //! pds fit --store DIR [--task kmeans|pca]          fit from a sparse store (no raw pass)
+//! pds fit --store DIR --partition N                partitioned fit (N merged worker shards)
+//! pds fit --store DIR --partials-out DIR           write worker partials, don't finalize
+//! pds merge --store DIR FILE...                    merge worker partials into a fit
+//! pds split --store DIR --into D1,D2,...           deal a store into shard-group pieces
+//! pds join --stores D1,D2,... --out DIR            re-join shard-group pieces
 //! pds store-info --store DIR                       print a store's manifest
 //! pds artifacts-check                              verify AOT artifacts + PJRT
 //! pds info                                         build/config summary
 //! ```
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use pds::cli::Args;
-use pds::coordinator::{FitPlan, FitReport, MatSource, Solver, StreamConfig};
+use pds::coordinator::{FitPlan, FitReport, MatSource, Solver, StreamConfig, DEFAULT_CORESET_SIZE};
+use pds::distributed::{kind, peek_kind};
 use pds::data::{gaussian_blobs, DigitConfig};
 use pds::error::{Error, Result};
 use pds::kmeans::KmeansOpts;
@@ -25,7 +31,7 @@ use pds::rng::Pcg64;
 use pds::runtime::{artifact_dir, XlaEngine};
 use pds::sampling::{Scheme, SparsifyConfig};
 use pds::sparse::Precision;
-use pds::store::SparseStoreReader;
+use pds::store::{join_stores, split_store, SparseStoreReader};
 use pds::transform::TransformKind;
 
 fn main() -> ExitCode {
@@ -48,6 +54,9 @@ fn main() -> ExitCode {
         "pca" => cmd_pca(&args),
         "compress" => cmd_compress(&args),
         "fit" => cmd_fit(&args),
+        "merge" => cmd_merge(&args),
+        "split" => cmd_split(&args),
+        "join" => cmd_join(&args),
         "store-info" => cmd_store_info(&args),
         "artifacts-check" => cmd_artifacts_check(),
         "info" => cmd_info(),
@@ -87,8 +96,13 @@ fn usage() {
          \x20\x20\x20\x20 [--scheme precond|uniform|hybrid] [--precision f32|f64]\n\
          \x20 pds fit --store DIR [--task kmeans|pca] [--k K] [--topk K] [--workers W]\n\
          \x20\x20\x20\x20 [--restarts R] [--budget-mb MB] [--scheme precond|uniform|hybrid]\n\
-         \x20\x20\x20\x20 [--solver covariance|krylov (pca) | inmemory|stream (kmeans)]\n\
-         \x20\x20\x20\x20 [--precision f32|f64]\n\
+         \x20\x20\x20\x20 [--solver covariance|krylov (pca) | inmemory|stream|coreset (kmeans)]\n\
+         \x20\x20\x20\x20 [--precision f32|f64] [--partition N] [--coreset-size C]\n\
+         \x20\x20\x20\x20 [--partials-out DIR  write worker partials instead of fitting]\n\
+         \x20 pds merge --store DIR FILE...  [--k K] [--topk K] [--restarts R]\n\
+         \x20\x20\x20\x20 merge worker partial artifacts (from --partials-out) into a fit\n\
+         \x20 pds split --store DIR --into DIR1,DIR2,...\n\
+         \x20 pds join --stores DIR1,DIR2,... --out DIR\n\
          \x20 pds store-info --store DIR\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
@@ -231,7 +245,7 @@ fn solver_arg(args: &Args, task: &str) -> Result<Option<Solver>> {
     let solver = Solver::parse(name)?;
     let ok = match task {
         "pca" => matches!(solver, Solver::Covariance | Solver::Krylov),
-        _ => matches!(solver, Solver::InMemory | Solver::Stream),
+        _ => matches!(solver, Solver::InMemory | Solver::Stream | Solver::Coreset),
     };
     if !ok {
         return Err(Error::Invalid(format!(
@@ -383,6 +397,13 @@ fn cmd_fit(args: &Args) -> Result<()> {
     // same loud-failure contract for --precision: a store fit always uses
     // the recorded value encoding, so an explicit request must match it
     let precision = precision_arg(args)?;
+    // distributed-fit knobs: --partition N folds the store's shards as N
+    // merged worker partials (bitwise invariant to N for exact f64 folds);
+    // --partials-out DIR writes the worker artifacts instead of finishing
+    // the fit, for a later `pds merge`
+    let partition: usize = args.get_parse("partition", 0)?;
+    let coreset_size: usize = args.get_parse("coreset-size", DEFAULT_CORESET_SIZE)?;
+    let partials_out = args.get("partials-out").map(PathBuf::from);
     println!(
         "store {}: n={} p={} m={} scheme={} precision={} preconditioned={} ({} shards)",
         store_dir,
@@ -403,8 +424,14 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 .topk(topk)
                 .solver(solver)
                 .workers(workers);
+            if partition > 0 {
+                plan = plan.partition(partition);
+            }
             if let Some(pr) = precision {
                 plan = plan.precision(pr);
+            }
+            if let Some(dir) = partials_out {
+                return write_partials(plan, &dir);
             }
             let report = plan.run()?;
             let fit = report.pca_fit().expect("pca plan");
@@ -429,9 +456,16 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 .k(k)
                 .kmeans_opts(opts)
                 .solver(solver)
-                .workers(workers);
+                .workers(workers)
+                .coreset_size(coreset_size);
+            if partition > 0 {
+                plan = plan.partition(partition);
+            }
             if let Some(pr) = precision {
                 plan = plan.precision(pr);
+            }
+            if let Some(dir) = partials_out {
+                return write_partials(plan, &dir);
             }
             let report = plan.run()?;
             let model = report.kmeans_model().expect("kmeans plan");
@@ -448,6 +482,137 @@ fn cmd_fit(args: &Args) -> Result<()> {
         }
         other => return Err(Error::Invalid(format!("--task {other:?} (want kmeans|pca)"))),
     }
+    Ok(())
+}
+
+/// Run the plan's worker stage only: write each partial artifact to
+/// `dir/partial-NNNNN.pdsp` for a later `pds merge`.
+fn write_partials(plan: FitPlan<'_>, dir: &Path) -> Result<()> {
+    let artifacts = plan.partials()?;
+    std::fs::create_dir_all(dir)?;
+    for (i, bytes) in artifacts.iter().enumerate() {
+        let path = dir.join(format!("partial-{i:05}.pdsp"));
+        std::fs::write(&path, bytes)?;
+        println!("wrote {} ({} bytes)", path.display(), bytes.len());
+    }
+    println!(
+        "{} worker partial(s); finalize with: pds merge --store <DIR> {}/partial-*.pdsp",
+        artifacts.len(),
+        dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_merge(args: &Args) -> Result<()> {
+    let store_dir = store_arg(args)?;
+    if args.positional.is_empty() {
+        return Err(Error::Invalid(
+            "pds merge needs the worker partial files (from --partials-out) as arguments".into(),
+        ));
+    }
+    let mut artifacts = Vec::with_capacity(args.positional.len());
+    for path in &args.positional {
+        artifacts.push(std::fs::read(path)?);
+    }
+    let mut reader = SparseStoreReader::open(Path::new(store_dir))?;
+    // the artifact envelope names the partial kind, so the task does not
+    // need to be respecified — it is whatever the workers fit
+    match peek_kind(&artifacts[0])? {
+        kind::PCA => {
+            let topk: usize = args.get_parse("topk", 5)?;
+            let report = FitPlan::pca()
+                .store(&mut reader)
+                .topk(topk)
+                .merge_partials(&artifacts)?;
+            let fit = report.pca_fit().expect("pca plan");
+            println!(
+                "merged {} pca partial(s): n={} passes: raw {} | sparse {}",
+                args.positional.len(),
+                report.n,
+                report.raw_passes,
+                report.sparse_passes
+            );
+            println!("top-{topk} eigenvalues: {:?}", fit.pca.eigenvalues);
+            for (name, secs) in report.timer.phases() {
+                println!("  {name:<10} {secs:.3} s");
+            }
+        }
+        kind::CORESET => {
+            let k: usize = args.get_parse("k", 5)?;
+            let opts = kmeans_opts(args)?;
+            let report = FitPlan::kmeans()
+                .store(&mut reader)
+                .k(k)
+                .kmeans_opts(opts)
+                .solver(Solver::Coreset)
+                .merge_partials(&artifacts)?;
+            let model = report.kmeans_model().expect("kmeans plan");
+            println!(
+                "merged {} coreset partial(s): k={k} n={} restarts={} converged={}",
+                args.positional.len(),
+                report.n,
+                opts.n_init,
+                model.result.converged
+            );
+            print_kmeans_report(&report);
+        }
+        other => {
+            return Err(Error::Invalid(format!(
+                "cannot merge partial kind {other} here (want pca or coreset worker \
+                 artifacts; the Lloyd solvers merge per-iteration inside `pds fit \
+                 --partition N`)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// Comma-separated directory list option (`--into`, `--stores`).
+fn dir_list_arg(args: &Args, name: &str) -> Result<Vec<PathBuf>> {
+    let raw = args
+        .get(name)
+        .ok_or_else(|| Error::Invalid(format!("--{name} DIR1,DIR2,... is required")))?;
+    let dirs: Vec<PathBuf> =
+        raw.split(',').filter(|s| !s.is_empty()).map(PathBuf::from).collect();
+    if dirs.is_empty() {
+        return Err(Error::Invalid(format!("--{name} DIR1,DIR2,... got no directories")));
+    }
+    Ok(dirs)
+}
+
+fn cmd_split(args: &Args) -> Result<()> {
+    let store_dir = store_arg(args)?;
+    let dests = dir_list_arg(args, "into")?;
+    let manifests = split_store(Path::new(store_dir), &dests)?;
+    println!("split {store_dir} into {} shard-group piece(s):", manifests.len());
+    for (m, dest) in manifests.iter().zip(&dests) {
+        println!(
+            "  piece {}/{}: {} — cols [{}, {}) ({} shards)",
+            m.group.index + 1,
+            m.group.count,
+            dest.display(),
+            m.start_col(),
+            m.end_col(),
+            m.shards.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_join(args: &Args) -> Result<()> {
+    let srcs = dir_list_arg(args, "stores")?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| Error::Invalid("--out DIR is required".into()))?;
+    let m = join_stores(&srcs, Path::new(out))?;
+    println!(
+        "joined {} piece(s) into {out}: n={} p={} m={} ({} shards)",
+        srcs.len(),
+        m.n,
+        m.p,
+        m.m,
+        m.shards.len()
+    );
     Ok(())
 }
 

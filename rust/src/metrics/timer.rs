@@ -42,16 +42,29 @@ impl Timer {
         self.phases.iter().map(|(_, s)| s).sum()
     }
 
-    /// `(name, seconds)` pairs in insertion order.
+    /// `(name, seconds)` pairs — in insertion order for a timer that was
+    /// only ever [`add`](Self::add)ed to, in **name order** after any
+    /// [`merge`](Self::merge) (the canonical merged order).
     pub fn phases(&self) -> &[(String, f64)] {
         &self.phases
     }
 
-    /// Merge another timer's phases into this one.
+    /// Merge another timer's phases into this one, then canonicalize the
+    /// phase list to name order.
+    ///
+    /// The sort is the merge-law fix: without it, `a.merge(&b)` and
+    /// `b.merge(&a)` reported the same totals in *different phase
+    /// orders* (whichever side received kept its insertion order), so
+    /// merged reports from distributed partials depended on merge order.
+    /// Per-phase *sums* are still floating-point accumulations — exactly
+    /// order-invariant only when the addends are exactly representable
+    /// (e.g. the integer-quarters used in the regression tests); real
+    /// wall-clock merges agree to f64 rounding.
     pub fn merge(&mut self, other: &Timer) {
         for (n, s) in &other.phases {
             self.add(n, *s);
         }
+        self.phases.sort_by(|a, b| a.0.cmp(&b.0));
     }
 }
 
@@ -89,5 +102,55 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.get("x"), 3.0);
         assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn merge_is_order_invariant() {
+        // regression for the pre-distributed-fit bug: the merged phase
+        // order followed the receiving timer's insertion order, so
+        // a⊕b and b⊕a (same totals) printed different phase lists.
+        // Values are integer quarters — exactly representable, so the
+        // sums must be bitwise equal in every merge order too.
+        let mk = |pairs: &[(&str, f64)]| {
+            let mut t = Timer::new();
+            for (n, s) in pairs {
+                t.add(n, *s);
+            }
+            t
+        };
+        let a = mk(&[("load", 1.25), ("eig", 0.5)]);
+        let b = mk(&[("accumulate", 2.75), ("load", 0.25)]);
+        let c = mk(&[("eig", 4.5), ("accumulate", 0.25)]);
+
+        let fold = |order: &[&Timer]| {
+            let mut acc = Timer::new();
+            for t in order {
+                acc.merge(t);
+            }
+            acc
+        };
+        let reference = fold(&[&a, &b, &c]);
+        for order in [[&a, &c, &b], [&b, &a, &c], [&c, &b, &a], [&c, &a, &b], [&b, &c, &a]] {
+            let got = fold(&order);
+            assert_eq!(got.phases().len(), reference.phases().len());
+            for ((n1, s1), (n2, s2)) in got.phases().iter().zip(reference.phases()) {
+                assert_eq!(n1, n2, "phase order must be canonical");
+                assert_eq!(s1.to_bits(), s2.to_bits(), "phase {n1} sum drifted");
+            }
+        }
+        // canonical order is name order
+        let names: Vec<&str> = reference.phases().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["accumulate", "eig", "load"]);
+    }
+
+    #[test]
+    fn single_timer_keeps_insertion_order() {
+        // the CLI prints phases in the order the driver timed them; only
+        // merge canonicalizes
+        let mut t = Timer::new();
+        t.add("z_load", 1.0);
+        t.add("a_eig", 2.0);
+        let names: Vec<&str> = t.phases().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["z_load", "a_eig"]);
     }
 }

@@ -1,0 +1,430 @@
+//! Split a sparse store into shard-group pieces and re-join them.
+//!
+//! A store is a directory of immutable, globally-indexed shard files plus
+//! a manifest, so distribution is pure bookkeeping: [`split_store`] deals
+//! a contiguous run of shards to each destination directory (shard files
+//! copied **byte-identical**, checksum-verified in transit) and writes
+//! each piece a v4 manifest whose `group` key records where the piece
+//! sits in the whole; [`join_stores`] verifies the pieces form exactly
+//! one whole store and reassembles it — byte-identical to the store that
+//! was split. Each piece is a complete, independently readable store
+//! ([`SparseStoreReader`](super::SparseStoreReader) streams it over its
+//! own global column range), which is what lets N workers fit their
+//! shard ranges from N directories and merge the partials
+//! ([`distributed`](crate::distributed)).
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{corrupt, invalid, Error, Result};
+
+use super::manifest::{ShardGroup, StoreManifest, MANIFEST_FILE};
+use super::Crc32;
+
+/// Copy one shard file, verifying its CRC-32 against the manifest entry
+/// in transit (a damaged source surfaces here, not at first read).
+fn copy_shard_checked(src: &Path, dest: &Path, want_crc: u32) -> Result<()> {
+    let mut from = File::open(src)
+        .map_err(|e| Error::Corrupt(format!("{}: missing shard file ({e})", src.display())))?;
+    let mut to = File::create(dest)?;
+    let mut crc = Crc32::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    loop {
+        let got = from.read(&mut buf)?;
+        if got == 0 {
+            break;
+        }
+        crc.update(&buf[..got]);
+        to.write_all(&buf[..got])?;
+    }
+    to.sync_all()?;
+    if crc.finish() != want_crc {
+        return corrupt(format!(
+            "{}: checksum mismatch while copying (computed {:08x}, manifest {want_crc:08x})",
+            src.display(),
+            crc.finish()
+        ));
+    }
+    Ok(())
+}
+
+/// Refuse to write into a directory that already holds a finished store.
+fn ensure_fresh_dir(dir: &Path) -> Result<()> {
+    if dir.join(MANIFEST_FILE).exists() {
+        return invalid(format!(
+            "{}: refusing to overwrite an existing store",
+            dir.display()
+        ));
+    }
+    std::fs::create_dir_all(dir)?;
+    Ok(())
+}
+
+/// Split the store at `src` into `dests.len()` shard-group pieces, one
+/// per destination directory, dealing the shard table into contiguous
+/// near-equal runs. Shard files are copied byte-identical (and
+/// checksum-verified in transit); each piece gets a manifest whose
+/// `group` key records its place, so [`join_stores`] — or any reader —
+/// can tell the pieces apart and put them back together. Returns the
+/// piece manifests in group order.
+///
+/// Splitting into one piece degenerates to a verified copy of the store.
+pub fn split_store(src: &Path, dests: &[PathBuf]) -> Result<Vec<StoreManifest>> {
+    let manifest = StoreManifest::load(src)?;
+    if !manifest.group.is_standalone() {
+        return invalid(format!(
+            "{}: already a shard-group piece ({} of {}); join before re-splitting",
+            src.display(),
+            manifest.group.index,
+            manifest.group.count
+        ));
+    }
+    let k = dests.len();
+    if k == 0 {
+        return invalid("split_store: need at least one destination");
+    }
+    if k > manifest.shards.len() {
+        return invalid(format!(
+            "cannot split {} shards into {k} groups (each piece needs at least one shard)",
+            manifest.shards.len()
+        ));
+    }
+    for dest in dests {
+        ensure_fresh_dir(dest)?;
+    }
+    // deal the shard table into contiguous near-equal runs
+    let base = manifest.shards.len() / k;
+    let rem = manifest.shards.len() % k;
+    let mut out = Vec::with_capacity(k);
+    let mut next = 0usize;
+    for (i, dest) in dests.iter().enumerate() {
+        let take = base + usize::from(i < rem);
+        let shards = manifest.shards[next..next + take].to_vec();
+        next += take;
+        for s in &shards {
+            copy_shard_checked(&src.join(&s.file), &dest.join(&s.file), s.crc32)?;
+        }
+        let n: usize = shards.iter().map(|s| s.n_cols).sum();
+        let group = if k == 1 {
+            ShardGroup::standalone(manifest.n)
+        } else {
+            ShardGroup {
+                index: i,
+                count: k,
+                start_col: shards[0].start_col,
+                total_n: manifest.n,
+            }
+        };
+        let piece = StoreManifest {
+            // groups need v4; a single-piece "split" is just a copy and
+            // keeps the source's (lowest capable) version
+            version: if k == 1 { manifest.version } else { 4 },
+            n,
+            group,
+            shards,
+            ..manifest.clone()
+        };
+        piece.validate()?;
+        piece.write_atomic(dest)?;
+        out.push(piece);
+    }
+    Ok(out)
+}
+
+/// Re-join shard-group pieces into one whole store at `dest`. The pieces
+/// may be given in any order; they must share a configuration and form
+/// exactly one complete group (every index present once, columns
+/// contiguous from 0 to the group total). Shard files are copied
+/// byte-identical and checksum-verified, and the joined manifest is
+/// written at the store's lowest capable version — so joining what
+/// [`split_store`] produced reconstructs the original store
+/// byte-for-byte.
+pub fn join_stores(srcs: &[PathBuf], dest: &Path) -> Result<StoreManifest> {
+    if srcs.is_empty() {
+        return invalid("join_stores: need at least one source");
+    }
+    let mut pieces: Vec<(PathBuf, StoreManifest)> = Vec::with_capacity(srcs.len());
+    for src in srcs {
+        pieces.push((src.clone(), StoreManifest::load(src)?));
+    }
+    let first = &pieces[0].1;
+    for (dir, m) in &pieces[1..] {
+        let same = m.p == first.p
+            && m.p_orig == first.p_orig
+            && m.m == first.m
+            && m.gamma.to_bits() == first.gamma.to_bits()
+            && m.transform == first.transform
+            && m.seed == first.seed
+            && m.preconditioned == first.preconditioned
+            && m.scheme == first.scheme
+            && m.precision == first.precision
+            && m.shard_cols == first.shard_cols;
+        if !same {
+            return invalid(format!(
+                "{}: store configuration differs from {} (cannot join stores that were \
+                 not split from the same store)",
+                dir.display(),
+                pieces[0].0.display()
+            ));
+        }
+        if m.group.count != first.group.count || m.group.total_n != first.group.total_n {
+            return invalid(format!(
+                "{}: group shape {} of {} ({} cols) differs from {} of {} ({} cols)",
+                dir.display(),
+                m.group.index,
+                m.group.count,
+                m.group.total_n,
+                first.group.index,
+                first.group.count,
+                first.group.total_n
+            ));
+        }
+    }
+    if pieces.len() != first.group.count {
+        return invalid(format!(
+            "join_stores: got {} pieces of a {}-piece group",
+            pieces.len(),
+            first.group.count
+        ));
+    }
+    pieces.sort_by_key(|(_, m)| m.group.index);
+    let mut expected_start = 0usize;
+    for (i, (dir, m)) in pieces.iter().enumerate() {
+        if m.group.index != i {
+            return invalid(format!(
+                "join_stores: group piece {i} is {} (duplicate or missing piece)",
+                if m.group.index < i { "duplicated" } else { "missing" }
+            ));
+        }
+        if m.group.start_col != expected_start {
+            return invalid(format!(
+                "{}: piece {i} starts at column {} (expected {expected_start})",
+                dir.display(),
+                m.group.start_col
+            ));
+        }
+        expected_start += m.n;
+    }
+    if expected_start != first.group.total_n {
+        return invalid(format!(
+            "join_stores: pieces cover {expected_start} cols but the group holds {}",
+            first.group.total_n
+        ));
+    }
+    ensure_fresh_dir(dest)?;
+    let mut shards = Vec::new();
+    for (dir, m) in &pieces {
+        for s in &m.shards {
+            copy_shard_checked(&dir.join(&s.file), &dest.join(&s.file), s.crc32)?;
+            shards.push(s.clone());
+        }
+    }
+    let joined = StoreManifest {
+        // lowest capable version, matching what the writer would emit —
+        // join(split(store)) is byte-identical to the original store
+        version: if first.precision == crate::sparse::Precision::F32 { 3 } else { 2 },
+        n: first.group.total_n,
+        group: ShardGroup::standalone(first.group.total_n),
+        shards,
+        ..first.clone()
+    };
+    joined.validate()?;
+    joined.write_atomic(dest)?;
+    Ok(joined)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::sampling::{Sparsifier, SparsifyConfig};
+    use crate::store::{SparseStoreReader, SparseStoreWriter};
+    use crate::transform::TransformKind;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("pds_group_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    /// A finished 3-shard store (25 columns, shard_cols = 10).
+    fn build_store(name: &str, seed: u64) -> PathBuf {
+        let scfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed };
+        let sp = Sparsifier::new(16, scfg).unwrap();
+        let mut rng = Pcg64::seed(seed ^ 0x5EED);
+        let x = Mat::from_fn(16, 25, |_, _| rng.normal());
+        let dir = tmpdir(name);
+        let mut writer = SparseStoreWriter::create(&dir, &sp, scfg, true, 10).unwrap();
+        writer.append(sp.compress_chunk(&x, 0).unwrap()).unwrap();
+        writer.finish().unwrap();
+        dir
+    }
+
+    fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+        let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (e.file_name().to_string_lossy().into_owned(), std::fs::read(e.path()).unwrap())
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    #[test]
+    fn split_join_round_trip_is_byte_identical() {
+        let src = build_store("roundtrip", 7);
+        let original = dir_bytes(&src);
+        for k in 1..=3usize {
+            let dests: Vec<PathBuf> =
+                (0..k).map(|i| tmpdir(&format!("rt_{k}_piece{i}"))).collect();
+            let pieces = split_store(&src, &dests).unwrap();
+            assert_eq!(pieces.len(), k);
+            // every piece is a complete, readable store over its range
+            let mut covered = 0usize;
+            for (dest, piece) in dests.iter().zip(&pieces) {
+                let mut reader = SparseStoreReader::open(dest).unwrap();
+                assert_eq!(reader.manifest().group, piece.group);
+                let mut col = piece.start_col();
+                while let Some(c) = reader.next_chunk().unwrap() {
+                    assert_eq!(c.start_col(), col);
+                    col += c.n();
+                }
+                assert_eq!(col, piece.end_col());
+                covered += piece.n;
+            }
+            assert_eq!(covered, 25);
+
+            // join (in scrambled order) reconstructs the original bytes
+            let mut scrambled = dests.clone();
+            scrambled.reverse();
+            let joined = tmpdir(&format!("rt_{k}_joined"));
+            let manifest = join_stores(&scrambled, &joined).unwrap();
+            assert_eq!(manifest.n, 25);
+            assert!(manifest.group.is_standalone());
+            assert_eq!(dir_bytes(&joined), original, "k = {k}");
+
+            for d in dests.iter().chain([&joined]) {
+                std::fs::remove_dir_all(d).ok();
+            }
+        }
+        std::fs::remove_dir_all(&src).ok();
+    }
+
+    #[test]
+    fn pieces_stream_bitwise_identical_columns() {
+        let src = build_store("bitwise", 11);
+        let mut whole = SparseStoreReader::open(&src).unwrap();
+        let mut cols: Vec<(Vec<u32>, Vec<u64>)> = Vec::new();
+        while let Some(c) = whole.next_chunk().unwrap() {
+            for i in 0..c.n() {
+                cols.push((
+                    c.col_indices(i).to_vec(),
+                    c.col_values(i).iter().map(|v| v.to_bits()).collect(),
+                ));
+            }
+        }
+        let dests = [tmpdir("bw_a"), tmpdir("bw_b")];
+        split_store(&src, &dests.to_vec()).unwrap();
+        for dest in &dests {
+            let mut reader = SparseStoreReader::open(dest).unwrap();
+            // a piece also honors seek within its own range
+            let start = reader.manifest().start_col();
+            reader.seek_to_col(start).unwrap();
+            assert!(reader.seek_to_col(26).is_err());
+            let mut col = start;
+            while let Some(c) = reader.next_chunk().unwrap() {
+                for i in 0..c.n() {
+                    assert_eq!(c.col_indices(i), &cols[col + i].0[..]);
+                    let bits: Vec<u64> = c.col_values(i).iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bits, cols[col + i].1);
+                }
+                col += c.n();
+            }
+            assert_eq!(col, reader.manifest().end_col());
+        }
+        for d in dests.iter().chain([&src]) {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn join_rejects_wrong_piece_sets() {
+        let src = build_store("wrongset", 3);
+        let dests = vec![tmpdir("ws_a"), tmpdir("ws_b"), tmpdir("ws_c")];
+        split_store(&src, &dests).unwrap();
+
+        // missing piece
+        let out = tmpdir("ws_missing");
+        assert!(matches!(
+            join_stores(&dests[..2].to_vec(), &out),
+            Err(Error::Invalid(_))
+        ));
+        // duplicate piece
+        let dup = vec![dests[0].clone(), dests[1].clone(), dests[1].clone()];
+        assert!(matches!(join_stores(&dup, &out), Err(Error::Invalid(_))));
+
+        // a piece from a different store (other seed ⇒ other config)
+        let other_src = build_store("wrongset_other", 4);
+        let other_dests = vec![tmpdir("ws_oa"), tmpdir("ws_ob"), tmpdir("ws_oc")];
+        split_store(&other_src, &other_dests).unwrap();
+        let mixed = vec![dests[0].clone(), dests[1].clone(), other_dests[2].clone()];
+        match join_stores(&mixed, &out) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("configuration"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+
+        for d in dests.iter().chain(&other_dests).chain([&src, &other_src]) {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn copies_verify_checksums_and_refuse_to_clobber() {
+        let src = build_store("ccorrupt", 5);
+        // flip a byte deep in a shard: split must surface Corrupt
+        let manifest = StoreManifest::load(&src).unwrap();
+        let shard = src.join(&manifest.shards[1].file);
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let last = bytes.len() - 3;
+        bytes[last] ^= 0x20;
+        std::fs::write(&shard, &bytes).unwrap();
+        let dests = vec![tmpdir("cc_a"), tmpdir("cc_b")];
+        match split_store(&src, &dests) {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        for d in &dests {
+            std::fs::remove_dir_all(d).ok();
+        }
+
+        // an intact store refuses to split onto an existing store, into
+        // zero dests, or into more pieces than shards
+        let good = build_store("cc_good", 6);
+        let other = build_store("cc_other", 8);
+        assert!(matches!(
+            split_store(&good, &[other.clone()]),
+            Err(Error::Invalid(_))
+        ));
+        assert!(matches!(split_store(&good, &[]), Err(Error::Invalid(_))));
+        let many: Vec<PathBuf> = (0..4).map(|i| tmpdir(&format!("cc_many{i}"))).collect();
+        assert!(matches!(split_store(&good, &many), Err(Error::Invalid(_))));
+
+        // splitting a piece again is refused (join first)
+        let halves = vec![tmpdir("cc_h0"), tmpdir("cc_h1")];
+        split_store(&good, &halves).unwrap();
+        let sub = vec![tmpdir("cc_s0")];
+        match split_store(&halves[0], &sub) {
+            Err(Error::Invalid(msg)) => assert!(msg.contains("already"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        for d in halves.iter().chain(&sub).chain([&src, &good, &other]) {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+}

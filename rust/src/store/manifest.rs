@@ -31,7 +31,15 @@ pub const MANIFEST_FILE: &str = "manifest.pdsm";
 ///   a v2 reader would mis-parse — hence the bump. The writer emits the
 ///   **lowest capable** version: `f64` stores stay v2 (byte-identical to
 ///   pre-precision releases); a missing key on read means `f64`.
-const MANIFEST_VERSION: u32 = 3;
+/// * v4 — adds the `group` key (`<index> <count> <start_col> <total_n>`):
+///   the store is one contiguous piece of a larger logical store that was
+///   [`split`](super::split_store) across directories. Shard entries keep
+///   their **global** indices and start columns (shard files are copied
+///   byte-identical), so a group piece's shard walk does not begin at
+///   column 0 — which a v3 reader would reject as a gap; hence the bump.
+///   Ungrouped stores omit the key and stay at their previous lowest
+///   capable version.
+const MANIFEST_VERSION: u32 = 4;
 
 /// Per-shard record: boundaries in the global column order plus the
 /// CRC-32 of the entire shard file.
@@ -47,6 +55,34 @@ pub struct ShardEntry {
     pub crc32: u32,
     /// Shard file name, relative to the store directory.
     pub file: String,
+}
+
+/// Shard-group membership (v4): which contiguous piece of a split
+/// logical store this manifest describes. Ungrouped stores carry the
+/// [`standalone`](Self::standalone) value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardGroup {
+    /// This piece's position among the group's pieces.
+    pub index: usize,
+    /// Total pieces in the group (`1` = a standalone store).
+    pub count: usize,
+    /// Global column index of this piece's first sample (shard entries
+    /// keep global coordinates, so the piece's shard walk starts here).
+    pub start_col: usize,
+    /// Total samples across the whole logical store.
+    pub total_n: usize,
+}
+
+impl ShardGroup {
+    /// The group value of an ordinary, un-split store holding `n` samples.
+    pub fn standalone(n: usize) -> Self {
+        ShardGroup { index: 0, count: 1, start_col: 0, total_n: n }
+    }
+
+    /// Whether this is the whole logical store (not a split piece).
+    pub fn is_standalone(&self) -> bool {
+        self.count == 1
+    }
 }
 
 /// Parsed sparse-store manifest — everything a reader needs to stream
@@ -85,6 +121,9 @@ pub struct StoreManifest {
     /// Target columns per shard; every shard except the last holds
     /// exactly this many.
     pub shard_cols: usize,
+    /// Shard-group membership (v4 key; [`ShardGroup::standalone`] when
+    /// absent — every earlier version is a whole store).
+    pub group: ShardGroup,
     /// Shard table in index order.
     pub shards: Vec<ShardEntry>,
 }
@@ -102,13 +141,26 @@ impl StoreManifest {
         (self.n as u64) * (self.m as u64) * (4 + self.precision.val_bytes() as u64)
     }
 
-    /// Index of the shard containing global column `col`.
+    /// Global column index of this store's first sample (`0` unless the
+    /// store is a split-group piece).
+    pub fn start_col(&self) -> usize {
+        self.group.start_col
+    }
+
+    /// One past the global column index of this store's last sample.
+    pub fn end_col(&self) -> usize {
+        self.group.start_col + self.n
+    }
+
+    /// Position (into [`shards`](Self::shards)) of the shard containing
+    /// global column `col`.
     pub fn shard_for_col(&self, col: usize) -> Option<usize> {
-        if col >= self.n || self.shard_cols == 0 {
+        if col < self.start_col() || col >= self.end_col() || self.shard_cols == 0 {
             return None;
         }
-        // fixed stride: every shard but the last holds exactly shard_cols
-        let idx = col / self.shard_cols;
+        // fixed stride: every shard but the last holds exactly shard_cols,
+        // and a group piece's first shard is stride-aligned (validated)
+        let idx = col / self.shard_cols - self.group.start_col / self.shard_cols;
         if idx < self.shards.len() {
             Some(idx)
         } else {
@@ -137,6 +189,15 @@ impl StoreManifest {
             out.push_str(&format!("precision = {}\n", self.precision.name()));
         }
         out.push_str(&format!("shard_cols = {}\n", self.shard_cols));
+        if self.version >= 4 {
+            // the key exists from v4 on; a v3-or-earlier store is always
+            // a whole (standalone) store and stays byte-identical
+            let g = &self.group;
+            out.push_str(&format!(
+                "group = {} {} {} {}\n",
+                g.index, g.count, g.start_col, g.total_n
+            ));
+        }
         out.push_str(&format!("shard_count = {}\n", self.shards.len()));
         for s in &self.shards {
             out.push_str(&format!(
@@ -210,6 +271,13 @@ impl StoreManifest {
             // v3 writers that chose to omit it) are all f64
             None => Precision::F64,
         };
+        let n = lookup_num(&kv, "n")? as usize;
+        let group = match kv.iter().find(|(k, _)| k == "group") {
+            Some((_, v)) => parse_group_value(v)?,
+            // the key is optional at every version: its absence always
+            // means "the whole store"
+            None => ShardGroup::standalone(n),
+        };
         let shard_count = lookup_num(&kv, "shard_count")? as usize;
         if shard_count != shards.len() {
             return corrupt(format!(
@@ -223,7 +291,7 @@ impl StoreManifest {
             p: lookup_num(&kv, "p")? as usize,
             p_orig: lookup_num(&kv, "p_orig")? as usize,
             m: lookup_num(&kv, "m")? as usize,
-            n: lookup_num(&kv, "n")? as usize,
+            n,
             gamma,
             transform,
             seed: lookup_num(&kv, "seed")?,
@@ -231,6 +299,7 @@ impl StoreManifest {
             scheme,
             precision,
             shard_cols: lookup_num(&kv, "shard_cols")? as usize,
+            group,
             shards,
         };
         manifest.validate()?;
@@ -265,10 +334,61 @@ impl StoreManifest {
                 self.preconditioned
             ));
         }
-        let mut expected_start = 0usize;
+        let g = &self.group;
+        if g.count == 0 || g.index >= g.count {
+            return corrupt(format!(
+                "manifest: group index {} out of range for count {}",
+                g.index, g.count
+            ));
+        }
+        if g.count > 1 && self.version < 4 {
+            return corrupt(format!(
+                "manifest: shard groups require version >= 4 (got {})",
+                self.version
+            ));
+        }
+        if g.count == 1 && (g.start_col != 0 || g.total_n != self.n) {
+            return corrupt(format!(
+                "manifest: standalone store claims group columns [{}, {}) of {}",
+                g.start_col,
+                g.start_col + self.n,
+                g.total_n
+            ));
+        }
+        if g.start_col % self.shard_cols != 0 {
+            return corrupt(format!(
+                "manifest: group start {} is not aligned to the shard stride {}",
+                g.start_col, self.shard_cols
+            ));
+        }
+        if g.index == 0 && g.start_col != 0 {
+            return corrupt(format!("manifest: group piece 0 starts at column {}", g.start_col));
+        }
+        match g.start_col.checked_add(self.n) {
+            Some(end) if end <= g.total_n => {
+                if g.index + 1 == g.count && end != g.total_n {
+                    return corrupt(format!(
+                        "manifest: final group piece ends at {end} but the group holds {}",
+                        g.total_n
+                    ));
+                }
+            }
+            _ => {
+                return corrupt(format!(
+                    "manifest: group piece columns [{}, {} + {}) exceed total_n = {}",
+                    g.start_col, g.start_col, self.n, g.total_n
+                ));
+            }
+        }
+        let first_index = g.start_col / self.shard_cols;
+        let mut expected_start = g.start_col;
         for (i, s) in self.shards.iter().enumerate() {
-            if s.index != i {
-                return corrupt(format!("manifest: shard {i} has index {}", s.index));
+            if s.index != first_index + i {
+                return corrupt(format!(
+                    "manifest: shard {i} has index {} (expected {})",
+                    s.index,
+                    first_index + i
+                ));
             }
             if s.start_col != expected_start {
                 return corrupt(format!(
@@ -290,11 +410,23 @@ impl StoreManifest {
             }
             expected_start += s.n_cols;
         }
-        if expected_start != self.n {
+        if expected_start != self.end_col() {
             return corrupt(format!(
-                "manifest: shards cover {expected_start} cols but n = {}",
+                "manifest: shards cover {} cols but n = {}",
+                expected_start - g.start_col,
                 self.n
             ));
+        }
+        // a short final shard is only ever the *globally* last shard — a
+        // group piece that ends mid-store must end on a full shard
+        if let Some(last) = self.shards.last() {
+            if last.n_cols != self.shard_cols && expected_start != g.total_n {
+                return corrupt(format!(
+                    "manifest: short shard {} ends at column {expected_start}, not at the \
+                     group's total {}",
+                    last.index, g.total_n
+                ));
+            }
         }
         Ok(())
     }
@@ -340,6 +472,24 @@ fn lookup_num(kv: &[(String, String)], name: &str) -> Result<u64> {
         .map_err(|_| Error::Corrupt(format!("manifest: bad integer {name} = {v:?}")))
 }
 
+/// Parse a `group = <index> <count> <start_col> <total_n>` value.
+fn parse_group_value(value: &str) -> Result<ShardGroup> {
+    let fields: Vec<&str> = value.split_whitespace().collect();
+    if fields.len() != 4 {
+        return corrupt(format!("manifest: group needs 4 fields, got {}", fields.len()));
+    }
+    let num = |s: &str, what: &str| -> Result<usize> {
+        s.parse()
+            .map_err(|_| Error::Corrupt(format!("manifest: bad group {what} {s:?}")))
+    };
+    Ok(ShardGroup {
+        index: num(fields[0], "index")?,
+        count: num(fields[1], "count")?,
+        start_col: num(fields[2], "start_col")?,
+        total_n: num(fields[3], "total_n")?,
+    })
+}
+
 /// Parse one `shard = <index> <start_col> <n_cols> <crc32-hex> <file>`
 /// value.
 fn parse_shard_line(value: &str, lineno: usize) -> Result<ShardEntry> {
@@ -382,6 +532,7 @@ mod tests {
             scheme: Scheme::Precond,
             precision: Precision::F64,
             shard_cols: 10,
+            group: ShardGroup::standalone(25),
             shards: vec![
                 ShardEntry {
                     index: 0,
@@ -566,6 +717,101 @@ mod tests {
         assert!(StoreManifest::parse(&badcount).is_err());
         let nocrc = sample().to_text().replace("deadbeef", "zzzz");
         assert!(StoreManifest::parse(&nocrc).is_err());
+    }
+
+    /// The `sample()` store split after its second shard: piece
+    /// `which ∈ {0, 1}` of a two-piece group.
+    fn group_piece(which: usize) -> StoreManifest {
+        let mut m = sample();
+        m.version = 4;
+        if which == 0 {
+            m.shards.truncate(2);
+            m.n = 20;
+            m.group = ShardGroup { index: 0, count: 2, start_col: 0, total_n: 25 };
+        } else {
+            m.shards.drain(..2);
+            m.n = 5;
+            m.group = ShardGroup { index: 1, count: 2, start_col: 20, total_n: 25 };
+        }
+        m
+    }
+
+    #[test]
+    fn group_piece_roundtrips_with_global_coordinates() {
+        for which in [0, 1] {
+            let m = group_piece(which);
+            m.validate().unwrap();
+            let text = m.to_text();
+            assert!(text.contains(&format!(
+                "group = {} 2 {} 25",
+                m.group.index, m.group.start_col
+            )));
+            let parsed = StoreManifest::parse(&text).unwrap();
+            assert_eq!(parsed.group, m.group);
+            assert_eq!(parsed.shards, m.shards);
+        }
+        // piece 1 serves exactly its own global column range
+        let p1 = group_piece(1);
+        assert_eq!((p1.start_col(), p1.end_col()), (20, 25));
+        assert_eq!(p1.shard_for_col(19), None);
+        assert_eq!(p1.shard_for_col(20), Some(0));
+        assert_eq!(p1.shard_for_col(24), Some(0));
+        assert_eq!(p1.shard_for_col(25), None);
+        // pre-v4 manifests (no group key) are standalone
+        assert_eq!(
+            StoreManifest::parse(&sample().to_text()).unwrap().group,
+            ShardGroup::standalone(25)
+        );
+        assert!(!sample().to_text().contains("group"));
+    }
+
+    #[test]
+    fn group_validation_rejects_inconsistent_pieces() {
+        // grouped store under a pre-group version
+        let mut old = group_piece(1);
+        old.version = 3;
+        assert!(matches!(old.validate(), Err(Error::Corrupt(_))));
+
+        // group start not aligned to the shard stride
+        let mut misaligned = group_piece(1);
+        misaligned.group.start_col = 15;
+        assert!(misaligned.validate().is_err());
+
+        // piece 0 must start at column 0
+        let mut bad_first = group_piece(0);
+        bad_first.group = ShardGroup { index: 0, count: 2, start_col: 20, total_n: 45 };
+        assert!(bad_first.validate().is_err());
+
+        // final piece must end at the group total
+        let mut short_total = group_piece(1);
+        short_total.group.total_n = 30;
+        assert!(short_total.validate().is_err());
+
+        // a short shard that is not globally last
+        let mut mid_short = group_piece(0);
+        mid_short.shards.truncate(1);
+        mid_short.shards[0].n_cols = 9;
+        mid_short.n = 9;
+        match mid_short.validate() {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("short shard"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+
+        // index out of range / zero count
+        let mut bad_index = group_piece(1);
+        bad_index.group.index = 2;
+        assert!(bad_index.validate().is_err());
+
+        // standalone manifests must not claim partial coverage
+        let mut lying = sample();
+        lying.group.total_n = 40;
+        assert!(lying.validate().is_err());
+
+        // malformed group lines are corrupt, not panics
+        let text = group_piece(1).to_text().replace("group = 1 2 20 25", "group = 1 2 20");
+        assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
+        let text = group_piece(1).to_text().replace("group = 1 2 20 25", "group = 1 2 x 25");
+        assert!(matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))));
     }
 
     #[test]

@@ -37,12 +37,19 @@
 //!   [`SparsifyConfig`](crate::sampling::SparsifyConfig) needed to rebuild
 //!   the matching [`Sparsifier`](crate::sampling::Sparsifier) for center /
 //!   component unmixing).
+//! * [`split_store`] / [`join_stores`] — deal a store's shards across
+//!   directories as shard-group pieces (v4 manifests, shard files
+//!   byte-identical) and re-join them; each piece reads as a complete
+//!   store over its own global column range, which is the on-disk side
+//!   of the [`distributed`](crate::distributed) partitioned fit.
 
+mod group;
 mod manifest;
 mod reader;
 mod writer;
 
-pub use manifest::{ShardEntry, StoreManifest, MANIFEST_FILE};
+pub use group::{join_stores, split_store};
+pub use manifest::{ShardEntry, ShardGroup, StoreManifest, MANIFEST_FILE};
 pub use reader::SparseStoreReader;
 pub use writer::SparseStoreWriter;
 

@@ -146,25 +146,28 @@ impl SparseStoreReader {
     pub fn position(&self) -> usize {
         match self.manifest.shards.get(self.shard) {
             Some(s) => s.start_col + self.col_in_shard,
-            None => self.manifest.n,
+            None => self.manifest.end_col(),
         }
     }
 
-    /// Resume a pass at global column `col` (0 ≤ `col` ≤ `n`; `col = n`
-    /// positions at end-of-pass). This is the crash-resume hook: a
+    /// Resume a pass at global column `col` (within the store's column
+    /// range — `[0, n]` for a whole store, the group piece's global range
+    /// for a split piece; the range's end positions at end-of-pass). This
+    /// is the crash-resume hook: a
     /// consumer that checkpoints [`position`](Self::position) can
     /// continue without rereading earlier shards.
     pub fn seek_to_col(&mut self, col: usize) -> Result<()> {
         self.handle = None;
-        if col == self.manifest.n {
+        if col == self.manifest.end_col() {
             self.shard = self.manifest.shards.len();
             self.col_in_shard = 0;
             return Ok(());
         }
         let Some(idx) = self.manifest.shard_for_col(col) else {
             return invalid(format!(
-                "seek_to_col: column {col} out of range (store holds {})",
-                self.manifest.n
+                "seek_to_col: column {col} out of range (store holds columns [{}, {}))",
+                self.manifest.start_col(),
+                self.manifest.end_col()
             ));
         };
         self.shard = idx;

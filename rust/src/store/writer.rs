@@ -14,7 +14,7 @@ use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
 use crate::sparse::{Precision, SparseChunk};
 use crate::transform::TransformKind;
 
-use super::manifest::{ShardEntry, StoreManifest, MANIFEST_FILE};
+use super::manifest::{ShardEntry, ShardGroup, StoreManifest, MANIFEST_FILE};
 use super::{shard_file_name, Crc32, SHARD_MAGIC, SHARD_VERSION, SHARD_VERSION_F32};
 
 /// Serialization block size (entries per `write_all`) — bounds the
@@ -355,6 +355,7 @@ impl SparseStoreWriter {
             scheme: self.scheme,
             precision: self.precision,
             shard_cols: self.shard_cols,
+            group: ShardGroup::standalone(self.next_col),
             shards: std::mem::take(&mut self.shards),
         };
         manifest.validate()?;

@@ -49,10 +49,24 @@ fn root_seed() -> u64 {
     std::env::var("PDS_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xDEFA_17)
 }
 
-/// Run `body` over `cases` generated inputs. Panics propagate with a
-/// header identifying the property, case index and root seed.
+/// Case-count override for the whole property-test run: `PDS_PROP_CASES`
+/// replaces every `forall` call's `cases` argument (the CI property job
+/// sets it high; local runs keep the in-tree defaults). Zero or
+/// non-numeric values are ignored.
+fn case_override() -> Option<usize> {
+    std::env::var("PDS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|&n: &usize| n > 0)
+}
+
+/// Run `body` over `cases` generated inputs (or `PDS_PROP_CASES` inputs
+/// when that env var is set — every suite is case-count tunable without
+/// touching call sites). Panics propagate with a header identifying the
+/// property, case index and root seed.
 pub fn forall(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
     let root = root_seed();
+    let cases = case_override().unwrap_or(cases);
     for case in 0..cases {
         let rng = Pcg64::seed_stream(root, case as u64 ^ 0xF0F0);
         let mut g = Gen { rng, case };
@@ -65,6 +79,88 @@ pub fn forall(name: &str, cases: usize, mut body: impl FnMut(&mut Gen)) {
             std::panic::resume_unwind(err);
         }
     }
+}
+
+/// Generic merge-law checker for mergeable partial-fit states. Given a
+/// pool of `items` (each one partial's worth of accumulated state), it
+/// asserts the three laws every distributed fold relies on:
+///
+/// 1. **Identity element**: merging `identity()` into any item (and any
+///    item into a fresh identity) leaves the fold result unchanged.
+/// 2. **Order invariance**: merging the items in several seeded
+///    permutations produces equal results.
+/// 3. **Partition invariance**: pre-merging random contiguous chunkings
+///    of the item list, then merging the chunk results, equals the flat
+///    merge.
+///
+/// `merge` folds its second argument into the first (the checked
+/// `PartialFit::merge` shape — a failed merge is a panic here, since the
+/// pool is constructed mergeable). `eq` decides result equality: pass a
+/// bitwise comparison for exact folds (per-shard maps, integer counts)
+/// and a tolerance for float-direct accumulators, where permuting ≥ 3
+/// items legitimately re-associates the sums.
+///
+/// The laws are exercised under [`forall`], so the permutations and
+/// chunkings are seeded, replayable, and case-count tunable via
+/// `PDS_PROP_CASES`.
+pub fn assert_mergeable<T: Clone>(
+    name: &str,
+    items: &[T],
+    identity: impl Fn() -> T,
+    merge: impl Fn(&mut T, &T),
+    eq: impl Fn(&T, &T) -> bool,
+) {
+    assert!(!items.is_empty(), "assert_mergeable({name}): need at least one item");
+    let fold = |order: &[usize]| -> T {
+        let mut acc = identity();
+        for &i in order {
+            merge(&mut acc, &items[i]);
+        }
+        acc
+    };
+    let reference = fold(&(0..items.len()).collect::<Vec<_>>());
+
+    // law 1: identity element on both sides
+    let mut left = identity();
+    merge(&mut left, &reference);
+    assert!(eq(&left, &reference), "assert_mergeable({name}): identity ⊕ x != x");
+    let mut right = reference.clone();
+    merge(&mut right, &identity());
+    assert!(eq(&right, &reference), "assert_mergeable({name}): x ⊕ identity != x");
+
+    forall(name, 12, |g| {
+        // law 2: order invariance across a seeded permutation
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = g.int(0, i as i64) as usize;
+            order.swap(i, j);
+        }
+        let permuted = fold(&order);
+        assert!(
+            eq(&permuted, &reference),
+            "assert_mergeable({name}): merge order {order:?} changed the result"
+        );
+
+        // law 3: partition invariance across a random contiguous chunking
+        // (pre-merge each chunk, then merge the chunk results)
+        let mut bounds = vec![0usize];
+        while *bounds.last().unwrap() < items.len() {
+            let lo = *bounds.last().unwrap();
+            bounds.push(g.int(lo as i64 + 1, items.len() as i64) as usize);
+        }
+        let mut acc = identity();
+        for w in bounds.windows(2) {
+            let mut part = identity();
+            for i in w[0]..w[1] {
+                merge(&mut part, &items[i]);
+            }
+            merge(&mut acc, &part);
+        }
+        assert!(
+            eq(&acc, &reference),
+            "assert_mergeable({name}): partition {bounds:?} changed the result"
+        );
+    });
 }
 
 #[cfg(test)]
@@ -90,5 +186,54 @@ mod tests {
         let mut second = Vec::new();
         forall("det_b", 5, |g| second.push(g.int(0, 1000)));
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn mergeable_accepts_a_lawful_monoid() {
+        // (Vec of u64 counters, element-wise +) is exactly mergeable
+        let items: Vec<Vec<u64>> =
+            (0..6).map(|i| vec![i as u64, 10 + i as u64, 100 * i as u64]).collect();
+        assert_mergeable(
+            "counter_monoid",
+            &items,
+            || vec![0u64; 3],
+            |a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+            },
+            |a, b| a == b,
+        );
+    }
+
+    #[test]
+    fn mergeable_rejects_an_order_dependent_merge() {
+        // "keep the last seen" is not commutative — the checker must
+        // catch it on some permutation
+        let items: Vec<i64> = vec![1, 2, 3, 4];
+        let result = std::panic::catch_unwind(|| {
+            assert_mergeable(
+                "last_wins",
+                &items,
+                || 0i64,
+                |a, b| {
+                    if *b != 0 {
+                        *a = *b;
+                    }
+                },
+                |a, b| a == b,
+            );
+        });
+        assert!(result.is_err(), "order-dependent merge must be rejected");
+    }
+
+    #[test]
+    fn mergeable_rejects_a_missing_identity() {
+        // a nonzero "identity" breaks law 1
+        let items: Vec<i64> = vec![5, 7];
+        let result = std::panic::catch_unwind(|| {
+            assert_mergeable("bad_identity", &items, || 1i64, |a, b| *a += *b, |a, b| a == b);
+        });
+        assert!(result.is_err(), "non-neutral identity must be rejected");
     }
 }

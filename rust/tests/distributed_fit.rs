@@ -1,0 +1,278 @@
+//! Distributed-fit integration: N workers fit shard ranges of a sparse
+//! store (possibly dealt across N directories via `split_store`) and a
+//! coordinator merges the partials — bit-identical to the single-worker
+//! fit at every partition count and merge order for exact f64 folds, and
+//! within a documented inertia tolerance for the coreset solver.
+
+use std::path::PathBuf;
+
+use pds::coordinator::{FitPlan, MatSource, Solver, StreamConfig};
+use pds::error::Error;
+use pds::kmeans::KmeansOpts;
+use pds::rng::Pcg64;
+use pds::sampling::SparsifyConfig;
+use pds::store::{split_store, SparseStoreReader};
+use pds::transform::TransformKind;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("pds_dist_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Compress `data` (p × n) into a fresh store with the given shard size.
+fn build_store(name: &str, data: &pds::linalg::Mat, shard_cols: usize, seed: u64) -> PathBuf {
+    let scfg = SparsifyConfig { gamma: 0.4, transform: TransformKind::Hadamard, seed };
+    let dir = tmpdir(name);
+    let mut src = MatSource::new(data, 64);
+    FitPlan::compress()
+        .stream(&mut src, scfg)
+        .store_dir(&dir)
+        .shard_cols(shard_cols)
+        .stream_config(StreamConfig { workers: 2, ..Default::default() })
+        .run()
+        .unwrap();
+    dir
+}
+
+/// Everything a PCA fit computes, as raw bits.
+fn pca_bits(report: &pds::coordinator::FitReport) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+    let fit = report.pca_fit().expect("pca plan");
+    (
+        fit.pca.eigenvalues.iter().map(|v| v.to_bits()).collect(),
+        fit.pca.components.as_slice().iter().map(|v| v.to_bits()).collect(),
+        fit.mean.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+/// Everything a K-means fit computes, as raw bits.
+fn km_bits(report: &pds::coordinator::FitReport) -> (Vec<u32>, u64, Vec<u64>, Vec<u64>) {
+    let m = report.kmeans_model().expect("kmeans plan");
+    (
+        m.result.assign.clone(),
+        m.result.objective.to_bits(),
+        m.result.centers.as_slice().iter().map(|v| v.to_bits()).collect(),
+        report.center_bound.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn partitioned_pca_is_invariant_across_partitions_directories_and_merge_orders() {
+    let mut rng = Pcg64::seed(51);
+    let d = pds::data::spiked(32, 300, &[8.0, 4.0], false, &mut rng);
+    let dir = build_store("pca", &d.data, 50, 5); // 6 shards
+
+    // reference: the one-worker distributed fit
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let base = FitPlan::pca().store(&mut reader).topk(2).partition(1).run().unwrap();
+    assert_eq!(base.raw_passes, 0, "distributed fit reads no raw data");
+    assert_eq!(base.n, 300);
+    let want = pca_bits(&base);
+
+    // every partition count folds the same per-shard subtotals in the
+    // same global shard order — bitwise identical
+    for parts in [2usize, 3, 6] {
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        let got = FitPlan::pca().store(&mut reader).topk(2).partition(parts).run().unwrap();
+        assert_eq!(pca_bits(&got), want, "partition({parts})");
+    }
+
+    // worker artifacts round-trip through files and merge in any order
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let artifacts = FitPlan::pca().store(&mut reader).topk(2).partition(3).partials().unwrap();
+    assert_eq!(artifacts.len(), 3);
+    let art_dir = tmpdir("pca_artifacts");
+    std::fs::create_dir_all(&art_dir).unwrap();
+    let mut from_disk = Vec::new();
+    for (i, bytes) in artifacts.iter().enumerate() {
+        let path = art_dir.join(format!("partial-{i:05}.pdsp"));
+        std::fs::write(&path, bytes).unwrap();
+        from_disk.push(std::fs::read(&path).unwrap());
+    }
+    for rot in 0..from_disk.len() {
+        let mut order = from_disk.clone();
+        order.rotate_left(rot);
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        let merged = FitPlan::pca().store(&mut reader).topk(2).merge_partials(&order).unwrap();
+        assert_eq!(merged.raw_passes, 0);
+        assert_eq!(pca_bits(&merged), want, "merge order rotated by {rot}");
+    }
+
+    // the real N-directory story: deal the store across 3 directories,
+    // let each "worker" fit only its own piece, merge on the full store
+    let pieces = vec![tmpdir("pca_w0"), tmpdir("pca_w1"), tmpdir("pca_w2")];
+    split_store(&dir, &pieces).unwrap();
+    let mut worker_artifacts = Vec::new();
+    for piece in &pieces {
+        let mut piece_reader = SparseStoreReader::open(piece).unwrap();
+        let mut arts = FitPlan::pca().store(&mut piece_reader).topk(2).partials().unwrap();
+        assert_eq!(arts.len(), 1, "one artifact per worker directory");
+        worker_artifacts.append(&mut arts);
+    }
+    worker_artifacts.reverse(); // coordinator receives them in any order
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let merged = FitPlan::pca()
+        .store(&mut reader)
+        .topk(2)
+        .merge_partials(&worker_artifacts)
+        .unwrap();
+    assert_eq!(pca_bits(&merged), want, "3-directory split-fit-merge");
+
+    // an incomplete worker set is refused, not silently wrong
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    match FitPlan::pca().store(&mut reader).topk(2).merge_partials(&worker_artifacts[..2]) {
+        Err(Error::Invalid(msg)) => assert!(msg.contains("cover"), "{msg}"),
+        other => panic!("expected Invalid for missing worker, got {:?}", other.map(|_| ())),
+    }
+
+    for p in pieces.iter().chain([&dir, &art_dir]) {
+        std::fs::remove_dir_all(p).ok();
+    }
+}
+
+#[test]
+fn partitioned_lloyd_kmeans_is_bit_identical_for_every_partition_count() {
+    let mut rng = Pcg64::seed(61);
+    let d = pds::data::gaussian_blobs(32, 420, 4, 0.2, &mut rng);
+    let dir = build_store("lloyd", &d.data, 70, 9); // 6 shards
+    let opts = KmeansOpts { n_init: 2, ..Default::default() };
+
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let base = FitPlan::kmeans()
+        .store(&mut reader)
+        .k(4)
+        .kmeans_opts(opts)
+        .partition(1)
+        .run()
+        .unwrap();
+    assert_eq!(base.raw_passes, 0);
+    assert_eq!(base.n, 420);
+    assert_eq!(base.center_bound.len(), base.iterations, "one Eq. 43 bound per iteration");
+    let want = km_bits(&base);
+
+    for parts in [2usize, 4] {
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        let got = FitPlan::kmeans()
+            .store(&mut reader)
+            .k(4)
+            .kmeans_opts(opts)
+            .partition(parts)
+            .run()
+            .unwrap();
+        assert_eq!(got.iterations, base.iterations, "partition({parts})");
+        assert_eq!(km_bits(&got), want, "partition({parts})");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coreset_kmeans_meets_tolerance_and_merges_across_directories() {
+    let mut rng = Pcg64::seed(71);
+    let d = pds::data::gaussian_blobs(32, 600, 4, 0.1, &mut rng);
+    let dir = build_store("coreset", &d.data, 100, 13); // 6 shards
+    let opts = KmeansOpts { n_init: 4, ..Default::default() };
+
+    // exact reference: full-store Lloyd on the same sparsified data
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let exact = FitPlan::kmeans().store(&mut reader).k(4).kmeans_opts(opts).run().unwrap();
+    let exact_obj = exact.kmeans_model().unwrap().result.objective;
+
+    // coreset solver: documented accuracy contract vs full-store Lloyd
+    // (EXPERIMENTS.md §Distributed merge: inertia within 1.5× + eps)
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let approx = FitPlan::kmeans()
+        .store(&mut reader)
+        .k(4)
+        .kmeans_opts(opts)
+        .solver(Solver::Coreset)
+        .coreset_size(128)
+        .partition(2)
+        .run()
+        .unwrap();
+    assert_eq!(approx.raw_passes, 0);
+    assert_eq!(approx.n, 600);
+    let approx_obj = approx.kmeans_model().unwrap().result.objective;
+    assert!(
+        approx_obj <= exact_obj * 1.5 + 1e-9,
+        "coreset inertia {approx_obj} vs Lloyd {exact_obj}"
+    );
+    // the coreset centers don't come from the Eq. 39 estimator, so no
+    // center-error guarantee is claimed
+    assert!(approx.center_bound.iter().all(|b| b.is_nan()));
+    let want = km_bits(&approx);
+
+    // same fit from 2 worker directories, artifacts merged in reverse
+    let pieces = vec![tmpdir("coreset_w0"), tmpdir("coreset_w1")];
+    split_store(&dir, &pieces).unwrap();
+    let mut worker_artifacts = Vec::new();
+    for piece in &pieces {
+        let mut piece_reader = SparseStoreReader::open(piece).unwrap();
+        let mut arts = FitPlan::kmeans()
+            .store(&mut piece_reader)
+            .k(4)
+            .kmeans_opts(opts)
+            .solver(Solver::Coreset)
+            .coreset_size(128)
+            .partials()
+            .unwrap();
+        assert_eq!(arts.len(), 1);
+        worker_artifacts.append(&mut arts);
+    }
+    worker_artifacts.reverse();
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let merged = FitPlan::kmeans()
+        .store(&mut reader)
+        .k(4)
+        .kmeans_opts(opts)
+        .solver(Solver::Coreset)
+        .coreset_size(128)
+        .merge_partials(&worker_artifacts)
+        .unwrap();
+    assert_eq!(km_bits(&merged), want, "2-directory coreset split-fit-merge");
+
+    for p in pieces.iter().chain([&dir]) {
+        std::fs::remove_dir_all(p).ok();
+    }
+}
+
+#[test]
+fn damaged_partial_artifacts_are_typed_errors_never_panics() {
+    let mut rng = Pcg64::seed(81);
+    let d = pds::data::spiked(16, 120, &[5.0], false, &mut rng);
+    let dir = build_store("damage", &d.data, 30, 17); // 4 shards
+    let mut reader = SparseStoreReader::open(&dir).unwrap();
+    let artifacts =
+        FitPlan::pca().store(&mut reader).topk(1).partition(2).partials().unwrap();
+    assert_eq!(artifacts.len(), 2);
+
+    let merge = |arts: &[Vec<u8>]| {
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        FitPlan::pca()
+            .store(&mut reader)
+            .topk(1)
+            .merge_partials(arts)
+            .map(|_| ())
+    };
+
+    // a flipped payload byte fails the envelope checksum
+    let mut flipped = artifacts.clone();
+    let mid = flipped[1].len() / 2;
+    flipped[1][mid] ^= 0x40;
+    assert!(matches!(merge(&flipped), Err(Error::Corrupt(_))));
+
+    // truncation at any point is Corrupt, never a panic
+    for cut in [0usize, 3, 19, artifacts[0].len() - 1] {
+        let cut_arts = vec![artifacts[0][..cut].to_vec(), artifacts[1].clone()];
+        assert!(matches!(merge(&cut_arts), Err(Error::Corrupt(_))), "cut at {cut}");
+    }
+
+    // artifacts from a differently-sharded store don't cover this one
+    let other = build_store("damage_other", &d.data, 60, 17); // 2 shards
+    let mut other_reader = SparseStoreReader::open(&other).unwrap();
+    let other_arts =
+        FitPlan::pca().store(&mut other_reader).topk(1).partials().unwrap();
+    assert!(matches!(merge(&other_arts), Err(Error::Invalid(_))));
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&other).ok();
+}

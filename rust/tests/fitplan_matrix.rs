@@ -1,0 +1,217 @@
+//! Table-driven sweep of the `FitPlan` matrix: task × source × solver ×
+//! scheme × precision. Every valid cell must fit, account for its raw /
+//! sparse passes, and be bit-for-bit deterministic (two runs of the same
+//! cell produce identical outputs).
+
+use std::path::PathBuf;
+
+use pds::coordinator::{FitPlan, MatSource, Solver, StreamConfig};
+use pds::kmeans::KmeansOpts;
+use pds::linalg::Mat;
+use pds::rng::Pcg64;
+use pds::sampling::{Scheme, SparsifyConfig};
+use pds::sparse::Precision;
+use pds::store::SparseStoreReader;
+use pds::transform::TransformKind;
+
+const P: usize = 32;
+const N: usize = 240;
+const K: usize = 3;
+const TOPK: usize = 2;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Src {
+    Stream,
+    Store,
+}
+
+struct Case {
+    task: &'static str,
+    src: Src,
+    solver: Solver,
+    scheme: Scheme,
+    precision: Precision,
+}
+
+impl Case {
+    fn label(&self) -> String {
+        format!(
+            "{} / {} / {} / {} / {}",
+            self.task,
+            match self.src {
+                Src::Stream => "stream",
+                Src::Store => "store",
+            },
+            self.solver.name(),
+            self.scheme.name(),
+            self.precision.name()
+        )
+    }
+}
+
+fn scfg() -> SparsifyConfig {
+    SparsifyConfig { gamma: 0.3, transform: TransformKind::Hadamard, seed: 7 }
+}
+
+/// Compress the shared dataset once per (scheme, precision) cell.
+fn build_store(data: &Mat, scheme: Scheme, precision: Precision) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "pds_matrix_{}_{}_{}",
+        scheme.name(),
+        precision.name(),
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut src = MatSource::new(data, 64);
+    FitPlan::compress()
+        .stream(&mut src, scfg())
+        .scheme(scheme)
+        .precision(precision)
+        .store_dir(&dir)
+        .shard_cols(70)
+        .run()
+        .unwrap();
+    dir
+}
+
+/// Run one cell; returns (raw_passes, sparse_passes, output bits).
+fn run_cell(case: &Case, data: &Mat, store_dir: &PathBuf) -> (usize, usize, Vec<u64>) {
+    let opts = KmeansOpts { n_init: 2, ..Default::default() };
+    let stream = StreamConfig { workers: 2, ..Default::default() };
+    let report = match case.src {
+        Src::Stream => {
+            let mut src = MatSource::new(data, 64);
+            let res = match case.task {
+                "pca" => FitPlan::pca()
+                    .stream(&mut src, scfg())
+                    .scheme(case.scheme)
+                    .precision(case.precision)
+                    .topk(TOPK)
+                    .solver(case.solver)
+                    .stream_config(stream)
+                    .run(),
+                _ => FitPlan::kmeans()
+                    .stream(&mut src, scfg())
+                    .scheme(case.scheme)
+                    .precision(case.precision)
+                    .k(K)
+                    .kmeans_opts(opts)
+                    .solver(case.solver)
+                    .stream_config(stream)
+                    .run(),
+            };
+            res.unwrap_or_else(|e| panic!("{}: {e}", case.label()))
+        }
+        Src::Store => {
+            let mut reader = SparseStoreReader::open(store_dir).unwrap();
+            // explicit scheme/precision on a store plan assert against the
+            // manifest — exercising the loud-mismatch contract's happy path
+            let res = match case.task {
+                "pca" => FitPlan::pca()
+                    .store(&mut reader)
+                    .precision(case.precision)
+                    .topk(TOPK)
+                    .solver(case.solver)
+                    .run(),
+                _ => FitPlan::kmeans()
+                    .store(&mut reader)
+                    .precision(case.precision)
+                    .k(K)
+                    .kmeans_opts(opts)
+                    .solver(case.solver)
+                    .run(),
+            };
+            res.unwrap_or_else(|e| panic!("{}: {e}", case.label()))
+        }
+    };
+
+    assert_eq!(report.n, N, "{}", case.label());
+    let bits: Vec<u64> = match case.task {
+        "pca" => {
+            let fit = report.pca_fit().expect("pca plan");
+            assert_eq!(fit.pca.eigenvalues.len(), TOPK, "{}", case.label());
+            for w in fit.pca.eigenvalues.windows(2) {
+                assert!(w[0] >= w[1], "{}: eigenvalues not sorted", case.label());
+            }
+            fit.pca
+                .eigenvalues
+                .iter()
+                .chain(&fit.mean)
+                .map(|v| v.to_bits())
+                .chain(fit.pca.components.as_slice().iter().map(|v| v.to_bits()))
+                .collect()
+        }
+        _ => {
+            let m = report.kmeans_model().expect("kmeans plan");
+            assert_eq!(m.result.assign.len(), N, "{}", case.label());
+            assert!(
+                m.result.assign.iter().all(|&a| (a as usize) < K),
+                "{}: label out of range",
+                case.label()
+            );
+            std::iter::once(m.result.objective.to_bits())
+                .chain(m.result.assign.iter().map(|&a| a as u64))
+                .chain(m.result.centers.as_slice().iter().map(|v| v.to_bits()))
+                .collect()
+        }
+    };
+    (report.raw_passes, report.sparse_passes, bits)
+}
+
+#[test]
+fn every_valid_fitplan_cell_fits_accounts_passes_and_is_deterministic() {
+    let mut rng = Pcg64::seed(97);
+    let d = pds::data::gaussian_blobs(P, N, K, 0.15, &mut rng);
+
+    let schemes = [Scheme::Precond, Scheme::Uniform, Scheme::Hybrid];
+    let precisions = [Precision::F64, Precision::F32];
+
+    let mut total = 0usize;
+    let mut store_dirs = Vec::new();
+    for &scheme in &schemes {
+        for &precision in &precisions {
+            let store_dir = build_store(&d.data, scheme, precision);
+
+            let mut cases = vec![
+                // raw streams: compress inline; the stream K-means solver
+                // needs a store (it re-reads every iteration) so it has
+                // no stream-source cell
+                Case { task: "pca", src: Src::Stream, solver: Solver::Covariance, scheme, precision },
+                Case { task: "pca", src: Src::Stream, solver: Solver::Krylov, scheme, precision },
+                Case { task: "kmeans", src: Src::Stream, solver: Solver::InMemory, scheme, precision },
+                // store-backed: every solver family member
+                Case { task: "pca", src: Src::Store, solver: Solver::Covariance, scheme, precision },
+                Case { task: "pca", src: Src::Store, solver: Solver::Krylov, scheme, precision },
+                Case { task: "kmeans", src: Src::Store, solver: Solver::InMemory, scheme, precision },
+                Case { task: "kmeans", src: Src::Store, solver: Solver::Stream, scheme, precision },
+                Case { task: "kmeans", src: Src::Store, solver: Solver::Coreset, scheme, precision },
+            ];
+            for case in cases.drain(..) {
+                let (raw, sparse, bits) = run_cell(&case, &d.data, &store_dir);
+                // pass accounting: a stream fit pays exactly one raw
+                // pass, a store fit pays none
+                match case.src {
+                    Src::Stream => assert_eq!(raw, 1, "{}", case.label()),
+                    Src::Store => assert_eq!(raw, 0, "{}", case.label()),
+                }
+                assert!(sparse >= 1, "{}", case.label());
+                if case.solver == Solver::Coreset {
+                    // one pass building coreset leaves + one assigning
+                    assert_eq!(sparse, 2, "{}", case.label());
+                }
+                // bit-for-bit deterministic: a second run of the same
+                // cell reproduces every output exactly
+                let (raw2, sparse2, bits2) = run_cell(&case, &d.data, &store_dir);
+                assert_eq!((raw2, sparse2), (raw, sparse), "{}", case.label());
+                assert_eq!(bits2, bits, "{}: fit is not deterministic", case.label());
+                total += 1;
+            }
+            store_dirs.push(store_dir);
+        }
+    }
+    assert_eq!(total, 48, "matrix coverage shrank — update the table, don't drop cells");
+    println!("fitplan matrix: {total} cells passed, each run twice for bit-identity");
+    for dir in store_dirs {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
