@@ -12,10 +12,13 @@
 //! p = 2^12..2^14 — and (6) the K-means solver comparison: the in-memory
 //! chunk fit vs the source-driven streaming fit (`CenterStep` over
 //! store-budget-sized chunks) at p = 4096/8192, workers 1/2/4, in ms per
-//! Lloyd iteration. A final non-timing check records the f32-vs-f64
-//! explained-variance parity on the Fig-1 digits shape. Results are also
-//! emitted as `BENCH_hotpaths.json` at the repository root (schema
-//! documented in EXPERIMENTS.md §Perf log).
+//! Lloyd iteration — and (7) the serve daemon's query read path
+//! (snapshot load + project/assign, no transport), reported as p50/p99
+//! µs per query since tail latency is the serving SLO. A final
+//! non-timing check records the f32-vs-f64 explained-variance parity on
+//! the Fig-1 digits shape. Results are also emitted as
+//! `BENCH_hotpaths.json` at the repository root (schema documented in
+//! EXPERIMENTS.md §Perf log).
 //!
 //! `PDS_BENCH_QUICK=1` shrinks iteration counts and skips the slow
 //! solver-comparison sections (5 and 6) — the profile the CI perf gate
@@ -413,7 +416,63 @@ fn main() {
         }
     }
 
-    // 7) precision parity check (not a timing): explained variance of the
+    // 7) serve query latency: p50/p99 of single-sample queries against a
+    //    published snapshot — the daemon's read path (Arc snapshot load +
+    //    project/assign), minus transport. Quantiles rather than the
+    //    median alone: tail latency is the serving SLO, so both are
+    //    gated rows. Runs in quick mode too (it is cheap).
+    pds::bench::section("serve query latency (snapshot read path, no transport)");
+    {
+        use pds::serve::snapshot::{KmeansSnapshot, ModelKind, ModelSnapshot, PcaSnapshot};
+        let p = 512usize;
+        let iters = if quick { 4_000 } else { 40_000 };
+        let mut rng = Pcg64::seed(21);
+        let samples: Vec<Vec<f64>> =
+            (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+        let pca = ModelSnapshot {
+            version: 1,
+            n: 10_000,
+            kind: ModelKind::Pca(PcaSnapshot {
+                components: Mat::from_fn(p, 8, |_, _| rng.normal()),
+                mean: (0..p).map(|_| rng.normal()).collect(),
+                eigenvalues: vec![1.0; 8],
+            }),
+        };
+        let kmeans = ModelSnapshot {
+            version: 1,
+            n: 10_000,
+            kind: ModelKind::Kmeans(KmeansSnapshot {
+                centers: Mat::from_fn(p, 16, |_, _| rng.normal()),
+                center_bound: f64::NAN,
+                iterations: 10,
+                converged: true,
+            }),
+        };
+        for (label, snap) in [("pca p=512 topk=8", &pca), ("kmeans p=512 K=16", &kmeans)] {
+            let mut times = Vec::with_capacity(iters);
+            for i in 0..iters {
+                let s = &samples[i % samples.len()];
+                let t0 = std::time::Instant::now();
+                std::hint::black_box(snap.query(s).unwrap());
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let (p50, p99) = (times[times.len() / 2], times[times.len() * 99 / 100]);
+            for (q, secs) in [("p50", p50), ("p99", p99)] {
+                let r = BenchResult {
+                    name: format!("serve query {label} [{q}]"),
+                    iters,
+                    median_s: secs,
+                    mad_s: 0.0,
+                    min_s: times[0],
+                };
+                println!("{}", r.report());
+                entries.push(Entry { result: r, metric: "us/query", value: secs * 1e6 });
+            }
+        }
+    }
+
+    // 8) precision parity check (not a timing): explained variance of the
     //    top-10 subspace on the Fig-1 digits shape, f32-quantized chunk
     //    vs f64. f64 accumulation on top of f32 storage keeps this at
     //    quantization level — orders of magnitude under the 1e-3 bound

@@ -34,6 +34,9 @@ pub use plan::{
     two_pass_refine_stream, FitOutcome, FitPlan, FitReport, PcaFit, Solver, Task,
     DEFAULT_CORESET_SIZE, DEFAULT_TOPK,
 };
+// Incremental-fit building blocks shared with the serve daemon's
+// refresh loop (fold only new shards, merge into the running partial).
+pub(crate) use plan::{coreset_partial_for_shards, pca_partial_for_shards, pca_report_from_partial};
 // Re-exported from the data layer for compatibility: the sparse-source
 // abstraction moved to `sparse::source` so estimators and K-means can
 // stream sparsified data without depending on the coordinator.

@@ -1564,7 +1564,7 @@ fn pca_krylov_sparse(
 /// Fold `shards` (a contiguous range of a store's shard table) into one
 /// worker's [`PcaPartial`]: per-shard mean + covariance subtotals,
 /// keyed by global shard index.
-fn pca_partial_for_shards(
+pub(crate) fn pca_partial_for_shards(
     reader: &mut SparseStoreReader,
     sp: &Sparsifier,
     shards: &[ShardEntry],
@@ -1592,7 +1592,7 @@ fn pca_partial_for_shards(
 /// report — the same estimate → eigendecompose → unmix tail as
 /// [`pca_cov_sparse`], so a merged distributed fit and a partitioned
 /// in-process fit return identical reports.
-fn pca_report_from_partial(
+pub(crate) fn pca_report_from_partial(
     partial: &PcaPartial,
     sp: &Sparsifier,
     topk: usize,
@@ -1696,7 +1696,7 @@ fn kmeans_partitioned_store(
 /// columns are densified (at the scheme's unbiased scale — `p/m` for
 /// the uniform schemes, 1 for weighted sketches) and ingested as one
 /// unit-weight leaf of the merge-and-reduce tree.
-fn coreset_partial_for_shards(
+pub(crate) fn coreset_partial_for_shards(
     reader: &mut SparseStoreReader,
     sp: &Sparsifier,
     shards: &[ShardEntry],

@@ -67,6 +67,12 @@
 //!   (`artifacts/*.hlo.txt` built by `make artifacts`); the
 //!   [`runtime::NativeEngine`] implements the same chunk ops in pure Rust
 //!   and is the default engine.
+//! * [`serve`] — the `pds serve` daemon: concurrent ingest (bounded
+//!   queues, shard-boundary manifest checkpoints) + periodic
+//!   incremental model refresh (PartialFit merges over new shards
+//!   only) + lock-free queries from an `Arc`-swapped snapshot, with
+//!   graceful degradation (stale-snapshot serving, typed backpressure)
+//!   over newline-delimited JSON (stdin pipe or Unix socket).
 //! * [`store`] — the persistent sharded store for sparsified data:
 //!   compress once with `FitPlan::compress()`, then fit PCA / K-means any
 //!   number of times from disk without touching the raw stream again —
@@ -93,6 +99,7 @@ pub mod pca;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod simd;
 pub mod sparse;
 pub mod store;

@@ -13,25 +13,30 @@
 //! pds split --store DIR --into D1,D2,...           deal a store into shard-group pieces
 //! pds join --stores D1,D2,... --out DIR            re-join shard-group pieces
 //! pds store-info --store DIR                       print a store's manifest
+//! pds serve --store DIR [--task pca|kmeans]        concurrent ingest + query daemon
 //! pds artifacts-check                              verify AOT artifacts + PJRT
 //! pds info                                         build/config summary
 //! ```
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::time::Duration;
 
 use pds::cli::Args;
-use pds::coordinator::{FitPlan, FitReport, MatSource, Solver, StreamConfig, DEFAULT_CORESET_SIZE};
+use pds::coordinator::{
+    FitPlan, FitReport, MatSource, PcaFit, Solver, StreamConfig, DEFAULT_CORESET_SIZE,
+};
 use pds::distributed::{kind, peek_kind};
 use pds::data::{gaussian_blobs, DigitConfig};
 use pds::error::{Error, Result};
-use pds::kmeans::KmeansOpts;
+use pds::kmeans::{KmeansOpts, SparsifiedModel};
 use pds::metrics::clustering_accuracy;
 use pds::rng::Pcg64;
 use pds::runtime::{artifact_dir, XlaEngine};
 use pds::sampling::{Scheme, SparsifyConfig};
+use pds::serve::{ServeConfig, ServeTask};
 use pds::sparse::Precision;
-use pds::store::{join_stores, split_store, SparseStoreReader};
+use pds::store::{join_stores, split_store, SparseStoreReader, StoreManifest};
 use pds::transform::TransformKind;
 
 fn main() -> ExitCode {
@@ -58,6 +63,7 @@ fn main() -> ExitCode {
         "split" => cmd_split(&args),
         "join" => cmd_join(&args),
         "store-info" => cmd_store_info(&args),
+        "serve" => cmd_serve(&args),
         "artifacts-check" => cmd_artifacts_check(),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -104,6 +110,11 @@ fn usage() {
          \x20 pds split --store DIR --into DIR1,DIR2,...\n\
          \x20 pds join --stores DIR1,DIR2,... --out DIR\n\
          \x20 pds store-info --store DIR\n\
+         \x20 pds serve --store DIR [--task kmeans|pca] [--p P] [--gamma G] [--seed S]\n\
+         \x20\x20\x20\x20 [--k K] [--topk K] [--scheme precond|uniform|hybrid]\n\
+         \x20\x20\x20\x20 [--precision f32|f64] [--no-precondition] [--shard-cols C]\n\
+         \x20\x20\x20\x20 [--queue-batches B] [--refresh-ms MS] [--timeout-ms MS]\n\
+         \x20\x20\x20\x20 [--socket PATH  listen on a unix socket instead of stdin/stdout]\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
     );
@@ -121,9 +132,35 @@ fn cmd_xp(args: &Args) -> Result<()> {
     pds::experiments::run(id, args)
 }
 
+/// A report's K-means model, or a typed error when the plan produced
+/// something else — these accessors sit on user-reachable CLI paths
+/// (e.g. mixed-up `pds merge` artifacts), so a mismatch must never
+/// panic the binary.
+fn kmeans_model_of(report: &FitReport) -> Result<&SparsifiedModel> {
+    report.kmeans_model().ok_or_else(|| {
+        Error::Invalid("this fit did not produce a K-means model (wrong task or artifacts)".into())
+    })
+}
+
+/// A report's PCA fit, as a typed error instead of a panic (see
+/// [`kmeans_model_of`]).
+fn pca_fit_of(report: &FitReport) -> Result<&PcaFit> {
+    report.pca_fit().ok_or_else(|| {
+        Error::Invalid("this fit did not produce a PCA model (wrong task or artifacts)".into())
+    })
+}
+
+/// A compress report's store manifest, as a typed error instead of a
+/// panic (see [`kmeans_model_of`]).
+fn store_manifest_of(report: &FitReport) -> Result<&StoreManifest> {
+    report.store_manifest().ok_or_else(|| {
+        Error::Invalid("this run did not write a store (not a compress plan)".into())
+    })
+}
+
 /// Print a K-means report's tail: objective, bound, pass counts, phases.
-fn print_kmeans_report(report: &FitReport) {
-    let model = report.kmeans_model().expect("kmeans plan");
+fn print_kmeans_report(report: &FitReport) -> Result<()> {
+    let model = kmeans_model_of(report)?;
     println!("objective = {:.4}", model.result.objective);
     // NaN bounds mark a weighted (hybrid) fit, where the Eq. 43 theory
     // does not apply — omit the line rather than print a non-guarantee
@@ -139,6 +176,7 @@ fn print_kmeans_report(report: &FitReport) {
     for (name, secs) in report.timer.phases() {
         println!("  {name:<10} {secs:.3} s");
     }
+    Ok(())
 }
 
 fn kmeans_opts(args: &Args) -> Result<KmeansOpts> {
@@ -196,7 +234,7 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         plan = plan.precision(pr);
     }
     let report = plan.run()?;
-    let model = report.kmeans_model().expect("kmeans plan");
+    let model = kmeans_model_of(&report)?;
     println!(
         "sparsified K-means: n={} gamma={gamma} scheme={} engine={} restarts={} iterations={} \
          converged={}",
@@ -213,8 +251,7 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
             clustering_accuracy(&model.result.assign, &labels, k)
         );
     }
-    print_kmeans_report(&report);
-    Ok(())
+    print_kmeans_report(&report)
 }
 
 /// The `--scheme` option (default: the paper's preconditioned-uniform
@@ -278,7 +315,7 @@ fn cmd_pca(args: &Args) -> Result<()> {
         plan = plan.precision(pr);
     }
     let report = plan.run()?;
-    let fit = report.pca_fit().expect("pca plan");
+    let fit = pca_fit_of(&report)?;
     println!(
         "streaming PCA ({} solver, {} scheme): n={} gamma={gamma} passes: raw {} | sparse {}",
         solver.name(),
@@ -334,7 +371,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         plan = plan.precision(pr);
     }
     let report = plan.run()?;
-    let manifest = report.store_manifest().expect("compress plan");
+    let manifest = store_manifest_of(&report)?;
     println!(
         "compressed {} samples (p={} -> m={} per sample, gamma={:.4}, scheme={}, \
          precision={}) into {}",
@@ -434,7 +471,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 return write_partials(plan, &dir);
             }
             let report = plan.run()?;
-            let fit = report.pca_fit().expect("pca plan");
+            let fit = pca_fit_of(&report)?;
             println!(
                 "PCA from store ({} solver): n={} passes: raw {} | sparse {}",
                 solver.name(),
@@ -468,7 +505,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 return write_partials(plan, &dir);
             }
             let report = plan.run()?;
-            let model = report.kmeans_model().expect("kmeans plan");
+            let model = kmeans_model_of(&report)?;
             println!(
                 "sparsified K-means from store ({} solver): n={} restarts={} iterations={} \
                  converged={}",
@@ -478,7 +515,7 @@ fn cmd_fit(args: &Args) -> Result<()> {
                 model.result.iterations,
                 model.result.converged
             );
-            print_kmeans_report(&report);
+            print_kmeans_report(&report)?;
         }
         other => return Err(Error::Invalid(format!("--task {other:?} (want kmeans|pca)"))),
     }
@@ -524,7 +561,7 @@ fn cmd_merge(args: &Args) -> Result<()> {
                 .store(&mut reader)
                 .topk(topk)
                 .merge_partials(&artifacts)?;
-            let fit = report.pca_fit().expect("pca plan");
+            let fit = pca_fit_of(&report)?;
             println!(
                 "merged {} pca partial(s): n={} passes: raw {} | sparse {}",
                 args.positional.len(),
@@ -546,7 +583,7 @@ fn cmd_merge(args: &Args) -> Result<()> {
                 .kmeans_opts(opts)
                 .solver(Solver::Coreset)
                 .merge_partials(&artifacts)?;
-            let model = report.kmeans_model().expect("kmeans plan");
+            let model = kmeans_model_of(&report)?;
             println!(
                 "merged {} coreset partial(s): k={k} n={} restarts={} converged={}",
                 args.positional.len(),
@@ -554,7 +591,7 @@ fn cmd_merge(args: &Args) -> Result<()> {
                 opts.n_init,
                 model.result.converged
             );
-            print_kmeans_report(&report);
+            print_kmeans_report(&report)?;
         }
         other => {
             return Err(Error::Invalid(format!(
@@ -648,6 +685,36 @@ fn cmd_store_info(args: &Args) -> Result<()> {
         println!("    ... {} more", m.shards.len() - 4);
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let store_dir = store_arg(args)?;
+    let task = ServeTask::parse(args.get("task").unwrap_or("kmeans"))?;
+    let p: usize = args.get_parse("p", 512)?;
+    let gamma: f64 = args.get_parse("gamma", 0.2)?;
+    let seed: u64 = args.get_parse("seed", 0)?;
+    let mut cfg = ServeConfig::new(PathBuf::from(store_dir), task, p);
+    cfg.scfg = SparsifyConfig { gamma, transform: TransformKind::Hadamard, seed };
+    cfg.scheme = scheme_arg(args)?;
+    if let Some(pr) = precision_arg(args)? {
+        cfg.precision = pr;
+    }
+    cfg.precondition = !args.flag("no-precondition");
+    cfg.shard_cols = args.get_parse("shard-cols", cfg.shard_cols)?;
+    cfg.topk = args.get_parse("topk", cfg.topk)?;
+    cfg.k = args.get_parse("k", cfg.k)?;
+    cfg.kmeans_opts = kmeans_opts(args)?;
+    cfg.coreset_capacity = args.get_parse("coreset-size", DEFAULT_CORESET_SIZE)?;
+    cfg.queue_batches = args.get_parse("queue-batches", cfg.queue_batches)?;
+    cfg.refresh_interval = Duration::from_millis(args.get_parse("refresh-ms", 5000)?);
+    cfg.request_timeout = Duration::from_millis(args.get_parse("timeout-ms", 30_000)?);
+    match args.get("socket") {
+        #[cfg(unix)]
+        Some(path) => pds::serve::run_socket(cfg, Path::new(path)),
+        #[cfg(not(unix))]
+        Some(_) => Err(Error::Invalid("--socket needs a unix platform".into())),
+        None => pds::serve::run_pipe(cfg),
+    }
 }
 
 fn cmd_artifacts_check() -> Result<()> {

@@ -1,9 +1,11 @@
 //! Evaluation metrics and measurement utilities.
 
 mod hungarian;
+pub mod serve;
 mod stats;
 mod timer;
 
 pub use hungarian::{clustering_accuracy, hungarian_max};
+pub use serve::{LatencyHistogram, ServeMetrics};
 pub use stats::{mean_std, median, Summary};
 pub use timer::Timer;

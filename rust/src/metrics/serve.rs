@@ -1,0 +1,260 @@
+//! Serve-daemon observability: lock-free counters, gauges, and
+//! log₂-bucketed latency histograms with p50/p99 readout, dumped as a
+//! JSON object on a `stats` request and again at shutdown.
+//!
+//! Everything here is `AtomicU64`-based so the hot paths (one query, one
+//! ingest batch) record without taking a lock, and a `stats` reader
+//! never blocks a writer. Histogram percentiles are therefore
+//! *bucketed* estimates: a reported p99 is the geometric midpoint of
+//! the power-of-two microsecond bucket the true p99 falls in (≤ ~41%
+//! relative error by construction), which is the standard trade for a
+//! fixed-size lock-free histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Power-of-two microsecond buckets: bucket `i` counts latencies in
+/// `[2^i, 2^{i+1})` µs (bucket 0 additionally absorbs sub-µs samples).
+/// 40 buckets cover ~12.7 days — far past any per-request duration.
+const BUCKETS: usize = 40;
+
+/// Lock-free log₂ latency histogram (microsecond domain).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = if us <= 1 {
+            0
+        } else {
+            ((63 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Bucketed quantile estimate in microseconds (`q` in `[0, 1]`);
+    /// 0 when the histogram is empty.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // geometric midpoint of [2^i, 2^{i+1}) µs
+                let lo = (1u64 << i) as f64;
+                return lo * std::f64::consts::SQRT_2;
+            }
+        }
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Largest recorded latency in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// JSON object: `{"count":..,"mean_us":..,"p50_us":..,"p99_us":..,"max_us":..}`.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"count\":{},\"mean_us\":{:.3},\"p50_us\":{:.3},\"p99_us\":{:.3},\"max_us\":{}}}",
+            self.count(),
+            self.mean_us(),
+            self.quantile_us(0.50),
+            self.quantile_us(0.99),
+            self.max_us()
+        )
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The serve daemon's counter/histogram registry. One instance lives for
+/// the daemon's lifetime, shared by every request handler and worker
+/// thread.
+pub struct ServeMetrics {
+    /// Requests received (every protocol line, well-formed or not).
+    pub requests: AtomicU64,
+    /// Requests answered with a typed error (`ok: false`).
+    pub errors: AtomicU64,
+    /// Ingest batches rejected because the bounded queue was full.
+    pub backpressure_rejections: AtomicU64,
+    /// Raw sample columns accepted into the ingest queue.
+    pub ingested_rows: AtomicU64,
+    /// Ingest batches accepted into the queue.
+    pub ingested_batches: AtomicU64,
+    /// Model refreshes that published a new snapshot.
+    pub refreshes: AtomicU64,
+    /// Model refreshes that failed (daemon degrades to the stale snapshot).
+    pub refresh_failures: AtomicU64,
+    /// Current ingest queue depth (batches accepted, not yet absorbed).
+    pub queue_depth: AtomicU64,
+    /// Per-query handler latency.
+    pub query_latency: LatencyHistogram,
+    /// Per-ingest-request handler latency (parse + enqueue, not absorb).
+    pub ingest_latency: LatencyHistogram,
+    /// Full refresh-cycle duration (fold + merge + finalize + swap).
+    pub refresh_duration: LatencyHistogram,
+    started: Instant,
+}
+
+impl ServeMetrics {
+    /// A zeroed registry with the uptime clock started now.
+    pub fn new() -> Self {
+        ServeMetrics {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            backpressure_rejections: AtomicU64::new(0),
+            ingested_rows: AtomicU64::new(0),
+            ingested_batches: AtomicU64::new(0),
+            refreshes: AtomicU64::new(0),
+            refresh_failures: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            query_latency: LatencyHistogram::new(),
+            ingest_latency: LatencyHistogram::new(),
+            refresh_duration: LatencyHistogram::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Seconds since the registry was created.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Ingest throughput over the daemon's lifetime (rows/second).
+    pub fn ingest_rows_per_s(&self) -> f64 {
+        let up = self.uptime_s();
+        if up <= 0.0 {
+            0.0
+        } else {
+            self.ingested_rows.load(Ordering::Relaxed) as f64 / up
+        }
+    }
+
+    /// The full registry as one JSON object (numbers only — no strings
+    /// that would need escaping).
+    pub fn to_json(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        format!(
+            "{{\"uptime_s\":{:.3},\"requests\":{},\"errors\":{},\
+             \"backpressure_rejections\":{},\"ingested_rows\":{},\
+             \"ingested_batches\":{},\"ingest_rows_per_s\":{:.3},\
+             \"refreshes\":{},\"refresh_failures\":{},\"queue_depth\":{},\
+             \"query_latency\":{},\"ingest_latency\":{},\"refresh_duration\":{}}}",
+            self.uptime_s(),
+            g(&self.requests),
+            g(&self.errors),
+            g(&self.backpressure_rejections),
+            g(&self.ingested_rows),
+            g(&self.ingested_batches),
+            self.ingest_rows_per_s(),
+            g(&self.refreshes),
+            g(&self.refresh_failures),
+            g(&self.queue_depth),
+            self.query_latency.to_json(),
+            self.ingest_latency.to_json(),
+            self.refresh_duration.to_json()
+        )
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        for us in [1u64, 2, 3, 5, 9, 17, 100, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max_us(), 1000);
+        // p50 falls in a low bucket, p99 in the 1000 µs bucket
+        let p50 = h.quantile_us(0.50);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 >= 1.0 && p50 <= 8.0, "p50 {p50}");
+        assert!(p99 >= 512.0 && p99 <= 1024.0 * 2.0, "p99 {p99}");
+        assert!(p50 <= p99);
+        // the dump is a JSON object with the advertised keys
+        let json = h.to_json();
+        for key in ["count", "mean_us", "p50_us", "p99_us", "max_us"] {
+            assert!(json.contains(key), "{json}");
+        }
+    }
+
+    #[test]
+    fn registry_dump_contains_every_series() {
+        let m = ServeMetrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.ingested_rows.fetch_add(128, Ordering::Relaxed);
+        m.query_latency.record(Duration::from_micros(7));
+        let json = m.to_json();
+        for key in [
+            "uptime_s",
+            "requests",
+            "errors",
+            "backpressure_rejections",
+            "ingested_rows",
+            "ingested_batches",
+            "ingest_rows_per_s",
+            "refreshes",
+            "refresh_failures",
+            "queue_depth",
+            "query_latency",
+            "ingest_latency",
+            "refresh_duration",
+        ] {
+            assert!(json.contains(&format!("\"{key}\"")), "{key} missing from {json}");
+        }
+    }
+}

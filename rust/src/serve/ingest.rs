@@ -1,0 +1,337 @@
+//! The daemon's background ingest lane.
+//!
+//! Client handlers validate raw sample batches and `try_send` them into
+//! a bounded channel (a full channel is a typed `backpressure` error,
+//! never a block). One worker thread owns the [`Sparsifier`] and the
+//! live [`SparseStoreWriter`]: it compresses each batch, appends it,
+//! and durably publishes a manifest checkpoint every time a shard
+//! completes — so a daemon killed at any instant leaves a CRC-clean,
+//! openable store covering every completed shard.
+//!
+//! A writer failure (disk full, I/O error) does not kill the daemon:
+//! the worker records the error, drops further batches (still counting
+//! them so `flush` waiters never hang), and the query path keeps
+//! serving from the last snapshot — the degraded mode.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use crate::metrics::ServeMetrics;
+use crate::sampling::Sparsifier;
+use crate::store::{SparseStoreWriter, StoreManifest};
+
+/// How often the worker re-checks the shutdown flag while the queue is
+/// idle.
+const IDLE_POLL: Duration = Duration::from_millis(25);
+
+/// One queued unit of work: raw sample columns (`p_orig × n`), already
+/// validated by the request handler.
+pub struct IngestBatch {
+    /// The raw samples, one per column.
+    pub data: Mat,
+}
+
+/// Ingest-lane progress counters, updated under one mutex and broadcast
+/// on [`IngestShared::cv`] — what `flush` and `stats` handlers read.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestProgress {
+    /// Batches accepted into the queue since startup.
+    pub enqueued: u64,
+    /// Batches taken off the queue and fully handled (compressed and
+    /// appended, or deliberately dropped after a writer failure).
+    pub absorbed: u64,
+    /// Columns appended to the writer (flushed shards + its buffer).
+    pub total_cols: usize,
+    /// Columns covered by the last durable manifest (checkpoint or
+    /// finish) — what a crashed daemon is guaranteed to keep.
+    pub durable_cols: usize,
+    /// The worker exited (writer finalized, or failed terminally).
+    pub finished: bool,
+}
+
+/// State shared between the ingest worker and the request handlers.
+pub struct IngestShared {
+    /// Progress counters (guarded; see [`IngestProgress`]).
+    pub progress: Mutex<IngestProgress>,
+    /// Notified after every absorbed batch and at worker exit.
+    pub cv: Condvar,
+    /// First writer error, if any — once set, the lane is dead and
+    /// later batches are dropped (the daemon itself keeps serving).
+    pub error: Mutex<Option<String>>,
+}
+
+impl IngestShared {
+    /// Fresh shared state (all counters zero, no error).
+    pub fn new() -> Self {
+        IngestShared {
+            progress: Mutex::new(IngestProgress::default()),
+            cv: Condvar::new(),
+            error: Mutex::new(None),
+        }
+    }
+
+    /// Lock the progress counters, surviving a poisoned lock (a panicked
+    /// peer must not wedge the daemon).
+    pub fn lock_progress(&self) -> MutexGuard<'_, IngestProgress> {
+        match self.progress.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// The recorded writer error, if the lane has failed.
+    pub fn error_message(&self) -> Option<String> {
+        match self.error.lock() {
+            Ok(g) => g.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+
+    fn set_error(&self, msg: String) {
+        let mut slot = match self.error.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    /// Block until `absorbed >= goal` batches are handled (or the worker
+    /// exits), up to `timeout`. Returns whether the goal was reached.
+    pub fn wait_absorbed(&self, goal: u64, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut pg = self.lock_progress();
+        loop {
+            if pg.absorbed >= goal || pg.finished {
+                return pg.absorbed >= goal;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = match self.cv.wait_timeout(pg, deadline - now) {
+                Ok(r) => r,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            pg = guard;
+        }
+    }
+}
+
+impl Default for IngestShared {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The worker loop. Owns the sparsifier and writer; runs until the
+/// channel disconnects (all senders dropped) or `shutdown` is raised,
+/// then drains the remaining backlog and finalizes the store. Returns
+/// the final manifest.
+pub fn run_ingest_worker(
+    rx: Receiver<IngestBatch>,
+    sp: Sparsifier,
+    precondition: bool,
+    mut writer: SparseStoreWriter,
+    shared: Arc<IngestShared>,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<StoreManifest> {
+    let mut checkpointed_shards = 0usize;
+    loop {
+        match rx.recv_timeout(IDLE_POLL) {
+            Ok(batch) => {
+                absorb(&sp, precondition, &mut writer, &mut checkpointed_shards, batch, &shared, &metrics);
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // batches accepted before the shutdown flag went up still land
+    while let Ok(batch) = rx.try_recv() {
+        absorb(&sp, precondition, &mut writer, &mut checkpointed_shards, batch, &shared, &metrics);
+    }
+
+    let result = if shared.error_message().is_none() {
+        writer.finish()
+    } else {
+        // the lane already failed mid-stream; don't let finish() turn a
+        // partially-buffered writer into a second confusing error —
+        // publish the shards that did land and report the first failure
+        let _ = writer.checkpoint();
+        Err(Error::Invalid(format!(
+            "ingest writer failed: {}",
+            shared.error_message().unwrap_or_default()
+        )))
+    };
+
+    let mut pg = shared.lock_progress();
+    if let Ok(manifest) = &result {
+        pg.total_cols = manifest.n;
+        pg.durable_cols = manifest.n;
+    }
+    pg.finished = true;
+    drop(pg);
+    shared.cv.notify_all();
+    result
+}
+
+/// Handle one dequeued batch: compress, append, checkpoint on shard
+/// boundaries. Errors poison the lane (recorded, later batches dropped)
+/// but never propagate — the daemon must keep serving queries.
+fn absorb(
+    sp: &Sparsifier,
+    precondition: bool,
+    writer: &mut SparseStoreWriter,
+    checkpointed_shards: &mut usize,
+    batch: IngestBatch,
+    shared: &IngestShared,
+    metrics: &ServeMetrics,
+) {
+    let mut durable = None;
+    if shared.error_message().is_none() {
+        match ingest_one(sp, precondition, writer, checkpointed_shards, &batch) {
+            Ok(d) => durable = d,
+            Err(e) => shared.set_error(e.to_string()),
+        }
+    }
+    let mut pg = shared.lock_progress();
+    pg.absorbed += 1;
+    pg.total_cols = writer.columns_written();
+    if let Some(n) = durable {
+        pg.durable_cols = n;
+    }
+    metrics
+        .queue_depth
+        .store(pg.enqueued.saturating_sub(pg.absorbed), Ordering::Relaxed);
+    drop(pg);
+    shared.cv.notify_all();
+}
+
+/// Compress + append one batch; returns the new durable column count if
+/// a checkpoint was written.
+fn ingest_one(
+    sp: &Sparsifier,
+    precondition: bool,
+    writer: &mut SparseStoreWriter,
+    checkpointed_shards: &mut usize,
+    batch: &IngestBatch,
+) -> Result<Option<usize>> {
+    let start = writer.columns_written();
+    let chunk = if precondition {
+        sp.compress_chunk(&batch.data, start)?
+    } else {
+        sp.compress_chunk_no_precondition(&batch.data, start)?
+    };
+    writer.append(chunk)?;
+    if writer.completed_shards() > *checkpointed_shards {
+        let durable = writer.checkpoint()?;
+        *checkpointed_shards = writer.completed_shards();
+        return Ok(durable);
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::sampling::SparsifyConfig;
+    use crate::store::SparseStoreReader;
+    use crate::transform::TransformKind;
+    use std::sync::mpsc::sync_channel;
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pds_serve_ingest_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn worker_ingests_checkpoints_and_finalizes() {
+        let dir = temp_dir("ok");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 7 };
+        let sp = Sparsifier::new(16, cfg).unwrap();
+        let writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 8).unwrap();
+        let shared = Arc::new(IngestShared::new());
+        let metrics = Arc::new(ServeMetrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = sync_channel::<IngestBatch>(8);
+        let worker = {
+            let (shared, metrics, shutdown) =
+                (shared.clone(), metrics.clone(), shutdown.clone());
+            std::thread::spawn(move || {
+                run_ingest_worker(rx, sp, true, writer, shared, metrics, shutdown)
+            })
+        };
+
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..3 {
+            let data = Mat::from_fn(16, 6, |_, _| rng.normal());
+            tx.send(IngestBatch { data }).unwrap();
+            shared.lock_progress().enqueued += 1;
+        }
+        assert!(shared.wait_absorbed(3, Duration::from_secs(10)), "flush timed out");
+        // 18 columns at shard_cols=8: two full shards must be durable
+        // (checkpointed) before shutdown
+        assert_eq!(shared.lock_progress().durable_cols, 16);
+        drop(tx); // disconnect ends the worker
+        let manifest = worker.join().unwrap().unwrap();
+        assert_eq!(manifest.n, 18);
+        assert!(shared.lock_progress().finished);
+
+        // the finalized store reads back CRC-clean
+        let mut reader = SparseStoreReader::open(&dir).unwrap().with_verify(true);
+        let mut cols = 0;
+        while let Some(chunk) = reader.next_chunk().unwrap() {
+            cols += chunk.n();
+        }
+        assert_eq!(cols, 18);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn writer_failure_poisons_the_lane_not_the_daemon() {
+        let dir = temp_dir("err");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 7 };
+        let sp = Sparsifier::new(16, cfg).unwrap();
+        let writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 8).unwrap();
+        let shared = Arc::new(IngestShared::new());
+        let metrics = Arc::new(ServeMetrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = sync_channel::<IngestBatch>(8);
+        let worker = {
+            let (shared, metrics, shutdown) =
+                (shared.clone(), metrics.clone(), shutdown.clone());
+            std::thread::spawn(move || {
+                run_ingest_worker(rx, sp, true, writer, shared, metrics, shutdown)
+            })
+        };
+
+        // a wrong-dimension batch makes the compressor fail inside the
+        // worker (handlers normally reject this; the worker must survive
+        // it regardless)
+        tx.send(IngestBatch { data: Mat::zeros(4, 2) }).unwrap();
+        shared.lock_progress().enqueued += 1;
+        // and a good batch after it is dropped, not wedged
+        tx.send(IngestBatch { data: Mat::zeros(16, 2) }).unwrap();
+        shared.lock_progress().enqueued += 1;
+
+        assert!(shared.wait_absorbed(2, Duration::from_secs(10)), "absorb timed out");
+        assert!(shared.error_message().is_some());
+        drop(tx);
+        assert!(worker.join().unwrap().is_err(), "a failed lane must report the failure");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,627 @@
+//! `pds serve` — a long-running concurrent ingest + query daemon.
+//!
+//! Three lanes share one process, coupled only through lock-free or
+//! briefly-locked state:
+//!
+//! * **Ingest** ([`ingest`]): request handlers validate raw sample
+//!   batches and `try_send` them into a bounded queue (a full queue is
+//!   a typed `backpressure` error, never a block); one worker thread
+//!   owns the [`Sparsifier`] and a live
+//!   [`SparseStoreWriter`](crate::store::SparseStoreWriter), appending
+//!   and durably checkpointing the manifest at every shard boundary —
+//!   a killed daemon always leaves a CRC-clean, openable store.
+//! * **Refresh** ([`refresh`]): a timer thread incrementally re-fits
+//!   the model — only shards new since the last cycle are folded, then
+//!   merged into the running partial via the PR 7
+//!   [`PartialFit`](crate::distributed::PartialFit) law — and publishes
+//!   an immutable [`ModelSnapshot`](snapshot::ModelSnapshot) with a
+//!   bumped version.
+//! * **Query**: handlers answer from an `Arc`-swapped snapshot
+//!   ([`snapshot::SnapshotCell`]) — queries never block on a refresh
+//!   and never observe a half-written model.
+//!
+//! **Graceful degradation** is the design center: a failed refresh
+//! marks the current snapshot `stale: true` and keeps serving it; a
+//! failed ingest writer poisons only the ingest lane; malformed
+//! requests get typed error codes ([`protocol`]); SIGTERM / ctrl-c
+//! flush the writer and finalize the manifest before exit.
+//!
+//! Transports: newline-delimited JSON over stdin/stdout
+//! ([`run_pipe`] — the test- and CI-friendly mode) or a Unix domain
+//! socket ([`run_socket`], unix only).
+
+pub mod ingest;
+pub mod json;
+pub mod protocol;
+pub mod refresh;
+pub mod snapshot;
+
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::kmeans::KmeansOpts;
+use crate::linalg::Mat;
+use crate::metrics::ServeMetrics;
+use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
+use crate::sparse::Precision;
+use crate::store::{SparseStoreWriter, StoreManifest};
+
+use self::ingest::{run_ingest_worker, IngestBatch, IngestShared};
+use self::json::Json;
+use self::protocol::{
+    error_response, ok_response, Request, CODE_BACKPRESSURE, CODE_BAD_REQUEST, CODE_INTERNAL,
+    CODE_NO_MODEL, CODE_SHUTDOWN, CODE_TIMEOUT,
+};
+use self::refresh::{run_refresh_worker, RefreshCtl, RefreshParams};
+use self::snapshot::{ModelSnapshot, QueryResult, SnapshotCell};
+
+/// Which model the daemon maintains and serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeTask {
+    /// Streaming PCA: queries project samples onto the fitted PCs.
+    Pca,
+    /// Streaming K-means: queries assign samples to the nearest center
+    /// (with the Eq. 43 center-error bound where the theory applies).
+    Kmeans,
+}
+
+impl ServeTask {
+    /// Parse a `--task` value.
+    pub fn parse(name: &str) -> Result<ServeTask> {
+        match name {
+            "pca" => Ok(ServeTask::Pca),
+            "kmeans" => Ok(ServeTask::Kmeans),
+            other => Err(Error::Invalid(format!("--task {other:?} (want kmeans|pca)"))),
+        }
+    }
+
+    /// Stable lowercase name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeTask::Pca => "pca",
+            ServeTask::Kmeans => "kmeans",
+        }
+    }
+}
+
+/// Daemon configuration (fixed at start).
+pub struct ServeConfig {
+    /// Fresh directory for the live store (must not already hold a
+    /// completed store).
+    pub store_dir: PathBuf,
+    /// Model to maintain.
+    pub task: ServeTask,
+    /// Original sample dimension — every ingest/query sample must have
+    /// exactly this many entries.
+    pub p: usize,
+    /// Sparsifier configuration (gamma, transform, seed).
+    pub scfg: SparsifyConfig,
+    /// Element-sampling scheme.
+    pub scheme: Scheme,
+    /// Store value precision.
+    pub precision: Precision,
+    /// Apply the ROS preconditioner (false = the ablation arm).
+    pub precondition: bool,
+    /// Columns per store shard — also the checkpoint granularity.
+    pub shard_cols: usize,
+    /// PCA: components to keep.
+    pub topk: usize,
+    /// K-means: cluster count.
+    pub k: usize,
+    /// K-means: Lloyd options for the coreset solve.
+    pub kmeans_opts: KmeansOpts,
+    /// K-means: merge-and-reduce coreset node capacity.
+    pub coreset_capacity: usize,
+    /// Bounded ingest queue depth, in batches — the backpressure knob.
+    pub queue_batches: usize,
+    /// Periodic model-refresh interval.
+    pub refresh_interval: Duration,
+    /// Wait budget for blocking requests (`refresh`, `flush`).
+    pub request_timeout: Duration,
+}
+
+impl ServeConfig {
+    /// A config with the daemon defaults for `store_dir`, `task`, `p`.
+    pub fn new(store_dir: PathBuf, task: ServeTask, p: usize) -> Self {
+        ServeConfig {
+            store_dir,
+            task,
+            p,
+            scfg: SparsifyConfig {
+                gamma: 0.2,
+                transform: crate::transform::TransformKind::Hadamard,
+                seed: 0,
+            },
+            scheme: Scheme::Precond,
+            precision: Precision::F64,
+            precondition: true,
+            shard_cols: 1024,
+            topk: 5,
+            k: 5,
+            kmeans_opts: KmeansOpts::default(),
+            coreset_capacity: 256,
+            queue_batches: 32,
+            refresh_interval: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State shared by every handler and worker thread.
+struct Shared {
+    task: ServeTask,
+    p_orig: usize,
+    queue_batches: usize,
+    timeout: Duration,
+    metrics: Arc<ServeMetrics>,
+    cell: Arc<SnapshotCell>,
+    ingest: Arc<IngestShared>,
+    refresh: Arc<RefreshCtl>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// A running serve daemon: the ingest worker, the refresh loop, and the
+/// shared state handlers answer from. Create [`Client`]s (one per
+/// connection / test) with [`client`](Self::client); stop with
+/// [`shutdown`](Self::shutdown), which flushes the writer and returns
+/// the finalized manifest.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    tx: SyncSender<IngestBatch>,
+    ingest_thread: JoinHandle<Result<StoreManifest>>,
+    refresh_thread: JoinHandle<()>,
+}
+
+impl Daemon {
+    /// Start the daemon: create the live store in `cfg.store_dir` and
+    /// spawn the ingest + refresh threads.
+    pub fn start(cfg: ServeConfig) -> Result<Daemon> {
+        if cfg.queue_batches == 0 {
+            return Err(Error::Invalid("serve: queue_batches must be positive".into()));
+        }
+        let sp = Sparsifier::with_scheme(cfg.p, cfg.scfg, cfg.scheme)?;
+        let writer =
+            SparseStoreWriter::create(&cfg.store_dir, &sp, cfg.scfg, cfg.precondition, cfg.shard_cols)?
+                .with_precision(cfg.precision);
+
+        let metrics = Arc::new(ServeMetrics::new());
+        let cell = Arc::new(SnapshotCell::new());
+        let ingest_shared = Arc::new(IngestShared::new());
+        let refresh_ctl = Arc::new(RefreshCtl::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (tx, rx) = sync_channel::<IngestBatch>(cfg.queue_batches);
+        let ingest_thread = {
+            let (shared, m, stop) = (ingest_shared.clone(), metrics.clone(), shutdown.clone());
+            let precondition = cfg.precondition;
+            std::thread::Builder::new()
+                .name("pds-serve-ingest".into())
+                .spawn(move || run_ingest_worker(rx, sp, precondition, writer, shared, m, stop))?
+        };
+        let refresh_thread = {
+            let params = RefreshParams {
+                dir: cfg.store_dir.clone(),
+                task: cfg.task,
+                topk: cfg.topk,
+                k: cfg.k,
+                kmeans_opts: cfg.kmeans_opts,
+                coreset_capacity: cfg.coreset_capacity,
+                interval: cfg.refresh_interval,
+            };
+            let (c, ctl, m, stop) =
+                (cell.clone(), refresh_ctl.clone(), metrics.clone(), shutdown.clone());
+            std::thread::Builder::new()
+                .name("pds-serve-refresh".into())
+                .spawn(move || run_refresh_worker(params, c, ctl, m, stop))?
+        };
+
+        let shared = Arc::new(Shared {
+            task: cfg.task,
+            p_orig: cfg.p,
+            queue_batches: cfg.queue_batches,
+            timeout: cfg.request_timeout,
+            metrics,
+            cell,
+            ingest: ingest_shared,
+            refresh: refresh_ctl,
+            shutdown,
+        });
+        Ok(Daemon { shared, tx, ingest_thread, refresh_thread })
+    }
+
+    /// A request-handling client. Cheap to clone — each connection (or
+    /// test thread) gets its own.
+    pub fn client(&self) -> Client {
+        Client { shared: self.shared.clone(), tx: self.tx.clone() }
+    }
+
+    /// The daemon's metrics registry (live; shared with all handlers).
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.shared.metrics
+    }
+
+    /// Graceful stop: raise the shutdown flag, let the ingest worker
+    /// drain its backlog and finalize the store, join both workers.
+    /// Returns the final manifest (or the ingest lane's first error)
+    /// and the final metrics dump.
+    pub fn shutdown(self) -> (Result<StoreManifest>, String) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.refresh.cv.notify_all();
+        self.shared.ingest.cv.notify_all();
+        drop(self.tx);
+        let manifest = match self.ingest_thread.join() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Invalid("serve: ingest worker panicked".into())),
+        };
+        let _ = self.refresh_thread.join();
+        let stats = self.shared.metrics.to_json();
+        (manifest, stats)
+    }
+}
+
+/// One protocol endpoint: parses request lines, dispatches them against
+/// the daemon's shared state, and serializes responses. Every response
+/// is a single JSON line; the boolean in [`handle_line`](Self::handle_line)'s
+/// return is true when the request asked the daemon to shut down.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<Shared>,
+    tx: SyncSender<IngestBatch>,
+}
+
+impl Client {
+    /// Handle one request line; returns `(response_line, shutdown)`.
+    pub fn handle_line(&self, line: &str) -> (String, bool) {
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let request = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => return (self.error(CODE_BAD_REQUEST, &e.to_string()), false),
+        };
+        match request {
+            Request::Ingest { samples } => (self.handle_ingest(samples), false),
+            Request::Query { sample } => (self.handle_query(&sample), false),
+            Request::Stats => (self.handle_stats(), false),
+            Request::Refresh => (self.handle_refresh(), false),
+            Request::Flush => (self.handle_flush(), false),
+            Request::Shutdown => {
+                self.shared.shutdown.store(true, Ordering::SeqCst);
+                self.shared.refresh.cv.notify_all();
+                (ok_response(vec![]), true)
+            }
+        }
+    }
+
+    fn error(&self, code: &str, message: &str) -> String {
+        self.shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        error_response(code, message)
+    }
+
+    fn handle_ingest(&self, samples: Vec<Vec<f64>>) -> String {
+        let t0 = Instant::now();
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return self.error(CODE_SHUTDOWN, "daemon is shutting down");
+        }
+        if let Some(msg) = self.shared.ingest.error_message() {
+            return self.error(CODE_INTERNAL, &format!("ingest lane failed: {msg}"));
+        }
+        for (i, s) in samples.iter().enumerate() {
+            if s.len() != self.shared.p_orig {
+                return self.error(
+                    CODE_BAD_REQUEST,
+                    &format!(
+                        "samples[{i}] has {} entries, the store dimension is {}",
+                        s.len(),
+                        self.shared.p_orig
+                    ),
+                );
+            }
+        }
+        let n = samples.len();
+        let data = Mat::from_fn(self.shared.p_orig, n, |i, j| samples[j][i]);
+        // count under the progress lock so enqueued/absorbed and the
+        // queue-depth gauge stay mutually consistent
+        let mut pg = self.shared.ingest.lock_progress();
+        if pg.finished {
+            drop(pg);
+            return self.error(CODE_SHUTDOWN, "ingest lane already finalized");
+        }
+        match self.tx.try_send(IngestBatch { data }) {
+            Ok(()) => {
+                pg.enqueued += 1;
+                let depth = pg.enqueued.saturating_sub(pg.absorbed);
+                self.shared.metrics.queue_depth.store(depth, Ordering::Relaxed);
+                drop(pg);
+                let m = &self.shared.metrics;
+                m.ingested_rows.fetch_add(n as u64, Ordering::Relaxed);
+                m.ingested_batches.fetch_add(1, Ordering::Relaxed);
+                m.ingest_latency.record(t0.elapsed());
+                ok_response(vec![
+                    ("rows", Json::Num(n as f64)),
+                    ("queue_depth", Json::Num(depth as f64)),
+                ])
+            }
+            Err(TrySendError::Full(_)) => {
+                drop(pg);
+                self.shared.metrics.backpressure_rejections.fetch_add(1, Ordering::Relaxed);
+                self.error(
+                    CODE_BACKPRESSURE,
+                    &format!(
+                        "ingest queue full ({} batches); retry later",
+                        self.shared.queue_batches
+                    ),
+                )
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                drop(pg);
+                self.error(CODE_INTERNAL, "ingest lane terminated")
+            }
+        }
+    }
+
+    /// Response fields common to every model-backed response.
+    fn model_fields(&self, snap: &ModelSnapshot) -> Vec<(&'static str, Json)> {
+        vec![
+            ("model_version", Json::Num(snap.version as f64)),
+            ("stale", Json::Bool(self.shared.cell.is_stale())),
+            ("n", Json::Num(snap.n as f64)),
+        ]
+    }
+
+    fn handle_query(&self, sample: &[f64]) -> String {
+        let t0 = Instant::now();
+        let Some(snap) = self.shared.cell.load() else {
+            return self.error(CODE_NO_MODEL, "no model published yet (ingest, then refresh)");
+        };
+        match snap.query(sample) {
+            Ok(QueryResult::Projection { coords }) => {
+                let mut fields = self.model_fields(&snap);
+                fields.push(("coords", Json::Arr(coords.into_iter().map(Json::Num).collect())));
+                self.shared.metrics.query_latency.record(t0.elapsed());
+                ok_response(fields)
+            }
+            Ok(QueryResult::Assignment { cluster, distance2, center_bound }) => {
+                let mut fields = self.model_fields(&snap);
+                fields.push(("cluster", Json::Num(f64::from(cluster))));
+                fields.push(("distance2", Json::Num(distance2)));
+                // NaN (theory-not-applicable) serializes as null
+                fields.push(("center_bound", Json::Num(center_bound)));
+                self.shared.metrics.query_latency.record(t0.elapsed());
+                ok_response(fields)
+            }
+            Err(e) => self.error(CODE_BAD_REQUEST, &e.to_string()),
+        }
+    }
+
+    fn handle_stats(&self) -> String {
+        let pg = *self.shared.ingest.lock_progress();
+        let ingest_error = match self.shared.ingest.error_message() {
+            Some(m) => Json::Str(m).to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"ok\":true,\"task\":{},\"model_version\":{},\"stale\":{},\
+             \"enqueued\":{},\"absorbed\":{},\"total_cols\":{},\"durable_cols\":{},\
+             \"ingest_error\":{},\"metrics\":{}}}",
+            Json::Str(self.shared.task.name().to_string()),
+            self.shared.cell.version(),
+            self.shared.cell.is_stale(),
+            pg.enqueued,
+            pg.absorbed,
+            pg.total_cols,
+            pg.durable_cols,
+            ingest_error,
+            self.shared.metrics.to_json()
+        )
+    }
+
+    fn handle_refresh(&self) -> String {
+        let goal = self.shared.refresh.request();
+        match self.shared.refresh.wait_completed(goal, self.shared.timeout) {
+            Ok(None) => {
+                let fields = vec![
+                    ("model_version", Json::Num(self.shared.cell.version() as f64)),
+                    ("stale", Json::Bool(self.shared.cell.is_stale())),
+                ];
+                ok_response(fields)
+            }
+            Ok(Some(msg)) => self.error(
+                CODE_INTERNAL,
+                &format!("refresh failed (still serving the previous snapshot): {msg}"),
+            ),
+            Err(()) => {
+                self.error(CODE_TIMEOUT, "refresh did not complete within the request timeout")
+            }
+        }
+    }
+
+    fn handle_flush(&self) -> String {
+        let goal = self.shared.ingest.lock_progress().enqueued;
+        if !self.shared.ingest.wait_absorbed(goal, self.shared.timeout) {
+            return self.error(CODE_TIMEOUT, "flush did not complete within the request timeout");
+        }
+        if let Some(msg) = self.shared.ingest.error_message() {
+            return self.error(CODE_INTERNAL, &format!("ingest lane failed: {msg}"));
+        }
+        let pg = *self.shared.ingest.lock_progress();
+        ok_response(vec![
+            ("absorbed", Json::Num(pg.absorbed as f64)),
+            ("total_cols", Json::Num(pg.total_cols as f64)),
+            ("durable_cols", Json::Num(pg.durable_cols as f64)),
+        ])
+    }
+}
+
+/// Signal plumbing: SIGTERM / SIGINT raise a flag the serve loops poll,
+/// so shutdown always goes through the writer-flush path.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static TERMINATE: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_signum: i32) {
+        // async-signal-safe: one atomic store, nothing else
+        TERMINATE.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // libc is always linked by std on unix; declaring the handler as
+        // a typed fn pointer avoids any numeric cast
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            let _ = signal(SIGINT, on_signal);
+            let _ = signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn raised() -> bool {
+        TERMINATE.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+    pub fn raised() -> bool {
+        false
+    }
+}
+
+/// Spawn the watcher that turns a SIGTERM/SIGINT into a graceful stop:
+/// raise the daemon's shutdown flag, wait for the ingest worker to
+/// finalize the store, dump final metrics to stderr, exit 0. Returns
+/// once the daemon shuts down normally instead.
+fn spawn_signal_watcher(shared: Arc<Shared>) {
+    sig::install();
+    std::thread::Builder::new()
+        .name("pds-serve-signals".into())
+        .spawn(move || loop {
+            if sig::raised() {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                shared.refresh.cv.notify_all();
+                // wait until the store is finalized before exiting
+                let mut pg = shared.ingest.lock_progress();
+                while !pg.finished {
+                    pg = match shared.ingest.cv.wait_timeout(pg, Duration::from_millis(100)) {
+                        Ok((g, _)) => g,
+                        Err(poisoned) => poisoned.into_inner().0,
+                    };
+                }
+                drop(pg);
+                eprintln!("{}", shared.metrics.to_json());
+                std::process::exit(0);
+            }
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return; // normal shutdown path took over
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        })
+        .expect("spawn signal watcher");
+}
+
+/// Run the daemon over stdin/stdout: one request line in, one response
+/// line out, until EOF or a `shutdown` request; then flush + finalize
+/// and dump final metrics to stderr. This is the transport the e2e
+/// tests and the CI smoke job drive.
+pub fn run_pipe(cfg: ServeConfig) -> Result<()> {
+    let daemon = Daemon::start(cfg)?;
+    spawn_signal_watcher(daemon.shared.clone());
+    let client = daemon.client();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, quit) = client.handle_line(&line);
+        {
+            let mut out = stdout.lock();
+            out.write_all(response.as_bytes())?;
+            out.write_all(b"\n")?;
+            out.flush()?;
+        }
+        if quit {
+            break;
+        }
+    }
+    drop(client);
+    let (manifest, stats) = daemon.shutdown();
+    eprintln!("{stats}");
+    manifest.map(|_| ())
+}
+
+/// Run the daemon on a Unix domain socket at `path`: one handler thread
+/// per connection, all sharing the daemon state. Removes a stale socket
+/// file first; stops on SIGTERM/SIGINT or a `shutdown` request from any
+/// connection.
+#[cfg(unix)]
+pub fn run_socket(cfg: ServeConfig, path: &std::path::Path) -> Result<()> {
+    use std::os::unix::net::UnixListener;
+
+    let daemon = Daemon::start(cfg)?;
+    spawn_signal_watcher(daemon.shared.clone());
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)?;
+    listener.set_nonblocking(true)?;
+    eprintln!("pds serve: listening on {}", path.display());
+
+    while !daemon.shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let client = daemon.client();
+                std::thread::Builder::new()
+                    .name("pds-serve-conn".into())
+                    .spawn(move || serve_connection(stream, client))?;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                let _ = std::fs::remove_file(path);
+                return Err(e.into());
+            }
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    let (manifest, stats) = daemon.shutdown();
+    eprintln!("{stats}");
+    manifest.map(|_| ())
+}
+
+#[cfg(unix)]
+fn serve_connection(stream: std::os::unix::net::UnixStream, client: Client) {
+    use std::io::BufReader;
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut writer = std::io::BufWriter::new(write_half);
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, quit) = client.handle_line(&line);
+        if writer.write_all(response.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+            || writer.flush().is_err()
+        {
+            break;
+        }
+        if quit {
+            break;
+        }
+    }
+}

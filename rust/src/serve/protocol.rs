@@ -1,0 +1,199 @@
+//! The serve daemon's newline-delimited JSON protocol.
+//!
+//! One request object per line in, one response object per line out.
+//!
+//! Requests (`cmd` selects the verb):
+//!
+//! ```text
+//! {"cmd":"ingest","samples":[[x00,…,x0p],…]}   enqueue raw sample columns
+//! {"cmd":"query","sample":[x0,…,xp]}           project / assign one sample
+//! {"cmd":"stats"}                              dump the metrics registry
+//! {"cmd":"refresh"}                            force a model refresh, wait for it
+//! {"cmd":"flush"}                              wait until enqueued batches are absorbed
+//! {"cmd":"shutdown"}                           graceful stop (writer finalized)
+//! ```
+//!
+//! Responses always carry `"ok"`: `{"ok":true,…}` on success,
+//! `{"ok":false,"code":C,"error":MSG}` on a typed failure. Model-backed
+//! responses additionally carry `"model_version"` (monotone, bumped per
+//! successful refresh) and `"stale"` (true when the last refresh failed
+//! and the daemon is serving the previous snapshot — the degraded mode).
+//! Malformed lines, oversized batches, and full queues are all typed
+//! errors; the daemon never closes the connection in response to a bad
+//! request.
+
+use crate::error::{Error, Result};
+
+use super::json::Json;
+
+/// Typed error code: the request line was not a valid protocol message.
+pub const CODE_BAD_REQUEST: &str = "bad_request";
+/// Typed error code: the bounded ingest queue is full (backpressure —
+/// retry later; nothing was enqueued).
+pub const CODE_BACKPRESSURE: &str = "backpressure";
+/// Typed error code: no model snapshot has been published yet.
+pub const CODE_NO_MODEL: &str = "no_model";
+/// Typed error code: the request's wait budget elapsed (the operation
+/// may still complete in the background).
+pub const CODE_TIMEOUT: &str = "timeout";
+/// Typed error code: the daemon is shutting down and no longer accepts
+/// ingest.
+pub const CODE_SHUTDOWN: &str = "shutdown";
+/// Typed error code: an internal failure (e.g. the ingest writer hit an
+/// I/O error); the daemon keeps serving queries from the last snapshot.
+pub const CODE_INTERNAL: &str = "internal";
+
+/// A parsed protocol request.
+#[derive(Debug, PartialEq)]
+pub enum Request {
+    /// Enqueue raw sample columns (each of the store's original
+    /// dimension) for sparsification and ingest.
+    Ingest {
+        /// The batch: one inner array per sample column.
+        samples: Vec<Vec<f64>>,
+    },
+    /// Project one sample onto the fitted PCs / assign it to the nearest
+    /// center, from the current snapshot.
+    Query {
+        /// The sample, in the store's original dimension.
+        sample: Vec<f64>,
+    },
+    /// Dump the metrics registry.
+    Stats,
+    /// Force a model refresh and wait (bounded) for it to complete.
+    Refresh,
+    /// Wait (bounded) until every batch enqueued so far has been
+    /// absorbed by the ingest thread and completed shards are durable.
+    Flush,
+    /// Graceful shutdown.
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one protocol line. Every failure is [`Error::Invalid`] with
+    /// a message suitable for a `bad_request` response.
+    pub fn parse(line: &str) -> Result<Request> {
+        let root = Json::parse(line)?;
+        let cmd = root
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Invalid("request needs a string `cmd` field".into()))?;
+        match cmd {
+            "ingest" => {
+                let rows = root
+                    .get("samples")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Invalid("ingest needs a `samples` array".into()))?;
+                if rows.is_empty() {
+                    return Err(Error::Invalid("ingest: `samples` is empty".into()));
+                }
+                let mut samples = Vec::with_capacity(rows.len());
+                for (i, row) in rows.iter().enumerate() {
+                    samples.push(number_vec(row, &format!("samples[{i}]"))?);
+                }
+                Ok(Request::Ingest { samples })
+            }
+            "query" => {
+                let sample = root
+                    .get("sample")
+                    .ok_or_else(|| Error::Invalid("query needs a `sample` array".into()))?;
+                Ok(Request::Query { sample: number_vec(sample, "sample")? })
+            }
+            "stats" => Ok(Request::Stats),
+            "refresh" => Ok(Request::Refresh),
+            "flush" => Ok(Request::Flush),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(Error::Invalid(format!("unknown cmd {other:?}"))),
+        }
+    }
+}
+
+/// Extract a JSON array of finite numbers. Non-finite values (JSON
+/// cannot express NaN, but `1e999` overflows to infinity) are rejected:
+/// they would silently poison every downstream estimate.
+fn number_vec(value: &Json, what: &str) -> Result<Vec<f64>> {
+    let items = value
+        .as_arr()
+        .ok_or_else(|| Error::Invalid(format!("{what} must be an array of numbers")))?;
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let v = item
+            .as_f64()
+            .ok_or_else(|| Error::Invalid(format!("{what}[{i}] is not a number")))?;
+        if !v.is_finite() {
+            return Err(Error::Invalid(format!("{what}[{i}] is not finite")));
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Serialize a success response: `{"ok":true, …fields}`.
+pub fn ok_response(fields: Vec<(&str, Json)>) -> String {
+    let mut obj = vec![("ok".to_string(), Json::Bool(true))];
+    obj.extend(fields.into_iter().map(|(k, v)| (k.to_string(), v)));
+    Json::Obj(obj).to_string()
+}
+
+/// Serialize a typed error response:
+/// `{"ok":false,"code":code,"error":message}`.
+pub fn error_response(code: &str, message: &str) -> String {
+    Json::Obj(vec![
+        ("ok".to_string(), Json::Bool(false)),
+        ("code".to_string(), Json::Str(code.to_string())),
+        ("error".to_string(), Json::Str(message.to_string())),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_parse() {
+        assert_eq!(
+            Request::parse(r#"{"cmd":"ingest","samples":[[1,2],[3,4]]}"#).unwrap(),
+            Request::Ingest { samples: vec![vec![1.0, 2.0], vec![3.0, 4.0]] }
+        );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"query","sample":[0.5,1.5]}"#).unwrap(),
+            Request::Query { sample: vec![0.5, 1.5] }
+        );
+        for (line, want) in [
+            (r#"{"cmd":"stats"}"#, Request::Stats),
+            (r#"{"cmd":"refresh"}"#, Request::Refresh),
+            (r#"{"cmd":"flush"}"#, Request::Flush),
+            (r#"{"cmd":"shutdown"}"#, Request::Shutdown),
+        ] {
+            assert_eq!(Request::parse(line).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_typed_errors() {
+        for bad in [
+            "not json",
+            r#"{"cmd":"teleport"}"#,
+            r#"{"cmd":42}"#,
+            r#"{"cmd":"ingest"}"#,
+            r#"{"cmd":"ingest","samples":[]}"#,
+            r#"{"cmd":"ingest","samples":[["x"]]}"#,
+            r#"{"cmd":"query","sample":[1e999]}"#, // overflows to inf
+            r#"{"cmd":"query"}"#,
+        ] {
+            assert!(
+                matches!(Request::parse(bad), Err(Error::Invalid(_))),
+                "{bad:?} must be Invalid"
+            );
+        }
+    }
+
+    #[test]
+    fn responses_have_the_envelope() {
+        let ok = ok_response(vec![("rows", Json::Num(4.0))]);
+        assert_eq!(ok, r#"{"ok":true,"rows":4}"#);
+        let err = error_response(CODE_BACKPRESSURE, "queue full");
+        assert_eq!(err, r#"{"ok":false,"code":"backpressure","error":"queue full"}"#);
+    }
+}

@@ -1,0 +1,437 @@
+//! The daemon's model-refresh loop.
+//!
+//! A dedicated thread wakes on a timer (or a `refresh` request) and
+//! re-fits the model **incrementally**: only shards that appeared since
+//! the last cycle are folded — into a running
+//! [`PcaPartial`](crate::distributed::PcaPartial) (PCA) or
+//! [`CoresetPartial`](crate::distributed::CoresetPartial) (K-means) via
+//! the [`PartialFit`] merge law — then the merged partial is finalized
+//! and the result published into the [`SnapshotCell`] as a new model
+//! version. A store with no new shards is a no-op, so the steady-state
+//! cost of the loop is one manifest read.
+//!
+//! A failed refresh never kills the daemon: the failure is counted,
+//! the previous snapshot is marked stale, and the loop retries on the
+//! next tick (the degraded mode — clients see `stale: true`, never a
+//! dropped connection).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    coreset_partial_for_shards, pca_partial_for_shards, pca_report_from_partial, FitOutcome,
+};
+use crate::distributed::{weighted_kmeans, CoresetPartial, PartialFit, PcaPartial};
+use crate::error::{Error, Result};
+use crate::kmeans::{assign_dense, KmeansOpts, CENTER_BOUND_DELTA};
+use crate::linalg::Mat;
+use crate::metrics::{ServeMetrics, Timer};
+use crate::sampling::Sparsifier;
+use crate::store::{ShardEntry, SparseStoreReader, MANIFEST_FILE};
+
+use super::snapshot::{KmeansSnapshot, ModelKind, ModelSnapshot, PcaSnapshot, SnapshotCell};
+use super::ServeTask;
+
+/// Fit-side parameters of the refresh loop (fixed at daemon start).
+pub struct RefreshParams {
+    /// The live store directory (written by the ingest lane).
+    pub dir: PathBuf,
+    /// Which model to maintain.
+    pub task: ServeTask,
+    /// PCA: components to keep.
+    pub topk: usize,
+    /// K-means: cluster count.
+    pub k: usize,
+    /// K-means: Lloyd options for the coreset solve.
+    pub kmeans_opts: KmeansOpts,
+    /// K-means: merge-and-reduce coreset node capacity.
+    pub coreset_capacity: usize,
+    /// Periodic refresh interval.
+    pub interval: Duration,
+}
+
+/// Refresh handshake state: `refresh` requests bump `requested`, the
+/// loop bumps `completed` after each attempt, and waiters block on the
+/// condvar until their goal epoch completes.
+#[derive(Debug, Default)]
+pub struct RefreshStatus {
+    /// Epochs requested by clients.
+    pub requested: u64,
+    /// Epochs the loop has finished attempting (success or failure).
+    pub completed: u64,
+    /// Message of the most recent failed attempt; `None` after a
+    /// successful or no-op attempt.
+    pub last_error: Option<String>,
+}
+
+/// Shared handle for requesting refreshes and waiting on them.
+pub struct RefreshCtl {
+    /// Guarded epoch counters.
+    pub state: Mutex<RefreshStatus>,
+    /// Notified on every request and every completed attempt.
+    pub cv: Condvar,
+}
+
+impl RefreshCtl {
+    /// Fresh control state (epoch 0, no error).
+    pub fn new() -> Self {
+        RefreshCtl { state: Mutex::new(RefreshStatus::default()), cv: Condvar::new() }
+    }
+
+    /// Lock the status, surviving poisoning (a panicked refresh thread
+    /// must not wedge request handlers).
+    pub fn lock_state(&self) -> MutexGuard<'_, RefreshStatus> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Request a refresh; returns the goal epoch to wait for.
+    pub fn request(&self) -> u64 {
+        let mut st = self.lock_state();
+        st.requested += 1;
+        let goal = st.requested;
+        drop(st);
+        self.cv.notify_all();
+        goal
+    }
+
+    /// Wait until attempt `goal` completes, up to `timeout`. Returns the
+    /// attempt's error message (`Ok(None)` = clean) or `Err(())` on
+    /// timeout.
+    pub fn wait_completed(
+        &self,
+        goal: u64,
+        timeout: Duration,
+    ) -> std::result::Result<Option<String>, ()> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.lock_state();
+        loop {
+            if st.completed >= goal {
+                return Ok(st.last_error.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, _) = match self.cv.wait_timeout(st, deadline - now) {
+                Ok(r) => r,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            st = guard;
+        }
+    }
+}
+
+impl Default for RefreshCtl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The incremental fit state the loop carries between cycles: which
+/// shards are already folded, the running partials, and the version
+/// counter.
+struct FitState {
+    folded: BTreeSet<usize>,
+    pca: Option<PcaPartial>,
+    coreset: Option<CoresetPartial>,
+    /// Columns covered by the folded shards (the K-means sample count).
+    n_cols: usize,
+    /// Shard-fold passes performed (reported as `sparse_passes`).
+    folds: usize,
+    /// New shards were folded but no snapshot published yet (a finalize
+    /// failed) — retry finalization even if no further shards appear.
+    dirty: bool,
+    version: u64,
+}
+
+impl FitState {
+    fn new() -> Self {
+        FitState {
+            folded: BTreeSet::new(),
+            pca: None,
+            coreset: None,
+            n_cols: 0,
+            folds: 0,
+            dirty: false,
+            version: 0,
+        }
+    }
+}
+
+/// The refresh loop. Runs until `shutdown` is raised; one final wakeup
+/// is guaranteed after the flag goes up so a `refresh` request cannot
+/// strand a waiter forever (it observes `completed` or times out).
+pub fn run_refresh_worker(
+    params: RefreshParams,
+    cell: Arc<SnapshotCell>,
+    ctl: Arc<RefreshCtl>,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut fit = FitState::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        // sleep until the interval elapses, a refresh is requested, or
+        // shutdown is raised
+        {
+            let deadline = Instant::now() + params.interval;
+            let mut st = ctl.lock_state();
+            while st.requested <= st.completed && !shutdown.load(Ordering::SeqCst) {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = match ctl.cv.wait_timeout(st, deadline - now) {
+                    Ok(r) => r,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                st = guard;
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+
+        let goal = ctl.lock_state().requested;
+        let t0 = Instant::now();
+        let outcome = refresh_once(&params, &mut fit, &cell);
+        metrics.refresh_duration.record(t0.elapsed());
+        let error = match outcome {
+            Ok(true) => {
+                metrics.refreshes.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Ok(false) => None,
+            Err(e) => {
+                metrics.refresh_failures.fetch_add(1, Ordering::Relaxed);
+                // degrade: keep serving the previous snapshot, flagged
+                cell.mark_stale();
+                Some(e.to_string())
+            }
+        };
+        let mut st = ctl.lock_state();
+        st.last_error = error;
+        st.completed = st.completed.max(goal);
+        drop(st);
+        ctl.cv.notify_all();
+    }
+    // unblock any refresh waiter that raced the shutdown flag
+    let mut st = ctl.lock_state();
+    st.completed = st.completed.max(st.requested);
+    drop(st);
+    ctl.cv.notify_all();
+}
+
+/// One refresh attempt. `Ok(true)` published a new snapshot, `Ok(false)`
+/// was a no-op (no store yet / nothing new), `Err` degrades the daemon.
+fn refresh_once(
+    params: &RefreshParams,
+    fit: &mut FitState,
+    cell: &SnapshotCell,
+) -> Result<bool> {
+    if !params.dir.join(MANIFEST_FILE).exists() {
+        // the ingest lane has not checkpointed a single shard yet
+        return Ok(false);
+    }
+    let mut reader = SparseStoreReader::open(&params.dir)?;
+    let sp = reader.sparsifier()?;
+    let preconditioned = reader.manifest().preconditioned;
+    let new: Vec<ShardEntry> = reader
+        .manifest()
+        .shards
+        .iter()
+        .filter(|s| !fit.folded.contains(&s.index))
+        .cloned()
+        .collect();
+    if new.is_empty() && !fit.dirty {
+        return Ok(false);
+    }
+
+    let snapshot = match params.task {
+        ServeTask::Pca => {
+            if !new.is_empty() {
+                let fresh = pca_partial_for_shards(&mut reader, &sp, &new)?;
+                fold(fit, &new, |state| match &mut state.pca {
+                    Some(acc) => acc.merge_from(&fresh),
+                    none => {
+                        *none = Some(fresh);
+                        Ok(())
+                    }
+                })?;
+            }
+            let partial = fit
+                .pca
+                .as_ref()
+                .ok_or_else(|| Error::Invalid("refresh: no PCA partial folded yet".into()))?;
+            let report = pca_report_from_partial(
+                partial,
+                &sp,
+                params.topk,
+                preconditioned,
+                Timer::new(),
+                fit.folds,
+            )?;
+            let FitOutcome::Pca(pca_fit) = report.outcome else {
+                return Err(Error::Invalid("refresh: PCA plan returned a non-PCA outcome".into()));
+            };
+            ModelSnapshot {
+                version: fit.version + 1,
+                n: report.n,
+                kind: ModelKind::Pca(PcaSnapshot {
+                    components: pca_fit.pca.components,
+                    mean: pca_fit.mean,
+                    eigenvalues: pca_fit.pca.eigenvalues,
+                }),
+            }
+        }
+        ServeTask::Kmeans => {
+            if !new.is_empty() {
+                let fresh = coreset_partial_for_shards(
+                    &mut reader,
+                    &sp,
+                    &new,
+                    params.coreset_capacity,
+                    params.kmeans_opts.seed,
+                )?;
+                fold(fit, &new, |state| match &mut state.coreset {
+                    Some(acc) => acc.merge_from(&fresh),
+                    none => {
+                        *none = Some(fresh);
+                        Ok(())
+                    }
+                })?;
+            }
+            let partial = fit
+                .coreset
+                .as_ref()
+                .ok_or_else(|| Error::Invalid("refresh: no coreset folded yet".into()))?;
+            let (points, weights) = partial.points();
+            let (centers_pre, iterations, converged) =
+                weighted_kmeans(&points, &weights, params.k, &params.kmeans_opts)?;
+            let centers =
+                if preconditioned { sp.unmix(&centers_pre) } else { sp.truncate(&centers_pre) };
+            let center_bound = coreset_center_bound(&sp, &points, &weights, &centers_pre);
+            ModelSnapshot {
+                version: fit.version + 1,
+                n: fit.n_cols,
+                kind: ModelKind::Kmeans(KmeansSnapshot {
+                    centers,
+                    center_bound,
+                    iterations,
+                    converged,
+                }),
+            }
+        }
+    };
+
+    fit.version = snapshot.version;
+    fit.dirty = false;
+    cell.publish(snapshot);
+    Ok(true)
+}
+
+/// Bookkeeping around one successful shard fold: run the merge, then
+/// mark the shards folded and the state dirty (so a later finalize
+/// failure is retried without re-reading these shards).
+fn fold(
+    fit: &mut FitState,
+    new: &[ShardEntry],
+    merge: impl FnOnce(&mut FitState) -> Result<()>,
+) -> Result<()> {
+    // split the borrow: merge mutates the partial slots through the
+    // closure, the bookkeeping below mutates the counters
+    merge(fit)?;
+    for s in new {
+        fit.folded.insert(s.index);
+        fit.n_cols += s.n_cols;
+    }
+    fit.folds += 1;
+    fit.dirty = true;
+    Ok(())
+}
+
+/// Eq. 43 worst-cluster center-error bound, evaluated at the
+/// coreset-estimated cluster sizes: assign the (unit-weight-scaled)
+/// coreset points to the fitted centers and round each cluster's total
+/// weight to its estimated population. The bound covers the uniform
+/// sampling schemes only — weighted (hybrid) fits return `NaN`
+/// (serialized as JSON `null`), never a number the theory does not
+/// back. Since the cluster sizes are estimates (not exact counts as in
+/// the Lloyd path), the serve docs present this as an indicative bound.
+fn coreset_center_bound(
+    sp: &Sparsifier,
+    points: &Mat,
+    weights: &[f64],
+    centers_pre: &Mat,
+) -> f64 {
+    if sp.weighted() {
+        return f64::NAN;
+    }
+    let (assign, _) = assign_dense(points, centers_pre);
+    let mut cluster_weight = vec![0.0f64; centers_pre.cols()];
+    for (j, &a) in assign.iter().enumerate() {
+        cluster_weight[a as usize] += weights[j];
+    }
+    let mut worst = f64::NAN;
+    for &w in &cluster_weight {
+        if w >= 0.5 {
+            // clamp before the cast: a pathological weight sum must not
+            // overflow the usize conversion
+            let n_k = (w.round().min(1e18) as usize).max(1);
+            let b = crate::estimators::center_error_bound(sp.p(), sp.m(), n_k, CENTER_BOUND_DELTA);
+            if !(b <= worst) {
+                worst = b;
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refresh_ctl_handshake() {
+        let ctl = RefreshCtl::new();
+        let goal = ctl.request();
+        assert_eq!(goal, 1);
+        // not completed yet: a zero-timeout wait times out
+        assert!(ctl.wait_completed(goal, Duration::from_millis(0)).is_err());
+        {
+            let mut st = ctl.lock_state();
+            st.completed = goal;
+            st.last_error = None;
+        }
+        assert_eq!(ctl.wait_completed(goal, Duration::from_millis(0)), Ok(None));
+    }
+
+    #[test]
+    fn center_bound_is_nan_for_weighted_schemes() {
+        use crate::sampling::{Scheme, SparsifyConfig};
+        use crate::transform::TransformKind;
+        let cfg = SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed: 1 };
+        let sp = Sparsifier::with_scheme(16, cfg, Scheme::Hybrid).unwrap();
+        let points = Mat::zeros(16, 4);
+        let centers = Mat::zeros(16, 2);
+        let b = coreset_center_bound(&sp, &points, &[1.0; 4], &centers);
+        assert!(b.is_nan());
+
+        // the uniform scheme gets a finite bound once clusters have weight
+        let sp = Sparsifier::with_scheme(16, cfg, Scheme::Precond).unwrap();
+        let mut points = Mat::zeros(16, 4);
+        for j in 0..4 {
+            points.col_mut(j)[0] = if j < 2 { -1.0 } else { 1.0 };
+        }
+        let mut centers = Mat::zeros(16, 2);
+        centers.col_mut(0)[0] = -1.0;
+        centers.col_mut(1)[0] = 1.0;
+        let b = coreset_center_bound(&sp, &points, &[100.0; 4], &centers);
+        assert!(b.is_finite() && b > 0.0, "bound {b}");
+    }
+}

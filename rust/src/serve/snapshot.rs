@@ -1,0 +1,250 @@
+//! Immutable model snapshots and the atomic swap cell.
+//!
+//! The refresh loop builds a complete new [`ModelSnapshot`] offline,
+//! then publishes it into the [`SnapshotCell`] under a write lock held
+//! only for the pointer swap. Query handlers clone the `Arc` out under
+//! a read lock and answer entirely from that immutable value, so a
+//! query observes exactly one model version end to end and never blocks
+//! on (or is torn by) a concurrent refresh.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// A published PCA model (original data domain — components and mean
+/// are already unmixed through the ROS adjoint where applicable).
+pub struct PcaSnapshot {
+    /// Top-k principal components, `p_orig × k` (columns are PCs).
+    pub components: Mat,
+    /// Estimated sample mean, length `p_orig`.
+    pub mean: Vec<f64>,
+    /// Eigenvalues matching the components.
+    pub eigenvalues: Vec<f64>,
+}
+
+/// A published K-means model (original data domain).
+pub struct KmeansSnapshot {
+    /// Cluster centers, `p_orig × k` (columns are centers).
+    pub centers: Mat,
+    /// Worst-cluster Eq. 43 center-error bound, evaluated at the
+    /// coreset-estimated cluster sizes (see the serve module docs).
+    /// `NaN` — serialized as JSON `null` — when the theory does not
+    /// cover the fit (weighted sampling schemes), per the repo's
+    /// "never present an unbacked number" rule.
+    pub center_bound: f64,
+    /// Lloyd iterations of the winning weighted-K-means restart.
+    pub iterations: usize,
+    /// Whether that restart converged.
+    pub converged: bool,
+}
+
+/// The task-specific payload of a snapshot.
+pub enum ModelKind {
+    /// A PCA fit.
+    Pca(PcaSnapshot),
+    /// A K-means fit.
+    Kmeans(KmeansSnapshot),
+}
+
+/// One immutable published model: everything a query needs, plus the
+/// provenance a client sees (`model_version`, sample count).
+pub struct ModelSnapshot {
+    /// Monotone version, bumped once per successful refresh.
+    pub version: u64,
+    /// Samples the model was fitted on.
+    pub n: usize,
+    /// The fitted model.
+    pub kind: ModelKind,
+}
+
+/// The outcome of a query against one snapshot.
+pub enum QueryResult {
+    /// PCA: the sample's coordinates in the fitted PC basis.
+    Projection {
+        /// `components? (x − mean)`, length k.
+        coords: Vec<f64>,
+    },
+    /// K-means: nearest-center assignment.
+    Assignment {
+        /// Index of the nearest center.
+        cluster: u32,
+        /// Squared Euclidean distance to that center.
+        distance2: f64,
+        /// The snapshot's Eq. 43 worst-cluster center-error bound
+        /// (`NaN` → JSON `null` when not applicable).
+        center_bound: f64,
+    },
+}
+
+impl ModelSnapshot {
+    /// The sample dimension queries must match (`p_orig`).
+    pub fn dim(&self) -> usize {
+        match &self.kind {
+            ModelKind::Pca(pca) => pca.mean.len(),
+            ModelKind::Kmeans(km) => km.centers.rows(),
+        }
+    }
+
+    /// Answer one query from this snapshot alone (no locks, no I/O).
+    /// The sample must have [`dim`](Self::dim) entries.
+    pub fn query(&self, sample: &[f64]) -> Result<QueryResult> {
+        if sample.len() != self.dim() {
+            return Err(Error::Invalid(format!(
+                "query sample has {} entries, the model dimension is {}",
+                sample.len(),
+                self.dim()
+            )));
+        }
+        match &self.kind {
+            ModelKind::Pca(pca) => {
+                let centered: Vec<f64> =
+                    sample.iter().zip(&pca.mean).map(|(x, m)| x - m).collect();
+                Ok(QueryResult::Projection { coords: pca.components.matvec_transa(&centered) })
+            }
+            ModelKind::Kmeans(km) => {
+                let x = Mat::from_vec(km.centers.rows(), 1, sample.to_vec())?;
+                let (assign, obj) = crate::kmeans::assign_dense(&x, &km.centers);
+                Ok(QueryResult::Assignment {
+                    cluster: assign[0],
+                    distance2: obj.max(0.0),
+                    center_bound: km.center_bound,
+                })
+            }
+        }
+    }
+}
+
+/// The swap cell: holds the current snapshot (if any) plus the
+/// degraded-mode flag. Writers (the refresh loop) publish whole
+/// snapshots; readers (query handlers) clone the `Arc` out. Lock
+/// poisoning is deliberately ignored — a panicked refresh must degrade
+/// the daemon, not wedge every query forever.
+pub struct SnapshotCell {
+    slot: RwLock<Option<Arc<ModelSnapshot>>>,
+    stale: AtomicBool,
+}
+
+impl SnapshotCell {
+    /// An empty cell (no model yet, not stale).
+    pub fn new() -> Self {
+        SnapshotCell { slot: RwLock::new(None), stale: AtomicBool::new(false) }
+    }
+
+    /// The current snapshot, if one has been published.
+    pub fn load(&self) -> Option<Arc<ModelSnapshot>> {
+        let guard = match self.slot.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        guard.clone()
+    }
+
+    /// Publish a new snapshot and clear the stale flag. The write lock
+    /// is held only for the pointer swap.
+    pub fn publish(&self, snapshot: ModelSnapshot) {
+        let arc = Arc::new(snapshot);
+        {
+            let mut guard = match self.slot.write() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            *guard = Some(arc);
+        }
+        self.stale.store(false, Ordering::SeqCst);
+    }
+
+    /// Mark the current snapshot stale (a refresh failed; the daemon
+    /// keeps serving the previous model with `stale: true`).
+    pub fn mark_stale(&self) {
+        self.stale.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the daemon is in degraded mode (last refresh failed).
+    pub fn is_stale(&self) -> bool {
+        self.stale.load(Ordering::SeqCst)
+    }
+
+    /// The published version (0 before the first publish).
+    pub fn version(&self) -> u64 {
+        self.load().map(|s| s.version).unwrap_or(0)
+    }
+}
+
+impl Default for SnapshotCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pca_snapshot(version: u64) -> ModelSnapshot {
+        // components = identity on the first 2 of 3 dims, mean = 1-vector
+        let components = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]).unwrap();
+        ModelSnapshot {
+            version,
+            n: 10,
+            kind: ModelKind::Pca(PcaSnapshot {
+                components,
+                mean: vec![1.0; 3],
+                eigenvalues: vec![2.0, 1.0],
+            }),
+        }
+    }
+
+    #[test]
+    fn pca_query_projects_centered_sample() {
+        let snap = pca_snapshot(1);
+        match snap.query(&[2.0, 3.0, 4.0]).unwrap() {
+            QueryResult::Projection { coords } => assert_eq!(coords, vec![1.0, 2.0]),
+            _ => panic!("expected projection"),
+        }
+        // dimension mismatch is a typed error
+        assert!(matches!(snap.query(&[1.0]), Err(Error::Invalid(_))));
+    }
+
+    #[test]
+    fn kmeans_query_assigns_nearest_center() {
+        let centers = Mat::from_vec(2, 2, vec![0.0, 0.0, 10.0, 10.0]).unwrap();
+        let snap = ModelSnapshot {
+            version: 1,
+            n: 4,
+            kind: ModelKind::Kmeans(KmeansSnapshot {
+                centers,
+                center_bound: 0.5,
+                iterations: 3,
+                converged: true,
+            }),
+        };
+        match snap.query(&[9.0, 9.0]).unwrap() {
+            QueryResult::Assignment { cluster, distance2, center_bound } => {
+                assert_eq!(cluster, 1);
+                assert!((distance2 - 2.0).abs() < 1e-12);
+                assert_eq!(center_bound, 0.5);
+            }
+            _ => panic!("expected assignment"),
+        }
+    }
+
+    #[test]
+    fn cell_swaps_and_tracks_staleness() {
+        let cell = SnapshotCell::new();
+        assert!(cell.load().is_none());
+        assert_eq!(cell.version(), 0);
+        cell.publish(pca_snapshot(1));
+        assert_eq!(cell.version(), 1);
+        assert!(!cell.is_stale());
+        // a failed refresh degrades but keeps the old snapshot
+        cell.mark_stale();
+        assert!(cell.is_stale());
+        assert_eq!(cell.version(), 1);
+        // the next successful publish clears the flag
+        cell.publish(pca_snapshot(2));
+        assert!(!cell.is_stale());
+        assert_eq!(cell.version(), 2);
+    }
+}

@@ -230,7 +230,7 @@ impl StoreManifest {
         if lookup(&kv, "format")? != "pdss" {
             return corrupt("manifest: format is not `pdss`");
         }
-        let version = lookup_num(&kv, "version")? as u32;
+        let version = lookup_u32(&kv, "version")?;
         if version > MANIFEST_VERSION {
             return corrupt(format!(
                 "manifest version {version} is newer than supported {MANIFEST_VERSION}"
@@ -271,14 +271,14 @@ impl StoreManifest {
             // v3 writers that chose to omit it) are all f64
             None => Precision::F64,
         };
-        let n = lookup_num(&kv, "n")? as usize;
+        let n = lookup_usize(&kv, "n")?;
         let group = match kv.iter().find(|(k, _)| k == "group") {
             Some((_, v)) => parse_group_value(v)?,
             // the key is optional at every version: its absence always
             // means "the whole store"
             None => ShardGroup::standalone(n),
         };
-        let shard_count = lookup_num(&kv, "shard_count")? as usize;
+        let shard_count = lookup_usize(&kv, "shard_count")?;
         if shard_count != shards.len() {
             return corrupt(format!(
                 "manifest: shard_count {} but {} shard lines",
@@ -288,9 +288,12 @@ impl StoreManifest {
         }
         let manifest = StoreManifest {
             version,
-            p: lookup_num(&kv, "p")? as usize,
-            p_orig: lookup_num(&kv, "p_orig")? as usize,
-            m: lookup_num(&kv, "m")? as usize,
+            // p, p_orig and m are encoded as little-endian u32 in every
+            // shard header, so a wider manifest value cannot describe any
+            // valid shard — checked conversion, not a silent truncation
+            p: lookup_u32(&kv, "p")? as usize,
+            p_orig: lookup_u32(&kv, "p_orig")? as usize,
+            m: lookup_u32(&kv, "m")? as usize,
             n,
             gamma,
             transform,
@@ -298,7 +301,7 @@ impl StoreManifest {
             preconditioned,
             scheme,
             precision,
-            shard_cols: lookup_num(&kv, "shard_cols")? as usize,
+            shard_cols: lookup_usize(&kv, "shard_cols")?,
             group,
             shards,
         };
@@ -470,6 +473,26 @@ fn lookup_num(kv: &[(String, String)], name: &str) -> Result<u64> {
     let v = lookup(kv, name)?;
     v.parse()
         .map_err(|_| Error::Corrupt(format!("manifest: bad integer {name} = {v:?}")))
+}
+
+/// [`lookup_num`], checked into `u32`. Used for the fields the shard
+/// headers encode as `u32` (`p`, `m`, and kin) and for `version`: a
+/// value past `u32::MAX` in a tampered manifest used to truncate
+/// silently into a plausible small number (`2^32 + 2` read as version 2);
+/// it is corruption and must surface as such.
+fn lookup_u32(kv: &[(String, String)], name: &str) -> Result<u32> {
+    let v = lookup_num(kv, name)?;
+    u32::try_from(v)
+        .map_err(|_| Error::Corrupt(format!("manifest: {name} = {v} out of range (max {})", u32::MAX)))
+}
+
+/// [`lookup_num`], checked into `usize` with the same corruption
+/// contract as [`lookup_u32`] (relevant on 32-bit targets, and it keeps
+/// every numeric field on the checked path).
+fn lookup_usize(kv: &[(String, String)], name: &str) -> Result<usize> {
+    let v = lookup_num(kv, name)?;
+    usize::try_from(v)
+        .map_err(|_| Error::Corrupt(format!("manifest: {name} = {v} out of range")))
 }
 
 /// Parse a `group = <index> <count> <start_col> <total_n>` value.
@@ -819,5 +842,69 @@ mod tests {
         let mut text = sample().to_text();
         text.push_str("future_extension = whatever\n");
         assert!(StoreManifest::parse(&text).is_ok());
+    }
+
+    /// Replace one `key = old` scalar line of a manifest text with a raw
+    /// value, asserting the key was present.
+    fn with_value(text: &str, key: &str, value: &str) -> String {
+        let needle = format!("{key} = ");
+        let mut hit = false;
+        let out: String = text
+            .lines()
+            .map(|l| {
+                if l.starts_with(&needle) {
+                    hit = true;
+                    format!("{key} = {value}\n")
+                } else {
+                    format!("{l}\n")
+                }
+            })
+            .collect();
+        assert!(hit, "no line for key {key}");
+        out
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_numerics() {
+        // `2^32 + 2` used to truncate to version 2 and parse cleanly;
+        // every u32-backed field must surface Error::Corrupt instead
+        let overwide = (u64::from(u32::MAX) + 3).to_string();
+        for key in ["version", "p", "p_orig", "m"] {
+            let text = with_value(&sample().to_text(), key, &overwide);
+            match StoreManifest::parse(&text) {
+                Err(Error::Corrupt(msg)) => {
+                    assert!(msg.contains("out of range"), "{key}: {msg}")
+                }
+                other => panic!("{key} = {overwide}: expected Corrupt, got {other:?}"),
+            }
+        }
+        // negatives never parse as any unsigned field
+        for key in ["version", "p", "p_orig", "m", "n", "shard_cols", "shard_count", "seed"] {
+            let text = with_value(&sample().to_text(), key, "-1");
+            assert!(
+                matches!(StoreManifest::parse(&text), Err(Error::Corrupt(_))),
+                "{key} = -1 must be corrupt"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_out_of_range_numerics_never_parse() {
+        use crate::testing::prop::forall;
+        let keys = ["version", "p", "p_orig", "m", "n", "shard_cols", "shard_count"];
+        forall("manifest out-of-range numerics are corrupt", 64, |g| {
+            let key = *g.choose(&keys);
+            let mut rng = g.rng();
+            // uniform in [2^32, u64::MAX] — every draw is wider than any
+            // field a valid store can hold (n/shard_cols values this
+            // large fail shard-table validation on 64-bit targets)
+            let span = u64::MAX - (1u64 << 32) + 1;
+            let v = (1u64 << 32) + rng.next_u64() % span;
+            let text = with_value(&sample().to_text(), key, &v.to_string());
+            match StoreManifest::parse(&text) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("{key} = {v}: expected Corrupt, got {other:?}"),
+            }
+        });
     }
 }

@@ -163,6 +163,67 @@ impl SparseStoreWriter {
         self.next_col
     }
 
+    /// Shards flushed (and fsynced) to disk so far. The current shard
+    /// buffer's columns are not counted until it fills.
+    pub fn completed_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Columns covered by the flushed shards — what a
+    /// [`checkpoint`](Self::checkpoint) manifest would publish.
+    pub fn columns_durable(&self) -> usize {
+        self.cur_start
+    }
+
+    /// Durably publish the completed shards: write a manifest (atomic
+    /// temp + fsync + rename, like [`finish`](Self::finish)) covering
+    /// every fully flushed shard, while the writer keeps appending.
+    ///
+    /// This is the long-running-ingest crash-safety primitive: a process
+    /// killed at any instant leaves either the previous checkpoint's
+    /// manifest or this one — both valid, CRC-clean stores — never a
+    /// torn manifest or one referencing unflushed bytes. Columns still
+    /// in the shard buffer (and parked out-of-order chunks) are *not*
+    /// covered; they become durable at the next shard boundary or at
+    /// `finish`. Returns the columns published, or `Ok(None)` when no
+    /// shard has completed yet (nothing worth publishing — an empty
+    /// manifest would fail validation).
+    pub fn checkpoint(&mut self) -> Result<Option<usize>> {
+        if self.shards.is_empty() {
+            return Ok(None);
+        }
+        let n = self.cur_start;
+        let manifest = StoreManifest {
+            version: self.manifest_version(),
+            p: self.p,
+            p_orig: self.p_orig,
+            m: self.m,
+            n,
+            gamma: self.gamma,
+            transform: self.transform,
+            seed: self.seed,
+            preconditioned: self.preconditioned,
+            scheme: self.scheme,
+            precision: self.precision,
+            shard_cols: self.shard_cols,
+            group: ShardGroup::standalone(n),
+            shards: self.shards.clone(),
+        };
+        manifest.validate()?;
+        manifest.write_atomic(&self.dir)?;
+        Ok(Some(n))
+    }
+
+    /// Lowest capable manifest version for this writer's configuration:
+    /// f64 stores stay v2 and remain byte-identical to pre-precision
+    /// releases.
+    fn manifest_version(&self) -> u32 {
+        match self.precision {
+            Precision::F64 => 2,
+            Precision::F32 => 3,
+        }
+    }
+
     /// Append one compressed chunk. Chunks ahead of the stream cursor are
     /// parked until their predecessors arrive; chunks behind it are
     /// rejected (duplicate or overlapping ranges).
@@ -336,14 +397,8 @@ impl SparseStoreWriter {
             ));
         }
         self.flush_shard()?;
-        // emit the lowest capable manifest version: f64 stores stay v2
-        // and remain byte-identical to pre-precision releases
-        let version = match self.precision {
-            Precision::F64 => 2,
-            Precision::F32 => 3,
-        };
         let manifest = StoreManifest {
-            version,
+            version: self.manifest_version(),
             p: self.p,
             p_orig: self.p_orig,
             m: self.m,

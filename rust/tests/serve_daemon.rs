@@ -1,0 +1,268 @@
+//! In-process integration tests for the `pds serve` daemon: concurrent
+//! queries during refresh, graceful degradation (stale snapshots after a
+//! failed refresh, typed backpressure under a full queue), and the
+//! request-validation surface.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use pds::rng::Pcg64;
+use pds::serve::json::Json;
+use pds::serve::{Daemon, ServeConfig, ServeTask};
+use pds::store::SparseStoreReader;
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("pds_serve_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// A small daemon config: tiny shards (checkpoint often), refresh only
+/// on explicit request (the interval is effectively "never"), generous
+/// request timeout so CI jitter can't fail a blocking call.
+fn small_cfg(dir: &PathBuf, task: ServeTask, p: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(dir.clone(), task, p);
+    cfg.shard_cols = 8;
+    cfg.refresh_interval = Duration::from_secs(3600);
+    cfg.request_timeout = Duration::from_secs(60);
+    cfg
+}
+
+/// An `ingest` request line with `n` deterministic Gaussian samples.
+fn batch_line(p: usize, n: usize, seed: u64) -> String {
+    let mut rng = Pcg64::seed(seed);
+    let rows: Vec<String> = (0..n)
+        .map(|_| {
+            let vals: Vec<String> = (0..p).map(|_| format!("{:.6}", rng.normal())).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    format!("{{\"cmd\":\"ingest\",\"samples\":[{}]}}", rows.join(","))
+}
+
+fn query_line(p: usize, seed: u64) -> String {
+    let mut rng = Pcg64::seed(seed);
+    let vals: Vec<String> = (0..p).map(|_| format!("{:.6}", rng.normal())).collect();
+    format!("{{\"cmd\":\"query\",\"sample\":[{}]}}", vals.join(","))
+}
+
+fn field(resp: &str, name: &str) -> Json {
+    Json::parse(resp)
+        .unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"))
+        .get(name)
+        .cloned()
+        .unwrap_or(Json::Null)
+}
+
+fn is_ok(resp: &str) -> bool {
+    field(resp, "ok").as_bool() == Some(true)
+}
+
+fn num(resp: &str, name: &str) -> f64 {
+    field(resp, name).as_f64().unwrap_or_else(|| panic!("no numeric {name:?} in {resp}"))
+}
+
+fn code(resp: &str) -> String {
+    field(resp, "code").as_str().unwrap_or("").to_string()
+}
+
+/// The tentpole acceptance path: ingest, refresh, then hammer the query
+/// lane from several threads *while* a refresh publishes a new version.
+/// Every response must be coherent — a published version, never stale,
+/// never a half-written model.
+#[test]
+fn queries_stay_consistent_during_concurrent_refresh() {
+    let dir = tmp("pca_versions");
+    let p = 16;
+    let daemon = Daemon::start(small_cfg(&dir, ServeTask::Pca, p)).unwrap();
+    let client = daemon.client();
+
+    for seed in 0..3 {
+        let resp = client.handle_line(&batch_line(p, 8, seed)).0;
+        assert!(is_ok(&resp), "ingest failed: {resp}");
+    }
+    let flush = client.handle_line(r#"{"cmd":"flush"}"#).0;
+    assert!(is_ok(&flush), "flush failed: {flush}");
+    assert_eq!(num(&flush, "durable_cols") as usize, 24, "3 full shards must be durable");
+
+    let refresh = client.handle_line(r#"{"cmd":"refresh"}"#).0;
+    assert!(is_ok(&refresh), "refresh failed: {refresh}");
+    let v1 = num(&refresh, "model_version") as u64;
+    assert!(v1 >= 1);
+
+    // new data for the second refresh to fold
+    let resp = client.handle_line(&batch_line(p, 8, 99)).0;
+    assert!(is_ok(&resp), "ingest failed: {resp}");
+    let flush = client.handle_line(r#"{"cmd":"flush"}"#).0;
+    assert!(is_ok(&flush), "flush failed: {flush}");
+
+    // query threads race the refresh below
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let c = daemon.client();
+            std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let resp = c.handle_line(&query_line(p, 1000 + t * 100 + i)).0;
+                    assert!(is_ok(&resp), "query failed mid-refresh: {resp}");
+                    let v = num(&resp, "model_version") as u64;
+                    assert!(v == v1 || v == v1 + 1, "incoherent version {v} (v1={v1})");
+                    assert_eq!(field(&resp, "stale").as_bool(), Some(false));
+                    let coords = field(&resp, "coords");
+                    assert!(coords.as_arr().is_some_and(|c| !c.is_empty()));
+                }
+            })
+        })
+        .collect();
+    let refresh = client.handle_line(r#"{"cmd":"refresh"}"#).0;
+    assert!(is_ok(&refresh), "second refresh failed: {refresh}");
+    assert_eq!(num(&refresh, "model_version") as u64, v1 + 1);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // after the swap, every query sees the new version
+    let resp = client.handle_line(&query_line(p, 7)).0;
+    assert_eq!(num(&resp, "model_version") as u64, v1 + 1);
+
+    drop(client);
+    let (manifest, stats) = daemon.shutdown();
+    let manifest = manifest.expect("graceful shutdown finalizes the store");
+    assert_eq!(manifest.n, 32);
+    assert!(stats.contains("\"requests\""), "metrics dump missing: {stats}");
+
+    // the finalized store passes a full CRC-verified readback
+    let mut reader = SparseStoreReader::open(&dir).unwrap().with_verify(true);
+    let mut cols = 0;
+    while let Some(chunk) = reader.next_chunk().unwrap() {
+        cols += chunk.n();
+    }
+    assert_eq!(cols, 32);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Degraded mode: a refresh that fails (here: a shard file goes missing
+/// mid-cycle) must keep the previous snapshot live with `stale: true`,
+/// and a later successful refresh must clear the flag and bump the
+/// version — the failed cycle's shards are retried, not lost.
+#[test]
+fn failed_refresh_serves_stale_snapshot_and_recovers() {
+    let dir = tmp("kmeans_stale");
+    let p = 16;
+    let mut cfg = small_cfg(&dir, ServeTask::Kmeans, p);
+    cfg.k = 2;
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = daemon.client();
+
+    for seed in 0..2 {
+        assert!(is_ok(&client.handle_line(&batch_line(p, 8, seed)).0));
+    }
+    assert!(is_ok(&client.handle_line(r#"{"cmd":"flush"}"#).0));
+    let refresh = client.handle_line(r#"{"cmd":"refresh"}"#).0;
+    assert!(is_ok(&refresh), "first refresh failed: {refresh}");
+    let v1 = num(&refresh, "model_version") as u64;
+
+    // a new durable shard, whose file we then hide to break the refit
+    assert!(is_ok(&client.handle_line(&batch_line(p, 8, 50)).0));
+    assert!(is_ok(&client.handle_line(r#"{"cmd":"flush"}"#).0));
+    let mut shards: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "pdsb"))
+        .collect();
+    shards.sort();
+    let newest = shards.last().unwrap().clone();
+    let hidden = newest.with_extension("pdsb.bak");
+    std::fs::rename(&newest, &hidden).unwrap();
+
+    let failed = client.handle_line(r#"{"cmd":"refresh"}"#).0;
+    assert!(!is_ok(&failed), "refresh over a missing shard must fail: {failed}");
+    assert_eq!(code(&failed), "internal");
+    assert!(
+        field(&failed, "error").as_str().unwrap().contains("previous snapshot"),
+        "error must say the old model still serves: {failed}"
+    );
+
+    // degraded but alive: the v1 model answers, marked stale
+    let resp = client.handle_line(&query_line(p, 3)).0;
+    assert!(is_ok(&resp), "stale-mode query failed: {resp}");
+    assert_eq!(num(&resp, "model_version") as u64, v1);
+    assert_eq!(field(&resp, "stale").as_bool(), Some(true));
+    let stats = client.handle_line(r#"{"cmd":"stats"}"#).0;
+    assert_eq!(field(&stats, "stale").as_bool(), Some(true));
+
+    // restore the shard: the retried refresh folds it and clears stale
+    std::fs::rename(&hidden, &newest).unwrap();
+    let recovered = client.handle_line(r#"{"cmd":"refresh"}"#).0;
+    assert!(is_ok(&recovered), "recovery refresh failed: {recovered}");
+    assert_eq!(num(&recovered, "model_version") as u64, v1 + 1);
+    let resp = client.handle_line(&query_line(p, 4)).0;
+    assert_eq!(field(&resp, "stale").as_bool(), Some(false));
+    assert_eq!(num(&resp, "model_version") as u64, v1 + 1);
+
+    drop(client);
+    let (manifest, _) = daemon.shutdown();
+    assert_eq!(manifest.unwrap().n, 24);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Backpressure and validation: a full bounded queue is a typed
+/// `backpressure` error (nothing enqueued, nothing lost), malformed
+/// lines are `bad_request`, querying before any model is `no_model`,
+/// and everything the daemon did accept is durable after a flush.
+#[test]
+fn full_queue_is_typed_backpressure_not_loss() {
+    let dir = tmp("backpressure");
+    let p = 64;
+    let mut cfg = small_cfg(&dir, ServeTask::Pca, p);
+    // depth-1 queue + one checkpoint (fsync) per batch: the worker is
+    // deliberately much slower than the handler's try_send
+    cfg.queue_batches = 1;
+    cfg.shard_cols = 64;
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = daemon.client();
+
+    let resp = client.handle_line(&query_line(p, 0)).0;
+    assert_eq!(code(&resp), "no_model");
+    let resp = client.handle_line("this is not json").0;
+    assert_eq!(code(&resp), "bad_request");
+    let resp = client.handle_line(r#"{"cmd":"ingest","samples":[[1,2]]}"#).0;
+    assert_eq!(code(&resp), "bad_request", "dimension mismatch must be typed: {resp}");
+
+    let line = batch_line(p, 64, 0);
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    for _ in 0..200 {
+        let resp = client.handle_line(&line).0;
+        if is_ok(&resp) {
+            accepted += 1;
+        } else {
+            assert_eq!(code(&resp), "backpressure", "only typed backpressure: {resp}");
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 0, "a depth-1 queue must reject under a 200-batch flood");
+    assert!(accepted > 0);
+
+    let flush = client.handle_line(r#"{"cmd":"flush"}"#).0;
+    assert!(is_ok(&flush), "flush failed: {flush}");
+    assert_eq!(num(&flush, "total_cols") as u64, accepted * 64, "accepted batches all absorbed");
+
+    drop(client);
+    let (manifest, stats) = daemon.shutdown();
+    assert_eq!(manifest.unwrap().n as u64, accepted * 64);
+    let parsed = Json::parse(&stats).unwrap();
+    let metric_rejections =
+        parsed.get("backpressure_rejections").and_then(Json::as_f64).unwrap() as u64;
+    assert_eq!(metric_rejections, rejected);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Config validation is a typed error, not a wedged daemon.
+#[test]
+fn zero_depth_queue_is_rejected_at_start() {
+    let dir = tmp("zero_queue");
+    let mut cfg = small_cfg(&dir, ServeTask::Pca, 16);
+    cfg.queue_batches = 0;
+    assert!(Daemon::start(cfg).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,183 @@
+//! End-to-end tests driving the real `pds serve` binary in pipe mode:
+//! a full ingest → refresh → query session with a clean shutdown, a
+//! SIGKILL mid-stream (the store must reopen CRC-clean at the last
+//! checkpoint), and a SIGTERM (the signal watcher must finalize the
+//! store, partial shard included, before exiting).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdout, Command, Stdio};
+
+use pds::rng::Pcg64;
+use pds::serve::json::Json;
+use pds::store::SparseStoreReader;
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("pds_pipe_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// One serve session over the child's stdin/stdout pipes.
+struct Session {
+    child: Child,
+    out: BufReader<ChildStdout>,
+}
+
+impl Session {
+    fn spawn(dir: &PathBuf, task: &str, p: usize) -> Session {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_pds"))
+            .args([
+                "serve",
+                "--store",
+                dir.to_str().unwrap(),
+                "--task",
+                task,
+                "--p",
+                &p.to_string(),
+                "--shard-cols",
+                "8",
+                "--k",
+                "2",
+                // refresh only when asked: no background cycle racing the test
+                "--refresh-ms",
+                "3600000",
+                "--timeout-ms",
+                "60000",
+            ])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn pds serve");
+        let out = BufReader::new(child.stdout.take().unwrap());
+        Session { child, out }
+    }
+
+    /// Send one request line, read the one response line.
+    fn request(&mut self, line: &str) -> Json {
+        let stdin = self.child.stdin.as_mut().unwrap();
+        stdin.write_all(line.as_bytes()).unwrap();
+        stdin.write_all(b"\n").unwrap();
+        stdin.flush().unwrap();
+        let mut resp = String::new();
+        self.out.read_line(&mut resp).expect("read response");
+        assert!(!resp.is_empty(), "daemon closed the pipe on {line:?}");
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+    }
+
+    fn expect_ok(&mut self, line: &str) -> Json {
+        let resp = self.request(line);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{line} -> {resp:?}");
+        resp
+    }
+}
+
+fn batch_line(p: usize, n: usize, seed: u64) -> String {
+    let mut rng = Pcg64::seed(seed);
+    let rows: Vec<String> = (0..n)
+        .map(|_| {
+            let vals: Vec<String> = (0..p).map(|_| format!("{:.6}", rng.normal())).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    format!("{{\"cmd\":\"ingest\",\"samples\":[{}]}}", rows.join(","))
+}
+
+fn query_line(p: usize, seed: u64) -> String {
+    let mut rng = Pcg64::seed(seed);
+    let vals: Vec<String> = (0..p).map(|_| format!("{:.6}", rng.normal())).collect();
+    format!("{{\"cmd\":\"query\",\"sample\":[{}]}}", vals.join(","))
+}
+
+/// CRC-verified readback; returns total columns.
+fn verified_cols(dir: &PathBuf) -> usize {
+    let mut reader = SparseStoreReader::open(dir).unwrap().with_verify(true);
+    let mut cols = 0;
+    while let Some(chunk) = reader.next_chunk().unwrap() {
+        cols += chunk.n();
+    }
+    cols
+}
+
+#[test]
+fn pipe_session_full_lifecycle() {
+    let dir = tmp("lifecycle");
+    let p = 16;
+    let mut s = Session::spawn(&dir, "pca", p);
+
+    for seed in 0..3 {
+        s.expect_ok(&batch_line(p, 8, seed));
+    }
+    let flush = s.expect_ok(r#"{"cmd":"flush"}"#);
+    assert_eq!(flush.get("durable_cols").and_then(Json::as_f64), Some(24.0));
+
+    let refresh = s.expect_ok(r#"{"cmd":"refresh"}"#);
+    let version = refresh.get("model_version").and_then(Json::as_f64).unwrap();
+    assert!(version >= 1.0);
+
+    let query = s.expect_ok(&query_line(p, 42));
+    assert_eq!(query.get("model_version").and_then(Json::as_f64), Some(version));
+    assert_eq!(query.get("stale").and_then(Json::as_bool), Some(false));
+    assert!(query.get("coords").and_then(Json::as_arr).is_some_and(|c| !c.is_empty()));
+
+    let stats = s.expect_ok(r#"{"cmd":"stats"}"#);
+    assert!(stats.get("metrics").is_some(), "stats must embed the metrics registry");
+
+    s.expect_ok(r#"{"cmd":"shutdown"}"#);
+    let status = s.child.wait().unwrap();
+    assert!(status.success(), "clean shutdown must exit 0: {status:?}");
+
+    // the finalized store holds every ingested column, CRC-clean
+    assert_eq!(verified_cols(&dir), 24);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sigkill_mid_stream_leaves_checkpointed_store() {
+    let dir = tmp("sigkill");
+    let p = 16;
+    let mut s = Session::spawn(&dir, "kmeans", p);
+
+    // 16 columns = 2 complete shards at --shard-cols 8, both checkpointed
+    s.expect_ok(&batch_line(p, 8, 0));
+    s.expect_ok(&batch_line(p, 8, 1));
+    let flush = s.expect_ok(r#"{"cmd":"flush"}"#);
+    assert_eq!(flush.get("durable_cols").and_then(Json::as_f64), Some(16.0));
+
+    s.child.kill().unwrap(); // SIGKILL: no cleanup of any kind runs
+    let _ = s.child.wait();
+
+    // the last checkpoint manifest is the recovery point, CRC-clean
+    let reader = SparseStoreReader::open(&dir).unwrap();
+    assert_eq!(reader.manifest().n, 16);
+    assert_eq!(verified_cols(&dir), 16);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(unix)]
+#[test]
+fn sigterm_finalizes_the_store_before_exit() {
+    let dir = tmp("sigterm");
+    let p = 16;
+    let mut s = Session::spawn(&dir, "pca", p);
+
+    // 12 columns: one complete shard plus a 4-column partial that only
+    // the graceful path (writer.finish) can make durable
+    s.expect_ok(&batch_line(p, 8, 0));
+    s.expect_ok(&batch_line(p, 4, 1));
+    s.expect_ok(r#"{"cmd":"flush"}"#);
+
+    let kill = Command::new("kill")
+        .args(["-TERM", &s.child.id().to_string()])
+        .status()
+        .expect("send SIGTERM");
+    assert!(kill.success());
+    let status = s.child.wait().unwrap();
+    assert!(status.success(), "SIGTERM path must exit 0: {status:?}");
+
+    let reader = SparseStoreReader::open(&dir).unwrap();
+    assert_eq!(reader.manifest().n, 12, "the partial shard must be finalized");
+    assert_eq!(verified_cols(&dir), 12);
+    let _ = std::fs::remove_dir_all(&dir);
+}

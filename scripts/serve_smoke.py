@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for the `pds serve` daemon (pipe transport).
+
+Drives the real binary over stdin/stdout with newline-delimited JSON:
+
+  1. Full lifecycle: ingest -> flush -> refresh -> query -> stats ->
+     shutdown must round-trip, exit 0, and leave a store that
+     `pds store-info` (which replays the CRC'd manifest) opens with
+     every ingested column.
+  2. Typed errors: a malformed request gets `{"ok":false,"code":...}`
+     and the daemon keeps serving.
+  3. Crash safety: SIGKILL mid-stream (no cleanup of any kind runs)
+     must leave the last durable checkpoint reopenable.
+
+Usage:
+  scripts/serve_smoke.py PATH/TO/pds
+
+Exit status 0 = pass, 1 = failure.
+"""
+
+import json
+import os
+import random
+import re
+import shutil
+import subprocess
+import sys
+import tempfile
+
+P = 16  # sample dimension for the whole smoke run
+
+
+def batch(n, seed):
+    rng = random.Random(seed)
+    return {
+        "cmd": "ingest",
+        "samples": [[rng.gauss(0, 1) for _ in range(P)] for _ in range(n)],
+    }
+
+
+class Serve:
+    """One serve session over the child's stdin/stdout pipes."""
+
+    def __init__(self, pds, store, task):
+        self.proc = subprocess.Popen(
+            [
+                pds, "serve",
+                "--store", store,
+                "--task", task,
+                "--p", str(P),
+                "--shard-cols", "8",
+                # refresh only on request: no background cycle racing the test
+                "--refresh-ms", "3600000",
+                "--timeout-ms", "60000",
+            ],
+            stdin=subprocess.PIPE,
+            stdout=subprocess.PIPE,
+            stderr=subprocess.DEVNULL,
+            text=True,
+        )
+
+    def request(self, obj):
+        self.proc.stdin.write(json.dumps(obj) + "\n")
+        self.proc.stdin.flush()
+        line = self.proc.stdout.readline()
+        assert line, f"daemon closed the pipe on {obj.get('cmd')!r}"
+        return json.loads(line)
+
+    def ok(self, obj):
+        resp = self.request(obj)
+        assert resp.get("ok") is True, f"{obj.get('cmd')}: {resp}"
+        return resp
+
+
+def assert_store_n(pds, store, expect_n):
+    """`pds store-info` must open the store (manifest + CRCs intact) and
+    report the expected column count."""
+    out = subprocess.run(
+        [pds, "store-info", "--store", store], capture_output=True, text=True
+    )
+    assert out.returncode == 0, f"store-info failed: {out.stderr}"
+    assert re.search(rf"samples n\s*=\s*{expect_n}\b", out.stdout), (
+        f"expected n={expect_n} in:\n{out.stdout}"
+    )
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 1
+    pds = sys.argv[1]
+    root = tempfile.mkdtemp(prefix="pds_serve_smoke_")
+    try:
+        # 1) full lifecycle with a clean shutdown
+        store = os.path.join(root, "lifecycle")
+        s = Serve(pds, store, "pca")
+        for seed in range(3):
+            s.ok(batch(8, seed))
+        flush = s.ok({"cmd": "flush"})
+        assert flush["durable_cols"] == 24, flush
+        refresh = s.ok({"cmd": "refresh"})
+        version = refresh["model_version"]
+        assert version >= 1, refresh
+
+        rng = random.Random(99)
+        q = s.ok({"cmd": "query", "sample": [rng.gauss(0, 1) for _ in range(P)]})
+        assert q["model_version"] == version, q
+        assert q["stale"] is False, q
+        assert len(q["coords"]) > 0, q
+
+        stats = s.ok({"cmd": "stats"})
+        assert "metrics" in stats, stats
+
+        # 2) typed errors, daemon stays up
+        bad = s.request({"cmd": "teleport"})
+        assert bad["ok"] is False and bad["code"] == "bad_request", bad
+        bad = s.request({"cmd": "ingest", "samples": [[1.0, 2.0]]})
+        assert bad["ok"] is False and bad["code"] == "bad_request", bad
+        s.ok({"cmd": "stats"})  # still answering
+
+        s.ok({"cmd": "shutdown"})
+        assert s.proc.wait(timeout=120) == 0, "clean shutdown must exit 0"
+        assert_store_n(pds, store, 24)
+
+        # 3) SIGKILL mid-stream: recover at the last durable checkpoint
+        store = os.path.join(root, "sigkill")
+        s = Serve(pds, store, "kmeans")
+        s.ok(batch(8, 0))
+        s.ok(batch(8, 1))
+        flush = s.ok({"cmd": "flush"})
+        assert flush["durable_cols"] == 16, flush
+        s.proc.kill()
+        s.proc.wait(timeout=120)
+        assert_store_n(pds, store, 16)
+
+        print("serve smoke: PASS")
+        return 0
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
