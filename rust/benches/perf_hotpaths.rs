@@ -14,7 +14,9 @@
 //! store-budget-sized chunks) at p = 4096/8192, workers 1/2/4, in ms per
 //! Lloyd iteration — and (7) the serve daemon's query read path
 //! (snapshot load + project/assign, no transport), reported as p50/p99
-//! µs per query since tail latency is the serving SLO. A final
+//! µs per query since tail latency is the serving SLO, plus amortized
+//! single-sample vs batch=64 µs/query through the panel kernel — the
+//! micro-batching lane's payoff. A final
 //! non-timing check records the f32-vs-f64 explained-variance parity on
 //! the Fig-1 digits shape. Results are also emitted as
 //! `BENCH_hotpaths.json` at the repository root (schema documented in
@@ -416,38 +418,45 @@ fn main() {
         }
     }
 
-    // 7) serve query latency: p50/p99 of single-sample queries against a
-    //    published snapshot — the daemon's read path (Arc snapshot load +
-    //    project/assign), minus transport. Quantiles rather than the
-    //    median alone: tail latency is the serving SLO, so both are
-    //    gated rows. Runs in quick mode too (it is cheap).
+    // 7) serve query latency: the daemon's read path (snapshot load +
+    //    project/assign), minus transport. Two views per task: p50/p99
+    //    of per-call queries (tail latency is the serving SLO), and
+    //    amortized µs/query single vs batch=64 — the micro-batching
+    //    lane's payoff, measured through the same panel kernel that
+    //    answers requests (a single query is a panel of one, so the
+    //    comparison isolates pure amortization, not a different code
+    //    path). Runs in quick mode too (it is cheap).
     pds::bench::section("serve query latency (snapshot read path, no transport)");
     {
         use pds::serve::snapshot::{KmeansSnapshot, ModelKind, ModelSnapshot, PcaSnapshot};
         let p = 512usize;
+        const BATCH: usize = 64;
         let iters = if quick { 4_000 } else { 40_000 };
         let mut rng = Pcg64::seed(21);
         let samples: Vec<Vec<f64>> =
-            (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
-        let pca = ModelSnapshot {
-            version: 1,
-            n: 10_000,
-            kind: ModelKind::Pca(PcaSnapshot {
+            (0..BATCH).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+        let panel: Vec<&[f64]> = samples.iter().map(Vec::as_slice).collect();
+        let pca = ModelSnapshot::new(
+            1,
+            10_000,
+            Precision::F64,
+            ModelKind::Pca(PcaSnapshot {
                 components: Mat::from_fn(p, 8, |_, _| rng.normal()),
                 mean: (0..p).map(|_| rng.normal()).collect(),
                 eigenvalues: vec![1.0; 8],
             }),
-        };
-        let kmeans = ModelSnapshot {
-            version: 1,
-            n: 10_000,
-            kind: ModelKind::Kmeans(KmeansSnapshot {
+        );
+        let kmeans = ModelSnapshot::new(
+            1,
+            10_000,
+            Precision::F64,
+            ModelKind::Kmeans(KmeansSnapshot {
                 centers: Mat::from_fn(p, 16, |_, _| rng.normal()),
                 center_bound: f64::NAN,
                 iterations: 10,
                 converged: true,
             }),
-        };
+        );
         for (label, snap) in [("pca p=512 topk=8", &pca), ("kmeans p=512 K=16", &kmeans)] {
             let mut times = Vec::with_capacity(iters);
             for i in 0..iters {
@@ -469,6 +478,25 @@ fn main() {
                 println!("{}", r.report());
                 entries.push(Entry { result: r, metric: "us/query", value: secs * 1e6 });
             }
+
+            // batched vs single-sample throughput, amortized per query
+            let r = pds::bench::bench(&format!("serve query {label} [single]"), 1, 5, || {
+                for s in &samples {
+                    std::hint::black_box(snap.query(s).unwrap());
+                }
+            });
+            // one bench iteration answers BATCH single queries
+            let us = r.median_s * 1e6 / BATCH as f64;
+            println!("   -> {us:.3} us/query (single-sample)");
+            entries.push(Entry { result: r, metric: "us/query", value: us });
+
+            let r =
+                pds::bench::bench(&format!("serve query {label} [batch={BATCH}]"), 1, 5, || {
+                    std::hint::black_box(snap.query_panel(&panel).unwrap()).len()
+                });
+            let us = r.median_s * 1e6 / BATCH as f64;
+            println!("   -> {us:.3} us/query (batched)");
+            entries.push(Entry { result: r, metric: "us/query", value: us });
         }
     }
 

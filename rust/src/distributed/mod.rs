@@ -49,6 +49,7 @@ mod coreset;
 mod partials;
 
 pub use artifact::{decode_artifact, encode_artifact, peek_kind};
+pub(crate) use artifact::{PayloadReader, PayloadWriter};
 pub use coreset::{weighted_kmeans, CoresetPartial};
 pub use partials::{CenterPartial, CenterUpdate, PcaPartial};
 
@@ -125,4 +126,7 @@ pub mod kind {
     pub const PCA: u32 = 5;
     /// [`CoresetPartial`](super::CoresetPartial) (merge-and-reduce tree).
     pub const CORESET: u32 = 6;
+    /// [`ModelSnapshot`](crate::serve::snapshot::ModelSnapshot) — the
+    /// serve daemon's persisted warm-start model.
+    pub const SNAPSHOT: u32 = 7;
 }

@@ -114,6 +114,8 @@ fn usage() {
          \x20\x20\x20\x20 [--k K] [--topk K] [--scheme precond|uniform|hybrid]\n\
          \x20\x20\x20\x20 [--precision f32|f64] [--no-precondition] [--shard-cols C]\n\
          \x20\x20\x20\x20 [--queue-batches B] [--refresh-ms MS] [--timeout-ms MS]\n\
+         \x20\x20\x20\x20 [--batch-window-us US] [--batch-max N] [--conn-slots N]\n\
+         \x20\x20\x20\x20 [--listen HOST:PORT  serve over TCP instead of stdin/stdout]\n\
          \x20\x20\x20\x20 [--socket PATH  listen on a unix socket instead of stdin/stdout]\n\
          \x20 pds artifacts-check\n\
          \x20 pds info"
@@ -708,12 +710,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.queue_batches = args.get_parse("queue-batches", cfg.queue_batches)?;
     cfg.refresh_interval = Duration::from_millis(args.get_parse("refresh-ms", 5000)?);
     cfg.request_timeout = Duration::from_millis(args.get_parse("timeout-ms", 30_000)?);
-    match args.get("socket") {
+    cfg.batch_window =
+        Duration::from_micros(args.get_parse("batch-window-us", cfg.batch_window.as_micros() as u64)?);
+    cfg.batch_max = args.get_parse("batch-max", cfg.batch_max)?;
+    cfg.conn_slots = args.get_parse("conn-slots", cfg.conn_slots)?;
+    match (args.get("listen"), args.get("socket")) {
+        (Some(_), Some(_)) => {
+            Err(Error::Invalid("--listen and --socket are mutually exclusive".into()))
+        }
+        (Some(addr), None) => pds::serve::run_tcp(cfg, addr),
         #[cfg(unix)]
-        Some(path) => pds::serve::run_socket(cfg, Path::new(path)),
+        (None, Some(path)) => pds::serve::run_socket(cfg, Path::new(path)),
         #[cfg(not(unix))]
-        Some(_) => Err(Error::Invalid("--socket needs a unix platform".into())),
-        None => pds::serve::run_pipe(cfg),
+        (None, Some(_)) => Err(Error::Invalid("--socket needs a unix platform".into())),
+        (None, None) => pds::serve::run_pipe(cfg),
     }
 }
 

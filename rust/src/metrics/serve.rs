@@ -120,6 +120,8 @@ pub struct ServeMetrics {
     pub errors: AtomicU64,
     /// Ingest batches rejected because the bounded queue was full.
     pub backpressure_rejections: AtomicU64,
+    /// Connections rejected because every transport worker slot was busy.
+    pub conn_rejections: AtomicU64,
     /// Raw sample columns accepted into the ingest queue.
     pub ingested_rows: AtomicU64,
     /// Ingest batches accepted into the queue.
@@ -128,10 +130,23 @@ pub struct ServeMetrics {
     pub refreshes: AtomicU64,
     /// Model refreshes that failed (daemon degrades to the stale snapshot).
     pub refresh_failures: AtomicU64,
+    /// Snapshot persists that failed (the model still serves from memory,
+    /// but a restarted daemon would cold-start).
+    pub snapshot_persist_failures: AtomicU64,
     /// Current ingest queue depth (batches accepted, not yet absorbed).
     pub queue_depth: AtomicU64,
+    /// Coalesced query panels executed by the batching lane.
+    pub batches_executed: AtomicU64,
+    /// Samples answered through those panels (`batched_samples /
+    /// batches_executed` is the realized mean batch size).
+    pub batched_samples: AtomicU64,
     /// Per-query handler latency.
     pub query_latency: LatencyHistogram,
+    /// Time a query request spent parked in the batching lane before
+    /// its panel started executing.
+    pub query_wait: LatencyHistogram,
+    /// Kernel execution time of one coalesced panel (all samples).
+    pub query_exec: LatencyHistogram,
     /// Per-ingest-request handler latency (parse + enqueue, not absorb).
     pub ingest_latency: LatencyHistogram,
     /// Full refresh-cycle duration (fold + merge + finalize + swap).
@@ -146,12 +161,18 @@ impl ServeMetrics {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             backpressure_rejections: AtomicU64::new(0),
+            conn_rejections: AtomicU64::new(0),
             ingested_rows: AtomicU64::new(0),
             ingested_batches: AtomicU64::new(0),
             refreshes: AtomicU64::new(0),
             refresh_failures: AtomicU64::new(0),
+            snapshot_persist_failures: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
+            batches_executed: AtomicU64::new(0),
+            batched_samples: AtomicU64::new(0),
             query_latency: LatencyHistogram::new(),
+            query_wait: LatencyHistogram::new(),
+            query_exec: LatencyHistogram::new(),
             ingest_latency: LatencyHistogram::new(),
             refresh_duration: LatencyHistogram::new(),
             started: Instant::now(),
@@ -179,21 +200,31 @@ impl ServeMetrics {
         let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
         format!(
             "{{\"uptime_s\":{:.3},\"requests\":{},\"errors\":{},\
-             \"backpressure_rejections\":{},\"ingested_rows\":{},\
-             \"ingested_batches\":{},\"ingest_rows_per_s\":{:.3},\
-             \"refreshes\":{},\"refresh_failures\":{},\"queue_depth\":{},\
-             \"query_latency\":{},\"ingest_latency\":{},\"refresh_duration\":{}}}",
+             \"backpressure_rejections\":{},\"conn_rejections\":{},\
+             \"ingested_rows\":{},\"ingested_batches\":{},\
+             \"ingest_rows_per_s\":{:.3},\"refreshes\":{},\
+             \"refresh_failures\":{},\"snapshot_persist_failures\":{},\
+             \"queue_depth\":{},\"batches_executed\":{},\
+             \"batched_samples\":{},\"query_latency\":{},\
+             \"query_wait\":{},\"query_exec\":{},\"ingest_latency\":{},\
+             \"refresh_duration\":{}}}",
             self.uptime_s(),
             g(&self.requests),
             g(&self.errors),
             g(&self.backpressure_rejections),
+            g(&self.conn_rejections),
             g(&self.ingested_rows),
             g(&self.ingested_batches),
             self.ingest_rows_per_s(),
             g(&self.refreshes),
             g(&self.refresh_failures),
+            g(&self.snapshot_persist_failures),
             g(&self.queue_depth),
+            g(&self.batches_executed),
+            g(&self.batched_samples),
             self.query_latency.to_json(),
+            self.query_wait.to_json(),
+            self.query_exec.to_json(),
             self.ingest_latency.to_json(),
             self.refresh_duration.to_json()
         )
@@ -244,13 +275,19 @@ mod tests {
             "requests",
             "errors",
             "backpressure_rejections",
+            "conn_rejections",
             "ingested_rows",
             "ingested_batches",
             "ingest_rows_per_s",
             "refreshes",
             "refresh_failures",
+            "snapshot_persist_failures",
             "queue_depth",
+            "batches_executed",
+            "batched_samples",
             "query_latency",
+            "query_wait",
+            "query_exec",
             "ingest_latency",
             "refresh_duration",
         ] {

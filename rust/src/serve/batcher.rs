@@ -1,0 +1,308 @@
+//! Cross-client query micro-batching.
+//!
+//! Every `query` / `query_batch` request is submitted to one shared
+//! [`BatchQueue`]; a dedicated worker coalesces whatever is in flight —
+//! across connections — into a panel, bounded by a wait window
+//! (`--batch-window-us`) and a size cap (`--batch-max`), and executes
+//! the panel through [`ModelSnapshot::query_panel`] in one pass over
+//! the snapshot's SIMD kernel layouts. Results are demuxed back to each
+//! request in order.
+//!
+//! Correctness is by construction, not by luck: the panel path *is* the
+//! per-sample path (a single query is a panel of one), so batching can
+//! never change an answer — it only amortizes dispatch, snapshot
+//! loading, and scratch allocation across the panel. Latency is
+//! attributed per request: time parked in the queue feeds the
+//! `query_wait` histogram, kernel execution feeds `query_exec`, and the
+//! end-to-end figure stays in `query_latency` as before.
+//!
+//! The pending queue needs no separate depth bound: every submitter
+//! blocks on its own reply slot, so at most one request per connection
+//! slot (plus the pipe client) can be parked at once — the transport's
+//! connection cap is the queue bound.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::metrics::ServeMetrics;
+
+use super::snapshot::{ModelSnapshot, QueryResult, SnapshotCell};
+
+/// One parked request awaiting the next panel.
+struct Pending {
+    samples: Vec<Vec<f64>>,
+    enqueued: Instant,
+    reply: SyncSender<Reply>,
+}
+
+/// What the batch worker sends back for one request.
+pub(crate) enum Reply {
+    /// No model has been published yet.
+    NoModel,
+    /// This request's samples did not match the model dimension
+    /// (rejected whole; its panel-mates are unaffected).
+    BadRequest(String),
+    /// The batch lane failed (worker died or kernel error).
+    Internal(&'static str),
+    /// The reply did not arrive within the request timeout.
+    Timeout,
+    /// The daemon is shutting down.
+    Shutdown,
+    /// Answered: results in request-sample order, plus the exact
+    /// snapshot they were computed from.
+    Answer {
+        /// The snapshot every sample in this request was answered from.
+        snapshot: Arc<ModelSnapshot>,
+        /// Degraded-mode flag captured at execution time.
+        stale: bool,
+        /// One result per submitted sample, in order.
+        results: Vec<QueryResult>,
+    },
+}
+
+struct LaneState {
+    pending: Vec<Pending>,
+    shutdown: bool,
+}
+
+/// The shared submission queue of the batching lane.
+pub(crate) struct BatchQueue {
+    state: Mutex<LaneState>,
+    cv: Condvar,
+}
+
+impl BatchQueue {
+    pub(crate) fn new() -> Self {
+        BatchQueue {
+            state: Mutex::new(LaneState { pending: Vec::new(), shutdown: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, LaneState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Submit one request (any number of samples) and block for its
+    /// reply, up to `timeout`.
+    pub(crate) fn submit(&self, samples: Vec<Vec<f64>>, timeout: Duration) -> Reply {
+        let (tx, rx) = sync_channel(1);
+        {
+            let mut st = self.lock();
+            if st.shutdown {
+                return Reply::Shutdown;
+            }
+            st.pending.push(Pending { samples, enqueued: Instant::now(), reply: tx });
+        }
+        self.cv.notify_all();
+        match rx.recv_timeout(timeout) {
+            Ok(reply) => reply,
+            Err(RecvTimeoutError::Timeout) => Reply::Timeout,
+            Err(RecvTimeoutError::Disconnected) => {
+                Reply::Internal("batch lane is gone (worker exited)")
+            }
+        }
+    }
+
+    /// Raise the shutdown flag: the worker answers what is already
+    /// parked, then exits; later submissions get [`Reply::Shutdown`].
+    pub(crate) fn begin_shutdown(&self) {
+        self.lock().shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The batching lane: park until work arrives, coalesce within the
+/// window, execute one panel, demux, repeat.
+pub(crate) fn run_batch_worker(
+    queue: Arc<BatchQueue>,
+    cell: Arc<SnapshotCell>,
+    metrics: Arc<ServeMetrics>,
+    window: Duration,
+    batch_max: usize,
+) {
+    loop {
+        let batch = {
+            let mut st = queue.lock();
+            while st.pending.is_empty() && !st.shutdown {
+                st = match queue.cv.wait(st) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+            }
+            if st.pending.is_empty() {
+                return; // shutdown, nothing left to answer
+            }
+            // bounded coalescing wait: later requests may join this
+            // panel until the window elapses or it is full
+            let deadline = Instant::now() + window;
+            loop {
+                let queued: usize = st.pending.iter().map(|r| r.samples.len()).sum();
+                if queued >= batch_max || st.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                st = match queue.cv.wait_timeout(st, deadline - now) {
+                    Ok((g, _)) => g,
+                    Err(poisoned) => poisoned.into_inner().0,
+                };
+            }
+            // drain whole requests (a request is never split across
+            // panels) up to batch_max samples — always at least one, so
+            // an oversized query_batch still executes, as one panel
+            let mut take = 0usize;
+            let mut total = 0usize;
+            for r in &st.pending {
+                if take > 0 && total + r.samples.len() > batch_max {
+                    break;
+                }
+                total += r.samples.len();
+                take += 1;
+            }
+            st.pending.drain(..take).collect::<Vec<_>>()
+        };
+        execute(batch, &cell, &metrics);
+    }
+}
+
+/// Run one coalesced panel and demux the results.
+fn execute(batch: Vec<Pending>, cell: &SnapshotCell, metrics: &ServeMetrics) {
+    let t0 = Instant::now();
+    for r in &batch {
+        metrics.query_wait.record(t0.duration_since(r.enqueued));
+    }
+    let Some(snap) = cell.load() else {
+        for r in batch {
+            let _ = r.reply.try_send(Reply::NoModel);
+        }
+        return;
+    };
+    let stale = cell.is_stale();
+    let dim = snap.dim();
+    // all-or-nothing validation per request: a malformed request is
+    // rejected whole and excluded, so it cannot poison its panel-mates
+    let mut rows: Vec<&[f64]> = Vec::new();
+    let mut rejected: Vec<Option<String>> = Vec::with_capacity(batch.len());
+    for r in &batch {
+        match r.samples.iter().enumerate().find(|(_, s)| s.len() != dim) {
+            Some((i, s)) => rejected.push(Some(format!(
+                "samples[{i}] has {} entries, the model dimension is {dim}",
+                s.len()
+            ))),
+            None => {
+                rows.extend(r.samples.iter().map(Vec::as_slice));
+                rejected.push(None);
+            }
+        }
+    }
+    let results = if rows.is_empty() { Ok(Vec::new()) } else { snap.query_panel(&rows) };
+    let mut results = match results {
+        Ok(r) => r.into_iter(),
+        Err(_) => {
+            for r in batch {
+                let _ = r.reply.try_send(Reply::Internal("batched query kernel failed"));
+            }
+            return;
+        }
+    };
+    if !rows.is_empty() {
+        metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_samples.fetch_add(rows.len() as u64, Ordering::Relaxed);
+        metrics.query_exec.record(t0.elapsed());
+    }
+    for (r, bad) in batch.into_iter().zip(rejected) {
+        match bad {
+            Some(msg) => {
+                let _ = r.reply.try_send(Reply::BadRequest(msg));
+            }
+            None => {
+                let picked: Vec<QueryResult> = results.by_ref().take(r.samples.len()).collect();
+                let _ = r.reply.try_send(Reply::Answer {
+                    snapshot: snap.clone(),
+                    stale,
+                    results: picked,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::serve::snapshot::{ModelKind, PcaSnapshot};
+    use crate::sparse::Precision;
+
+    fn spawn_lane(
+        cell: Arc<SnapshotCell>,
+        window: Duration,
+        batch_max: usize,
+    ) -> (Arc<BatchQueue>, Arc<ServeMetrics>, std::thread::JoinHandle<()>) {
+        let queue = Arc::new(BatchQueue::new());
+        let metrics = Arc::new(ServeMetrics::new());
+        let handle = {
+            let (q, c, m) = (queue.clone(), cell.clone(), metrics.clone());
+            std::thread::spawn(move || run_batch_worker(q, c, m, window, batch_max))
+        };
+        (queue, metrics, handle)
+    }
+
+    fn identity_snapshot(p: usize) -> ModelSnapshot {
+        ModelSnapshot::new(
+            1,
+            8,
+            Precision::F64,
+            ModelKind::Pca(PcaSnapshot {
+                components: Mat::from_fn(p, p, |i, j| f64::from(u8::from(i == j))),
+                mean: vec![0.0; p],
+                eigenvalues: vec![1.0; p],
+            }),
+        )
+    }
+
+    #[test]
+    fn lane_answers_demuxes_and_shuts_down() {
+        let cell = Arc::new(SnapshotCell::new());
+        let (queue, metrics, handle) = spawn_lane(cell.clone(), Duration::from_micros(50), 8);
+        let timeout = Duration::from_secs(30);
+
+        // no model yet → typed NoModel
+        assert!(matches!(queue.submit(vec![vec![1.0, 2.0]], timeout), Reply::NoModel));
+
+        cell.publish(identity_snapshot(2));
+        match queue.submit(vec![vec![1.0, 2.0], vec![3.0, 4.0]], timeout) {
+            Reply::Answer { snapshot, stale, results } => {
+                assert_eq!(snapshot.version, 1);
+                assert!(!stale);
+                assert_eq!(results.len(), 2);
+                match &results[1] {
+                    QueryResult::Projection { coords } => assert_eq!(coords, &vec![3.0, 4.0]),
+                    _ => panic!("expected projection"),
+                }
+            }
+            _ => panic!("expected answer"),
+        }
+        // a wrong-dimension request is rejected whole, with the index
+        match queue.submit(vec![vec![1.0, 2.0], vec![0.0; 3]], timeout) {
+            Reply::BadRequest(msg) => assert!(msg.contains("samples[1]"), "{msg}"),
+            _ => panic!("expected bad request"),
+        }
+        assert!(metrics.batches_executed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(metrics.batched_samples.load(Ordering::Relaxed), 2);
+        assert!(metrics.query_wait.count() >= 3);
+
+        queue.begin_shutdown();
+        handle.join().unwrap();
+        // submissions after shutdown are typed, not hangs
+        assert!(matches!(queue.submit(vec![vec![1.0, 2.0]], timeout), Reply::Shutdown));
+    }
+}

@@ -1,6 +1,6 @@
 //! `pds serve` — a long-running concurrent ingest + query daemon.
 //!
-//! Three lanes share one process, coupled only through lock-free or
+//! Four lanes share one process, coupled only through lock-free or
 //! briefly-locked state:
 //!
 //! * **Ingest** ([`ingest`]): request handlers validate raw sample
@@ -13,28 +13,53 @@
 //! * **Refresh** ([`refresh`]): a timer thread incrementally re-fits
 //!   the model — only shards new since the last cycle are folded, then
 //!   merged into the running partial via the PR 7
-//!   [`PartialFit`](crate::distributed::PartialFit) law — and publishes
-//!   an immutable [`ModelSnapshot`](snapshot::ModelSnapshot) with a
-//!   bumped version.
-//! * **Query**: handlers answer from an `Arc`-swapped snapshot
+//!   [`PartialFit`](crate::distributed::PartialFit) law — publishes an
+//!   immutable [`ModelSnapshot`](snapshot::ModelSnapshot) with a bumped
+//!   version, and persists it as a `.pdsp` artifact next to the store
+//!   manifest (the warm-start file).
+//! * **Batch** ([`batcher`], private): every `query` / `query_batch`
+//!   request parks in one shared lane; a worker coalesces whatever is
+//!   in flight — across connections — into a SIMD panel (bounded by
+//!   `batch_window` / `batch_max`) and demuxes results per request.
+//!   The panel path *is* the per-sample path (a single query is a
+//!   panel of one), so batching is bit-identical to one-at-a-time
+//!   execution at every batch size and ISA tier.
+//! * **Query**: handlers submit to the batch lane and answer from the
+//!   `Arc`-swapped snapshot it executed against
 //!   ([`snapshot::SnapshotCell`]) — queries never block on a refresh
 //!   and never observe a half-written model.
 //!
 //! **Graceful degradation** is the design center: a failed refresh
 //! marks the current snapshot `stale: true` and keeps serving it; a
 //! failed ingest writer poisons only the ingest lane; malformed
-//! requests get typed error codes ([`protocol`]); SIGTERM / ctrl-c
-//! flush the writer and finalize the manifest before exit.
+//! requests get typed error codes ([`protocol`]); a connection beyond
+//! the transport's worker-slot cap receives one typed `backpressure`
+//! line and is closed (bounded resources, no silent hang); SIGTERM /
+//! ctrl-c flush the writer and finalize the manifest before exit.
+//!
+//! **Warm restart**: starting the daemon on a directory that already
+//! holds a live store resumes appending at its last durable checkpoint
+//! and — when a persisted snapshot matches the configured task and
+//! dimension — serves that model immediately at its pre-restart
+//! version, instead of answering `no_model` until the first refresh.
 //!
 //! Transports: newline-delimited JSON over stdin/stdout
-//! ([`run_pipe`] — the test- and CI-friendly mode) or a Unix domain
-//! socket ([`run_socket`], unix only).
+//! ([`run_pipe`] — the test- and CI-friendly mode), TCP
+//! ([`run_tcp`], `--listen HOST:PORT`), or a Unix domain socket
+//! ([`run_socket`], unix only). Both socket transports run a bounded
+//! worker pool (`conn_slots`) instead of a thread per connection.
 
+mod batcher;
 pub mod ingest;
 pub mod json;
 pub mod protocol;
 pub mod refresh;
 pub mod snapshot;
+mod transport;
+
+#[cfg(unix)]
+pub use transport::run_socket;
+pub use transport::run_tcp;
 
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
@@ -50,8 +75,9 @@ use crate::linalg::Mat;
 use crate::metrics::ServeMetrics;
 use crate::sampling::{Scheme, Sparsifier, SparsifyConfig};
 use crate::sparse::Precision;
-use crate::store::{SparseStoreWriter, StoreManifest};
+use crate::store::{SparseStoreWriter, StoreManifest, MANIFEST_FILE};
 
+use self::batcher::{run_batch_worker, BatchQueue, Reply};
 use self::ingest::{run_ingest_worker, IngestBatch, IngestShared};
 use self::json::Json;
 use self::protocol::{
@@ -59,7 +85,7 @@ use self::protocol::{
     CODE_NO_MODEL, CODE_SHUTDOWN, CODE_TIMEOUT,
 };
 use self::refresh::{run_refresh_worker, RefreshCtl, RefreshParams};
-use self::snapshot::{ModelSnapshot, QueryResult, SnapshotCell};
+use self::snapshot::{ModelKind, ModelSnapshot, QueryResult, SnapshotCell};
 
 /// Which model the daemon maintains and serves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,8 +148,16 @@ pub struct ServeConfig {
     pub queue_batches: usize,
     /// Periodic model-refresh interval.
     pub refresh_interval: Duration,
-    /// Wait budget for blocking requests (`refresh`, `flush`).
+    /// Wait budget for blocking requests (`refresh`, `flush`, `query`).
     pub request_timeout: Duration,
+    /// How long the batching lane waits for more in-flight queries to
+    /// join a panel once the first one arrives.
+    pub batch_window: Duration,
+    /// Maximum samples coalesced into one query panel.
+    pub batch_max: usize,
+    /// Socket transports: bounded connection worker slots; a connection
+    /// beyond the cap gets one typed `backpressure` line and is closed.
+    pub conn_slots: usize,
 }
 
 impl ServeConfig {
@@ -149,6 +183,9 @@ impl ServeConfig {
             queue_batches: 32,
             refresh_interval: Duration::from_secs(5),
             request_timeout: Duration::from_secs(30),
+            batch_window: Duration::from_micros(100),
+            batch_max: 64,
+            conn_slots: 64,
         }
     }
 }
@@ -158,11 +195,13 @@ struct Shared {
     task: ServeTask,
     p_orig: usize,
     queue_batches: usize,
+    conn_slots: usize,
     timeout: Duration,
     metrics: Arc<ServeMetrics>,
     cell: Arc<SnapshotCell>,
     ingest: Arc<IngestShared>,
     refresh: Arc<RefreshCtl>,
+    batcher: Arc<BatchQueue>,
     shutdown: Arc<AtomicBool>,
 }
 
@@ -176,24 +215,77 @@ pub struct Daemon {
     tx: SyncSender<IngestBatch>,
     ingest_thread: JoinHandle<Result<StoreManifest>>,
     refresh_thread: JoinHandle<()>,
+    batch_thread: JoinHandle<()>,
 }
 
 impl Daemon {
-    /// Start the daemon: create the live store in `cfg.store_dir` and
-    /// spawn the ingest + refresh threads.
+    /// Start the daemon: create the live store in `cfg.store_dir` (or
+    /// resume a previous run's store at its last durable checkpoint)
+    /// and spawn the ingest, refresh, and batch threads. When a
+    /// persisted snapshot matching the configured task and dimension is
+    /// found next to the store manifest, it is published immediately —
+    /// the warm start — so the first query never sees `no_model` after
+    /// a restart.
     pub fn start(cfg: ServeConfig) -> Result<Daemon> {
         if cfg.queue_batches == 0 {
             return Err(Error::Invalid("serve: queue_batches must be positive".into()));
         }
+        if cfg.batch_max == 0 {
+            return Err(Error::Invalid("serve: batch_max must be positive".into()));
+        }
+        if cfg.conn_slots == 0 {
+            return Err(Error::Invalid("serve: conn_slots must be positive".into()));
+        }
         let sp = Sparsifier::with_scheme(cfg.p, cfg.scfg, cfg.scheme)?;
-        let writer =
-            SparseStoreWriter::create(&cfg.store_dir, &sp, cfg.scfg, cfg.precondition, cfg.shard_cols)?
-                .with_precision(cfg.precision);
+        let writer = if cfg.store_dir.join(MANIFEST_FILE).exists() {
+            // a previous run's live store: resume appending after its
+            // last durable checkpoint (config mismatches are typed
+            // errors inside reopen, never silent corruption)
+            SparseStoreWriter::reopen(
+                &cfg.store_dir,
+                &sp,
+                cfg.scfg,
+                cfg.precondition,
+                cfg.shard_cols,
+                cfg.precision,
+            )?
+        } else {
+            SparseStoreWriter::create(
+                &cfg.store_dir,
+                &sp,
+                cfg.scfg,
+                cfg.precondition,
+                cfg.shard_cols,
+            )?
+            .with_precision(cfg.precision)
+        };
 
         let metrics = Arc::new(ServeMetrics::new());
         let cell = Arc::new(SnapshotCell::new());
+        // warm start: serve the last persisted model right away; a
+        // damaged or mismatched artifact degrades to a cold start
+        let initial_version = match ModelSnapshot::load(&cfg.store_dir) {
+            Ok(Some(snap)) if snapshot_matches(&snap, cfg.task, cfg.p) => {
+                let v = snap.version;
+                cell.publish(snap);
+                v
+            }
+            Ok(Some(_)) => {
+                eprintln!(
+                    "pds serve: ignoring persisted snapshot (task or dimension mismatch); \
+                     cold start"
+                );
+                0
+            }
+            Ok(None) => 0,
+            Err(e) => {
+                eprintln!("pds serve: ignoring persisted snapshot ({e}); cold start");
+                0
+            }
+        };
         let ingest_shared = Arc::new(IngestShared::new());
         let refresh_ctl = Arc::new(RefreshCtl::new());
+        let batch_queue = Arc::new(BatchQueue::new());
         let shutdown = Arc::new(AtomicBool::new(false));
 
         let (tx, rx) = sync_channel::<IngestBatch>(cfg.queue_batches);
@@ -213,6 +305,7 @@ impl Daemon {
                 kmeans_opts: cfg.kmeans_opts,
                 coreset_capacity: cfg.coreset_capacity,
                 interval: cfg.refresh_interval,
+                initial_version,
             };
             let (c, ctl, m, stop) =
                 (cell.clone(), refresh_ctl.clone(), metrics.clone(), shutdown.clone());
@@ -220,19 +313,28 @@ impl Daemon {
                 .name("pds-serve-refresh".into())
                 .spawn(move || run_refresh_worker(params, c, ctl, m, stop))?
         };
+        let batch_thread = {
+            let (q, c, m) = (batch_queue.clone(), cell.clone(), metrics.clone());
+            let (window, batch_max) = (cfg.batch_window, cfg.batch_max);
+            std::thread::Builder::new()
+                .name("pds-serve-batch".into())
+                .spawn(move || run_batch_worker(q, c, m, window, batch_max))?
+        };
 
         let shared = Arc::new(Shared {
             task: cfg.task,
             p_orig: cfg.p,
             queue_batches: cfg.queue_batches,
+            conn_slots: cfg.conn_slots,
             timeout: cfg.request_timeout,
             metrics,
             cell,
             ingest: ingest_shared,
             refresh: refresh_ctl,
+            batcher: batch_queue,
             shutdown,
         });
-        Ok(Daemon { shared, tx, ingest_thread, refresh_thread })
+        Ok(Daemon { shared, tx, ingest_thread, refresh_thread, batch_thread })
     }
 
     /// A request-handling client. Cheap to clone — each connection (or
@@ -247,19 +349,21 @@ impl Daemon {
     }
 
     /// Graceful stop: raise the shutdown flag, let the ingest worker
-    /// drain its backlog and finalize the store, join both workers.
+    /// drain its backlog and finalize the store, join every worker.
     /// Returns the final manifest (or the ingest lane's first error)
     /// and the final metrics dump.
     pub fn shutdown(self) -> (Result<StoreManifest>, String) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.refresh.cv.notify_all();
         self.shared.ingest.cv.notify_all();
+        self.shared.batcher.begin_shutdown();
         drop(self.tx);
         let manifest = match self.ingest_thread.join() {
             Ok(r) => r,
             Err(_) => Err(Error::Invalid("serve: ingest worker panicked".into())),
         };
         let _ = self.refresh_thread.join();
+        let _ = self.batch_thread.join();
         let stats = self.shared.metrics.to_json();
         (manifest, stats)
     }
@@ -285,7 +389,8 @@ impl Client {
         };
         match request {
             Request::Ingest { samples } => (self.handle_ingest(samples), false),
-            Request::Query { sample } => (self.handle_query(&sample), false),
+            Request::Query { sample } => (self.handle_query(sample), false),
+            Request::QueryBatch { samples } => (self.handle_query_batch(samples), false),
             Request::Stats => (self.handle_stats(), false),
             Request::Refresh => (self.handle_refresh(), false),
             Request::Flush => (self.handle_flush(), false),
@@ -364,37 +469,67 @@ impl Client {
         }
     }
 
-    /// Response fields common to every model-backed response.
-    fn model_fields(&self, snap: &ModelSnapshot) -> Vec<(&'static str, Json)> {
-        vec![
-            ("model_version", Json::Num(snap.version as f64)),
-            ("stale", Json::Bool(self.shared.cell.is_stale())),
-            ("n", Json::Num(snap.n as f64)),
-        ]
+    /// Map a non-answer reply from the batch lane onto a typed error
+    /// response.
+    fn batch_error(&self, reply: Reply) -> String {
+        match reply {
+            Reply::NoModel => {
+                self.error(CODE_NO_MODEL, "no model published yet (ingest, then refresh)")
+            }
+            Reply::BadRequest(msg) => self.error(CODE_BAD_REQUEST, &msg),
+            Reply::Internal(msg) => self.error(CODE_INTERNAL, msg),
+            Reply::Timeout => {
+                self.error(CODE_TIMEOUT, "query did not complete within the request timeout")
+            }
+            Reply::Shutdown => self.error(CODE_SHUTDOWN, "daemon is shutting down"),
+            Reply::Answer { .. } => self.error(CODE_INTERNAL, "unexpected batch reply"),
+        }
     }
 
-    fn handle_query(&self, sample: &[f64]) -> String {
+    fn handle_query(&self, sample: Vec<f64>) -> String {
         let t0 = Instant::now();
-        let Some(snap) = self.shared.cell.load() else {
-            return self.error(CODE_NO_MODEL, "no model published yet (ingest, then refresh)");
-        };
-        match snap.query(sample) {
-            Ok(QueryResult::Projection { coords }) => {
-                let mut fields = self.model_fields(&snap);
-                fields.push(("coords", Json::Arr(coords.into_iter().map(Json::Num).collect())));
+        match self.shared.batcher.submit(vec![sample], self.shared.timeout) {
+            Reply::Answer { snapshot, stale, mut results } => {
+                let Some(result) = results.pop() else {
+                    return self.error(CODE_INTERNAL, "batch lane returned no result");
+                };
+                let mut fields = vec![
+                    ("model_version", Json::Num(snapshot.version as f64)),
+                    ("stale", Json::Bool(stale)),
+                    ("n", Json::Num(snapshot.n as f64)),
+                ];
+                push_result_fields(&mut fields, result);
                 self.shared.metrics.query_latency.record(t0.elapsed());
                 ok_response(fields)
             }
-            Ok(QueryResult::Assignment { cluster, distance2, center_bound }) => {
-                let mut fields = self.model_fields(&snap);
-                fields.push(("cluster", Json::Num(f64::from(cluster))));
-                fields.push(("distance2", Json::Num(distance2)));
-                // NaN (theory-not-applicable) serializes as null
-                fields.push(("center_bound", Json::Num(center_bound)));
+            other => self.batch_error(other),
+        }
+    }
+
+    fn handle_query_batch(&self, samples: Vec<Vec<f64>>) -> String {
+        let t0 = Instant::now();
+        match self.shared.batcher.submit(samples, self.shared.timeout) {
+            Reply::Answer { snapshot, stale, results } => {
+                let items = results
+                    .into_iter()
+                    .map(|result| {
+                        let mut fields = Vec::new();
+                        push_result_fields(&mut fields, result);
+                        Json::Obj(
+                            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+                        )
+                    })
+                    .collect();
+                let fields = vec![
+                    ("model_version", Json::Num(snapshot.version as f64)),
+                    ("stale", Json::Bool(stale)),
+                    ("n", Json::Num(snapshot.n as f64)),
+                    ("results", Json::Arr(items)),
+                ];
                 self.shared.metrics.query_latency.record(t0.elapsed());
                 ok_response(fields)
             }
-            Err(e) => self.error(CODE_BAD_REQUEST, &e.to_string()),
+            other => self.batch_error(other),
         }
     }
 
@@ -457,6 +592,31 @@ impl Client {
     }
 }
 
+/// Does a persisted snapshot fit this daemon's configuration? (Task and
+/// original dimension must match; anything else is a different model.)
+fn snapshot_matches(snap: &ModelSnapshot, task: ServeTask, p: usize) -> bool {
+    let task_ok = match snap.kind {
+        ModelKind::Pca(_) => task == ServeTask::Pca,
+        ModelKind::Kmeans(_) => task == ServeTask::Kmeans,
+    };
+    task_ok && snap.dim() == p
+}
+
+/// Append one query result's task-specific response fields.
+fn push_result_fields(fields: &mut Vec<(&'static str, Json)>, result: QueryResult) {
+    match result {
+        QueryResult::Projection { coords } => {
+            fields.push(("coords", Json::Arr(coords.into_iter().map(Json::Num).collect())));
+        }
+        QueryResult::Assignment { cluster, distance2, center_bound } => {
+            fields.push(("cluster", Json::Num(f64::from(cluster))));
+            fields.push(("distance2", Json::Num(distance2)));
+            // NaN (theory-not-applicable) serializes as null
+            fields.push(("center_bound", Json::Num(center_bound)));
+        }
+    }
+}
+
 /// Signal plumbing: SIGTERM / SIGINT raise a flag the serve loops poll,
 /// so shutdown always goes through the writer-flush path.
 #[cfg(unix)]
@@ -503,7 +663,7 @@ mod sig {
 /// raise the daemon's shutdown flag, wait for the ingest worker to
 /// finalize the store, dump final metrics to stderr, exit 0. Returns
 /// once the daemon shuts down normally instead.
-fn spawn_signal_watcher(shared: Arc<Shared>) {
+fn spawn_signal_watcher(shared: Arc<Shared>) -> Result<()> {
     sig::install();
     std::thread::Builder::new()
         .name("pds-serve-signals".into())
@@ -527,8 +687,8 @@ fn spawn_signal_watcher(shared: Arc<Shared>) {
                 return; // normal shutdown path took over
             }
             std::thread::sleep(Duration::from_millis(50));
-        })
-        .expect("spawn signal watcher");
+        })?;
+    Ok(())
 }
 
 /// Run the daemon over stdin/stdout: one request line in, one response
@@ -537,7 +697,7 @@ fn spawn_signal_watcher(shared: Arc<Shared>) {
 /// tests and the CI smoke job drive.
 pub fn run_pipe(cfg: ServeConfig) -> Result<()> {
     let daemon = Daemon::start(cfg)?;
-    spawn_signal_watcher(daemon.shared.clone());
+    spawn_signal_watcher(daemon.shared.clone())?;
     let client = daemon.client();
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -561,67 +721,4 @@ pub fn run_pipe(cfg: ServeConfig) -> Result<()> {
     let (manifest, stats) = daemon.shutdown();
     eprintln!("{stats}");
     manifest.map(|_| ())
-}
-
-/// Run the daemon on a Unix domain socket at `path`: one handler thread
-/// per connection, all sharing the daemon state. Removes a stale socket
-/// file first; stops on SIGTERM/SIGINT or a `shutdown` request from any
-/// connection.
-#[cfg(unix)]
-pub fn run_socket(cfg: ServeConfig, path: &std::path::Path) -> Result<()> {
-    use std::os::unix::net::UnixListener;
-
-    let daemon = Daemon::start(cfg)?;
-    spawn_signal_watcher(daemon.shared.clone());
-    let _ = std::fs::remove_file(path);
-    let listener = UnixListener::bind(path)?;
-    listener.set_nonblocking(true)?;
-    eprintln!("pds serve: listening on {}", path.display());
-
-    while !daemon.shared.shutdown.load(Ordering::SeqCst) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false)?;
-                let client = daemon.client();
-                std::thread::Builder::new()
-                    .name("pds-serve-conn".into())
-                    .spawn(move || serve_connection(stream, client))?;
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(50));
-            }
-            Err(e) => {
-                let _ = std::fs::remove_file(path);
-                return Err(e.into());
-            }
-        }
-    }
-    let _ = std::fs::remove_file(path);
-    let (manifest, stats) = daemon.shutdown();
-    eprintln!("{stats}");
-    manifest.map(|_| ())
-}
-
-#[cfg(unix)]
-fn serve_connection(stream: std::os::unix::net::UnixStream, client: Client) {
-    use std::io::BufReader;
-    let Ok(write_half) = stream.try_clone() else { return };
-    let mut writer = std::io::BufWriter::new(write_half);
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (response, quit) = client.handle_line(&line);
-        if writer.write_all(response.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-            || writer.flush().is_err()
-        {
-            break;
-        }
-        if quit {
-            break;
-        }
-    }
 }

@@ -5,12 +5,13 @@
 //! Requests (`cmd` selects the verb):
 //!
 //! ```text
-//! {"cmd":"ingest","samples":[[x00,…,x0p],…]}   enqueue raw sample columns
-//! {"cmd":"query","sample":[x0,…,xp]}           project / assign one sample
-//! {"cmd":"stats"}                              dump the metrics registry
-//! {"cmd":"refresh"}                            force a model refresh, wait for it
-//! {"cmd":"flush"}                              wait until enqueued batches are absorbed
-//! {"cmd":"shutdown"}                           graceful stop (writer finalized)
+//! {"cmd":"ingest","samples":[[x00,…,x0p],…]}      enqueue raw sample columns
+//! {"cmd":"query","sample":[x0,…,xp]}              project / assign one sample
+//! {"cmd":"query_batch","samples":[[x00,…,x0p],…]} project / assign many samples in one round trip
+//! {"cmd":"stats"}                                 dump the metrics registry
+//! {"cmd":"refresh"}                               force a model refresh, wait for it
+//! {"cmd":"flush"}                                 wait until enqueued batches are absorbed
+//! {"cmd":"shutdown"}                              graceful stop (writer finalized)
 //! ```
 //!
 //! Responses always carry `"ok"`: `{"ok":true,…}` on success,
@@ -18,9 +19,18 @@
 //! responses additionally carry `"model_version"` (monotone, bumped per
 //! successful refresh) and `"stale"` (true when the last refresh failed
 //! and the daemon is serving the previous snapshot — the degraded mode).
-//! Malformed lines, oversized batches, and full queues are all typed
-//! errors; the daemon never closes the connection in response to a bad
-//! request.
+//! A `query_batch` response answers every sample from one snapshot and
+//! carries a `"results"` array in request order. Malformed lines,
+//! oversized batches, and full queues are all typed errors; the daemon
+//! never closes an established connection in response to a bad request.
+//! (The one connection-scoped rejection is the transport's: a connection
+//! beyond `--conn-slots` receives a single `backpressure` error line and
+//! is closed — see the serve module docs.)
+//!
+//! Both query verbs run through the daemon's batching lane: requests in
+//! flight at the same moment — across all connections — coalesce into
+//! one SIMD panel, which answers them bit-identically to one-at-a-time
+//! execution (a single query is a panel of one).
 
 use crate::error::{Error, Result};
 
@@ -57,6 +67,11 @@ pub enum Request {
     Query {
         /// The sample, in the store's original dimension.
         sample: Vec<f64>,
+    },
+    /// Answer many samples in one round trip, all from one snapshot.
+    QueryBatch {
+        /// The samples, each in the store's original dimension.
+        samples: Vec<Vec<f64>>,
     },
     /// Dump the metrics registry.
     Stats,
@@ -98,6 +113,19 @@ impl Request {
                     .get("sample")
                     .ok_or_else(|| Error::Invalid("query needs a `sample` array".into()))?;
                 Ok(Request::Query { sample: number_vec(sample, "sample")? })
+            }
+            "query_batch" => {
+                let rows = root.get("samples").and_then(Json::as_arr).ok_or_else(|| {
+                    Error::Invalid("query_batch needs a `samples` array".into())
+                })?;
+                if rows.is_empty() {
+                    return Err(Error::Invalid("query_batch: `samples` is empty".into()));
+                }
+                let mut samples = Vec::with_capacity(rows.len());
+                for (i, row) in rows.iter().enumerate() {
+                    samples.push(number_vec(row, &format!("samples[{i}]"))?);
+                }
+                Ok(Request::QueryBatch { samples })
             }
             "stats" => Ok(Request::Stats),
             "refresh" => Ok(Request::Refresh),
@@ -160,6 +188,10 @@ mod tests {
             Request::parse(r#"{"cmd":"query","sample":[0.5,1.5]}"#).unwrap(),
             Request::Query { sample: vec![0.5, 1.5] }
         );
+        assert_eq!(
+            Request::parse(r#"{"cmd":"query_batch","samples":[[1,2],[3,4]]}"#).unwrap(),
+            Request::QueryBatch { samples: vec![vec![1.0, 2.0], vec![3.0, 4.0]] }
+        );
         for (line, want) in [
             (r#"{"cmd":"stats"}"#, Request::Stats),
             (r#"{"cmd":"refresh"}"#, Request::Refresh),
@@ -181,6 +213,9 @@ mod tests {
             r#"{"cmd":"ingest","samples":[["x"]]}"#,
             r#"{"cmd":"query","sample":[1e999]}"#, // overflows to inf
             r#"{"cmd":"query"}"#,
+            r#"{"cmd":"query_batch"}"#,
+            r#"{"cmd":"query_batch","samples":[]}"#,
+            r#"{"cmd":"query_batch","samples":[[1],"x"]}"#,
         ] {
             assert!(
                 matches!(Request::parse(bad), Err(Error::Invalid(_))),

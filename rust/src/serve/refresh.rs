@@ -7,8 +7,10 @@
 //! [`CoresetPartial`](crate::distributed::CoresetPartial) (K-means) via
 //! the [`PartialFit`] merge law — then the merged partial is finalized
 //! and the result published into the [`SnapshotCell`] as a new model
-//! version. A store with no new shards is a no-op, so the steady-state
-//! cost of the loop is one manifest read.
+//! version — and persisted as a versioned `.pdsp` artifact next to the
+//! store manifest, so a restarted daemon warm-starts from the last
+//! published model. A store with no new shards is a no-op, so the
+//! steady-state cost of the loop is one manifest read.
 //!
 //! A failed refresh never kills the daemon: the failure is counted,
 //! the previous snapshot is marked stale, and the loop retries on the
@@ -51,6 +53,10 @@ pub struct RefreshParams {
     pub coreset_capacity: usize,
     /// Periodic refresh interval.
     pub interval: Duration,
+    /// Version the warm-start snapshot was loaded at (0 on a cold
+    /// start): the first refresh publishes `initial_version + 1`, so
+    /// versions stay monotone across daemon restarts.
+    pub initial_version: u64,
 }
 
 /// Refresh handshake state: `refresh` requests bump `requested`, the
@@ -151,7 +157,7 @@ struct FitState {
 }
 
 impl FitState {
-    fn new() -> Self {
+    fn new(initial_version: u64) -> Self {
         FitState {
             folded: BTreeSet::new(),
             pca: None,
@@ -159,7 +165,7 @@ impl FitState {
             n_cols: 0,
             folds: 0,
             dirty: false,
-            version: 0,
+            version: initial_version,
         }
     }
 }
@@ -174,7 +180,7 @@ pub fn run_refresh_worker(
     metrics: Arc<ServeMetrics>,
     shutdown: Arc<AtomicBool>,
 ) {
-    let mut fit = FitState::new();
+    let mut fit = FitState::new(params.initial_version);
     while !shutdown.load(Ordering::SeqCst) {
         // sleep until the interval elapses, a refresh is requested, or
         // shutdown is raised
@@ -199,7 +205,7 @@ pub fn run_refresh_worker(
 
         let goal = ctl.lock_state().requested;
         let t0 = Instant::now();
-        let outcome = refresh_once(&params, &mut fit, &cell);
+        let outcome = refresh_once(&params, &mut fit, &cell, &metrics);
         metrics.refresh_duration.record(t0.elapsed());
         let error = match outcome {
             Ok(true) => {
@@ -233,6 +239,7 @@ fn refresh_once(
     params: &RefreshParams,
     fit: &mut FitState,
     cell: &SnapshotCell,
+    metrics: &ServeMetrics,
 ) -> Result<bool> {
     if !params.dir.join(MANIFEST_FILE).exists() {
         // the ingest lane has not checkpointed a single shard yet
@@ -241,6 +248,7 @@ fn refresh_once(
     let mut reader = SparseStoreReader::open(&params.dir)?;
     let sp = reader.sparsifier()?;
     let preconditioned = reader.manifest().preconditioned;
+    let precision = reader.manifest().precision;
     let new: Vec<ShardEntry> = reader
         .manifest()
         .shards
@@ -279,15 +287,16 @@ fn refresh_once(
             let FitOutcome::Pca(pca_fit) = report.outcome else {
                 return Err(Error::Invalid("refresh: PCA plan returned a non-PCA outcome".into()));
             };
-            ModelSnapshot {
-                version: fit.version + 1,
-                n: report.n,
-                kind: ModelKind::Pca(PcaSnapshot {
+            ModelSnapshot::new(
+                fit.version + 1,
+                report.n,
+                precision,
+                ModelKind::Pca(PcaSnapshot {
                     components: pca_fit.pca.components,
                     mean: pca_fit.mean,
                     eigenvalues: pca_fit.pca.eigenvalues,
                 }),
-            }
+            )
         }
         ServeTask::Kmeans => {
             if !new.is_empty() {
@@ -316,21 +325,25 @@ fn refresh_once(
             let centers =
                 if preconditioned { sp.unmix(&centers_pre) } else { sp.truncate(&centers_pre) };
             let center_bound = coreset_center_bound(&sp, &points, &weights, &centers_pre);
-            ModelSnapshot {
-                version: fit.version + 1,
-                n: fit.n_cols,
-                kind: ModelKind::Kmeans(KmeansSnapshot {
-                    centers,
-                    center_bound,
-                    iterations,
-                    converged,
-                }),
-            }
+            ModelSnapshot::new(
+                fit.version + 1,
+                fit.n_cols,
+                precision,
+                ModelKind::Kmeans(KmeansSnapshot { centers, center_bound, iterations, converged }),
+            )
         }
     };
 
     fit.version = snapshot.version;
     fit.dirty = false;
+    // persist before publishing: a daemon restarted after this point
+    // warm-starts at exactly the version clients were answered from. A
+    // persist failure only degrades restart behavior (cold start), so
+    // it is counted and logged, never allowed to fail the refresh.
+    if let Err(e) = snapshot.write_atomic(&params.dir) {
+        metrics.snapshot_persist_failures.fetch_add(1, Ordering::Relaxed);
+        eprintln!("pds serve: warning: snapshot persist failed (a restarted daemon will cold-start): {e}");
+    }
     cell.publish(snapshot);
     Ok(true)
 }

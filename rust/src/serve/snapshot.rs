@@ -1,4 +1,5 @@
-//! Immutable model snapshots and the atomic swap cell.
+//! Immutable model snapshots, the batched query kernel, the atomic
+//! swap cell, and warm-start snapshot persistence.
 //!
 //! The refresh loop builds a complete new [`ModelSnapshot`] offline,
 //! then publishes it into the [`SnapshotCell`] under a write lock held
@@ -6,12 +7,49 @@
 //! a read lock and answer entirely from that immutable value, so a
 //! query observes exactly one model version end to end and never blocks
 //! on (or is torn by) a concurrent refresh.
+//!
+//! ## One kernel, every batch size
+//!
+//! There is exactly one query execution path: [`ModelSnapshot::query_panel`]
+//! runs a panel of samples through the SIMD kernels from [`crate::simd`]
+//! (`col_dot` for PCA projection, `masked_dist2_x4` for K-means
+//! assignment), iterating samples in panel order with per-snapshot
+//! precomputed transposed layouts. The per-sample [`query`](ModelSnapshot::query)
+//! is literally a panel of one, so batched and single-sample answers are
+//! **bitwise identical at every batch size**, and the SIMD layer's own
+//! property tests extend that identity across ISA tiers
+//! (scalar/SSE2/AVX2). At [`Precision::F32`] the sample values are
+//! quantized through `f32` once per query (exact widening back to `f64`,
+//! `f64` accumulation — the Lazy SPCA recipe, arXiv:1709.07175), so f32
+//! stores answer queries at the precision they were fitted at.
+//!
+//! ## Persistence
+//!
+//! Every published snapshot is also serialized as a versioned,
+//! CRC-checked `.pdsp` artifact ([`SNAPSHOT_FILE`], kind
+//! [`kind::SNAPSHOT`]) next to the store manifest, via the same
+//! temp-file + fsync + rename discipline the manifest uses. A restarted
+//! daemon loads it at startup and serves the last fitted model
+//! immediately instead of returning `no_model` until the first refresh;
+//! a truncated, tampered, or foreign artifact is a typed error and
+//! degrades to a cold start, never a panic.
 
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::distributed::{decode_artifact, encode_artifact, kind, PayloadReader, PayloadWriter};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::simd::{self, Isa};
+use crate::sparse::Precision;
+
+/// File name of the persisted snapshot artifact, written next to the
+/// store manifest at each successful publish.
+pub const SNAPSHOT_FILE: &str = "snapshot.pdsp";
+
+/// Payload format version this build writes for persisted snapshots.
+pub const SNAPSHOT_VERSION: u32 = 1;
 
 /// A published PCA model (original data domain — components and mean
 /// are already unmixed through the ROS adjoint where applicable).
@@ -48,8 +86,28 @@ pub enum ModelKind {
     Kmeans(KmeansSnapshot),
 }
 
+/// Kernel-shaped layouts precomputed once per snapshot so the batched
+/// query path pays the transpose exactly once per publish, not per
+/// query.
+enum QueryCache {
+    /// PCA: components transposed row-major (`bt[j*k + c]` = component
+    /// `c` at feature `j`) — the layout [`simd::col_dot`] consumes.
+    Pca {
+        /// `p × k` components in `col_dot`'s row-major transposed form.
+        components_t: Vec<f64>,
+    },
+    /// K-means: centers regrouped into 4-wide transposed panels
+    /// (`panel[j*4 + lane]`, ragged lanes zero-padded) — the layout
+    /// [`simd::masked_dist2_x4`] consumes.
+    Kmeans {
+        /// `ceil(k/4)` panels of length `p*4`.
+        panels: Vec<Vec<f64>>,
+    },
+}
+
 /// One immutable published model: everything a query needs, plus the
-/// provenance a client sees (`model_version`, sample count).
+/// provenance a client sees (`model_version`, sample count). Construct
+/// with [`ModelSnapshot::new`], which precomputes the kernel layouts.
 pub struct ModelSnapshot {
     /// Monotone version, bumped once per successful refresh.
     pub version: u64,
@@ -57,13 +115,20 @@ pub struct ModelSnapshot {
     pub n: usize,
     /// The fitted model.
     pub kind: ModelKind,
+    /// Query-side value precision, mirroring the store the model was
+    /// fitted from (f32 stores quantize query samples the same way).
+    precision: Precision,
+    /// The full index set `0..p`: a dense sample viewed as a sparse
+    /// vector that keeps every coordinate, for the masked SIMD kernels.
+    all_idx: Vec<u32>,
+    cache: QueryCache,
 }
 
 /// The outcome of a query against one snapshot.
 pub enum QueryResult {
     /// PCA: the sample's coordinates in the fitted PC basis.
     Projection {
-        /// `components? (x − mean)`, length k.
+        /// `componentsᵀ (x − mean)`, length k.
         coords: Vec<f64>,
     },
     /// K-means: nearest-center assignment.
@@ -79,6 +144,50 @@ pub enum QueryResult {
 }
 
 impl ModelSnapshot {
+    /// Build a snapshot, precomputing the transposed kernel layouts the
+    /// batched query path executes against.
+    pub fn new(version: u64, n: usize, precision: Precision, kind: ModelKind) -> ModelSnapshot {
+        let (p, cache) = match &kind {
+            ModelKind::Pca(pca) => {
+                let (p, k) = (pca.components.rows(), pca.components.cols());
+                let mut components_t = vec![0.0f64; p * k];
+                for c in 0..k {
+                    let col = pca.components.col(c);
+                    for (j, &v) in col.iter().enumerate() {
+                        components_t[j * k + c] = v;
+                    }
+                }
+                (p, QueryCache::Pca { components_t })
+            }
+            ModelKind::Kmeans(km) => {
+                let (p, k) = (km.centers.rows(), km.centers.cols());
+                let groups = (k + 3) / 4;
+                let mut panels = Vec::with_capacity(groups);
+                for g in 0..groups {
+                    let mut panel = vec![0.0f64; p * 4];
+                    for lane in 0..4 {
+                        let c = g * 4 + lane;
+                        if c < k {
+                            let col = km.centers.col(c);
+                            for (j, &v) in col.iter().enumerate() {
+                                panel[j * 4 + lane] = v;
+                            }
+                        }
+                    }
+                    panels.push(panel);
+                }
+                (p, QueryCache::Kmeans { panels })
+            }
+        };
+        let all_idx: Vec<u32> = (0..p as u32).collect();
+        ModelSnapshot { version, n, kind, precision, all_idx, cache }
+    }
+
+    /// The query-side value precision this snapshot answers at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     /// The sample dimension queries must match (`p_orig`).
     pub fn dim(&self) -> usize {
         match &self.kind {
@@ -88,31 +197,242 @@ impl ModelSnapshot {
     }
 
     /// Answer one query from this snapshot alone (no locks, no I/O).
-    /// The sample must have [`dim`](Self::dim) entries.
+    /// The sample must have [`dim`](Self::dim) entries. A panel of one:
+    /// bitwise identical to the same sample inside any batch.
     pub fn query(&self, sample: &[f64]) -> Result<QueryResult> {
-        if sample.len() != self.dim() {
-            return Err(Error::Invalid(format!(
-                "query sample has {} entries, the model dimension is {}",
-                sample.len(),
-                self.dim()
-            )));
+        let mut out = self.query_panel(&[sample])?;
+        out.pop().ok_or_else(|| Error::Invalid("query panel returned no result".into()))
+    }
+
+    /// Answer a panel of queries through the SIMD kernels at the
+    /// auto-detected ISA tier. Results are in sample order.
+    pub fn query_panel(&self, samples: &[&[f64]]) -> Result<Vec<QueryResult>> {
+        self.query_panel_at(simd::active(), samples)
+    }
+
+    /// [`query_panel`](Self::query_panel) pinned to an explicit ISA
+    /// tier — the entry point tests and benchmarks use to assert the
+    /// batched path is bitwise identical across tiers without touching
+    /// the process-global ISA override.
+    pub fn query_panel_at(&self, isa: Isa, samples: &[&[f64]]) -> Result<Vec<QueryResult>> {
+        let p = self.dim();
+        for (i, s) in samples.iter().enumerate() {
+            if s.len() != p {
+                return Err(Error::Invalid(format!(
+                    "query sample {i} has {} entries, the model dimension is {p}",
+                    s.len()
+                )));
+            }
         }
+        let mut out = Vec::with_capacity(samples.len());
+        match (&self.kind, &self.cache) {
+            (ModelKind::Pca(pca), QueryCache::Pca { components_t }) => {
+                let k = pca.components.cols();
+                // one scratch buffer for the whole panel — batching
+                // amortizes the allocation across samples
+                let mut centered = vec![0.0f64; p];
+                for &s in samples {
+                    match self.precision {
+                        Precision::F64 => {
+                            for j in 0..p {
+                                centered[j] = s[j] - pca.mean[j];
+                            }
+                        }
+                        // quantize the *centered* sample: widening
+                        // f32 → f64 is exact, accumulation stays f64
+                        Precision::F32 => {
+                            for j in 0..p {
+                                centered[j] = (s[j] - pca.mean[j]) as f32 as f64;
+                            }
+                        }
+                    }
+                    let mut coords = vec![0.0f64; k];
+                    simd::col_dot(isa, &mut coords, &self.all_idx, &centered, components_t);
+                    out.push(QueryResult::Projection { coords });
+                }
+            }
+            (ModelKind::Kmeans(km), QueryCache::Kmeans { panels }) => {
+                let k = km.centers.cols();
+                let mut q32 = match self.precision {
+                    Precision::F32 => vec![0.0f32; p],
+                    Precision::F64 => Vec::new(),
+                };
+                for &s in samples {
+                    if self.precision == Precision::F32 {
+                        for j in 0..p {
+                            q32[j] = s[j] as f32;
+                        }
+                    }
+                    let mut best = f64::INFINITY;
+                    let mut best_c = 0u32;
+                    let mut d4 = [0.0f64; 4];
+                    for (g, panel) in panels.iter().enumerate() {
+                        match self.precision {
+                            Precision::F64 => {
+                                simd::masked_dist2_x4(isa, &self.all_idx, s, panel, &mut d4);
+                            }
+                            Precision::F32 => {
+                                simd::masked_dist2_x4_f32(isa, &self.all_idx, &q32, panel, &mut d4);
+                            }
+                        }
+                        for (lane, &d) in d4.iter().enumerate() {
+                            let c = g * 4 + lane;
+                            // strict < in ascending center order: ties
+                            // go to the lowest index, like assign_dense
+                            if c < k && d < best {
+                                best = d;
+                                best_c = c as u32;
+                            }
+                        }
+                    }
+                    out.push(QueryResult::Assignment {
+                        cluster: best_c,
+                        distance2: best.max(0.0),
+                        center_bound: km.center_bound,
+                    });
+                }
+            }
+            _ => {
+                return Err(Error::Invalid(
+                    "snapshot query cache does not match the model kind".into(),
+                ))
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistence: the `.pdsp` snapshot artifact (docs/FORMAT.md §4.3).
+
+/// Task tag in the persisted payload.
+const TASK_PCA: u8 = 0;
+const TASK_KMEANS: u8 = 1;
+/// Precision tag in the persisted payload.
+const PREC_F64: u8 = 0;
+const PREC_F32: u8 = 1;
+
+impl ModelSnapshot {
+    /// Serialize into a `.pdsp` artifact (kind [`kind::SNAPSHOT`],
+    /// version [`SNAPSHOT_VERSION`], CRC-checked envelope).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::new();
+        w.u8(match &self.kind {
+            ModelKind::Pca(_) => TASK_PCA,
+            ModelKind::Kmeans(_) => TASK_KMEANS,
+        });
+        w.u8(match self.precision {
+            Precision::F64 => PREC_F64,
+            Precision::F32 => PREC_F32,
+        });
+        w.u64(self.version);
+        w.u64(self.n as u64);
         match &self.kind {
             ModelKind::Pca(pca) => {
-                let centered: Vec<f64> =
-                    sample.iter().zip(&pca.mean).map(|(x, m)| x - m).collect();
-                Ok(QueryResult::Projection { coords: pca.components.matvec_transa(&centered) })
+                w.u64(pca.components.rows() as u64);
+                w.u64(pca.components.cols() as u64);
+                w.f64s(pca.components.as_slice());
+                w.f64s(&pca.mean);
+                w.f64s(&pca.eigenvalues);
             }
             ModelKind::Kmeans(km) => {
-                let x = Mat::from_vec(km.centers.rows(), 1, sample.to_vec())?;
-                let (assign, obj) = crate::kmeans::assign_dense(&x, &km.centers);
-                Ok(QueryResult::Assignment {
-                    cluster: assign[0],
-                    distance2: obj.max(0.0),
-                    center_bound: km.center_bound,
-                })
+                w.u64(km.centers.rows() as u64);
+                w.u64(km.centers.cols() as u64);
+                w.f64s(km.centers.as_slice());
+                w.f64(km.center_bound);
+                w.u64(km.iterations as u64);
+                w.u8(u8::from(km.converged));
             }
         }
+        encode_artifact(kind::SNAPSHOT, SNAPSHOT_VERSION, &w.finish())
+    }
+
+    /// Deserialize a persisted snapshot. Truncation, tampering, and
+    /// trailing bytes are [`Error::Corrupt`]; a foreign artifact kind or
+    /// a version newer than this build is [`Error::Invalid`]. Never
+    /// panics on hostile bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelSnapshot> {
+        let (version, k, payload) = decode_artifact(bytes)?;
+        if k != kind::SNAPSHOT {
+            return Err(Error::Invalid(format!(
+                "artifact kind {k} is not a model snapshot (kind {})",
+                kind::SNAPSHOT
+            )));
+        }
+        if version > SNAPSHOT_VERSION {
+            return Err(Error::Invalid(format!(
+                "snapshot version {version} is newer than this build's {SNAPSHOT_VERSION}"
+            )));
+        }
+        let mut r = PayloadReader::new(payload);
+        let task = r.u8()?;
+        let precision = match r.u8()? {
+            PREC_F64 => Precision::F64,
+            PREC_F32 => Precision::F32,
+            other => {
+                return Err(Error::Corrupt(format!("snapshot: unknown precision tag {other}")))
+            }
+        };
+        let model_version = r.u64()?;
+        let n = r.len()?;
+        let p = r.len()?;
+        let cols = r.len()?;
+        let pk = match (p, cols) {
+            (0, _) | (_, 0) => None,
+            _ => p.checked_mul(cols),
+        }
+        .ok_or_else(|| Error::Corrupt(format!("snapshot: implausible shape {p} x {cols}")))?;
+        let snap_kind = match task {
+            TASK_PCA => {
+                let components = Mat::from_vec(p, cols, r.f64s(pk)?)?;
+                let mean = r.f64s(p)?;
+                let eigenvalues = r.f64s(cols)?;
+                ModelKind::Pca(PcaSnapshot { components, mean, eigenvalues })
+            }
+            TASK_KMEANS => {
+                let centers = Mat::from_vec(p, cols, r.f64s(pk)?)?;
+                let center_bound = r.f64()?;
+                let iterations = r.len()?;
+                let converged = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => {
+                        return Err(Error::Corrupt(format!(
+                            "snapshot: converged flag {other} is not 0/1"
+                        )))
+                    }
+                };
+                ModelKind::Kmeans(KmeansSnapshot { centers, center_bound, iterations, converged })
+            }
+            other => return Err(Error::Corrupt(format!("snapshot: unknown task tag {other}"))),
+        };
+        r.finish()?;
+        Ok(ModelSnapshot::new(model_version, n, precision, snap_kind))
+    }
+
+    /// Persist atomically into `dir` (next to the store manifest): temp
+    /// file, fsync, rename — a crash mid-write leaves either the
+    /// previous snapshot or this one on disk, never a torn artifact.
+    pub fn write_atomic(&self, dir: &Path) -> Result<()> {
+        let tmp = dir.join(format!("{SNAPSHOT_FILE}.tmp"));
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, dir.join(SNAPSHOT_FILE))?;
+        Ok(())
+    }
+
+    /// Load the persisted snapshot from `dir`, if one exists.
+    /// `Ok(None)` when no snapshot has ever been persisted there.
+    pub fn load(dir: &Path) -> Result<Option<ModelSnapshot>> {
+        let path = dir.join(SNAPSHOT_FILE);
+        if !path.exists() {
+            return Ok(None);
+        }
+        Ok(Some(ModelSnapshot::from_bytes(&std::fs::read(&path)?)?))
     }
 }
 
@@ -181,18 +501,71 @@ impl Default for SnapshotCell {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Pcg64;
 
     fn pca_snapshot(version: u64) -> ModelSnapshot {
         // components = identity on the first 2 of 3 dims, mean = 1-vector
         let components = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]).unwrap();
-        ModelSnapshot {
+        ModelSnapshot::new(
             version,
-            n: 10,
-            kind: ModelKind::Pca(PcaSnapshot {
+            10,
+            Precision::F64,
+            ModelKind::Pca(PcaSnapshot {
                 components,
                 mean: vec![1.0; 3],
                 eigenvalues: vec![2.0, 1.0],
             }),
+        )
+    }
+
+    /// A random p=13 snapshot of each kind at the given precision
+    /// (13 exercises ragged SIMD tails; k=6 exercises a ragged lane
+    /// group for K-means).
+    fn random_snapshot(task: u8, precision: Precision, seed: u64) -> ModelSnapshot {
+        let mut rng = Pcg64::seed(seed);
+        let (p, k) = (13, 6);
+        if task == TASK_PCA {
+            ModelSnapshot::new(
+                3,
+                100,
+                precision,
+                ModelKind::Pca(PcaSnapshot {
+                    components: Mat::from_fn(p, k, |_, _| rng.normal()),
+                    mean: (0..p).map(|_| rng.normal()).collect(),
+                    eigenvalues: (0..k).map(|_| rng.normal().abs()).collect(),
+                }),
+            )
+        } else {
+            ModelSnapshot::new(
+                3,
+                100,
+                precision,
+                ModelKind::Kmeans(KmeansSnapshot {
+                    centers: Mat::from_fn(p, k, |_, _| rng.normal()),
+                    center_bound: 0.25,
+                    iterations: 7,
+                    converged: true,
+                }),
+            )
+        }
+    }
+
+    /// Scalar plus the detected tier (when it is more than scalar).
+    fn tiers() -> Vec<Isa> {
+        let mut t = vec![Isa::Scalar];
+        let d = simd::detect();
+        if d != Isa::Scalar {
+            t.push(d);
+        }
+        t
+    }
+
+    fn bits(r: &QueryResult) -> Vec<u64> {
+        match r {
+            QueryResult::Projection { coords } => coords.iter().map(|c| c.to_bits()).collect(),
+            QueryResult::Assignment { cluster, distance2, center_bound } => {
+                vec![u64::from(*cluster), distance2.to_bits(), center_bound.to_bits()]
+            }
         }
     }
 
@@ -210,16 +583,17 @@ mod tests {
     #[test]
     fn kmeans_query_assigns_nearest_center() {
         let centers = Mat::from_vec(2, 2, vec![0.0, 0.0, 10.0, 10.0]).unwrap();
-        let snap = ModelSnapshot {
-            version: 1,
-            n: 4,
-            kind: ModelKind::Kmeans(KmeansSnapshot {
+        let snap = ModelSnapshot::new(
+            1,
+            4,
+            Precision::F64,
+            ModelKind::Kmeans(KmeansSnapshot {
                 centers,
                 center_bound: 0.5,
                 iterations: 3,
                 converged: true,
             }),
-        };
+        );
         match snap.query(&[9.0, 9.0]).unwrap() {
             QueryResult::Assignment { cluster, distance2, center_bound } => {
                 assert_eq!(cluster, 1);
@@ -228,6 +602,126 @@ mod tests {
             }
             _ => panic!("expected assignment"),
         }
+    }
+
+    /// The tentpole invariant: the batched panel is bitwise identical
+    /// to the per-sample path at every batch size and ISA tier, for
+    /// both tasks and both precisions.
+    #[test]
+    fn batched_query_is_bitwise_identical_to_per_sample() {
+        let mut rng = Pcg64::seed(9);
+        for task in [TASK_PCA, TASK_KMEANS] {
+            for precision in [Precision::F64, Precision::F32] {
+                let snap = random_snapshot(task, precision, 42);
+                let p = snap.dim();
+                let samples: Vec<Vec<f64>> =
+                    (0..64).map(|_| (0..p).map(|_| rng.normal()).collect()).collect();
+                let singles: Vec<Vec<u64>> =
+                    samples.iter().map(|s| bits(&snap.query(s).unwrap())).collect();
+                for isa in tiers() {
+                    for batch in [1usize, 2, 3, 7, 64] {
+                        for start in [0usize, 5] {
+                            let rows: Vec<&[f64]> = samples
+                                [start..(start + batch).min(samples.len())]
+                                .iter()
+                                .map(Vec::as_slice)
+                                .collect();
+                            let got = snap.query_panel_at(isa, &rows).unwrap();
+                            assert_eq!(got.len(), rows.len());
+                            for (i, r) in got.iter().enumerate() {
+                                assert_eq!(
+                                    bits(r),
+                                    singles[start + i],
+                                    "task={task} prec={precision:?} isa={} batch={batch} i={i}",
+                                    isa.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serde round trip preserves answers bitwise for both model kinds
+    /// at both precisions.
+    #[test]
+    fn snapshot_artifact_round_trips_bitwise() {
+        let mut rng = Pcg64::seed(3);
+        for task in [TASK_PCA, TASK_KMEANS] {
+            for precision in [Precision::F64, Precision::F32] {
+                let snap = random_snapshot(task, precision, 7);
+                let back = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+                assert_eq!(back.version, snap.version);
+                assert_eq!(back.n, snap.n);
+                assert_eq!(back.precision(), precision);
+                assert_eq!(back.dim(), snap.dim());
+                let sample: Vec<f64> = (0..snap.dim()).map(|_| rng.normal()).collect();
+                assert_eq!(
+                    bits(&back.query(&sample).unwrap()),
+                    bits(&snap.query(&sample).unwrap())
+                );
+                if let (ModelKind::Kmeans(a), ModelKind::Kmeans(b)) = (&snap.kind, &back.kind) {
+                    assert_eq!(a.iterations, b.iterations);
+                    assert_eq!(a.converged, b.converged);
+                }
+            }
+        }
+    }
+
+    /// Hostile bytes are typed errors, never panics: every truncation
+    /// prefix and every single-bit flip is `Corrupt`, a foreign artifact
+    /// kind and a from-the-future version are `Invalid`.
+    #[test]
+    fn damaged_snapshot_artifacts_are_typed_errors() {
+        let snap = random_snapshot(TASK_KMEANS, Precision::F64, 11);
+        let bytes = snap.to_bytes();
+        for cut in 0..bytes.len() {
+            match ModelSnapshot::from_bytes(&bytes[..cut]) {
+                Err(Error::Corrupt(_)) => {}
+                Err(e) => panic!("truncation at {cut} must be Corrupt, got {e:?}"),
+                Ok(_) => panic!("truncation at {cut} must fail"),
+            }
+        }
+        for byte in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[byte] ^= 0x40;
+            assert!(
+                ModelSnapshot::from_bytes(&bad).is_err(),
+                "bit flip at byte {byte} must be an error"
+            );
+        }
+        // a valid envelope of a different kind is Invalid, not Corrupt
+        let foreign = encode_artifact(kind::MEAN, 1, &[0u8; 16]);
+        assert!(matches!(ModelSnapshot::from_bytes(&foreign), Err(Error::Invalid(_))));
+        // a snapshot from a future build is Invalid
+        let future = encode_artifact(kind::SNAPSHOT, SNAPSHOT_VERSION + 1, &[0u8; 16]);
+        assert!(matches!(ModelSnapshot::from_bytes(&future), Err(Error::Invalid(_))));
+    }
+
+    /// `write_atomic` + `load` round trip on disk; a missing file is
+    /// `Ok(None)`, a truncated file is typed `Corrupt`.
+    #[test]
+    fn snapshot_persists_and_reloads_from_disk() {
+        let dir =
+            std::env::temp_dir().join(format!("pds_snap_persist_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ModelSnapshot::load(&dir).unwrap().is_none());
+        let snap = random_snapshot(TASK_PCA, Precision::F32, 5);
+        snap.write_atomic(&dir).unwrap();
+        let back = ModelSnapshot::load(&dir).unwrap().expect("persisted snapshot loads");
+        assert_eq!(back.version, snap.version);
+        assert_eq!(back.precision(), Precision::F32);
+        // newer publish overwrites atomically
+        let next = random_snapshot(TASK_PCA, Precision::F32, 6);
+        next.write_atomic(&dir).unwrap();
+        assert_eq!(ModelSnapshot::load(&dir).unwrap().unwrap().version, next.version);
+        // truncate on disk: typed Corrupt at load
+        let bytes = std::fs::read(dir.join(SNAPSHOT_FILE)).unwrap();
+        std::fs::write(dir.join(SNAPSHOT_FILE), &bytes[..bytes.len() / 2]).unwrap();
+        assert!(matches!(ModelSnapshot::load(&dir), Err(Error::Corrupt(_))));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Socket transports for the serve daemon: TCP (`--listen HOST:PORT`)
+//! and Unix domain sockets (`--socket PATH`), both running the same
+//! bounded worker pool.
+//!
+//! The pool replaces thread-per-connection: the acceptor hands each
+//! connection to one of `conn_slots` long-lived workers through a
+//! bounded channel. The cap is exact — an `active` counter tracks
+//! queued-plus-in-service connections, and the acceptor only enqueues
+//! while `active < conn_slots`, so the channel can never reject an
+//! admitted connection. A connection beyond the cap gets one typed
+//! `backpressure` error line and is closed (never a silent hang), and
+//! the rejection is counted in `conn_rejections`.
+//!
+//! Protocol framing is identical on every transport: newline-delimited
+//! JSON, one request line in, one response line out (see
+//! [`protocol`](super::protocol)).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::protocol::{error_response, CODE_BACKPRESSURE};
+use super::{spawn_signal_watcher, Client, Daemon, ServeConfig};
+
+/// Accept-loop poll interval while the listener is idle (the loop also
+/// checks the shutdown flag at this cadence).
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// A nonblocking listener the accept loop can poll. `poll_accept`
+/// returns a ready (blocking-mode) stream, `None` when nothing is
+/// pending, or a fatal listener error.
+trait Listener {
+    type Stream: Read + Write + Send + 'static;
+    fn poll_accept(&self) -> Result<Option<Self::Stream>>;
+}
+
+struct Tcp(TcpListener);
+
+impl Listener for Tcp {
+    type Stream = std::net::TcpStream;
+    fn poll_accept(&self) -> Result<Option<Self::Stream>> {
+        match self.0.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                Ok(Some(stream))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+#[cfg(unix)]
+struct Unix(std::os::unix::net::UnixListener);
+
+#[cfg(unix)]
+impl Listener for Unix {
+    type Stream = std::os::unix::net::UnixStream;
+    fn poll_accept(&self) -> Result<Option<Self::Stream>> {
+        match self.0.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                Ok(Some(stream))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// Run the daemon on a TCP listener bound to `addr` (`HOST:PORT`; port
+/// 0 picks an ephemeral port). Prints `pds serve: listening on ADDR` —
+/// with the resolved port — to stderr once bound. Stops on
+/// SIGTERM/SIGINT or a `shutdown` request from any connection.
+pub fn run_tcp(cfg: ServeConfig, addr: &str) -> Result<()> {
+    let daemon = Daemon::start(cfg)?;
+    spawn_signal_watcher(daemon.shared.clone())?;
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    eprintln!("pds serve: listening on {}", listener.local_addr()?);
+    run_listener(daemon, Tcp(listener))
+}
+
+/// Run the daemon on a Unix domain socket at `path`. Removes a stale
+/// socket file first (and again on exit); stops on SIGTERM/SIGINT or a
+/// `shutdown` request from any connection.
+#[cfg(unix)]
+pub fn run_socket(cfg: ServeConfig, path: &std::path::Path) -> Result<()> {
+    use std::os::unix::net::UnixListener;
+
+    let daemon = Daemon::start(cfg)?;
+    spawn_signal_watcher(daemon.shared.clone())?;
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)?;
+    listener.set_nonblocking(true)?;
+    eprintln!("pds serve: listening on {}", path.display());
+    let result = run_listener(daemon, Unix(listener));
+    let _ = std::fs::remove_file(path);
+    result
+}
+
+/// The shared accept loop: spawn the worker pool, admit connections up
+/// to the slot cap, reject the rest with one typed line, and shut the
+/// daemon down when the flag is raised.
+fn run_listener<L: Listener>(daemon: Daemon, listener: L) -> Result<()> {
+    let slots = daemon.shared.conn_slots;
+    // queued + in-service connections; the admission decision reads it
+    // before enqueueing, so try_send below can never see a full channel
+    let active = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = sync_channel::<L::Stream>(slots);
+    let rx = Arc::new(Mutex::new(rx));
+    let mut workers = Vec::with_capacity(slots);
+    for i in 0..slots {
+        let (rx, active, client) = (rx.clone(), active.clone(), daemon.client());
+        workers.push(
+            std::thread::Builder::new().name(format!("pds-serve-conn-{i}")).spawn(move || {
+                loop {
+                    let stream = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            Err(poisoned) => poisoned.into_inner(),
+                        };
+                        guard.recv()
+                    };
+                    match stream {
+                        Ok(stream) => {
+                            serve_connection(stream, &client);
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Err(_) => return, // acceptor dropped the channel
+                    }
+                }
+            })?,
+        );
+    }
+
+    while !daemon.shared.shutdown.load(Ordering::SeqCst) {
+        match listener.poll_accept() {
+            Ok(Some(mut stream)) => {
+                if active.load(Ordering::SeqCst) >= slots {
+                    daemon.shared.metrics.conn_rejections.fetch_add(1, Ordering::Relaxed);
+                    let line = error_response(
+                        CODE_BACKPRESSURE,
+                        &format!("all {slots} connection slots are busy; retry later"),
+                    );
+                    let _ = stream
+                        .write_all(line.as_bytes())
+                        .and_then(|()| stream.write_all(b"\n"))
+                        .and_then(|()| stream.flush());
+                    // dropped: the rejection line is this connection's
+                    // entire conversation
+                } else {
+                    active.fetch_add(1, Ordering::SeqCst);
+                    if tx.try_send(stream).is_err() {
+                        // unreachable by construction; keep the counter
+                        // honest anyway
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            Ok(None) => std::thread::sleep(ACCEPT_POLL),
+            Err(e) => return Err(e),
+        }
+    }
+    // disconnect the pool: idle workers see the closed channel and exit;
+    // a worker mid-connection finishes its client on its own time (the
+    // daemon's shutdown below does not depend on it)
+    drop(tx);
+    let (manifest, stats) = daemon.shutdown();
+    eprintln!("{stats}");
+    manifest.map(|_| ())
+}
+
+/// Serve one established connection: newline-delimited JSON request
+/// lines in, one response line out each, until EOF, an I/O error, or a
+/// `shutdown` request.
+fn serve_connection<S: Read + Write>(stream: S, client: &Client) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, quit) = client.handle_line(trimmed);
+        let out = reader.get_mut();
+        if out.write_all(response.as_bytes()).is_err()
+            || out.write_all(b"\n").is_err()
+            || out.flush().is_err()
+        {
+            break;
+        }
+        if quit {
+            break;
+        }
+    }
+}

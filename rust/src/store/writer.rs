@@ -158,6 +158,102 @@ impl SparseStoreWriter {
         self
     }
 
+    /// Resume appending to a live store that a previous process left at a
+    /// durable checkpoint (the serve daemon's warm-restart path).
+    ///
+    /// The caller supplies the same configuration it would use for
+    /// [`create`](Self::create); every recorded parameter — dimensions,
+    /// gamma, transform, seed, scheme, precision, shard columns — must
+    /// match the manifest, or resuming would silently splice two
+    /// incompatible streams into one store. Each mismatch is a typed
+    /// [`Error::Invalid`]. Because checkpoints only ever publish whole
+    /// shards, a resumable manifest's `n` must sit on a shard boundary;
+    /// a store finalized with a partial tail shard (a completed
+    /// `finish`) is rejected — it is a finished artifact, not a live
+    /// store. The writer resumes with the cursor at column `n`, so the
+    /// caller's chunk numbering must continue from there.
+    pub fn reopen(
+        dir: &Path,
+        sp: &Sparsifier,
+        cfg: SparsifyConfig,
+        preconditioned: bool,
+        shard_cols: usize,
+        precision: Precision,
+    ) -> Result<Self> {
+        if shard_cols == 0 {
+            return invalid("SparseStoreWriter: shard_cols must be positive");
+        }
+        let manifest = StoreManifest::load(dir)?;
+        let scheme = match (sp.scheme(), preconditioned) {
+            (Scheme::Precond, false) => Scheme::Uniform,
+            (s, _) => s,
+        };
+        let preconditioned = preconditioned && scheme.preconditions();
+        let mismatch = |what: &str| -> Result<Self> {
+            invalid(format!(
+                "{}: cannot resume this store: {what} differs from the manifest",
+                dir.display()
+            ))
+        };
+        if !manifest.group.is_standalone() {
+            return invalid(format!(
+                "{}: cannot resume a shard-group piece (only standalone stores)",
+                dir.display()
+            ));
+        }
+        if manifest.p != sp.p() || manifest.p_orig != sp.p_orig() {
+            return mismatch("the sample dimension");
+        }
+        if manifest.m != sp.m() {
+            return mismatch("the per-column sample count m");
+        }
+        if manifest.gamma != cfg.gamma {
+            return mismatch("gamma");
+        }
+        if manifest.transform != cfg.transform {
+            return mismatch("the transform");
+        }
+        if manifest.seed != cfg.seed {
+            return mismatch("the seed");
+        }
+        if manifest.scheme != scheme || manifest.preconditioned != preconditioned {
+            return mismatch("the sampling scheme");
+        }
+        if manifest.precision != precision {
+            return mismatch("the value precision");
+        }
+        if manifest.shard_cols != shard_cols {
+            return mismatch("shard_cols");
+        }
+        if manifest.n % shard_cols != 0 {
+            return invalid(format!(
+                "{}: cannot resume this store: n = {} is not a shard boundary; the store \
+                 was finalized with a partial tail shard",
+                dir.display(),
+                manifest.n
+            ));
+        }
+        Ok(SparseStoreWriter {
+            dir: dir.to_path_buf(),
+            p: manifest.p,
+            p_orig: manifest.p_orig,
+            m: manifest.m,
+            gamma: manifest.gamma,
+            transform: manifest.transform,
+            seed: manifest.seed,
+            preconditioned,
+            scheme,
+            precision,
+            shard_cols,
+            next_col: manifest.n,
+            pending: BTreeMap::new(),
+            cur_indices: Vec::new(),
+            cur_values: Vec::new(),
+            cur_start: manifest.n,
+            shards: manifest.shards,
+        })
+    }
+
     /// Columns absorbed into shards (or the current shard buffer) so far.
     pub fn columns_written(&self) -> usize {
         self.next_col
@@ -416,5 +512,109 @@ impl SparseStoreWriter {
         manifest.validate()?;
         manifest.write_atomic(&self.dir)?;
         Ok(manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::PathBuf;
+
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::store::SparseStoreReader;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("pds_store_writer_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn scfg(seed: u64) -> SparsifyConfig {
+        SparsifyConfig { gamma: 0.5, transform: TransformKind::Hadamard, seed }
+    }
+
+    #[test]
+    fn reopen_resumes_at_the_checkpoint() {
+        let dir = tmpdir("resume");
+        let cfg = scfg(7);
+        let sp = Sparsifier::new(16, cfg).unwrap();
+        let mut rng = Pcg64::seed(11);
+        let x = Mat::from_fn(16, 12, |_, _| rng.normal());
+        let head_cols = Mat::from_fn(16, 8, |i, j| x.col(j)[i]);
+        let tail_cols = Mat::from_fn(16, 4, |i, j| x.col(8 + j)[i]);
+
+        // first process: two full shards, checkpoint, killed (dropped)
+        let mut writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 4).unwrap();
+        let head = sp.compress_chunk(&head_cols, 0).unwrap();
+        writer.append(head.clone()).unwrap();
+        assert_eq!(writer.checkpoint().unwrap(), Some(8));
+        drop(writer);
+
+        // second process: resume and append the rest
+        let mut writer = SparseStoreWriter::reopen(&dir, &sp, cfg, true, 4, Precision::F64)
+            .unwrap();
+        assert_eq!(writer.columns_written(), 8);
+        assert_eq!(writer.columns_durable(), 8);
+        writer.append(sp.compress_chunk(&tail_cols, 8).unwrap()).unwrap();
+        let manifest = writer.finish().unwrap();
+        assert_eq!(manifest.n, 12);
+        assert_eq!(manifest.shards.len(), 3);
+
+        // the resumed store reads back bit-exactly across the seam
+        let mut reader = SparseStoreReader::open(&dir).unwrap();
+        let chunk = reader.next_chunk().unwrap().unwrap();
+        assert_eq!(chunk.col_indices(0), head.col_indices(0));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_rejects_config_mismatches() {
+        let dir = tmpdir("mismatch");
+        let cfg = scfg(7);
+        let sp = Sparsifier::new(16, cfg).unwrap();
+        let mut rng = Pcg64::seed(11);
+        let x = Mat::from_fn(16, 4, |_, _| rng.normal());
+        let mut writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 4).unwrap();
+        writer.append(sp.compress_chunk(&x, 0).unwrap()).unwrap();
+        writer.checkpoint().unwrap();
+        drop(writer);
+
+        // a different seed would splice two incompatible streams
+        let other = scfg(8);
+        let sp_other = Sparsifier::new(16, other).unwrap();
+        assert!(matches!(
+            SparseStoreWriter::reopen(&dir, &sp_other, other, true, 4, Precision::F64),
+            Err(Error::Invalid(_))
+        ));
+        // so would a different precision or shard size
+        assert!(matches!(
+            SparseStoreWriter::reopen(&dir, &sp, cfg, true, 4, Precision::F32),
+            Err(Error::Invalid(_))
+        ));
+        assert!(matches!(
+            SparseStoreWriter::reopen(&dir, &sp, cfg, true, 8, Precision::F64),
+            Err(Error::Invalid(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_rejects_a_finished_partial_tail() {
+        let dir = tmpdir("tail");
+        let cfg = scfg(7);
+        let sp = Sparsifier::new(16, cfg).unwrap();
+        let mut rng = Pcg64::seed(11);
+        let x = Mat::from_fn(16, 7, |_, _| rng.normal());
+        let mut writer = SparseStoreWriter::create(&dir, &sp, cfg, true, 5).unwrap();
+        writer.append(sp.compress_chunk(&x, 0).unwrap()).unwrap();
+        writer.finish().unwrap(); // n = 7: not a shard boundary
+
+        assert!(matches!(
+            SparseStoreWriter::reopen(&dir, &sp, cfg, true, 5, Precision::F64),
+            Err(Error::Invalid(_))
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,8 +1,10 @@
 //! End-to-end tests driving the real `pds serve` binary in pipe mode:
-//! a full ingest → refresh → query session with a clean shutdown, a
-//! SIGKILL mid-stream (the store must reopen CRC-clean at the last
-//! checkpoint), and a SIGTERM (the signal watcher must finalize the
-//! store, partial shard included, before exiting).
+//! a full ingest → refresh → query/query_batch session with a clean
+//! shutdown, a SIGKILL mid-stream (the store must reopen CRC-clean at
+//! the last checkpoint), a warm restart (a respawned daemon must answer
+//! its first query from the persisted snapshot at the pre-kill version
+//! and keep the version monotone), and a SIGTERM (the signal watcher
+//! must finalize the store, partial shard included, before exiting).
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
@@ -90,6 +92,18 @@ fn query_line(p: usize, seed: u64) -> String {
     format!("{{\"cmd\":\"query\",\"sample\":[{}]}}", vals.join(","))
 }
 
+fn query_batch_line(p: usize, seeds: &[u64]) -> String {
+    let rows: Vec<String> = seeds
+        .iter()
+        .map(|&seed| {
+            let mut rng = Pcg64::seed(seed);
+            let vals: Vec<String> = (0..p).map(|_| format!("{:.6}", rng.normal())).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    format!("{{\"cmd\":\"query_batch\",\"samples\":[{}]}}", rows.join(","))
+}
+
 /// CRC-verified readback; returns total columns.
 fn verified_cols(dir: &PathBuf) -> usize {
     let mut reader = SparseStoreReader::open(dir).unwrap().with_verify(true);
@@ -120,6 +134,14 @@ fn pipe_session_full_lifecycle() {
     assert_eq!(query.get("model_version").and_then(Json::as_f64), Some(version));
     assert_eq!(query.get("stale").and_then(Json::as_bool), Some(false));
     assert!(query.get("coords").and_then(Json::as_arr).is_some_and(|c| !c.is_empty()));
+
+    // a query_batch answers every sample from one snapshot, in order,
+    // bit-identical to the single-query path
+    let qb = s.expect_ok(&query_batch_line(p, &[42, 43]));
+    assert_eq!(qb.get("model_version").and_then(Json::as_f64), Some(version));
+    let results = qb.get("results").and_then(Json::as_arr).expect("results array");
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].get("coords"), query.get("coords"));
 
     let stats = s.expect_ok(r#"{"cmd":"stats"}"#);
     assert!(stats.get("metrics").is_some(), "stats must embed the metrics registry");
@@ -152,6 +174,48 @@ fn sigkill_mid_stream_leaves_checkpointed_store() {
     let reader = SparseStoreReader::open(&dir).unwrap();
     assert_eq!(reader.manifest().n, 16);
     assert_eq!(verified_cols(&dir), 16);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_restart_serves_persisted_snapshot() {
+    let dir = tmp("warmrestart");
+    let p = 16;
+    let mut s = Session::spawn(&dir, "pca", p);
+
+    // two complete shards, refreshed once: the refresh persists the
+    // snapshot artifact next to the checkpointed manifest
+    s.expect_ok(&batch_line(p, 8, 0));
+    s.expect_ok(&batch_line(p, 8, 1));
+    let flush = s.expect_ok(r#"{"cmd":"flush"}"#);
+    assert_eq!(flush.get("durable_cols").and_then(Json::as_f64), Some(16.0));
+    let refresh = s.expect_ok(r#"{"cmd":"refresh"}"#);
+    let version = refresh.get("model_version").and_then(Json::as_f64).unwrap();
+    assert!(version >= 1.0);
+
+    s.child.kill().unwrap(); // SIGKILL: the warm start must not need a clean exit
+    let _ = s.child.wait();
+
+    // restart on the same directory: the very first query — before any
+    // ingest or refresh — answers from the persisted snapshot at its
+    // pre-kill version
+    let mut s = Session::spawn(&dir, "pca", p);
+    let query = s.expect_ok(&query_line(p, 42));
+    assert_eq!(query.get("model_version").and_then(Json::as_f64), Some(version));
+    assert!(query.get("coords").and_then(Json::as_arr).is_some_and(|c| !c.is_empty()));
+
+    // ingest resumes at the checkpoint, and the next refresh keeps the
+    // version monotone across the restart
+    s.expect_ok(&batch_line(p, 8, 2));
+    let flush = s.expect_ok(r#"{"cmd":"flush"}"#);
+    assert_eq!(flush.get("durable_cols").and_then(Json::as_f64), Some(24.0));
+    let refresh = s.expect_ok(r#"{"cmd":"refresh"}"#);
+    assert_eq!(refresh.get("model_version").and_then(Json::as_f64), Some(version + 1.0));
+
+    s.expect_ok(r#"{"cmd":"shutdown"}"#);
+    let status = s.child.wait().unwrap();
+    assert!(status.success(), "clean shutdown must exit 0: {status:?}");
+    assert_eq!(verified_cols(&dir), 24);
     let _ = std::fs::remove_dir_all(&dir);
 }
 

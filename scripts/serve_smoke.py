@@ -1,16 +1,23 @@
 #!/usr/bin/env python3
-"""End-to-end smoke test for the `pds serve` daemon (pipe transport).
+"""End-to-end smoke test for the `pds serve` daemon (pipe + TCP).
 
-Drives the real binary over stdin/stdout with newline-delimited JSON:
+Drives the real binary with newline-delimited JSON:
 
-  1. Full lifecycle: ingest -> flush -> refresh -> query -> stats ->
-     shutdown must round-trip, exit 0, and leave a store that
+  1. Full lifecycle (pipe): ingest -> flush -> refresh -> query ->
+     stats -> shutdown must round-trip, exit 0, and leave a store that
      `pds store-info` (which replays the CRC'd manifest) opens with
      every ingested column.
   2. Typed errors: a malformed request gets `{"ok":false,"code":...}`
      and the daemon keeps serving.
   3. Crash safety: SIGKILL mid-stream (no cleanup of any kind runs)
      must leave the last durable checkpoint reopenable.
+  4. TCP transport: the same lifecycle over `--listen 127.0.0.1:0`,
+     plus `query_batch` (results bit-identical to single queries) and
+     the connection cap (`--conn-slots 1`: a second connection gets one
+     typed `backpressure` line, then EOF).
+  5. Warm restart: kill a refreshed daemon, respawn it on the same
+     store, and the first query must answer from the persisted snapshot
+     at the pre-kill model version.
 
 Usage:
   scripts/serve_smoke.py PATH/TO/pds
@@ -23,9 +30,11 @@ import os
 import random
 import re
 import shutil
+import socket
 import subprocess
 import sys
 import tempfile
+import threading
 
 P = 16  # sample dimension for the whole smoke run
 
@@ -38,21 +47,21 @@ def batch(n, seed):
     }
 
 
+SERVE_ARGS = [
+    "--p", str(P),
+    "--shard-cols", "8",
+    # refresh only on request: no background cycle racing the test
+    "--refresh-ms", "3600000",
+    "--timeout-ms", "60000",
+]
+
+
 class Serve:
     """One serve session over the child's stdin/stdout pipes."""
 
     def __init__(self, pds, store, task):
         self.proc = subprocess.Popen(
-            [
-                pds, "serve",
-                "--store", store,
-                "--task", task,
-                "--p", str(P),
-                "--shard-cols", "8",
-                # refresh only on request: no background cycle racing the test
-                "--refresh-ms", "3600000",
-                "--timeout-ms", "60000",
-            ],
+            [pds, "serve", "--store", store, "--task", task, *SERVE_ARGS],
             stdin=subprocess.PIPE,
             stdout=subprocess.PIPE,
             stderr=subprocess.DEVNULL,
@@ -70,6 +79,66 @@ class Serve:
         resp = self.request(obj)
         assert resp.get("ok") is True, f"{obj.get('cmd')}: {resp}"
         return resp
+
+
+class TcpServe:
+    """One serve session over `--listen 127.0.0.1:0` (ephemeral port,
+    parsed from the daemon's `listening on` stderr line)."""
+
+    def __init__(self, pds, store, task, conn_slots):
+        self.proc = subprocess.Popen(
+            [
+                pds, "serve",
+                "--store", store,
+                "--task", task,
+                "--listen", "127.0.0.1:0",
+                "--conn-slots", str(conn_slots),
+                *SERVE_ARGS,
+            ],
+            stdin=subprocess.DEVNULL,
+            stdout=subprocess.DEVNULL,
+            stderr=subprocess.PIPE,
+            text=True,
+        )
+        line = self.proc.stderr.readline()
+        m = re.search(r"listening on .*:(\d+)", line)
+        assert m, f"no listening line from the daemon: {line!r}"
+        self.port = int(m.group(1))
+        # keep stderr drained (closing it would break the daemon's
+        # final metrics dump); the banner above is all we parse
+        threading.Thread(target=self.proc.stderr.read, daemon=True).start()
+
+    def connect(self):
+        return Conn(self.port)
+
+
+class Conn:
+    """One TCP connection speaking the newline-delimited protocol."""
+
+    def __init__(self, port):
+        self.sock = socket.create_connection(("127.0.0.1", port), timeout=60)
+        self.f = self.sock.makefile("rw", encoding="utf-8", newline="\n")
+
+    def readline(self):
+        return self.f.readline()
+
+    def request(self, obj):
+        self.f.write(json.dumps(obj) + "\n")
+        self.f.flush()
+        line = self.readline()
+        assert line, f"daemon closed the connection on {obj.get('cmd')!r}"
+        return json.loads(line)
+
+    def ok(self, obj):
+        resp = self.request(obj)
+        assert resp.get("ok") is True, f"{obj.get('cmd')}: {resp}"
+        return resp
+
+    def close(self):
+        try:
+            self.f.close()
+        finally:
+            self.sock.close()
 
 
 def assert_store_n(pds, store, expect_n):
@@ -131,6 +200,62 @@ def main():
         assert flush["durable_cols"] == 16, flush
         s.proc.kill()
         s.proc.wait(timeout=120)
+        assert_store_n(pds, store, 16)
+
+        # 4) TCP transport: lifecycle + query_batch + connection cap
+        store = os.path.join(root, "tcp")
+        t = TcpServe(pds, store, "pca", conn_slots=1)
+        c = t.connect()
+        for seed in range(3):
+            c.ok(batch(8, seed))
+        flush = c.ok({"cmd": "flush"})
+        assert flush["durable_cols"] == 24, flush
+        refresh = c.ok({"cmd": "refresh"})
+        version = refresh["model_version"]
+        assert version >= 1, refresh
+
+        samples = [[random.Random(s0).gauss(0, 1) for _ in range(P)]
+                   for s0 in (7, 8)]
+        single = c.ok({"cmd": "query", "sample": samples[0]})
+        qb = c.ok({"cmd": "query_batch", "samples": samples})
+        assert qb["model_version"] == version, qb
+        assert len(qb["results"]) == 2, qb
+        assert qb["results"][0]["coords"] == single["coords"], (
+            "batched query must be bit-identical to the single-sample path"
+        )
+
+        # with one slot busy, a second connection gets one typed
+        # backpressure line and EOF
+        c2 = t.connect()
+        line = c2.readline()
+        rejected = json.loads(line)
+        assert rejected["ok"] is False and rejected["code"] == "backpressure", rejected
+        assert c2.readline() == "", "rejected connection must be closed"
+        c2.close()
+
+        c.ok({"cmd": "shutdown"})
+        c.close()
+        assert t.proc.wait(timeout=120) == 0, "TCP shutdown must exit 0"
+        assert_store_n(pds, store, 24)
+
+        # 5) warm restart: the persisted snapshot answers the first query
+        store = os.path.join(root, "warm")
+        s = Serve(pds, store, "kmeans")
+        s.ok(batch(8, 0))
+        s.ok(batch(8, 1))
+        flush = s.ok({"cmd": "flush"})
+        assert flush["durable_cols"] == 16, flush
+        refresh = s.ok({"cmd": "refresh"})
+        version = refresh["model_version"]
+        s.proc.kill()  # no graceful exit: the artifact must already be durable
+        s.proc.wait(timeout=120)
+
+        s = Serve(pds, store, "kmeans")
+        q = s.ok({"cmd": "query", "sample": [rng.gauss(0, 1) for _ in range(P)]})
+        assert q["model_version"] == version, f"warm start must keep the version: {q}"
+        assert "cluster" in q, q
+        s.ok({"cmd": "shutdown"})
+        assert s.proc.wait(timeout=120) == 0, "warm-restart shutdown must exit 0"
         assert_store_n(pds, store, 16)
 
         print("serve smoke: PASS")
