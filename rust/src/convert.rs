@@ -1,0 +1,106 @@
+//! Checked integer conversions with typed errors.
+//!
+//! Grown out of the store manifest's `lookup_u32`/`lookup_usize`
+//! helpers: every place the codecs and the daemon move a length or an
+//! index across integer widths goes through one of these instead of a
+//! bare `as` cast, so overflow is a typed [`Error::Corrupt`] /
+//! [`Error::Invalid`] instead of silent truncation. `pds-lint`'s
+//! `lossy-cast` rule holds the line — the `as` casts live here, once,
+//! behind `try_into` checks, and new bare casts elsewhere fail the
+//! lint unless baselined.
+//!
+//! Two error flavors, chosen by what the value *is*:
+//!
+//! * [`Corrupt`](Error::Corrupt) — the value came from bytes we read
+//!   back (a manifest field, an artifact length): an overflow means
+//!   the input is damaged or hostile.
+//! * [`Invalid`](Error::Invalid) — the value came from configuration
+//!   or in-memory state (a column count about to be serialized): an
+//!   overflow means the caller asked for something this format cannot
+//!   represent.
+
+use crate::error::{Error, Result};
+
+/// `usize -> u32` for a value about to be serialized into a `u32`
+/// field; overflow is `Invalid` (the in-memory state does not fit the
+/// format).
+pub fn usize_to_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| Error::Invalid(format!("{what} {v} does not fit in u32")))
+}
+
+/// `u64 -> u32` for a value read back from serialized bytes; overflow
+/// is `Corrupt`.
+pub fn u64_to_u32(v: u64, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| Error::Corrupt(format!("{what} {v} does not fit in u32")))
+}
+
+/// `u64 -> usize` for a length/index read back from serialized bytes;
+/// overflow is `Corrupt` (cannot be addressed on this target).
+pub fn u64_to_usize(v: u64, what: &str) -> Result<usize> {
+    usize::try_from(v)
+        .map_err(|_| Error::Corrupt(format!("{what} {v} does not fit in usize")))
+}
+
+/// `u32 -> usize`, infallible on every target pds supports (32- and
+/// 64-bit); `From<u32> for usize` is not provided by the standard
+/// library, so the audited cast lives here, once.
+#[inline]
+pub fn u32_to_usize(v: u32) -> usize {
+    // lint:allow(lossy-cast) — u32 -> usize cannot truncate on any
+    // supported pds target (32- and 64-bit); centralized here so call
+    // sites stay cast-free.
+    v as usize
+}
+
+/// `usize -> u64`, infallible on every supported target (usize is at
+/// most 64 bits); centralized so call sites stay cast-free.
+#[inline]
+pub fn usize_to_u64(v: usize) -> u64 {
+    // lint:allow(lossy-cast) — usize -> u64 cannot truncate on any
+    // supported pds target.
+    v as u64
+}
+
+/// Deliberate `f64 -> f32` narrowing — the mixed-precision store's
+/// quantization step. Centralized so the one intentionally lossy float
+/// cast in the codebase is auditable in a single place.
+#[inline]
+pub fn f64_to_f32(v: f64) -> f32 {
+    // lint:allow(lossy-cast) — quantization is the point: the store's
+    // F32 precision mode rounds each value to the nearest f32 exactly
+    // once (Lazy SPCA recipe), and this is that rounding.
+    v as f32
+}
+
+/// Quantize through `f32` and widen back exactly: the value the F32
+/// store will reproduce on read-back.
+#[inline]
+pub fn quantize_f32(v: f64) -> f64 {
+    f64::from(f64_to_f32(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn narrowing_overflow_is_typed() {
+        assert_eq!(usize_to_u32(7, "cols").unwrap(), 7);
+        assert!(matches!(
+            usize_to_u32(usize::try_from(u64::from(u32::MAX) + 1).unwrap(), "cols"),
+            Err(Error::Invalid(_))
+        ));
+        assert_eq!(u64_to_u32(7, "field").unwrap(), 7);
+        assert!(matches!(
+            u64_to_u32(u64::from(u32::MAX) + 1, "field"),
+            Err(Error::Corrupt(_))
+        ));
+        assert_eq!(u64_to_usize(9, "len").unwrap(), 9);
+    }
+
+    #[test]
+    fn widening_is_lossless() {
+        assert_eq!(u32_to_usize(u32::MAX), 4_294_967_295);
+        assert_eq!(usize_to_u64(123), 123);
+    }
+}

@@ -18,6 +18,7 @@
 //! or a newer-than-this-build version is
 //! [`Error::Invalid`](crate::error::Error::Invalid).
 
+use crate::convert::usize_to_u64;
 use crate::error::{corrupt, Result};
 use crate::store::crc32;
 
@@ -26,13 +27,34 @@ const MAGIC: [u8; 4] = *b"PDSP";
 /// Bytes before the payload.
 const HEADER_LEN: usize = 20;
 
+/// Little-endian `u32` at `off`; the caller has already bounds-checked
+/// `off + 4 <= bytes.len()`, and element indexing keeps this panic-free
+/// in practice without an `expect` on a slice-to-array conversion.
+fn le_u32_at(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+}
+
+/// Little-endian `u64` at `off` (caller bounds-checked `off + 8`).
+fn le_u64_at(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes([
+        bytes[off],
+        bytes[off + 1],
+        bytes[off + 2],
+        bytes[off + 3],
+        bytes[off + 4],
+        bytes[off + 5],
+        bytes[off + 6],
+        bytes[off + 7],
+    ])
+}
+
 /// Wrap a payload in the `.pdsp` envelope.
 pub fn encode_artifact(kind: u32, version: u32, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&kind.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&usize_to_u64(payload.len()).to_le_bytes());
     out.extend_from_slice(payload);
     let c = crc32(&out);
     out.extend_from_slice(&c.to_le_bytes());
@@ -51,9 +73,9 @@ pub fn decode_artifact(bytes: &[u8]) -> Result<(u32, u32, &[u8])> {
     if bytes[..4] != MAGIC {
         return corrupt("partial artifact: bad magic (want PDSP)");
     }
-    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
-    let kind = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
-    let len = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+    let version = le_u32_at(bytes, 4);
+    let kind = le_u32_at(bytes, 8);
+    let len = le_u64_at(bytes, 12);
     let len: usize = match len.try_into() {
         Ok(l) => l,
         Err(_) => return corrupt(format!("partial artifact: payload length {len} overflows")),
@@ -75,7 +97,7 @@ pub fn decode_artifact(bytes: &[u8]) -> Result<(u32, u32, &[u8])> {
         ));
     }
     let body = &bytes[..HEADER_LEN + len];
-    let stored = u32::from_le_bytes(bytes[HEADER_LEN + len..].try_into().expect("4 bytes"));
+    let stored = le_u32_at(bytes, HEADER_LEN + len);
     let computed = crc32(body);
     if stored != computed {
         return corrupt(format!(
@@ -131,7 +153,7 @@ impl PayloadWriter {
 
     /// Length-prefixed nested blob (e.g. a child partial's payload).
     pub(crate) fn blob(&mut self, bytes: &[u8]) {
-        self.u64(bytes.len() as u64);
+        self.u64(usize_to_u64(bytes.len()));
         self.buf.extend_from_slice(bytes);
     }
 
@@ -172,15 +194,15 @@ impl<'a> PayloadReader<'a> {
     }
 
     pub(crate) fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        Ok(le_u32_at(self.take(4)?, 0))
     }
 
     pub(crate) fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(le_u64_at(self.take(8)?, 0))
     }
 
     pub(crate) fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(f64::from_bits(le_u64_at(self.take(8)?, 0)))
     }
 
     /// A `u64` that must fit in `usize` (lengths, dimensions).

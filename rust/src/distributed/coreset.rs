@@ -203,8 +203,13 @@ impl CoresetPartial {
                 .find(|&&(h, i)| i % 2 == 0 && self.nodes.contains_key(&(h, i + 1)))
                 .copied();
             let Some((h, i)) = pair else { break };
-            let left = self.nodes.remove(&(h, i)).expect("present");
-            let right = self.nodes.remove(&(h, i + 1)).expect("present");
+            let (Some(left), Some(right)) =
+                (self.nodes.remove(&(h, i)), self.nodes.remove(&(h, i + 1)))
+            else {
+                // unreachable: both keys were found by the scan above;
+                // stop carrying rather than panic if that ever changes
+                break;
+            };
             let parent = (h + 1, i / 2);
             let mut points = Mat::zeros(self.p, left.points.cols() + right.points.cols());
             let mut weights = Vec::with_capacity(left.weights.len() + right.weights.len());
@@ -339,7 +344,7 @@ impl PartialFit for CoresetPartial {
                 .checked_mul(n)
                 .ok_or(())
                 .or_else(|_| corrupt(format!("coreset partial: p*n overflows ({p}*{n})")))?;
-            let points = Mat::from_vec(p, n, r.f64s(cells)?).expect("length matches");
+            let points = Mat::from_vec(p, n, r.f64s(cells)?)?;
             if out.covers_range(node_range((h, i))) {
                 return corrupt(format!(
                     "coreset partial: node ({h}, {i}) overlaps earlier coverage"
@@ -372,7 +377,7 @@ pub fn weighted_kmeans(
     }
     let mut best: Option<(f64, Mat, usize, bool)> = None;
     for start in 0..opts.n_init.max(1) {
-        let mut rng = Pcg64::seed_stream(opts.seed, 0xC0DE ^ start as u64);
+        let mut rng = Pcg64::seed_stream(opts.seed, 0xC0DE ^ crate::convert::usize_to_u64(start));
         let centers = weighted_pp(points, weights, k, &mut rng);
         let (centers, obj, iters, converged) = weighted_lloyd(points, weights, centers, opts);
         let better = match &best {
@@ -383,7 +388,10 @@ pub fn weighted_kmeans(
             best = Some((obj, centers, iters, converged));
         }
     }
-    let (_, centers, iters, converged) = best.expect("n_init >= 1");
+    let Some((_, centers, iters, converged)) = best else {
+        // unreachable: the loop above runs max(n_init, 1) >= 1 times
+        return invalid("weighted_kmeans: no restart produced a solution".to_string());
+    };
     debug_assert_eq!(centers.rows(), p);
     Ok((centers, iters, converged))
 }

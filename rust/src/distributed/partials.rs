@@ -142,7 +142,7 @@ impl PartialFit for CovarianceEstimator {
         }
         let acc_len = p.checked_mul(p).ok_or(())
             .or_else(|_| corrupt(format!("covariance partial: p={p} overflows p*p")))?;
-        let acc = Mat::from_vec(p, p, r.f64s(acc_len)?).expect("length matches by construction");
+        let acc = Mat::from_vec(p, p, r.f64s(acc_len)?)?;
         let slot_diag = r.f64s(if weighted { p } else { 0 })?;
         r.finish()?;
         Ok(CovarianceEstimator::from_raw(p, m, weighted, acc, slot_diag, n))
@@ -232,11 +232,13 @@ impl PcaPartial {
                 self.m
             ));
         }
-        if !self.nodes.contains_key(&shard) {
-            let fresh = self.fresh_node();
-            self.nodes.insert(shard, fresh);
-        }
-        let node = self.nodes.get_mut(&shard).expect("just inserted");
+        let node = match self.nodes.entry(shard) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(e) => {
+                let fresh = self.fresh_node();
+                e.insert(fresh)
+            }
+        };
         node.0.accumulate(chunk);
         node.1.accumulate(chunk);
         Ok(())
@@ -449,7 +451,7 @@ impl CenterPartial {
         let mut sizes = vec![0usize; self.k];
         for node in self.nodes.values() {
             for &a in &node.assign {
-                sizes[a as usize] += 1;
+                sizes[crate::convert::u32_to_usize(a)] += 1;
             }
         }
         sizes
@@ -518,12 +520,12 @@ impl PartialFit for CenterPartial {
             let shard = r.u32()?;
             let n = r.len()?;
             let objective = r.f64()?;
-            let sums = Mat::from_vec(p, k, r.f64s(cells)?).expect("length matches");
-            let counts = Mat::from_vec(p, k, r.f64s(cells)?).expect("length matches");
+            let sums = Mat::from_vec(p, k, r.f64s(cells)?)?;
+            let counts = Mat::from_vec(p, k, r.f64s(cells)?)?;
             let mut assign = Vec::with_capacity(n.min(payload.len() / 4 + 1));
             for _ in 0..n {
                 let a = r.u32()?;
-                if a as usize >= k {
+                if crate::convert::u32_to_usize(a) >= k {
                     return corrupt(format!(
                         "center partial: shard {shard} assignment {a} out of range (k={k})"
                     ));

@@ -179,13 +179,16 @@ fn execute(batch: Vec<Pending>, cell: &SnapshotCell, metrics: &ServeMetrics) {
     for r in &batch {
         metrics.query_wait.record(t0.duration_since(r.enqueued));
     }
-    let Some(snap) = cell.load() else {
+    // one coherent (snapshot, stale) pair — a separate load()/is_stale()
+    // sequence could pair this panel's model with another version's flag
+    // if a publish lands between the two reads
+    let (snap, stale) = cell.load_with_stale();
+    let Some(snap) = snap else {
         for r in batch {
             let _ = r.reply.try_send(Reply::NoModel);
         }
         return;
     };
-    let stale = cell.is_stale();
     let dim = snap.dim();
     // all-or-nothing validation per request: a malformed request is
     // rejected whole and excluded, so it cannot poison its panel-mates
@@ -214,7 +217,9 @@ fn execute(batch: Vec<Pending>, cell: &SnapshotCell, metrics: &ServeMetrics) {
         }
     };
     if !rows.is_empty() {
+        // Relaxed: monotonic stats counter, no ordering with other data
         metrics.batches_executed.fetch_add(1, Ordering::Relaxed);
+        // Relaxed: monotonic stats counter, no ordering with other data
         metrics.batched_samples.fetch_add(rows.len() as u64, Ordering::Relaxed);
         metrics.query_exec.record(t0.elapsed());
     }

@@ -149,6 +149,8 @@ pub fn run_ingest_worker(
                 absorb(&sp, precondition, &mut writer, &mut checkpointed_shards, batch, &shared, &metrics);
             }
             Err(RecvTimeoutError::Timeout) => {
+                // SeqCst: must observe a shutdown stored by any handler
+                // thread (the queue may stay empty forever after it)
                 if shutdown.load(Ordering::SeqCst) {
                     break;
                 }
@@ -210,9 +212,9 @@ fn absorb(
     if let Some(n) = durable {
         pg.durable_cols = n;
     }
-    metrics
-        .queue_depth
-        .store(pg.enqueued.saturating_sub(pg.absorbed), Ordering::Relaxed);
+    // Relaxed: stats gauge; the progress lock held here already orders
+    // it against the enqueued/absorbed counters
+    metrics.queue_depth.store(pg.enqueued.saturating_sub(pg.absorbed), Ordering::Relaxed);
     drop(pg);
     shared.cv.notify_all();
 }

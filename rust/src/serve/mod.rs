@@ -353,6 +353,9 @@ impl Daemon {
     /// Returns the final manifest (or the ingest lane's first error)
     /// and the final metrics dump.
     pub fn shutdown(self) -> (Result<StoreManifest>, String) {
+        // SeqCst: the shutdown flag orders the store against every
+        // lane's subsequent load (all lanes poll it; cost is irrelevant
+        // on this once-per-process path)
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.refresh.cv.notify_all();
         self.shared.ingest.cv.notify_all();
@@ -382,6 +385,7 @@ pub struct Client {
 impl Client {
     /// Handle one request line; returns `(response_line, shutdown)`.
     pub fn handle_line(&self, line: &str) -> (String, bool) {
+        // Relaxed: monotonic stats counter, no ordering with other data
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let request = match Request::parse(line) {
             Ok(r) => r,
@@ -395,6 +399,8 @@ impl Client {
             Request::Refresh => (self.handle_refresh(), false),
             Request::Flush => (self.handle_flush(), false),
             Request::Shutdown => {
+                // SeqCst: pairs with every lane's SeqCst poll of the
+                // shutdown flag (see Daemon::shutdown)
                 self.shared.shutdown.store(true, Ordering::SeqCst);
                 self.shared.refresh.cv.notify_all();
                 (ok_response(vec![]), true)
@@ -403,12 +409,15 @@ impl Client {
     }
 
     fn error(&self, code: &str, message: &str) -> String {
+        // Relaxed: monotonic stats counter, no ordering with other data
         self.shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
         error_response(code, message)
     }
 
     fn handle_ingest(&self, samples: Vec<Vec<f64>>) -> String {
         let t0 = Instant::now();
+        // SeqCst: must observe a shutdown stored by any thread before
+        // this request was accepted
         if self.shared.shutdown.load(Ordering::SeqCst) {
             return self.error(CODE_SHUTDOWN, "daemon is shutting down");
         }
@@ -440,10 +449,14 @@ impl Client {
             Ok(()) => {
                 pg.enqueued += 1;
                 let depth = pg.enqueued.saturating_sub(pg.absorbed);
+                // Relaxed: stats gauge; the progress lock above already
+                // orders it against the enqueued/absorbed counters
                 self.shared.metrics.queue_depth.store(depth, Ordering::Relaxed);
                 drop(pg);
                 let m = &self.shared.metrics;
+                // Relaxed: monotonic stats counter, no ordering with other data
                 m.ingested_rows.fetch_add(n as u64, Ordering::Relaxed);
+                // Relaxed: monotonic stats counter, no ordering with other data
                 m.ingested_batches.fetch_add(1, Ordering::Relaxed);
                 m.ingest_latency.record(t0.elapsed());
                 ok_response(vec![
@@ -453,6 +466,7 @@ impl Client {
             }
             Err(TrySendError::Full(_)) => {
                 drop(pg);
+                // Relaxed: monotonic stats counter, no ordering with other data
                 self.shared.metrics.backpressure_rejections.fetch_add(1, Ordering::Relaxed);
                 self.error(
                     CODE_BACKPRESSURE,
@@ -539,13 +553,17 @@ impl Client {
             Some(m) => Json::Str(m).to_string(),
             None => "null".to_string(),
         };
+        // one coherent read: version() + is_stale() as separate calls
+        // could pair one snapshot's version with another's staleness if
+        // a publish lands between them
+        let (version, stale) = self.shared.cell.version_with_stale();
         format!(
             "{{\"ok\":true,\"task\":{},\"model_version\":{},\"stale\":{},\
              \"enqueued\":{},\"absorbed\":{},\"total_cols\":{},\"durable_cols\":{},\
              \"ingest_error\":{},\"metrics\":{}}}",
             Json::Str(self.shared.task.name().to_string()),
-            self.shared.cell.version(),
-            self.shared.cell.is_stale(),
+            version,
+            stale,
             pg.enqueued,
             pg.absorbed,
             pg.total_cols,
@@ -559,9 +577,11 @@ impl Client {
         let goal = self.shared.refresh.request();
         match self.shared.refresh.wait_completed(goal, self.shared.timeout) {
             Ok(None) => {
+                // coherent (version, stale) pair — see handle_stats
+                let (version, stale) = self.shared.cell.version_with_stale();
                 let fields = vec![
-                    ("model_version", Json::Num(self.shared.cell.version() as f64)),
-                    ("stale", Json::Bool(self.shared.cell.is_stale())),
+                    ("model_version", Json::Num(version as f64)),
+                    ("stale", Json::Bool(stale)),
                 ];
                 ok_response(fields)
             }
@@ -629,7 +649,9 @@ mod sig {
     const SIGTERM: i32 = 15;
 
     extern "C" fn on_signal(_signum: i32) {
-        // async-signal-safe: one atomic store, nothing else
+        // async-signal-safe: one atomic store, nothing else.
+        // SeqCst: a lock-free atomic store is the one async-signal-safe
+        // publication primitive; pairs with the SeqCst load in raised()
         TERMINATE.store(true, Ordering::SeqCst);
     }
 
@@ -640,6 +662,14 @@ mod sig {
     }
 
     pub fn install() {
+        // SAFETY: signal(2) is linked from libc (always present under
+        // std on unix) and the declared signature matches its C
+        // prototype, with the handler passed as a typed `extern "C"`
+        // fn pointer of the required arity. `on_signal` is
+        // async-signal-safe (a single lock-free atomic store, no
+        // allocation, no locks), so installing it for SIGINT/SIGTERM
+        // cannot introduce UB in interrupted contexts. The returned
+        // previous-handler value is deliberately discarded.
         unsafe {
             let _ = signal(SIGINT, on_signal);
             let _ = signal(SIGTERM, on_signal);
@@ -647,6 +677,9 @@ mod sig {
     }
 
     pub fn raised() -> bool {
+        // SeqCst: pairs with the handler's SeqCst store; the watcher
+        // must observe the flag promptly and in order with the
+        // shutdown sequence it then starts
         TERMINATE.load(Ordering::SeqCst)
     }
 }
@@ -669,6 +702,8 @@ fn spawn_signal_watcher(shared: Arc<Shared>) -> Result<()> {
         .name("pds-serve-signals".into())
         .spawn(move || loop {
             if sig::raised() {
+                // SeqCst: pairs with every lane's SeqCst poll of the
+                // shutdown flag (see Daemon::shutdown)
                 shared.shutdown.store(true, Ordering::SeqCst);
                 shared.refresh.cv.notify_all();
                 // wait until the store is finalized before exiting
@@ -683,6 +718,8 @@ fn spawn_signal_watcher(shared: Arc<Shared>) -> Result<()> {
                 eprintln!("{}", shared.metrics.to_json());
                 std::process::exit(0);
             }
+            // SeqCst: must observe a normal shutdown stored by any
+            // thread so the watcher exits instead of outliving the run
             if shared.shutdown.load(Ordering::SeqCst) {
                 return; // normal shutdown path took over
             }

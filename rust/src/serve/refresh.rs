@@ -181,12 +181,15 @@ pub fn run_refresh_worker(
     shutdown: Arc<AtomicBool>,
 ) {
     let mut fit = FitState::new(params.initial_version);
+    // SeqCst: must observe a shutdown stored by any handler thread
     while !shutdown.load(Ordering::SeqCst) {
         // sleep until the interval elapses, a refresh is requested, or
         // shutdown is raised
         {
             let deadline = Instant::now() + params.interval;
             let mut st = ctl.lock_state();
+            // SeqCst (shutdown): checked inside the condvar wait loop so
+            // a shutdown raised mid-wait is never missed
             while st.requested <= st.completed && !shutdown.load(Ordering::SeqCst) {
                 let now = Instant::now();
                 if now >= deadline {
@@ -199,6 +202,8 @@ pub fn run_refresh_worker(
                 st = guard;
             }
         }
+        // SeqCst: re-check after the wait — do not start a refresh the
+        // shutdown sequence will not wait for
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
@@ -209,11 +214,13 @@ pub fn run_refresh_worker(
         metrics.refresh_duration.record(t0.elapsed());
         let error = match outcome {
             Ok(true) => {
+                // Relaxed: monotonic stats counter, no ordering with other data
                 metrics.refreshes.fetch_add(1, Ordering::Relaxed);
                 None
             }
             Ok(false) => None,
             Err(e) => {
+                // Relaxed: monotonic stats counter, no ordering with other data
                 metrics.refresh_failures.fetch_add(1, Ordering::Relaxed);
                 // degrade: keep serving the previous snapshot, flagged
                 cell.mark_stale();
@@ -341,6 +348,7 @@ fn refresh_once(
     // persist failure only degrades restart behavior (cold start), so
     // it is counted and logged, never allowed to fail the refresh.
     if let Err(e) = snapshot.write_atomic(&params.dir) {
+        // Relaxed: monotonic stats counter, no ordering with other data
         metrics.snapshot_persist_failures.fetch_add(1, Ordering::Relaxed);
         eprintln!("pds serve: warning: snapshot persist failed (a restarted daemon will cold-start): {e}");
     }

@@ -35,7 +35,6 @@
 //! degrades to a cold start, never a panic.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::distributed::{decode_artifact, encode_artifact, kind, PayloadReader, PayloadWriter};
@@ -437,58 +436,99 @@ impl ModelSnapshot {
 }
 
 /// The swap cell: holds the current snapshot (if any) plus the
-/// degraded-mode flag. Writers (the refresh loop) publish whole
-/// snapshots; readers (query handlers) clone the `Arc` out. Lock
-/// poisoning is deliberately ignored — a panicked refresh must degrade
-/// the daemon, not wedge every query forever.
+/// degraded-mode flag, **together under one lock**. Writers (the
+/// refresh loop) publish whole snapshots; readers (query handlers)
+/// clone the `Arc` out. Lock poisoning is deliberately ignored — a
+/// panicked refresh must degrade the daemon, not wedge every query
+/// forever.
+///
+/// The stale flag lives inside the `RwLock` rather than in a separate
+/// atomic: an earlier layout kept it in an `AtomicBool` next to the
+/// lock, which let a reader pair snapshot version `N` with the
+/// staleness verdict of version `N±1` (publish swapped the pointer
+/// under the lock, then cleared the flag after releasing it). Under
+/// ThreadSanitizer-style interleaving a `query_batch` or `stats`
+/// response could therefore report a *fresh* model as `stale: true` or
+/// a failed refresh as healthy. One lock, one coherent pair — see
+/// [`SnapshotCell::load_with_stale`].
 pub struct SnapshotCell {
-    slot: RwLock<Option<Arc<ModelSnapshot>>>,
-    stale: AtomicBool,
+    slot: RwLock<CellState>,
+}
+
+/// The lock-protected pair: which model is live, and whether the most
+/// recent refresh attempt for it failed.
+struct CellState {
+    snapshot: Option<Arc<ModelSnapshot>>,
+    stale: bool,
 }
 
 impl SnapshotCell {
     /// An empty cell (no model yet, not stale).
     pub fn new() -> Self {
-        SnapshotCell { slot: RwLock::new(None), stale: AtomicBool::new(false) }
+        SnapshotCell { slot: RwLock::new(CellState { snapshot: None, stale: false }) }
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, CellState> {
+        match self.slot.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, CellState> {
+        match self.slot.write() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
     }
 
     /// The current snapshot, if one has been published.
     pub fn load(&self) -> Option<Arc<ModelSnapshot>> {
-        let guard = match self.slot.read() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        guard.clone()
+        self.read().snapshot.clone()
     }
 
-    /// Publish a new snapshot and clear the stale flag. The write lock
-    /// is held only for the pointer swap.
+    /// The current snapshot together with the staleness verdict **for
+    /// that same snapshot**, read under one read-lock acquisition.
+    /// Query and stats handlers must use this instead of a
+    /// `load()` + `is_stale()` pair, which could interleave with a
+    /// concurrent publish and pair one version's model with another
+    /// version's flag.
+    pub fn load_with_stale(&self) -> (Option<Arc<ModelSnapshot>>, bool) {
+        let guard = self.read();
+        (guard.snapshot.clone(), guard.stale)
+    }
+
+    /// Publish a new snapshot and clear the stale flag in the same
+    /// critical section. The write lock is held only for the pointer
+    /// swap and the flag store.
     pub fn publish(&self, snapshot: ModelSnapshot) {
         let arc = Arc::new(snapshot);
-        {
-            let mut guard = match self.slot.write() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
-            *guard = Some(arc);
-        }
-        self.stale.store(false, Ordering::SeqCst);
+        let mut guard = self.write();
+        guard.snapshot = Some(arc);
+        guard.stale = false;
     }
 
     /// Mark the current snapshot stale (a refresh failed; the daemon
     /// keeps serving the previous model with `stale: true`).
     pub fn mark_stale(&self) {
-        self.stale.store(true, Ordering::SeqCst);
+        self.write().stale = true;
     }
 
     /// Whether the daemon is in degraded mode (last refresh failed).
     pub fn is_stale(&self) -> bool {
-        self.stale.load(Ordering::SeqCst)
+        self.read().stale
     }
 
     /// The published version (0 before the first publish).
     pub fn version(&self) -> u64 {
-        self.load().map(|s| s.version).unwrap_or(0)
+        self.read().snapshot.as_ref().map(|s| s.version).unwrap_or(0)
+    }
+
+    /// Version and staleness as one coherent pair (the `stats`
+    /// handler's view).
+    pub fn version_with_stale(&self) -> (u64, bool) {
+        let guard = self.read();
+        (guard.snapshot.as_ref().map(|s| s.version).unwrap_or(0), guard.stale)
     }
 }
 
@@ -740,5 +780,58 @@ mod tests {
         cell.publish(pca_snapshot(2));
         assert!(!cell.is_stale());
         assert_eq!(cell.version(), 2);
+        // the coherent accessors agree with the scalar ones when quiescent
+        let (snap, stale) = cell.load_with_stale();
+        assert_eq!(snap.unwrap().version, 2);
+        assert!(!stale);
+        assert_eq!(cell.version_with_stale(), (2, false));
+    }
+
+    /// Regression for the torn (snapshot, stale) pair: the writer
+    /// publishes version `i` and marks the cell stale only after odd
+    /// publishes, so a coherent reader can never observe an
+    /// even-versioned snapshot with `stale == true`. The pre-fix layout
+    /// (stale in an `AtomicBool` cleared *after* the publish released
+    /// the write lock) let readers pair version `i` with version
+    /// `i-1`'s flag, and this hammer caught it within a few thousand
+    /// iterations under ThreadSanitizer-style schedules.
+    #[test]
+    fn load_with_stale_never_tears_under_concurrent_publish() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let cell = Arc::new(SnapshotCell::new());
+        let done = Arc::new(AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..4 {
+            let (cell, done) = (cell.clone(), done.clone());
+            readers.push(std::thread::spawn(move || {
+                while !done.load(Ordering::SeqCst) {
+                    let (snap, stale) = cell.load_with_stale();
+                    if let Some(s) = snap {
+                        assert!(
+                            !(s.version % 2 == 0 && stale),
+                            "torn pair: even version {} observed with stale=true",
+                            s.version
+                        );
+                    }
+                    let (version, stale) = cell.version_with_stale();
+                    assert!(
+                        !(version > 0 && version % 2 == 0 && stale),
+                        "torn pair: even version {version} observed with stale=true"
+                    );
+                }
+            }));
+        }
+        for version in 1..=2000u64 {
+            cell.publish(pca_snapshot(version));
+            if version % 2 == 1 {
+                cell.mark_stale();
+            }
+        }
+        done.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().expect("reader observed a torn (snapshot, stale) pair");
+        }
+        assert_eq!(cell.version_with_stale(), (2000, false));
     }
 }

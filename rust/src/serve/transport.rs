@@ -130,6 +130,9 @@ fn run_listener<L: Listener>(daemon: Daemon, listener: L) -> Result<()> {
                     match stream {
                         Ok(stream) => {
                             serve_connection(stream, &client);
+                            // SeqCst: frees a slot; pairs with the
+                            // acceptor's SeqCst load so admission never
+                            // overshoots conn_slots
                             active.fetch_sub(1, Ordering::SeqCst);
                         }
                         Err(_) => return, // acceptor dropped the channel
@@ -139,10 +142,15 @@ fn run_listener<L: Listener>(daemon: Daemon, listener: L) -> Result<()> {
         );
     }
 
+    // SeqCst: must observe a shutdown stored by any handler thread
     while !daemon.shared.shutdown.load(Ordering::SeqCst) {
         match listener.poll_accept() {
             Ok(Some(mut stream)) => {
+                // SeqCst: admission check; pairs with the workers'
+                // SeqCst fetch_sub (only this single acceptor thread
+                // increments, so check-then-act cannot overshoot)
                 if active.load(Ordering::SeqCst) >= slots {
+                    // Relaxed: monotonic stats counter, no ordering with other data
                     daemon.shared.metrics.conn_rejections.fetch_add(1, Ordering::Relaxed);
                     let line = error_response(
                         CODE_BACKPRESSURE,
@@ -155,10 +163,13 @@ fn run_listener<L: Listener>(daemon: Daemon, listener: L) -> Result<()> {
                     // dropped: the rejection line is this connection's
                     // entire conversation
                 } else {
+                    // SeqCst: reserve the slot before enqueueing so the
+                    // channel can never reject an admitted connection
                     active.fetch_add(1, Ordering::SeqCst);
                     if tx.try_send(stream).is_err() {
                         // unreachable by construction; keep the counter
                         // honest anyway
+                        // SeqCst: release the reservation taken above
                         active.fetch_sub(1, Ordering::SeqCst);
                     }
                 }

@@ -28,6 +28,14 @@ use std::arch::x86_64::*;
 /// (`hadd`/`hsub`/`blend` per 4-lane quad) and stages h=4,8 as vertical
 /// quad butterflies. `n % 16 == 0`. Outputs scaled by `s` (used only
 /// when the whole transform is a single tile, p = 16).
+///
+/// # Safety
+/// Requires AVX2. `x` must be valid for reads and writes of `n`
+/// contiguous `f64`s with no other live reference into that range
+/// (the kernel loads and stores every element exactly once per tile),
+/// and `n % 16 == 0` so each 16-element tile `[i, i+16)` is in
+/// bounds. No alignment requirement: all accesses are unaligned
+/// (`loadu`/`storeu`).
 #[target_feature(enable = "avx2")]
 unsafe fn tile16_pass_avx2(x: *mut f64, n: usize, s: f64) {
     let vs = _mm256_set1_pd(s);
@@ -76,6 +84,14 @@ unsafe fn tile16_pass_avx2(x: *mut f64, n: usize, s: f64) {
 
 /// One radix-2 stage at stride `h` (`h % 4 == 0`, `h >= 4`), outputs
 /// scaled by `s` — the 4-wide version of `stage_radix2`.
+///
+/// # Safety
+/// Requires AVX2. `x` must be valid for reads and writes of `n`
+/// contiguous `f64`s, exclusively (each butterfly reads and rewrites
+/// the disjoint pair `i`, `i+h`). `n` must be a power of two and a
+/// multiple of `2*h`, and `h % 4 == 0` with `h >= 4`, so every 4-wide
+/// access at `i` and `i+h` stays inside `[0, n)`. Unaligned
+/// `loadu`/`storeu` throughout — no alignment requirement.
 #[target_feature(enable = "avx2")]
 unsafe fn stage_radix2_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
     let vs = _mm256_set1_pd(s);
@@ -96,6 +112,13 @@ unsafe fn stage_radix2_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
 
 /// Two fused radix-2 stages (strides `h`, `2h`) — 4-wide
 /// `stage_radix4`. `h % 4 == 0`, `h >= 4`.
+///
+/// # Safety
+/// Requires AVX2. `x` must be valid for exclusive reads and writes of
+/// `n` contiguous `f64`s; `n` must be a power of two and a multiple of
+/// `4*h`, and `h % 4 == 0` with `h >= 4`, so the four 4-wide accesses
+/// at `i + {0,1,2,3}*h` stay inside `[0, n)` for every `i` the loop
+/// visits. Unaligned `loadu`/`storeu` — no alignment requirement.
 #[target_feature(enable = "avx2")]
 unsafe fn stage_radix4_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
     let vs = _mm256_set1_pd(s);
@@ -126,6 +149,14 @@ unsafe fn stage_radix4_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
 /// back-to-back radix-4 butterflies held in registers. Worth it only
 /// while all 16 concurrent lines fit distinct L1 sets, hence the
 /// `h <= 256` guard at the call site. `h % 4 == 0`, `h >= 4`.
+///
+/// # Safety
+/// Requires AVX2. `x` must be valid for exclusive reads and writes of
+/// `n` contiguous `f64`s; `n` must be a power of two and a multiple of
+/// `16*h`, and `h % 4 == 0` with `h >= 4`, so the sixteen 4-wide
+/// accesses at `i + k*h` (`k < 16`) stay inside `[0, n)`. The
+/// `h <= 256` guard is a performance condition only, not a safety
+/// one. Unaligned `loadu`/`storeu` — no alignment requirement.
 #[target_feature(enable = "avx2")]
 unsafe fn stage_radix16_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
     let vs = _mm256_set1_pd(s);
@@ -186,6 +217,14 @@ unsafe fn stage_radix16_avx2(x: *mut f64, n: usize, h: usize, s: f64) {
 /// lands exactly on `n`. Fusion regroups but never reorders the
 /// butterfly arithmetic, so the result is bit-identical to the scalar
 /// `fwht_stages`.
+///
+/// # Safety
+/// Requires AVX2. `x` must be valid for exclusive reads and writes of
+/// `n` contiguous `f64`s; `n` must be a power of two, `from_h` a power
+/// of two with `4 <= from_h <= n` and `from_h % 4 == 0`. Every stage
+/// kernel dispatched here then receives an `h` that divides `n` with
+/// the radix as a further factor, which is exactly their bounds
+/// precondition. No alignment requirement.
 #[target_feature(enable = "avx2")]
 unsafe fn fwht_stages_avx2(x: *mut f64, n: usize, from_h: usize, scale: f64) {
     let mut h = from_h;
@@ -210,7 +249,10 @@ unsafe fn fwht_stages_avx2(x: *mut f64, n: usize, from_h: usize, scale: f64) {
 /// [`FWHT_BLOCK`] exactly like the scalar transform.
 ///
 /// # Safety
-/// Requires AVX2; `x.len()` must be a power of two `>= 16`.
+/// Requires AVX2 (the caller must have checked `detect() >= Isa::Avx2`);
+/// `x.len()` must be a power of two `>= 16`. The `&mut` slice already
+/// guarantees exclusivity and validity of the whole range; accesses are
+/// unaligned (`loadu`/`storeu`), so no alignment precondition.
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn fwht_avx2(x: &mut [f64]) {
     let p = x.len();
@@ -238,6 +280,14 @@ pub(crate) unsafe fn fwht_avx2(x: &mut [f64]) {
 // ---------------------------------------------------------------------
 
 /// 2-wide radix-2 stage (`h % 2 == 0`, `h >= 2`).
+///
+/// # Safety
+/// SSE2 is the x86-64 baseline, so no feature check is needed. `x`
+/// must be valid for exclusive reads and writes of `n` contiguous
+/// `f64`s; `n` must be a power of two and a multiple of `2*h`, and
+/// `h % 2 == 0` with `h >= 2`, so every 2-wide access at `i` and
+/// `i+h` stays inside `[0, n)`. Unaligned `loadu`/`storeu` — no
+/// alignment requirement.
 unsafe fn stage_radix2_sse2(x: *mut f64, n: usize, h: usize, s: f64) {
     let vs = _mm_set1_pd(s);
     let step = 2 * h;
@@ -256,6 +306,13 @@ unsafe fn stage_radix2_sse2(x: *mut f64, n: usize, h: usize, s: f64) {
 }
 
 /// 2-wide fused radix-4 stage (`h % 2 == 0`, `h >= 2`).
+///
+/// # Safety
+/// SSE2 is the x86-64 baseline. `x` must be valid for exclusive reads
+/// and writes of `n` contiguous `f64`s; `n` must be a power of two and
+/// a multiple of `4*h`, and `h % 2 == 0` with `h >= 2`, so the four
+/// 2-wide accesses at `i + {0,1,2,3}*h` stay inside `[0, n)`.
+/// Unaligned `loadu`/`storeu` — no alignment requirement.
 unsafe fn stage_radix4_sse2(x: *mut f64, n: usize, h: usize, s: f64) {
     let vs = _mm_set1_pd(s);
     let step = 4 * h;
@@ -283,6 +340,14 @@ unsafe fn stage_radix4_sse2(x: *mut f64, n: usize, h: usize, s: f64) {
 
 /// 2-wide mirror of the scalar `fwht_stages` schedule (radix-2 peel,
 /// then radix-4).
+///
+/// # Safety
+/// SSE2 is the x86-64 baseline. `x` must be valid for exclusive reads
+/// and writes of `n` contiguous `f64`s; `n` must be a power of two,
+/// `from_h` a power of two with `2 <= from_h <= n` and
+/// `from_h % 2 == 0`. The dispatched stage kernels then receive an `h`
+/// dividing `n` with the radix as a further factor — their bounds
+/// precondition. No alignment requirement.
 unsafe fn fwht_stages_sse2(x: *mut f64, n: usize, from_h: usize, scale: f64) {
     let mut h = from_h;
     let stages = (n / h).trailing_zeros();
@@ -332,8 +397,12 @@ pub(crate) fn fwht_sse2(x: &mut [f64]) {
 /// *loaded* — no gathers (measured slower than scalar here).
 ///
 /// # Safety
-/// Requires AVX2; `indices.len() == values.len()` and every
-/// `indices[t]*4 + 4 <= panel.len()`.
+/// Requires AVX2; `indices.len() == values.len()` (the
+/// `get_unchecked` loads index both slices by `t < indices.len()`)
+/// and every `indices[t]*4 + 4 <= panel.len()` so the 4-wide center
+/// row load stays inside the panel. All inputs are shared borrows and
+/// `out` is exclusive, so aliasing is ruled out by the signature;
+/// panel loads are unaligned — no alignment precondition.
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn masked_dist2_x4_avx2(
     indices: &[u32],
@@ -415,7 +484,11 @@ pub(crate) unsafe fn masked_dist2_x4_f32_avx2(
 /// `dcol[i] += values[t] * bt[indices[t]*b + i]`.
 ///
 /// # Safety
-/// Requires AVX2; every `indices[t]*b + b <= bt.len()`.
+/// Requires AVX2; `indices.len() == values.len()` and every
+/// `indices[t]*b + b <= bt.len()` (with `b = dcol.len()`), so each
+/// row window read from `bt` is in bounds. `dcol` is the only target
+/// written and is held exclusively; reads are from distinct shared
+/// slices. Unaligned accesses — no alignment precondition.
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn col_dot_avx2(
     dcol: &mut [f64],
@@ -447,7 +520,11 @@ pub(crate) unsafe fn col_dot_avx2(
 /// 2-wide [`col_dot_avx2`].
 ///
 /// # Safety
-/// Every `indices[t]*b + b <= bt.len()` (SSE2 is baseline).
+/// `indices.len() == values.len()` and every
+/// `indices[t]*b + b <= bt.len()` with `b = dcol.len()` (SSE2 is the
+/// x86-64 baseline, so no feature check). Aliasing and alignment as
+/// [`col_dot_avx2`]: exclusive `dcol`, shared inputs, unaligned
+/// accesses.
 pub(crate) unsafe fn col_dot_sse2(
     dcol: &mut [f64],
     indices: &[u32],
@@ -478,8 +555,13 @@ pub(crate) unsafe fn col_dot_sse2(
 /// `out[(indices[t]-row_base)*b + i] += values[t] * dcol[i]`.
 ///
 /// # Safety
-/// Requires AVX2; every `indices[t] >= row_base` and
-/// `(indices[t]-row_base)*b + b <= out.len()`.
+/// Requires AVX2; `indices.len() == values.len()`, every
+/// `indices[t] >= row_base` (the subtraction must not wrap), and
+/// `(indices[t]-row_base)*b + b <= out.len()` with `b = dcol.len()`,
+/// so each written row window lies inside `out`. `out` is exclusive
+/// and `dcol` shared, ruling out aliasing between the accumulator and
+/// the broadcast column. Unaligned accesses — no alignment
+/// precondition.
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn col_scatter_avx2(
     out: &mut [f64],
@@ -512,7 +594,9 @@ pub(crate) unsafe fn col_scatter_avx2(
 /// 2-wide [`col_scatter_avx2`].
 ///
 /// # Safety
-/// Index/window bounds as [`col_scatter_avx2`] (SSE2 is baseline).
+/// Index/window bounds, aliasing, and (absence of) alignment
+/// preconditions exactly as [`col_scatter_avx2`]; SSE2 is the x86-64
+/// baseline, so no feature check is required.
 pub(crate) unsafe fn col_scatter_sse2(
     out: &mut [f64],
     indices: &[u32],

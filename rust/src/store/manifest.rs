@@ -138,7 +138,9 @@ impl StoreManifest {
     /// 4-byte `u32` index plus a 4- or 8-byte value depending on
     /// [`precision`](Self::precision)), excluding headers.
     pub fn payload_bytes(&self) -> u64 {
-        (self.n as u64) * (self.m as u64) * (4 + self.precision.val_bytes() as u64)
+        crate::convert::usize_to_u64(self.n)
+            * crate::convert::usize_to_u64(self.m)
+            * (4 + crate::convert::usize_to_u64(self.precision.val_bytes()))
     }
 
     /// Global column index of this store's first sample (`0` unless the
@@ -291,9 +293,9 @@ impl StoreManifest {
             // p, p_orig and m are encoded as little-endian u32 in every
             // shard header, so a wider manifest value cannot describe any
             // valid shard — checked conversion, not a silent truncation
-            p: lookup_u32(&kv, "p")? as usize,
-            p_orig: lookup_u32(&kv, "p_orig")? as usize,
-            m: lookup_u32(&kv, "m")? as usize,
+            p: crate::convert::u32_to_usize(lookup_u32(&kv, "p")?),
+            p_orig: crate::convert::u32_to_usize(lookup_u32(&kv, "p_orig")?),
+            m: crate::convert::u32_to_usize(lookup_u32(&kv, "m")?),
             n,
             gamma,
             transform,

@@ -80,6 +80,8 @@ const CRC32_TABLE: [u32; 256] = {
     let mut table = [0u32; 256];
     let mut i = 0;
     while i < 256 {
+        // lint:allow(lossy-cast) — i < 256 by the loop bound; const
+        // context, so the checked convert helpers are unavailable
         let mut c = i as u32;
         let mut k = 0;
         while k < 8 {
@@ -110,7 +112,7 @@ impl Crc32 {
     pub fn update(&mut self, bytes: &[u8]) {
         let mut c = self.state;
         for &b in bytes {
-            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+            c = CRC32_TABLE[crate::convert::u32_to_usize((c ^ u32::from(b)) & 0xFF)] ^ (c >> 8);
         }
         self.state = c;
     }

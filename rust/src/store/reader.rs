@@ -207,15 +207,19 @@ impl SparseStoreReader {
             let a = self.col_in_shard;
             let b = (a + self.chunk_cols).min(n_cols);
             let cols = b - a;
-            let f = self.handle.as_mut().expect("shard just opened");
+            let Some(f) = self.handle.as_mut() else {
+                // unreachable: open_shard() just populated the handle,
+                // but a typed error beats a panic if that ever changes
+                return corrupt(format!("shard {}: handle lost after open", self.shard));
+            };
             // indices block, then values block (two seeks because the
             // blocks are contiguous per shard, not interleaved)
-            f.seek(SeekFrom::Start((SHARD_HEADER_LEN + a * m * 4) as u64))?;
+            f.seek(SeekFrom::Start(crate::convert::usize_to_u64(SHARD_HEADER_LEN + a * m * 4)))?;
             let mut ibuf = vec![0u8; cols * m * 4];
             f.read_exact(&mut ibuf)?;
-            f.seek(SeekFrom::Start(
-                (SHARD_HEADER_LEN + n_cols * m * 4 + a * m * vb) as u64,
-            ))?;
+            f.seek(SeekFrom::Start(crate::convert::usize_to_u64(
+                SHARD_HEADER_LEN + n_cols * m * 4 + a * m * vb,
+            )))?;
             let mut vbuf = vec![0u8; cols * m * vb];
             f.read_exact(&mut vbuf)?;
             let indices: Vec<u32> = ibuf
@@ -234,7 +238,7 @@ impl SparseStoreReader {
                     .collect(),
                 Precision::F32 => vbuf
                     .chunks_exact(4)
-                    .map(|q| f32::from_le_bytes([q[0], q[1], q[2], q[3]]) as f64)
+                    .map(|q| f64::from(f32::from_le_bytes([q[0], q[1], q[2], q[3]])))
                     .collect(),
             };
             self.col_in_shard = b;
@@ -264,7 +268,8 @@ impl SparseStoreReader {
         let path = self.dir.join(&entry.file);
         let m = self.manifest.m;
         let per_entry = 4 + self.manifest.precision.val_bytes();
-        let expected_len = (SHARD_HEADER_LEN + entry.n_cols * m * per_entry) as u64;
+        let expected_len =
+            crate::convert::usize_to_u64(SHARD_HEADER_LEN + entry.n_cols * m * per_entry);
         let meta = std::fs::metadata(&path).map_err(|e| {
             Error::Corrupt(format!("{}: missing shard file ({e})", path.display()))
         })?;
@@ -315,11 +320,18 @@ impl SparseStoreReader {
                 self.manifest.precision.name()
             ));
         }
-        let (hp, hm, hn) = (u32_at(8) as usize, u32_at(12) as usize, u32_at(16) as usize);
-        let hstart = u64::from_le_bytes([
+        let (hp, hm, hn) = (
+            crate::convert::u32_to_usize(u32_at(8)),
+            crate::convert::u32_to_usize(u32_at(12)),
+            crate::convert::u32_to_usize(u32_at(16)),
+        );
+        let hstart_raw = u64::from_le_bytes([
             header[20], header[21], header[22], header[23], header[24], header[25], header[26],
             header[27],
-        ]) as usize;
+        ]);
+        // a start_col past usize::MAX cannot index any in-RAM store on
+        // this target: typed Corrupt, not a silent wrap
+        let hstart = crate::convert::u64_to_usize(hstart_raw, "shard header start_col")?;
         if hp != self.manifest.p
             || hm != m
             || hn != entry.n_cols
@@ -537,6 +549,43 @@ mod tests {
         // trade-off) but still reads without panicking
         let mut unchecked = SparseStoreReader::open(&dir).unwrap().with_verify(false);
         assert_eq!(read_all(&mut unchecked).unwrap(), 25);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_header_start_col_is_a_typed_error() {
+        // regression: the header start_col used to flow through bare
+        // casts; a disagreement with the manifest must surface as a
+        // typed Corrupt even with the CRC pass disabled, never a panic
+        // or a silently misplaced chunk
+        let (dir, manifest) = small_store("tampered-start");
+        let shard = dir.join(&manifest.shards[1].file);
+        let mut bytes = std::fs::read(&shard).unwrap();
+        bytes[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&shard, &bytes).unwrap();
+        let mut reader = SparseStoreReader::open(&dir).unwrap().with_verify(false);
+        match read_all(&mut reader) {
+            Err(Error::Corrupt(msg)) => assert!(
+                msg.contains("start_col") || msg.contains("disagrees"),
+                "{msg}"
+            ),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_header_version_is_a_typed_error() {
+        let (dir, manifest) = small_store("tampered-version");
+        let shard = dir.join(&manifest.shards[0].file);
+        let mut bytes = std::fs::read(&shard).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&shard, &bytes).unwrap();
+        let mut reader = SparseStoreReader::open(&dir).unwrap().with_verify(false);
+        match read_all(&mut reader) {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -371,7 +371,13 @@ impl SparseStoreWriter {
                 Some(&k) if k == self.next_col => k,
                 _ => break,
             };
-            let chunk = self.pending.remove(&first).expect("key just observed");
+            let chunk = match self.pending.remove(&first) {
+                Some(c) => c,
+                // unreachable: the key was observed under this same
+                // borrow — but a typed error beats a panic if the
+                // drain logic ever changes
+                None => return invalid(format!("store append: pending chunk at {first} vanished")),
+            };
             self.absorb(&chunk)?;
         }
         Ok(())
@@ -394,7 +400,7 @@ impl SparseStoreWriter {
                 // quantize exactly once at absorb, so the buffered state
                 // (and any future read-back) matches the disk bytes
                 Precision::F32 => {
-                    self.cur_values.extend(vals.iter().map(|&v| v as f32 as f64));
+                    self.cur_values.extend(vals.iter().map(|&v| crate::convert::quantize_f32(v)));
                 }
             }
             off += take;
@@ -430,10 +436,13 @@ impl SparseStoreWriter {
         let mut header = Vec::with_capacity(super::SHARD_HEADER_LEN);
         header.extend_from_slice(SHARD_MAGIC);
         header.extend_from_slice(&shard_version.to_le_bytes());
-        header.extend_from_slice(&(self.p as u32).to_le_bytes());
-        header.extend_from_slice(&(self.m as u32).to_le_bytes());
-        header.extend_from_slice(&(n_cols as u32).to_le_bytes());
-        header.extend_from_slice(&(self.cur_start as u64).to_le_bytes());
+        // the header encodes p/m/n_cols as u32: a store too wide for the
+        // format must fail typed at flush, not truncate on disk
+        header.extend_from_slice(&crate::convert::usize_to_u32(self.p, "store p")?.to_le_bytes());
+        header.extend_from_slice(&crate::convert::usize_to_u32(self.m, "store m")?.to_le_bytes());
+        header
+            .extend_from_slice(&crate::convert::usize_to_u32(n_cols, "shard n_cols")?.to_le_bytes());
+        header.extend_from_slice(&crate::convert::usize_to_u64(self.cur_start).to_le_bytes());
         crc.update(&header);
         out.write_all(&header)?;
 
@@ -458,7 +467,9 @@ impl SparseStoreWriter {
                 // narrowing cast here is exact
                 Precision::F32 => {
                     for v in block {
-                        buf.extend_from_slice(&(*v as f32).to_bits().to_le_bytes());
+                        buf.extend_from_slice(
+                            &crate::convert::f64_to_f32(*v).to_bits().to_le_bytes(),
+                        );
                     }
                 }
             }

@@ -1,0 +1,470 @@
+#!/usr/bin/env python3
+"""Reference mirror of tools/pds-lint (same lexer + rules, line for line).
+
+Used to cross-check the Rust linter and to (re)generate
+pds-lint.baseline in environments without a Rust toolchain:
+
+    python3 scripts/pds_lint_mirror.py [--write-baseline] [--deny-stale] [--list RULE]
+
+The Rust binary (`cargo run -p pds-lint`) is authoritative; any
+divergence between the two is a bug in this script.
+"""
+import os
+import sys
+
+SCAN_DIRS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+BASELINE_FILE = "pds-lint.baseline"
+
+NUMERIC_TYPES = {
+    "u8", "u16", "u32", "u64", "u128", "usize",
+    "i8", "i16", "i32", "i64", "i128", "isize", "f32", "f64",
+}
+ATOMIC_ORDERINGS = {"Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"}
+DEPRECATED_NAMES = {
+    "run_pca_stream", "run_pca_sparse", "run_pca_from_store",
+    "run_pca_krylov_stream", "run_pca_krylov_sparse", "run_pca_krylov_from_store",
+    "run_sparsified_kmeans_stream", "run_sparsified_kmeans_sparse",
+    "run_sparsified_kmeans_from_store", "run_two_pass_stream", "run_compress_to_store",
+}
+DEPRECATED_ALLOW = {
+    "rust/src/coordinator/driver.rs",
+    "rust/src/coordinator/krylov.rs",
+    "rust/src/coordinator/mod.rs",
+}
+
+
+def lex(src):
+    chars = src
+    n = len(chars)
+    n_lines = max(len(src.splitlines()), 1)
+    tokens = []  # (text, line, col)
+    comment_text = [""] * (n_lines + 1)
+    has_comment = [False] * (n_lines + 1)
+    has_code = [False] * (n_lines + 1)
+    raw_lines = src.splitlines()
+
+    def at(i):
+        return chars[i] if i < n else "\0"
+
+    i, line, col = 0, 1, 1
+    while i < n:
+        c = chars[i]
+        if c == "\n":
+            line += 1
+            col = 1
+            i += 1
+            continue
+        if c == "/" and at(i + 1) == "/":
+            start = i
+            while i < n and chars[i] != "\n":
+                i += 1
+            if line <= n_lines:
+                comment_text[line - 1] += chars[start:i] + " "
+                has_comment[line - 1] = True
+            continue
+        if c == "/" and at(i + 1) == "*":
+            depth = 1
+            i += 2
+            col += 2
+            seg = "/*"
+            while i < n and depth > 0:
+                if chars[i] == "\n":
+                    if line <= n_lines:
+                        comment_text[line - 1] += seg + " "
+                        has_comment[line - 1] = True
+                    seg = ""
+                    line += 1
+                    col = 1
+                    i += 1
+                    continue
+                if chars[i] == "/" and at(i + 1) == "*":
+                    depth += 1
+                    seg += "/*"
+                    i += 2
+                    col += 2
+                    continue
+                if chars[i] == "*" and at(i + 1) == "/":
+                    depth -= 1
+                    seg += "*/"
+                    i += 2
+                    col += 2
+                    continue
+                seg += chars[i]
+                i += 1
+                col += 1
+            if seg and line <= n_lines:
+                comment_text[line - 1] += seg + " "
+                has_comment[line - 1] = True
+            continue
+        if (c in "rb") and (at(i + 1) == '"' or at(i + 1) == "#" or (c == "b" and at(i + 1) == "r")):
+            j = i + 1
+            raw = c == "r"
+            if c == "b" and at(j) == "r":
+                raw = True
+                j += 1
+            hashes = 0
+            while at(j) == "#":
+                hashes += 1
+                j += 1
+            if at(j) == '"' and (raw or hashes == 0):
+                if line <= n_lines:
+                    has_code[line - 1] = True
+                j += 1
+                while True:
+                    if j >= n:
+                        break
+                    d = chars[j]
+                    if d == "\n":
+                        line += 1
+                        col = 1
+                        j += 1
+                        if line <= n_lines:
+                            has_code[line - 1] = True
+                        continue
+                    if not raw and d == "\\":
+                        j += 2
+                        col += 2
+                        continue
+                    if d == '"':
+                        k = j + 1
+                        close = 0
+                        while close < hashes and at(k) == "#":
+                            close += 1
+                            k += 1
+                        if close == hashes:
+                            j = k
+                            col += 1 + hashes
+                            break
+                    j += 1
+                    col += 1
+                i = j
+                continue
+            # fall through to identifier lexing
+        if c == '"':
+            if line <= n_lines:
+                has_code[line - 1] = True
+            i += 1
+            col += 1
+            while i < n:
+                d = chars[i]
+                if d == "\\":
+                    i += 2
+                    col += 2
+                    continue
+                if d == "\n":
+                    line += 1
+                    col = 1
+                    i += 1
+                    if line <= n_lines:
+                        has_code[line - 1] = True
+                    continue
+                i += 1
+                col += 1
+                if d == '"':
+                    break
+            continue
+        if c == "'":
+            c1 = at(i + 1)
+            if (c1.isalpha() or c1 == "_") and at(i + 2) != "'":
+                i += 1
+                col += 1
+                while i < n and (chars[i].isalnum() or chars[i] == "_"):
+                    i += 1
+                    col += 1
+                continue
+            if line <= n_lines:
+                has_code[line - 1] = True
+            i += 1
+            col += 1
+            while i < n:
+                d = chars[i]
+                if d == "\\":
+                    i += 2
+                    col += 2
+                    continue
+                i += 1
+                col += 1
+                if d == "'" or d == "\n":
+                    if d == "\n":
+                        line += 1
+                        col = 1
+                    break
+            continue
+        if c.isalpha() or c == "_":
+            start = i
+            start_col = col
+            while i < n and (chars[i].isalnum() or chars[i] == "_"):
+                i += 1
+                col += 1
+            if line <= n_lines:
+                has_code[line - 1] = True
+            tokens.append((chars[start:i], line, start_col))
+            continue
+        if c.isdigit():
+            start = i
+            start_col = col
+            while i < n and (chars[i].isalnum() or chars[i] == "_"):
+                i += 1
+                col += 1
+            if at(i) == "." and at(i + 1).isdigit():
+                i += 1
+                col += 1
+                while i < n and (chars[i].isalnum() or chars[i] == "_"):
+                    i += 1
+                    col += 1
+            if line <= n_lines:
+                has_code[line - 1] = True
+            tokens.append((chars[start:i], line, start_col))
+            continue
+        if c == ":" and at(i + 1) == ":":
+            if line <= n_lines:
+                has_code[line - 1] = True
+            tokens.append(("::", line, col))
+            i += 2
+            col += 2
+            continue
+        if not c.isspace():
+            if line <= n_lines:
+                has_code[line - 1] = True
+            tokens.append((c, line, col))
+        i += 1
+        col += 1
+
+    comment_only = [has_comment[l] and not has_code[l] for l in range(n_lines)]
+    return tokens, comment_text[:n_lines], comment_only, raw_lines
+
+
+def test_ranges(tokens):
+    ranges = []
+    i = 0
+    n = len(tokens)
+    while i < n:
+        if tokens[i][0] == "#" and i + 1 < n and tokens[i + 1][0] == "[":
+            depth = 0
+            j = i + 1
+            while j < n:
+                t = tokens[j][0]
+                if t == "[":
+                    depth += 1
+                elif t == "]":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            if j >= n:
+                break
+            inner = [t[0] for t in tokens[i + 2 : j]]
+            is_test = (len(inner) > 0 and inner[0] == "cfg" and "test" in inner) or inner == ["test"]
+            if is_test:
+                k = j + 1
+                while k + 1 < n and tokens[k][0] == "#" and tokens[k + 1][0] == "[":
+                    d = 0
+                    while k < n:
+                        t = tokens[k][0]
+                        if t == "[":
+                            d += 1
+                        elif t == "]":
+                            d -= 1
+                            if d == 0:
+                                break
+                        k += 1
+                    k += 1
+                d = 0
+                end = n - 1
+                while k < n:
+                    t = tokens[k][0]
+                    if t == "{" and d == 0:
+                        b = 0
+                        while k < n:
+                            t2 = tokens[k][0]
+                            if t2 == "{":
+                                b += 1
+                            elif t2 == "}":
+                                b -= 1
+                                if b == 0:
+                                    break
+                            k += 1
+                        end = min(k, n - 1)
+                        break
+                    if t in "([{":
+                        d += 1
+                    elif t in ")]}":
+                        d -= 1
+                    elif t == ";" and d == 0:
+                        end = k
+                        break
+                    k += 1
+                if k >= n:
+                    end = n - 1
+                ranges.append((i, end))
+                i = end + 1
+                continue
+        i += 1
+    return ranges
+
+
+def in_ranges(ranges, idx):
+    return any(a <= idx <= b for a, b in ranges)
+
+
+def comment_run_above(comment_text, comment_only, line):
+    acc = ""
+    l = line
+    while l >= 2 and (l - 2 < len(comment_only) and comment_only[l - 2]):
+        acc += comment_text[l - 2] + " "
+        l -= 1
+    return acc
+
+
+def doc_run_above(comment_text, comment_only, raw_lines, line):
+    l = line
+    while l >= 2:
+        raw = raw_lines[l - 2] if l - 2 < len(raw_lines) else ""
+        t = raw.lstrip()
+        if t == "" or t.startswith("#[") or t.startswith("#!["):
+            l -= 1
+            continue
+        break
+    return comment_run_above(comment_text, comment_only, l)
+
+
+def lint_file(path, src):
+    tokens, ctext, conly, rlines = lex(src)
+    tests = test_ranges(tokens)
+    out = []
+    n = len(tokens)
+    in_lib = path.startswith("rust/src/")
+    in_serve = path.startswith("rust/src/serve/")
+    dep_allowed = path in DEPRECATED_ALLOW
+
+    for i in range(n):
+        text, tline, tcol = tokens[i]
+
+        def nxt(k):
+            return tokens[i + k][0] if i + k < n else ""
+
+        if text == "unsafe" and not in_ranges(tests, i):
+            is_fn = nxt(1) == "fn" or (nxt(1) == "extern" and nxt(2) == "fn")
+            is_block = nxt(1) == "{"
+            if is_fn:
+                doc = doc_run_above(ctext, conly, rlines, tline)
+                if "SAFETY" not in doc and "# Safety" not in doc:
+                    out.append(("safety-contract", path, tline, tcol, "unsafe fn without contract"))
+            elif is_block:
+                same = ctext[tline - 1]
+                above = comment_run_above(ctext, conly, tline)
+                if "SAFETY" not in same and "SAFETY" not in above:
+                    out.append(("safety-contract", path, tline, tcol, "unsafe block without SAFETY"))
+
+        if in_lib and text == "as" and nxt(1) in NUMERIC_TYPES and not in_ranges(tests, i):
+            same = ctext[tline - 1]
+            above = comment_run_above(ctext, conly, tline)
+            marker = "lint:allow(lossy-cast)"
+            if marker not in same and marker not in above:
+                out.append(("lossy-cast", path, tline, tcol, f"as {nxt(1)}"))
+
+        if in_lib and text == "." and not in_ranges(tests, i):
+            is_unwrap = nxt(1) == "unwrap" and nxt(2) == "(" and nxt(3) == ")"
+            is_expect = nxt(1) == "expect" and nxt(2) == "("
+            if is_unwrap or is_expect:
+                out.append(("unwrap", path, tokens[i + 1][1], tokens[i + 1][2], f".{nxt(1)}"))
+
+        if (
+            in_serve
+            and text == "Ordering"
+            and nxt(1) == "::"
+            and nxt(2) in ATOMIC_ORDERINGS
+            and not in_ranges(tests, i)
+        ):
+            ord_ = nxt(2)
+            same = ctext[tline - 1]
+            above = comment_run_above(ctext, conly, tline)
+            if ord_ not in same and ord_ not in above:
+                out.append(("atomic-ordering", path, tline, tcol, f"Ordering::{ord_} unjustified"))
+
+        if not dep_allowed and text in DEPRECATED_NAMES:
+            out.append(("deprecated-name", path, tline, tcol, text))
+    return out
+
+
+def scan_files(root):
+    files = []
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        for dirpath, _, names in os.walk(base):
+            for nm in names:
+                if nm.endswith(".rs"):
+                    files.append(os.path.join(dirpath, nm))
+    files.sort()
+    return [(os.path.relpath(p, root).replace(os.sep, "/"), p) for p in files]
+
+
+def main():
+    args = sys.argv[1:]
+    write = "--write-baseline" in args
+    deny_stale = "--deny-stale" in args
+    list_rule = args[args.index("--list") + 1] if "--list" in args else None
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    baseline = {}
+    bpath = os.path.join(root, BASELINE_FILE)
+    if os.path.exists(bpath):
+        for line in open(bpath):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split()
+            if len(parts) >= 3:
+                baseline[(parts[0], parts[1])] = int(parts[2])
+
+    by_key = {}
+    files = scan_files(root)
+    for rel, p in files:
+        src = open(p, encoding="utf-8").read()
+        for v in lint_file(rel, src):
+            by_key.setdefault((v[0], v[1]), []).append(v)
+
+    if list_rule:
+        for (rule, path), vs in sorted(by_key.items()):
+            if rule == list_rule:
+                for v in vs:
+                    print(f"{path}:{v[2]}:{v[3]}: {v[4]}")
+        return 0
+
+    if write:
+        lines = [
+            "# pds-lint baseline — pre-existing violations, grandfathered by count.",
+            "# Counts may only shrink: fix sites, then `cargo run -p pds-lint -- --write-baseline`.",
+            "# format: <rule> <repo-relative-path> <count>",
+        ]
+        for (rule, path), vs in sorted(by_key.items()):
+            if vs:
+                lines.append(f"{rule} {path} {len(vs)}")
+        open(bpath, "w").write("\n".join(lines) + "\n")
+        total = sum(len(v) for v in by_key.values())
+        print(f"wrote {bpath}: {total} violations across {len(by_key)} (rule,file) pairs")
+        return 0
+
+    violations = 0
+    baselined = 0
+    for key, vs in sorted(by_key.items()):
+        allowed = baseline.get(key, 0)
+        if len(vs) <= allowed:
+            baselined += len(vs)
+        else:
+            for v in vs:
+                print(f"{v[1]}:{v[2]}:{v[3]}: error[{v[0]}]: {v[4]}")
+            violations += len(vs)
+    stale = 0
+    if deny_stale:
+        for (rule, path), allowed in sorted(baseline.items()):
+            have = len(by_key.get((rule, path), []))
+            if have < allowed:
+                print(f"error[stale-baseline]: {path}: {rule} {allowed} -> {have}")
+                stale += 1
+    print(f"{len(files)} files scanned, {violations} violations, {baselined} baselined, {stale} stale")
+    return 1 if (violations or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,807 @@
+//! pds-lint — repo-local static analysis for the `pds` crate.
+//!
+//! A dependency-free linter over a hand-rolled Rust token stream. It
+//! does not parse Rust; it lexes it (comments, strings, and char
+//! literals stripped from the token stream but comment *content*
+//! retained per line) and checks token-pattern rules that `rustc` and
+//! `clippy` do not enforce:
+//!
+//! * **safety-contract** — every `unsafe fn` carries a `# Safety` doc
+//!   section (or `// SAFETY:` comment) and every `unsafe { .. }` block
+//!   a `// SAFETY:` comment on or immediately above it.
+//! * **lossy-cast** — no `as <numeric-type>` casts in library code;
+//!   audited sites opt out with a `lint:allow(lossy-cast)` comment,
+//!   everything else goes through `pds::convert` or is baselined.
+//! * **unwrap** — no `.unwrap()` / `.expect(..)` in non-test library
+//!   code; library errors are typed `pds::Error` values.
+//! * **atomic-ordering** — every atomic `Ordering::X` in the `serve`
+//!   daemon names its ordering in a same-line or immediately-above
+//!   comment justifying the choice.
+//! * **deprecated-name** — the pre-`FitPlan` `run_*` entry points may
+//!   be referenced only from their compatibility shims in
+//!   `coordinator/{driver,krylov,mod}.rs`.
+//!
+//! Violations are reported rustc-style (`path:line:col`). Pre-existing
+//! debt lives in `pds-lint.baseline` at the repo root as per-file
+//! per-rule *counts*: a file may never exceed its baselined count, and
+//! in CI (`--deny-stale`) the counts may only shrink — fixing a site
+//! requires re-running with `--write-baseline` so the debt burns down
+//! monotonically.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Directories scanned, relative to the repo root. `rust/vendor` and
+/// `tools/` are deliberately absent: vendored shims and the linter
+/// itself are not the crate's library surface.
+pub const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Name of the committed baseline file at the repo root.
+pub const BASELINE_FILE: &str = "pds-lint.baseline";
+
+const NUMERIC_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+    "f32", "f64",
+];
+
+const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// The pre-`FitPlan` entry points retired in the coordinator redesign.
+pub const DEPRECATED_NAMES: &[&str] = &[
+    "run_pca_stream",
+    "run_pca_sparse",
+    "run_pca_from_store",
+    "run_pca_krylov_stream",
+    "run_pca_krylov_sparse",
+    "run_pca_krylov_from_store",
+    "run_sparsified_kmeans_stream",
+    "run_sparsified_kmeans_sparse",
+    "run_sparsified_kmeans_from_store",
+    "run_two_pass_stream",
+    "run_compress_to_store",
+];
+
+/// Files allowed to mention the deprecated names: the deprecation shims
+/// themselves and the module that re-exports them.
+const DEPRECATED_ALLOW: &[&str] = &[
+    "rust/src/coordinator/driver.rs",
+    "rust/src/coordinator/krylov.rs",
+    "rust/src/coordinator/mod.rs",
+];
+
+/// One token of stripped Rust source.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Lexed view of one file: the code token stream plus per-line comment
+/// content (rules check comments for contracts and justifications).
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    /// Concatenated comment text per line (1-indexed via `line - 1`).
+    pub comment_text: Vec<String>,
+    /// Line holds comments and whitespace only (no code tokens).
+    pub comment_only: Vec<bool>,
+    /// Raw source lines (for blank / attribute detection).
+    pub raw_lines: Vec<String>,
+}
+
+/// A single finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+impl Violation {
+    /// `path:line:col: error[rule]: msg`
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: error[{}]: {}",
+            self.path, self.line, self.col, self.rule, self.msg
+        )
+    }
+}
+
+/// Lex `src` into tokens + per-line comment info.
+///
+/// The lexer strips line/block comments (content retained per line),
+/// string/char literals, lifetimes, and raw strings; identifiers,
+/// numbers, `::`, and single punctuation chars become tokens.
+pub fn lex(src: &str) -> Lexed {
+    let bytes: Vec<char> = src.chars().collect();
+    let n_lines = src.lines().count().max(1);
+    let mut tokens = Vec::new();
+    let mut comment_text = vec![String::new(); n_lines + 1];
+    let mut has_comment = vec![false; n_lines + 1];
+    let mut has_code = vec![false; n_lines + 1];
+    let raw_lines: Vec<String> = src.lines().map(str::to_string).collect();
+
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut col = 1usize;
+    let n = bytes.len();
+    let at = |i: usize| -> char {
+        if i < n {
+            bytes[i]
+        } else {
+            '\0'
+        }
+    };
+
+    while i < n {
+        let c = bytes[i];
+        if c == '\n' {
+            line += 1;
+            col = 1;
+            i += 1;
+            continue;
+        }
+        if c == '/' && at(i + 1) == '/' {
+            let start = i;
+            while i < n && bytes[i] != '\n' {
+                i += 1;
+            }
+            let text: String = bytes[start..i].iter().collect();
+            if line <= n_lines {
+                comment_text[line - 1].push_str(&text);
+                comment_text[line - 1].push(' ');
+                has_comment[line - 1] = true;
+            }
+            continue; // newline handled at loop top
+        }
+        if c == '/' && at(i + 1) == '*' {
+            // nested block comment; attribute content to every line it spans
+            let mut depth = 1usize;
+            i += 2;
+            col += 2;
+            let mut seg = String::from("/*");
+            while i < n && depth > 0 {
+                if bytes[i] == '\n' {
+                    if line <= n_lines {
+                        comment_text[line - 1].push_str(&seg);
+                        comment_text[line - 1].push(' ');
+                        has_comment[line - 1] = true;
+                    }
+                    seg.clear();
+                    line += 1;
+                    col = 1;
+                    i += 1;
+                    continue;
+                }
+                if bytes[i] == '/' && at(i + 1) == '*' {
+                    depth += 1;
+                    seg.push_str("/*");
+                    i += 2;
+                    col += 2;
+                    continue;
+                }
+                if bytes[i] == '*' && at(i + 1) == '/' {
+                    depth -= 1;
+                    seg.push_str("*/");
+                    i += 2;
+                    col += 2;
+                    continue;
+                }
+                seg.push(bytes[i]);
+                i += 1;
+                col += 1;
+            }
+            if !seg.is_empty() && line <= n_lines {
+                comment_text[line - 1].push_str(&seg);
+                comment_text[line - 1].push(' ');
+                has_comment[line - 1] = true;
+            }
+            continue;
+        }
+        // raw strings / byte strings: r"..", r#".."#, br".., b".."
+        if (c == 'r' || c == 'b') && (at(i + 1) == '"' || at(i + 1) == '#' || (c == 'b' && at(i + 1) == 'r')) {
+            let mut j = i + 1;
+            let mut raw = c == 'r';
+            if c == 'b' && at(j) == 'r' {
+                raw = true;
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while at(j) == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if at(j) == '"' && (raw || hashes == 0) {
+                // consume the literal
+                if line <= n_lines {
+                    has_code[line - 1] = true;
+                }
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    let d = bytes[j];
+                    if d == '\n' {
+                        line += 1;
+                        col = 1;
+                        j += 1;
+                        if line <= n_lines {
+                            has_code[line - 1] = true;
+                        }
+                        continue;
+                    }
+                    if !raw && d == '\\' {
+                        j += 2;
+                        col += 2;
+                        continue;
+                    }
+                    if d == '"' {
+                        let mut k = j + 1;
+                        let mut close = 0usize;
+                        while close < hashes && at(k) == '#' {
+                            close += 1;
+                            k += 1;
+                        }
+                        if close == hashes {
+                            j = k;
+                            col += 1 + hashes;
+                            break;
+                        }
+                    }
+                    j += 1;
+                    col += 1;
+                }
+                i = j;
+                continue;
+            }
+            // not a string start: fall through to identifier lexing
+        }
+        if c == '"' {
+            if line <= n_lines {
+                has_code[line - 1] = true;
+            }
+            i += 1;
+            col += 1;
+            while i < n {
+                let d = bytes[i];
+                if d == '\\' {
+                    i += 2;
+                    col += 2;
+                    continue;
+                }
+                if d == '\n' {
+                    line += 1;
+                    col = 1;
+                    i += 1;
+                    if line <= n_lines {
+                        has_code[line - 1] = true;
+                    }
+                    continue;
+                }
+                i += 1;
+                col += 1;
+                if d == '"' {
+                    break;
+                }
+            }
+            continue;
+        }
+        if c == '\'' {
+            // lifetime ('a, 'static) vs char literal ('x', '\n', '\u{41}')
+            let c1 = at(i + 1);
+            if (c1.is_alphabetic() || c1 == '_') && at(i + 2) != '\'' {
+                i += 1;
+                col += 1;
+                while i < n && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                    col += 1;
+                }
+                continue;
+            }
+            if line <= n_lines {
+                has_code[line - 1] = true;
+            }
+            i += 1;
+            col += 1;
+            while i < n {
+                let d = bytes[i];
+                if d == '\\' {
+                    i += 2;
+                    col += 2;
+                    continue;
+                }
+                i += 1;
+                col += 1;
+                if d == '\'' || d == '\n' {
+                    if d == '\n' {
+                        line += 1;
+                        col = 1;
+                    }
+                    break;
+                }
+            }
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let start_col = col;
+            while i < n && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                i += 1;
+                col += 1;
+            }
+            let text: String = bytes[start..i].iter().collect();
+            if line <= n_lines {
+                has_code[line - 1] = true;
+            }
+            tokens.push(Tok { text, line, col: start_col });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let start_col = col;
+            while i < n && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                i += 1;
+                col += 1;
+            }
+            // fractional part: `1.5` but not `1..3` or `1.method()`
+            if at(i) == '.' && at(i + 1).is_ascii_digit() {
+                i += 1;
+                col += 1;
+                while i < n && (bytes[i].is_alphanumeric() || bytes[i] == '_') {
+                    i += 1;
+                    col += 1;
+                }
+            }
+            let text: String = bytes[start..i].iter().collect();
+            if line <= n_lines {
+                has_code[line - 1] = true;
+            }
+            tokens.push(Tok { text, line, col: start_col });
+            continue;
+        }
+        if c == ':' && at(i + 1) == ':' {
+            if line <= n_lines {
+                has_code[line - 1] = true;
+            }
+            tokens.push(Tok { text: "::".to_string(), line, col });
+            i += 2;
+            col += 2;
+            continue;
+        }
+        if !c.is_whitespace() {
+            if line <= n_lines {
+                has_code[line - 1] = true;
+            }
+            tokens.push(Tok { text: c.to_string(), line, col });
+        }
+        i += 1;
+        col += 1;
+    }
+
+    let comment_only: Vec<bool> = (0..n_lines)
+        .map(|l| has_comment[l] && !has_code[l])
+        .collect();
+    Lexed {
+        tokens,
+        comment_text: comment_text.into_iter().take(n_lines).collect(),
+        comment_only,
+        raw_lines,
+    }
+}
+
+/// Token-index ranges covered by `#[cfg(test)]` / `#[test]` items
+/// (attribute through the end of the annotated item).
+pub fn test_ranges(tokens: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    let n = tokens.len();
+    while i < n {
+        if tokens[i].text == "#" && i + 1 < n && tokens[i + 1].text == "[" {
+            // matching `]` of the attribute
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < n {
+                match tokens[j].text.as_str() {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= n {
+                break;
+            }
+            let inner: Vec<&str> = tokens[i + 2..j].iter().map(|t| t.text.as_str()).collect();
+            let is_test_attr = (inner.first() == Some(&"cfg") && inner.contains(&"test"))
+                || inner == ["test"];
+            if is_test_attr {
+                // skip any further attributes on the same item
+                let mut k = j + 1;
+                while k + 1 < n && tokens[k].text == "#" && tokens[k + 1].text == "[" {
+                    let mut d = 0usize;
+                    while k < n {
+                        match tokens[k].text.as_str() {
+                            "[" => d += 1,
+                            "]" => {
+                                d -= 1;
+                                if d == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    k += 1;
+                }
+                // item extent: first `;` at depth 0 ends it, or the
+                // matching `}` of the first `{` at depth 0
+                let mut d = 0isize;
+                let mut end = n.saturating_sub(1);
+                while k < n {
+                    match tokens[k].text.as_str() {
+                        "{" if d == 0 => {
+                            let mut b = 0isize;
+                            while k < n {
+                                match tokens[k].text.as_str() {
+                                    "{" => b += 1,
+                                    "}" => {
+                                        b -= 1;
+                                        if b == 0 {
+                                            break;
+                                        }
+                                    }
+                                    _ => {}
+                                }
+                                k += 1;
+                            }
+                            end = k.min(n - 1);
+                            break;
+                        }
+                        "(" | "[" | "{" => d += 1,
+                        ")" | "]" | "}" => d -= 1,
+                        ";" if d == 0 => {
+                            end = k;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                if k >= n {
+                    end = n - 1;
+                }
+                ranges.push((i, end));
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], idx: usize) -> bool {
+    ranges.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+/// Concatenated comment text of the contiguous comment-only run ending
+/// at `line - 1` (1-indexed `line`).
+fn comment_run_above(lx: &Lexed, line: usize) -> String {
+    let mut acc = String::new();
+    let mut l = line;
+    while l >= 2 && *lx.comment_only.get(l - 2).unwrap_or(&false) {
+        acc.push_str(&lx.comment_text[l - 2]);
+        acc.push(' ');
+        l -= 1;
+    }
+    acc
+}
+
+/// Like [`comment_run_above`] but first skips blank lines and
+/// single-line attributes (`#[..]`) — the shape of a doc comment above
+/// an attributed `unsafe fn`.
+fn doc_run_above(lx: &Lexed, line: usize) -> String {
+    let mut l = line; // 1-indexed; examine l-1 next
+    while l >= 2 {
+        let raw = lx.raw_lines.get(l - 2).map(String::as_str).unwrap_or("");
+        let t = raw.trim_start();
+        if t.is_empty() || t.starts_with("#[") || t.starts_with("#![") {
+            l -= 1;
+            continue;
+        }
+        break;
+    }
+    comment_run_above(lx, l)
+}
+
+/// Run every applicable rule over one file. `path` is repo-relative
+/// with forward slashes; it selects which rules apply.
+pub fn lint_file(path: &str, src: &str) -> Vec<Violation> {
+    let lx = lex(src);
+    let tests = test_ranges(&lx.tokens);
+    let mut out = Vec::new();
+    let toks = &lx.tokens;
+    let n = toks.len();
+
+    let in_lib = path.starts_with("rust/src/");
+    let in_serve = path.starts_with("rust/src/serve/");
+    let dep_allowed = DEPRECATED_ALLOW.contains(&path);
+
+    for i in 0..n {
+        let t = &toks[i];
+        let text = t.text.as_str();
+        let next = |k: usize| toks.get(i + k).map(|t| t.text.as_str()).unwrap_or("");
+
+        // --- safety-contract ---
+        if text == "unsafe" && !in_ranges(&tests, i) {
+            let is_fn = next(1) == "fn" || (next(1) == "extern" && next(2) == "fn");
+            let is_block = next(1) == "{";
+            if is_fn {
+                let doc = doc_run_above(&lx, t.line);
+                if !doc.contains("SAFETY") && !doc.contains("# Safety") {
+                    out.push(Violation {
+                        rule: "safety-contract",
+                        path: path.to_string(),
+                        line: t.line,
+                        col: t.col,
+                        msg: "unsafe fn without a `# Safety` doc section (or `// SAFETY:` \
+                              comment) stating its preconditions"
+                            .to_string(),
+                    });
+                }
+            } else if is_block {
+                let same_line = &lx.comment_text[t.line - 1];
+                let above = comment_run_above(&lx, t.line);
+                if !same_line.contains("SAFETY") && !above.contains("SAFETY") {
+                    out.push(Violation {
+                        rule: "safety-contract",
+                        path: path.to_string(),
+                        line: t.line,
+                        col: t.col,
+                        msg: "unsafe block without a `// SAFETY:` comment on or immediately \
+                              above it"
+                            .to_string(),
+                    });
+                }
+            }
+            // `unsafe impl` / `unsafe trait` carry their contract on the
+            // trait definition; not flagged here.
+        }
+
+        // --- lossy-cast ---
+        if in_lib
+            && text == "as"
+            && NUMERIC_TYPES.contains(&next(1))
+            && !in_ranges(&tests, i)
+        {
+            let same_line = &lx.comment_text[t.line - 1];
+            let above = comment_run_above(&lx, t.line);
+            let marker = "lint:allow(lossy-cast)";
+            if !same_line.contains(marker) && !above.contains(marker) {
+                out.push(Violation {
+                    rule: "lossy-cast",
+                    path: path.to_string(),
+                    line: t.line,
+                    col: t.col,
+                    msg: format!(
+                        "`as {}` cast in library code; use a `pds::convert` checked helper \
+                         or mark the audited site with `lint:allow(lossy-cast)`",
+                        next(1)
+                    ),
+                });
+            }
+        }
+
+        // --- unwrap ---
+        if in_lib && text == "." && !in_ranges(&tests, i) {
+            let is_unwrap = next(1) == "unwrap" && next(2) == "(" && next(3) == ")";
+            let is_expect = next(1) == "expect" && next(2) == "(";
+            if is_unwrap || is_expect {
+                out.push(Violation {
+                    rule: "unwrap",
+                    path: path.to_string(),
+                    line: toks[i + 1].line,
+                    col: toks[i + 1].col,
+                    msg: format!(
+                        "`.{}(..)` in non-test library code; return a typed `pds::Error` \
+                         instead",
+                        next(1)
+                    ),
+                });
+            }
+        }
+
+        // --- atomic-ordering ---
+        if in_serve
+            && text == "Ordering"
+            && next(1) == "::"
+            && ATOMIC_ORDERINGS.contains(&next(2))
+            && !in_ranges(&tests, i)
+        {
+            let ord = next(2);
+            let same_line = &lx.comment_text[t.line - 1];
+            let above = comment_run_above(&lx, t.line);
+            if !same_line.contains(ord) && !above.contains(ord) {
+                out.push(Violation {
+                    rule: "atomic-ordering",
+                    path: path.to_string(),
+                    line: t.line,
+                    col: t.col,
+                    msg: format!(
+                        "atomic access uses `Ordering::{ord}` without a comment naming \
+                         `{ord}` and justifying it (same line or immediately above)"
+                    ),
+                });
+            }
+        }
+
+        // --- deprecated-name ---
+        if !dep_allowed && DEPRECATED_NAMES.contains(&text) {
+            out.push(Violation {
+                rule: "deprecated-name",
+                path: path.to_string(),
+                line: t.line,
+                col: t.col,
+                msg: format!(
+                    "deprecated entry point `{text}`; use the `FitPlan` builder (the shims \
+                     in `coordinator/` are the only allowed references)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Recursively collect `.rs` files under the scan dirs, repo-relative
+/// with forward slashes, sorted.
+pub fn scan_files(root: &Path) -> Vec<(String, PathBuf)> {
+    let mut out = Vec::new();
+    for dir in SCAN_DIRS {
+        let base = root.join(dir);
+        collect_rs(&base, &mut out);
+    }
+    out.sort();
+    out.into_iter()
+        .map(|p| {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            (rel, p)
+        })
+        .collect()
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+}
+
+/// Parsed baseline: `(rule, path) -> grandfathered count`.
+pub type Baseline = BTreeMap<(String, String), usize>;
+
+/// Parse the baseline file format: `<rule> <path> <count>` per line,
+/// `#` comments and blanks ignored.
+pub fn parse_baseline(text: &str) -> Baseline {
+    let mut map = Baseline::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(rule), Some(path), Some(count)) = (it.next(), it.next(), it.next()) else {
+            continue;
+        };
+        if let Ok(c) = count.parse::<usize>() {
+            map.insert((rule.to_string(), path.to_string()), c);
+        }
+    }
+    map
+}
+
+/// Serialize a baseline (sorted, with the shrink-only header).
+pub fn render_baseline(map: &Baseline) -> String {
+    let mut out = String::from(
+        "# pds-lint baseline — pre-existing violations, grandfathered by count.\n\
+         # Counts may only shrink: fix sites, then `cargo run -p pds-lint -- --write-baseline`.\n\
+         # format: <rule> <repo-relative-path> <count>\n",
+    );
+    for ((rule, path), count) in map {
+        if *count > 0 {
+            out.push_str(&format!("{rule} {path} {count}\n"));
+        }
+    }
+    out
+}
+
+/// Outcome of a lint run.
+pub struct Report {
+    /// Violations exceeding the baseline, grouped order by (rule, path).
+    pub violations: Vec<Violation>,
+    /// Count of violations suppressed by the baseline.
+    pub baselined: usize,
+    /// Baseline entries whose actual count shrank (or whose file is
+    /// gone) — failures under `--deny-stale`.
+    pub stale: Vec<String>,
+    pub files_scanned: usize,
+    /// Actual per-(rule, path) counts — the input to `--write-baseline`.
+    pub actual: Baseline,
+}
+
+/// Lint the whole tree under `root` against `baseline`.
+pub fn run(root: &Path, baseline: &Baseline) -> Report {
+    let files = scan_files(root);
+    let files_scanned = files.len();
+    let mut by_key: BTreeMap<(String, String), Vec<Violation>> = BTreeMap::new();
+    for (rel, abs) in &files {
+        let Ok(src) = fs::read_to_string(abs) else {
+            continue;
+        };
+        for v in lint_file(rel, &src) {
+            by_key
+                .entry((v.rule.to_string(), v.path.clone()))
+                .or_default()
+                .push(v);
+        }
+    }
+    let mut actual = Baseline::new();
+    for (key, vs) in &by_key {
+        actual.insert(key.clone(), vs.len());
+    }
+    let mut violations = Vec::new();
+    let mut baselined = 0usize;
+    for (key, vs) in &by_key {
+        let allowed = baseline.get(key).copied().unwrap_or(0);
+        if vs.len() <= allowed {
+            baselined += vs.len();
+        } else {
+            violations.extend(vs.iter().cloned());
+        }
+    }
+    let mut stale = Vec::new();
+    for ((rule, path), &allowed) in baseline {
+        let have = actual.get(&(rule.clone(), path.clone())).copied().unwrap_or(0);
+        if have < allowed {
+            stale.push(format!(
+                "{path}: {rule} baseline is stale ({allowed} grandfathered, {have} found) — \
+                 run with --write-baseline to burn the debt down"
+            ));
+        }
+    }
+    Report { violations, baselined, stale, files_scanned, actual }
+}
+
+/// Ascend from `start` to the first directory containing `rust/src`.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! CLI driver: `cargo run -p pds-lint [-- --root DIR] [--write-baseline] [--deny-stale]`
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pds_lint::{find_root, parse_baseline, render_baseline, run, Baseline, BASELINE_FILE};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut write_baseline = false;
+    let mut deny_stale = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--write-baseline" => write_baseline = true,
+            "--deny-stale" => deny_stale = true,
+            "--help" | "-h" => {
+                println!(
+                    "pds-lint: repo-local static analysis for the pds crate\n\n\
+                     USAGE: pds-lint [--root DIR] [--write-baseline] [--deny-stale]\n\n\
+                     Checks safety-contract, lossy-cast, unwrap, atomic-ordering and\n\
+                     deprecated-name rules against {BASELINE_FILE} at the repo root.\n\
+                     --write-baseline  regenerate the baseline from the current tree\n\
+                     --deny-stale      also fail when a baseline entry exceeds reality\n\
+                     \x20                 (CI: the debt may only shrink)"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pds-lint: unknown argument `{other}` (try --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let Some(root) = root.or_else(|| find_root(&cwd)) else {
+        eprintln!("pds-lint: could not find the repo root (a directory containing rust/src)");
+        return ExitCode::FAILURE;
+    };
+
+    let baseline_path = root.join(BASELINE_FILE);
+    let baseline: Baseline = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => parse_baseline(&text),
+        Err(_) => Baseline::new(),
+    };
+
+    let report = run(&root, &baseline);
+
+    if write_baseline {
+        let text = render_baseline(&report.actual);
+        if let Err(e) = std::fs::write(&baseline_path, text) {
+            eprintln!("pds-lint: cannot write {}: {e}", baseline_path.display());
+            return ExitCode::FAILURE;
+        }
+        let total: usize = report.actual.values().sum();
+        println!(
+            "pds-lint: wrote {} ({} grandfathered violations across {} (rule, file) pairs)",
+            baseline_path.display(),
+            total,
+            report.actual.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    for v in &report.violations {
+        println!("{}", v.render());
+    }
+    let mut failed = !report.violations.is_empty();
+    if deny_stale {
+        for s in &report.stale {
+            println!("error[stale-baseline]: {s}");
+        }
+        failed = failed || !report.stale.is_empty();
+    }
+    println!(
+        "pds-lint: {} file(s) scanned, {} violation(s), {} baselined{}",
+        report.files_scanned,
+        report.violations.len(),
+        report.baselined,
+        if deny_stale {
+            format!(", {} stale baseline entr(ies)", report.stale.len())
+        } else {
+            String::new()
+        }
+    );
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

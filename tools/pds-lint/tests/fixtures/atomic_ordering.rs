@@ -1,0 +1,27 @@
+// Fixture: atomic-ordering rule (scoped to rust/src/serve/).
+// Not compiled — lexed by lint_rules.rs.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+pub fn orderings(flag: &AtomicBool, n: &AtomicU64) {
+    // SeqCst: must observe a store from any other thread
+    flag.store(true, Ordering::SeqCst);
+    n.fetch_add(1, Ordering::Relaxed); // Relaxed: monotonic counter, no ordering needed
+    n.fetch_add(1, Ordering::Relaxed); // VIOLATION line 10: comment does not name the ordering
+    flag.load(Ordering::Acquire); // VIOLATION line 11
+}
+
+pub fn not_atomic(a: u32, b: u32) -> std::cmp::Ordering {
+    // cmp::Ordering variants are not atomic orderings: never flagged
+    a.cmp(&b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    #[test]
+    fn test_code_is_exempt() {
+        let f = AtomicBool::new(false);
+        f.store(true, Ordering::SeqCst);
+    }
+}

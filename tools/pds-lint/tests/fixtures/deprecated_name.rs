@@ -1,0 +1,19 @@
+// Fixture: deprecated-name rule. Not compiled — lexed by lint_rules.rs.
+
+pub fn calls_old_api() {
+    run_pca_stream(); // VIOLATION line 4
+    run_sparsified_kmeans_from_store(); // VIOLATION line 5
+    // mentions in comments are fine: run_two_pass_stream
+    fit_plan_api();
+}
+
+fn fit_plan_api() {}
+
+// even test code may not resurrect the old names
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn old_name_in_test() {
+        super::run_compress_to_store(); // VIOLATION line 17
+    }
+}

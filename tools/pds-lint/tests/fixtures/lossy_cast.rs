@@ -1,0 +1,26 @@
+// Fixture: lossy-cast rule. Not compiled — lexed by lint_rules.rs.
+
+pub fn casts(x: u64, f: f64) -> usize {
+    let a = x as u32; // VIOLATION line 4
+    let b = x as usize; // lint:allow(lossy-cast) — same-line marker
+    // lint:allow(lossy-cast) — marker in the comment run
+    // immediately above also covers the site
+    let c = f as f32;
+    let d = f; // a plain `as` path rename below must not trip the rule
+    let _ = (a, b, c, d);
+    helper()
+}
+
+use std::collections::BTreeMap as Map;
+
+fn helper() -> usize {
+    let v = 1.5_f64;
+    v as usize // VIOLATION line 18
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn in_test_code() -> u32 {
+        7.9_f64 as u32 // casts in test code are not flagged
+    }
+}

@@ -1,0 +1,31 @@
+// Fixture: safety-contract rule. Not compiled — lexed by lint_rules.rs.
+
+/// Has a contract in the doc.
+///
+/// # Safety
+/// Caller guarantees `p` is valid for reads of `n` elements.
+#[allow(unused)]
+pub unsafe fn covered_by_doc(p: *const u8, n: usize) {}
+
+// SAFETY: contract may also live in a plain comment run
+// spanning several lines above the declaration.
+pub unsafe fn covered_by_comment() {}
+
+pub unsafe fn missing_contract() {} // VIOLATION line 14
+
+fn blocks() {
+    let x = [1u8];
+    // SAFETY: index 0 is in bounds by construction.
+    let _a = unsafe { *x.get_unchecked(0) };
+    let _b = unsafe { *x.get_unchecked(0) }; // SAFETY: same-line comment also counts
+    let _c = unsafe { *x.get_unchecked(0) }; // VIOLATION line 21: comment lacks the magic word
+}
+
+unsafe impl Send for Wrapper {}
+
+struct Wrapper(*const u8);
+
+#[cfg(test)]
+mod tests {
+    pub unsafe fn in_test_code_is_ignored() {}
+}

@@ -1,0 +1,24 @@
+// Fixture: unwrap rule. Not compiled — lexed by lint_rules.rs.
+
+pub fn panicky(v: Option<u32>, r: Result<u32, ()>) -> u32 {
+    let a = v.unwrap(); // VIOLATION line 4
+    let b = r.expect("should not fail"); // VIOLATION line 5
+    a + b
+}
+
+pub fn fine(v: Option<u32>) -> u32 {
+    // unwrap_or / unwrap_or_else are different identifiers: allowed
+    v.unwrap_or(0) + v.unwrap_or_else(|| 1)
+}
+
+/// Doc examples are comments, so `v.unwrap()` here is not flagged.
+pub fn documented() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn asserts_with_unwrap() {
+        assert_eq!(Some(3).unwrap(), 3); // test code: allowed
+        Result::<u32, ()>::Ok(1).expect("fine in tests");
+    }
+}

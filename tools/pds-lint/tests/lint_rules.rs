@@ -1,0 +1,91 @@
+//! Per-rule fixture tests: each fixture under `tests/fixtures/` is a
+//! small Rust source (data, never compiled) with `VIOLATION line N`
+//! markers; the linter must find exactly those lines and nothing else.
+
+use pds_lint::{lint_file, Violation};
+
+fn lines_for(rule: &str, vs: &[Violation]) -> Vec<usize> {
+    vs.iter().filter(|v| v.rule == rule).map(|v| v.line).collect()
+}
+
+#[test]
+fn safety_contract_fixture() {
+    let src = include_str!("fixtures/safety_contract.rs");
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert_eq!(lines_for("safety-contract", &vs), vec![14, 21]);
+}
+
+#[test]
+fn safety_contract_applies_outside_src_too() {
+    let vs = lint_file(
+        "rust/benches/fixture.rs",
+        "pub unsafe fn no_contract() {}\n",
+    );
+    assert_eq!(lines_for("safety-contract", &vs), vec![1]);
+}
+
+#[test]
+fn lossy_cast_fixture() {
+    let src = include_str!("fixtures/lossy_cast.rs");
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert_eq!(lines_for("lossy-cast", &vs), vec![4, 18]);
+    // the rule is scoped to library code: same source under tests/ is clean
+    assert!(lines_for("lossy-cast", &lint_file("rust/tests/fixture.rs", src)).is_empty());
+}
+
+#[test]
+fn unwrap_fixture() {
+    let src = include_str!("fixtures/unwrap.rs");
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert_eq!(lines_for("unwrap", &vs), vec![4, 5]);
+    assert!(lines_for("unwrap", &lint_file("examples/fixture.rs", src)).is_empty());
+}
+
+#[test]
+fn atomic_ordering_fixture() {
+    let src = include_str!("fixtures/atomic_ordering.rs");
+    let vs = lint_file("rust/src/serve/fixture.rs", src);
+    assert_eq!(lines_for("atomic-ordering", &vs), vec![10, 11]);
+    // scoped to the daemon: the same source elsewhere in src is exempt
+    assert!(lines_for("atomic-ordering", &lint_file("rust/src/fixture.rs", src)).is_empty());
+}
+
+#[test]
+fn deprecated_name_fixture() {
+    let src = include_str!("fixtures/deprecated_name.rs");
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert_eq!(lines_for("deprecated-name", &vs), vec![4, 5, 17]);
+    // the compatibility shims are the one place the names may appear
+    assert!(lines_for(
+        "deprecated-name",
+        &lint_file("rust/src/coordinator/driver.rs", src)
+    )
+    .is_empty());
+}
+
+#[test]
+fn lexer_strips_strings_and_char_literals() {
+    // every would-be violation here lives inside a literal
+    let src = r#"
+pub fn f() -> &'static str {
+    let _c = 'u'; // a char, not a lifetime
+    "x.unwrap() as u32 run_pca_stream unsafe {"
+}
+"#;
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn lexer_handles_raw_strings() {
+    let src = "pub fn f() -> String { format!(r#\"as u32 .unwrap()\"#) }\n";
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert!(vs.is_empty(), "{vs:?}");
+}
+
+#[test]
+fn multiline_cfg_test_extent_is_tracked() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f(v: Option<u32>) -> u32 {\n        v.unwrap()\n    }\n}\nfn lib(v: Option<u32>) -> u32 { v.unwrap() }\n";
+    let vs = lint_file("rust/src/fixture.rs", src);
+    assert_eq!(lines_for("unwrap", &vs), vec![7]);
+}

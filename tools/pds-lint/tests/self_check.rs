@@ -1,0 +1,85 @@
+//! Self-check: the real tree must be clean against the committed
+//! baseline — no (rule, file) pair may exceed its grandfathered count.
+//! This is the tier-1 guard; CI additionally runs `--deny-stale` so the
+//! counts can only shrink.
+
+use std::path::Path;
+
+use pds_lint::{parse_baseline, run, Baseline, BASELINE_FILE};
+
+fn repo_root() -> &'static Path {
+    // tools/pds-lint -> repo root is two levels up
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(Path::parent)
+        .expect("tools/pds-lint sits two levels under the repo root")
+}
+
+#[test]
+fn tree_is_clean_against_baseline() {
+    let root = repo_root();
+    let baseline: Baseline = match std::fs::read_to_string(root.join(BASELINE_FILE)) {
+        Ok(text) => parse_baseline(&text),
+        Err(_) => Baseline::new(),
+    };
+    let report = run(root, &baseline);
+    assert!(
+        report.files_scanned > 50,
+        "scan scope looks broken: only {} files found",
+        report.files_scanned
+    );
+    let rendered: Vec<String> = report.violations.iter().map(|v| v.render()).collect();
+    assert!(
+        report.violations.is_empty(),
+        "pds-lint found {} non-baselined violation(s):\n{}",
+        report.violations.len(),
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn hardened_subsystems_carry_no_baselined_debt() {
+    // The PR that introduced the linter also burned the debt out of the
+    // store, the daemon's transport, and the artifact codec; those
+    // files must stay at zero, not merely under a baseline.
+    let root = repo_root();
+    let report = run(root, &Baseline::new());
+    let hardened = [
+        "rust/src/store/",
+        "rust/src/serve/transport.rs",
+        "rust/src/distributed/artifact.rs",
+        "rust/src/convert.rs",
+    ];
+    let offenders: Vec<String> = report
+        .violations
+        .iter()
+        .filter(|v| hardened.iter().any(|h| v.path.starts_with(h)))
+        .map(|v| v.render())
+        .collect();
+    assert!(
+        offenders.is_empty(),
+        "hardened files regressed:\n{}",
+        offenders.join("\n")
+    );
+}
+
+#[test]
+fn safety_contracts_and_orderings_are_complete() {
+    // Three rules are at zero across the whole tree and must stay there:
+    // missing SAFETY contracts, unjustified atomic orderings, and
+    // deprecated-name references are never baselined.
+    let root = repo_root();
+    let report = run(root, &Baseline::new());
+    let zero_rules = ["safety-contract", "atomic-ordering", "deprecated-name"];
+    let offenders: Vec<String> = report
+        .violations
+        .iter()
+        .filter(|v| zero_rules.contains(&v.rule))
+        .map(|v| v.render())
+        .collect();
+    assert!(
+        offenders.is_empty(),
+        "zero-tolerance rule regressed:\n{}",
+        offenders.join("\n")
+    );
+}
